@@ -1,0 +1,68 @@
+//! Shared plumbing for the table/figure bench harnesses.
+//!
+//! Each bench is a `harness = false` binary that regenerates one table or
+//! figure of the paper (DESIGN.md §5) against the in-repo testbed, prints an
+//! aligned ASCII table, and appends markdown to `results/`.
+//! `ZS_BENCH_FAST=1` shrinks eval workloads for CI smoke runs.
+
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+use zs_svd::config::ExperimentConfig;
+use zs_svd::coordinator::{self, Prepared};
+use zs_svd::eval::EvalSpec;
+use zs_svd::report::Table;
+use zs_svd::runtime::Runtime;
+use zs_svd::util::benchkit::fast_mode;
+
+/// Leak the runtime so `Prepared` can borrow it for the bench's lifetime.
+pub fn runtime() -> &'static Runtime {
+    Box::leak(Box::new(
+        Runtime::load_default().expect("run `make artifacts` first"),
+    ))
+}
+
+/// Standard experiment configs keyed by (model, family, seed) — MUST match
+/// what the pre-training step produced so checkpoints are reused.
+pub fn exp(model: &str, family: &str, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        model: model.into(),
+        family: family.into(),
+        seed,
+        ..ExperimentConfig::default()
+    }
+}
+
+pub fn prepare(rt: &'static Runtime, model: &str, family: &str, seed: u64)
+               -> Prepared<'static> {
+    let mut cfg = exp(model, family, seed);
+    if fast_mode() {
+        // keep train_steps (checkpoints exist); shrink calibration only
+        cfg.calib_batches = 2;
+    }
+    coordinator::prepare(rt, &cfg).expect("prepare")
+}
+
+pub fn spec() -> EvalSpec {
+    if fast_mode() {
+        EvalSpec { ppl_batches: 2, instances_per_family: 16, task_seed: 0xE1 }
+    } else {
+        EvalSpec { ppl_batches: 4, instances_per_family: 32, task_seed: 0xE1 }
+    }
+}
+
+pub fn results_dir() -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+/// Print + persist one table.
+pub fn emit(name: &str, t: &Table) {
+    print!("{}", t.to_ascii());
+    let path = results_dir().join(format!("{name}.md"));
+    // overwrite per run: one file per table keeps results fresh
+    std::fs::write(&path, t.to_markdown()).expect("write results");
+    println!("[saved {}]", path.display());
+}

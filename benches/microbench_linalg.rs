@@ -1,0 +1,64 @@
+//! L3 micro-benchmarks: the compression-time linalg hot paths (SVD,
+//! Cholesky, triangular solves, matmul) at the shapes the shipped configs
+//! actually hit — the profile driving the §Perf optimization pass.
+
+mod common;
+
+use zs_svd::linalg::{cholesky_ridge, gram, matmul, right_solve_lower, svd};
+use zs_svd::report::{f2, Table};
+use zs_svd::tensor::Mat;
+use zs_svd::util::benchkit::Bench;
+use zs_svd::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let b = Bench::default();
+    let mut t = Table::new(
+        "linalg micro-benchmarks (median ms)",
+        &["op", "shape", "ms", "p95 ms"],
+    );
+
+    // shapes from the shipped configs: d=128/192, ff=352/512
+    let shapes = [(128usize, 128usize), (352, 128), (128, 352), (512, 192)];
+    for &(m, n) in &shapes {
+        let a = Mat::randn(&mut rng, m, n, 1.0);
+        let s = b.run(|| {
+            std::hint::black_box(svd(&a));
+        });
+        t.row(vec!["svd".into(), format!("{m}x{n}"),
+                   f2(s.median * 1e3), f2(s.p95 * 1e3)]);
+    }
+
+    for &n in &[128usize, 352, 512] {
+        let x = Mat::randn(&mut rng, 2 * n, n, 1.0);
+        let c = gram(&x);
+        let s = b.run(|| {
+            std::hint::black_box(cholesky_ridge(&c, 1e-6));
+        });
+        t.row(vec!["cholesky".into(), format!("{n}x{n}"),
+                   f2(s.median * 1e3), f2(s.p95 * 1e3)]);
+
+        let (l, _) = cholesky_ridge(&c, 1e-6);
+        let bmat = Mat::randn(&mut rng, 64, n, 1.0);
+        let s = b.run(|| {
+            std::hint::black_box(right_solve_lower(&bmat, &l));
+        });
+        t.row(vec!["right_solve".into(), format!("64x{n}"),
+                   f2(s.median * 1e3), f2(s.p95 * 1e3)]);
+    }
+
+    for &(m, k, n) in &[(352usize, 128usize, 352usize), (128, 352, 128),
+                        (512, 192, 512)] {
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let bb = Mat::randn(&mut rng, k, n, 1.0);
+        let s = b.run(|| {
+            std::hint::black_box(matmul(&a, &bb));
+        });
+        let flops = 2.0 * (m * k * n) as f64;
+        t.row(vec![format!("matmul ({:.2} GF/s)", flops / s.median / 1e9),
+                   format!("{m}x{k}x{n}"),
+                   f2(s.median * 1e3), f2(s.p95 * 1e3)]);
+    }
+
+    common::emit("microbench_linalg", &t);
+}

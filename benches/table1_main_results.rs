@@ -1,0 +1,74 @@
+//! Table 1 — main results on the LLaMA-7B analog: SVD-family baselines vs
+//! ZS-SVD (+ corrections, remap*, HQ†) at retention 0.8 / 0.6 / 0.4.
+//! Columns: PPL on the three corpora, per-task accuracy, average, drop%.
+
+mod common;
+
+use zs_svd::coordinator::{self, Method};
+use zs_svd::report::{acc2, f2, pct, Table};
+use zs_svd::util::benchkit::fast_mode;
+
+fn main() {
+    let rt = common::runtime();
+    let p = common::prepare(rt, "tiny", "llama", 7);
+    let spec = common::spec();
+    let base = coordinator::evaluate_plan(&p, None, &spec).unwrap();
+
+    let mut headers = vec!["ratio".to_string(), "method".into(),
+                           "wiki2".into(), "ptb".into(), "c4".into()];
+    for (n, _) in &base.acc {
+        headers.push(n.clone());
+    }
+    headers.push("avg".into());
+    headers.push("drop%".into());
+    let mut t = Table::new("Table 1: ZS-SVD vs SVD baselines (tiny = LLaMA-7B analog)",
+                           &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+
+    let mut push_row = |ratio: &str, label: &str, r: &zs_svd::eval::EvalReport| {
+        let mut row = vec![ratio.to_string(), label.to_string(),
+                           f2(r.ppl_of("wiki-syn")), f2(r.ppl_of("ptb-syn")),
+                           f2(r.ppl_of("c4-syn"))];
+        for (_, a) in &r.acc {
+            row.push(acc2(*a));
+        }
+        row.push(acc2(r.avg_acc()));
+        row.push(pct(r.drop_vs(&base)));
+        t.row(row);
+    };
+    push_row("1.0", "baseline", &base);
+
+    // paper bands 0.8/0.6/0.4 -> testbed bands 0.35/0.25/0.15
+    // (our ~1M-param models are far more compressible; see EXPERIMENTS.md)
+    let ratios: &[f64] = if fast_mode() { &[0.25] } else { &[0.35, 0.25, 0.15] };
+    for &ratio in ratios {
+        let mut methods: Vec<Method> = vec![
+            Method::Asvd,
+            Method::SvdLlm,
+            Method::DobiSim { sweeps: 1 },
+            Method::zs(ratio),
+            Method::zs_corrected(ratio, 1),
+            Method::zs_corrected(ratio, 5),
+        ];
+        if ratio <= 0.16 {
+            methods.push(Method::zs_corrected(ratio, 10));
+        }
+        // footprint-matched rows: remap above 50% retention, HQ below
+        methods.push(Method::DobiSimRemap { sweeps: 1 });
+        if ratio >= 0.25 {
+            methods.push(Method::zs_remap(ratio));
+        } else {
+            methods.push(Method::zs_hq(ratio));
+        }
+        if fast_mode() {
+            methods.truncate(4);
+        }
+        for m in methods {
+            let plan = coordinator::run_method(&p, &m, ratio).unwrap();
+            let r = coordinator::evaluate_plan(&p, Some(&plan), &spec).unwrap();
+            eprintln!("  ratio {ratio} {}: done ({:.1}s)", plan.method, plan.seconds);
+            push_row(&format!("{ratio}"), &plan.method, &r);
+        }
+    }
+
+    common::emit("table1_main_results", &t);
+}

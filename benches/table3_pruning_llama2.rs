@@ -1,0 +1,72 @@
+//! Table 3 — ZS-SVD vs structured pruning on the LLaMA-2-7B analog
+//! (independently-trained tiny checkpoint, seed 8) at ratios 0.6 and 0.4.
+//! Accuracy columns follow the paper: PIQA / HellaSwag / WinoGrande /
+//! ARC-E / ARC-C analogs.  Remap rows at 0.6, HQ row at 0.4.
+
+mod common;
+
+use zs_svd::compress::baselines::PruneScore;
+use zs_svd::coordinator::{self, Method};
+use zs_svd::data::TaskFamily;
+use zs_svd::eval;
+use zs_svd::report::{acc2, Table};
+use zs_svd::util::benchkit::fast_mode;
+
+const FAMS: [TaskFamily; 5] = [TaskFamily::PiqaSyn, TaskFamily::HellasSyn,
+                               TaskFamily::WinogSyn, TaskFamily::ArcESyn,
+                               TaskFamily::ArcCSyn];
+
+fn main() {
+    let rt = common::runtime();
+    let p = common::prepare(rt, "tiny", "llama2", 8);
+    let spec = common::spec();
+
+    let eval_subset = |params: &zs_svd::model::ParamStore| {
+        eval::evaluate_subset(&p.session, params, &p.eval_corpora, &p.world,
+                              &spec, &FAMS).unwrap()
+    };
+    let base = eval_subset(&p.params);
+
+    let mut t = Table::new(
+        "Table 3: vs structured pruning (llama2 analog)",
+        &["ratio", "method", "piqa", "hellas", "winog", "arc_e", "arc_c", "avg"],
+    );
+    let push = |ratio: &str, label: &str, r: &eval::EvalReport, t: &mut Table| {
+        let mut row = vec![ratio.to_string(), label.to_string()];
+        for (_, a) in &r.acc {
+            row.push(acc2(*a));
+        }
+        row.push(acc2(r.avg_acc()));
+        t.row(row);
+    };
+    push("1.0", "baseline", &base, &mut t);
+
+    let ratios: &[f64] = if fast_mode() { &[0.3] } else { &[0.3, 0.2] }; // paper 0.6/0.4 bands
+    for &ratio in ratios {
+        let mut methods = vec![
+            Method::Prune(PruneScore::Magnitude),
+            Method::SliceGpt,
+            Method::Prune(PruneScore::WandaSp),
+            Method::SvdLlm,
+            Method::zs(ratio),
+        ];
+        if ratio >= 0.25 {
+            methods.push(Method::DobiSimRemap { sweeps: 1 });
+            methods.push(Method::zs_remap(ratio));
+        } else {
+            methods.push(Method::DobiSimRemap { sweeps: 1 });
+            methods.push(Method::zs_hq(ratio));
+        }
+        if fast_mode() {
+            methods.truncate(3);
+        }
+        for m in methods {
+            let plan = coordinator::run_method(&p, &m, ratio).unwrap();
+            let r = eval_subset(&plan.apply(&p.params));
+            eprintln!("  ratio {ratio} {}: done", plan.method);
+            push(&format!("{ratio}"), &plan.method, &r, &mut t);
+        }
+    }
+
+    common::emit("table3_pruning_llama2", &t);
+}

@@ -1,0 +1,63 @@
+//! Table 4 — ZS-SVD vs pruning on the LLaMA-13B analog (`small`) at
+//! retention 0.8.  Task columns: OpenBook(=BoolQ slot) / PIQA / WinoGrande /
+//! ARC-E / ARC-C analogs.
+
+mod common;
+
+use zs_svd::compress::baselines::PruneScore;
+use zs_svd::coordinator::{self, Method};
+use zs_svd::data::TaskFamily;
+use zs_svd::eval;
+use zs_svd::report::{acc2, Table};
+use zs_svd::util::benchkit::fast_mode;
+
+const FAMS: [TaskFamily; 5] = [TaskFamily::OpenbSyn, TaskFamily::PiqaSyn,
+                               TaskFamily::WinogSyn, TaskFamily::ArcESyn,
+                               TaskFamily::ArcCSyn];
+
+fn main() {
+    let rt = common::runtime();
+    let p = common::prepare(rt, "small", "llama", 7);
+    let spec = common::spec();
+    let ratio = 0.35; // paper band 0.8
+
+    let eval_subset = |params: &zs_svd::model::ParamStore| {
+        eval::evaluate_subset(&p.session, params, &p.eval_corpora, &p.world,
+                              &spec, &FAMS).unwrap()
+    };
+    let base = eval_subset(&p.params);
+
+    let mut t = Table::new(
+        "Table 4: vs pruning on the 13B analog (small) at 0.8",
+        &["method", "openb", "piqa", "winog", "arc_e", "arc_c", "avg"],
+    );
+    let push = |label: &str, r: &eval::EvalReport, t: &mut Table| {
+        let mut row = vec![label.to_string()];
+        for (_, a) in &r.acc {
+            row.push(acc2(*a));
+        }
+        row.push(acc2(r.avg_acc()));
+        t.row(row);
+    };
+    push("baseline", &base, &mut t);
+
+    let mut methods = vec![
+        Method::Prune(PruneScore::Magnitude),
+        Method::Prune(PruneScore::Flap),
+        Method::SvdLlm,
+        Method::zs(ratio),
+        Method::DobiSimRemap { sweeps: 1 },
+        Method::zs_remap(ratio),
+    ];
+    if fast_mode() {
+        methods.truncate(3);
+    }
+    for m in methods {
+        let plan = coordinator::run_method(&p, &m, ratio).unwrap();
+        let r = eval_subset(&plan.apply(&p.params));
+        eprintln!("  {}: done", plan.method);
+        push(&plan.method, &r, &mut t);
+    }
+
+    common::emit("table4_pruning_13b", &t);
+}

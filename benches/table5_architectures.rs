@@ -1,0 +1,55 @@
+//! Table 5 — 20% pruning (retention 0.8) across three architectures:
+//! OPT-6.7B analog (`opt_tiny`), Vicuna-7B analog (tiny/vicuna weights), and
+//! LLaMA-30B analog (`small`).  WikiText-2 PPL + average accuracy over six
+//! commonsense tasks (excluding arc_c, per the paper).
+
+mod common;
+
+use zs_svd::coordinator::{self, Method};
+use zs_svd::data::TaskFamily;
+use zs_svd::eval;
+use zs_svd::report::{acc2, f2, Table};
+use zs_svd::util::benchkit::fast_mode;
+
+const FAMS: [TaskFamily; 6] = [TaskFamily::OpenbSyn, TaskFamily::ArcESyn,
+                               TaskFamily::WinogSyn, TaskFamily::HellasSyn,
+                               TaskFamily::PiqaSyn, TaskFamily::MathqaSyn];
+
+fn main() {
+    let rt = common::runtime();
+    let spec = common::spec();
+    let ratio = 0.35; // paper band 0.8 (20% pruning)
+
+    let mut t = Table::new(
+        "Table 5: 20% pruning across architectures",
+        &["arch", "method", "ppl(wiki)", "acc(6)"],
+    );
+
+    let setups = [("opt_tiny", "llama", 7, "opt-analog"),
+                  ("tiny", "vicuna", 7, "vicuna-analog"),
+                  ("small", "llama", 7, "30B-analog")];
+    for (model, family, seed, label) in setups {
+        let p = common::prepare(rt, model, family, seed);
+        let eval_subset = |params: &zs_svd::model::ParamStore| {
+            eval::evaluate_subset(&p.session, params, &p.eval_corpora, &p.world,
+                                  &spec, &FAMS).unwrap()
+        };
+        let base = eval_subset(&p.params);
+        t.row(vec![label.into(), "original".into(),
+                   f2(base.ppl_of("wiki-syn")), acc2(base.avg_acc())]);
+        let mut methods = vec![Method::Svd, Method::Fwsvd, Method::Asvd,
+                               Method::SvdLlm, Method::zs(ratio)];
+        if fast_mode() {
+            methods = vec![Method::Svd, Method::zs(ratio)];
+        }
+        for m in methods {
+            let plan = coordinator::run_method(&p, &m, ratio).unwrap();
+            let r = eval_subset(&plan.apply(&p.params));
+            eprintln!("  {label}/{}: done", plan.method);
+            t.row(vec![label.into(), plan.method.clone(),
+                       f2(r.ppl_of("wiki-syn")), acc2(r.avg_acc())]);
+        }
+    }
+
+    common::emit("table5_architectures", &t);
+}

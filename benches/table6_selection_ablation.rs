@@ -1,0 +1,46 @@
+//! Table 6 — ablation of global σ-selection strategies on the LLaMA-7B
+//! analog: most-negative ΔL / |ΔL| (each with and without per-W spectral
+//! order), smallest σ, and the zero-sum rule.  WikiText-2 PPL at retention
+//! 0.4 and 0.6.
+
+mod common;
+
+use zs_svd::compress::{Strategy};
+use zs_svd::coordinator::{self, Method};
+use zs_svd::report::{f2, Table};
+
+fn main() {
+    let rt = common::runtime();
+    let p = common::prepare(rt, "tiny", "llama", 7);
+    let spec = common::spec();
+
+    let strategies: Vec<(&str, &str, Strategy)> = vec![
+        ("most-negative dL", "no",
+         Strategy::MostNegative { per_w_order: false }),
+        ("|dL|", "no", Strategy::MagnitudeDl { per_w_order: false }),
+        ("most-negative dL", "yes",
+         Strategy::MostNegative { per_w_order: true }),
+        ("|dL|", "yes", Strategy::MagnitudeDl { per_w_order: true }),
+        ("sigma", "yes", Strategy::SigmaSmallest),
+        ("zero-sum dL (ZS-SVD)", "yes", Strategy::ZeroSum),
+    ];
+
+    let mut t = Table::new(
+        "Table 6: global sigma-selection strategy ablation (wiki PPL)",
+        &["strategy", "per-W order", "ratio 0.15 (~0.4)", "ratio 0.25 (~0.6)"],
+    );
+
+    for (label, ordered, strat) in strategies {
+        let mut ppls = Vec::new();
+        for ratio in [0.15, 0.25] { // paper bands 0.4 / 0.6
+            let m = Method::zs_strategy(ratio, strat);
+            let plan = coordinator::run_method(&p, &m, ratio).unwrap();
+            let r = coordinator::evaluate_plan(&p, Some(&plan), &spec).unwrap();
+            ppls.push(r.ppl_of("wiki-syn"));
+            eprintln!("  {label} ({ordered}) @ {ratio}: {:.2}", ppls.last().unwrap());
+        }
+        t.row(vec![label.into(), ordered.into(), f2(ppls[0]), f2(ppls[1])]);
+    }
+
+    common::emit("table6_selection_ablation", &t);
+}

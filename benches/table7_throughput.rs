@@ -1,0 +1,59 @@
+//! Table 7 — serving throughput + memory under compression, two serving
+//! regimes standing in for the paper's two GPUs:
+//!   "slow"    = batch 1  (Titan-Xp-like memory-constrained regime)
+//!   "regular" = batch 8  (A5000-like batched regime)
+//! Engines: dense baseline vs SVD-LLM / ZS-SVD low-rank factors through the
+//! fused Pallas artifacts at 40% and 60% compression.
+
+mod common;
+
+use zs_svd::coordinator::{self, Method};
+use zs_svd::report::{f2, Table};
+use zs_svd::serve::{run_serving, Engine, ServeConfig};
+use zs_svd::util::benchkit::fast_mode;
+
+fn main() {
+    let rt = common::runtime();
+    let p = common::prepare(rt, "tiny", "llama", 7);
+    let n_requests = if fast_mode() { 16 } else { 48 };
+
+    let mut t = Table::new(
+        "Table 7: throughput & memory (dense vs low-rank serving)",
+        &["regime", "compression", "method", "tok/s", "p95 ms",
+          "weights MB", "act MB", "peak RSS MB"],
+    );
+
+    let dense_bytes = p.session.cfg.param_count() as f64 * 2.0;
+    for (regime, max_batch, tag_suffix) in [("regular", 8usize, ""),
+                                            ("slow", 1usize, "_b1")] {
+        let sc = ServeConfig { n_requests, max_batch, arrival_factor: 0.5, seed: 1 };
+        let d = run_serving(&p.session, &p.params, &Engine::Dense, &sc,
+                            dense_bytes).unwrap();
+        t.row(vec![regime.into(), "0%".into(), "original".into(),
+                   f2(d.tokens_per_sec), f2(d.p95_ms),
+                   f2(d.weight_mem_bytes / 1e6),
+                   f2(d.act_mem_bytes as f64 / 1e6),
+                   f2(d.peak_mem_bytes as f64 / 1e6)]);
+
+        for (comp, ratio) in [("40%", 0.6), ("60%", 0.4)] {
+            for m in [Method::SvdLlm, Method::zs(ratio)] {
+                let plan = coordinator::run_method(&p, &m, ratio).unwrap();
+                let tag = format!("{}{}", (ratio * 100.0) as usize, tag_suffix);
+                let lm = p.session.cfg.lowrank.get(&tag).unwrap();
+                let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
+                let params = plan.apply(&p.params);
+                let s = run_serving(&p.session, &params, &engine, &sc,
+                                    plan.model_bytes(&p.session.cfg)).unwrap();
+                eprintln!("  {regime}/{comp}/{}: {:.0} tok/s",
+                          plan.method, s.tokens_per_sec);
+                t.row(vec![regime.into(), comp.into(), plan.method.clone(),
+                           f2(s.tokens_per_sec), f2(s.p95_ms),
+                           f2(s.weight_mem_bytes / 1e6),
+                           f2(s.act_mem_bytes as f64 / 1e6),
+                           f2(s.peak_mem_bytes as f64 / 1e6)]);
+            }
+        }
+    }
+
+    common::emit("table7_throughput", &t);
+}

@@ -1,0 +1,48 @@
+//! Table 9 (Appendix B.1) — correction-variant ablation at retention 0.4:
+//! α-blend {0.25, 0.5, 0.75}, plain GD steps {1e-2, 1e-3, 1e-4},
+//! Proj-Δ, and the paper's Proj-Grad — each applied once after the first
+//! truncation, followed by re-truncation.  WikiText-2 PPL.
+
+mod common;
+
+use zs_svd::compress::CorrectionKind;
+use zs_svd::coordinator::{self, Method};
+use zs_svd::report::{f2, Table};
+
+fn main() {
+    let rt = common::runtime();
+    let p = common::prepare(rt, "tiny", "llama", 7);
+    let spec = common::spec();
+    let ratio = 0.15; // paper band 0.4
+
+    let variants: Vec<CorrectionKind> = vec![
+        CorrectionKind::AlphaBlend(0.25),
+        CorrectionKind::AlphaBlend(0.50),
+        CorrectionKind::AlphaBlend(0.75),
+        CorrectionKind::GradStep(1e-2),
+        CorrectionKind::GradStep(1e-3),
+        CorrectionKind::GradStep(1e-4),
+        CorrectionKind::ProjDelta,
+        CorrectionKind::ProjGrad,
+    ];
+
+    let mut t = Table::new(
+        "Table 9: correction variants at ratio 0.4 (wiki PPL, 1 iteration)",
+        &["variant", "ppl(wiki)"],
+    );
+
+    // no-correction reference
+    let plain = coordinator::run_method(&p, &Method::zs(ratio), ratio).unwrap();
+    let r0 = coordinator::evaluate_plan(&p, Some(&plain), &spec).unwrap();
+    t.row(vec!["none".into(), f2(r0.ppl_of("wiki-syn"))]);
+
+    for kind in variants {
+        let m = Method::zs_correction_kind(ratio, kind);
+        let plan = coordinator::run_method(&p, &m, ratio).unwrap();
+        let r = coordinator::evaluate_plan(&p, Some(&plan), &spec).unwrap();
+        eprintln!("  {}: {:.2}", kind.label(), r.ppl_of("wiki-syn"));
+        t.row(vec![kind.label(), f2(r.ppl_of("wiki-syn"))]);
+    }
+
+    common::emit("table9_correction_ablation", &t);
+}

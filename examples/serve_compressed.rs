@@ -1,0 +1,57 @@
+//! Serving demo: batched prefill requests against the dense model and the
+//! ZS-SVD-compressed model running through the fused Pallas low-rank
+//! artifacts, reporting throughput, latency percentiles and memory.
+//!
+//!     cargo run --release --example serve_compressed [ratio] [requests]
+
+use anyhow::Result;
+
+use zs_svd::config::ExperimentConfig;
+use zs_svd::coordinator::{self, Method};
+use zs_svd::report::{f2, Table};
+use zs_svd::runtime::Runtime;
+use zs_svd::serve::{run_serving, Engine, ServeConfig};
+
+fn main() -> Result<()> {
+    let ratio: f64 = std::env::args().nth(1)
+        .and_then(|s| s.parse().ok()).unwrap_or(0.6);
+    let requests: usize = std::env::args().nth(2)
+        .and_then(|s| s.parse().ok()).unwrap_or(48);
+
+    let rt = Runtime::load_default()?;
+    let cfg = ExperimentConfig::default();
+    let p = coordinator::prepare(&rt, &cfg)?;
+
+    println!("compressing at retention {ratio} for low-rank serving...");
+    let plan = coordinator::run_method(&p, &Method::zs(ratio), ratio)?;
+    println!("  achieved ratio {:.3}, {}", plan.achieved_ratio(),
+             coordinator::rank_summary(&plan));
+
+    let sc = ServeConfig { n_requests: requests, ..Default::default() };
+    let dense_bytes = p.session.cfg.param_count() as f64 * 2.0;
+
+    println!("serving {requests} prefill requests (batch {})...", sc.max_batch);
+    let d = run_serving(&p.session, &p.params, &Engine::Dense, &sc, dense_bytes)?;
+    let tag = format!("{}", (ratio * 100.0) as usize);
+    let lm = p.session.cfg.lowrank.get(&tag).expect("lowrank artifact");
+    let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
+    let compressed_params = plan.apply(&p.params);
+    let l = run_serving(&p.session, &compressed_params, &engine, &sc,
+                        plan.model_bytes(&p.session.cfg))?;
+
+    let mut t = Table::new(
+        &format!("serving tiny @ {}% compression", ((1.0 - ratio) * 100.0) as usize),
+        &["engine", "tok/s", "p50 ms", "p95 ms", "weights MB", "act MB",
+          "peak RSS MB"],
+    );
+    for s in [&d, &l] {
+        t.row(vec![s.engine.clone(), f2(s.tokens_per_sec), f2(s.p50_ms),
+                   f2(s.p95_ms), f2(s.weight_mem_bytes / 1e6),
+                   f2(s.act_mem_bytes as f64 / 1e6),
+                   f2(s.peak_mem_bytes as f64 / 1e6)]);
+    }
+    print!("{}", t.to_ascii());
+    println!("speedup (low-rank / dense): {:.2}x",
+             l.tokens_per_sec / d.tokens_per_sec);
+    Ok(())
+}

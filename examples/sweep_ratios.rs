@@ -1,0 +1,38 @@
+//! Ratio sweep: ZS-SVD vs the SVD baselines across the retention grid,
+//! tracing the perplexity/accuracy frontier (the qualitative shape of the
+//! paper's Table 1).
+//!
+//!     cargo run --release --example sweep_ratios
+
+use anyhow::Result;
+
+use zs_svd::config::ExperimentConfig;
+use zs_svd::coordinator::{self, Method};
+use zs_svd::eval::EvalSpec;
+use zs_svd::report::{acc2, f2, pct, Table};
+use zs_svd::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let cfg = ExperimentConfig::default();
+    let p = coordinator::prepare(&rt, &cfg)?;
+    let spec = EvalSpec { ppl_batches: 4, instances_per_family: 32, task_seed: 0xE1 };
+    let dense = coordinator::evaluate_plan(&p, None, &spec)?;
+
+    let mut t = Table::new("retention sweep on tiny",
+                           &["ratio", "method", "ppl(wiki)", "acc", "drop%"]);
+    t.row(vec!["1.0".into(), "dense".into(), f2(dense.ppl_of("wiki-syn")),
+               acc2(dense.avg_acc()), "0.0".into()]);
+    for ratio in [0.9, 0.8, 0.7, 0.6, 0.5, 0.4] {
+        for m in [Method::Svd, Method::Asvd, Method::SvdLlm, Method::zs(ratio)] {
+            let plan = coordinator::run_method(&p, &m, ratio)?;
+            let r = coordinator::evaluate_plan(&p, Some(&plan), &spec)?;
+            t.row(vec![format!("{ratio}"), plan.method.clone(),
+                       f2(r.ppl_of("wiki-syn")), acc2(r.avg_acc()),
+                       pct(r.drop_vs(&dense))]);
+        }
+        println!("ratio {ratio} done");
+    }
+    print!("{}", t.to_ascii());
+    Ok(())
+}

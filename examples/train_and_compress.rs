@@ -1,0 +1,84 @@
+//! End-to-end driver (DESIGN.md §End-to-end validation): train a transformer
+//! from scratch through the AOT train-step executable, log the loss curve,
+//! then compress with ZS-SVD vs SVD-LLM at three ratios and evaluate
+//! perplexity + zero-shot accuracy.  The printed output is the source of the
+//! E2E record in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example train_and_compress [steps]
+
+use anyhow::Result;
+
+use zs_svd::compress::calibrate;
+use zs_svd::config::ExperimentConfig;
+use zs_svd::coordinator::{self, Method, Prepared};
+use zs_svd::data;
+use zs_svd::eval::EvalSpec;
+use zs_svd::report::{acc2, f2, pct, Table};
+use zs_svd::runtime::session::Session;
+use zs_svd::runtime::Runtime;
+use zs_svd::trainer::{train, TrainConfig};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let rt = Runtime::load_default()?;
+    let session = Session::new(&rt, "tiny");
+    let world = data::default_world();
+    let train_corpus = data::training_corpus("llama", &world);
+    let eval_corpora = data::eval_corpora(&world);
+
+    // ---- phase 1: pretrain from scratch, log the loss curve ----
+    println!("== phase 1: training tiny ({} params) for {steps} steps ==",
+             session.cfg.param_count());
+    let tc = TrainConfig { steps, lr: 3e-3, warmup: steps / 10, seed: 7,
+                           log_every: 20 };
+    let t0 = std::time::Instant::now();
+    let result = train(&session, &train_corpus, &tc, false)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let tokens = steps * session.cfg.batch * session.cfg.seq_len;
+    println!("trained in {dt:.1}s  ({:.0} tok/s)", tokens as f64 / dt);
+    println!("loss curve (every {}th):", (steps / 15).max(1));
+    for (i, l) in result.losses.iter().enumerate() {
+        if i % (steps / 15).max(1) == 0 || i + 1 == steps {
+            println!("  step {i:4}  loss {l:.4}");
+        }
+    }
+    anyhow::ensure!(
+        *result.losses.last().unwrap() < result.losses[0] - 2.0,
+        "training did not converge"
+    );
+
+    // ---- phase 2: calibrate + compress + evaluate ----
+    println!("\n== phase 2: compress + evaluate ==");
+    let cfg = ExperimentConfig::default();
+    let calib = calibrate(&session, &result.params, &train_corpus, 8, 0xCA11B)?;
+    let p = Prepared { session, params: result.params, world,
+                       train_corpus, eval_corpora, calib };
+    let spec = EvalSpec { ppl_batches: cfg.ppl_batches,
+                          instances_per_family: cfg.instances_per_family,
+                          task_seed: 0xE1 };
+    let dense = coordinator::evaluate_plan(&p, None, &spec)?;
+
+    let mut t = Table::new(
+        "E2E: train -> compress -> evaluate (tiny)",
+        &["ratio", "method", "ppl(wiki)", "ppl(ptb)", "ppl(c4)", "acc", "drop%"],
+    );
+    t.row(vec!["1.0".into(), "dense".into(), f2(dense.ppl_of("wiki-syn")),
+               f2(dense.ppl_of("ptb-syn")), f2(dense.ppl_of("c4-syn")),
+               acc2(dense.avg_acc()), "0.0".into()]);
+    for ratio in [0.8, 0.6, 0.4] {
+        for m in [Method::SvdLlm, Method::zs(ratio)] {
+            let plan = coordinator::run_method(&p, &m, ratio)?;
+            let r = coordinator::evaluate_plan(&p, Some(&plan), &spec)?;
+            t.row(vec![format!("{ratio}"), plan.method.clone(),
+                       f2(r.ppl_of("wiki-syn")), f2(r.ppl_of("ptb-syn")),
+                       f2(r.ppl_of("c4-syn")), acc2(r.avg_acc()),
+                       pct(r.drop_vs(&dense))]);
+        }
+    }
+    print!("{}", t.to_ascii());
+    println!("\n(record this output in EXPERIMENTS.md §End-to-end)");
+    Ok(())
+}

@@ -1,0 +1,175 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* + write the manifest.
+
+Run once via ``make artifacts``.  The interchange format is HLO text, NOT a
+serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which the rust side's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+``artifacts/manifest.json`` records, for every artifact, the exact ordered
+input/output signature — that file is the ABI the rust runtime
+(`rust/src/runtime/`) loads at startup.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, param_spec, target_spec, site_spec, \
+    lowrank_rank
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(
+        shape, {"f32": jnp.float32, "i32": jnp.int32}[dtype])
+
+
+def _sig(entries):
+    """[(name, shape, dtype)] -> manifest signature records."""
+    return [{"name": n, "shape": list(s), "dtype": d} for n, s, d in entries]
+
+
+def lower_artifact(fn, in_entries, out_entries, path):
+    """Lower `fn` at the given input signature and write HLO text."""
+    t0 = time.time()
+    args = [_spec(tuple(s), d) for _, s, d in in_entries]
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    dt = time.time() - t0
+    print(f"  wrote {os.path.basename(path):40s} "
+          f"{len(text) / 1e6:6.2f} MB  in {dt:5.1f}s", flush=True)
+    return {
+        "file": os.path.basename(path),
+        "inputs": _sig(in_entries),
+        "outputs": _sig(out_entries),
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+
+
+def build_config(cfg, out_dir, fast=False):
+    pspec = param_spec(cfg)
+    tspec = target_spec(cfg)
+    sspec = site_spec(cfg)
+    B, T, V = cfg.batch, cfg.seq_len, cfg.vocab
+
+    params_in = [(n, s, "f32") for n, s in pspec]
+    tok = ("tokens_io", (B, T + 1), "i32")
+    tok1 = ("tokens_io", (1, T + 1), "i32")
+
+    arts = {}
+
+    # --- dense forward (loss + logits) ---
+    arts["fwd"] = lower_artifact(
+        M.make_fwd_loss(cfg), params_in + [tok],
+        [("loss", (), "f32"), ("logits", (B, T, V), "f32")],
+        os.path.join(out_dir, f"{cfg.name}_fwd.hlo.txt"))
+    if cfg.name == "tiny":
+        arts["fwd_b1"] = lower_artifact(
+            M.make_fwd_loss(cfg), params_in + [tok1],
+            [("loss", (), "f32"), ("logits", (1, T, V), "f32")],
+            os.path.join(out_dir, f"{cfg.name}_fwd_b1.hlo.txt"))
+
+    # --- calibration gradients for target matrices ---
+    arts["grads"] = lower_artifact(
+        M.make_grads(cfg), params_in + [tok],
+        [("loss", (), "f32")] + [(n, s, "f32") for n, s, _ in tspec],
+        os.path.join(out_dir, f"{cfg.name}_grads.hlo.txt"))
+
+    # --- whitening-site activation moments ---
+    mom_out = [("loss", (), "f32")]
+    for s, n in sspec:
+        mom_out += [(s + ".xx", (n, n), "f32"), (s + ".sum", (n,), "f32"),
+                    (s + ".abssum", (n,), "f32")]
+    arts["moments"] = lower_artifact(
+        M.make_moments(cfg), params_in + [tok], mom_out,
+        os.path.join(out_dir, f"{cfg.name}_moments.hlo.txt"))
+
+    # --- Adam train step ---
+    m_in = [("m." + n, s, "f32") for n, s in pspec]
+    v_in = [("v." + n, s, "f32") for n, s in pspec]
+    extra = [("step", (), "i32"), ("lr", (), "f32"), tok]
+    train_out = ([(n, s, "f32") for n, s in pspec]
+                 + m_in + v_in + [("loss", (), "f32")])
+    arts["train"] = lower_artifact(
+        M.make_train_step(cfg), params_in + m_in + v_in + extra, train_out,
+        os.path.join(out_dir, f"{cfg.name}_train.hlo.txt"))
+
+    # --- pallas low-rank forwards at the uniform-rank grid ---
+    lowrank = {}
+    for ratio in cfg.lowrank_ratios:
+        base, facts = M.lowrank_io_spec(cfg, ratio)
+        in_ent = ([(n, s, "f32") for n, s in base]
+                  + [(n, s, "f32") for n, s in facts] + [tok])
+        tag = f"{int(ratio * 100)}"
+        rec = lower_artifact(
+            M.make_fwd_lowrank(cfg, ratio), in_ent,
+            [("loss", (), "f32"), ("logits", (B, T, V), "f32")],
+            os.path.join(out_dir, f"{cfg.name}_lowrank_r{tag}.hlo.txt"))
+        rec["ranks"] = {n: lowrank_rank(ratio, mm, nn)
+                        for n, (mm, nn), _ in tspec}
+        lowrank[tag] = rec
+        if cfg.name == "tiny" and ratio in (0.6, 0.4):
+            in_ent1 = in_ent[:-1] + [tok1]
+            rec1 = lower_artifact(
+                M.make_fwd_lowrank(cfg, ratio), in_ent1,
+                [("loss", (), "f32"), ("logits", (1, T, V), "f32")],
+                os.path.join(out_dir, f"{cfg.name}_lowrank_r{tag}_b1.hlo.txt"))
+            rec1["ranks"] = rec["ranks"]
+            lowrank[tag + "_b1"] = rec1
+    if lowrank:
+        arts["lowrank"] = lowrank
+
+    return {
+        "arch": cfg.arch,
+        "vocab": V, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+        "seq_len": T, "batch": B,
+        "params": [{"name": n, "shape": list(s)} for n, s in pspec],
+        "targets": [{"name": n, "shape": list(s), "site": site}
+                    for n, s, site in tspec],
+        "sites": [{"name": s, "dim": n} for s, n in sspec],
+        "artifacts": arts,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small,opt_tiny",
+                    help="comma-separated subset of configs to build")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "configs": {}}
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name.strip()]
+        print(f"config {cfg.name} ({cfg.arch}) "
+              f"d={cfg.d_model} L={cfg.n_layers} ff={cfg.d_ff}", flush=True)
+        manifest["configs"][cfg.name] = build_config(cfg, args.out_dir)
+
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,127 @@
+"""Model configurations for the ZS-SVD reproduction.
+
+Each config is an architecture the paper's experiments map onto (DESIGN.md §2):
+
+* ``tiny``     — LLaMA-7B analog   (LLaMA-style: RMSNorm, RoPE, SwiGLU, tied embed)
+* ``small``    — LLaMA-13B / LLaMA-30B analog (same arch, larger)
+* ``opt_tiny`` — OPT-6.7B analog   (learned positions, LayerNorm, GELU MLP)
+
+The "Vicuna-7B" analog reuses the ``tiny`` architecture with a different
+training corpus mix, so it needs no extra HLO artifacts (weights are runtime
+inputs to every executable).
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch: str  # "llama" | "opt"
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 352
+    seq_len: int = 128
+    batch: int = 8
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # ratios for which a low-rank (pallas-kernel) forward artifact is emitted
+    lowrank_ratios: tuple = (0.8, 0.6, 0.4, 0.2)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+CONFIGS = {
+    "tiny": ModelConfig(name="tiny", arch="llama", d_model=128, n_layers=4,
+                        n_heads=4, d_ff=352),
+    "small": ModelConfig(name="small", arch="llama", d_model=192, n_layers=6,
+                         n_heads=6, d_ff=512, lowrank_ratios=()),
+    "opt_tiny": ModelConfig(name="opt_tiny", arch="opt", d_model=128,
+                            n_layers=4, n_heads=4, d_ff=512,
+                            lowrank_ratios=()),
+}
+
+
+def param_spec(cfg: ModelConfig):
+    """Canonical ordered list of (name, shape) for a config's parameters.
+
+    This ordering is the ABI between the python (build) side and the rust
+    (runtime) side: every artifact takes/returns parameters in exactly this
+    order, and artifacts/manifest.json records it.
+    """
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    spec = [("embed", (v, d))]
+    if cfg.arch == "opt":
+        spec.append(("pos_embed", (cfg.seq_len, d)))
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        spec.append((p + "ln1", (d,)))
+        spec.append((p + "wq", (d, d)))
+        spec.append((p + "wk", (d, d)))
+        spec.append((p + "wv", (d, d)))
+        spec.append((p + "wo", (d, d)))
+        spec.append((p + "ln2", (d,)))
+        if cfg.arch == "llama":
+            spec.append((p + "wgate", (ff, d)))
+            spec.append((p + "wup", (ff, d)))
+            spec.append((p + "wdown", (d, ff)))
+        else:
+            spec.append((p + "win", (ff, d)))
+            spec.append((p + "wout", (d, ff)))
+    spec.append(("final_ln", (d,)))
+    return spec
+
+
+def target_spec(cfg: ModelConfig):
+    """Ordered list of (name, shape, whitening_site) for compression targets.
+
+    Following the paper we truncate only the main transformer linear
+    matrices: attention projections (q,k,v,o) and the MLP matrices.
+    q/k/v share the ``attn_in`` whitening site, gate/up share ``mlp_in`` —
+    the same input-sharing SVD-LLM uses.
+    """
+    d, ff = cfg.d_model, cfg.d_ff
+    out = []
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        out.append((p + "wq", (d, d), p + "attn_in"))
+        out.append((p + "wk", (d, d), p + "attn_in"))
+        out.append((p + "wv", (d, d), p + "attn_in"))
+        out.append((p + "wo", (d, d), p + "attn_out_in"))
+        if cfg.arch == "llama":
+            out.append((p + "wgate", (ff, d), p + "mlp_in"))
+            out.append((p + "wup", (ff, d), p + "mlp_in"))
+            out.append((p + "wdown", (d, ff), p + "mlp_down_in"))
+        else:
+            out.append((p + "win", (ff, d), p + "mlp_in"))
+            out.append((p + "wout", (d, ff), p + "mlp_down_in"))
+    return out
+
+
+def site_spec(cfg: ModelConfig):
+    """Ordered list of (site_name, dim) whitening sites."""
+    d, ff = cfg.d_model, cfg.d_ff
+    out = []
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        out.append((p + "attn_in", d))
+        out.append((p + "attn_out_in", d))
+        out.append((p + "mlp_in", d))
+        out.append((p + "mlp_down_in", ff))
+    return out
+
+
+def lowrank_rank(ratio: float, m: int, n: int) -> int:
+    """Closed-form uniform rank for a parameter ratio: k = floor(rho*mn/(m+n)).
+
+    This matches SVD-LLM's homogeneous allocation; ZS-SVD's heterogeneous
+    ranks are padded up to these uniform ranks for the fixed-shape serving
+    artifacts (budget accounting stays exact on the rust side).
+    """
+    k = int(ratio * m * n / (m + n))
+    return max(1, k)

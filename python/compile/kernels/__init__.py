@@ -1,0 +1,5 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT HLO artifacts)."""
+
+from .lowrank import lowrank_linear, lowrank_linear_3d  # noqa: F401
+from .attention import mha_causal, mha_causal_4d  # noqa: F401
+from . import ref  # noqa: F401

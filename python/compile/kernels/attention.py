@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: causal multi-head attention with online softmax.
+
+GPU flash-attention keeps the running softmax state (row max / normalizer /
+accumulator) in warp registers and tiles K/V through shared memory.  The TPU
+re-think (DESIGN.md §6): the state lives in VMEM as whole row-blocks, the
+query block is the grid unit, and the K/V sweep is a `lax.fori_loop` over
+lane-aligned blocks — no warp-level primitives, just MXU-shaped matmuls and
+vector ops the VPU executes.
+
+Causal structure is exploited at block granularity: the fori_loop upper bound
+for query block `qi` is `qi + 1` K/V blocks (same block size), so fully-masked
+blocks are never touched; the diagonal block applies the triangular mask.
+
+interpret=True as everywhere in this repo (CPU PJRT cannot run Mosaic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+                 scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :] * scale  # (block_q, dh)
+    dh = q.shape[-1]
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k_blk = pl.load(k_ref, (0, pl.dslice(j * block_k, block_k),
+                                slice(None)))  # (block_k, dh)
+        v_blk = pl.load(v_ref, (0, pl.dslice(j * block_k, block_k),
+                                slice(None)))
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)
+        # causal mask: global query row >= global key row
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                        (block_q, block_k), 0)
+        k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc * alpha + jnp.dot(p, v_blk,
+                                    preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, dh), jnp.float32)
+    m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, qi + 1, body, (acc0, m0, l0))
+    o_ref[0, :, :] = (acc / l_i).astype(o_ref.dtype)
+
+
+def _pick_block(t: int, requested: int) -> int:
+    b = min(requested, t)
+    while t % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def mha_causal(q, k, v, block_q: int = 32):
+    """Causal attention over (BH, T, dh) tensors (batch*heads flattened).
+
+    Returns (BH, T, dh); softmax in f32 regardless of input dtype.
+    """
+    bh, t, dh = q.shape
+    bq = _pick_block(t, block_q)
+    scale = 1.0 / (dh ** 0.5)
+    grid = (bh, t // bq)
+    kernel = functools.partial(_attn_kernel, block_q=bq, block_k=bq,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, t, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def mha_causal_4d(q, k, v, block_q: int = 32):
+    """(B, H, T, dh) convenience wrapper."""
+    B, H, T, dh = q.shape
+    out = mha_causal(q.reshape(B * H, T, dh), k.reshape(B * H, T, dh),
+                     v.reshape(B * H, T, dh), block_q=block_q)
+    return out.reshape(B, H, T, dh)

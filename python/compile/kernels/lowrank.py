@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: fused low-rank linear  y = (x @ Wv^T) @ Wu^T.
+
+This is the serving hot-spot of every SVD-compressed layer: the dense GEMM
+``y = x W^T`` (W: m x n) is replaced by two skinny GEMMs through the rank-k
+bottleneck (Wv: k x n, Wu: m x k).  On GPU the paper realizes this as two
+cuBLAS calls; here the two contractions are fused into ONE Pallas kernel so
+the rank-k intermediate ``t = x Wv^T`` lives entirely in VMEM and never
+round-trips HBM (DESIGN.md §6, Hardware Adaptation).
+
+Tiling scheme
+-------------
+* grid = (rows / block_rows,) — one program per row tile of x.
+* ``x`` block: (block_rows, n); ``Wv``/``Wu`` are broadcast whole (for the
+  shapes this library targets, n,m <= 1k and k <= n/2, both factors fit VMEM:
+  footprint = block_rows*n + k*n + m*k + block_rows*m floats; the default
+  block_rows=64 keeps this well under 2 MiB for every config in
+  `configs.CONFIGS`).
+* both matmuls run in f32 with ``preferred_element_type=f32`` so the MXU
+  accumulates at full precision even for bf16 inputs.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO, which is what
+the AOT pipeline ships to the rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lowrank_kernel(x_ref, wv_ref, wu_ref, o_ref):
+    # t: (block_rows, k) stays in VMEM between the two contractions.
+    t = jnp.dot(x_ref[...], wv_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(t, wu_ref[...].T,
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _pick_block_rows(rows: int, requested: int) -> int:
+    """Largest divisor of `rows` that is <= requested (>=1)."""
+    b = min(requested, rows)
+    while rows % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def lowrank_linear(x, wu, wv, block_rows: int = 64):
+    """y = x @ Wv^T @ Wu^T with a fused VMEM-resident rank-k intermediate.
+
+    Args:
+      x:  (rows, n) activations.
+      wu: (m, k) left factor  (U_k * sqrt(Sigma_k) in the paper's Eq. 5).
+      wv: (k, n) right factor (sqrt(Sigma_k) * V_k^T * S^{-1}).
+      block_rows: requested row-tile size; rounded down to a divisor of rows.
+
+    Returns:
+      (rows, m) output, same dtype as x.
+    """
+    rows, n = x.shape
+    m, k = wu.shape
+    assert wv.shape == (k, n), (wv.shape, (k, n))
+    br = _pick_block_rows(rows, block_rows)
+    grid = (rows // br,)
+    return pl.pallas_call(
+        _lowrank_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, m), x.dtype),
+        interpret=True,
+    )(x, wv, wu)
+
+
+def lowrank_linear_3d(x, wu, wv, block_rows: int = 64):
+    """Convenience wrapper for (B, T, n) activations."""
+    B, T, n = x.shape
+    y = lowrank_linear(x.reshape(B * T, n), wu, wv, block_rows=block_rows)
+    return y.reshape(B, T, wu.shape[0])
+
+
+def vmem_footprint_bytes(rows_block: int, n: int, m: int, k: int,
+                         dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one program instance (DESIGN.md §8)."""
+    x_blk = rows_block * n
+    wv = k * n
+    wu = m * k
+    t = rows_block * k
+    out = rows_block * m
+    return (x_blk + wv + wu + t + out) * dtype_bytes
+
+
+def flops_per_row(m: int, n: int, k: int) -> int:
+    """MACs*2 per output row: low-rank 2k(m+n) vs dense 2mn."""
+    return 2 * k * (m + n)

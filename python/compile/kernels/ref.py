@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal for L1: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts allclose between the kernels
+and these references.  They are intentionally the most naive possible
+implementations.
+"""
+
+import jax.numpy as jnp
+
+
+def lowrank_linear_ref(x, wu, wv):
+    """y = x @ Wv^T @ Wu^T, computed as two plain matmuls in f32."""
+    t = jnp.dot(x.astype(jnp.float32), wv.T.astype(jnp.float32))
+    y = jnp.dot(t, wu.T.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def mha_causal_ref(q, k, v):
+    """Naive causal attention over (BH, T, dh) with a full T x T score mat."""
+    bh, t, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    s = jnp.where(mask[None, :, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

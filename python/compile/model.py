@@ -1,0 +1,317 @@
+"""L2: the transformer model in JAX — forward, loss, grads, moments, train step.
+
+Everything here is build-time only.  `aot.py` lowers the functions below to
+HLO text once; the rust runtime executes them via PJRT forever after.
+
+Parameters are a flat dict name->array; the canonical ordering (the rust ABI)
+comes from `configs.param_spec`.  Two architectures:
+
+* ``llama`` — RMSNorm, RoPE, causal MHA, SwiGLU MLP, tied embedding head.
+* ``opt``   — learned positions, (scale-only) LayerNorm, GELU MLP, tied head.
+
+The *low-rank* forward replaces every compression-target matmul with the L1
+Pallas kernel `kernels.lowrank_linear_3d`, so the lowered HLO exercises the
+fused VMEM-resident factored contraction on the serving path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, param_spec, target_spec, site_spec, \
+    lowrank_rank
+from .kernels.lowrank import lowrank_linear_3d
+
+
+# ---------------------------------------------------------------------------
+# initialization (used by python tests; the rust trainer has its own
+# identically-scaled initializer, see rust/src/model/init.rs)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "final_ln")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "pos_embed":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            scale = 0.02
+            if name.endswith(("wo", "wdown", "wout")):
+                # residual-branch output scaling (GPT-2 style)
+                scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+            params[name] = scale * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def layernorm(x, scale, eps):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope(x, theta):
+    """Rotary embedding over (B, H, T, dh)."""
+    b, h, t, dh = x.shape
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.arange(t, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]            # (T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def causal_attention(q, k, v):
+    """Reference causal attention over (B, H, T, dh) in f32."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(jnp.float32(dh))
+    t = q.shape[2]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p, v)
+
+
+def _split_heads(x, n_heads):
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def dense(x, w):
+    """y = x @ w^T for w stored (out, in) — the paper's W in R^{m x n}."""
+    return jnp.einsum("btn,mn->btm", x, w)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, tokens, collect_sites=False,
+            lowrank=None):
+    """Token logits (+ optionally the whitening-site activations).
+
+    Args:
+      tokens: (B, T) int32 input ids.
+      collect_sites: if True, also return {site_name: (B,T,n) activations}.
+      lowrank: optional {target_name: (wu, wv)}; those matmuls run through
+        the Pallas low-rank kernel instead of the dense weight.
+    """
+    sites = {}
+    norm = rmsnorm if cfg.arch == "llama" else layernorm
+
+    def linear(name, x):
+        if lowrank is not None and name in lowrank:
+            wu, wv = lowrank[name]
+            return lowrank_linear_3d(x, wu, wv)
+        return dense(x, params[name])
+
+    x = params["embed"][tokens]                      # (B, T, d)
+    if cfg.arch == "opt":
+        x = x + params["pos_embed"][None, : tokens.shape[1]]
+
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        h = norm(x, params[p + "ln1"], cfg.norm_eps)
+        if collect_sites:
+            sites[p + "attn_in"] = h
+        q = _split_heads(linear(p + "wq", h), cfg.n_heads)
+        k = _split_heads(linear(p + "wk", h), cfg.n_heads)
+        v = _split_heads(linear(p + "wv", h), cfg.n_heads)
+        if cfg.arch == "llama":
+            q, k = rope(q, cfg.rope_theta), rope(k, cfg.rope_theta)
+        attn = _merge_heads(causal_attention(q, k, v))
+        if collect_sites:
+            sites[p + "attn_out_in"] = attn
+        x = x + linear(p + "wo", attn)
+
+        h = norm(x, params[p + "ln2"], cfg.norm_eps)
+        if collect_sites:
+            sites[p + "mlp_in"] = h
+        if cfg.arch == "llama":
+            g = linear(p + "wgate", h)
+            u = linear(p + "wup", h)
+            act = jax.nn.silu(g) * u
+            if collect_sites:
+                sites[p + "mlp_down_in"] = act
+            x = x + linear(p + "wdown", act)
+        else:
+            act = jax.nn.gelu(linear(p + "win", h))
+            if collect_sites:
+                sites[p + "mlp_down_in"] = act
+            x = x + linear(p + "wout", act)
+
+    x = norm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"])  # tied head
+    if collect_sites:
+        return logits, sites
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params: dict, tokens_io, lowrank=None):
+    """Mean next-token cross-entropy. tokens_io: (B, T+1) int32."""
+    inp, tgt = tokens_io[:, :-1], tokens_io[:, 1:]
+    logits = forward(cfg, params, inp, lowrank=lowrank)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll), logits
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (lowered by aot.py; signatures are the rust ABI)
+# ---------------------------------------------------------------------------
+
+def make_fwd_loss(cfg: ModelConfig):
+    """(params..., tokens_io) -> (loss, logits)."""
+    names = [n for n, _ in param_spec(cfg)]
+
+    def f(*args):
+        params = dict(zip(names, args[:-1]))
+        loss, logits = loss_fn(cfg, params, args[-1])
+        return (loss, logits)
+
+    return f
+
+
+def make_grads(cfg: ModelConfig):
+    """(params..., tokens_io) -> (loss, grad per target matrix)."""
+    names = [n for n, _ in param_spec(cfg)]
+    tnames = [t[0] for t in target_spec(cfg)]
+
+    def f(*args):
+        params = dict(zip(names, args[:-1]))
+        tokens = args[-1]
+        frozen = {k: v for k, v in params.items() if k not in tnames}
+
+        def scalar_loss(tparams):
+            return loss_fn(cfg, {**frozen, **tparams}, tokens)[0]
+
+        tparams = {k: params[k] for k in tnames}
+        loss, grads = jax.value_and_grad(scalar_loss)(tparams)
+        return (loss,) + tuple(grads[k] for k in tnames)
+
+    return f
+
+
+def make_moments(cfg: ModelConfig):
+    """(params..., tokens_io) -> (loss, then per site: XX^T, sum_x, sum_|x|).
+
+    X is the (n, B*T) matrix of site inputs; the rust side accumulates over
+    calibration batches, adds the ridge, and Cholesky-factors.  sum_x and
+    sum_|x| feed the FLAP-like and ASVD baselines.  The loss output is not
+    just convenience: it anchors the full forward graph so XLA cannot prune
+    parameters that only feed the logits (final_ln, the last down-proj) from
+    the lowered signature — the rust ABI assumes every param is an input.
+    """
+    names = [n for n, _ in param_spec(cfg)]
+    snames = [s for s, _ in site_spec(cfg)]
+
+    def f(*args):
+        params = dict(zip(names, args[:-1]))
+        tokens_io = args[-1]
+        inp, tgt = tokens_io[:, :-1], tokens_io[:, 1:]
+        logits, sites = forward(cfg, params, inp, collect_sites=True)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        outs = [jnp.mean(nll)]
+        for s in snames:
+            x = sites[s].astype(jnp.float32)
+            n = x.shape[-1]
+            flat = x.reshape(-1, n)
+            outs.append(flat.T @ flat)            # (n, n)
+            outs.append(jnp.sum(flat, axis=0))    # (n,)
+            outs.append(jnp.sum(jnp.abs(flat), axis=0))
+        return tuple(outs)
+
+    return f
+
+
+def make_train_step(cfg: ModelConfig, beta1=0.9, beta2=0.95, eps=1e-8,
+                    weight_decay=0.0):
+    """(params..., m..., v..., step, lr, tokens_io)
+       -> (params'..., m'..., v'..., loss).   Plain Adam."""
+    names = [n for n, _ in param_spec(cfg)]
+    P = len(names)
+
+    def f(*args):
+        params = dict(zip(names, args[:P]))
+        m = dict(zip(names, args[P:2 * P]))
+        v = dict(zip(names, args[2 * P:3 * P]))
+        step, lr, tokens = args[3 * P], args[3 * P + 1], args[3 * P + 2]
+
+        def scalar_loss(p):
+            return loss_fn(cfg, p, tokens)[0]
+
+        loss, grads = jax.value_and_grad(scalar_loss)(params)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - beta1 ** t
+        bc2 = 1.0 - beta2 ** t
+        new_p, new_m, new_v = [], [], []
+        for n in names:
+            g = grads[n]
+            if weight_decay > 0.0 and g.ndim >= 2:
+                g = g + weight_decay * params[n]
+            mn = beta1 * m[n] + (1 - beta1) * g
+            vn = beta2 * v[n] + (1 - beta2) * jnp.square(g)
+            upd = (mn / bc1) / (jnp.sqrt(vn / bc2) + eps)
+            new_p.append(params[n] - lr * upd)
+            new_m.append(mn)
+            new_v.append(vn)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    return f
+
+
+def make_fwd_lowrank(cfg: ModelConfig, ratio: float):
+    """Low-rank forward at the closed-form uniform rank for `ratio`.
+
+    Inputs: non-target params in canonical order, then (wu, wv) per target in
+    target order, then tokens_io.  Output: (loss, logits).
+    Target matmuls run through the L1 Pallas kernel.
+    """
+    pspec = param_spec(cfg)
+    tspec = target_spec(cfg)
+    tnames = {t[0] for t in tspec}
+    base_names = [n for n, _ in pspec if n not in tnames]
+
+    def f(*args):
+        params = dict(zip(base_names, args[:len(base_names)]))
+        lowrank = {}
+        idx = len(base_names)
+        for name, _, _ in tspec:
+            lowrank[name] = (args[idx], args[idx + 1])
+            idx += 2
+        tokens = args[idx]
+        loss, logits = loss_fn(cfg, params, tokens, lowrank=lowrank)
+        return (loss, logits)
+
+    return f
+
+
+def lowrank_io_spec(cfg: ModelConfig, ratio: float):
+    """(base_param_shapes, factored_shapes) for `make_fwd_lowrank` inputs."""
+    pspec = param_spec(cfg)
+    tspec = target_spec(cfg)
+    tnames = {t[0] for t in tspec}
+    base = [(n, s) for n, s in pspec if n not in tnames]
+    facts = []
+    for name, (mm, nn), _ in tspec:
+        k = lowrank_rank(ratio, mm, nn)
+        facts.append((name + ".wu", (mm, k)))
+        facts.append((name + ".wv", (k, nn)))
+    return base, facts

@@ -1,0 +1,151 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; numpy.testing.assert_allclose against ref.py
+is the acceptance criterion (system contract for this repo).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lowrank, attention, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# low-rank linear kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([8, 33, 64, 128, 1024]),
+    n=st.sampled_from([16, 96, 128, 352]),
+    m=st.sampled_from([16, 128, 352]),
+    k=st.integers(min_value=1, max_value=96),
+    block_rows=st.sampled_from([8, 32, 64, 100]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_lowrank_matches_ref(rows, n, m, k, block_rows, dtype):
+    kk = min(k, min(m, n))
+    key = jax.random.PRNGKey(rows * 31 + n * 7 + m * 3 + kk)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = _rand(k1, (rows, n), dtype)
+    wu = _rand(k2, (m, kk), dtype)
+    wv = _rand(k3, (kk, n), dtype)
+    got = lowrank.lowrank_linear(x, wu, wv, block_rows=block_rows)
+    want = ref.lowrank_linear_ref(x, wu, wv)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_lowrank_3d_shape():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 16, 24))
+    wu = jax.random.normal(key, (40, 5))
+    wv = jax.random.normal(key, (5, 24))
+    y = lowrank.lowrank_linear_3d(x, wu, wv)
+    assert y.shape == (2, 16, 40)
+
+
+def test_lowrank_zero_rank_component():
+    """Zeroed factor rows/cols contribute nothing — padding is sound."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (32, 16))
+    wu = jax.random.normal(key, (24, 8))
+    wv = jax.random.normal(key, (8, 16))
+    base = lowrank.lowrank_linear(x, wu, wv)
+    wu_pad = jnp.concatenate([wu, jnp.zeros((24, 4))], axis=1)
+    wv_pad = jnp.concatenate([wv, jnp.zeros((4, 16))], axis=0)
+    padded = lowrank.lowrank_linear(x, wu_pad, wv_pad)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(padded),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lowrank_block_rows_invariance():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (96, 32))
+    wu = jax.random.normal(key, (48, 12))
+    wv = jax.random.normal(key, (12, 32))
+    outs = [lowrank.lowrank_linear(x, wu, wv, block_rows=b)
+            for b in (8, 16, 48, 96)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_vmem_footprint_under_budget():
+    """Every config/ratio this repo ships stays under the 2 MiB VMEM target."""
+    from compile.configs import CONFIGS, target_spec, lowrank_rank
+    for cfg in CONFIGS.values():
+        for ratio in cfg.lowrank_ratios or (0.6,):
+            for _, (m, n), _ in target_spec(cfg):
+                k = lowrank_rank(ratio, m, n)
+                fp = lowrank.vmem_footprint_bytes(64, n, m, k)
+                assert fp < 2 * 1024 * 1024, (cfg.name, ratio, m, n, k, fp)
+
+
+def test_flops_accounting():
+    assert lowrank.flops_per_row(128, 128, 32) == 2 * 32 * 256
+    # saving factor mn/(k(m+n)) at the closed-form rank ~ 1/ratio
+    from compile.configs import lowrank_rank
+    m = n = 128
+    k = lowrank_rank(0.5, m, n)
+    saving = (m * n) / (k * (m + n))
+    assert 1.9 < saving < 2.2
+
+
+# ---------------------------------------------------------------------------
+# attention kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bh=st.sampled_from([1, 3, 8]),
+    t=st.sampled_from([16, 64, 128]),
+    dh=st.sampled_from([8, 32]),
+    block_q=st.sampled_from([8, 16, 32]),
+)
+def test_attention_matches_ref(bh, t, dh, block_q):
+    key = jax.random.PRNGKey(bh * 131 + t * 3 + dh)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (bh, t, dh))
+    k = jax.random.normal(k2, (bh, t, dh))
+    v = jax.random.normal(k3, (bh, t, dh))
+    got = attention.mha_causal(q, k, v, block_q=block_q)
+    want = ref.mha_causal_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_attention_causality():
+    """Future tokens must not influence earlier outputs."""
+    key = jax.random.PRNGKey(7)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (2, 32, 8))
+    k = jax.random.normal(k2, (2, 32, 8))
+    v = jax.random.normal(k3, (2, 32, 8))
+    out_full = attention.mha_causal(q, k, v, block_q=8)
+    # perturb the last 16 positions of k/v; first 16 outputs must not move
+    k2b = k.at[:, 16:].add(100.0)
+    v2b = v.at[:, 16:].add(-50.0)
+    out_pert = attention.mha_causal(q, k2b, v2b, block_q=8)
+    np.testing.assert_allclose(np.asarray(out_full[:, :16]),
+                               np.asarray(out_pert[:, :16]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attention_4d_wrapper():
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (2, 4, 16, 8))
+    out = attention.mha_causal_4d(q, q, q, block_q=8)
+    assert out.shape == (2, 4, 16, 8)

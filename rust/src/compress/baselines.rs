@@ -1,0 +1,421 @@
+//! Baseline compression methods the paper compares against.
+//!
+//! SVD family (Tables 1/2/5/8): plain SVD, FWSVD (Fisher-weighted), ASVD
+//! (activation channel scaling), SVD-LLM (whitened, homogeneous ranks), and
+//! a Dobi-SVD cost simulator (per-layer rank-allocation optimization driven
+//! by measured calibration loss — deliberately expensive, Table 8).
+//!
+//! Structured pruning family (Tables 3/4): magnitude (LLM-Pruner analog),
+//! Wanda-sp, FLAP-like fluctuation pruning, and SliceGPT-like PCA slicing.
+//! Pruning is emulated by structured masking with analytic storage
+//! accounting; evaluation shares the dense fwd artifact (DESIGN.md §2).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::pipeline::Calibration;
+use super::plan::{factored_params, CompressionPlan, TargetPlan};
+use super::whiten::{factorize, whitened_svd};
+use crate::linalg::{matmul, svd};
+use crate::model::ParamStore;
+use crate::runtime::session::Session;
+use crate::tensor::{Mat, Tensor};
+
+/// Homogeneous per-matrix rank at parameter ratio ρ: k = ⌊ρ·mn/(m+n)⌋.
+pub fn homogeneous_rank(ratio: f64, m: usize, n: usize) -> usize {
+    ((ratio * (m * n) as f64 / (m + n) as f64) as usize).max(1)
+}
+
+fn lowrank_plan_target(name: &str, wu: Mat, wv: Mat) -> TargetPlan {
+    let (m, k) = (wu.rows, wu.cols);
+    let n = wv.cols;
+    let replacement = matmul(&wu, &wv);
+    TargetPlan { name: name.to_string(), m, n, rank: k, dense: false,
+                 replacement, factors: Some((wu, wv)),
+                 stored_params: factored_params(m, n, k) }
+}
+
+// ---------------------------------------------------------------------------
+// SVD family
+// ---------------------------------------------------------------------------
+
+/// Vanilla truncated SVD of the raw weights, homogeneous ranks.
+pub fn svd_plain(sess: &Session, params: &ParamStore, ratio: f64) -> CompressionPlan {
+    let t0 = Instant::now();
+    let targets = sess.cfg.targets.iter().map(|t| {
+        let w = params.get(&t.name).to_mat();
+        let k = homogeneous_rank(ratio, w.rows, w.cols);
+        let s = svd(&w);
+        let (wu, wv) = crate::linalg::factor(&s, k);
+        lowrank_plan_target(&t.name, wu, wv)
+    }).collect();
+    CompressionPlan { method: "svd".into(), ratio, targets,
+                      seconds: t0.elapsed().as_secs_f64() }
+}
+
+/// FWSVD (Hsu et al. 2022): rows weighted by √(row-sum of the Fisher diag)
+/// before SVD, unweighted after.
+pub fn fwsvd(sess: &Session, params: &ParamStore, calib: &Calibration,
+             ratio: f64) -> CompressionPlan {
+    let t0 = Instant::now();
+    let targets = sess.cfg.targets.iter().map(|t| {
+        let w = params.get(&t.name).to_mat();
+        let fisher = &calib.fisher[&t.name];
+        let (m, n) = (w.rows, w.cols);
+        // row importance I_r = Σ_c fisher[r,c]
+        let mut d = vec![0.0f32; m];
+        for r in 0..m {
+            let s: f64 = fisher.row(r).iter().map(|&v| v as f64).sum();
+            d[r] = (s.max(1e-12)).sqrt() as f32;
+        }
+        let mut dw = w.clone();
+        for r in 0..m {
+            let dr = d[r];
+            for v in dw.row_mut(r) {
+                *v *= dr;
+            }
+        }
+        let k = homogeneous_rank(ratio, m, n);
+        let s = svd(&dw);
+        let (mut wu, wv) = crate::linalg::factor(&s, k);
+        // unweight the left factor: W' = D^{-1} (DW)_k
+        for r in 0..m {
+            let inv = 1.0 / d[r];
+            for v in wu.row_mut(r) {
+                *v *= inv;
+            }
+        }
+        lowrank_plan_target(&t.name, wu, wv)
+    }).collect();
+    CompressionPlan { method: "fwsvd".into(), ratio, targets,
+                      seconds: t0.elapsed().as_secs_f64() }
+}
+
+/// ASVD (Yuan et al. 2025): per-channel scaling by mean |activation|^α.
+pub fn asvd(sess: &Session, params: &ParamStore, calib: &Calibration,
+            ratio: f64, alpha: f32) -> CompressionPlan {
+    let t0 = Instant::now();
+    let targets = sess.cfg.targets.iter().map(|t| {
+        let w = params.get(&t.name).to_mat();
+        let (m, n) = (w.rows, w.cols);
+        let abssum = &calib.site_abssum[&t.site];
+        let cnt = calib.token_count.max(1) as f32;
+        let d: Vec<f32> = abssum.iter()
+            .map(|&a| ((a / cnt).max(1e-6)).powf(alpha))
+            .collect();
+        // A = W·diag(d)
+        let mut a = w.clone();
+        for r in 0..m {
+            for (c, v) in a.row_mut(r).iter_mut().enumerate() {
+                *v *= d[c];
+            }
+        }
+        let k = homogeneous_rank(ratio, m, n);
+        let s = svd(&a);
+        let (wu, mut wv) = crate::linalg::factor(&s, k);
+        // W' = A_k·diag(1/d)
+        for r in 0..wv.rows {
+            for (c, v) in wv.row_mut(r).iter_mut().enumerate() {
+                *v /= d[c];
+            }
+        }
+        lowrank_plan_target(&t.name, wu, wv)
+    }).collect();
+    CompressionPlan { method: "asvd".into(), ratio, targets,
+                      seconds: t0.elapsed().as_secs_f64() }
+}
+
+/// SVD-LLM (Wang et al. 2025b): truncation-aware whitening with the
+/// closed-form homogeneous rank rule.
+pub fn svdllm(sess: &Session, params: &ParamStore, calib: &Calibration,
+              ratio: f64) -> CompressionPlan {
+    let t0 = Instant::now();
+    let targets = sess.cfg.targets.iter().map(|t| {
+        let w = params.get(&t.name).to_mat();
+        let c = &calib.site_xx[&t.site];
+        let (s_factor, lambda, sv) = whitened_svd(&w, c);
+        let k = homogeneous_rank(ratio, w.rows, w.cols);
+        let kept: Vec<usize> = (0..k.min(sv.sigma.len())).collect();
+        let d = super::whiten::TargetDecomp {
+            name: t.name.clone(), m: w.rows, n: w.cols,
+            s: s_factor, lambda, svd: sv, dl: vec![],
+        };
+        let (wu, wv) = factorize(&d, &kept);
+        lowrank_plan_target(&t.name, wu, wv)
+    }).collect();
+    CompressionPlan { method: "svd-llm".into(), ratio, targets,
+                      seconds: t0.elapsed().as_secs_f64() }
+}
+
+/// Dobi-SVD cost simulator: whitened SVD + iterative per-layer rank
+/// allocation optimized against *measured* calibration loss.  Each proposal
+/// re-materializes weights and runs forward passes — reproducing the
+/// optimization-heavy cost profile of Table 8.
+pub fn dobi_sim(sess: &Session, params: &ParamStore, calib: &Calibration,
+                ratio: f64, sweeps: usize) -> Result<CompressionPlan> {
+    let t0 = Instant::now();
+    // whitened decompositions (no gradients — Dobi is loss-driven by search)
+    let decomps: Vec<super::whiten::TargetDecomp> = sess.cfg.targets.iter()
+        .map(|t| {
+            let w = params.get(&t.name).to_mat();
+            let (s_factor, lambda, sv) = whitened_svd(&w, &calib.site_xx[&t.site]);
+            super::whiten::TargetDecomp {
+                name: t.name.clone(), m: w.rows, n: w.cols,
+                s: s_factor, lambda, svd: sv, dl: vec![],
+            }
+        })
+        .collect();
+
+    let mut ranks: Vec<usize> = decomps.iter()
+        .map(|d| homogeneous_rank(ratio, d.m, d.n))
+        .collect();
+
+    let eval_loss = |ranks: &[usize]| -> Result<f32> {
+        let mut p = params.clone();
+        for (d, &k) in decomps.iter().zip(ranks) {
+            let kept: Vec<usize> = (0..k.min(d.svd.sigma.len())).collect();
+            let (wu, wv) = factorize(d, &kept);
+            p.set(&d.name, Tensor::from_mat(&matmul(&wu, &wv)));
+        }
+        let (l, _) = sess.fwd(&p, &calib.batches[0])?;
+        Ok(l)
+    };
+
+    let mut best = eval_loss(&ranks)?;
+    // pairwise rank transfers keeping the parameter budget fixed
+    for sweep in 0..sweeps {
+        for i in 0..ranks.len() {
+            let j = (i + 1 + sweep) % ranks.len();
+            if i == j {
+                continue;
+            }
+            let (ci, cj) = (decomps[i].m + decomps[i].n, decomps[j].m + decomps[j].n);
+            // donate one unit from i, give ⌊ci/cj⌋ (≥1) to j — budget-neutral
+            let gain = (ci / cj).max(1);
+            if ranks[i] <= 2 {
+                continue;
+            }
+            let mut cand = ranks.clone();
+            cand[i] -= 1;
+            cand[j] = (cand[j] + gain).min(decomps[j].svd.sigma.len());
+            let l = eval_loss(&cand)?;
+            if l < best {
+                best = l;
+                ranks = cand;
+            }
+        }
+    }
+
+    let targets = decomps.iter().zip(&ranks).map(|(d, &k)| {
+        let kept: Vec<usize> = (0..k.min(d.svd.sigma.len())).collect();
+        let (wu, wv) = factorize(d, &kept);
+        lowrank_plan_target(&d.name, wu, wv)
+    }).collect();
+    Ok(CompressionPlan { method: "dobi-sim".into(), ratio, targets,
+                         seconds: t0.elapsed().as_secs_f64() })
+}
+
+// ---------------------------------------------------------------------------
+// structured pruning family
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PruneScore {
+    /// weight-magnitude (LLM-Pruner analog)
+    Magnitude,
+    /// |W|·‖x‖ activation-aware (Wanda-sp analog)
+    WandaSp,
+    /// input-fluctuation weighted (FLAP analog)
+    Flap,
+}
+
+/// Structured MLP-neuron pruning: removes hidden neurons of every MLP
+/// (rows of gate/up|win, columns of down|wout) until the *target-matrix*
+/// parameter ratio hits ρ.  Attention is left dense (the usual structured-
+/// pruning protocol for these baselines).
+pub fn prune_structured(sess: &Session, params: &ParamStore,
+                        calib: &Calibration, ratio: f64, score: PruneScore)
+                        -> CompressionPlan {
+    let t0 = Instant::now();
+    let cfg = &sess.cfg;
+    let total: f64 = cfg.targets.iter().map(|t| (t.shape.0 * t.shape.1) as f64).sum();
+    let mlp_names: Vec<&str> = if cfg.arch == "llama" {
+        vec!["wgate", "wup", "wdown"]
+    } else {
+        vec!["win", "wout"]
+    };
+    let mlp_total: f64 = cfg.targets.iter()
+        .filter(|t| mlp_names.iter().any(|m| t.name.ends_with(m)))
+        .map(|t| (t.shape.0 * t.shape.1) as f64)
+        .sum();
+    // (1-p)·mlp + (total-mlp) = ρ·total  =>  p = (1-ρ)·total / mlp
+    let p = ((1.0 - ratio) * total / mlp_total).clamp(0.0, 0.97);
+    let d_ff = cfg.d_ff;
+    let keep = ((1.0 - p) * d_ff as f64).round().max(1.0) as usize;
+
+    let mut targets = Vec::new();
+    for layer in 0..cfg.n_layers {
+        let prefix = format!("layers.{layer}.");
+        // neuron scores over the ff dimension
+        let mut scores = vec![0.0f64; d_ff];
+        for t in cfg.targets.iter().filter(|t| t.name.starts_with(&prefix)) {
+            let short = t.name.rsplit('.').next().unwrap();
+            if !mlp_names.contains(&short) {
+                continue;
+            }
+            let w = params.get(&t.name).to_mat();
+            let up_like = w.rows == d_ff; // gate/up/win: neuron = row
+            let site = &t.site;
+            let diag_c = calib.site_xx[site].diag();
+            let sum = &calib.site_sum[site];
+            let cnt = calib.token_count.max(1) as f64;
+            for j in 0..d_ff {
+                let mut s = 0.0f64;
+                match score {
+                    PruneScore::Magnitude => {
+                        if up_like {
+                            s = w.row(j).iter().map(|&v| (v as f64).powi(2)).sum();
+                        } else {
+                            for r in 0..w.rows {
+                                s += (w.at(r, j) as f64).powi(2);
+                            }
+                        }
+                    }
+                    PruneScore::WandaSp => {
+                        if up_like {
+                            // input channel norms of this site
+                            let w_row: f64 = w.row(j).iter().enumerate()
+                                .map(|(c, &v)| v.abs() as f64
+                                     * (diag_c[c] as f64 / cnt).max(0.0).sqrt())
+                                .sum();
+                            s = w_row;
+                        } else {
+                            let xnorm = (diag_c[j] as f64 / cnt).max(0.0).sqrt();
+                            for r in 0..w.rows {
+                                s += w.at(r, j).abs() as f64 * xnorm;
+                            }
+                        }
+                    }
+                    PruneScore::Flap => {
+                        if up_like {
+                            s = w.row(j).iter().enumerate()
+                                .map(|(c, &v)| {
+                                    let mean = sum[c] as f64 / cnt;
+                                    let var = (diag_c[c] as f64 / cnt - mean * mean).max(0.0);
+                                    (v as f64).powi(2) * var
+                                })
+                                .sum();
+                        } else {
+                            let mean = sum[j] as f64 / cnt;
+                            let var = (diag_c[j] as f64 / cnt - mean * mean).max(0.0);
+                            for r in 0..w.rows {
+                                s += (w.at(r, j) as f64).powi(2) * var;
+                            }
+                        }
+                    }
+                }
+                scores[j] += s;
+            }
+        }
+        let mut order: Vec<usize> = (0..d_ff).collect();
+        order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+        let kept: std::collections::BTreeSet<usize> =
+            order[..keep].iter().copied().collect();
+
+        for t in cfg.targets.iter().filter(|t| t.name.starts_with(&prefix)) {
+            let short = t.name.rsplit('.').next().unwrap();
+            let w = params.get(&t.name).to_mat();
+            let (m, n) = (w.rows, w.cols);
+            if !mlp_names.contains(&short) {
+                // attention stays dense
+                targets.push(TargetPlan { name: t.name.clone(), m, n,
+                                          rank: m.min(n), dense: true,
+                                          replacement: w, factors: None,
+                                          stored_params: (m * n) as f64 });
+                continue;
+            }
+            let mut rep = w.clone();
+            let up_like = m == d_ff;
+            if up_like {
+                for j in 0..d_ff {
+                    if !kept.contains(&j) {
+                        rep.row_mut(j).fill(0.0);
+                    }
+                }
+            } else {
+                for r in 0..m {
+                    for j in 0..d_ff {
+                        if !kept.contains(&j) {
+                            *rep.at_mut(r, j) = 0.0;
+                        }
+                    }
+                }
+            }
+            let stored = if up_like { (keep * n) as f64 } else { (m * keep) as f64 };
+            targets.push(TargetPlan { name: t.name.clone(), m, n, rank: keep,
+                                      dense: false, replacement: rep,
+                                      factors: None, stored_params: stored });
+        }
+    }
+
+    let label = match score {
+        PruneScore::Magnitude => "llm-pruner",
+        PruneScore::WandaSp => "wanda-sp",
+        PruneScore::Flap => "flap",
+    };
+    CompressionPlan { method: label.into(), ratio, targets,
+                      seconds: t0.elapsed().as_secs_f64() }
+}
+
+/// SliceGPT-like PCA slicing: project every target's input onto the top-q
+/// principal directions of its site covariance (W′ = W·P·Pᵀ, storage m·q).
+pub fn slicegpt_like(sess: &Session, params: &ParamStore, calib: &Calibration,
+                     ratio: f64) -> CompressionPlan {
+    let t0 = Instant::now();
+    let mut site_proj: BTreeMap<String, Mat> = BTreeMap::new();
+    let targets = sess.cfg.targets.iter().map(|t| {
+        let w = params.get(&t.name).to_mat();
+        let (m, n) = (w.rows, w.cols);
+        let q = ((ratio * n as f64) as usize).clamp(1, n);
+        let p = site_proj.entry(t.site.clone()).or_insert_with(|| {
+            // eigenvectors of the symmetric PSD moment via SVD
+            let c = &calib.site_xx[&t.site];
+            let sv = svd(c);
+            sv.u // n×n, columns = principal directions
+        });
+        // P_q·P_qᵀ projection
+        let mut pq = Mat::zeros(n, q);
+        for r in 0..n {
+            for cidx in 0..q {
+                pq.data[r * q + cidx] = p.data[r * p.cols + cidx];
+            }
+        }
+        let wp = matmul(&w, &pq); // m×q
+        let rep = matmul(&wp, &pq.transpose());
+        TargetPlan { name: t.name.clone(), m, n, rank: q, dense: false,
+                     replacement: rep, factors: None,
+                     stored_params: (m * q) as f64 }
+    }).collect();
+    CompressionPlan { method: "slicegpt".into(), ratio, targets,
+                      seconds: t0.elapsed().as_secs_f64() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::selection::k_threshold;
+
+    #[test]
+    fn homogeneous_rank_formula() {
+        assert_eq!(homogeneous_rank(1.0, 128, 128), 64);
+        assert_eq!(homogeneous_rank(0.5, 128, 128), 32);
+        assert_eq!(homogeneous_rank(0.001, 128, 128), 1);
+        // below the k_thr threshold for every rho < 1
+        for &rho in &[0.2, 0.4, 0.6, 0.8] {
+            let k = homogeneous_rank(rho, 352, 128);
+            assert!(k <= k_threshold(352, 128));
+        }
+    }
+}

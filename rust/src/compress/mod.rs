@@ -1,0 +1,20 @@
+//! The compression engine — the paper's contribution (DESIGN.md §3, L3).
+//!
+//! * `whiten` — truncation-aware whitening + σ sensitivity (Sec. 3.3, 4.1)
+//! * `selection` — zero-sum global budgeted truncation (Sec. 4.2, Alg. 1–2)
+//! * `correction` — truncate–correct–re-truncate variants (Sec. 4.3, App. B.1)
+//! * `plan` — materialized plans + storage accounting (Sec. 4.4 remap / HQ)
+//! * `pipeline` — calibration + the end-to-end ZS-SVD flow
+//! * `baselines` — ASVD/FWSVD/SVD-LLM/Dobi-sim + structured pruning
+
+pub mod baselines;
+pub mod correction;
+pub mod pipeline;
+pub mod plan;
+pub mod selection;
+pub mod whiten;
+
+pub use correction::CorrectionKind;
+pub use pipeline::{calibrate, compress_zs, Calibration, ZsOpts};
+pub use plan::CompressionPlan;
+pub use selection::{Costing, Strategy};

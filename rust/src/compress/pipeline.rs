@@ -1,0 +1,242 @@
+//! The ZS-SVD compression pipeline (paper Sec. 4): calibration →
+//! whitened decomposition + sensitivity → global zero-sum selection →
+//! truncation → optional truncate–correct–re-truncate iterations.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::correction::{correct, CorrectionKind};
+use super::plan::{factored_params, remap_params, CompressionPlan, TargetPlan};
+use super::selection::{select, Costing, Strategy};
+use super::whiten::{decompose_target, factorize, truncate_with_s,
+                    TargetDecomp};
+use crate::data::Corpus;
+use crate::linalg::matmul;
+use crate::model::quant::quant_dequant_int8;
+use crate::model::ParamStore;
+use crate::runtime::session::Session;
+use crate::tensor::{IntTensor, Mat};
+use crate::util::rng::Rng;
+
+/// Calibration statistics shared by every method: activation moments per
+/// whitening site plus mean gradients / Fisher diagonals per target.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub batches: Vec<IntTensor>,
+    pub site_xx: BTreeMap<String, Mat>,
+    pub site_sum: BTreeMap<String, Vec<f32>>,
+    pub site_abssum: BTreeMap<String, Vec<f32>>,
+    pub token_count: usize,
+    pub grads: BTreeMap<String, Mat>,
+    pub fisher: BTreeMap<String, Mat>,
+    pub base_loss: f32,
+    /// seconds spent on the moments pass (whitening-statistics cost)
+    pub moments_seconds: f64,
+    /// seconds spent on the gradient pass (only loss-aware methods pay this)
+    pub grads_seconds: f64,
+}
+
+/// Run the calibration passes.  The paper uses 256 × 2048-token sequences;
+/// scaled to this testbed we default to `n_batches` of (batch × seq) each.
+pub fn calibrate(sess: &Session, params: &ParamStore, corpus: &Corpus,
+                 n_batches: usize, seed: u64) -> Result<Calibration> {
+    let mut rng = Rng::new(seed);
+    let batches: Vec<IntTensor> = (0..n_batches.max(1))
+        .map(|_| corpus.calibration_batch(&mut rng, sess.cfg.batch, sess.cfg.seq_len))
+        .collect();
+
+    let t0 = Instant::now();
+    let moments = sess.accumulate_moments(params, &batches)?;
+    let moments_seconds = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let (base_loss, grads, fisher) = sess.mean_grads(params, &batches)?;
+    let grads_seconds = t1.elapsed().as_secs_f64();
+
+    let mut site_xx = BTreeMap::new();
+    let mut site_sum = BTreeMap::new();
+    let mut site_abssum = BTreeMap::new();
+    let mut token_count = 0;
+    for sm in moments {
+        token_count = sm.count;
+        site_xx.insert(sm.site.clone(), sm.xx);
+        site_sum.insert(sm.site.clone(), sm.sum);
+        site_abssum.insert(sm.site, sm.abssum);
+    }
+
+    Ok(Calibration { batches, site_xx, site_sum, site_abssum, token_count,
+                     grads, fisher, base_loss, moments_seconds, grads_seconds })
+}
+
+#[derive(Clone, Debug)]
+pub struct ZsOpts {
+    pub ratio: f64,
+    pub costing: Costing,
+    pub strategy: Strategy,
+    /// truncate–correct–re-truncate iterations (0 = plain ZS-SVD)
+    pub correction_iters: usize,
+    pub correction_kind: CorrectionKind,
+    /// HQ: prune to half the footprint reduction, int8-quantize the rest
+    pub hq: bool,
+}
+
+impl ZsOpts {
+    pub fn new(ratio: f64) -> ZsOpts {
+        ZsOpts { ratio, costing: Costing::Standard, strategy: Strategy::ZeroSum,
+                 correction_iters: 0, correction_kind: CorrectionKind::ProjGrad,
+                 hq: false }
+    }
+
+    pub fn label(&self) -> String {
+        let mut s = String::from("zs-svd");
+        match self.costing {
+            Costing::Remap => s.push('*'),
+            Costing::Standard if self.hq => s.push('†'),
+            _ => {}
+        }
+        if self.correction_iters > 0 {
+            s.push_str(&format!(" {}x", self.correction_iters));
+        }
+        s
+    }
+}
+
+/// Decompose every target in the whitened space with loss sensitivities.
+pub fn decompose_all(sess: &Session, params: &ParamStore, calib: &Calibration)
+                     -> Vec<TargetDecomp> {
+    sess.cfg
+        .targets
+        .iter()
+        .map(|t| {
+            let w = params.get(&t.name).to_mat();
+            let c = &calib.site_xx[&t.site];
+            let g = &calib.grads[&t.name];
+            decompose_target(&t.name, &w, c, g)
+        })
+        .collect()
+}
+
+/// Full ZS-SVD compression.  `plan.seconds` covers decomposition +
+/// selection + build + corrections (the truncation-time of Table 8, minus
+/// the shared calibration passes which the caller times separately).
+pub fn compress_zs(sess: &Session, params: &ParamStore, calib: &Calibration,
+                   opts: &ZsOpts) -> Result<CompressionPlan> {
+    let t0 = Instant::now();
+    // HQ: halve the pruning depth, quantize everything that remains
+    let sel_ratio = if opts.hq { (2.0 * opts.ratio).min(1.0) } else { opts.ratio };
+    let quantize = opts.hq;
+
+    let decomps = decompose_all(sess, params, calib);
+    let selection = select(&decomps, sel_ratio, opts.costing, opts.strategy);
+
+    let mut targets = Vec::with_capacity(decomps.len());
+    for d in &decomps {
+        let kept = selection.kept[&d.name].clone();
+        let dense = selection.keep_dense[&d.name];
+        targets.push(build_target(d, &kept, dense, opts.costing, quantize,
+                                  params));
+    }
+
+    let mut plan = CompressionPlan {
+        method: opts.label(),
+        ratio: opts.ratio,
+        targets,
+        seconds: 0.0,
+    };
+
+    for _ in 0..opts.correction_iters {
+        apply_correction_iter(sess, params, calib, &mut plan, &decomps,
+                              opts.correction_kind, quantize)?;
+    }
+
+    plan.seconds = t0.elapsed().as_secs_f64();
+    Ok(plan)
+}
+
+fn build_target(d: &TargetDecomp, kept: &[usize], dense: bool,
+                costing: Costing, quantize: bool, params: &ParamStore)
+                -> TargetPlan {
+    let (m, n) = (d.m, d.n);
+    if dense {
+        let w = params.get(&d.name).to_mat();
+        let (replacement, stored) = if quantize {
+            (quant_dequant_int8(&w), (m * n) as f64 * 0.5)
+        } else {
+            (w, (m * n) as f64)
+        };
+        return TargetPlan { name: d.name.clone(), m, n, rank: m.min(n),
+                            dense: true, replacement, factors: None,
+                            stored_params: stored };
+    }
+    let k = kept.len();
+    let (mut wu, mut wv) = factorize(d, kept);
+    if quantize {
+        wu = quant_dequant_int8(&wu);
+        wv = quant_dequant_int8(&wv);
+    }
+    let replacement = matmul(&wu, &wv);
+    let mut stored = match costing {
+        Costing::Standard => factored_params(m, n, k),
+        Costing::Remap => remap_params(m, n, k),
+    };
+    if quantize {
+        stored *= 0.5;
+    }
+    TargetPlan { name: d.name.clone(), m, n, rank: k, dense: false,
+                 replacement, factors: Some((wu, wv)), stored_params: stored }
+}
+
+/// One truncate–correct–re-truncate iteration over every factored target.
+fn apply_correction_iter(sess: &Session, orig: &ParamStore, calib: &Calibration,
+                         plan: &mut CompressionPlan, decomps: &[TargetDecomp],
+                         kind: CorrectionKind, quantize: bool) -> Result<()> {
+    // gradients at the *compressed* weights, small minibatch (paper: 4 seqs)
+    let compressed = plan.apply(orig);
+    let nb = calib.batches.len().min(1).max(1);
+    let (_, grads, _) = sess.mean_grads(&compressed, &calib.batches[..nb])?;
+
+    for (tp, d) in plan.targets.iter_mut().zip(decomps) {
+        if tp.dense {
+            continue;
+        }
+        let w_orig = orig.get(&tp.name).to_mat();
+        let g = &grads[&tp.name];
+        let w_plus = correct(kind, &w_orig, &tp.replacement, g);
+        let (mut rep, (mut wu, mut wv)) = truncate_with_s(&w_plus, &d.s, tp.rank);
+        if quantize {
+            wu = quant_dequant_int8(&wu);
+            wv = quant_dequant_int8(&wv);
+            rep = matmul(&wu, &wv);
+        }
+        tp.replacement = rep;
+        tp.factors = Some((wu, wv));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zs_label_variants() {
+        let mut o = ZsOpts::new(0.6);
+        assert_eq!(o.label(), "zs-svd");
+        o.correction_iters = 5;
+        assert_eq!(o.label(), "zs-svd 5x");
+        o.costing = Costing::Remap;
+        assert_eq!(o.label(), "zs-svd* 5x");
+        o.costing = Costing::Standard;
+        o.hq = true;
+        assert_eq!(o.label(), "zs-svd† 5x");
+    }
+
+    #[test]
+    fn hq_selection_ratio_doubles_retention() {
+        let o = ZsOpts { hq: true, ..ZsOpts::new(0.4) };
+        let sel = if o.hq { (2.0 * o.ratio).min(1.0) } else { o.ratio };
+        assert!((sel - 0.8).abs() < 1e-12);
+    }
+}

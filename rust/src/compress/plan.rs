@@ -1,0 +1,163 @@
+//! Compression plans: the materialized result of any method (ZS-SVD or a
+//! baseline) — per-target replacements, factors, and storage accounting.
+//!
+//! Evaluation always goes through the dense recomposition (one dense fwd
+//! artifact serves every method); serving benchmarks use `factors()` with
+//! the fixed-rank Pallas artifacts (zero-padded, numerically exact).
+
+use std::collections::BTreeMap;
+
+use crate::model::{ConfigMeta, ParamStore};
+use crate::tensor::{Mat, Tensor};
+
+#[derive(Clone, Debug)]
+pub struct TargetPlan {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    /// final rank (kept components); == min(m,n) when dense
+    pub rank: usize,
+    /// keep the original dense matrix (factorization not worthwhile)
+    pub dense: bool,
+    /// dense W′ to splice into the parameter store
+    pub replacement: Mat,
+    /// low-rank factors (absent when dense)
+    pub factors: Option<(Mat, Mat)>,
+    /// fp16-equivalent parameter count this target stores
+    pub stored_params: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct CompressionPlan {
+    pub method: String,
+    pub ratio: f64,
+    pub targets: Vec<TargetPlan>,
+    /// wall-clock seconds the compression took (Table 8)
+    pub seconds: f64,
+}
+
+impl CompressionPlan {
+    /// Splice replacements into a copy of the parameter store.
+    pub fn apply(&self, params: &ParamStore) -> ParamStore {
+        let mut out = params.clone();
+        for t in &self.targets {
+            if !t.dense {
+                out.set(&t.name, Tensor::from_mat(&t.replacement));
+            }
+        }
+        out
+    }
+
+    /// Factors for the low-rank serving artifacts.  Dense-kept targets fall
+    /// back to an exact factorization only if `force` — otherwise they are
+    /// reported as unservable via the fixed-rank artifact.
+    pub fn factors(&self) -> BTreeMap<String, (Mat, Mat)> {
+        self.targets
+            .iter()
+            .filter_map(|t| t.factors.clone().map(|f| (t.name.clone(), f)))
+            .collect()
+    }
+
+    pub fn target(&self, name: &str) -> &TargetPlan {
+        self.targets
+            .iter()
+            .find(|t| t.name == name)
+            .unwrap_or_else(|| panic!("no target plan for {name}"))
+    }
+
+    /// fp16-equivalent parameters stored across all targets.
+    pub fn stored_params(&self) -> f64 {
+        self.targets.iter().map(|t| t.stored_params).sum()
+    }
+
+    /// Dense parameter count of the targets (the denominator of the ratio).
+    pub fn dense_params(&self) -> f64 {
+        self.targets.iter().map(|t| (t.m * t.n) as f64).sum()
+    }
+
+    /// Achieved storage ratio over the target matrices.
+    pub fn achieved_ratio(&self) -> f64 {
+        self.stored_params() / self.dense_params()
+    }
+
+    /// Whole-model fp16 bytes (targets at compressed size + everything else
+    /// dense) — Table 7's weight-memory column.
+    pub fn model_bytes(&self, cfg: &ConfigMeta) -> f64 {
+        let non_target: usize = cfg.param_count() - cfg.target_param_count();
+        (non_target as f64 + self.stored_params()) * 2.0
+    }
+
+    /// Heterogeneous rank histogram (diagnostics + Fig-3-style reporting).
+    pub fn ranks(&self) -> BTreeMap<String, usize> {
+        self.targets
+            .iter()
+            .map(|t| (t.name.clone(), if t.dense { t.m.min(t.n) } else { t.rank }))
+            .collect()
+    }
+}
+
+/// Storage cost of a rank-k factorization under standard accounting.
+pub fn factored_params(m: usize, n: usize, k: usize) -> f64 {
+    (k * (m + n)) as f64
+}
+
+/// Storage under Dobi-style remapping (Sec. 4.4): k·max(m,n) fp16-equivalent.
+pub fn remap_params(m: usize, n: usize, k: usize) -> f64 {
+    (k * m.max(n)) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn dummy_plan() -> CompressionPlan {
+        let mut rng = Rng::new(1);
+        let rep = Mat::randn(&mut rng, 8, 8, 0.1);
+        let wu = Mat::randn(&mut rng, 8, 2, 0.1);
+        let wv = Mat::randn(&mut rng, 2, 8, 0.1);
+        CompressionPlan {
+            method: "test".into(),
+            ratio: 0.5,
+            seconds: 0.0,
+            targets: vec![
+                TargetPlan {
+                    name: "a".into(), m: 8, n: 8, rank: 2, dense: false,
+                    replacement: rep.clone(), factors: Some((wu, wv)),
+                    stored_params: factored_params(8, 8, 2),
+                },
+                TargetPlan {
+                    name: "b".into(), m: 8, n: 8, rank: 8, dense: true,
+                    replacement: rep, factors: None,
+                    stored_params: 64.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let p = dummy_plan();
+        assert_eq!(p.stored_params(), 32.0 + 64.0);
+        assert_eq!(p.dense_params(), 128.0);
+        assert!((p.achieved_ratio() - 0.75).abs() < 1e-12);
+        assert_eq!(factored_params(128, 352, 10), 4800.0);
+        assert_eq!(remap_params(128, 352, 10), 3520.0);
+    }
+
+    #[test]
+    fn factors_skip_dense() {
+        let p = dummy_plan();
+        let f = p.factors();
+        assert!(f.contains_key("a"));
+        assert!(!f.contains_key("b"));
+    }
+
+    #[test]
+    fn ranks_report() {
+        let p = dummy_plan();
+        let r = p.ranks();
+        assert_eq!(r["a"], 2);
+        assert_eq!(r["b"], 8); // dense reports full rank
+    }
+}

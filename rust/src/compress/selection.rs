@@ -1,0 +1,389 @@
+//! Global budgeted truncation with zero-sum selection (paper Sec. 4.2,
+//! Algorithms 1–2), plus the ablation strategies of Table 6.
+//!
+//! Components are pruned across ALL target matrices under one parameter-
+//! removal budget.  The zero-sum rule keeps the running sum of predicted
+//! loss changes near zero: two min-heaps keyed by |ΔL| partitioned by sign;
+//! pop from Q+ when s ≤ 0, from Q− when s > 0 (Eq. 11), falling back to the
+//! non-empty heap.
+
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, BinaryHeap};
+
+use super::whiten::TargetDecomp;
+
+/// Budget accounting mode (Sec. 4.4 + Appendix B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Costing {
+    /// k(m+n) factored storage: drops are free while k > k_thr = ⌈mn/(m+n)⌉,
+    /// then save (m+n) each; matrices ending above k_thr stay dense.
+    Standard,
+    /// Dobi-style packed remapping: each drop saves max(m,n) fp16-equivalent
+    /// parameters from the first component on.
+    Remap,
+}
+
+/// Global σ-selection strategy (Table 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// the paper's method: per-W spectral order + sign-balanced ΔL
+    ZeroSum,
+    /// greedily take the most negative ΔL
+    MostNegative { per_w_order: bool },
+    /// smallest |ΔL| first
+    MagnitudeDl { per_w_order: bool },
+    /// smallest σ first (loss-blind; per-W order is implied)
+    SigmaSmallest,
+}
+
+#[derive(Clone, Debug)]
+pub struct SelectionResult {
+    /// kept component indices per target (sorted ascending = descending σ)
+    pub kept: BTreeMap<String, Vec<usize>>,
+    /// per-target: keep the original dense matrix (k ended above k_thr)
+    pub keep_dense: BTreeMap<String, bool>,
+    /// final running predicted-loss sum
+    pub final_s: f64,
+    /// |s| never exceeded this during selection
+    pub max_abs_s: f64,
+    /// fp16-equivalent parameters actually saved
+    pub saved_params: f64,
+    /// components removed
+    pub removed: usize,
+    /// pops where the sign-preferred heap was empty (drift can grow by one
+    /// |ΔL| per forced pop; the zero-sum bound is conditional on balance)
+    pub forced_pops: usize,
+}
+
+pub fn k_threshold(m: usize, n: usize) -> usize {
+    // ⌈mn/(m+n)⌉ — factored storage beats dense strictly below this
+    (m * n).div_ceil(m + n)
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    key: f32,
+    layer: usize,
+    comp: usize,
+    dl: f32,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; we want a min-heap on (key, layer, comp)
+        o.key
+            .total_cmp(&self.key)
+            .then(o.layer.cmp(&self.layer))
+            .then(o.comp.cmp(&self.comp))
+    }
+}
+
+struct LayerState {
+    rank: usize,   // components still kept
+    removed: Vec<bool>,
+    /// candidate feed, next-to-remove last (ordered mode: ascending σ means
+    /// we pop indices r-1, r-2, ...)
+    queue: Vec<usize>,
+    m: usize,
+    n: usize,
+    kthr: usize,
+}
+
+fn key_for(strategy: Strategy, dl: f32, sigma: f32) -> f32 {
+    match strategy {
+        Strategy::ZeroSum => dl.abs(),
+        Strategy::MostNegative { .. } => dl,
+        Strategy::MagnitudeDl { .. } => dl.abs(),
+        Strategy::SigmaSmallest => sigma,
+    }
+}
+
+fn per_w_order(strategy: Strategy) -> bool {
+    match strategy {
+        Strategy::ZeroSum | Strategy::SigmaSmallest => true,
+        Strategy::MostNegative { per_w_order } => per_w_order,
+        Strategy::MagnitudeDl { per_w_order } => per_w_order,
+    }
+}
+
+/// Run global selection at retention `ratio` over the decomposed targets.
+pub fn select(decomps: &[TargetDecomp], ratio: f64, costing: Costing,
+              strategy: Strategy) -> SelectionResult {
+    assert!((0.0..=1.0).contains(&ratio), "ratio {ratio}");
+    let total_params: f64 = decomps.iter().map(|d| (d.m * d.n) as f64).sum();
+    let budget = (1.0 - ratio) * total_params;
+    let ordered = per_w_order(strategy);
+
+    let mut layers: Vec<LayerState> = decomps
+        .iter()
+        .map(|d| {
+            let r = d.svd.sigma.len();
+            LayerState {
+                rank: r,
+                removed: vec![false; r],
+                // ordered: pop() yields r-1 (smallest σ) first
+                queue: (0..r).collect(),
+                m: d.m,
+                n: d.n,
+                kthr: k_threshold(d.m, d.n),
+            }
+        })
+        .collect();
+
+    // zero-sum needs two heaps; all other strategies use q_plus only.
+    let mut q_plus: BinaryHeap<Entry> = BinaryHeap::new();
+    let mut q_minus: BinaryHeap<Entry> = BinaryHeap::new();
+    let zero_sum = matches!(strategy, Strategy::ZeroSum);
+
+    let push = |qp: &mut BinaryHeap<Entry>, qm: &mut BinaryHeap<Entry>,
+                    layer: usize, comp: usize| {
+        let d = &decomps[layer];
+        let e = Entry {
+            key: key_for(strategy, d.dl[comp], d.svd.sigma[comp]),
+            layer,
+            comp,
+            dl: d.dl[comp],
+        };
+        if zero_sum && e.dl < 0.0 {
+            qm.push(e);
+        } else {
+            qp.push(e);
+        }
+    };
+
+    // initialize candidate pools (Algorithm 1)
+    for (li, st) in layers.iter_mut().enumerate() {
+        if ordered {
+            if let Some(c) = st.queue.pop() {
+                push(&mut q_plus, &mut q_minus, li, c);
+            }
+        } else {
+            while let Some(c) = st.queue.pop() {
+                push(&mut q_plus, &mut q_minus, li, c);
+            }
+        }
+    }
+
+    // selection loop (Algorithm 2)
+    let mut s = 0.0f64;
+    let mut max_abs_s = 0.0f64;
+    let mut saved = 0.0f64;
+    let mut removed = 0usize;
+    let mut forced_pops = 0usize;
+
+    while saved < budget && (!q_plus.is_empty() || !q_minus.is_empty()) {
+        let e = if zero_sum {
+            // prefer the sign that pulls s back toward zero (Eq. 11)
+            if s <= 0.0 {
+                q_plus.pop().or_else(|| {
+                    forced_pops += 1;
+                    q_minus.pop()
+                })
+            } else {
+                q_minus.pop().or_else(|| {
+                    forced_pops += 1;
+                    q_plus.pop()
+                })
+            }
+        } else {
+            q_plus.pop()
+        };
+        let Some(e) = e else { break };
+
+        let st = &mut layers[e.layer];
+        // never drain a matrix below rank 1
+        if st.rank <= 1 {
+            continue;
+        }
+        st.removed[e.comp] = true;
+        st.rank -= 1;
+        removed += 1;
+        s += e.dl as f64;
+        max_abs_s = max_abs_s.max(s.abs());
+
+        // budget accounting
+        let cost = match costing {
+            Costing::Standard => {
+                if st.rank <= st.kthr { (st.m + st.n) as f64 } else { 0.0 }
+            }
+            Costing::Remap => st.m.max(st.n) as f64,
+        };
+        saved += cost;
+
+        // feed the matrix's next candidate (ordered mode)
+        if ordered && st.rank > 1 {
+            if let Some(c) = st.queue.pop() {
+                push(&mut q_plus, &mut q_minus, e.layer, c);
+            }
+        }
+    }
+
+    let mut kept = BTreeMap::new();
+    let mut keep_dense = BTreeMap::new();
+    for (d, st) in decomps.iter().zip(&layers) {
+        let kept_idx: Vec<usize> = (0..st.removed.len())
+            .filter(|&i| !st.removed[i])
+            .collect();
+        let dense = match costing {
+            Costing::Standard => kept_idx.len() > st.kthr,
+            Costing::Remap => false,
+        };
+        keep_dense.insert(d.name.clone(), dense);
+        kept.insert(d.name.clone(), kept_idx);
+    }
+
+    SelectionResult { kept, keep_dense, final_s: s, max_abs_s,
+                      saved_params: saved, removed, forced_pops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gram;
+    use crate::tensor::Mat;
+    use crate::util::rng::Rng;
+
+    fn decomps(seed: u64, shapes: &[(usize, usize)]) -> Vec<TargetDecomp> {
+        let mut rng = Rng::new(seed);
+        shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(m, n))| {
+                let w = Mat::randn(&mut rng, m, n, 0.5);
+                let x = Mat::randn(&mut rng, 4 * n, n, 1.0);
+                let c = gram(&x);
+                let g = Mat::randn(&mut rng, m, n, 0.05);
+                super::super::whiten::decompose_target(&format!("t{i}"), &w, &c, &g)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn budget_met_at_cost_granularity() {
+        let ds = decomps(1, &[(16, 16), (24, 8), (8, 24), (32, 16)]);
+        for ratio in [0.8, 0.5, 0.3] {
+            let r = select(&ds, ratio, Costing::Standard, Strategy::ZeroSum);
+            let total: f64 = ds.iter().map(|d| (d.m * d.n) as f64).sum();
+            let budget = (1.0 - ratio) * total;
+            assert!(r.saved_params >= budget,
+                    "ratio {ratio}: saved {} < budget {budget}", r.saved_params);
+            // overshoot bounded by one max-cost step
+            let maxcost = ds.iter().map(|d| d.m + d.n).max().unwrap() as f64;
+            assert!(r.saved_params < budget + maxcost);
+        }
+    }
+
+    #[test]
+    fn per_w_spectral_order_preserved() {
+        let ds = decomps(2, &[(20, 12), (12, 20)]);
+        let r = select(&ds, 0.5, Costing::Standard, Strategy::ZeroSum);
+        for d in &ds {
+            let kept = &r.kept[&d.name];
+            // kept must be a prefix {0..k} (largest σ components)
+            for (i, &c) in kept.iter().enumerate() {
+                assert_eq!(c, i, "{}: kept {:?} is not a σ-prefix", d.name, kept);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_sum_drift_bounded() {
+        let ds = decomps(3, &[(24, 24), (32, 16), (16, 32), (24, 16)]);
+        let r = select(&ds, 0.4, Costing::Standard, Strategy::ZeroSum);
+        // while both heaps are populated the drift is bounded by the
+        // largest single |ΔL|; each forced same-sign pop can add one more
+        let max_dl = ds
+            .iter()
+            .flat_map(|d| d.dl.iter())
+            .fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+        let bound = max_dl * (2.0 + r.forced_pops as f64) + 1e-9;
+        assert!(r.max_abs_s <= bound,
+                "drift {} vs bound {bound}", r.max_abs_s);
+    }
+
+    #[test]
+    fn zero_sum_beats_one_sided_drift() {
+        let ds = decomps(4, &[(24, 24), (32, 16), (16, 32)]);
+        let zs = select(&ds, 0.4, Costing::Standard, Strategy::ZeroSum);
+        let neg = select(&ds, 0.4, Costing::Standard,
+                         Strategy::MostNegative { per_w_order: true });
+        assert!(zs.final_s.abs() <= neg.final_s.abs() + 1e-9,
+                "zs {} vs most-neg {}", zs.final_s, neg.final_s);
+    }
+
+    #[test]
+    fn remap_costing_saves_from_first_drop() {
+        let ds = decomps(5, &[(16, 16)]);
+        let r = select(&ds, 0.95, Costing::Remap, Strategy::ZeroSum);
+        assert!(r.removed >= 1);
+        assert_eq!(r.saved_params, (r.removed * 16) as f64);
+        assert!(!r.keep_dense["t0"]);
+    }
+
+    #[test]
+    fn standard_costing_free_until_threshold() {
+        // at a mild ratio the square matrix must first cross k_thr=n/2
+        let ds = decomps(6, &[(16, 16)]);
+        let r = select(&ds, 0.9, Costing::Standard, Strategy::ZeroSum);
+        let kept = r.kept["t0"].len();
+        let kthr = k_threshold(16, 16);
+        // to save ~0.1*256=25.6 params at 32/drop: one saving drop below thr
+        assert!(kept <= kthr, "kept {kept} vs kthr {kthr}");
+        assert!(r.saved_params >= 25.6);
+    }
+
+    #[test]
+    fn min_rank_one_guard() {
+        let ds = decomps(7, &[(8, 8), (8, 8)]);
+        let r = select(&ds, 0.0, Costing::Standard, Strategy::ZeroSum);
+        for d in &ds {
+            assert!(!r.kept[&d.name].is_empty(), "{} fully drained", d.name);
+        }
+    }
+
+    #[test]
+    fn unordered_strategies_can_skip_spectral_order() {
+        let ds = decomps(8, &[(20, 20)]);
+        let r = select(&ds, 0.5, Costing::Standard,
+                       Strategy::MostNegative { per_w_order: false });
+        let kept = &r.kept["t0"];
+        let is_prefix = kept.iter().enumerate().all(|(i, &c)| c == i);
+        // with loss-greedy unordered selection a strict prefix would be a
+        // coincidence; accept either but require a valid subset
+        assert!(kept.len() < 20);
+        let _ = is_prefix;
+    }
+
+    #[test]
+    fn ratio_one_removes_nothing_below_threshold_cost() {
+        let ds = decomps(9, &[(16, 16)]);
+        let r = select(&ds, 1.0, Costing::Standard, Strategy::ZeroSum);
+        assert_eq!(r.saved_params, 0.0);
+        assert!(r.keep_dense["t0"]);
+    }
+
+    #[test]
+    fn sigma_strategy_matches_smallest_sigma() {
+        let ds = decomps(10, &[(12, 12), (12, 12)]);
+        let r = select(&ds, 0.6, Costing::Standard, Strategy::SigmaSmallest);
+        // kept prefixes, and the *global* removal order was by σ: verify the
+        // smallest kept σ across matrices ≥ the largest removed σ is NOT
+        // required (budget interleaves), but within each matrix prefix holds
+        for d in &ds {
+            for (i, &c) in r.kept[&d.name].iter().enumerate() {
+                assert_eq!(c, i);
+            }
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Experiment configuration: typed view over a JSON config file with
+//! defaults, used by the CLI and the bench harnesses.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// model config name from the manifest ("tiny", "small", "opt_tiny")
+    pub model: String,
+    /// training-corpus family ("llama", "vicuna", ...) — picks the mix
+    pub family: String,
+    /// pretraining steps (checkpoint-cached)
+    pub train_steps: usize,
+    pub train_lr: f64,
+    /// calibration batches (the paper's 256×2048 scaled down)
+    pub calib_batches: usize,
+    /// eval sizes
+    pub ppl_batches: usize,
+    pub instances_per_family: usize,
+    /// compression ratios to sweep
+    pub ratios: Vec<f64>,
+    pub seed: u64,
+    /// where checkpoints live
+    pub ckpt_dir: PathBuf,
+    /// where result tables are appended
+    pub out_dir: PathBuf,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        ExperimentConfig {
+            model: "tiny".into(),
+            family: "llama".into(),
+            train_steps: 300,
+            train_lr: 3e-3,
+            calib_batches: 8,
+            ppl_batches: 6,
+            instances_per_family: 48,
+            ratios: vec![0.8, 0.6, 0.4],
+            seed: 7,
+            ckpt_dir: root.join("artifacts").join("ckpts"),
+            out_dir: root.join("results"),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_json(j: &Json) -> ExperimentConfig {
+        let d = ExperimentConfig::default();
+        ExperimentConfig {
+            model: j.str_or("model", &d.model),
+            family: j.str_or("family", &d.family),
+            train_steps: j.usize_or("train_steps", d.train_steps),
+            train_lr: j.f64_or("train_lr", d.train_lr),
+            calib_batches: j.usize_or("calib_batches", d.calib_batches),
+            ppl_batches: j.usize_or("ppl_batches", d.ppl_batches),
+            instances_per_family: j.usize_or("instances_per_family",
+                                             d.instances_per_family),
+            ratios: j
+                .get("ratios")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or(d.ratios),
+            seed: j.f64_or("seed", d.seed as f64) as u64,
+            ckpt_dir: j
+                .get("ckpt_dir")
+                .and_then(Json::as_str)
+                .map(PathBuf::from)
+                .unwrap_or(d.ckpt_dir),
+            out_dir: j
+                .get("out_dir")
+                .and_then(Json::as_str)
+                .map(PathBuf::from)
+                .unwrap_or(d.out_dir),
+        }
+    }
+
+    pub fn from_file(path: &Path) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Ok(Self::from_json(&parse(&text)?))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("family", Json::str(&self.family)),
+            ("train_steps", Json::num(self.train_steps as f64)),
+            ("train_lr", Json::num(self.train_lr)),
+            ("calib_batches", Json::num(self.calib_batches as f64)),
+            ("ppl_batches", Json::num(self.ppl_batches as f64)),
+            ("instances_per_family", Json::num(self.instances_per_family as f64)),
+            ("ratios", Json::arr(self.ratios.iter().map(|&r| Json::num(r)))),
+            ("seed", Json::num(self.seed as f64)),
+            ("ckpt_dir", Json::str(self.ckpt_dir.to_str().unwrap_or("."))),
+            ("out_dir", Json::str(self.out_dir.to_str().unwrap_or("."))),
+        ])
+    }
+
+    /// Fast-mode shrink for CI / ZS_BENCH_FAST.
+    pub fn shrunk(mut self) -> Self {
+        self.train_steps = self.train_steps.min(60);
+        self.calib_batches = self.calib_batches.min(2);
+        self.ppl_batches = self.ppl_batches.min(2);
+        self.instances_per_family = self.instances_per_family.min(12);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip() {
+        let c = ExperimentConfig::default();
+        let j = c.to_json();
+        let back = ExperimentConfig::from_json(&j);
+        assert_eq!(back.model, c.model);
+        assert_eq!(back.train_steps, c.train_steps);
+        assert_eq!(back.ratios, c.ratios);
+        assert_eq!(back.ckpt_dir, c.ckpt_dir);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = parse(r#"{"model": "small", "ratios": [0.7]}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j);
+        assert_eq!(c.model, "small");
+        assert_eq!(c.ratios, vec![0.7]);
+        assert_eq!(c.family, "llama");
+        assert_eq!(c.train_steps, 300);
+    }
+
+    #[test]
+    fn shrunk_bounds() {
+        let c = ExperimentConfig::default().shrunk();
+        assert!(c.train_steps <= 60);
+        assert!(c.calib_batches <= 2);
+    }
+}

@@ -1,0 +1,159 @@
+//! Corpora: byte-level token streams with train/eval splits and batch
+//! sampling — the WikiText2/PTB/C4 stand-ins plus the calibration sampler.
+
+use super::grammar::{c4_style, ptb_style, vicuna_style, wiki_style, Grammar,
+                     GrammarStyle};
+use super::world::{World, WORLD_SEED};
+use crate::tensor::IntTensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub name: String,
+    train: Vec<u8>,
+    eval: Vec<u8>,
+}
+
+/// Default sizes: enough structure for a ~1M-param model to learn from while
+/// keeping single-core generation instant.
+pub const TRAIN_BYTES: usize = 2_000_000;
+pub const EVAL_BYTES: usize = 200_000;
+
+impl Corpus {
+    pub fn build(style: GrammarStyle, world: &World, train_bytes: usize,
+                 eval_bytes: usize) -> Corpus {
+        let g = Grammar::new(world, style.clone());
+        // disjoint RNG streams => disjoint train/eval text
+        let mut train_rng = Rng::new(0xDA7A ^ hash_name(style.name));
+        let mut eval_rng = Rng::new(0xE7A1 ^ hash_name(style.name));
+        Corpus {
+            name: style.name.to_string(),
+            train: g.generate(&mut train_rng, train_bytes),
+            eval: g.generate(&mut eval_rng, eval_bytes),
+        }
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.train.len()
+    }
+
+    pub fn eval_len(&self) -> usize {
+        self.eval.len()
+    }
+
+    /// Random (B, T+1) training batch as i32 tokens.
+    pub fn sample_batch(&self, rng: &mut Rng, batch: usize, seq: usize) -> IntTensor {
+        self.batch_from(&self.train, rng, batch, seq)
+    }
+
+    /// Random calibration batch — drawn from *train* (the paper calibrates
+    /// on WikiText2 training text).
+    pub fn calibration_batch(&self, rng: &mut Rng, batch: usize, seq: usize) -> IntTensor {
+        self.batch_from(&self.train, rng, batch, seq)
+    }
+
+    fn batch_from(&self, text: &[u8], rng: &mut Rng, batch: usize, seq: usize) -> IntTensor {
+        let span = seq + 1;
+        assert!(text.len() > span, "corpus too small");
+        let mut data = Vec::with_capacity(batch * span);
+        for _ in 0..batch {
+            let start = rng.below(text.len() - span);
+            data.extend(text[start..start + span].iter().map(|&b| b as i32));
+        }
+        IntTensor::from_vec(&[batch, span], data)
+    }
+
+    /// Deterministic sequence of eval batches covering the eval split.
+    pub fn eval_batches(&self, batch: usize, seq: usize, max_batches: usize) -> Vec<IntTensor> {
+        let span = seq + 1;
+        let per_batch = batch * span;
+        let n = (self.eval.len() / per_batch).min(max_batches);
+        (0..n)
+            .map(|i| {
+                let base = i * per_batch;
+                let data: Vec<i32> = self.eval[base..base + per_batch]
+                    .iter()
+                    .map(|&b| b as i32)
+                    .collect();
+                IntTensor::from_vec(&[batch, span], data)
+            })
+            .collect()
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    })
+}
+
+/// The three evaluation corpora (paper order: WikiText2, PTB, C4).
+pub fn eval_corpora(world: &World) -> Vec<Corpus> {
+    vec![
+        Corpus::build(wiki_style(), world, TRAIN_BYTES, EVAL_BYTES),
+        Corpus::build(ptb_style(), world, TRAIN_BYTES / 2, EVAL_BYTES),
+        Corpus::build(c4_style(), world, TRAIN_BYTES, EVAL_BYTES),
+    ]
+}
+
+/// Training mixture for a model family: "llama"/"opt" train on wiki+c4;
+/// "vicuna" adds the instruction-flavoured mix.
+pub fn training_corpus(family: &str, world: &World) -> Corpus {
+    match family {
+        "vicuna" => Corpus::build(vicuna_style(), world, TRAIN_BYTES, EVAL_BYTES),
+        _ => Corpus::build(wiki_style(), world, TRAIN_BYTES, EVAL_BYTES),
+    }
+}
+
+pub fn default_world() -> World {
+    World::new(WORLD_SEED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_corpus() -> Corpus {
+        Corpus::build(wiki_style(), &default_world(), 50_000, 10_000)
+    }
+
+    #[test]
+    fn batch_shapes_and_range() {
+        let c = small_corpus();
+        let mut rng = Rng::new(1);
+        let b = c.sample_batch(&mut rng, 4, 32);
+        assert_eq!(b.shape, vec![4, 33]);
+        assert!(b.data.iter().all(|&t| (1..256).contains(&t)));
+    }
+
+    #[test]
+    fn eval_batches_cover_disjoint_text() {
+        let c = small_corpus();
+        let bs = c.eval_batches(2, 16, 10);
+        assert_eq!(bs.len(), 10);
+        assert_ne!(bs[0].data, bs[1].data);
+    }
+
+    #[test]
+    fn train_eval_disjoint_streams() {
+        let c = small_corpus();
+        // eval text should not be a subslice of train text (different rng)
+        assert_ne!(&c.train[..1000], &c.eval[..1000]);
+    }
+
+    #[test]
+    fn corpora_distinct() {
+        let w = default_world();
+        let cs = eval_corpora(&w);
+        assert_eq!(cs.len(), 3);
+        assert_eq!(cs[0].name, "wiki-syn");
+        assert_ne!(cs[0].train[..500], cs[2].train[..500]);
+    }
+
+    #[test]
+    fn deterministic_rebuild() {
+        let a = small_corpus();
+        let b = small_corpus();
+        assert_eq!(a.train, b.train);
+    }
+}

@@ -1,0 +1,250 @@
+//! Stochastic grammars rendering the shared `World` into byte streams.
+//!
+//! Three styles stand in for the paper's corpora (DESIGN.md §2):
+//! * `wiki_syn` — balanced mixture, medium sentences (WikiText2 analog; also
+//!   the calibration source, matching the paper's protocol).
+//! * `ptb_syn`  — small effective vocabulary, short regular sentences,
+//!   no noise (Penn Treebank analog).
+//! * `c4_syn`   — web-ish: longer run-on sentences, URL-like junk tokens,
+//!   character noise (C4 analog, highest entropy).
+
+use super::world::World;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct GrammarStyle {
+    pub name: &'static str,
+    /// mixture weights: [agreement sentence, fact sentence, math line, noise line]
+    pub mix: [f32; 4],
+    /// max nouns chained into one sentence ("the A near the B ...")
+    pub max_chain: usize,
+    /// probability a character is replaced by junk (c4-style noise)
+    pub char_noise: f32,
+    /// restrict lexicon to the first `vocab_frac` of each inventory (ptb)
+    pub vocab_frac: f32,
+}
+
+pub fn wiki_style() -> GrammarStyle {
+    GrammarStyle { name: "wiki-syn", mix: [0.55, 0.2, 0.1, 0.15],
+                   max_chain: 2, char_noise: 0.0, vocab_frac: 1.0 }
+}
+
+pub fn ptb_style() -> GrammarStyle {
+    GrammarStyle { name: "ptb-syn", mix: [0.6, 0.25, 0.15, 0.0],
+                   max_chain: 1, char_noise: 0.0, vocab_frac: 0.5 }
+}
+
+pub fn c4_style() -> GrammarStyle {
+    GrammarStyle { name: "c4-syn", mix: [0.45, 0.15, 0.1, 0.3],
+                   max_chain: 3, char_noise: 0.02, vocab_frac: 1.0 }
+}
+
+/// "Vicuna" corpus mix: same world rendered with an instruction-ish flavour
+/// (fact-heavy), used to train the vicuna-analog weights.
+pub fn vicuna_style() -> GrammarStyle {
+    GrammarStyle { name: "vicuna-syn", mix: [0.35, 0.4, 0.15, 0.1],
+                   max_chain: 2, char_noise: 0.0, vocab_frac: 1.0 }
+}
+
+pub struct Grammar<'w> {
+    pub world: &'w World,
+    pub style: GrammarStyle,
+}
+
+impl<'w> Grammar<'w> {
+    pub fn new(world: &'w World, style: GrammarStyle) -> Self {
+        Grammar { world, style }
+    }
+
+    fn n_nouns(&self) -> usize {
+        ((self.world.nouns.len() as f32 * self.style.vocab_frac) as usize).max(2)
+    }
+
+    fn n_verbs(&self) -> usize {
+        ((self.world.verbs_sing.len() as f32 * self.style.vocab_frac) as usize).max(2)
+    }
+
+    /// Subject-verb agreement sentence, optionally with distractor nouns
+    /// between subject and verb:
+    /// `"the tups near the mib kezen the dax ."`
+    pub fn agreement_sentence(&self, rng: &mut Rng) -> String {
+        let w = self.world;
+        let subj = rng.below(self.n_nouns());
+        let plural = rng.below(2) == 1;
+        let mut s = String::from("the ");
+        s.push_str(&if plural { w.plural(subj) } else { w.nouns[subj].clone() });
+        let chain = rng.below(self.style.max_chain) ;
+        for _ in 0..chain {
+            let d = rng.below(self.n_nouns());
+            let dp = rng.below(2) == 1;
+            s.push_str(" near the ");
+            s.push_str(&if dp { w.plural(d) } else { w.nouns[d].clone() });
+        }
+        let verb = rng.below(self.n_verbs());
+        s.push(' ');
+        s.push_str(if plural { &w.verbs_plur[verb] } else { &w.verbs_sing[verb] });
+        let obj = rng.below(self.n_nouns());
+        s.push_str(" the ");
+        s.push_str(&w.nouns[obj]);
+        s.push_str(" .");
+        s
+    }
+
+    pub fn fact_sentence(&self, rng: &mut Rng) -> String {
+        self.world.fact_sentence(rng.below(self.n_nouns()))
+    }
+
+    pub fn math_sentence(&self, rng: &mut Rng) -> String {
+        World::math_sentence(rng.below(10) as u32, rng.below(10) as u32)
+    }
+
+    /// URL-ish noise line (c4 flavour).
+    pub fn noise_line(&self, rng: &mut Rng) -> String {
+        const JUNK: &[&str] = &["www", "http", "com", "org", "html", "px",
+                                "id", "ref", "utm", "page"];
+        let n = 2 + rng.below(4);
+        let mut parts = Vec::with_capacity(n);
+        for _ in 0..n {
+            if rng.below(3) == 0 {
+                parts.push(format!("{}", rng.below(1000)));
+            } else {
+                parts.push(JUNK[rng.below(JUNK.len())].to_string());
+            }
+        }
+        parts.join("/")
+    }
+
+    pub fn sentence(&self, rng: &mut Rng) -> String {
+        let mut s = match rng.categorical(&self.style.mix) {
+            0 => self.agreement_sentence(rng),
+            1 => self.fact_sentence(rng),
+            2 => self.math_sentence(rng),
+            _ => self.noise_line(rng),
+        };
+        if self.style.char_noise > 0.0 {
+            let bytes: Vec<u8> = s
+                .bytes()
+                .map(|b| {
+                    if rng.uniform_f32() < self.style.char_noise {
+                        b'a' + rng.below(26) as u8
+                    } else {
+                        b
+                    }
+                })
+                .collect();
+            s = String::from_utf8(bytes).unwrap();
+        }
+        s
+    }
+
+    /// Render `len` bytes of corpus text.
+    pub fn generate(&self, rng: &mut Rng, len: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(len + 64);
+        while out.len() < len {
+            out.extend_from_slice(self.sentence(rng).as_bytes());
+            out.push(b' ');
+        }
+        out.truncate(len);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::world::{World, WORLD_SEED};
+
+    fn world() -> World {
+        World::new(WORLD_SEED)
+    }
+
+    #[test]
+    fn agreement_is_consistent() {
+        let w = world();
+        let g = Grammar::new(&w, wiki_style());
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let s = g.agreement_sentence(&mut rng);
+            let words: Vec<&str> = s.split(' ').collect();
+            assert_eq!(words[0], "the");
+            let subj = words[1];
+            let plural = w.nouns.iter().any(|n| format!("{n}s") == subj);
+            // verb is the word right before the final "the <obj> ."
+            let vi = words.len() - 4;
+            let verb = words[vi];
+            if plural {
+                assert!(w.verbs_plur.iter().any(|v| v == verb), "{s}");
+            } else {
+                assert!(w.verbs_sing.iter().any(|v| v == verb), "{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn generate_exact_len_and_ascii() {
+        let w = world();
+        let g = Grammar::new(&w, c4_style());
+        let mut rng = Rng::new(2);
+        let bytes = g.generate(&mut rng, 10_000);
+        assert_eq!(bytes.len(), 10_000);
+        assert!(bytes.iter().all(|&b| b.is_ascii() && b != 0));
+    }
+
+    #[test]
+    fn styles_have_different_statistics() {
+        let w = world();
+        let mut rng = Rng::new(3);
+        let entropy = |bytes: &[u8]| {
+            let mut counts = [0f64; 256];
+            for &b in bytes {
+                counts[b as usize] += 1.0;
+            }
+            let n = bytes.len() as f64;
+            counts.iter().filter(|&&c| c > 0.0)
+                .map(|&c| -(c / n) * (c / n).log2())
+                .sum::<f64>()
+        };
+        let wiki = entropy(&Grammar::new(&w, wiki_style()).generate(&mut rng, 50_000));
+        let ptb = entropy(&Grammar::new(&w, ptb_style()).generate(&mut rng, 50_000));
+        let c4 = entropy(&Grammar::new(&w, c4_style()).generate(&mut rng, 50_000));
+        assert!(ptb < wiki, "ptb {ptb} < wiki {wiki}");
+        assert!(wiki < c4, "wiki {wiki} < c4 {c4}");
+    }
+
+    #[test]
+    fn ptb_restricts_vocab() {
+        let w = world();
+        let g = Grammar::new(&w, ptb_style());
+        let mut rng = Rng::new(4);
+        let text = String::from_utf8(g.generate(&mut rng, 50_000)).unwrap();
+        // nouns from the second half of the inventory must not appear
+        for n in &w.nouns[w.nouns.len() / 2 + 1..] {
+            assert!(!text.contains(&format!(" {n} ")), "leaked {n}");
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let w = world();
+        let g = Grammar::new(&w, wiki_style());
+        let a = g.generate(&mut Rng::new(9), 1000);
+        let b = g.generate(&mut Rng::new(9), 1000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn facts_are_planted() {
+        let w = world();
+        let g = Grammar::new(&w, wiki_style());
+        let mut rng = Rng::new(5);
+        let text = String::from_utf8(g.generate(&mut rng, 200_000)).unwrap();
+        // at least half of the (in-vocab) facts appear verbatim
+        let mut hits = 0;
+        for i in 0..w.nouns.len() {
+            if text.contains(&w.fact_sentence(i)) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= w.nouns.len() / 2, "only {hits} facts planted");
+    }
+}

@@ -1,0 +1,12 @@
+//! Synthetic data substrate: the shared `World`, three corpus grammars
+//! (WikiText2/PTB/C4 analogs), batch sampling, and the seven zero-shot task
+//! families (DESIGN.md §2, §4).
+
+pub mod corpus;
+pub mod grammar;
+pub mod tasks;
+pub mod world;
+
+pub use corpus::{default_world, eval_corpora, training_corpus, Corpus};
+pub use tasks::{generate_set, TaskFamily, TaskInstance, ALL_FAMILIES};
+pub use world::World;

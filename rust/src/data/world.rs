@@ -1,0 +1,145 @@
+//! The synthetic "world": a fixed lexicon plus relational knowledge that all
+//! corpora teach and all zero-shot tasks query (DESIGN.md §2).
+//!
+//! The world is shared across corpora (same language, same facts) while each
+//! corpus renders it with a different style/mixture — exactly the split the
+//! paper's evaluation needs: three PPL axes over one underlying language, and
+//! task accuracy that measures *stored knowledge* surviving compression.
+
+use crate::util::rng::Rng;
+
+/// Deterministic lexicon + facts, derived from a world seed.
+#[derive(Clone, Debug)]
+pub struct World {
+    pub nouns: Vec<String>,        // singular forms; plural = +"s"
+    pub verbs_sing: Vec<String>,   // verb form agreeing with singular subject
+    pub verbs_plur: Vec<String>,   // verb form agreeing with plural subject
+    pub attrs: Vec<String>,        // attribute words
+    /// facts[i] = index into attrs: the attribute of noun i ("<noun> iz <attr>")
+    pub facts: Vec<usize>,
+}
+
+const ONSETS: &[&str] = &["b", "d", "f", "g", "k", "l", "m", "n", "p", "r",
+                          "s", "t", "v", "z", "bl", "tr", "gr", "st"];
+const VOWELS: &[&str] = &["a", "e", "i", "o", "u", "oo", "ai"];
+const CODAS: &[&str] = &["b", "d", "g", "k", "l", "m", "n", "p", "r", "t", "x", "zz"];
+
+fn make_word(rng: &mut Rng, syllables: usize) -> String {
+    let mut w = String::new();
+    for s in 0..syllables {
+        w.push_str(ONSETS[rng.below(ONSETS.len())]);
+        w.push_str(VOWELS[rng.below(VOWELS.len())]);
+        if s + 1 == syllables {
+            w.push_str(CODAS[rng.below(CODAS.len())]);
+        }
+    }
+    w
+}
+
+fn make_inventory(rng: &mut Rng, count: usize, syllables: usize) -> Vec<String> {
+    let mut out: Vec<String> = Vec::with_capacity(count);
+    while out.len() < count {
+        let w = make_word(rng, syllables);
+        if !out.contains(&w) {
+            out.push(w);
+        }
+    }
+    out
+}
+
+impl World {
+    pub fn new(seed: u64) -> World {
+        let mut rng = Rng::new(seed);
+        let nouns = make_inventory(&mut rng, 24, 1);
+        let verbs_sing = make_inventory(&mut rng, 10, 2);
+        // plural verb = singular stem truncated + "en" (systematic morphology
+        // the model can learn)
+        let verbs_plur = verbs_sing
+            .iter()
+            .map(|v| format!("{}en", &v[..v.len().saturating_sub(1)]))
+            .collect();
+        let attrs = make_inventory(&mut rng, 12, 2);
+        let facts = (0..nouns.len()).map(|_| rng.below(attrs.len())).collect();
+        World { nouns, verbs_sing, verbs_plur, attrs, facts }
+    }
+
+    pub fn plural(&self, noun_idx: usize) -> String {
+        format!("{}s", self.nouns[noun_idx])
+    }
+
+    pub fn fact_attr(&self, noun_idx: usize) -> &str {
+        &self.attrs[self.facts[noun_idx]]
+    }
+
+    /// The canonical fact sentence every corpus plants:
+    /// `"<noun> iz <attr> ."`
+    pub fn fact_sentence(&self, noun_idx: usize) -> String {
+        format!("{} iz {} .", self.nouns[noun_idx], self.fact_attr(noun_idx))
+    }
+
+    /// Arithmetic sentence: `"a + b = c ."` over single digits (c may be two
+    /// digits); planted so mathqa-syn is learnable.
+    pub fn math_sentence(a: u32, b: u32) -> String {
+        format!("{} + {} = {} .", a, b, a + b)
+    }
+}
+
+/// The default world seed shared by the whole repo (corpora, tasks, tests).
+pub const WORLD_SEED: u64 = 0x5EED_0001;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = World::new(1);
+        let b = World::new(1);
+        assert_eq!(a.nouns, b.nouns);
+        assert_eq!(a.facts, b.facts);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(World::new(1).nouns, World::new(2).nouns);
+    }
+
+    #[test]
+    fn inventories_distinct_and_sized() {
+        let w = World::new(WORLD_SEED);
+        assert_eq!(w.nouns.len(), 24);
+        assert_eq!(w.verbs_sing.len(), 10);
+        assert_eq!(w.verbs_plur.len(), 10);
+        assert_eq!(w.attrs.len(), 12);
+        let mut all = w.nouns.clone();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 24);
+    }
+
+    #[test]
+    fn verb_agreement_morphology() {
+        let w = World::new(WORLD_SEED);
+        for (s, p) in w.verbs_sing.iter().zip(&w.verbs_plur) {
+            assert!(p.ends_with("en"));
+            assert_ne!(s, p);
+        }
+    }
+
+    #[test]
+    fn facts_in_range_and_ascii() {
+        let w = World::new(WORLD_SEED);
+        for &f in &w.facts {
+            assert!(f < w.attrs.len());
+        }
+        for n in &w.nouns {
+            assert!(n.is_ascii() && !n.is_empty());
+        }
+        assert!(w.fact_sentence(0).contains(" iz "));
+    }
+
+    #[test]
+    fn math_sentence_format() {
+        assert_eq!(World::math_sentence(3, 4), "3 + 4 = 7 .");
+    }
+}

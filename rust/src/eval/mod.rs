@@ -1,0 +1,110 @@
+//! Evaluation: perplexity over the three corpora and zero-shot accuracy over
+//! the seven task families — the two axes of every table in the paper.
+
+pub mod ppl;
+pub mod zeroshot;
+
+use anyhow::Result;
+
+use crate::data::{Corpus, TaskFamily, TaskInstance, World, ALL_FAMILIES};
+use crate::model::ParamStore;
+use crate::runtime::session::Session;
+
+pub use ppl::perplexity;
+pub use zeroshot::score_tasks;
+
+/// One model's full evaluation: PPL per corpus + accuracy per task family.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    /// (corpus name, perplexity)
+    pub ppl: Vec<(String, f64)>,
+    /// (family name, accuracy)
+    pub acc: Vec<(String, f64)>,
+}
+
+impl EvalReport {
+    pub fn avg_acc(&self) -> f64 {
+        if self.acc.is_empty() {
+            return 0.0;
+        }
+        self.acc.iter().map(|(_, a)| a).sum::<f64>() / self.acc.len() as f64
+    }
+
+    /// Relative accuracy drop vs a baseline report (the paper's Drop ↓, %).
+    pub fn drop_vs(&self, baseline: &EvalReport) -> f64 {
+        let b = baseline.avg_acc();
+        if b <= 0.0 {
+            return 0.0;
+        }
+        100.0 * (b - self.avg_acc()) / b
+    }
+
+    pub fn ppl_of(&self, name: &str) -> f64 {
+        self.ppl
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| *p)
+            .unwrap_or(f64::NAN)
+    }
+}
+
+/// Evaluation workload sizes (kept explicit so benches can trade speed for
+/// precision; ZS_BENCH_FAST shrinks them further at the harness level).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalSpec {
+    pub ppl_batches: usize,
+    pub instances_per_family: usize,
+    pub task_seed: u64,
+}
+
+impl Default for EvalSpec {
+    fn default() -> Self {
+        EvalSpec { ppl_batches: 6, instances_per_family: 48, task_seed: 0xE1 }
+    }
+}
+
+/// Evaluate a parameter set on corpora + all task families.
+pub fn evaluate(sess: &Session, params: &ParamStore, corpora: &[Corpus],
+                world: &World, spec: &EvalSpec) -> Result<EvalReport> {
+    evaluate_subset(sess, params, corpora, world, spec, &ALL_FAMILIES)
+}
+
+/// Subset evaluation (e.g. Table 5 uses 6 tasks, excluding arc_c).
+pub fn evaluate_subset(sess: &Session, params: &ParamStore, corpora: &[Corpus],
+                       world: &World, spec: &EvalSpec,
+                       families: &[TaskFamily]) -> Result<EvalReport> {
+    let mut ppl = Vec::new();
+    for c in corpora {
+        ppl.push((c.name.clone(), perplexity(sess, params, c, spec.ppl_batches)?));
+    }
+    let mut acc = Vec::new();
+    for &fam in families {
+        let instances: Vec<TaskInstance> =
+            crate::data::generate_set(world, fam, spec.instances_per_family,
+                                      spec.task_seed);
+        acc.push((fam.name().to_string(), score_tasks(sess, params, &instances)?));
+    }
+    Ok(EvalReport { ppl, acc })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_aggregation() {
+        let base = EvalReport {
+            ppl: vec![("w".into(), 5.0)],
+            acc: vec![("a".into(), 0.8), ("b".into(), 0.6)],
+        };
+        let comp = EvalReport {
+            ppl: vec![("w".into(), 7.0)],
+            acc: vec![("a".into(), 0.7), ("b".into(), 0.5)],
+        };
+        assert!((base.avg_acc() - 0.7).abs() < 1e-12);
+        let drop = comp.drop_vs(&base);
+        assert!((drop - 100.0 * (0.7 - 0.6) / 0.7).abs() < 1e-9);
+        assert_eq!(base.ppl_of("w"), 5.0);
+        assert!(base.ppl_of("missing").is_nan());
+    }
+}

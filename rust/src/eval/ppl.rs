@@ -1,0 +1,37 @@
+//! Perplexity evaluation: exp(mean next-token NLL) over a corpus' held-out
+//! split, aggregated across deterministic eval batches.
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::model::ParamStore;
+use crate::runtime::session::Session;
+
+/// PPL of `params` on `corpus`'s eval split over up to `max_batches`.
+pub fn perplexity(sess: &Session, params: &ParamStore, corpus: &Corpus,
+                  max_batches: usize) -> Result<f64> {
+    let batches = corpus.eval_batches(sess.cfg.batch, sess.cfg.seq_len, max_batches);
+    anyhow::ensure!(!batches.is_empty(), "no eval batches for {}", corpus.name);
+    let mut total = 0.0f64;
+    for b in &batches {
+        let (loss, _) = sess.fwd(params, b)?;
+        anyhow::ensure!(loss.is_finite(), "non-finite loss on {}", corpus.name);
+        total += loss as f64;
+    }
+    // every batch covers the same token count: plain mean
+    Ok((total / batches.len() as f64).exp())
+}
+
+/// PPL computed from logits (used where the loss output is unavailable).
+pub fn ppl_from_mean_nll(mean_nll: f64) -> f64 {
+    mean_nll.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ppl_monotone_in_nll() {
+        assert!(super::ppl_from_mean_nll(2.0) < super::ppl_from_mean_nll(3.0));
+        assert!((super::ppl_from_mean_nll(0.0) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,29 @@
+//! # zs-svd — Zero-Sum SVD for low-rank LLM compression
+//!
+//! Production-style reproduction of *"Zero Sum SVD: Balancing Loss
+//! Sensitivity for Low Rank LLM Compression"* as a three-layer
+//! Rust + JAX + Pallas stack (see DESIGN.md):
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`), AOT-lowered.
+//! * **L2** — JAX model graphs (`python/compile/model.py`), AOT-lowered.
+//! * **L3** — this crate: the compression engine (whitening, sensitivity
+//!   scoring, zero-sum selection, correction), all baselines, the PJRT
+//!   runtime that executes the AOT artifacts, the trainer, evaluation,
+//!   serving, and the experiment harnesses for every table/figure.
+//!
+//! Python never runs at request time: after `make artifacts`, the `zs-svd`
+//! binary is self-contained.
+
+pub mod util;
+pub mod tensor;
+pub mod linalg;
+pub mod data;
+pub mod model;
+pub mod runtime;
+pub mod trainer;
+pub mod compress;
+pub mod eval;
+pub mod serve;
+pub mod coordinator;
+pub mod config;
+pub mod report;

@@ -1,0 +1,221 @@
+//! Cholesky factorization and triangular solves — the whitening substrate.
+//!
+//! The paper's whitening factor is S = chol(C + λI) with C = X·Xᵀ (Sec. 3.3).
+//! Everything downstream needs only two triangular primitives:
+//!   * `solve_lower`   : L·X = B      (forward substitution, multi-RHS)
+//!   * `solve_lower_t` : Lᵀ·X = B     (back substitution, multi-RHS)
+//! from which the library derives
+//!   * W′_v = P·S⁻¹  via  (W′_v)ᵀ = solve_lower_t(S, Pᵀ)
+//!   * H    = G·S⁻ᵀ  via  Hᵀ       = solve_lower(S, Gᵀ).
+
+use crate::tensor::Mat;
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite matrix.
+/// Returns Err with the failing pivot index if the matrix is not PD
+/// (callers add a ridge and retry).
+pub fn cholesky(a: &Mat) -> Result<Mat, usize> {
+    assert_eq!(a.rows, a.cols, "cholesky wants square");
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // accumulate in f64: whitening matrices are ill-conditioned at
+            // high calibration token counts
+            let mut s = a.at(i, j) as f64;
+            for k in 0..j {
+                s -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(i);
+                }
+                *l.at_mut(i, j) = s.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (s / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Cholesky with automatic ridge escalation: tries λ, 10λ, 100λ, ... until
+/// the factorization succeeds.  Returns (L, λ_used).
+pub fn cholesky_ridge(c: &Mat, lambda0: f32) -> (Mat, f32) {
+    let mut lambda = lambda0;
+    loop {
+        let mut a = c.clone();
+        a.add_diag(lambda);
+        match cholesky(&a) {
+            Ok(l) => return (l, lambda),
+            Err(_) => {
+                lambda *= 10.0;
+                assert!(
+                    lambda.is_finite() && lambda < 1e12,
+                    "cholesky_ridge: matrix is hopeless (lambda {lambda})"
+                );
+            }
+        }
+    }
+}
+
+/// Solve L·X = B for X (L lower-triangular, B is n×k).
+pub fn solve_lower(l: &Mat, b: &Mat) -> Mat {
+    assert_eq!(l.rows, l.cols);
+    assert_eq!(l.rows, b.rows);
+    let (n, k) = (b.rows, b.cols);
+    let mut x = b.clone();
+    for i in 0..n {
+        // x[i] -= L[i, :i] · x[:i]
+        for c in 0..i {
+            let lic = l.at(i, c);
+            if lic == 0.0 {
+                continue;
+            }
+            let (head, tail) = x.data.split_at_mut(i * k);
+            let xi = &mut tail[..k];
+            let xc = &head[c * k..(c + 1) * k];
+            for t in 0..k {
+                xi[t] -= lic * xc[t];
+            }
+        }
+        let d = l.at(i, i);
+        for t in 0..k {
+            x.data[i * k + t] /= d;
+        }
+    }
+    x
+}
+
+/// Solve Lᵀ·X = B for X (back substitution, B is n×k).
+pub fn solve_lower_t(l: &Mat, b: &Mat) -> Mat {
+    assert_eq!(l.rows, l.cols);
+    assert_eq!(l.rows, b.rows);
+    let (n, k) = (b.rows, b.cols);
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        // x[i] -= (Lᵀ)[i, i+1:] · x[i+1:] = L[i+1:, i] · x[i+1:]
+        for c in i + 1..n {
+            let lci = l.at(c, i);
+            if lci == 0.0 {
+                continue;
+            }
+            let (head, tail) = x.data.split_at_mut(c * k);
+            let xi = &mut head[i * k..(i + 1) * k];
+            let xc = &tail[..k];
+            for t in 0..k {
+                xi[t] -= lci * xc[t];
+            }
+        }
+        let d = l.at(i, i);
+        for t in 0..k {
+            x.data[i * k + t] /= d;
+        }
+    }
+    x
+}
+
+/// X = B·L⁻¹ for lower-triangular L (right-solve): Xᵀ solves Lᵀ·Xᵀ = ... —
+/// implemented directly as X·L = B ⇔ Lᵀ Xᵀ = Bᵀ.
+pub fn right_solve_lower(b: &Mat, l: &Mat) -> Mat {
+    solve_lower_t(l, &b.transpose()).transpose()
+}
+
+/// X = B·L⁻ᵀ for lower-triangular L: X·Lᵀ = B ⇔ L·Xᵀ = Bᵀ.
+pub fn right_solve_lower_t(b: &Mat, l: &Mat) -> Mat {
+    solve_lower(l, &b.transpose()).transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{gram, matmul, matmul_bt};
+    use crate::util::rng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> Mat {
+        let a = Mat::randn(rng, n + 5, n, 1.0);
+        let mut g = gram(&a);
+        g.add_diag(0.1);
+        g
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                    "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn chol_reconstructs() {
+        let mut rng = Rng::new(7);
+        for n in [1, 2, 7, 33, 64] {
+            let c = spd(&mut rng, n);
+            let l = cholesky(&c).unwrap();
+            assert_close(&matmul_bt(&l, &l), &c, 2e-3);
+            // strictly lower-triangular above diagonal is zero
+            for i in 0..n {
+                for j in i + 1..n {
+                    assert_eq!(l.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chol_rejects_indefinite() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig -1, 3
+        assert!(cholesky(&m).is_err());
+    }
+
+    #[test]
+    fn ridge_escalates() {
+        let m = Mat::from_vec(2, 2, vec![0.0, 0.0, 0.0, 0.0]);
+        let (l, lambda) = cholesky_ridge(&m, 1e-6);
+        assert!(lambda >= 1e-6);
+        assert!(l.at(0, 0) > 0.0);
+    }
+
+    #[test]
+    fn solve_lower_inverts() {
+        let mut rng = Rng::new(8);
+        let c = spd(&mut rng, 20);
+        let l = cholesky(&c).unwrap();
+        let b = Mat::randn(&mut rng, 20, 7, 1.0);
+        let x = solve_lower(&l, &b);
+        assert_close(&matmul(&l, &x), &b, 1e-3);
+    }
+
+    #[test]
+    fn solve_lower_t_inverts() {
+        let mut rng = Rng::new(9);
+        let c = spd(&mut rng, 20);
+        let l = cholesky(&c).unwrap();
+        let b = Mat::randn(&mut rng, 20, 5, 1.0);
+        let x = solve_lower_t(&l, &b);
+        assert_close(&matmul(&l.transpose(), &x), &b, 1e-3);
+    }
+
+    #[test]
+    fn right_solves_invert() {
+        let mut rng = Rng::new(10);
+        let c = spd(&mut rng, 16);
+        let l = cholesky(&c).unwrap();
+        let b = Mat::randn(&mut rng, 6, 16, 1.0);
+        let x = right_solve_lower(&b, &l);
+        assert_close(&matmul(&x, &l), &b, 1e-3);
+        let y = right_solve_lower_t(&b, &l);
+        assert_close(&matmul(&y, &l.transpose()), &b, 1e-3);
+    }
+
+    #[test]
+    fn whitening_identity() {
+        // (W·S)·S⁻¹ = W — the compress pipeline's round trip.
+        let mut rng = Rng::new(11);
+        let c = spd(&mut rng, 24);
+        let (s, _) = cholesky_ridge(&c, 1e-6);
+        let w = Mat::randn(&mut rng, 10, 24, 1.0);
+        let a = matmul(&w, &s);
+        let back = right_solve_lower(&a, &s);
+        assert_close(&back, &w, 5e-3);
+    }
+}

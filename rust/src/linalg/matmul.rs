@@ -1,0 +1,166 @@
+//! Blocked dense matmul + small GEMM helpers.
+//!
+//! This is the compression-time workhorse (whitening A = W·S, recomposition
+//! W' = Wu·Wv, Jacobi column updates).  Request-path matmuls run inside the
+//! AOT HLO on the PJRT client, not here.
+
+use crate::tensor::Mat;
+
+/// C = A · B (blocked i-k-j loop order, row-major friendly).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    const BK: usize = 64;
+    const BJ: usize = 256;
+    for kb in (0..k).step_by(BK) {
+        let kend = (kb + BK).min(k);
+        for jb in (0..n).step_by(BJ) {
+            let jend = (jb + BJ).min(n);
+            for i in 0..m {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for j in jb..jend {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = A · Bᵀ without materializing the transpose (rows of B are contiguous).
+pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_bt: {}x{} · ({}x{})ᵀ", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            crow[j] = dot_f32(arow, brow);
+        }
+    }
+    c
+}
+
+/// C = Aᵀ · A (Gram matrix, symmetric — only upper computed then mirrored).
+pub fn gram(a: &Mat) -> Mat {
+    let (m, n) = (a.rows, a.cols);
+    let mut c = Mat::zeros(n, n);
+    for r in 0..m {
+        let row = &a.data[r * n..(r + 1) * n];
+        for i in 0..n {
+            let ri = row[i];
+            if ri == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for j in i..n {
+                crow[j] += ri * row[j];
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            c.data[i * n + j] = c.data[j * n + i];
+        }
+    }
+    c
+}
+
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-lane unrolled accumulation — the autovectorizer picks this up.
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for k in 0..a.cols {
+                    s += a.at(i, k) as f64 * b.at(k, j) as f64;
+                }
+                *c.at_mut(i, j) = s as f32;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                    "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(3);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 64, 64), (70, 130, 50)] {
+            let a = Mat::randn(&mut rng, m, k, 1.0);
+            let b = Mat::randn(&mut rng, k, n, 1.0);
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(&mut rng, 23, 31, 1.0);
+        let b = Mat::randn(&mut rng, 11, 31, 1.0);
+        assert_close(&matmul_bt(&a, &b), &matmul(&a, &b.transpose()), 1e-4);
+    }
+
+    #[test]
+    fn gram_matches() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(&mut rng, 40, 17, 1.0);
+        let g = gram(&a);
+        assert_close(&g, &matmul(&a.transpose(), &a), 1e-3);
+        // symmetry exact by construction
+        for i in 0..17 {
+            for j in 0..17 {
+                assert_eq!(g.at(i, j), g.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn identity_neutral() {
+        let mut rng = Rng::new(6);
+        let a = Mat::randn(&mut rng, 9, 9, 1.0);
+        assert_close(&matmul(&a, &Mat::eye(9)), &a, 1e-6);
+        assert_close(&matmul(&Mat::eye(9), &a), &a, 1e-6);
+    }
+}

@@ -1,0 +1,16 @@
+//! Pure-Rust dense linear algebra substrate (DESIGN.md §4).
+//!
+//! Everything the compression pipeline needs: blocked matmul, Cholesky
+//! whitening + triangular solves, one-sided Jacobi SVD, Householder QR,
+//! effective-rank utilities.  No BLAS, no external crates; f64 accumulation
+//! where conditioning demands it.
+
+pub mod cholesky;
+pub mod matmul;
+pub mod qr;
+pub mod svd;
+
+pub use cholesky::{cholesky, cholesky_ridge, right_solve_lower, right_solve_lower_t,
+                   solve_lower, solve_lower_t};
+pub use matmul::{gram, matmul, matmul_bt};
+pub use svd::{effective_rank, factor, reconstruct, svd, tail_energy, Svd};

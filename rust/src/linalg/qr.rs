@@ -1,0 +1,136 @@
+//! Householder QR — used for random orthogonal matrices in tests/benches and
+//! as an independent orthogonality oracle for the SVD.
+
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// Thin QR: A (m×n, m ≥ n) = Q (m×n, orthonormal cols) · R (n×n upper).
+pub fn qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "thin qr wants m >= n");
+    let mut r = a.clone();
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Householder vector for column k below the diagonal
+        let mut norm2 = 0.0f64;
+        for i in k..m {
+            let x = r.at(i, k) as f64;
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt() as f32;
+        let mut v = vec![0.0f32; m - k];
+        let x0 = r.at(k, k);
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        v[0] = x0 - alpha;
+        for i in k + 1..m {
+            v[i - k] = r.at(i, k);
+        }
+        let vnorm2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if vnorm2 > 0.0 {
+            // apply H = I - 2 v vᵀ / (vᵀv) to R[k:, k:]
+            for j in k..n {
+                let mut dot = 0.0f64;
+                for i in k..m {
+                    dot += v[i - k] as f64 * r.at(i, j) as f64;
+                }
+                let f = (2.0 * dot / vnorm2) as f32;
+                for i in k..m {
+                    *r.at_mut(i, j) -= f * v[i - k];
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // accumulate Q = H_0 H_1 ... H_{n-1} · [I; 0]
+    let mut q = Mat::zeros(m, n);
+    for i in 0..n {
+        q.data[i * n + i] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0f64;
+            for i in k..m {
+                dot += v[i - k] as f64 * q.at(i, j) as f64;
+            }
+            let f = (2.0 * dot / vnorm2) as f32;
+            for i in k..m {
+                *q.at_mut(i, j) -= f * v[i - k];
+            }
+        }
+    }
+
+    // zero R's strictly-lower part (numerical dust) and return top n×n
+    let mut rout = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rout.data[i * n + j] = r.at(i, j);
+        }
+    }
+    (q, rout)
+}
+
+/// Haar-ish random orthogonal n×n matrix (QR of a Gaussian matrix).
+pub fn random_orthogonal(rng: &mut Rng, n: usize) -> Mat {
+    let a = Mat::randn(rng, n, n, 1.0);
+    let (q, _) = qr(&a);
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                    "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(31);
+        for (m, n) in [(5, 5), (12, 7), (40, 40), (3, 1)] {
+            let a = Mat::randn(&mut rng, m, n, 1.0);
+            let (q, r) = qr(&a);
+            assert_close(&matmul(&q, &r), &a, 1e-3);
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Rng::new(32);
+        let a = Mat::randn(&mut rng, 20, 13, 1.0);
+        let (q, _) = qr(&a);
+        let g = matmul(&q.transpose(), &q);
+        assert_close(&g, &Mat::eye(13), 1e-4);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(33);
+        let a = Mat::randn(&mut rng, 9, 6, 1.0);
+        let (_, r) = qr(&a);
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn random_orthogonal_is_orthogonal() {
+        let mut rng = Rng::new(34);
+        let q = random_orthogonal(&mut rng, 16);
+        let g = matmul(&q.transpose(), &q);
+        assert_close(&g, &Mat::eye(16), 1e-4);
+    }
+}

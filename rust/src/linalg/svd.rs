@@ -1,0 +1,338 @@
+//! One-sided Jacobi SVD — the truncation substrate.
+//!
+//! Every compression method in this repo funnels through `svd`: it must be
+//! robust (whitened matrices can be very ill-conditioned) and exact enough
+//! that the zero-sum ΔL estimates mean something.  One-sided Jacobi is the
+//! right tool at this scale (matrices up to ~512×512): simple, numerically
+//! strong, and singular vectors come out orthogonal to machine precision.
+//!
+//! Convention: `svd(A)` with A (m×n) returns U (m×r), σ (r), V (n×r) with
+//! r = min(m,n), A = U·diag(σ)·Vᵀ and σ₁ ≥ σ₂ ≥ … ≥ 0.
+
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,          // m × r, orthonormal columns
+    pub sigma: Vec<f32>, // r, descending
+    pub v: Mat,          // n × r, orthonormal columns
+}
+
+const MAX_SWEEPS: usize = 60;
+const TOL: f64 = 1e-10; // on gamma² / (alpha·beta)
+
+/// Full (thin) SVD via one-sided Jacobi.
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows >= a.cols {
+        svd_tall(a)
+    } else {
+        // A = U Σ Vᵀ  ⇔  Aᵀ = V Σ Uᵀ
+        let s = svd_tall(&a.transpose());
+        Svd { u: s.v, sigma: s.sigma, v: s.u }
+    }
+}
+
+/// m ≥ n case. Works on B = Aᵀ so the columns being orthogonalized are
+/// contiguous rows in memory.
+///
+/// Perf (§Perf, EXPERIMENTS.md): per-row squared norms are cached and
+/// updated analytically after each rotation
+///   α′ = c²α − 2csγ + s²β,   β′ = s²α + 2csγ + c²β
+/// so a non-rotating pair costs ONE dot product (γ) instead of three —
+/// the dominant cost at convergence, when almost no pair rotates.
+fn svd_tall(a: &Mat) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    debug_assert!(m >= n);
+    let mut b = a.transpose(); // n rows of length m: row i = column i of A
+    let mut vrows = Mat::eye(n); // row i accumulates v_i
+
+    // cached ||b_i||² (refreshed from scratch periodically to cap drift)
+    let mut norms: Vec<f64> = (0..n).map(|i| dot64(b.row(i), b.row(i))).collect();
+
+    for sweep in 0..MAX_SWEEPS {
+        if sweep > 0 && sweep % 8 == 0 {
+            for i in 0..n {
+                norms[i] = dot64(b.row(i), b.row(i));
+            }
+        }
+        let mut rotated = false;
+        for i in 0..n {
+            for j in i + 1..n {
+                let alpha = norms[i];
+                let beta = norms[j];
+                let (ri, rj) = row_pair(&mut b, i, j, m);
+                let gamma = dot64(ri, rj);
+                if gamma * gamma <= TOL * alpha * beta || gamma == 0.0 {
+                    continue;
+                }
+                rotated = true;
+                // Jacobi rotation zeroing the (i,j) off-diagonal of BᵀB
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                rotate(ri, rj, c as f32, s as f32);
+                let (vi, vj) = row_pair(&mut vrows, i, j, n);
+                rotate(vi, vj, c as f32, s as f32);
+                let (cc, ss) = (c * c, s * s);
+                let cross = 2.0 * c * s * gamma;
+                norms[i] = cc * alpha - cross + ss * beta;
+                norms[j] = ss * alpha + cross + cc * beta;
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+
+    // Extract σ and normalize; then sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sig: Vec<f64> = (0..n)
+        .map(|i| dot64(b.row(i), b.row(i)).sqrt())
+        .collect();
+    order.sort_by(|&x, &y| sig[y].total_cmp(&sig[x]));
+
+    let mut u = Mat::zeros(m, n);
+    let mut v = Mat::zeros(n, n);
+    let mut sigma = Vec::with_capacity(n);
+    for (col, &src) in order.iter().enumerate() {
+        let s = sig[src];
+        sigma.push(s as f32);
+        if s > 0.0 {
+            let inv = (1.0 / s) as f32;
+            for r in 0..m {
+                u.data[r * n + col] = b.data[src * m + r] * inv;
+            }
+        }
+        for r in 0..n {
+            v.data[r * n + col] = vrows.data[src * n + r];
+        }
+    }
+    // avoid the unused-assignment lint on sig
+    sig.clear();
+    Svd { u, sigma, v }
+}
+
+fn dot64(a: &[f32], b: &[f32]) -> f64 {
+    // f64 accumulation (conditioning matters here), 4-lane unrolled so the
+    // autovectorizer emits packed converts+FMAs
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] as f64 * b[i] as f64;
+        acc[1] += a[i + 1] as f64 * b[i + 1] as f64;
+        acc[2] += a[i + 2] as f64 * b[i + 2] as f64;
+        acc[3] += a[i + 3] as f64 * b[i + 3] as f64;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] as f64 * b[i] as f64;
+    }
+    s
+}
+
+/// Disjoint mutable rows i<j of a matrix with row length `len`.
+fn row_pair<'a>(m: &'a mut Mat, i: usize, j: usize, len: usize) -> (&'a mut [f32], &'a mut [f32]) {
+    debug_assert!(i < j);
+    let (head, tail) = m.data.split_at_mut(j * len);
+    (&mut head[i * len..(i + 1) * len], &mut tail[..len])
+}
+
+#[inline]
+fn rotate(ri: &mut [f32], rj: &mut [f32], c: f32, s: f32) {
+    for (x, y) in ri.iter_mut().zip(rj.iter_mut()) {
+        let xi = *x;
+        let xj = *y;
+        *x = c * xi - s * xj;
+        *y = s * xi + c * xj;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// derived quantities
+// ---------------------------------------------------------------------------
+
+/// Rank-k reconstruction U_k Σ_k V_kᵀ.
+pub fn reconstruct(s: &Svd, k: usize) -> Mat {
+    let (m, n) = (s.u.rows, s.v.rows);
+    let k = k.min(s.sigma.len());
+    let mut out = Mat::zeros(m, n);
+    for c in 0..k {
+        let sc = s.sigma[c];
+        if sc == 0.0 {
+            continue;
+        }
+        for r in 0..m {
+            let us = s.u.data[r * s.u.cols + c] * sc;
+            if us == 0.0 {
+                continue;
+            }
+            let orow = &mut out.data[r * n..(r + 1) * n];
+            for q in 0..n {
+                orow[q] += us * s.v.data[q * s.v.cols + c];
+            }
+        }
+    }
+    out
+}
+
+/// Factored form (Wu, Wv) = (U_k √Σ_k, √Σ_k V_kᵀ) — the paper's Eq. (5)
+/// *before* the S⁻¹ unwhitening (the caller applies it to Wv).
+pub fn factor(s: &Svd, k: usize) -> (Mat, Mat) {
+    let (m, n) = (s.u.rows, s.v.rows);
+    let k = k.min(s.sigma.len());
+    let mut wu = Mat::zeros(m, k);
+    let mut wv = Mat::zeros(k, n);
+    for c in 0..k {
+        let h = s.sigma[c].max(0.0).sqrt();
+        for r in 0..m {
+            wu.data[r * k + c] = s.u.data[r * s.u.cols + c] * h;
+        }
+        for q in 0..n {
+            wv.data[c * n + q] = s.v.data[q * s.v.cols + c] * h;
+        }
+    }
+    (wu, wv)
+}
+
+/// Effective rank at energy threshold τ (paper Eq. 14):
+/// smallest k with Σ_{i≤k} σᵢ² / Σ σᵢ² ≥ τ.
+pub fn effective_rank(sigma: &[f32], tau: f64) -> usize {
+    let total: f64 = sigma.iter().map(|&s| (s as f64) * (s as f64)).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let mut acc = 0.0;
+    for (i, &s) in sigma.iter().enumerate() {
+        acc += (s as f64) * (s as f64);
+        if acc / total >= tau {
+            return i + 1;
+        }
+    }
+    sigma.len()
+}
+
+/// Tail energy Σ_{i>k} σᵢ² (Theorem 3.1's reconstruction error).
+pub fn tail_energy(sigma: &[f32], k: usize) -> f64 {
+    sigma[k.min(sigma.len())..]
+        .iter()
+        .map(|&s| (s as f64) * (s as f64))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+    use crate::util::rng::Rng;
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                    "{x} vs {y}");
+        }
+    }
+
+    fn check_orthonormal_cols(m: &Mat, tol: f32) {
+        for i in 0..m.cols {
+            for j in i..m.cols {
+                let mut d = 0.0f64;
+                for r in 0..m.rows {
+                    d += m.data[r * m.cols + i] as f64 * m.data[r * m.cols + j] as f64;
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < tol as f64, "col {i}·{j} = {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn reconstructs_exactly_at_full_rank() {
+        let mut rng = Rng::new(21);
+        for (m, n) in [(8, 8), (20, 12), (12, 20), (64, 33), (1, 5)] {
+            let a = Mat::randn(&mut rng, m, n, 1.0);
+            let s = svd(&a);
+            let r = m.min(n);
+            assert_eq!(s.sigma.len(), r);
+            assert_close(&reconstruct(&s, r), &a, 1e-3);
+            check_orthonormal_cols(&s.u, 1e-4);
+            check_orthonormal_cols(&s.v, 1e-4);
+            // descending
+            for w in s.sigma.windows(2) {
+                assert!(w[0] >= w[1] - 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Mat::from_vec(3, 2, vec![3.0, 0.0, 0.0, 2.0, 0.0, 0.0]);
+        let s = svd(&a);
+        assert!((s.sigma[0] - 3.0).abs() < 1e-5);
+        assert!((s.sigma[1] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rank_deficient() {
+        let mut rng = Rng::new(22);
+        // rank-2 matrix: outer product sum
+        let u = Mat::randn(&mut rng, 10, 2, 1.0);
+        let v = Mat::randn(&mut rng, 2, 7, 1.0);
+        let a = matmul(&u, &v);
+        let s = svd(&a);
+        assert!(s.sigma[2] < 1e-4 * s.sigma[0].max(1.0));
+        assert_close(&reconstruct(&s, 2), &a, 1e-3);
+    }
+
+    #[test]
+    fn truncation_is_eckart_young() {
+        // error of rank-k truncation == tail energy, and no worse than
+        // dropping random components
+        let mut rng = Rng::new(23);
+        let a = Mat::randn(&mut rng, 24, 16, 1.0);
+        let s = svd(&a);
+        for k in [1, 4, 8, 15] {
+            let err = a.sub(&reconstruct(&s, k)).frob_norm().powi(2);
+            let tail = tail_energy(&s.sigma, k);
+            assert!((err - tail).abs() / tail.max(1e-9) < 1e-2,
+                    "k={k}: {err} vs {tail}");
+        }
+    }
+
+    #[test]
+    fn factor_matches_reconstruct() {
+        let mut rng = Rng::new(24);
+        let a = Mat::randn(&mut rng, 18, 11, 1.0);
+        let s = svd(&a);
+        let (wu, wv) = factor(&s, 5);
+        assert_close(&matmul(&wu, &wv), &reconstruct(&s, 5), 1e-4);
+    }
+
+    #[test]
+    fn effective_rank_cases() {
+        assert_eq!(effective_rank(&[1.0, 0.0, 0.0], 0.95), 1);
+        assert_eq!(effective_rank(&[1.0, 1.0, 1.0, 1.0], 0.95), 4);
+        assert_eq!(effective_rank(&[], 0.95), 0);
+        // 3-4-5 triangle: σ²=[16,9]: 16/25=0.64 < 0.95, need both
+        assert_eq!(effective_rank(&[4.0, 3.0], 0.95), 2);
+        assert_eq!(effective_rank(&[4.0, 3.0], 0.6), 1);
+    }
+
+    #[test]
+    fn ill_conditioned_survives() {
+        let mut rng = Rng::new(25);
+        // singular values spanning 8 orders of magnitude
+        let n = 12;
+        let q = crate::linalg::qr::random_orthogonal(&mut rng, n);
+        let mut d = Mat::zeros(n, n);
+        for i in 0..n {
+            d.data[i * n + i] = 10f32.powi(-(i as i32) * 2 / 3);
+        }
+        let a = matmul(&matmul(&q, &d), &q.transpose());
+        let s = svd(&a);
+        assert!((s.sigma[0] - 1.0).abs() < 1e-4);
+        assert!(s.u.is_finite() && s.v.is_finite());
+    }
+}

@@ -1,0 +1,210 @@
+//! `zs-svd` — the L3 leader binary.
+//!
+//! Subcommands:
+//!   info                     artifact/manifest summary
+//!   train                    pretrain a model (checkpoint-cached)
+//!   eval                     evaluate dense or compressed weights
+//!   compress                 run one method at one ratio, report + save
+//!   sweep                    methods × ratios comparison table
+//!   serve                    batched serving benchmark (dense vs low-rank)
+
+use anyhow::Result;
+
+use zs_svd::compress::baselines::PruneScore;
+use zs_svd::config::ExperimentConfig;
+use zs_svd::coordinator::{self, Method};
+use zs_svd::eval::EvalSpec;
+use zs_svd::report::{acc2, f2, pct, Table};
+use zs_svd::runtime::Runtime;
+use zs_svd::serve::{run_serving, Engine, ServeConfig};
+use zs_svd::util::cli::Args;
+
+fn parse_method(name: &str, ratio: f64) -> Method {
+    match name {
+        "svd" => Method::Svd,
+        "fwsvd" => Method::Fwsvd,
+        "asvd" => Method::Asvd,
+        "svd-llm" | "svdllm" => Method::SvdLlm,
+        "dobi" | "dobi-sim" => Method::DobiSim { sweeps: 2 },
+        "dobi*" => Method::DobiSimRemap { sweeps: 2 },
+        "zs-svd" | "zs" => Method::zs(ratio),
+        "zs-1x" => Method::zs_corrected(ratio, 1),
+        "zs-5x" => Method::zs_corrected(ratio, 5),
+        "zs-10x" => Method::zs_corrected(ratio, 10),
+        "zs*" | "zs-remap" => Method::zs_remap(ratio),
+        "zs-hq" => Method::zs_hq(ratio),
+        "llm-pruner" | "magnitude" => Method::Prune(PruneScore::Magnitude),
+        "wanda-sp" => Method::Prune(PruneScore::WandaSp),
+        "flap" => Method::Prune(PruneScore::Flap),
+        "slicegpt" => Method::SliceGpt,
+        other => panic!("unknown method `{other}`"),
+    }
+}
+
+fn exp_config(args: &Args) -> ExperimentConfig {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(std::path::Path::new(path))
+            .expect("config file"),
+        None => ExperimentConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(f) = args.get("family") {
+        cfg.family = f.to_string();
+    }
+    cfg.train_steps = args.usize_or("steps", cfg.train_steps);
+    cfg.calib_batches = args.usize_or("calib-batches", cfg.calib_batches);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    if args.flag("fast") {
+        cfg = cfg.shrunk();
+    }
+    cfg
+}
+
+fn eval_spec(args: &Args, cfg: &ExperimentConfig) -> EvalSpec {
+    EvalSpec {
+        ppl_batches: args.usize_or("ppl-batches", cfg.ppl_batches),
+        instances_per_family: args.usize_or("instances", cfg.instances_per_family),
+        task_seed: 0xE1,
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let cmd = args.subcommand.clone().unwrap_or_else(|| "info".into());
+    let rt = Runtime::load_default()?;
+
+    match cmd.as_str() {
+        "info" => {
+            println!("artifacts: {}", Runtime::default_dir().display());
+            for (name, c) in &rt.manifest.configs {
+                println!(
+                    "  {name:10} arch={:6} d={} L={} ff={} seq={} batch={} \
+                     params={} targets={}",
+                    c.arch, c.d_model, c.n_layers, c.d_ff, c.seq_len, c.batch,
+                    c.param_count(), c.targets.len()
+                );
+            }
+        }
+
+        "train" => {
+            let cfg = exp_config(&args);
+            let p = coordinator::prepare(&rt, &cfg)?;
+            println!("trained {} ({}, {} steps); calib loss {:.4}",
+                     cfg.model, cfg.family, cfg.train_steps, p.calib.base_loss);
+        }
+
+        "eval" => {
+            let cfg = exp_config(&args);
+            let p = coordinator::prepare(&rt, &cfg)?;
+            let spec = eval_spec(&args, &cfg);
+            let report = coordinator::evaluate_plan(&p, None, &spec)?;
+            let mut t = Table::new(
+                &format!("dense {} ({})", cfg.model, cfg.family),
+                &["metric", "value"],
+            );
+            for (n, v) in &report.ppl {
+                t.row(vec![format!("ppl/{n}"), f2(*v)]);
+            }
+            for (n, v) in &report.acc {
+                t.row(vec![format!("acc/{n}"), acc2(*v)]);
+            }
+            t.row(vec!["acc/avg".into(), acc2(report.avg_acc())]);
+            print!("{}", t.to_ascii());
+        }
+
+        "compress" => {
+            let cfg = exp_config(&args);
+            let ratio = args.f64_or("ratio", 0.6);
+            let method = parse_method(&args.str_or("method", "zs-svd"), ratio);
+            let p = coordinator::prepare(&rt, &cfg)?;
+            let spec = eval_spec(&args, &cfg);
+            let base = coordinator::evaluate_plan(&p, None, &spec)?;
+            let plan = coordinator::run_method(&p, &method, ratio)?;
+            let report = coordinator::evaluate_plan(&p, Some(&plan), &spec)?;
+            println!("{} @ ratio {ratio}: achieved {:.3}, {} ({:.2}s)",
+                     plan.method, plan.achieved_ratio(),
+                     coordinator::rank_summary(&plan), plan.seconds);
+            let mut t = Table::new("compressed vs dense",
+                                   &["metric", "dense", &plan.method]);
+            for ((n, v), (_, c)) in base.ppl.iter().zip(&report.ppl) {
+                t.row(vec![format!("ppl/{n}"), f2(*v), f2(*c)]);
+            }
+            t.row(vec!["acc/avg".into(), acc2(base.avg_acc()),
+                       acc2(report.avg_acc())]);
+            t.row(vec!["drop %".into(), "0.0".into(),
+                       pct(report.drop_vs(&base))]);
+            print!("{}", t.to_ascii());
+            if let Some(out) = args.get("save") {
+                let compressed = plan.apply(&p.params);
+                compressed.save(std::path::Path::new(out))?;
+                println!("saved compressed weights to {out}");
+            }
+        }
+
+        "sweep" => {
+            let cfg = exp_config(&args);
+            let ratios = args.f64_list_or("ratios", &cfg.ratios);
+            let names = args.str_list_or("methods", &["svd", "svd-llm", "zs-svd"]);
+            let p = coordinator::prepare(&rt, &cfg)?;
+            let spec = eval_spec(&args, &cfg);
+            let base = coordinator::evaluate_plan(&p, None, &spec)?;
+            let mut t = Table::new(
+                &format!("{} sweep", cfg.model),
+                &["ratio", "method", "ppl(wiki)", "ppl(ptb)", "ppl(c4)",
+                  "acc", "drop%", "secs"],
+            );
+            for &ratio in &ratios {
+                for name in &names {
+                    let m = parse_method(name, ratio);
+                    let plan = coordinator::run_method(&p, &m, ratio)?;
+                    let r = coordinator::evaluate_plan(&p, Some(&plan), &spec)?;
+                    t.row(vec![
+                        format!("{ratio}"), plan.method.clone(),
+                        f2(r.ppl_of("wiki-syn")), f2(r.ppl_of("ptb-syn")),
+                        f2(r.ppl_of("c4-syn")), acc2(r.avg_acc()),
+                        pct(r.drop_vs(&base)), format!("{:.2}", plan.seconds),
+                    ]);
+                }
+            }
+            print!("{}", t.to_ascii());
+        }
+
+        "serve" => {
+            let cfg = exp_config(&args);
+            let ratio = args.f64_or("ratio", 0.6);
+            let requests = args.usize_or("requests", 48);
+            let p = coordinator::prepare(&rt, &cfg)?;
+            let sc = ServeConfig { n_requests: requests, ..Default::default() };
+
+            let dense_bytes = p.session.cfg.param_count() as f64 * 2.0;
+            let d = run_serving(&p.session, &p.params, &Engine::Dense, &sc,
+                                dense_bytes)?;
+            let plan = coordinator::run_method(&p, &Method::zs(ratio), ratio)?;
+            let tag = format!("{}", (ratio * 100.0) as usize);
+            let engine = Engine::from_plan(&tag, &plan);
+            let l = run_serving(&p.session, &plan.apply(&p.params), &engine, &sc,
+                                plan.model_bytes(&p.session.cfg))?;
+
+            let mut t = Table::new("serving", &["engine", "tok/s", "p50 ms",
+                                                "p95 ms", "weights MB",
+                                                "act MB", "peak RSS MB"]);
+            for s in [&d, &l] {
+                t.row(vec![
+                    s.engine.clone(), f2(s.tokens_per_sec), f2(s.p50_ms),
+                    f2(s.p95_ms), f2(s.weight_mem_bytes / 1e6),
+                    f2(s.act_mem_bytes as f64 / 1e6),
+                    f2(s.peak_mem_bytes as f64 / 1e6),
+                ]);
+            }
+            print!("{}", t.to_ascii());
+        }
+
+        other => {
+            anyhow::bail!("unknown subcommand `{other}` \
+                           (info|train|eval|compress|sweep|serve)");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Parameter initialization — mirrors `python/compile/model.py::init_params`
+//! (normal(0, 0.02), residual-branch outputs scaled by 1/sqrt(2L), norms at
+//! one) so rust-trained and python-tested models share dynamics.
+
+use super::manifest::ConfigMeta;
+use super::store::ParamStore;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub fn init_params(cfg: &ConfigMeta, rng: &mut Rng) -> ParamStore {
+    let mut store = ParamStore::zeros_like(cfg);
+    let resid_scale = 0.02 / (2.0 * cfg.n_layers as f32).sqrt();
+    for p in &cfg.params {
+        let mut t = Tensor::zeros(&p.shape);
+        if p.name.ends_with("ln1") || p.name.ends_with("ln2")
+            || p.name.ends_with("final_ln")
+        {
+            t.data.fill(1.0);
+        } else {
+            let std = if p.name.ends_with("wo") || p.name.ends_with("wdown")
+                || p.name.ends_with("wout")
+            {
+                resid_scale
+            } else {
+                0.02
+            };
+            rng.fill_normal(&mut t.data, 0.0, std);
+        }
+        store.set(&p.name, t);
+    }
+    store
+}
+
+/// Zero-filled Adam state (m or v) for a config.
+pub fn zero_state(cfg: &ConfigMeta) -> ParamStore {
+    ParamStore::zeros_like(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn tiny() -> ConfigMeta {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).unwrap().config("tiny").clone()
+    }
+
+    #[test]
+    fn norms_are_ones_weights_are_small() {
+        let cfg = tiny();
+        let mut rng = Rng::new(1);
+        let s = init_params(&cfg, &mut rng);
+        s.check_matches(&cfg).unwrap();
+        assert!(s.get("layers.0.ln1").data.iter().all(|&v| v == 1.0));
+        let w = s.get("layers.0.wq");
+        let std = (w.data.iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / w.len() as f64)
+            .sqrt();
+        assert!((std - 0.02).abs() < 0.002, "std {std}");
+        // residual outputs scaled down
+        let wo = s.get("layers.0.wo");
+        let std_o = (wo.data.iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / wo.len() as f64)
+            .sqrt();
+        assert!(std_o < std * 0.6, "wo std {std_o} vs {std}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = tiny();
+        let a = init_params(&cfg, &mut Rng::new(5));
+        let b = init_params(&cfg, &mut Rng::new(5));
+        assert_eq!(a.get("embed"), b.get("embed"));
+    }
+}

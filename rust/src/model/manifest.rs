@@ -1,0 +1,297 @@
+//! Typed view of `artifacts/manifest.json` — the ABI between the python
+//! build path and this runtime.  Produced once by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::{parse_file, Json};
+
+#[derive(Clone, Debug)]
+pub struct IoMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<IoMeta>,
+    pub outputs: Vec<IoMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LowrankMeta {
+    pub art: ArtifactMeta,
+    /// target name -> uniform rank baked into this artifact's shapes
+    pub ranks: BTreeMap<String, usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TargetMeta {
+    pub name: String,
+    /// (m, n) — rows (output dim), cols (input dim)
+    pub shape: (usize, usize),
+    pub site: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct SiteMeta {
+    pub name: String,
+    pub dim: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConfigMeta {
+    pub name: String,
+    pub arch: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub params: Vec<ParamMeta>,
+    pub targets: Vec<TargetMeta>,
+    pub sites: Vec<SiteMeta>,
+    pub fwd: ArtifactMeta,
+    pub fwd_b1: Option<ArtifactMeta>,
+    pub grads: ArtifactMeta,
+    pub moments: ArtifactMeta,
+    pub train: ArtifactMeta,
+    /// keyed by ratio tag: "80", "60", "40", "20", "60_b1", ...
+    pub lowrank: BTreeMap<String, LowrankMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ConfigMeta>,
+}
+
+fn io_meta(j: &Json) -> IoMeta {
+    IoMeta {
+        name: j.str_or("name", ""),
+        shape: j.req("shape").as_shape().expect("io shape"),
+        dtype: j.str_or("dtype", "f32"),
+    }
+}
+
+fn artifact(j: &Json) -> ArtifactMeta {
+    ArtifactMeta {
+        file: j.str_or("file", ""),
+        inputs: j.req("inputs").as_arr().unwrap().iter().map(io_meta).collect(),
+        outputs: j.req("outputs").as_arr().unwrap().iter().map(io_meta).collect(),
+    }
+}
+
+fn config(name: &str, j: &Json) -> ConfigMeta {
+    let arts = j.req("artifacts");
+    let lowrank = arts
+        .get("lowrank")
+        .and_then(Json::as_obj)
+        .map(|m| {
+            m.iter()
+                .map(|(tag, rec)| {
+                    let ranks = rec
+                        .req("ranks")
+                        .as_obj()
+                        .unwrap()
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.as_usize().unwrap()))
+                        .collect();
+                    (tag.clone(), LowrankMeta { art: artifact(rec), ranks })
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+
+    ConfigMeta {
+        name: name.to_string(),
+        arch: j.str_or("arch", "llama"),
+        vocab: j.usize_or("vocab", 256),
+        d_model: j.usize_or("d_model", 0),
+        n_layers: j.usize_or("n_layers", 0),
+        n_heads: j.usize_or("n_heads", 0),
+        d_ff: j.usize_or("d_ff", 0),
+        seq_len: j.usize_or("seq_len", 0),
+        batch: j.usize_or("batch", 0),
+        params: j
+            .req("params")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|p| ParamMeta {
+                name: p.str_or("name", ""),
+                shape: p.req("shape").as_shape().unwrap(),
+            })
+            .collect(),
+        targets: j
+            .req("targets")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| {
+                let s = t.req("shape").as_shape().unwrap();
+                TargetMeta {
+                    name: t.str_or("name", ""),
+                    shape: (s[0], s[1]),
+                    site: t.str_or("site", ""),
+                }
+            })
+            .collect(),
+        sites: j
+            .req("sites")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| SiteMeta {
+                name: s.str_or("name", ""),
+                dim: s.usize_or("dim", 0),
+            })
+            .collect(),
+        fwd: artifact(arts.req("fwd")),
+        fwd_b1: arts.get("fwd_b1").map(artifact),
+        grads: artifact(arts.req("grads")),
+        moments: artifact(arts.req("moments")),
+        train: artifact(arts.req("train")),
+        lowrank,
+    }
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest, String> {
+        let j = parse_file(&artifacts_dir.join("manifest.json"))?;
+        let configs = j
+            .req("configs")
+            .as_obj()
+            .ok_or("configs must be an object")?
+            .iter()
+            .map(|(name, cj)| (name.clone(), config(name, cj)))
+            .collect();
+        Ok(Manifest { configs })
+    }
+
+    pub fn config(&self, name: &str) -> &ConfigMeta {
+        self.configs
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown config `{name}` (have: {:?})",
+                                      self.configs.keys().collect::<Vec<_>>()))
+    }
+}
+
+impl ConfigMeta {
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+
+    pub fn target(&self, name: &str) -> &TargetMeta {
+        self.targets
+            .iter()
+            .find(|t| t.name == name)
+            .unwrap_or_else(|| panic!("unknown target `{name}`"))
+    }
+
+    pub fn site_dim(&self, name: &str) -> usize {
+        self.sites
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("unknown site `{name}`"))
+            .dim
+    }
+
+    /// Total parameters in the compression-target matrices.
+    pub fn target_param_count(&self) -> usize {
+        self.targets.iter().map(|t| t.shape.0 * t.shape.1).sum()
+    }
+
+    /// Names of non-target params, in canonical (manifest) order.
+    pub fn base_param_names(&self) -> Vec<String> {
+        let tnames: std::collections::BTreeSet<&str> =
+            self.targets.iter().map(|t| t.name.as_str()).collect();
+        self.params
+            .iter()
+            .filter(|p| !tnames.contains(p.name.as_str()))
+            .map(|p| p.name.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+        let tiny = m.config("tiny");
+        assert_eq!(tiny.arch, "llama");
+        assert_eq!(tiny.d_model, 128);
+        assert_eq!(tiny.n_layers, 4);
+        // 7 targets per llama layer
+        assert_eq!(tiny.targets.len(), 7 * tiny.n_layers);
+        // 4 whitening sites per layer
+        assert_eq!(tiny.sites.len(), 4 * tiny.n_layers);
+        assert!(tiny.fwd_b1.is_some());
+        assert!(tiny.lowrank.contains_key("60"));
+        assert!(tiny.lowrank.contains_key("60_b1"));
+    }
+
+    #[test]
+    fn signature_alignment() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        for cfg in m.configs.values() {
+            let p = cfg.params.len();
+            // fwd inputs = params + tokens
+            assert_eq!(cfg.fwd.inputs.len(), p + 1, "{}", cfg.name);
+            // grads outputs = loss + per-target grad
+            assert_eq!(cfg.grads.outputs.len(), 1 + cfg.targets.len());
+            for (out, t) in cfg.grads.outputs[1..].iter().zip(&cfg.targets) {
+                assert_eq!(out.shape, vec![t.shape.0, t.shape.1]);
+            }
+            // moments outputs = anchoring loss + 3 per site
+            assert_eq!(cfg.moments.outputs.len(), 1 + 3 * cfg.sites.len());
+            // train: params+m+v+step+lr+tokens -> params+m+v+loss
+            assert_eq!(cfg.train.inputs.len(), 3 * p + 3);
+            assert_eq!(cfg.train.outputs.len(), 3 * p + 1);
+            // lowrank inputs = base + 2*targets + tokens
+            for lm in cfg.lowrank.values() {
+                assert_eq!(
+                    lm.art.inputs.len(),
+                    cfg.base_param_names().len() + 2 * cfg.targets.len() + 1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn target_site_dims_match_cols() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        for cfg in m.configs.values() {
+            for t in &cfg.targets {
+                assert_eq!(cfg.site_dim(&t.site), t.shape.1,
+                           "{}: {}", cfg.name, t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn param_counts_sane() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let tiny = m.config("tiny");
+        let total = tiny.param_count();
+        assert!((500_000..2_000_000).contains(&total), "{total}");
+        assert!(tiny.target_param_count() < total);
+    }
+}

@@ -1,0 +1,10 @@
+//! Model metadata + weights: manifest ABI, parameter store with the ZST0
+//! checkpoint format, initialization, and int8 quantization (DESIGN.md §4).
+
+pub mod init;
+pub mod manifest;
+pub mod quant;
+pub mod store;
+
+pub use manifest::{ArtifactMeta, ConfigMeta, Manifest, SiteMeta, TargetMeta};
+pub use store::ParamStore;

@@ -1,0 +1,79 @@
+//! Symmetric int8 quantize–dequantize — the HQ (Half-prune + Quantize)
+//! mechanism of the paper (Sec. 5, Table 1 footnote †) and the fp8-remap
+//! quality proxy.  Per-row scales, round-to-nearest.
+
+use crate::tensor::Mat;
+
+/// Quantize a matrix to int8 per-row and immediately dequantize (the network
+/// consumes f32; what matters for the experiments is the quantization error
+/// + the byte accounting).
+pub fn quant_dequant_int8(w: &Mat) -> Mat {
+    let mut out = Mat::zeros(w.rows, w.cols);
+    for r in 0..w.rows {
+        let row = w.row(r);
+        let maxabs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+        let orow = out.row_mut(r);
+        for (o, &v) in orow.iter_mut().zip(row) {
+            let q = (v / scale).round().clamp(-127.0, 127.0);
+            *o = q * scale;
+        }
+    }
+    out
+}
+
+/// Max elementwise quantization error bound for a row with max-abs `m`:
+/// half a quantization step.
+pub fn int8_error_bound(maxabs: f32) -> f32 {
+    maxabs / 127.0 / 2.0 + f32::EPSILON
+}
+
+/// Storage bytes for an int8 matrix with per-row f32 scales.
+pub fn int8_bytes(rows: usize, cols: usize) -> usize {
+    rows * cols + rows * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn error_within_bound() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(&mut rng, 16, 64, 0.5);
+        let q = quant_dequant_int8(&w);
+        for r in 0..w.rows {
+            let maxabs = w.row(r).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let bound = int8_error_bound(maxabs);
+            for (a, b) in w.row(r).iter().zip(q.row(r)) {
+                assert!((a - b).abs() <= bound * 1.01, "{a} vs {b} (bound {bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(&mut rng, 8, 8, 1.0);
+        let q1 = quant_dequant_int8(&w);
+        let q2 = quant_dequant_int8(&q1);
+        for (a, b) in q1.data.iter().zip(&q2.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_row_survives() {
+        let w = Mat::zeros(2, 4);
+        let q = quant_dequant_int8(&w);
+        assert!(q.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn byte_accounting() {
+        // int8 + per-row scale ≈ half of fp16 for wide rows
+        assert_eq!(int8_bytes(4, 100), 416);
+        assert!(int8_bytes(128, 128) < 128 * 128 * 2);
+    }
+}

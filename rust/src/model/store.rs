@@ -1,0 +1,217 @@
+//! Parameter store + the `ZST0` checkpoint format.
+//!
+//! `ParamStore` holds named tensors in the manifest's canonical order (the
+//! PJRT input order).  Checkpoints are a small self-describing binary
+//! format — magic `ZST0`, a JSON header (names/shapes/offsets), then raw
+//! little-endian f32 data — implemented in-repo since serde/safetensors are
+//! unavailable offline (the layout mirrors safetensors).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::manifest::ConfigMeta;
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    names: Vec<String>,
+    map: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    pub fn new_empty(names: Vec<String>) -> ParamStore {
+        ParamStore { names, map: BTreeMap::new() }
+    }
+
+    /// Zero-initialized store matching a config's parameter spec.
+    pub fn zeros_like(cfg: &ConfigMeta) -> ParamStore {
+        let mut s = ParamStore::new_empty(
+            cfg.params.iter().map(|p| p.name.clone()).collect());
+        for p in &cfg.params {
+            s.map.insert(p.name.clone(), Tensor::zeros(&p.shape));
+        }
+        s
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.map
+            .get(name)
+            .unwrap_or_else(|| panic!("param `{name}` missing"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        assert!(self.names.iter().any(|n| n == name), "unknown param `{name}`");
+        self.map.insert(name.to_string(), t);
+    }
+
+    /// Ordered tensors (the PJRT call order).
+    pub fn ordered(&self) -> Vec<&Tensor> {
+        self.names.iter().map(|n| self.get(n)).collect()
+    }
+
+    pub fn total_values(&self) -> usize {
+        self.names.iter().map(|n| self.get(n).len()).sum()
+    }
+
+    /// Bytes at fp16-equivalent accounting (the paper reports fp16 storage).
+    pub fn fp16_bytes(&self) -> usize {
+        self.total_values() * 2
+    }
+
+    // ------------------------------------------------------------------
+    // ZST0 checkpoint format
+    // ------------------------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut header_entries = Vec::new();
+        let mut offset = 0usize;
+        for n in &self.names {
+            let t = self.get(n);
+            header_entries.push(Json::obj(vec![
+                ("name", Json::str(n)),
+                ("shape", Json::arr(t.shape.iter().map(|&d| Json::num(d as f64)))),
+                ("offset", Json::num(offset as f64)),
+            ]));
+            offset += t.len();
+        }
+        let header = Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("tensors", Json::Arr(header_entries)),
+        ])
+        .to_string();
+
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"ZST0")?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for n in &self.names {
+            for v in &self.get(n).data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ParamStore> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == b"ZST0", "bad checkpoint magic {magic:?}");
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+
+        let mut rest = Vec::new();
+        f.read_to_end(&mut rest)?;
+        anyhow::ensure!(rest.len() % 4 == 0, "truncated checkpoint data");
+        let floats: Vec<f32> = rest
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut names = Vec::new();
+        let mut map = BTreeMap::new();
+        for e in header.req("tensors").as_arr().unwrap() {
+            let name = e.str_or("name", "");
+            let shape = e.req("shape").as_shape().unwrap();
+            let offset = e.usize_or("offset", 0);
+            let n: usize = shape.iter().product();
+            anyhow::ensure!(offset + n <= floats.len(),
+                            "tensor `{name}` out of bounds");
+            map.insert(name.clone(),
+                       Tensor::from_vec(&shape, floats[offset..offset + n].to_vec()));
+            names.push(name);
+        }
+        Ok(ParamStore { names, map })
+    }
+
+    /// Validate against a config spec (names + shapes, in order).
+    pub fn check_matches(&self, cfg: &ConfigMeta) -> anyhow::Result<()> {
+        anyhow::ensure!(self.names.len() == cfg.params.len(),
+                        "param count {} != {}", self.names.len(), cfg.params.len());
+        for (n, p) in self.names.iter().zip(&cfg.params) {
+            anyhow::ensure!(n == &p.name, "order mismatch: {n} vs {}", p.name);
+            anyhow::ensure!(self.get(n).shape == p.shape,
+                            "shape mismatch for {n}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_store() -> ParamStore {
+        let mut rng = Rng::new(1);
+        let mut s = ParamStore::new_empty(vec!["a".into(), "b".into(), "c".into()]);
+        let mut t = Tensor::zeros(&[3, 4]);
+        rng.fill_normal(&mut t.data, 0.0, 1.0);
+        s.set("a", t);
+        s.set("b", Tensor::scalar(7.5));
+        let mut t2 = Tensor::zeros(&[2, 2, 2]);
+        rng.fill_normal(&mut t2.data, 0.0, 1.0);
+        s.set("c", t2);
+        s
+    }
+
+    #[test]
+    fn ordered_follows_names() {
+        let s = sample_store();
+        let o = s.ordered();
+        assert_eq!(o[0].shape, vec![3, 4]);
+        assert_eq!(o[1].shape, Vec::<usize>::new());
+        assert_eq!(s.total_values(), 12 + 1 + 8);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let s = sample_store();
+        let dir = std::env::temp_dir().join("zs_svd_test_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.zst0");
+        s.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert_eq!(loaded.names(), s.names());
+        for n in s.names() {
+            assert_eq!(loaded.get(n), s.get(n));
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("zs_svd_test_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.zst0");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(ParamStore::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown param")]
+    fn set_unknown_panics() {
+        let mut s = sample_store();
+        s.set("zzz", Tensor::scalar(0.0));
+    }
+}

@@ -1,0 +1,145 @@
+//! Paper-style table rendering (markdown + aligned ASCII) used by every
+//! bench harness and by EXPERIMENTS.md generation.
+
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(),
+                   "row width {} != header width {}", cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Aligned ASCII (stdout of the bench harnesses).
+    pub fn to_ascii(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], w: &[usize], out: &mut String| {
+            let parts: Vec<String> = cells
+                .iter()
+                .zip(w)
+                .map(|(c, &wi)| format!("{c:<wi$}"))
+                .collect();
+            let _ = writeln!(out, "| {} |", parts.join(" | "));
+        };
+        line(&self.headers, &w, &mut out);
+        let sep: Vec<String> = w.iter().map(|&wi| "-".repeat(wi)).collect();
+        let _ = writeln!(out, "|-{}-|", sep.join("-|-"));
+        for r in &self.rows {
+            line(r, &w, &mut out);
+        }
+        out
+    }
+
+    /// GitHub-flavored markdown (EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(out, "|{}|", vec!["---"; self.headers.len()].join("|"));
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        out
+    }
+
+    /// Append the markdown form to a results file (created if absent).
+    pub fn append_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        writeln!(f, "\n{}", self.to_markdown())
+    }
+}
+
+/// Numeric formatting helpers matching the paper's precision conventions.
+pub fn f2(v: f64) -> String {
+    if !v.is_finite() {
+        return "inf".into();
+    }
+    if v >= 10_000.0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn acc2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_alignment() {
+        let mut t = Table::new("T", &["method", "ppl"]);
+        t.row(vec!["zs-svd".into(), "8.20".into()]);
+        t.row(vec!["svd-llm-longer".into(), "9.50".into()]);
+        let s = t.to_ascii();
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[1].contains("method"));
+        // all data lines equal width
+        assert_eq!(lines[2].len(), lines[3].len());
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("X", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("|---|---|"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("X", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(f2(8.204), "8.20");
+        assert_eq!(f2(57057.3), "57057");
+        assert_eq!(f2(f64::INFINITY), "inf");
+        assert_eq!(pct(9.09), "9.1");
+        assert_eq!(acc2(0.547), "0.55");
+    }
+}

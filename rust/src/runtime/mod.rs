@@ -1,0 +1,114 @@
+//! PJRT runtime: load AOT HLO text, compile once, execute from the hot path.
+//!
+//! This wraps the `xla` crate exactly as /opt/xla-example/load_hlo does:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`.  Artifacts are compiled lazily and cached
+//! per file; Python is never involved.
+
+pub mod session;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::model::Manifest;
+use crate::tensor::Tensor;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the artifact directory produced by `make artifacts`.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)
+            .map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts dir: `$ZS_ARTIFACTS` or `<crate root>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("ZS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Runtime::load(&Self::default_dir())
+    }
+
+    fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {file}"))?,
+        );
+        self.cache
+            .borrow_mut()
+            .insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (so first-request latency is predictable).
+    pub fn warmup(&self, file: &str) -> Result<()> {
+        self.executable(file).map(|_| ())
+    }
+
+    /// Execute an artifact with ordered literal inputs; returns the
+    /// decomposed output tuple (aot.py lowers with return_tuple=True).
+    pub fn exec(&self, file: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(file)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {file}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {file}"))?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute and convert every output to a host `Tensor` (f32 outputs only).
+    pub fn exec_tensors(&self, file: &str, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        self.exec(file, inputs)?
+            .iter()
+            .map(Tensor::from_literal)
+            .collect()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_and_lists_configs() {
+        let rt = Runtime::load_default().expect("run `make artifacts` first");
+        assert!(rt.manifest.configs.contains_key("tiny"));
+        assert_eq!(rt.compiled_count(), 0); // lazy
+    }
+}

@@ -1,0 +1,252 @@
+//! Typed execution facade over a (Runtime, config) pair.
+//!
+//! Each method assembles the exact ordered literal list the artifact's
+//! manifest signature declares, executes, and unpacks outputs into host
+//! types.  All request-path model math goes through here.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use super::Runtime;
+use crate::model::{ConfigMeta, ParamStore};
+use crate::tensor::{IntTensor, Mat, Tensor};
+
+/// Per-site calibration statistics accumulated from the moments artifact.
+#[derive(Clone, Debug)]
+pub struct SiteMoments {
+    pub site: String,
+    /// Σ X Xᵀ over all calibration tokens (n×n)
+    pub xx: Mat,
+    /// Σ x (n)
+    pub sum: Vec<f32>,
+    /// Σ |x| (n)
+    pub abssum: Vec<f32>,
+    /// token count the sums were taken over
+    pub count: usize,
+}
+
+pub struct Session<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: ConfigMeta,
+}
+
+impl<'rt> Session<'rt> {
+    pub fn new(rt: &'rt Runtime, config: &str) -> Session<'rt> {
+        Session { rt, cfg: rt.manifest.config(config).clone() }
+    }
+
+    fn param_literals(&self, params: &ParamStore) -> Result<Vec<xla::Literal>> {
+        params.check_matches(&self.cfg)?;
+        params.ordered().iter().map(|t| t.to_literal()).collect()
+    }
+
+    /// Dense forward: mean loss + logits. Dispatches to the b1 artifact for
+    /// single-sequence batches when available.
+    pub fn fwd(&self, params: &ParamStore, tokens: &IntTensor) -> Result<(f32, Tensor)> {
+        let file = self.fwd_file(tokens)?;
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(tokens.to_literal()?);
+        let outs = self.rt.exec(&file, &inputs)?;
+        ensure!(outs.len() == 2, "fwd returned {} outputs", outs.len());
+        let loss = Tensor::from_literal(&outs[0])?.data[0];
+        let logits = Tensor::from_literal(&outs[1])?;
+        Ok((loss, logits))
+    }
+
+    fn fwd_file(&self, tokens: &IntTensor) -> Result<String> {
+        let b = tokens.shape[0];
+        ensure!(tokens.shape.len() == 2 && tokens.shape[1] == self.cfg.seq_len + 1,
+                "tokens must be (B, T+1), got {:?}", tokens.shape);
+        if b == self.cfg.batch {
+            Ok(self.cfg.fwd.file.clone())
+        } else if b == 1 {
+            self.cfg
+                .fwd_b1
+                .as_ref()
+                .map(|a| a.file.clone())
+                .ok_or_else(|| anyhow::anyhow!("no b1 artifact for {}", self.cfg.name))
+        } else {
+            anyhow::bail!("unsupported batch {b} (artifacts: {} and 1)", self.cfg.batch)
+        }
+    }
+
+    /// Calibration gradients for every target matrix.
+    pub fn grads(&self, params: &ParamStore, tokens: &IntTensor)
+                 -> Result<(f32, BTreeMap<String, Mat>)> {
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(tokens.to_literal()?);
+        let outs = self.rt.exec_tensors(&self.cfg.grads.file, &inputs)?;
+        ensure!(outs.len() == 1 + self.cfg.targets.len());
+        let loss = outs[0].data[0];
+        let mut grads = BTreeMap::new();
+        for (t, g) in self.cfg.targets.iter().zip(&outs[1..]) {
+            grads.insert(t.name.clone(), g.to_mat());
+        }
+        Ok((loss, grads))
+    }
+
+    /// One moments pass; `accumulate_moments` sums over calibration batches.
+    pub fn moments(&self, params: &ParamStore, tokens: &IntTensor)
+                   -> Result<Vec<SiteMoments>> {
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(tokens.to_literal()?);
+        let outs = self.rt.exec_tensors(&self.cfg.moments.file, &inputs)?;
+        // outputs: loss (graph anchor, see aot.py), then 3 per site
+        ensure!(outs.len() == 1 + 3 * self.cfg.sites.len());
+        let count = tokens.shape[0] * (tokens.shape[1] - 1);
+        let mut result = Vec::with_capacity(self.cfg.sites.len());
+        for (i, s) in self.cfg.sites.iter().enumerate() {
+            result.push(SiteMoments {
+                site: s.name.clone(),
+                xx: outs[1 + 3 * i].to_mat(),
+                sum: outs[1 + 3 * i + 1].data.clone(),
+                abssum: outs[1 + 3 * i + 2].data.clone(),
+                count,
+            });
+        }
+        Ok(result)
+    }
+
+    /// Accumulate moments over several calibration batches.
+    pub fn accumulate_moments(&self, params: &ParamStore, batches: &[IntTensor])
+                              -> Result<Vec<SiteMoments>> {
+        ensure!(!batches.is_empty());
+        let mut acc = self.moments(params, &batches[0])?;
+        for b in &batches[1..] {
+            let next = self.moments(params, b)?;
+            for (a, n) in acc.iter_mut().zip(next) {
+                a.xx.add_assign(&n.xx);
+                for (x, y) in a.sum.iter_mut().zip(&n.sum) {
+                    *x += y;
+                }
+                for (x, y) in a.abssum.iter_mut().zip(&n.abssum) {
+                    *x += y;
+                }
+                a.count += n.count;
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Average gradients (and Fisher diag Σg²) over calibration batches.
+    pub fn mean_grads(&self, params: &ParamStore, batches: &[IntTensor])
+                      -> Result<(f32, BTreeMap<String, Mat>, BTreeMap<String, Mat>)> {
+        ensure!(!batches.is_empty());
+        let mut mean_loss = 0.0f32;
+        let mut mean: BTreeMap<String, Mat> = BTreeMap::new();
+        let mut fisher: BTreeMap<String, Mat> = BTreeMap::new();
+        for (i, b) in batches.iter().enumerate() {
+            let (loss, grads) = self.grads(params, b)?;
+            mean_loss += loss;
+            for (name, g) in grads {
+                let e = mean.entry(name.clone()).or_insert_with(|| Mat::zeros(g.rows, g.cols));
+                e.add_assign(&g);
+                let f = fisher.entry(name).or_insert_with(|| Mat::zeros(g.rows, g.cols));
+                for (fv, gv) in f.data.iter_mut().zip(&g.data) {
+                    *fv += gv * gv;
+                }
+            }
+            let _ = i;
+        }
+        let inv = 1.0 / batches.len() as f32;
+        mean_loss *= inv;
+        for m in mean.values_mut() {
+            m.scale(inv);
+        }
+        for f in fisher.values_mut() {
+            f.scale(inv);
+        }
+        Ok((mean_loss, mean, fisher))
+    }
+
+    /// One Adam step via the train artifact; updates params/m/v in place.
+    pub fn train_step(&self, params: &mut ParamStore, m: &mut ParamStore,
+                      v: &mut ParamStore, step: i32, lr: f32,
+                      tokens: &IntTensor) -> Result<f32> {
+        let p = self.cfg.params.len();
+        let mut inputs = self.param_literals(params)?;
+        inputs.extend(self.param_literals(m)?);
+        inputs.extend(self.param_literals(v)?);
+        inputs.push(IntTensor::scalar(step).to_literal()?);
+        inputs.push(Tensor::scalar(lr).to_literal()?);
+        inputs.push(tokens.to_literal()?);
+        let outs = self.rt.exec_tensors(&self.cfg.train.file, &inputs)?;
+        ensure!(outs.len() == 3 * p + 1);
+        let names: Vec<String> = self.cfg.params.iter().map(|q| q.name.clone()).collect();
+        for (i, name) in names.iter().enumerate() {
+            params.set(name, outs[i].clone());
+            m.set(name, outs[p + i].clone());
+            v.set(name, outs[2 * p + i].clone());
+        }
+        Ok(outs[3 * p].data[0])
+    }
+
+    /// Low-rank (Pallas-kernel) forward at a given ratio tag ("60", "40",
+    /// "60_b1", ...).  `factors[target] = (wu, wv)`; ranks smaller than the
+    /// artifact's uniform rank are zero-padded (numerically exact — see
+    /// `test_lowrank_zero_rank_component` on the python side).
+    pub fn lowrank_fwd(&self, tag: &str, params: &ParamStore,
+                       factors: &BTreeMap<String, (Mat, Mat)>,
+                       tokens: &IntTensor) -> Result<(f32, Tensor)> {
+        let lm = self
+            .cfg
+            .lowrank
+            .get(tag)
+            .ok_or_else(|| anyhow::anyhow!("no lowrank artifact `{tag}`"))?;
+        let mut inputs: Vec<xla::Literal> = Vec::new();
+        for name in self.cfg.base_param_names() {
+            inputs.push(params.get(&name).to_literal()?);
+        }
+        for t in &self.cfg.targets {
+            let k_art = lm.ranks[&t.name];
+            let (wu, wv) = factors
+                .get(&t.name)
+                .ok_or_else(|| anyhow::anyhow!("missing factors for {}", t.name))?;
+            ensure!(wu.cols == wv.rows, "factor rank mismatch for {}", t.name);
+            ensure!(wu.cols <= k_art,
+                    "{}: rank {} exceeds artifact rank {k_art}", t.name, wu.cols);
+            inputs.push(pad_wu(wu, k_art).to_literal()?);
+            inputs.push(pad_wv(wv, k_art).to_literal()?);
+        }
+        inputs.push(tokens.to_literal()?);
+        let outs = self.rt.exec(&lm.art.file, &inputs)?;
+        let loss = Tensor::from_literal(&outs[0])?.data[0];
+        let logits = Tensor::from_literal(&outs[1])?;
+        Ok((loss, logits))
+    }
+}
+
+fn pad_wu(wu: &Mat, k: usize) -> Tensor {
+    let mut out = Mat::zeros(wu.rows, k);
+    for r in 0..wu.rows {
+        out.row_mut(r)[..wu.cols].copy_from_slice(wu.row(r));
+    }
+    Tensor::from_mat(&out)
+}
+
+fn pad_wv(wv: &Mat, k: usize) -> Tensor {
+    let mut out = Mat::zeros(k, wv.cols);
+    for r in 0..wv.rows {
+        out.row_mut(r).copy_from_slice(wv.row(r));
+    }
+    Tensor::from_mat(&out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_factors_shapes() {
+        let wu = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let p = pad_wu(&wu, 4);
+        assert_eq!(p.shape, vec![3, 4]);
+        assert_eq!(p.data[0..2], [1., 2.]);
+        assert_eq!(p.data[2..4], [0., 0.]);
+        let wv = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let q = pad_wv(&wv, 4);
+        assert_eq!(q.shape, vec![4, 3]);
+        assert_eq!(q.data[6..], [0.0; 6]);
+    }
+}

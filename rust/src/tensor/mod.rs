@@ -1,0 +1,282 @@
+//! Dense tensors: `Mat` (2-D f32, row-major — the linalg workhorse) and
+//! `Tensor` (n-D f32) + `IntTensor` (i32 token buffers), with conversions to
+//! and from `xla::Literal` for the PJRT runtime boundary.
+
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Mat
+// ---------------------------------------------------------------------------
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize, std: f32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 0.0, std);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness on larger matrices
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scaled(&self, s: f32) -> Mat {
+        let mut out = self.clone();
+        out.scale(s);
+        out
+    }
+
+    /// Frobenius inner product <A, B> = tr(A^T B).
+    pub fn dot(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| *a as f64 * *b as f64)
+            .sum()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.dot(self).sqrt()
+    }
+
+    /// Add `lambda` to the diagonal (ridge for whitening stability).
+    pub fn add_diag(&mut self, lambda: f32) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += lambda;
+        }
+    }
+
+    pub fn diag(&self) -> Vec<f32> {
+        (0..self.rows.min(self.cols)).map(|i| self.at(i, i)).collect()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tensor (n-D f32) and IntTensor (n-D i32)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// View a 2-D tensor as a Mat (copy).
+    pub fn to_mat(&self) -> Mat {
+        assert_eq!(self.shape.len(), 2, "to_mat wants 2-D, got {:?}", self.shape);
+        Mat::from_vec(self.shape[0], self.shape[1], self.data.clone())
+    }
+
+    pub fn from_mat(m: &Mat) -> Tensor {
+        Tensor { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        anyhow::ensure!(
+            data.len() == dims.iter().product::<usize>(),
+            "literal size mismatch: {} vs {:?}", data.len(), dims
+        );
+        Ok(Tensor { shape: dims, data })
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> IntTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        IntTensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: i32) -> IntTensor {
+        IntTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_indexing_roundtrip() {
+        let mut m = Mat::zeros(3, 4);
+        *m.at_mut(1, 2) = 5.0;
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1)[2], 5.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(&mut rng, 37, 53, 1.0);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_entries() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t.at(2, 1), m.at(1, 2));
+        assert_eq!((t.rows, t.cols), (3, 2));
+    }
+
+    #[test]
+    fn frob_and_dot() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        assert!((a.frob_norm() - (30.0f64).sqrt()).abs() < 1e-9);
+        let b = Mat::eye(2);
+        assert!((a.dot(&b) - 5.0).abs() < 1e-9); // trace
+    }
+
+    #[test]
+    fn add_diag_ridge() {
+        let mut m = Mat::zeros(3, 3);
+        m.add_diag(0.5);
+        assert_eq!(m.diag(), vec![0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn tensor_mat_roundtrip() {
+        let mut rng = Rng::new(2);
+        let m = Mat::randn(&mut rng, 4, 5, 1.0);
+        let t = Tensor::from_mat(&m);
+        assert_eq!(t.to_mat(), m);
+    }
+
+    #[test]
+    fn tensor_shapes() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        let s = Tensor::scalar(7.0);
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(s.data, vec![7.0]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Rust-driven pretraining: the Adam update lives inside the AOT
+//! `train_step` HLO; this module owns the loop, LR schedule, logging and
+//! checkpointing.  Used to produce the "pretrained" weights every
+//! compression experiment starts from (DESIGN.md §2).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::model::{init, ParamStore};
+use crate::runtime::session::Session;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 300, lr: 3e-3, warmup: 30, seed: 7, log_every: 25 }
+    }
+}
+
+/// Warmup + cosine decay to 10% of peak.
+pub fn lr_at(cfg: &TrainConfig, step: usize) -> f32 {
+    if step < cfg.warmup {
+        cfg.lr * (step + 1) as f32 / cfg.warmup as f32
+    } else {
+        let t = (step - cfg.warmup) as f32 / (cfg.steps - cfg.warmup).max(1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+        cfg.lr * (0.1 + 0.9 * cos)
+    }
+}
+
+pub struct TrainResult {
+    pub params: ParamStore,
+    pub losses: Vec<f32>,
+}
+
+/// Train from scratch on `corpus`; returns weights + the full loss curve.
+pub fn train(session: &Session, corpus: &Corpus, tc: &TrainConfig,
+             quiet: bool) -> Result<TrainResult> {
+    let cfg = &session.cfg;
+    let mut rng = Rng::new(tc.seed);
+    let mut params = init::init_params(cfg, &mut rng);
+    let mut m = init::zero_state(cfg);
+    let mut v = init::zero_state(cfg);
+    let mut losses = Vec::with_capacity(tc.steps);
+    let t0 = std::time::Instant::now();
+
+    for step in 0..tc.steps {
+        let batch = corpus.sample_batch(&mut rng, cfg.batch, cfg.seq_len);
+        let lr = lr_at(tc, step);
+        let loss = session.train_step(&mut params, &mut m, &mut v,
+                                      step as i32, lr, &batch)?;
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+        losses.push(loss);
+        if !quiet && (step % tc.log_every == 0 || step + 1 == tc.steps) {
+            eprintln!(
+                "  step {step:4}  loss {loss:7.4}  lr {lr:.2e}  ({:.1}s)",
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    Ok(TrainResult { params, losses })
+}
+
+/// Checkpoint path for a (config, family, steps) triple.
+pub fn ckpt_path(dir: &Path, config: &str, family: &str, steps: usize) -> PathBuf {
+    dir.join(format!("ckpt_{config}_{family}_{steps}.zst0"))
+}
+
+/// Load a cached pretrained checkpoint or train + save one.
+///
+/// `family` selects the training-corpus mix ("llama", "vicuna", ...); the
+/// weights, not the architecture, are what differs.
+pub fn ensure_trained(session: &Session, corpus: &Corpus, family: &str,
+                      tc: &TrainConfig, ckpt_dir: &Path) -> Result<ParamStore> {
+    std::fs::create_dir_all(ckpt_dir)?;
+    let path = ckpt_path(ckpt_dir, &session.cfg.name, family, tc.steps);
+    if path.exists() {
+        let params = ParamStore::load(&path)?;
+        if params.check_matches(&session.cfg).is_ok() {
+            return Ok(params);
+        }
+        eprintln!("checkpoint {} stale, retraining", path.display());
+    }
+    eprintln!("training {} ({family}, {} steps)...", session.cfg.name, tc.steps);
+    let result = train(session, corpus, tc, false)?;
+    result.params.save(&path)?;
+    // loss curve goes next to the checkpoint for EXPERIMENTS.md
+    let curve: Vec<String> = result.losses.iter().map(|l| format!("{l:.5}")).collect();
+    std::fs::write(path.with_extension("losses.txt"), curve.join("\n"))?;
+    Ok(result.params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let tc = TrainConfig { steps: 100, lr: 1e-3, warmup: 10, ..Default::default() };
+        assert!(lr_at(&tc, 0) < lr_at(&tc, 9));
+        assert!((lr_at(&tc, 9) - 1e-3).abs() < 2e-4);
+        assert!(lr_at(&tc, 99) < 2.0e-4);
+        assert!(lr_at(&tc, 99) >= 1.0e-4 * 0.99);
+    }
+
+    #[test]
+    fn ckpt_path_format() {
+        let p = ckpt_path(Path::new("/tmp"), "tiny", "llama", 300);
+        assert_eq!(p.to_str().unwrap(), "/tmp/ckpt_tiny_llama_300.zst0");
+    }
+}

@@ -1,0 +1,114 @@
+//! In-repo micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Each `benches/*.rs` binary is a `harness = false` cargo bench target that
+//! uses `Bench` for timed sections and `report::Table` for paper-style rows.
+//! `ZS_BENCH_FAST=1` shrinks warmup/iterations so the full suite stays
+//! tractable on the single-core CI box.
+
+use std::time::Instant;
+
+use super::stats::{summarize, Summary};
+
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        if fast_mode() {
+            Bench { warmup: 1, iters: 3 }
+        } else {
+            Bench { warmup: 3, iters: 10 }
+        }
+    }
+}
+
+pub fn fast_mode() -> bool {
+    std::env::var("ZS_BENCH_FAST").map(|v| v != "0").unwrap_or(false)
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup, iters }
+    }
+
+    /// Time `f` (seconds per call) after warmup; returns a Summary.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        summarize(&samples)
+    }
+
+    /// Time `f` and report throughput in `units/s` given units per call.
+    pub fn throughput<F: FnMut()>(&self, units_per_call: f64, f: F) -> (Summary, f64) {
+        let s = self.run(f);
+        let tput = units_per_call / s.median;
+        (s, tput)
+    }
+}
+
+/// One-shot wall-clock measurement (for pipeline-scale timings like Table 8).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1} us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2} s", secs)
+    } else {
+        format!("{:.1} min", secs / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_counts_iters() {
+        let mut calls = 0;
+        let b = Bench::new(2, 5);
+        let s = b.run(|| calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.median >= 0.0);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let b = Bench::new(0, 3);
+        let (_, tput) = b.throughput(100.0, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(tput > 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(5e-6).contains("us"));
+        assert!(fmt_duration(5e-2).contains("ms"));
+        assert!(fmt_duration(5.0).contains("s"));
+        assert!(fmt_duration(600.0).contains("min"));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Tiny CLI argument parser (no clap offline).
+//!
+//! Grammar: `binary <subcommand> [--key value]... [--flag]... [positional]...`
+//! Flags become `true`; everything else is a string looked up with typed
+//! accessors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants a number, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list: `--ratios 0.8,0.6,0.4`.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|x| x.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad number `{x}`")))
+                .collect(),
+        }
+    }
+
+    pub fn str_list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|x| x.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // note: a bare token right after `--flag` would be consumed as its
+        // value (greedy); flags therefore go last or use `--flag=...`.
+        let a = args("compress --ratio 0.6 --method zs-svd out.bin --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("compress"));
+        assert_eq!(a.f64_or("ratio", 1.0), 0.6);
+        assert_eq!(a.get("method"), Some("zs-svd"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.bin"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = args("train --steps=300 --lr=1e-3");
+        assert_eq!(a.usize_or("steps", 0), 300);
+        assert_eq!(a.f64_or("lr", 0.0), 1e-3);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args("run --fast");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn lists() {
+        let a = args("sweep --ratios 0.8,0.6,0.4 --methods zs,svdllm");
+        assert_eq!(a.f64_list_or("ratios", &[]), vec![0.8, 0.6, 0.4]);
+        assert_eq!(a.str_list_or("methods", &[]), vec!["zs", "svdllm"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("eval");
+        assert_eq!(a.usize_or("steps", 7), 7);
+        assert_eq!(a.str_or("model", "tiny"), "tiny");
+        assert_eq!(a.f64_list_or("ratios", &[0.5]), vec![0.5]);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = args("x --bias -0.5");
+        assert_eq!(a.f64_or("bias", 0.0), -0.5);
+    }
+}

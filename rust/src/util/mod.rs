@@ -1,0 +1,9 @@
+//! Dependency-free substrates: RNG, JSON, CLI parsing, statistics, the
+//! property-test driver and the bench harness (DESIGN.md §4).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

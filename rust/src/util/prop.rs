@@ -1,0 +1,88 @@
+//! In-repo property-testing driver (no proptest offline).
+//!
+//! `forall` runs a generator+checker loop over deterministic seeds and, on
+//! failure, reports the failing case index and seed so it can be replayed
+//! with `replay`.  Used by `rust/tests/proptests.rs` for the linalg and
+//! zero-sum-selection invariants.
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `check(gen(rng))` for `cases` deterministic seeds; panic with the
+/// seed on the first failure.
+pub fn forall<T, G, C>(name: &str, cases: usize, mut gen: G, mut check: C)
+where
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property `{name}` failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay with prop::replay({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single case by seed (for debugging a forall failure).
+pub fn replay<T, G, C>(seed: u64, mut gen: G, mut check: C)
+where
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    let input = gen(&mut rng);
+    check(&input).expect("replayed case failed");
+}
+
+/// Assert helper producing `Result` for use inside checkers.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("u64-parity", 32, |r| r.next_u64(), |x| {
+            if x % 2 == 0 || x % 2 == 1 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn reports_failure_with_seed() {
+        forall("always-fails", 4, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        forall("collect", 8, |r| r.next_u64(), |x| {
+            first.push(*x);
+            Ok(())
+        });
+        let mut second = Vec::new();
+        forall("collect", 8, |r| r.next_u64(), |x| {
+            second.push(*x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,148 @@
+//! End-to-end integration over the real AOT artifacts (requires
+//! `make artifacts`): every rust↔PJRT ABI surface gets exercised once.
+
+use std::collections::BTreeMap;
+
+use zs_svd::data::{default_world, training_corpus};
+use zs_svd::linalg::{factor, matmul, svd};
+use zs_svd::model::init::{init_params, zero_state};
+use zs_svd::runtime::session::Session;
+use zs_svd::runtime::Runtime;
+use zs_svd::tensor::Mat;
+use zs_svd::trainer::{train, TrainConfig};
+use zs_svd::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::load_default().expect("run `make artifacts` first")
+}
+
+#[test]
+fn fwd_loss_near_uniform_at_init() {
+    let rt = runtime();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(1);
+    let params = init_params(&sess.cfg, &mut rng);
+    let world = default_world();
+    let corpus = training_corpus("llama", &world);
+    let batch = corpus.sample_batch(&mut rng, sess.cfg.batch, sess.cfg.seq_len);
+    let (loss, logits) = sess.fwd(&params, &batch).unwrap();
+    // fresh init => loss ~ ln(256) = 5.545
+    assert!((loss - 5.545).abs() < 0.4, "loss {loss}");
+    assert_eq!(logits.shape,
+               vec![sess.cfg.batch, sess.cfg.seq_len, sess.cfg.vocab]);
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn b1_artifact_matches_config() {
+    let rt = runtime();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(2);
+    let params = init_params(&sess.cfg, &mut rng);
+    let world = default_world();
+    let corpus = training_corpus("llama", &world);
+    let batch = corpus.sample_batch(&mut rng, 1, sess.cfg.seq_len);
+    let (loss, logits) = sess.fwd(&params, &batch).unwrap();
+    assert!(loss.is_finite());
+    assert_eq!(logits.shape, vec![1, sess.cfg.seq_len, sess.cfg.vocab]);
+}
+
+#[test]
+fn train_step_learns() {
+    let rt = runtime();
+    let sess = Session::new(&rt, "tiny");
+    let world = default_world();
+    let corpus = training_corpus("llama", &world);
+    let tc = TrainConfig { steps: 25, lr: 3e-3, warmup: 5, seed: 3, log_every: 100 };
+    let result = train(&sess, &corpus, &tc, true).unwrap();
+    let first = result.losses[0];
+    let last = *result.losses.last().unwrap();
+    assert!(last < first - 0.8,
+            "no learning: first {first}, last {last}");
+}
+
+#[test]
+fn grads_and_moments_consistent() {
+    let rt = runtime();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(4);
+    let params = init_params(&sess.cfg, &mut rng);
+    let world = default_world();
+    let corpus = training_corpus("llama", &world);
+    let b1 = corpus.calibration_batch(&mut rng, sess.cfg.batch, sess.cfg.seq_len);
+    let b2 = corpus.calibration_batch(&mut rng, sess.cfg.batch, sess.cfg.seq_len);
+
+    let (loss, grads) = sess.grads(&params, &b1).unwrap();
+    assert!(loss.is_finite());
+    assert_eq!(grads.len(), sess.cfg.targets.len());
+    for (name, g) in &grads {
+        let t = sess.cfg.target(name);
+        assert_eq!((g.rows, g.cols), t.shape);
+        assert!(g.is_finite(), "{name}");
+        assert!(g.frob_norm() > 0.0, "{name} grad is zero");
+    }
+
+    let moments = sess.accumulate_moments(&params, &[b1, b2]).unwrap();
+    assert_eq!(moments.len(), sess.cfg.sites.len());
+    for sm in &moments {
+        let n = sess.cfg.site_dim(&sm.site);
+        assert_eq!((sm.xx.rows, sm.xx.cols), (n, n));
+        assert_eq!(sm.count, 2 * sess.cfg.batch * sess.cfg.seq_len);
+        for i in 0..n {
+            assert!(sm.xx.at(i, i) >= -1e-3);
+            for j in 0..n {
+                let d = (sm.xx.at(i, j) - sm.xx.at(j, i)).abs();
+                assert!(d <= 1e-2 * (1.0 + sm.xx.at(i, j).abs()), "{}", sm.site);
+            }
+        }
+    }
+}
+
+#[test]
+fn lowrank_fullrank_factorization_matches_dense() {
+    // Factor every target at the artifact's uniform rank via SVD of the true
+    // weight; the pallas low-rank forward must match the *rank-truncated
+    // dense recomposition* run through the dense artifact.
+    let rt = runtime();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(5);
+    let params = init_params(&sess.cfg, &mut rng);
+    let world = default_world();
+    let corpus = training_corpus("llama", &world);
+    let batch = corpus.sample_batch(&mut rng, sess.cfg.batch, sess.cfg.seq_len);
+
+    let tag = "80";
+    let lm = sess.cfg.lowrank.get(tag).unwrap().clone();
+    let mut factors: BTreeMap<String, (Mat, Mat)> = BTreeMap::new();
+    let mut dense = params.clone();
+    for t in &sess.cfg.targets {
+        let w = params.get(&t.name).to_mat();
+        let s = svd(&w);
+        let k = lm.ranks[&t.name];
+        let (wu, wv) = factor(&s, k);
+        let rec = matmul(&wu, &wv);
+        dense.set(&t.name, zs_svd::tensor::Tensor::from_mat(&rec));
+        factors.insert(t.name.clone(), (wu, wv));
+    }
+
+    let (loss_dense, logits_dense) = sess.fwd(&dense, &batch).unwrap();
+    let (loss_lr, logits_lr) = sess.lowrank_fwd(tag, &params, &factors, &batch).unwrap();
+    assert!((loss_dense - loss_lr).abs() < 5e-3,
+            "dense {loss_dense} vs lowrank {loss_lr}");
+    let max_dev = logits_dense
+        .data
+        .iter()
+        .zip(&logits_lr.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dev < 0.05, "max logit deviation {max_dev}");
+}
+
+#[test]
+fn adam_state_zero_init_matches_spec() {
+    let rt = runtime();
+    let sess = Session::new(&rt, "tiny");
+    let z = zero_state(&sess.cfg);
+    assert_eq!(z.len(), sess.cfg.params.len());
+    assert!(z.ordered().iter().all(|t| t.data.iter().all(|&v| v == 0.0)));
+}

@@ -1,0 +1,169 @@
+//! Pipeline-level integration: compression quality gates on a (briefly)
+//! trained model.  These are the "does the paper's method actually behave
+//! like the paper" tests — ZS-SVD must beat plain SVD, corrections must not
+//! hurt, the zero-shot scorer must beat chance after training, and the plan
+//! accounting must hit its budget.
+
+use std::path::PathBuf;
+
+use zs_svd::compress::{calibrate, compress_zs, Costing, Strategy, ZsOpts};
+use zs_svd::coordinator::{self, Method};
+use zs_svd::data::{self, TaskFamily};
+use zs_svd::eval::{self, EvalSpec};
+use zs_svd::runtime::session::Session;
+use zs_svd::runtime::Runtime;
+use zs_svd::trainer::{ensure_trained, TrainConfig};
+
+/// Shared pretrained context (300 steps ≈ 80 s cold, checkpoint-cached —
+/// the same checkpoint the bench harnesses use).
+fn prepared(rt: &Runtime) -> (Session<'_>, zs_svd::model::ParamStore,
+                              data::World, data::Corpus) {
+    let session = Session::new(rt, "tiny");
+    let world = data::default_world();
+    let corpus = data::training_corpus("llama", &world);
+    let tc = TrainConfig { steps: 300, lr: 3e-3, warmup: 30, seed: 7,
+                           log_every: 1000 };
+    let ckpt_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts").join("ckpts");
+    let params = ensure_trained(&session, &corpus, "llama", &tc, &ckpt_dir)
+        .expect("train");
+    (session, params, world, corpus)
+}
+
+#[test]
+fn zs_svd_beats_plain_svd_under_aggressive_compression() {
+    let rt = Runtime::load_default().unwrap();
+    let (session, params, _world, corpus) = prepared(&rt);
+    let calib = calibrate(&session, &params, &corpus, 2, 0xCA11B).unwrap();
+    let ratio = 0.15;
+
+    let zs = compress_zs(&session, &params, &calib, &ZsOpts::new(ratio)).unwrap();
+    let plain = zs_svd::compress::baselines::svd_plain(&session, &params, ratio);
+
+    let ppl = |plan: &zs_svd::compress::CompressionPlan| {
+        eval::perplexity(&session, &plan.apply(&params), &corpus, 2).unwrap()
+    };
+    let p_zs = ppl(&zs);
+    let p_plain = ppl(&plain);
+    assert!(p_zs < p_plain,
+            "zs-svd ({p_zs:.3}) should beat plain svd ({p_plain:.3}) at {ratio}");
+}
+
+#[test]
+fn whitened_beats_raw_truncation() {
+    let rt = Runtime::load_default().unwrap();
+    let (session, params, _world, corpus) = prepared(&rt);
+    let calib = calibrate(&session, &params, &corpus, 2, 0xCA11B).unwrap();
+    let ratio = 0.15;
+    let svdllm = zs_svd::compress::baselines::svdllm(&session, &params, &calib, ratio);
+    let plain = zs_svd::compress::baselines::svd_plain(&session, &params, ratio);
+    let ppl = |plan: &zs_svd::compress::CompressionPlan| {
+        eval::perplexity(&session, &plan.apply(&params), &corpus, 2).unwrap()
+    };
+    assert!(ppl(&svdllm) < ppl(&plain), "whitening must help");
+}
+
+#[test]
+fn correction_does_not_hurt() {
+    let rt = Runtime::load_default().unwrap();
+    let (session, params, _world, corpus) = prepared(&rt);
+    let calib = calibrate(&session, &params, &corpus, 2, 0xCA11B).unwrap();
+    let ratio = 0.15;
+    let plain = compress_zs(&session, &params, &calib, &ZsOpts::new(ratio)).unwrap();
+    let fixed = compress_zs(&session, &params, &calib,
+                            &ZsOpts { correction_iters: 1, ..ZsOpts::new(ratio) })
+        .unwrap();
+    let ppl = |plan: &zs_svd::compress::CompressionPlan| {
+        eval::perplexity(&session, &plan.apply(&params), &corpus, 2).unwrap()
+    };
+    let (p0, p1) = (ppl(&plain), ppl(&fixed));
+    assert!(p1 <= p0 * 1.05, "1x correction hurt badly: {p0:.3} -> {p1:.3}");
+}
+
+#[test]
+fn budget_hit_across_costings() {
+    let rt = Runtime::load_default().unwrap();
+    let (session, params, _world, corpus) = prepared(&rt);
+    let calib = calibrate(&session, &params, &corpus, 2, 0xCA11B).unwrap();
+    for (ratio, costing) in [(0.35, Costing::Standard), (0.35, Costing::Remap),
+                             (0.15, Costing::Standard)] {
+        let plan = compress_zs(&session, &params, &calib,
+                               &ZsOpts { costing, ..ZsOpts::new(ratio) }).unwrap();
+        let achieved = plan.achieved_ratio();
+        assert!(achieved <= ratio + 0.02,
+                "{costing:?}@{ratio}: achieved {achieved}");
+        // heterogeneous ranks should actually be heterogeneous
+        let ranks = plan.ranks();
+        let distinct: std::collections::BTreeSet<usize> =
+            ranks.values().copied().collect();
+        assert!(distinct.len() > 2, "ranks suspiciously uniform: {distinct:?}");
+    }
+}
+
+#[test]
+fn hq_matches_footprint_of_plain_at_double_depth() {
+    let rt = Runtime::load_default().unwrap();
+    let (session, params, _world, corpus) = prepared(&rt);
+    let calib = calibrate(&session, &params, &corpus, 2, 0xCA11B).unwrap();
+    let ratio = 0.2;
+    let hq = compress_zs(&session, &params, &calib,
+                         &ZsOpts { hq: true, ..ZsOpts::new(ratio) }).unwrap();
+    // HQ = selection at 2·ratio retention, then int8 => footprint ≈ ratio
+    assert!((hq.achieved_ratio() - ratio).abs() < 0.03,
+            "hq achieved {}", hq.achieved_ratio());
+}
+
+#[test]
+fn zeroshot_beats_chance_after_training() {
+    let rt = Runtime::load_default().unwrap();
+    let (session, params, world, _corpus) = prepared(&rt);
+    // arc_e (2 options => chance 0.5) is the most learnable family
+    let instances = data::generate_set(&world, TaskFamily::ArcESyn, 40, 0xE1);
+    let acc = eval::score_tasks(&session, &params, &instances).unwrap();
+    assert!(acc > 0.6, "arc_e-syn accuracy {acc} not above chance");
+    // mathqa (4 options => chance 0.25)
+    let math = data::generate_set(&world, TaskFamily::MathqaSyn, 40, 0xE1);
+    let macc = eval::score_tasks(&session, &params, &math).unwrap();
+    assert!(macc > 0.3, "mathqa-syn accuracy {macc} at chance");
+}
+
+#[test]
+fn selection_strategies_rank_as_in_table6() {
+    // zero-sum must beat the loss-blind sigma rule at aggressive ratios
+    let rt = Runtime::load_default().unwrap();
+    let (session, params, _world, corpus) = prepared(&rt);
+    let calib = calibrate(&session, &params, &corpus, 2, 0xCA11B).unwrap();
+    let ratio = 0.15;
+    let ppl_of = |strategy| {
+        let plan = compress_zs(&session, &params, &calib,
+                               &ZsOpts { strategy, ..ZsOpts::new(ratio) })
+            .unwrap();
+        eval::perplexity(&session, &plan.apply(&params), &corpus, 2).unwrap()
+    };
+    let zs = ppl_of(Strategy::ZeroSum);
+    let most_neg_unordered = ppl_of(Strategy::MostNegative { per_w_order: false });
+    assert!(zs < most_neg_unordered,
+            "zero-sum {zs:.3} vs most-neg-unordered {most_neg_unordered:.3}");
+}
+
+#[test]
+fn coordinator_dispatch_covers_all_methods() {
+    let rt = Runtime::load_default().unwrap();
+    let mut cfg = zs_svd::config::ExperimentConfig::default();
+    cfg.train_steps = 300;
+    cfg.calib_batches = 2;
+    let p = coordinator::prepare(&rt, &cfg).unwrap();
+    let ratio = 0.3;
+    for m in [Method::Svd, Method::Fwsvd, Method::Asvd, Method::SvdLlm,
+              Method::DobiSim { sweeps: 1 }, Method::zs(ratio),
+              Method::zs_remap(ratio),
+              Method::Prune(zs_svd::compress::baselines::PruneScore::WandaSp),
+              Method::SliceGpt] {
+        let plan = coordinator::run_method(&p, &m, ratio).unwrap();
+        assert!(!plan.targets.is_empty(), "{}", plan.method);
+        let spec = EvalSpec { ppl_batches: 1, instances_per_family: 4,
+                              task_seed: 1 };
+        let r = coordinator::evaluate_plan(&p, Some(&plan), &spec).unwrap();
+        assert!(r.ppl_of("wiki-syn").is_finite(), "{}", plan.method);
+    }
+}

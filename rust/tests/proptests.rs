@@ -1,0 +1,344 @@
+//! Property-based tests over the linalg substrate and the coordinator
+//! invariants (zero-sum selection, budget accounting, plans, quantization,
+//! JSON/checkpoint round-trips) using the in-repo `prop::forall` driver.
+
+use zs_svd::compress::selection::{k_threshold, select, Costing, Strategy};
+use zs_svd::compress::whiten::{decompose_target, factorize, recompose};
+use zs_svd::linalg::{cholesky, cholesky_ridge, effective_rank, gram, matmul,
+                     matmul_bt, reconstruct, solve_lower, solve_lower_t, svd};
+use zs_svd::linalg::qr::qr;
+use zs_svd::model::quant::{int8_error_bound, quant_dequant_int8};
+use zs_svd::tensor::Mat;
+use zs_svd::util::json;
+use zs_svd::util::prop::forall;
+use zs_svd::util::rng::Rng;
+
+const CASES: usize = 24;
+
+fn rand_mat(rng: &mut Rng, max_dim: usize) -> Mat {
+    let m = rng.range(1, max_dim + 1);
+    let n = rng.range(1, max_dim + 1);
+    Mat::randn(rng, m, n, 1.0)
+}
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+// ---------------------------------------------------------------------------
+// linalg
+// ---------------------------------------------------------------------------
+
+#[test]
+fn svd_reconstruction_and_orthogonality() {
+    forall("svd-reconstruct", CASES, |rng| rand_mat(rng, 40), |a| {
+        let s = svd(a);
+        let r = a.rows.min(a.cols);
+        let rec = reconstruct(&s, r);
+        let err = a.sub(&rec).frob_norm();
+        if err > 1e-3 * (1.0 + a.frob_norm()) {
+            return Err(format!("reconstruction error {err}"));
+        }
+        for i in 0..r {
+            for j in i..r {
+                let mut d = 0.0f64;
+                for row in 0..s.u.rows {
+                    d += s.u.data[row * s.u.cols + i] as f64
+                        * s.u.data[row * s.u.cols + j] as f64;
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                if (d - want).abs() > 1e-3 {
+                    return Err(format!("U not orthonormal at ({i},{j}): {d}"));
+                }
+            }
+        }
+        for w in s.sigma.windows(2) {
+            if w[0] < w[1] - 1e-6 || w[1] < -1e-6 {
+                return Err(format!("sigma not sorted: {:?}", s.sigma));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn svd_truncation_energy_identity() {
+    forall("eckart-young", CASES, |rng| rand_mat(rng, 24), |a| {
+        let s = svd(a);
+        let r = s.sigma.len();
+        let k = r / 2;
+        let err2 = a.sub(&reconstruct(&s, k)).frob_norm().powi(2);
+        let tail: f64 = s.sigma[k..].iter().map(|&x| (x as f64).powi(2)).sum();
+        if tail > 1e-9 && !close(err2, tail, 2e-2) {
+            return Err(format!("err² {err2} vs tail {tail}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cholesky_roundtrip_and_solves() {
+    forall("cholesky", CASES, |rng| {
+        let n = rng.range(1, 32);
+        let a = Mat::randn(rng, n + 4, n, 1.0);
+        let mut c = gram(&a);
+        c.add_diag(0.05);
+        let k = rng.range(1, 6);
+        let b = Mat::randn(rng, n, k, 1.0);
+        (c, b)
+    }, |(c, b)| {
+        let l = cholesky(c).map_err(|i| format!("not PD at {i}"))?;
+        let rec = matmul_bt(&l, &l);
+        if rec.sub(c).frob_norm() > 1e-2 * (1.0 + c.frob_norm()) {
+            return Err("LLᵀ != C".into());
+        }
+        let x = solve_lower(&l, b);
+        if matmul(&l, &x).sub(b).frob_norm() > 1e-2 * (1.0 + b.frob_norm()) {
+            return Err("forward solve failed".into());
+        }
+        let y = solve_lower_t(&l, b);
+        if matmul(&l.transpose(), &y).sub(b).frob_norm()
+            > 1e-2 * (1.0 + b.frob_norm())
+        {
+            return Err("backward solve failed".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn qr_orthogonality() {
+    forall("qr", CASES, |rng| {
+        let n = rng.range(1, 24);
+        let m = n + rng.below(16);
+        Mat::randn(rng, m, n, 1.0)
+    }, |a| {
+        let (q, r) = qr(a);
+        if matmul(&q, &r).sub(a).frob_norm() > 1e-3 * (1.0 + a.frob_norm()) {
+            return Err("QR != A".into());
+        }
+        let g = matmul(&q.transpose(), &q);
+        if g.sub(&Mat::eye(a.cols)).frob_norm() > 1e-3 * a.cols as f64 {
+            return Err("QᵀQ != I".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn effective_rank_monotone_in_tau() {
+    forall("eff-rank", CASES, |rng| {
+        let n = rng.range(1, 30);
+        (0..n).map(|_| rng.uniform_f32() + 1e-3).collect::<Vec<f32>>()
+    }, |sigma| {
+        let mut s = sigma.clone();
+        s.sort_by(|a, b| b.total_cmp(a));
+        let k50 = effective_rank(&s, 0.5);
+        let k95 = effective_rank(&s, 0.95);
+        let k100 = effective_rank(&s, 1.0);
+        if !(k50 <= k95 && k95 <= k100 && k100 <= s.len() && k50 >= 1) {
+            return Err(format!("not monotone: {k50} {k95} {k100}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// compression / coordinator invariants
+// ---------------------------------------------------------------------------
+
+fn rand_decomps(rng: &mut Rng, count: usize)
+                -> Vec<zs_svd::compress::whiten::TargetDecomp> {
+    (0..count)
+        .map(|i| {
+            let m = rng.range(6, 28);
+            let n = rng.range(6, 28);
+            let w = Mat::randn(rng, m, n, 0.5);
+            let x = Mat::randn(rng, 3 * n, n, 1.0);
+            let c = gram(&x);
+            let g = Mat::randn(rng, m, n, 0.05);
+            decompose_target(&format!("t{i}"), &w, &c, &g)
+        })
+        .collect()
+}
+
+#[test]
+fn selection_budget_and_order_invariants() {
+    forall("selection", CASES, |rng| {
+        let count = rng.range(2, 6);
+        let ds = rand_decomps(rng, count);
+        let ratio = 0.2 + 0.6 * rng.uniform();
+        (ds, ratio)
+    }, |(ds, ratio)| {
+        for costing in [Costing::Standard, Costing::Remap] {
+            let r = select(ds, *ratio, costing, Strategy::ZeroSum);
+            let total: f64 = ds.iter().map(|d| (d.m * d.n) as f64).sum();
+            let budget = (1.0 - ratio) * total;
+            let maxcost = ds.iter().map(|d| d.m + d.n).max().unwrap() as f64;
+            let drained = ds.iter().all(|d| r.kept[&d.name].len() <= 1);
+            if r.saved_params < budget && !drained {
+                return Err(format!("{costing:?}: saved {} < {budget}",
+                                   r.saved_params));
+            }
+            if r.saved_params > budget + maxcost {
+                return Err("budget overshoot beyond one step".into());
+            }
+            for d in ds {
+                let kept = &r.kept[&d.name];
+                if kept.is_empty() {
+                    return Err(format!("{} drained to rank 0", d.name));
+                }
+                for (i, &c) in kept.iter().enumerate() {
+                    if c != i {
+                        return Err(format!("{} kept not a prefix", d.name));
+                    }
+                }
+                if costing == Costing::Standard {
+                    let dense = r.keep_dense[&d.name];
+                    let above = kept.len() > k_threshold(d.m, d.n);
+                    if dense != above {
+                        return Err("keep_dense inconsistent with k_thr".into());
+                    }
+                }
+            }
+            let max_dl = ds.iter().flat_map(|d| d.dl.iter())
+                .fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+            let bound = (2.0 + r.forced_pops as f64) * max_dl + 1e-9;
+            if r.max_abs_s > bound {
+                return Err(format!("drift {} > bound {bound}                                     ({} forced pops)", r.max_abs_s, r.forced_pops));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn factorize_recompose_consistency() {
+    forall("factorize", CASES, |rng| {
+        let ds = rand_decomps(rng, 1);
+        let d = ds.into_iter().next().unwrap();
+        let r = d.svd.sigma.len();
+        let k = rng.range(1, r + 1);
+        (d, k)
+    }, |(d, k)| {
+        let kept: Vec<usize> = (0..*k).collect();
+        let (wu, wv) = factorize(d, &kept);
+        let rec = recompose(d, &kept);
+        let err = matmul(&wu, &wv).sub(&rec).frob_norm();
+        if err > 1e-3 * (1.0 + rec.frob_norm()) {
+            return Err(format!("factor/recompose mismatch {err}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantization_error_bounded() {
+    forall("int8", CASES, |rng| rand_mat(rng, 32), |w| {
+        let q = quant_dequant_int8(w);
+        for r in 0..w.rows {
+            let maxabs = w.row(r).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let bound = int8_error_bound(maxabs) * 1.01;
+            for (a, b) in w.row(r).iter().zip(q.row(r)) {
+                if (a - b).abs() > bound {
+                    return Err(format!("quant error {} > {bound}", (a - b).abs()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_roundtrip_random_values() {
+    forall("json", 48, |rng| random_json(rng, 0), |j| {
+        let text = j.to_string();
+        let back = json::parse(&text)?;
+        if &back != j {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        let pretty = j.to_string_pretty();
+        let back2 = json::parse(&pretty)?;
+        if &back2 != j {
+            return Err("pretty roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> json::Json {
+    use json::Json;
+    let pick = if depth >= 3 { rng.below(4) } else { rng.below(6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 1),
+        2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+        3 => {
+            let n = rng.below(8);
+            Json::Str((0..n).map(|_| {
+                let opts = ['a', 'Z', '"', '\\', '\n', '\t', ' ', '\u{e9}'];
+                opts[rng.below(opts.len())]
+            }).collect())
+        }
+        4 => Json::Arr((0..rng.below(4))
+            .map(|_| random_json(rng, depth + 1)).collect()),
+        _ => {
+            let n = rng.below(4);
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..n {
+                m.insert(format!("k{i}"), random_json(rng, depth + 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_random_stores() {
+    forall("ckpt", 16, |rng| {
+        let n = rng.range(1, 5);
+        let names: Vec<String> = (0..n).map(|i| format!("p{i}")).collect();
+        let mut store = zs_svd::model::ParamStore::new_empty(names.clone());
+        for nm in &names {
+            let dims = rng.range(0, 3);
+            let shape: Vec<usize> = (0..dims).map(|_| rng.range(1, 7)).collect();
+            let mut t = zs_svd::tensor::Tensor::zeros(&shape);
+            rng.fill_normal(&mut t.data, 0.0, 1.0);
+            store.set(nm, t);
+        }
+        store
+    }, |store| {
+        let path = std::env::temp_dir().join(format!(
+            "zs_prop_ckpt_{}.zst0", std::process::id()));
+        store.save(&path).map_err(|e| e.to_string())?;
+        let loaded = zs_svd::model::ParamStore::load(&path)
+            .map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        if loaded.names() != store.names() {
+            return Err("names differ".into());
+        }
+        for n in store.names() {
+            if loaded.get(n) != store.get(n) {
+                return Err(format!("tensor {n} differs"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn whitening_ridge_always_succeeds() {
+    forall("ridge", CASES, |rng| {
+        // possibly rank-deficient moments (fewer samples than dims)
+        let n = rng.range(2, 24);
+        let t = rng.range(1, n);
+        let x = Mat::randn(rng, t, n, 1.0);
+        gram(&x)
+    }, |c| {
+        let (l, lambda) = cholesky_ridge(c, 1e-6);
+        if lambda <= 0.0 || !l.is_finite() {
+            return Err(format!("ridge failed (lambda {lambda})"));
+        }
+        Ok(())
+    });
+}
