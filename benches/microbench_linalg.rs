@@ -1,13 +1,21 @@
 //! L3 micro-benchmarks: the compression-time linalg hot paths (SVD,
 //! Cholesky, triangular solves, matmul) at the shapes the shipped configs
-//! actually hit — the profile driving the §Perf optimization pass.
+//! actually hit — the profile driving the §Perf optimization pass — plus
+//! the thread-scaling sweep for the `exec` parallel subsystem (parallel
+//! matmul and `decompose_all` at 1/2/4 workers, with speedups vs serial).
 
 mod common;
 
+use zs_svd::compress::pipeline::decompose_all;
+use zs_svd::compress::Calibration;
+use zs_svd::exec;
 use zs_svd::linalg::{cholesky_ridge, gram, matmul, right_solve_lower, svd};
+use zs_svd::model::init::init_params;
 use zs_svd::report::{f2, Table};
+use zs_svd::runtime::session::Session;
+use zs_svd::runtime::Runtime;
 use zs_svd::tensor::Mat;
-use zs_svd::util::benchkit::Bench;
+use zs_svd::util::benchkit::{fast_mode, Bench};
 use zs_svd::util::rng::Rng;
 
 fn main() {
@@ -17,6 +25,9 @@ fn main() {
         "linalg micro-benchmarks (median ms)",
         &["op", "shape", "ms", "p95 ms"],
     );
+
+    // single-threaded baseline numbers for the classic section
+    exec::set_threads(1);
 
     // shapes from the shipped configs: d=128/192, ff=352/512
     let shapes = [(128usize, 128usize), (352, 128), (128, 352), (512, 192)];
@@ -59,6 +70,57 @@ fn main() {
                    format!("{m}x{k}x{n}"),
                    f2(s.median * 1e3), f2(s.p95 * 1e3)]);
     }
+
+    // ---------------------------------------------------------------
+    // thread scaling: parallel matmul (row-partitioned kernel)
+    // ---------------------------------------------------------------
+    let (m, k, n) = (512usize, 384usize, 512usize);
+    let a = Mat::randn(&mut rng, m, k, 1.0);
+    let bb = Mat::randn(&mut rng, k, n, 1.0);
+    let mut serial_median = 0.0f64;
+    for &threads in &[1usize, 2, 4] {
+        exec::set_threads(threads);
+        let s = b.run(|| {
+            std::hint::black_box(matmul(&a, &bb));
+        });
+        if threads == 1 {
+            serial_median = s.median;
+        }
+        let speedup = serial_median / s.median.max(1e-12);
+        t.row(vec![format!("matmul-par t={threads} ({speedup:.2}x)"),
+                   format!("{m}x{k}x{n}"),
+                   f2(s.median * 1e3), f2(s.p95 * 1e3)]);
+        eprintln!("matmul {m}x{k}x{n} @ {threads} threads: {:.2} ms \
+                   ({speedup:.2}x vs 1 thread)", s.median * 1e3);
+    }
+
+    // ---------------------------------------------------------------
+    // thread scaling: decompose_all (per-target whitened SVD fan-out)
+    // ---------------------------------------------------------------
+    let rt = Runtime::load_default().expect("builtin manifest");
+    let sess = Session::new(&rt, "tiny");
+    let mut prng = Rng::new(7);
+    let params = init_params(&sess.cfg, &mut prng);
+    let calib = Calibration::synthetic(&sess.cfg, 0xCA11B, Vec::new());
+    let db = Bench::new(1, if fast_mode() { 2 } else { 4 });
+    let mut serial_median = 0.0f64;
+    for &threads in &[1usize, 2, 4] {
+        exec::set_threads(threads);
+        let s = db.run(|| {
+            std::hint::black_box(decompose_all(&sess, &params, &calib));
+        });
+        if threads == 1 {
+            serial_median = s.median;
+        }
+        let speedup = serial_median / s.median.max(1e-12);
+        t.row(vec![format!("decompose_all t={threads} ({speedup:.2}x)"),
+                   format!("{} targets", sess.cfg.targets.len()),
+                   f2(s.median * 1e3), f2(s.p95 * 1e3)]);
+        eprintln!("decompose_all ({} targets) @ {threads} threads: {:.1} ms \
+                   ({speedup:.2}x vs 1 thread)",
+                  sess.cfg.targets.len(), s.median * 1e3);
+    }
+    exec::set_threads(0);
 
     common::emit("microbench_linalg", &t);
 }

@@ -26,7 +26,8 @@ fn main() {
     let dense_bytes = p.session.cfg.param_count() as f64 * 2.0;
     for (regime, max_batch, tag_suffix) in [("regular", 8usize, ""),
                                             ("slow", 1usize, "_b1")] {
-        let sc = ServeConfig { n_requests, max_batch, arrival_factor: 0.5, seed: 1 };
+        let sc = ServeConfig { n_requests, max_batch, arrival_factor: 0.5,
+                               seed: 1, ..ServeConfig::default() };
         let d = run_serving(&p.session, &p.params, &Engine::Dense, &sc,
                             dense_bytes).unwrap();
         t.row(vec![regime.into(), "0%".into(), "original".into(),

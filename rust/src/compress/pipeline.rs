@@ -13,9 +13,9 @@ use super::selection::{select, Costing, Strategy};
 use super::whiten::{decompose_target, factorize, truncate_with_s,
                     TargetDecomp};
 use crate::data::Corpus;
-use crate::linalg::matmul;
+use crate::linalg::{gram, matmul};
 use crate::model::quant::quant_dequant_int8;
-use crate::model::ParamStore;
+use crate::model::{ConfigMeta, ParamStore};
 use crate::runtime::session::Session;
 use crate::tensor::{IntTensor, Mat};
 use crate::util::rng::Rng;
@@ -36,6 +36,47 @@ pub struct Calibration {
     pub moments_seconds: f64,
     /// seconds spent on the gradient pass (only loss-aware methods pay this)
     pub grads_seconds: f64,
+}
+
+impl Calibration {
+    /// Deterministic synthetic calibration: random SPD site moments and
+    /// random target gradients (zero Fisher).  Enough to drive the
+    /// decomposition/selection machinery — used by the thread-scaling
+    /// bench and the serial-vs-parallel equivalence tests, where real
+    /// calibration forward passes would only add noise.  Pass at least one
+    /// batch if correction iterations will run.
+    pub fn synthetic(cfg: &ConfigMeta, seed: u64, batches: Vec<IntTensor>)
+                     -> Calibration {
+        let mut rng = Rng::new(seed);
+        let mut site_xx = BTreeMap::new();
+        let mut site_sum = BTreeMap::new();
+        let mut site_abssum = BTreeMap::new();
+        for s in &cfg.sites {
+            let x = Mat::randn(&mut rng, 3 * s.dim, s.dim, 1.0);
+            site_xx.insert(s.name.clone(), gram(&x));
+            site_sum.insert(s.name.clone(), vec![0.0f32; s.dim]);
+            site_abssum.insert(s.name.clone(), vec![1.0f32; s.dim]);
+        }
+        let mut grads = BTreeMap::new();
+        let mut fisher = BTreeMap::new();
+        for t in &cfg.targets {
+            grads.insert(t.name.clone(),
+                         Mat::randn(&mut rng, t.shape.0, t.shape.1, 0.05));
+            fisher.insert(t.name.clone(), Mat::zeros(t.shape.0, t.shape.1));
+        }
+        Calibration {
+            batches,
+            site_xx,
+            site_sum,
+            site_abssum,
+            token_count: 3 * cfg.d_model,
+            grads,
+            fisher,
+            base_loss: 0.0,
+            moments_seconds: 0.0,
+            grads_seconds: 0.0,
+        }
+    }
 }
 
 /// Run the calibration passes.  The paper uses 256 × 2048-token sequences;
@@ -104,18 +145,19 @@ impl ZsOpts {
 }
 
 /// Decompose every target in the whitened space with loss sensitivities.
+///
+/// Targets are independent, so the per-target work (Cholesky whitening +
+/// Jacobi SVD + sensitivity) fans out across the `exec` worker pool.
+/// Outputs land at their target's index, so the result is bit-identical to
+/// the serial pass for any thread count (see `rust/tests/parallel_equiv.rs`).
 pub fn decompose_all(sess: &Session, params: &ParamStore, calib: &Calibration)
                      -> Vec<TargetDecomp> {
-    sess.cfg
-        .targets
-        .iter()
-        .map(|t| {
-            let w = params.get(&t.name).to_mat();
-            let c = &calib.site_xx[&t.site];
-            let g = &calib.grads[&t.name];
-            decompose_target(&t.name, &w, c, g)
-        })
-        .collect()
+    crate::exec::par_map(&sess.cfg.targets, |_, t| {
+        let w = params.get(&t.name).to_mat();
+        let c = &calib.site_xx[&t.site];
+        let g = &calib.grads[&t.name];
+        decompose_target(&t.name, &w, c, g)
+    })
 }
 
 /// Full ZS-SVD compression.  `plan.seconds` covers decomposition +
@@ -131,13 +173,13 @@ pub fn compress_zs(sess: &Session, params: &ParamStore, calib: &Calibration,
     let decomps = decompose_all(sess, params, calib);
     let selection = select(&decomps, sel_ratio, opts.costing, opts.strategy);
 
-    let mut targets = Vec::with_capacity(decomps.len());
-    for d in &decomps {
+    // materialization (factorize + recomposition matmuls) is per-target
+    // independent — fan out, order-preserving
+    let targets = crate::exec::par_map(&decomps, |_, d| {
         let kept = selection.kept[&d.name].clone();
         let dense = selection.keep_dense[&d.name];
-        targets.push(build_target(d, &kept, dense, opts.costing, quantize,
-                                  params));
-    }
+        build_target(d, &kept, dense, opts.costing, quantize, params)
+    });
 
     let mut plan = CompressionPlan {
         method: opts.label(),
@@ -189,17 +231,22 @@ fn build_target(d: &TargetDecomp, kept: &[usize], dense: bool,
 }
 
 /// One truncate–correct–re-truncate iteration over every factored target.
+/// The per-target correct + re-truncate (an SVD each) runs on the worker
+/// pool; results are applied in order afterwards.
 fn apply_correction_iter(sess: &Session, orig: &ParamStore, calib: &Calibration,
                          plan: &mut CompressionPlan, decomps: &[TargetDecomp],
                          kind: CorrectionKind, quantize: bool) -> Result<()> {
     // gradients at the *compressed* weights, small minibatch (paper: 4 seqs)
+    anyhow::ensure!(!calib.batches.is_empty(),
+                    "correction needs at least one calibration batch");
     let compressed = plan.apply(orig);
-    let nb = calib.batches.len().min(1).max(1);
-    let (_, grads, _) = sess.mean_grads(&compressed, &calib.batches[..nb])?;
+    let (_, grads, _) = sess.mean_grads(&compressed, &calib.batches[..1])?;
 
-    for (tp, d) in plan.targets.iter_mut().zip(decomps) {
+    let targets_ref = &plan.targets;
+    let updates = crate::exec::par_map(decomps, |i, d| {
+        let tp = &targets_ref[i];
         if tp.dense {
-            continue;
+            return None;
         }
         let w_orig = orig.get(&tp.name).to_mat();
         let g = &grads[&tp.name];
@@ -210,8 +257,13 @@ fn apply_correction_iter(sess: &Session, orig: &ParamStore, calib: &Calibration,
             wv = quant_dequant_int8(&wv);
             rep = matmul(&wu, &wv);
         }
-        tp.replacement = rep;
-        tp.factors = Some((wu, wv));
+        Some((rep, wu, wv))
+    });
+    for (tp, upd) in plan.targets.iter_mut().zip(updates) {
+        if let Some((rep, wu, wv)) = upd {
+            tp.replacement = rep;
+            tp.factors = Some((wu, wv));
+        }
     }
     Ok(())
 }

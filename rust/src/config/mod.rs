@@ -22,6 +22,9 @@ pub struct ExperimentConfig {
     /// compression ratios to sweep
     pub ratios: Vec<f64>,
     pub seed: u64,
+    /// worker threads for the `exec` pool (0 = auto: `PALLAS_THREADS` env
+    /// var, else available parallelism)
+    pub threads: usize,
     /// where checkpoints live
     pub ckpt_dir: PathBuf,
     /// where result tables are appended
@@ -41,6 +44,7 @@ impl Default for ExperimentConfig {
             instances_per_family: 48,
             ratios: vec![0.8, 0.6, 0.4],
             seed: 7,
+            threads: 0,
             ckpt_dir: root.join("artifacts").join("ckpts"),
             out_dir: root.join("results"),
         }
@@ -65,6 +69,7 @@ impl ExperimentConfig {
                 .map(|a| a.iter().filter_map(Json::as_f64).collect())
                 .unwrap_or(d.ratios),
             seed: j.f64_or("seed", d.seed as f64) as u64,
+            threads: j.usize_or("threads", d.threads),
             ckpt_dir: j
                 .get("ckpt_dir")
                 .and_then(Json::as_str)
@@ -95,6 +100,7 @@ impl ExperimentConfig {
             ("instances_per_family", Json::num(self.instances_per_family as f64)),
             ("ratios", Json::arr(self.ratios.iter().map(|&r| Json::num(r)))),
             ("seed", Json::num(self.seed as f64)),
+            ("threads", Json::num(self.threads as f64)),
             ("ckpt_dir", Json::str(self.ckpt_dir.to_str().unwrap_or("."))),
             ("out_dir", Json::str(self.out_dir.to_str().unwrap_or("."))),
         ])

@@ -95,6 +95,9 @@ pub struct Prepared<'rt> {
 
 /// Load/pretrain a model per `cfg` and run calibration once.
 pub fn prepare<'rt>(rt: &'rt Runtime, cfg: &ExperimentConfig) -> Result<Prepared<'rt>> {
+    if cfg.threads > 0 {
+        crate::exec::set_threads(cfg.threads);
+    }
     let session = Session::new(rt, &cfg.model);
     let world = data::default_world();
     let train_corpus = data::training_corpus(&cfg.family, &world);

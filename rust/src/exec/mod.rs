@@ -1,0 +1,257 @@
+//! Parallel execution substrate: a std::thread scoped worker pool with
+//! deterministic fork/join primitives (no external crates, no persistent
+//! threads to manage).
+//!
+//! Everything compute-heavy in the repo funnels through two primitives:
+//!
+//! * [`par_map`] — map a function over a slice, fanning contiguous index
+//!   ranges out to workers and reassembling results **in input order**.
+//!   Used for the embarrassingly-parallel per-target work (whitened SVD +
+//!   sensitivity in `compress::pipeline::decompose_all`, plan building,
+//!   the correction loop).
+//! * [`par_chunks_mut`] — hand disjoint `&mut` chunks of one buffer to
+//!   workers.  Used by the row-partitioned matmul kernels in
+//!   `linalg::matmul`: each worker owns a contiguous band of output rows.
+//!
+//! # Determinism
+//!
+//! Parallel results are **bit-identical to the serial path for every thread
+//! count**, which is what makes the serial-vs-parallel equivalence tests in
+//! `rust/tests/parallel_equiv.rs` meaningful:
+//!
+//! * `par_map` writes each element's result to its input index — scheduling
+//!   cannot reorder outputs, and element computations are independent.
+//! * `par_chunks_mut` partitions the output into disjoint slices up front;
+//!   workers never share a cacheline of results, and the per-element
+//!   floating-point accumulation order inside a chunk is exactly the serial
+//!   kernel's order (see `linalg::matmul`).
+//!
+//! # Thread-count knob
+//!
+//! Worker count resolves, in priority order:
+//! 1. [`set_threads`] (wired from `config::ExperimentConfig::threads` by the
+//!    coordinator and the `--threads` CLI flag),
+//! 2. the `PALLAS_THREADS` environment variable,
+//! 3. `std::thread::available_parallelism()`, capped at [`MAX_THREADS`].
+//!
+//! Nested parallelism is suppressed: a `par_map`/`par_chunks_mut` call made
+//! *from inside a worker* runs serially on that worker, so parallelizing an
+//! outer loop (per-target decomposition) never multiplies against the inner
+//! parallel matmuls.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Upper bound on the worker count from auto-detection (explicit settings
+/// may exceed it; they are clamped to [`HARD_MAX_THREADS`]).
+pub const MAX_THREADS: usize = 16;
+
+/// Absolute clamp for explicit settings — a backstop against misconfigured
+/// env vars, not a tuning knob.
+pub const HARD_MAX_THREADS: usize = 64;
+
+/// 0 = "no override" (fall back to env / auto-detect).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static IN_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// Override the worker count for this process (0 restores auto-detection).
+/// Takes effect on the next `par_*` call; also the hook the equivalence
+/// tests use to sweep thread counts.
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n.min(HARD_MAX_THREADS), Ordering::SeqCst);
+}
+
+/// Resolved worker count (>= 1).  The env/auto-detect fallback is resolved
+/// once per process and cached — `threads()` sits at the top of every
+/// matmul call, so it must stay a couple of atomic loads.
+pub fn threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::SeqCst);
+    if o > 0 {
+        return o;
+    }
+    static AUTO: OnceLock<usize> = OnceLock::new();
+    *AUTO.get_or_init(|| {
+        if let Ok(v) = std::env::var("PALLAS_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n > 0 {
+                    return n.min(HARD_MAX_THREADS);
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(MAX_THREADS)
+    })
+}
+
+/// True when called from inside a pool worker (nested calls degrade to
+/// serial execution instead of oversubscribing).
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|w| w.get())
+}
+
+/// Run `f` with the current thread marked as a pool worker, so nested
+/// `par_*` calls and the parallel matmul kernels stay serial.  For
+/// subsystems that manage their own threads (the multi-worker serving
+/// drain) to avoid workers × threads oversubscription.
+pub fn with_worker_flag<R>(f: impl FnOnce() -> R) -> R {
+    struct Restore(bool);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            IN_WORKER.with(|w| w.set(self.0));
+        }
+    }
+    // restore on unwind too — a caught panic must not leave the thread
+    // permanently degraded to serial execution
+    let _restore = Restore(IN_WORKER.with(|w| w.replace(true)));
+    f()
+}
+
+/// Map `f` over `items`, in parallel when worthwhile.  `f` receives the
+/// element index and a reference; results come back in input order.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let nt = threads();
+    if nt <= 1 || in_worker() || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let nt = nt.min(items.len());
+    let chunk = items.len().div_ceil(nt);
+    let f = &f;
+    let mut groups: Vec<Vec<R>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(nt);
+        for (ci, slab) in items.chunks(chunk).enumerate() {
+            let base = ci * chunk;
+            handles.push(s.spawn(move || {
+                IN_WORKER.with(|w| w.set(true));
+                slab.iter()
+                    .enumerate()
+                    .map(|(j, t)| f(base + j, t))
+                    .collect::<Vec<R>>()
+            }));
+        }
+        groups = handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+            .collect();
+    });
+    groups.into_iter().flatten().collect()
+}
+
+/// Split `data` into consecutive chunks of `chunk_len` elements (the last
+/// may be shorter) and run `f(chunk_index, chunk)` on each, in parallel.
+///
+/// The caller picks `chunk_len` so the chunk count roughly matches
+/// [`threads`] — one worker thread is spawned per chunk.  Chunks are
+/// disjoint `&mut` slices, so workers cannot race by construction.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "par_chunks_mut: zero chunk length");
+    let nt = threads();
+    if nt <= 1 || in_worker() || data.len() <= chunk_len {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            s.spawn(move || {
+                IN_WORKER.with(|w| w.set(true));
+                f(i, c);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..103).collect();
+        let out = par_map(&items, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..103).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_matches_serial_for_all_thread_counts() {
+        let items: Vec<u64> = (0..57).collect();
+        let serial: Vec<u64> = items.iter().map(|&x| x.wrapping_mul(x) ^ 7).collect();
+        for t in [1, 2, 3, 4, 8] {
+            set_threads(t);
+            let par = par_map(&items, |_, &x| x.wrapping_mul(x) ^ 7);
+            assert_eq!(par, serial, "threads = {t}");
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn par_chunks_cover_disjointly() {
+        let mut data = vec![0u32; 1000];
+        set_threads(4);
+        par_chunks_mut(&mut data, 250, |ci, chunk| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (ci * 250 + j) as u32;
+            }
+        });
+        set_threads(0);
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
+    }
+
+    #[test]
+    fn nested_calls_run_serial() {
+        // NOTE: no assert on in_worker() inside the closure — a concurrent
+        // test may momentarily set_threads(1), which legitimately routes
+        // par_map through the serial path on the caller thread.  What must
+        // hold for ANY momentary override is the result.
+        let touched = AtomicUsize::new(0);
+        let items = vec![(); 8];
+        set_threads(4);
+        par_map(&items, |_, _| {
+            let inner = par_map(&[1u8, 2, 3], |_, &x| x as usize);
+            touched.fetch_add(inner.iter().sum::<usize>(), Ordering::SeqCst);
+        });
+        set_threads(0);
+        assert_eq!(touched.load(Ordering::SeqCst), 8 * 6);
+        assert!(!in_worker());
+    }
+
+    #[test]
+    fn with_worker_flag_scopes_the_flag() {
+        assert!(!in_worker());
+        let seen = with_worker_flag(|| in_worker());
+        assert!(seen);
+        assert!(!in_worker());
+    }
+
+    #[test]
+    fn threads_always_at_least_one() {
+        // NOTE: no strict equality on the override here — unit tests in this
+        // binary run concurrently and several sweep `set_threads`; every
+        // `par_*` caller is required to be correct for ANY momentary value.
+        assert!(threads() >= 1);
+        assert!(threads() <= HARD_MAX_THREADS);
+    }
+}

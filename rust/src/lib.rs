@@ -15,6 +15,7 @@
 //! binary is self-contained.
 
 pub mod util;
+pub mod exec;
 pub mod tensor;
 pub mod linalg;
 pub mod data;

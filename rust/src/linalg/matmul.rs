@@ -1,31 +1,92 @@
-//! Blocked dense matmul + small GEMM helpers.
+//! Blocked dense matmul + small GEMM helpers, with row-partitioned parallel
+//! kernels (see `crate::exec`).
 //!
-//! This is the compression-time workhorse (whitening A = W·S, recomposition
-//! W' = Wu·Wv, Jacobi column updates).  Request-path matmuls run inside the
-//! AOT HLO on the PJRT client, not here.
+//! This is the workhorse on both sides of the system: compression-time
+//! (whitening A = W·S, recomposition W' = Wu·Wv, Jacobi column updates) and
+//! request-time (the native runtime's projections run through `matmul_bt`).
+//!
+//! # Parallel determinism
+//!
+//! `matmul` and `matmul_bt` split the **output rows** into disjoint bands,
+//! one band per worker.  Every output element is accumulated by exactly one
+//! worker using exactly the serial kernel's loop structure, so the
+//! floating-point addition order per element — and therefore the result,
+//! bit for bit — is independent of the thread count.  Small products stay
+//! on the serial path (spawn overhead would dominate); the cutover cannot
+//! change results for the same reason.
 
+use crate::exec;
 use crate::tensor::Mat;
 
-/// C = A · B (blocked i-k-j loop order, row-major friendly).
+/// Below this many multiply-adds a product is not worth fanning out.
+const PAR_MIN_MACS: usize = 1 << 22;
+
+/// C = A · B (blocked i-k-j loop order, row-major friendly).  Parallel over
+/// output-row bands; bit-identical to [`matmul_serial`] for any thread
+/// count.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
+    matmul_flat(a, &b.data, b.rows, b.cols)
+}
+
+/// `matmul` against a borrowed row-major buffer (`b_rows` × `b_cols`) —
+/// lets callers holding weights in `Tensor`s multiply without cloning them
+/// into a `Mat` first (the native runtime's per-projection hot path).
+pub fn matmul_flat(a: &Mat, b_data: &[f32], b_rows: usize, b_cols: usize) -> Mat {
+    assert_eq!(a.cols, b_rows, "matmul_flat: {}x{} · {b_rows}x{b_cols}",
+               a.rows, a.cols);
+    assert_eq!(b_data.len(), b_rows * b_cols, "matmul_flat: ragged B buffer");
+    let (m, k, n) = (a.rows, a.cols, b_cols);
     let mut c = Mat::zeros(m, n);
+    if n == 0 {
+        return c;
+    }
+    let nt = exec::threads();
+    if nt <= 1 || exec::in_worker() || m * k * n < PAR_MIN_MACS || m < 2 {
+        mm_rows(a, b_data, n, &mut c.data, 0, m);
+        return c;
+    }
+    let rows_per = m.div_ceil(nt);
+    exec::par_chunks_mut(&mut c.data, rows_per * n, |ci, chunk| {
+        mm_rows(a, b_data, n, chunk, ci * rows_per, chunk.len() / n);
+    });
+    c
+}
+
+/// Fully serial reference kernel (the bit-exact baseline for the
+/// equivalence tests in `rust/tests/parallel_equiv.rs`).
+pub fn matmul_serial(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    if b.cols > 0 {
+        mm_rows(a, &b.data, b.cols, &mut c.data, 0, a.rows);
+    }
+    c
+}
+
+/// The blocked kernel over output rows `[row0, row0 + rows)`.  `c_rows` is
+/// the destination band (rows·n values), `b_data` the row-major B buffer
+/// with row length `n`.  Per output element the k-loop order is fixed (kb
+/// ascending, kk ascending within the block), so any row partition of the
+/// output accumulates identically to the serial pass.
+fn mm_rows(a: &Mat, b_data: &[f32], n: usize, c_rows: &mut [f32], row0: usize,
+           rows: usize) {
+    let k = a.cols;
     const BK: usize = 64;
     const BJ: usize = 256;
     for kb in (0..k).step_by(BK) {
         let kend = (kb + BK).min(k);
         for jb in (0..n).step_by(BJ) {
             let jend = (jb + BJ).min(n);
-            for i in 0..m {
-                let arow = &a.data[i * k..(i + 1) * k];
-                let crow = &mut c.data[i * n..(i + 1) * n];
+            for i in 0..rows {
+                let arow = &a.data[(row0 + i) * k..(row0 + i + 1) * k];
+                let crow = &mut c_rows[i * n..(i + 1) * n];
                 for kk in kb..kend {
                     let aik = arow[kk];
                     if aik == 0.0 {
                         continue;
                     }
-                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    let brow = &b_data[kk * n..(kk + 1) * n];
                     for j in jb..jend {
                         crow[j] += aik * brow[j];
                     }
@@ -33,26 +94,56 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
             }
         }
     }
+}
+
+/// C = A · Bᵀ without materializing the transpose (rows of B are
+/// contiguous).  Parallel over output-row bands; each element is one
+/// `dot_f32`, so partitioning cannot change results.
+pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_bt: {}x{} · ({}x{})ᵀ", a.rows, a.cols, b.rows, b.cols);
+    matmul_bt_flat(a, &b.data, b.rows, b.cols)
+}
+
+/// `matmul_bt` against a borrowed row-major buffer (`b_rows` × `b_cols`,
+/// contracted over `b_cols`): y = A · Bᵀ without cloning B into a `Mat`.
+pub fn matmul_bt_flat(a: &Mat, b_data: &[f32], b_rows: usize, b_cols: usize)
+                      -> Mat {
+    assert_eq!(a.cols, b_cols, "matmul_bt_flat: {}x{} · ({b_rows}x{b_cols})ᵀ",
+               a.rows, a.cols);
+    assert_eq!(b_data.len(), b_rows * b_cols, "matmul_bt_flat: ragged B buffer");
+    let (m, k, n) = (a.rows, a.cols, b_rows);
+    let mut c = Mat::zeros(m, n);
+    if n == 0 {
+        return c;
+    }
+    let nt = exec::threads();
+    if nt <= 1 || exec::in_worker() || m * k * n < PAR_MIN_MACS || m < 2 {
+        mm_bt_rows(a, b_data, n, &mut c.data, 0, m);
+        return c;
+    }
+    let rows_per = m.div_ceil(nt);
+    exec::par_chunks_mut(&mut c.data, rows_per * n, |ci, chunk| {
+        mm_bt_rows(a, b_data, n, chunk, ci * rows_per, chunk.len() / n);
+    });
     c
 }
 
-/// C = A · Bᵀ without materializing the transpose (rows of B are contiguous).
-pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols, b.cols, "matmul_bt: {}x{} · ({}x{})ᵀ", a.rows, a.cols, b.rows, b.cols);
-    let (m, k, n) = (a.rows, a.cols, b.rows);
-    let mut c = Mat::zeros(m, n);
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let crow = &mut c.data[i * n..(i + 1) * n];
+fn mm_bt_rows(a: &Mat, b_data: &[f32], n: usize, c_rows: &mut [f32],
+              row0: usize, rows: usize) {
+    let k = a.cols;
+    for i in 0..rows {
+        let arow = &a.data[(row0 + i) * k..(row0 + i + 1) * k];
+        let crow = &mut c_rows[i * n..(i + 1) * n];
         for j in 0..n {
-            let brow = &b.data[j * k..(j + 1) * k];
+            let brow = &b_data[j * k..(j + 1) * k];
             crow[j] = dot_f32(arow, brow);
         }
     }
-    c
 }
 
 /// C = Aᵀ · A (Gram matrix, symmetric — only upper computed then mirrored).
+/// Kept serial: it feeds the whitening path where exact symmetry by
+/// construction matters more than the last factor of parallelism.
 pub fn gram(a: &Mat) -> Mat {
     let (m, n) = (a.rows, a.cols);
     let mut c = Mat::zeros(n, n);
@@ -162,5 +253,26 @@ mod tests {
         let a = Mat::randn(&mut rng, 9, 9, 1.0);
         assert_close(&matmul(&a, &Mat::eye(9)), &a, 1e-6);
         assert_close(&matmul(&Mat::eye(9), &a), &a, 1e-6);
+    }
+
+    #[test]
+    fn parallel_bit_identical_to_serial() {
+        let mut rng = Rng::new(7);
+        // large enough to clear the parallel cutover
+        let a = Mat::randn(&mut rng, 200, 160, 1.0);
+        let b = Mat::randn(&mut rng, 160, 180, 1.0);
+        let serial = matmul_serial(&a, &b);
+        let bt = b.transpose();
+        let mut bt_ref: Option<Mat> = None;
+        for t in [1usize, 2, 3, 4, 7] {
+            crate::exec::set_threads(t);
+            assert_eq!(matmul(&a, &b), serial, "threads = {t}");
+            let got = matmul_bt(&a, &bt);
+            match &bt_ref {
+                None => bt_ref = Some(got),
+                Some(r) => assert_eq!(&got, r, "matmul_bt threads = {t}"),
+            }
+        }
+        crate::exec::set_threads(0);
     }
 }

@@ -12,5 +12,6 @@ pub mod svd;
 
 pub use cholesky::{cholesky, cholesky_ridge, right_solve_lower, right_solve_lower_t,
                    solve_lower, solve_lower_t};
-pub use matmul::{gram, matmul, matmul_bt};
+pub use matmul::{gram, matmul, matmul_bt, matmul_bt_flat, matmul_flat,
+                 matmul_serial};
 pub use svd::{effective_rank, factor, reconstruct, svd, tail_energy, Svd};

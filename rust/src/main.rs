@@ -56,6 +56,7 @@ fn exp_config(args: &Args) -> ExperimentConfig {
     cfg.train_steps = args.usize_or("steps", cfg.train_steps);
     cfg.calib_batches = args.usize_or("calib-batches", cfg.calib_batches);
     cfg.seed = args.u64_or("seed", cfg.seed);
+    cfg.threads = args.usize_or("threads", cfg.threads);
     if args.flag("fast") {
         cfg = cfg.shrunk();
     }
@@ -176,7 +177,11 @@ fn main() -> Result<()> {
             let ratio = args.f64_or("ratio", 0.6);
             let requests = args.usize_or("requests", 48);
             let p = coordinator::prepare(&rt, &cfg)?;
-            let sc = ServeConfig { n_requests: requests, ..Default::default() };
+            let sc = ServeConfig {
+                n_requests: requests,
+                workers: args.usize_or("workers", 1),
+                ..Default::default()
+            };
 
             let dense_bytes = p.session.cfg.param_count() as f64 * 2.0;
             let d = run_serving(&p.session, &p.params, &Engine::Dense, &sc,

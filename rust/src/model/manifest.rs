@@ -58,6 +58,10 @@ pub struct ConfigMeta {
     pub d_ff: usize,
     pub seq_len: usize,
     pub batch: usize,
+    /// RoPE base (llama arch only)
+    pub rope_theta: f64,
+    /// normalization epsilon (rmsnorm / layernorm)
+    pub norm_eps: f32,
     pub params: Vec<ParamMeta>,
     pub targets: Vec<TargetMeta>,
     pub sites: Vec<SiteMeta>,
@@ -122,6 +126,8 @@ fn config(name: &str, j: &Json) -> ConfigMeta {
         d_ff: j.usize_or("d_ff", 0),
         seq_len: j.usize_or("seq_len", 0),
         batch: j.usize_or("batch", 0),
+        rope_theta: j.f64_or("rope_theta", 10000.0),
+        norm_eps: j.f64_or("norm_eps", 1e-5) as f32,
         params: j
             .req("params")
             .as_arr()
@@ -166,8 +172,17 @@ fn config(name: &str, j: &Json) -> ConfigMeta {
 }
 
 impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.  When the file is
+    /// absent (no python build step has run) the built-in manifest is used:
+    /// the native runtime executes every graph directly, so the manifest
+    /// only has to pin the ABI (shapes, orders, signatures), not point at
+    /// real HLO files.
     pub fn load(artifacts_dir: &Path) -> Result<Manifest, String> {
-        let j = parse_file(&artifacts_dir.join("manifest.json"))?;
+        let path = artifacts_dir.join("manifest.json");
+        if !path.exists() {
+            return Ok(Manifest::builtin());
+        }
+        let j = parse_file(&path)?;
         let configs = j
             .req("configs")
             .as_obj()
@@ -178,11 +193,234 @@ impl Manifest {
         Ok(Manifest { configs })
     }
 
+    /// The shipped model configurations, mirroring
+    /// `python/compile/configs.py::CONFIGS` + `aot.py`'s artifact set.
+    pub fn builtin() -> Manifest {
+        let mut configs = BTreeMap::new();
+        for c in [
+            builtin_config("tiny", "llama", 128, 4, 4, 352,
+                           &[0.8, 0.6, 0.4, 0.2]),
+            builtin_config("small", "llama", 192, 6, 6, 512, &[]),
+            builtin_config("opt_tiny", "opt", 128, 4, 4, 512, &[]),
+        ] {
+            configs.insert(c.name.clone(), c);
+        }
+        Manifest { configs }
+    }
+
     pub fn config(&self, name: &str) -> &ConfigMeta {
         self.configs
             .get(name)
             .unwrap_or_else(|| panic!("unknown config `{name}` (have: {:?})",
                                       self.configs.keys().collect::<Vec<_>>()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// built-in manifest (mirrors python/compile/configs.py + aot.py)
+// ---------------------------------------------------------------------------
+
+fn pm(name: &str, shape: Vec<usize>) -> ParamMeta {
+    ParamMeta { name: name.to_string(), shape }
+}
+
+fn io(name: &str, shape: Vec<usize>, dtype: &str) -> IoMeta {
+    IoMeta { name: name.to_string(), shape, dtype: dtype.to_string() }
+}
+
+/// Canonical ordered parameter spec (`configs.py::param_spec`).
+fn builtin_params(arch: &str, d: usize, ff: usize, vocab: usize,
+                  n_layers: usize, seq: usize) -> Vec<ParamMeta> {
+    let mut out = vec![pm("embed", vec![vocab, d])];
+    if arch == "opt" {
+        out.push(pm("pos_embed", vec![seq, d]));
+    }
+    for i in 0..n_layers {
+        let p = format!("layers.{i}.");
+        out.push(pm(&format!("{p}ln1"), vec![d]));
+        out.push(pm(&format!("{p}wq"), vec![d, d]));
+        out.push(pm(&format!("{p}wk"), vec![d, d]));
+        out.push(pm(&format!("{p}wv"), vec![d, d]));
+        out.push(pm(&format!("{p}wo"), vec![d, d]));
+        out.push(pm(&format!("{p}ln2"), vec![d]));
+        if arch == "llama" {
+            out.push(pm(&format!("{p}wgate"), vec![ff, d]));
+            out.push(pm(&format!("{p}wup"), vec![ff, d]));
+            out.push(pm(&format!("{p}wdown"), vec![d, ff]));
+        } else {
+            out.push(pm(&format!("{p}win"), vec![ff, d]));
+            out.push(pm(&format!("{p}wout"), vec![d, ff]));
+        }
+    }
+    out.push(pm("final_ln", vec![d]));
+    out
+}
+
+/// Compression targets (`configs.py::target_spec`).
+fn builtin_targets(arch: &str, d: usize, ff: usize, n_layers: usize)
+                   -> Vec<TargetMeta> {
+    let mut out = Vec::new();
+    for i in 0..n_layers {
+        let p = format!("layers.{i}.");
+        let t = |name: &str, m: usize, n: usize, site: &str| TargetMeta {
+            name: format!("{p}{name}"),
+            shape: (m, n),
+            site: format!("{p}{site}"),
+        };
+        out.push(t("wq", d, d, "attn_in"));
+        out.push(t("wk", d, d, "attn_in"));
+        out.push(t("wv", d, d, "attn_in"));
+        out.push(t("wo", d, d, "attn_out_in"));
+        if arch == "llama" {
+            out.push(t("wgate", ff, d, "mlp_in"));
+            out.push(t("wup", ff, d, "mlp_in"));
+            out.push(t("wdown", d, ff, "mlp_down_in"));
+        } else {
+            out.push(t("win", ff, d, "mlp_in"));
+            out.push(t("wout", d, ff, "mlp_down_in"));
+        }
+    }
+    out
+}
+
+/// Whitening sites (`configs.py::site_spec`).
+fn builtin_sites(d: usize, ff: usize, n_layers: usize) -> Vec<SiteMeta> {
+    let mut out = Vec::new();
+    for i in 0..n_layers {
+        let p = format!("layers.{i}.");
+        out.push(SiteMeta { name: format!("{p}attn_in"), dim: d });
+        out.push(SiteMeta { name: format!("{p}attn_out_in"), dim: d });
+        out.push(SiteMeta { name: format!("{p}mlp_in"), dim: d });
+        out.push(SiteMeta { name: format!("{p}mlp_down_in"), dim: ff });
+    }
+    out
+}
+
+/// Closed-form uniform rank (`configs.py::lowrank_rank`).
+fn uniform_rank(ratio: f64, m: usize, n: usize) -> usize {
+    ((ratio * (m * n) as f64 / (m + n) as f64) as usize).max(1)
+}
+
+fn builtin_config(name: &str, arch: &str, d: usize, n_layers: usize,
+                  n_heads: usize, ff: usize, lowrank_ratios: &[f64])
+                  -> ConfigMeta {
+    let (vocab, seq, batch) = (256usize, 128usize, 8usize);
+    let params = builtin_params(arch, d, ff, vocab, n_layers, seq);
+    let targets = builtin_targets(arch, d, ff, n_layers);
+    let sites = builtin_sites(d, ff, n_layers);
+
+    let param_ios = |prefix: &str| -> Vec<IoMeta> {
+        params
+            .iter()
+            .map(|p| io(&format!("{prefix}{}", p.name), p.shape.clone(), "f32"))
+            .collect()
+    };
+    let tokens_io = |b: usize| io("tokens", vec![b, seq + 1], "i32");
+
+    let fwd_artifact = |b: usize, file: &str| -> ArtifactMeta {
+        let mut inputs = param_ios("");
+        inputs.push(tokens_io(b));
+        ArtifactMeta {
+            file: file.to_string(),
+            inputs,
+            outputs: vec![io("loss", vec![], "f32"),
+                          io("logits", vec![b, seq, vocab], "f32")],
+        }
+    };
+
+    let grads = {
+        let mut inputs = param_ios("");
+        inputs.push(tokens_io(batch));
+        let mut outputs = vec![io("loss", vec![], "f32")];
+        for t in &targets {
+            outputs.push(io(&format!("d_{}", t.name),
+                            vec![t.shape.0, t.shape.1], "f32"));
+        }
+        ArtifactMeta { file: format!("{name}_grads.hlo"), inputs, outputs }
+    };
+
+    let moments = {
+        let mut inputs = param_ios("");
+        inputs.push(tokens_io(batch));
+        let mut outputs = vec![io("loss", vec![], "f32")];
+        for s in &sites {
+            outputs.push(io(&format!("{}_xx", s.name), vec![s.dim, s.dim], "f32"));
+            outputs.push(io(&format!("{}_sum", s.name), vec![s.dim], "f32"));
+            outputs.push(io(&format!("{}_abssum", s.name), vec![s.dim], "f32"));
+        }
+        ArtifactMeta { file: format!("{name}_moments.hlo"), inputs, outputs }
+    };
+
+    let train = {
+        let mut inputs = param_ios("");
+        inputs.extend(param_ios("m_"));
+        inputs.extend(param_ios("v_"));
+        inputs.push(io("step", vec![], "i32"));
+        inputs.push(io("lr", vec![], "f32"));
+        inputs.push(tokens_io(batch));
+        let mut outputs = param_ios("");
+        outputs.extend(param_ios("m_"));
+        outputs.extend(param_ios("v_"));
+        outputs.push(io("loss", vec![], "f32"));
+        ArtifactMeta { file: format!("{name}_train.hlo"), inputs, outputs }
+    };
+
+    let tnames: std::collections::BTreeSet<&str> =
+        targets.iter().map(|t| t.name.as_str()).collect();
+    let base_ios: Vec<IoMeta> = params
+        .iter()
+        .filter(|p| !tnames.contains(p.name.as_str()))
+        .map(|p| io(&p.name, p.shape.clone(), "f32"))
+        .collect();
+
+    let mut lowrank = BTreeMap::new();
+    for &ratio in lowrank_ratios {
+        let pct = (ratio * 100.0).round() as usize;
+        for (suffix, b) in [("", batch), ("_b1", 1usize)] {
+            let tag = format!("{pct}{suffix}");
+            let mut inputs = base_ios.clone();
+            let mut ranks = BTreeMap::new();
+            for t in &targets {
+                let k = uniform_rank(ratio, t.shape.0, t.shape.1);
+                inputs.push(io(&format!("{}.wu", t.name), vec![t.shape.0, k], "f32"));
+                inputs.push(io(&format!("{}.wv", t.name), vec![k, t.shape.1], "f32"));
+                ranks.insert(t.name.clone(), k);
+            }
+            inputs.push(tokens_io(b));
+            let art = ArtifactMeta {
+                file: format!("{name}_lowrank_{tag}.hlo"),
+                inputs,
+                outputs: vec![io("loss", vec![], "f32"),
+                              io("logits", vec![b, seq, vocab], "f32")],
+            };
+            lowrank.insert(tag, LowrankMeta { art, ranks });
+        }
+    }
+
+    let fwd = fwd_artifact(batch, &format!("{name}_fwd.hlo"));
+    let fwd_b1 = Some(fwd_artifact(1, &format!("{name}_fwd_b1.hlo")));
+
+    ConfigMeta {
+        name: name.to_string(),
+        arch: arch.to_string(),
+        vocab,
+        d_model: d,
+        n_layers,
+        n_heads,
+        d_ff: ff,
+        seq_len: seq,
+        batch,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+        params,
+        targets,
+        sites,
+        fwd,
+        fwd_b1,
+        grads,
+        moments,
+        train,
+        lowrank,
     }
 }
 

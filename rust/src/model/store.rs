@@ -53,6 +53,14 @@ impl ParamStore {
             .unwrap_or_else(|| panic!("param `{name}` missing"))
     }
 
+    /// Mutable access for in-place updates (the optimizer hot path — no
+    /// clone/re-insert round trip).
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        self.map
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("param `{name}` missing"))
+    }
+
     pub fn set(&mut self, name: &str, t: Tensor) {
         assert!(self.names.iter().any(|n| n == name), "unknown param `{name}`");
         self.map.insert(name.to_string(), t);

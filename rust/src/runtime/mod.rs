@@ -1,40 +1,41 @@
-//! PJRT runtime: load AOT HLO text, compile once, execute from the hot path.
+//! Execution runtime: manifest-driven dispatch onto the native CPU kernels.
 //!
-//! This wraps the `xla` crate exactly as /opt/xla-example/load_hlo does:
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `client.compile` → `execute`.  Artifacts are compiled lazily and cached
-//! per file; Python is never involved.
+//! Historically this wrapped the `xla` PJRT client and executed AOT-lowered
+//! HLO text.  Offline builds have no XLA, so the runtime now executes every
+//! graph natively (`runtime::native`) while keeping the manifest as the ABI
+//! contract: artifact *signatures* (input order, shapes, ranks) are still
+//! validated, and the per-artifact "compile" cache is preserved so warmup
+//! and lazy-compile accounting behave as before.  `Runtime` is `Sync`: the
+//! multi-worker serving drain shares one instance across worker threads.
 
+pub mod native;
 pub mod session;
 
-use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::model::Manifest;
-use crate::tensor::Tensor;
 
 pub struct Runtime {
-    client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// artifact files "compiled" (first dispatched) so far
+    cache: Mutex<BTreeSet<String>>,
 }
 
 impl Runtime {
-    /// Load the artifact directory produced by `make artifacts`.
+    /// Load the artifact directory (falls back to the built-in manifest when
+    /// no `manifest.json` is present — the native runtime needs no files).
     pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)
             .map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
-        let client = xla::PjRtClient::cpu()?;
         Ok(Runtime {
-            client,
             dir: artifacts_dir.to_path_buf(),
             manifest,
-            cache: RefCell::new(HashMap::new()),
+            cache: Mutex::new(BTreeSet::new()),
         })
     }
 
@@ -51,53 +52,27 @@ impl Runtime {
         Runtime::load(&Self::default_dir())
     }
 
-    fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(file) {
-            return Ok(e.clone());
-        }
-        let path = self.dir.join(file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling {file}"))?,
-        );
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Record an artifact as prepared (the native analogue of lazy
+    /// compilation; sessions call this on first dispatch).
+    pub(crate) fn mark_compiled(&self, file: &str) {
         self.cache
-            .borrow_mut()
-            .insert(file.to_string(), exe.clone());
-        Ok(exe)
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(file.to_string());
     }
 
-    /// Pre-compile an artifact (so first-request latency is predictable).
+    /// Pre-prepare an artifact (so first-request latency is predictable).
     pub fn warmup(&self, file: &str) -> Result<()> {
-        self.executable(file).map(|_| ())
-    }
-
-    /// Execute an artifact with ordered literal inputs; returns the
-    /// decomposed output tuple (aot.py lowers with return_tuple=True).
-    pub fn exec(&self, file: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(file)?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {file}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {file}"))?;
-        Ok(lit.to_tuple()?)
-    }
-
-    /// Execute and convert every output to a host `Tensor` (f32 outputs only).
-    pub fn exec_tensors(&self, file: &str, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
-        self.exec(file, inputs)?
-            .iter()
-            .map(Tensor::from_literal)
-            .collect()
+        self.mark_compiled(file);
+        Ok(())
     }
 
     pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 }
 
@@ -107,8 +82,18 @@ mod tests {
 
     #[test]
     fn loads_and_lists_configs() {
-        let rt = Runtime::load_default().expect("run `make artifacts` first");
+        let rt = Runtime::load_default().expect("builtin manifest");
         assert!(rt.manifest.configs.contains_key("tiny"));
         assert_eq!(rt.compiled_count(), 0); // lazy
+        assert!(rt.artifacts_dir().ends_with("artifacts"));
+    }
+
+    #[test]
+    fn warmup_populates_cache() {
+        let rt = Runtime::load_default().unwrap();
+        let file = rt.manifest.config("tiny").fwd.file.clone();
+        rt.warmup(&file).unwrap();
+        rt.warmup(&file).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
     }
 }

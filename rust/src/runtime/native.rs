@@ -1,0 +1,802 @@
+//! Native CPU execution of the model graphs — the offline replacement for
+//! the PJRT/HLO path.
+//!
+//! `python/compile/model.py` remains the semantic reference: every function
+//! here mirrors one of its AOT entry points (`make_fwd_loss`, `make_grads`,
+//! `make_moments`, `make_train_step`, `make_fwd_lowrank`) operation for
+//! operation, so rust-trained models share dynamics with the python tests.
+//! Supported architectures match `configs.py`:
+//!
+//! * `llama` — RMSNorm, RoPE, causal MHA, SwiGLU MLP, tied embedding head.
+//! * `opt`   — learned positions, scale-only LayerNorm, GELU MLP, tied head.
+//!
+//! All heavy projections route through `linalg::{matmul, matmul_bt}`, so
+//! the row-partitioned parallel kernels (see `crate::exec`) accelerate the
+//! serving and calibration paths while keeping results bit-identical across
+//! thread counts (every remaining loop here is serial and fixed-order).
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::linalg::matmul::{dot_f32, matmul, matmul_bt, matmul_bt_flat,
+                            matmul_flat};
+use crate::model::{ConfigMeta, ParamStore};
+use crate::tensor::{IntTensor, Mat, Tensor};
+
+// ---------------------------------------------------------------------------
+// public entry points
+// ---------------------------------------------------------------------------
+
+/// Dense (or low-rank) forward: mean next-token loss + logits (B, T, V).
+pub fn forward(cfg: &ConfigMeta, params: &ParamStore, tokens: &IntTensor,
+               lowrank: Option<&BTreeMap<String, (Mat, Mat)>>)
+               -> Result<(f32, Tensor)> {
+    let (loss, logits, _, _) = run(cfg, params, tokens, lowrank, false, false)?;
+    let b = tokens.shape[0];
+    Ok((loss, Tensor::from_vec(&[b, cfg.seq_len, cfg.vocab], logits.data)))
+}
+
+/// Forward pass that also returns the whitening-site activations, flattened
+/// to (B·T, site_dim) row-major, in `cfg.sites` order.
+pub fn forward_sites(cfg: &ConfigMeta, params: &ParamStore, tokens: &IntTensor)
+                     -> Result<(f32, Vec<(String, Mat)>)> {
+    let (loss, _, _, sites) = run(cfg, params, tokens, None, false, true)?;
+    Ok((loss, sites))
+}
+
+/// Mean loss + gradient of the loss w.r.t. EVERY parameter.
+pub fn loss_and_param_grads(cfg: &ConfigMeta, params: &ParamStore,
+                            tokens: &IntTensor)
+                            -> Result<(f32, BTreeMap<String, Tensor>)> {
+    let (loss, _, trace, _) = run(cfg, params, tokens, None, true, false)?;
+    let trace = trace.expect("trace requested");
+    let grads = backward(cfg, params, &trace);
+    Ok((loss, grads))
+}
+
+/// One Adam step (beta1 = 0.9, beta2 = 0.95, eps = 1e-8, no weight decay —
+/// `model.py::make_train_step`'s constants).  Updates params/m/v in place
+/// and returns the pre-update loss.
+pub fn adam_step(cfg: &ConfigMeta, params: &mut ParamStore, m: &mut ParamStore,
+                 v: &mut ParamStore, step: i32, lr: f32, tokens: &IntTensor)
+                 -> Result<f32> {
+    let (loss, grads) = loss_and_param_grads(cfg, params, tokens)?;
+    let t = step + 1;
+    let bc1 = (1.0 - 0.9f64.powi(t)) as f32;
+    let bc2 = (1.0 - 0.95f64.powi(t)) as f32;
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.95;
+    const EPS: f32 = 1e-8;
+    let names: Vec<String> = cfg.params.iter().map(|p| p.name.clone()).collect();
+    for name in &names {
+        let g = &grads[name];
+        let pt = params.get_mut(name);
+        let mt = m.get_mut(name);
+        let vt = v.get_mut(name);
+        for i in 0..pt.data.len() {
+            let gi = g.data[i];
+            let mn = B1 * mt.data[i] + (1.0 - B1) * gi;
+            let vn = B2 * vt.data[i] + (1.0 - B2) * gi * gi;
+            let upd = (mn / bc1) / ((vn / bc2).sqrt() + EPS);
+            pt.data[i] -= lr * upd;
+            mt.data[i] = mn;
+            vt.data[i] = vn;
+        }
+    }
+    Ok(loss)
+}
+
+// ---------------------------------------------------------------------------
+// forward with optional trace
+// ---------------------------------------------------------------------------
+
+struct NormTrace {
+    y: Mat,
+    rstd: Vec<f32>,
+    /// per-row mean (layernorm only; empty for rmsnorm)
+    mean: Vec<f32>,
+}
+
+struct LayerTrace {
+    x_in: Mat,
+    ln1: NormTrace,
+    /// q/k post-RoPE (llama) or raw (opt); (B·T, d)
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    /// softmax probabilities, (B·H·T, T), strictly causal rows
+    probs: Mat,
+    /// merged attention output (pre-Wo), (B·T, d)
+    attn: Mat,
+    x_mid: Mat,
+    ln2: NormTrace,
+    /// llama: gate / up pre-activations; opt: g = win output, u unused
+    g: Mat,
+    u: Mat,
+    /// MLP activation feeding the down projection, (B·T, ff)
+    act: Mat,
+}
+
+struct Trace {
+    b: usize,
+    inp: Vec<usize>,
+    /// next-token target per row (for the loss backward)
+    tgts: Vec<usize>,
+    layers: Vec<LayerTrace>,
+    x_last: Mat,
+    fin: NormTrace,
+    logits: Mat,
+}
+
+/// Row `r` of a 2-D weight tensor, borrowed in place.
+#[inline]
+fn trow(t: &Tensor, r: usize) -> &[f32] {
+    let cols = t.shape[1];
+    &t.data[r * cols..(r + 1) * cols]
+}
+
+/// `x · Wᵀ` with W borrowed straight out of the parameter store.
+#[inline]
+fn project(x: &Mat, w: &Tensor) -> Mat {
+    matmul_bt_flat(x, &w.data, w.shape[0], w.shape[1])
+}
+
+/// `x · W` with W borrowed straight out of the parameter store.
+#[inline]
+fn project_t(x: &Mat, w: &Tensor) -> Mat {
+    matmul_flat(x, &w.data, w.shape[0], w.shape[1])
+}
+
+#[allow(clippy::too_many_lines)]
+fn run(cfg: &ConfigMeta, params: &ParamStore, tokens: &IntTensor,
+       lowrank: Option<&BTreeMap<String, (Mat, Mat)>>, keep: bool,
+       want_sites: bool)
+       -> Result<(f32, Mat, Option<Trace>, Vec<(String, Mat)>)> {
+    ensure!(tokens.shape.len() == 2 && tokens.shape[1] == cfg.seq_len + 1,
+            "tokens must be (B, T+1), got {:?}", tokens.shape);
+    let b = tokens.shape[0];
+    ensure!(b >= 1, "empty batch");
+    let t_len = cfg.seq_len;
+    let (d, h, ff, vocab) = (cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.vocab);
+    let dh = d / h;
+    let bt = b * t_len;
+    let llama = cfg.arch == "llama";
+    let eps = cfg.norm_eps;
+
+    let embed = params.get("embed");
+
+    // token gather (+ learned positions for opt)
+    let mut inp = vec![0usize; bt];
+    let mut x = Mat::zeros(bt, d);
+    for bi in 0..b {
+        for ti in 0..t_len {
+            let tok = tokens.data[bi * (t_len + 1) + ti];
+            ensure!(tok >= 0 && (tok as usize) < vocab,
+                    "token {tok} out of range [0, {vocab})");
+            let r = bi * t_len + ti;
+            inp[r] = tok as usize;
+            x.row_mut(r).copy_from_slice(trow(embed, tok as usize));
+        }
+    }
+    if !llama {
+        let pos = params.get("pos_embed");
+        for bi in 0..b {
+            for ti in 0..t_len {
+                let r = bi * t_len + ti;
+                let xr = x.row_mut(r);
+                for (xv, pv) in xr.iter_mut().zip(trow(pos, ti)) {
+                    *xv += pv;
+                }
+            }
+        }
+    }
+
+    let (cos_tab, sin_tab) = if llama {
+        rope_tables(t_len, dh, cfg.rope_theta)
+    } else {
+        (Vec::new(), Vec::new())
+    };
+
+    let linear = |name: &str, xin: &Mat| -> Mat {
+        if let Some(lr) = lowrank {
+            if let Some((wu, wv)) = lr.get(name) {
+                return matmul_bt(&matmul_bt(xin, wv), wu);
+            }
+        }
+        project(xin, params.get(name))
+    };
+
+    let mut sites: Vec<(String, Mat)> = Vec::new();
+    let mut layers: Vec<LayerTrace> = Vec::new();
+
+    for li in 0..cfg.n_layers {
+        let p = format!("layers.{li}.");
+        let x_in = if keep { x.clone() } else { Mat::zeros(0, 0) };
+
+        let ln1 = norm_fwd(&x, param_1d(params, &format!("{p}ln1")), eps, llama);
+        if want_sites {
+            sites.push((format!("{p}attn_in"), ln1.y.clone()));
+        }
+        let mut q = linear(&format!("{p}wq"), &ln1.y);
+        let mut k = linear(&format!("{p}wk"), &ln1.y);
+        let v = linear(&format!("{p}wv"), &ln1.y);
+        if llama {
+            rope_apply(&mut q, t_len, h, dh, &cos_tab, &sin_tab, false);
+            rope_apply(&mut k, t_len, h, dh, &cos_tab, &sin_tab, false);
+        }
+        let (attn, probs) = attention_fwd(&q, &k, &v, b, t_len, h, dh);
+        if want_sites {
+            sites.push((format!("{p}attn_out_in"), attn.clone()));
+        }
+        let attn_o = linear(&format!("{p}wo"), &attn);
+        x.add_assign(&attn_o);
+        let x_mid = if keep { x.clone() } else { Mat::zeros(0, 0) };
+
+        let ln2 = norm_fwd(&x, param_1d(params, &format!("{p}ln2")), eps, llama);
+        if want_sites {
+            sites.push((format!("{p}mlp_in"), ln2.y.clone()));
+        }
+        let (g, u, act) = if llama {
+            let g = linear(&format!("{p}wgate"), &ln2.y);
+            let u = linear(&format!("{p}wup"), &ln2.y);
+            let mut act = Mat::zeros(bt, ff);
+            for i in 0..act.data.len() {
+                act.data[i] = silu(g.data[i]) * u.data[i];
+            }
+            (g, u, act)
+        } else {
+            let g = linear(&format!("{p}win"), &ln2.y);
+            let mut act = Mat::zeros(bt, ff);
+            for i in 0..act.data.len() {
+                act.data[i] = gelu(g.data[i]);
+            }
+            (g, Mat::zeros(0, 0), act)
+        };
+        if want_sites {
+            sites.push((format!("{p}mlp_down_in"), act.clone()));
+        }
+        let down_name = if llama { format!("{p}wdown") } else { format!("{p}wout") };
+        let down = linear(&down_name, &act);
+        x.add_assign(&down);
+
+        if keep {
+            layers.push(LayerTrace {
+                x_in,
+                ln1,
+                q,
+                k,
+                v,
+                probs,
+                attn,
+                x_mid,
+                ln2,
+                g,
+                u,
+                act,
+            });
+        }
+    }
+
+    let x_last = if keep { x.clone() } else { Mat::zeros(0, 0) };
+    let fin = norm_fwd(&x, param_1d(params, "final_ln"), eps, llama);
+    let logits = project(&fin.y, embed); // tied head: (B·T, V)
+
+    // mean next-token cross-entropy
+    let mut tgts = vec![0usize; bt];
+    let mut loss_sum = 0.0f64;
+    for bi in 0..b {
+        for ti in 0..t_len {
+            let r = bi * t_len + ti;
+            let tgt = tokens.data[bi * (t_len + 1) + ti + 1];
+            ensure!(tgt >= 0 && (tgt as usize) < vocab,
+                    "target {tgt} out of range [0, {vocab})");
+            tgts[r] = tgt as usize;
+            let row = logits.row(r);
+            let maxv = row.iter().fold(f32::NEG_INFINITY, |m2, &z| m2.max(z));
+            let mut sum = 0.0f64;
+            for &z in row {
+                sum += ((z - maxv) as f64).exp();
+            }
+            let lse = sum.ln() + maxv as f64;
+            loss_sum += lse - row[tgt as usize] as f64;
+        }
+    }
+    let loss = (loss_sum / bt as f64) as f32;
+    ensure!(loss.is_finite(), "non-finite loss");
+
+    let trace = if keep {
+        Some(Trace { b, inp, tgts, layers, x_last, fin, logits: logits.clone() })
+    } else {
+        None
+    };
+    Ok((loss, logits, trace, sites))
+}
+
+// ---------------------------------------------------------------------------
+// backward
+// ---------------------------------------------------------------------------
+
+fn backward(cfg: &ConfigMeta, params: &ParamStore, trace: &Trace)
+            -> BTreeMap<String, Tensor> {
+    let b = trace.b;
+    let t_len = cfg.seq_len;
+    let (d, h, vocab) = (cfg.d_model, cfg.n_heads, cfg.vocab);
+    let dh = d / h;
+    let bt = b * t_len;
+    let llama = cfg.arch == "llama";
+    let eps = cfg.norm_eps;
+
+    let embed = params.get("embed");
+    let mut grads: BTreeMap<String, Tensor> = BTreeMap::new();
+
+    // dL/dlogits for mean cross-entropy: (softmax - onehot) / (B·T)
+    let inv = 1.0f32 / bt as f32;
+    let mut dlogits = Mat::zeros(bt, vocab);
+    for r in 0..bt {
+        let row = trace.logits.row(r);
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |m2, &z| m2.max(z));
+        let mut sum = 0.0f64;
+        for &z in row {
+            sum += ((z - maxv) as f64).exp();
+        }
+        let dr = dlogits.row_mut(r);
+        for j in 0..vocab {
+            dr[j] = (((row[j] - maxv) as f64).exp() / sum) as f32 * inv;
+        }
+        dr[trace.tgts[r]] -= inv;
+    }
+
+    // tied head: logits = xf · Eᵀ
+    let mut d_embed = matmul(&dlogits.transpose(), &trace.fin.y); // (V, d)
+    let dxf = project_t(&dlogits, embed); // (B·T, d)
+
+    let (mut dx, d_final_ln) = norm_bwd(&trace.x_last, &trace.fin,
+                                        param_1d(params, "final_ln"), &dxf,
+                                        eps, llama);
+    grads.insert("final_ln".into(), Tensor::from_vec(&[d], d_final_ln));
+
+    let (cos_tab, sin_tab) = if llama {
+        rope_tables(t_len, dh, cfg.rope_theta)
+    } else {
+        (Vec::new(), Vec::new())
+    };
+
+    for li in (0..cfg.n_layers).rev() {
+        let p = format!("layers.{li}.");
+        let lt = &trace.layers[li];
+
+        // ---- MLP branch ----
+        let down_name = if llama { format!("{p}wdown") } else { format!("{p}wout") };
+        let dact = project_t(&dx, params.get(&down_name)); // (B·T, ff)
+        let d_wdown = matmul(&dx.transpose(), &lt.act); // (d, ff)
+        grads.insert(down_name, Tensor::from_mat(&d_wdown));
+
+        let dh2 = if llama {
+            let mut dg = Mat::zeros(dact.rows, dact.cols);
+            let mut du = Mat::zeros(dact.rows, dact.cols);
+            for i in 0..dact.data.len() {
+                let gv = lt.g.data[i];
+                let sig = sigmoid(gv);
+                let si = gv * sig;
+                du.data[i] = dact.data[i] * si;
+                dg.data[i] = dact.data[i] * lt.u.data[i]
+                    * (sig * (1.0 + gv * (1.0 - sig)));
+            }
+            grads.insert(format!("{p}wgate"),
+                         Tensor::from_mat(&matmul(&dg.transpose(), &lt.ln2.y)));
+            grads.insert(format!("{p}wup"),
+                         Tensor::from_mat(&matmul(&du.transpose(), &lt.ln2.y)));
+            let mut dh2 = project_t(&dg, params.get(&format!("{p}wgate")));
+            dh2.add_assign(&project_t(&du, params.get(&format!("{p}wup"))));
+            dh2
+        } else {
+            let mut dg = Mat::zeros(dact.rows, dact.cols);
+            for i in 0..dact.data.len() {
+                dg.data[i] = dact.data[i] * gelu_grad(lt.g.data[i]);
+            }
+            grads.insert(format!("{p}win"),
+                         Tensor::from_mat(&matmul(&dg.transpose(), &lt.ln2.y)));
+            project_t(&dg, params.get(&format!("{p}win")))
+        };
+
+        let (dx_ln2, d_ln2) = norm_bwd(&lt.x_mid, &lt.ln2,
+                                       param_1d(params, &format!("{p}ln2")),
+                                       &dh2, eps, llama);
+        grads.insert(format!("{p}ln2"), Tensor::from_vec(&[d], d_ln2));
+        let mut dx_mid = dx; // residual pass-through
+        dx_mid.add_assign(&dx_ln2);
+
+        // ---- attention branch ----
+        let dattn = project_t(&dx_mid, params.get(&format!("{p}wo"))); // (B·T, d)
+        grads.insert(format!("{p}wo"),
+                     Tensor::from_mat(&matmul(&dx_mid.transpose(), &lt.attn)));
+
+        let (mut dq, mut dk, dv) =
+            attention_bwd(&lt.q, &lt.k, &lt.v, &lt.probs, &dattn, b, t_len, h, dh);
+        if llama {
+            rope_apply(&mut dq, t_len, h, dh, &cos_tab, &sin_tab, true);
+            rope_apply(&mut dk, t_len, h, dh, &cos_tab, &sin_tab, true);
+        }
+
+        grads.insert(format!("{p}wq"),
+                     Tensor::from_mat(&matmul(&dq.transpose(), &lt.ln1.y)));
+        grads.insert(format!("{p}wk"),
+                     Tensor::from_mat(&matmul(&dk.transpose(), &lt.ln1.y)));
+        grads.insert(format!("{p}wv"),
+                     Tensor::from_mat(&matmul(&dv.transpose(), &lt.ln1.y)));
+        let mut dh1 = project_t(&dq, params.get(&format!("{p}wq")));
+        dh1.add_assign(&project_t(&dk, params.get(&format!("{p}wk"))));
+        dh1.add_assign(&project_t(&dv, params.get(&format!("{p}wv"))));
+
+        let (dx_ln1, d_ln1) = norm_bwd(&lt.x_in, &lt.ln1,
+                                       param_1d(params, &format!("{p}ln1")),
+                                       &dh1, eps, llama);
+        grads.insert(format!("{p}ln1"), Tensor::from_vec(&[d], d_ln1));
+        dx = dx_mid;
+        dx.add_assign(&dx_ln1);
+    }
+
+    // embedding gather backward (+ learned positions for opt)
+    for r in 0..bt {
+        let tok = trace.inp[r];
+        let (dr, erow) = (dx.row(r), d_embed.row_mut(tok));
+        for (ev, &dv2) in erow.iter_mut().zip(dr) {
+            *ev += dv2;
+        }
+    }
+    if !llama {
+        let mut dpos = Mat::zeros(cfg.seq_len, d);
+        for bi in 0..b {
+            for ti in 0..t_len {
+                let r = bi * t_len + ti;
+                let (src, prow) = (dx.row(r), dpos.row_mut(ti));
+                for (pv, &sv) in prow.iter_mut().zip(src) {
+                    *pv += sv;
+                }
+            }
+        }
+        grads.insert("pos_embed".into(), Tensor::from_mat(&dpos));
+    }
+    grads.insert("embed".into(), Tensor::from_mat(&d_embed));
+    grads
+}
+
+// ---------------------------------------------------------------------------
+// building blocks
+// ---------------------------------------------------------------------------
+
+fn param_1d<'a>(params: &'a ParamStore, name: &str) -> &'a [f32] {
+    &params.get(name).data
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// tanh-approximate GELU (JAX's default `jax.nn.gelu`).
+#[inline]
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[inline]
+fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6;
+    let u = C * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+/// RMSNorm (llama) or scale-only LayerNorm (opt) forward over rows.
+fn norm_fwd(x: &Mat, scale: &[f32], eps: f32, rms: bool) -> NormTrace {
+    let (rows, d) = (x.rows, x.cols);
+    let mut y = Mat::zeros(rows, d);
+    let mut rstd = vec![0.0f32; rows];
+    let mut mean = if rms { Vec::new() } else { vec![0.0f32; rows] };
+    for r in 0..rows {
+        let xr = x.row(r);
+        if rms {
+            let ms: f64 = xr.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+                / d as f64;
+            let rs = (1.0 / (ms + eps as f64).sqrt()) as f32;
+            rstd[r] = rs;
+            let yr = y.row_mut(r);
+            for j in 0..d {
+                yr[j] = xr[j] * rs * scale[j];
+            }
+        } else {
+            let mu = (xr.iter().map(|&v| v as f64).sum::<f64>() / d as f64) as f32;
+            let var: f64 = xr.iter()
+                .map(|&v| {
+                    let c = (v - mu) as f64;
+                    c * c
+                })
+                .sum::<f64>()
+                / d as f64;
+            let rs = (1.0 / (var + eps as f64).sqrt()) as f32;
+            mean[r] = mu;
+            rstd[r] = rs;
+            let yr = y.row_mut(r);
+            for j in 0..d {
+                yr[j] = (xr[j] - mu) * rs * scale[j];
+            }
+        }
+    }
+    NormTrace { y, rstd, mean }
+}
+
+/// Backward of `norm_fwd`: returns (dx, dscale).
+fn norm_bwd(x: &Mat, nt: &NormTrace, scale: &[f32], dy: &Mat, _eps: f32,
+            rms: bool) -> (Mat, Vec<f32>) {
+    let (rows, d) = (x.rows, x.cols);
+    let mut dx = Mat::zeros(rows, d);
+    let mut dscale = vec![0.0f32; d];
+    for r in 0..rows {
+        let xr = x.row(r);
+        let dyr = dy.row(r);
+        let rs = nt.rstd[r] as f64;
+        if rms {
+            let mut dot = 0.0f64;
+            for j in 0..d {
+                dot += dyr[j] as f64 * scale[j] as f64 * xr[j] as f64;
+            }
+            let c = rs * rs * rs * dot / d as f64;
+            let dxr = dx.row_mut(r);
+            for j in 0..d {
+                dxr[j] = (rs * (dyr[j] as f64 * scale[j] as f64)
+                    - c * xr[j] as f64) as f32;
+                dscale[j] += dyr[j] * xr[j] * nt.rstd[r];
+            }
+        } else {
+            let mu = nt.mean[r] as f64;
+            let mut m1 = 0.0f64; // mean of a_j
+            let mut m2 = 0.0f64; // mean of a_j * xh_j
+            for j in 0..d {
+                let xh = (xr[j] as f64 - mu) * rs;
+                let a = dyr[j] as f64 * scale[j] as f64;
+                m1 += a;
+                m2 += a * xh;
+            }
+            m1 /= d as f64;
+            m2 /= d as f64;
+            let dxr = dx.row_mut(r);
+            for j in 0..d {
+                let xh = (xr[j] as f64 - mu) * rs;
+                let a = dyr[j] as f64 * scale[j] as f64;
+                dxr[j] = (rs * (a - m1 - xh * m2)) as f32;
+                dscale[j] += dyr[j] * xh as f32;
+            }
+        }
+    }
+    (dx, dscale)
+}
+
+/// Rotary-embedding tables: cos/sin of pos·θ^(-i/half), (T × half).
+fn rope_tables(t_len: usize, dh: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
+    let half = dh / 2;
+    let freqs: Vec<f64> = (0..half)
+        .map(|i| theta.powf(-(i as f64) / half as f64))
+        .collect();
+    let mut cos = vec![0.0f32; t_len * half];
+    let mut sin = vec![0.0f32; t_len * half];
+    for t in 0..t_len {
+        for (i, &freq) in freqs.iter().enumerate() {
+            let ang = t as f64 * freq;
+            cos[t * half + i] = ang.cos() as f32;
+            sin[t * half + i] = ang.sin() as f32;
+        }
+    }
+    (cos, sin)
+}
+
+/// Apply (or invert, for the backward pass) the rotary embedding in place
+/// over a (B·T, d) matrix laid out as H heads of dh columns.
+fn rope_apply(m: &mut Mat, t_len: usize, h: usize, dh: usize, cos: &[f32],
+              sin: &[f32], inverse: bool) {
+    let half = dh / 2;
+    for r in 0..m.rows {
+        let t = r % t_len;
+        let tab = t * half;
+        let row = m.row_mut(r);
+        for hi in 0..h {
+            let off = hi * dh;
+            for i in 0..half {
+                let c = cos[tab + i];
+                let s = sin[tab + i];
+                let x1 = row[off + i];
+                let x2 = row[off + half + i];
+                if inverse {
+                    row[off + i] = x1 * c + x2 * s;
+                    row[off + half + i] = -x1 * s + x2 * c;
+                } else {
+                    row[off + i] = x1 * c - x2 * s;
+                    row[off + half + i] = x1 * s + x2 * c;
+                }
+            }
+        }
+    }
+}
+
+/// Causal multi-head attention forward.  Returns the merged (B·T, d) output
+/// and the softmax probabilities (B·H·T, T) for the backward pass.
+fn attention_fwd(q: &Mat, k: &Mat, v: &Mat, b: usize, t_len: usize, h: usize,
+                 dh: usize) -> (Mat, Mat) {
+    let d = h * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut attn = Mat::zeros(b * t_len, d);
+    let mut probs = Mat::zeros(b * h * t_len, t_len);
+    for bi in 0..b {
+        let base = bi * t_len;
+        for hi in 0..h {
+            let off = hi * dh;
+            for t in 0..t_len {
+                let prow_idx = (bi * h + hi) * t_len + t;
+                // scores (masked rows stay zero)
+                let mut maxv = f32::NEG_INFINITY;
+                {
+                    let qrow = &q.row(base + t)[off..off + dh];
+                    let prow = probs.row_mut(prow_idx);
+                    for u in 0..=t {
+                        let krow = &k.data[(base + u) * d + off
+                            ..(base + u) * d + off + dh];
+                        let s = dot_f32(qrow, krow) * scale;
+                        prow[u] = s;
+                        maxv = maxv.max(s);
+                    }
+                    let mut sum = 0.0f64;
+                    for u in 0..=t {
+                        let e = ((prow[u] - maxv) as f64).exp();
+                        prow[u] = e as f32;
+                        sum += e;
+                    }
+                    let isum = (1.0 / sum) as f32;
+                    for u in 0..=t {
+                        prow[u] *= isum;
+                    }
+                }
+                // out_t = Σ_u p[u] · v_u
+                let prow = probs.row(prow_idx);
+                let orow = &mut attn.data[(base + t) * d + off
+                    ..(base + t) * d + off + dh];
+                for (u, &pu) in prow.iter().enumerate().take(t + 1) {
+                    if pu == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v.data[(base + u) * d + off
+                        ..(base + u) * d + off + dh];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += pu * vv;
+                    }
+                }
+            }
+        }
+    }
+    (attn, probs)
+}
+
+/// Backward of `attention_fwd`: gradients w.r.t. q, k, v (all (B·T, d)).
+#[allow(clippy::too_many_arguments)]
+fn attention_bwd(q: &Mat, k: &Mat, v: &Mat, probs: &Mat, dattn: &Mat,
+                 b: usize, t_len: usize, h: usize, dh: usize)
+                 -> (Mat, Mat, Mat) {
+    let d = h * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut dq = Mat::zeros(b * t_len, d);
+    let mut dk = Mat::zeros(b * t_len, d);
+    let mut dv = Mat::zeros(b * t_len, d);
+    let mut dp = vec![0.0f32; t_len];
+    for bi in 0..b {
+        let base = bi * t_len;
+        for hi in 0..h {
+            let off = hi * dh;
+            for t in 0..t_len {
+                let prow = probs.row((bi * h + hi) * t_len + t);
+                let dout = &dattn.data[(base + t) * d + off
+                    ..(base + t) * d + off + dh];
+                // dv_u += p[u]·dout ; dp[u] = dout·v_u
+                let mut rowdot = 0.0f64;
+                for u in 0..=t {
+                    let vrow = &v.data[(base + u) * d + off
+                        ..(base + u) * d + off + dh];
+                    dp[u] = dot_f32(dout, vrow);
+                    rowdot += dp[u] as f64 * prow[u] as f64;
+                    let dvrow = &mut dv.data[(base + u) * d + off
+                        ..(base + u) * d + off + dh];
+                    let pu = prow[u];
+                    if pu != 0.0 {
+                        for (dst, &src) in dvrow.iter_mut().zip(dout) {
+                            *dst += pu * src;
+                        }
+                    }
+                }
+                // softmax backward + score scale
+                let rowdot = rowdot as f32;
+                for u in 0..=t {
+                    let ds = prow[u] * (dp[u] - rowdot) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let krow = &k.data[(base + u) * d + off
+                        ..(base + u) * d + off + dh];
+                    let qrow = &q.data[(base + t) * d + off
+                        ..(base + t) * d + off + dh];
+                    {
+                        let dqrow = &mut dq.data[(base + t) * d + off
+                            ..(base + t) * d + off + dh];
+                        for (dst, &src) in dqrow.iter_mut().zip(krow) {
+                            *dst += ds * src;
+                        }
+                    }
+                    {
+                        let dkrow = &mut dk.data[(base + u) * d + off
+                            ..(base + u) * d + off + dh];
+                        for (dst, &src) in dkrow.iter_mut().zip(qrow) {
+                            *dst += ds * src;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activations_and_grads_consistent() {
+        // silu/gelu derivatives vs central differences
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let h = 1e-3f32;
+            let num = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((num - gelu_grad(x)).abs() < 1e-2, "gelu'({x})");
+            let snum = (silu(x + h) - silu(x - h)) / (2.0 * h);
+            let sig = sigmoid(x);
+            let san = sig * (1.0 + x * (1.0 - sig));
+            assert!((snum - san).abs() < 1e-2, "silu'({x})");
+        }
+    }
+
+    #[test]
+    fn rope_roundtrip() {
+        let (cos, sin) = rope_tables(8, 4, 10000.0);
+        let mut m = Mat::zeros(16, 8); // b=2, t=8, h=2, dh=4
+        for (i, v) in m.data.iter_mut().enumerate() {
+            *v = (i as f32 * 0.37).sin();
+        }
+        let orig = m.clone();
+        rope_apply(&mut m, 8, 2, 4, &cos, &sin, false);
+        rope_apply(&mut m, 8, 2, 4, &cos, &sin, true);
+        for (a, b2) in m.data.iter().zip(&orig.data) {
+            assert!((a - b2).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn attention_rows_are_distributions() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let (b, t, h, dh) = (2usize, 6usize, 2usize, 4usize);
+        let q = Mat::randn(&mut rng, b * t, h * dh, 1.0);
+        let k = Mat::randn(&mut rng, b * t, h * dh, 1.0);
+        let v = Mat::randn(&mut rng, b * t, h * dh, 1.0);
+        let (_, probs) = attention_fwd(&q, &k, &v, b, t, h, dh);
+        for r in 0..probs.rows {
+            let tpos = r % t;
+            let sum: f32 = probs.row(r)[..=tpos].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "row {r} sums to {sum}");
+            for &z in &probs.row(r)[tpos + 1..] {
+                assert_eq!(z, 0.0); // causal mask
+            }
+        }
+    }
+}

@@ -1,18 +1,20 @@
 //! Typed execution facade over a (Runtime, config) pair.
 //!
-//! Each method assembles the exact ordered literal list the artifact's
-//! manifest signature declares, executes, and unpacks outputs into host
-//! types.  All request-path model math goes through here.
+//! Each method validates the exact ordered signature the artifact's
+//! manifest declares (the rust↔build-side ABI), then executes the graph on
+//! the native kernels (`runtime::native`) and unpacks outputs into host
+//! types.  All request-path model math goes through here.  `Session` is
+//! `Sync` — the serving drain shares one session across worker threads.
 
 use std::collections::BTreeMap;
 
 use anyhow::{ensure, Result};
 
-use super::Runtime;
+use super::{native, Runtime};
 use crate::model::{ConfigMeta, ParamStore};
 use crate::tensor::{IntTensor, Mat, Tensor};
 
-/// Per-site calibration statistics accumulated from the moments artifact.
+/// Per-site calibration statistics accumulated from the moments pass.
 #[derive(Clone, Debug)]
 pub struct SiteMoments {
     pub site: String,
@@ -36,22 +38,13 @@ impl<'rt> Session<'rt> {
         Session { rt, cfg: rt.manifest.config(config).clone() }
     }
 
-    fn param_literals(&self, params: &ParamStore) -> Result<Vec<xla::Literal>> {
-        params.check_matches(&self.cfg)?;
-        params.ordered().iter().map(|t| t.to_literal()).collect()
-    }
-
     /// Dense forward: mean loss + logits. Dispatches to the b1 artifact for
     /// single-sequence batches when available.
     pub fn fwd(&self, params: &ParamStore, tokens: &IntTensor) -> Result<(f32, Tensor)> {
         let file = self.fwd_file(tokens)?;
-        let mut inputs = self.param_literals(params)?;
-        inputs.push(tokens.to_literal()?);
-        let outs = self.rt.exec(&file, &inputs)?;
-        ensure!(outs.len() == 2, "fwd returned {} outputs", outs.len());
-        let loss = Tensor::from_literal(&outs[0])?.data[0];
-        let logits = Tensor::from_literal(&outs[1])?;
-        Ok((loss, logits))
+        self.rt.mark_compiled(&file);
+        params.check_matches(&self.cfg)?;
+        native::forward(&self.cfg, params, tokens, None)
     }
 
     fn fwd_file(&self, tokens: &IntTensor) -> Result<String> {
@@ -74,13 +67,14 @@ impl<'rt> Session<'rt> {
     /// Calibration gradients for every target matrix.
     pub fn grads(&self, params: &ParamStore, tokens: &IntTensor)
                  -> Result<(f32, BTreeMap<String, Mat>)> {
-        let mut inputs = self.param_literals(params)?;
-        inputs.push(tokens.to_literal()?);
-        let outs = self.rt.exec_tensors(&self.cfg.grads.file, &inputs)?;
-        ensure!(outs.len() == 1 + self.cfg.targets.len());
-        let loss = outs[0].data[0];
+        self.rt.mark_compiled(&self.cfg.grads.file);
+        params.check_matches(&self.cfg)?;
+        let (loss, all) = native::loss_and_param_grads(&self.cfg, params, tokens)?;
         let mut grads = BTreeMap::new();
-        for (t, g) in self.cfg.targets.iter().zip(&outs[1..]) {
+        for t in &self.cfg.targets {
+            let g = all
+                .get(&t.name)
+                .ok_or_else(|| anyhow::anyhow!("no gradient for {}", t.name))?;
             grads.insert(t.name.clone(), g.to_mat());
         }
         Ok((loss, grads))
@@ -89,21 +83,26 @@ impl<'rt> Session<'rt> {
     /// One moments pass; `accumulate_moments` sums over calibration batches.
     pub fn moments(&self, params: &ParamStore, tokens: &IntTensor)
                    -> Result<Vec<SiteMoments>> {
-        let mut inputs = self.param_literals(params)?;
-        inputs.push(tokens.to_literal()?);
-        let outs = self.rt.exec_tensors(&self.cfg.moments.file, &inputs)?;
-        // outputs: loss (graph anchor, see aot.py), then 3 per site
-        ensure!(outs.len() == 1 + 3 * self.cfg.sites.len());
+        self.rt.mark_compiled(&self.cfg.moments.file);
+        params.check_matches(&self.cfg)?;
+        let (_, sites) = native::forward_sites(&self.cfg, params, tokens)?;
+        ensure!(sites.len() == self.cfg.sites.len());
         let count = tokens.shape[0] * (tokens.shape[1] - 1);
         let mut result = Vec::with_capacity(self.cfg.sites.len());
-        for (i, s) in self.cfg.sites.iter().enumerate() {
-            result.push(SiteMoments {
-                site: s.name.clone(),
-                xx: outs[1 + 3 * i].to_mat(),
-                sum: outs[1 + 3 * i + 1].data.clone(),
-                abssum: outs[1 + 3 * i + 2].data.clone(),
-                count,
-            });
+        for (meta, (name, flat)) in self.cfg.sites.iter().zip(sites) {
+            ensure!(meta.name == name, "site order mismatch: {} vs {name}",
+                    meta.name);
+            ensure!(flat.cols == meta.dim);
+            let xx = crate::linalg::gram(&flat);
+            let mut sum = vec![0.0f32; meta.dim];
+            let mut abssum = vec![0.0f32; meta.dim];
+            for r in 0..flat.rows {
+                for (j, &v) in flat.row(r).iter().enumerate() {
+                    sum[j] += v;
+                    abssum[j] += v.abs();
+                }
+            }
+            result.push(SiteMoments { site: name, xx, sum, abssum, count });
         }
         Ok(result)
     }
@@ -136,7 +135,7 @@ impl<'rt> Session<'rt> {
         let mut mean_loss = 0.0f32;
         let mut mean: BTreeMap<String, Mat> = BTreeMap::new();
         let mut fisher: BTreeMap<String, Mat> = BTreeMap::new();
-        for (i, b) in batches.iter().enumerate() {
+        for b in batches {
             let (loss, grads) = self.grads(params, b)?;
             mean_loss += loss;
             for (name, g) in grads {
@@ -147,7 +146,6 @@ impl<'rt> Session<'rt> {
                     *fv += gv * gv;
                 }
             }
-            let _ = i;
         }
         let inv = 1.0 / batches.len() as f32;
         mean_loss *= inv;
@@ -160,32 +158,24 @@ impl<'rt> Session<'rt> {
         Ok((mean_loss, mean, fisher))
     }
 
-    /// One Adam step via the train artifact; updates params/m/v in place.
+    /// One Adam step via the train graph; updates params/m/v in place.
     pub fn train_step(&self, params: &mut ParamStore, m: &mut ParamStore,
                       v: &mut ParamStore, step: i32, lr: f32,
                       tokens: &IntTensor) -> Result<f32> {
-        let p = self.cfg.params.len();
-        let mut inputs = self.param_literals(params)?;
-        inputs.extend(self.param_literals(m)?);
-        inputs.extend(self.param_literals(v)?);
-        inputs.push(IntTensor::scalar(step).to_literal()?);
-        inputs.push(Tensor::scalar(lr).to_literal()?);
-        inputs.push(tokens.to_literal()?);
-        let outs = self.rt.exec_tensors(&self.cfg.train.file, &inputs)?;
-        ensure!(outs.len() == 3 * p + 1);
-        let names: Vec<String> = self.cfg.params.iter().map(|q| q.name.clone()).collect();
-        for (i, name) in names.iter().enumerate() {
-            params.set(name, outs[i].clone());
-            m.set(name, outs[p + i].clone());
-            v.set(name, outs[2 * p + i].clone());
-        }
-        Ok(outs[3 * p].data[0])
+        self.rt.mark_compiled(&self.cfg.train.file);
+        params.check_matches(&self.cfg)?;
+        m.check_matches(&self.cfg)?;
+        v.check_matches(&self.cfg)?;
+        native::adam_step(&self.cfg, params, m, v, step, lr, tokens)
     }
 
-    /// Low-rank (Pallas-kernel) forward at a given ratio tag ("60", "40",
-    /// "60_b1", ...).  `factors[target] = (wu, wv)`; ranks smaller than the
-    /// artifact's uniform rank are zero-padded (numerically exact — see
-    /// `test_lowrank_zero_rank_component` on the python side).
+    /// Low-rank (fused-kernel) forward at a given ratio tag ("60", "40",
+    /// "60_b1", ...).  `factors[target] = (wu, wv)`.  The fixed-shape HLO
+    /// artifacts required zero-padding heterogeneous ranks up to the
+    /// artifact's uniform rank; natively the zero rows/cols contribute
+    /// exactly 0.0 to every accumulation, so the factors run unpadded (bit
+    /// -identical result, no per-request copies, FLOPs at the actual kept
+    /// rank).  The ABI validation — rank ≤ artifact rank — is kept.
     pub fn lowrank_fwd(&self, tag: &str, params: &ParamStore,
                        factors: &BTreeMap<String, (Mat, Mat)>,
                        tokens: &IntTensor) -> Result<(f32, Tensor)> {
@@ -194,10 +184,7 @@ impl<'rt> Session<'rt> {
             .lowrank
             .get(tag)
             .ok_or_else(|| anyhow::anyhow!("no lowrank artifact `{tag}`"))?;
-        let mut inputs: Vec<xla::Literal> = Vec::new();
-        for name in self.cfg.base_param_names() {
-            inputs.push(params.get(&name).to_literal()?);
-        }
+        self.rt.mark_compiled(&lm.art.file);
         for t in &self.cfg.targets {
             let k_art = lm.ranks[&t.name];
             let (wu, wv) = factors
@@ -206,47 +193,7 @@ impl<'rt> Session<'rt> {
             ensure!(wu.cols == wv.rows, "factor rank mismatch for {}", t.name);
             ensure!(wu.cols <= k_art,
                     "{}: rank {} exceeds artifact rank {k_art}", t.name, wu.cols);
-            inputs.push(pad_wu(wu, k_art).to_literal()?);
-            inputs.push(pad_wv(wv, k_art).to_literal()?);
         }
-        inputs.push(tokens.to_literal()?);
-        let outs = self.rt.exec(&lm.art.file, &inputs)?;
-        let loss = Tensor::from_literal(&outs[0])?.data[0];
-        let logits = Tensor::from_literal(&outs[1])?;
-        Ok((loss, logits))
-    }
-}
-
-fn pad_wu(wu: &Mat, k: usize) -> Tensor {
-    let mut out = Mat::zeros(wu.rows, k);
-    for r in 0..wu.rows {
-        out.row_mut(r)[..wu.cols].copy_from_slice(wu.row(r));
-    }
-    Tensor::from_mat(&out)
-}
-
-fn pad_wv(wv: &Mat, k: usize) -> Tensor {
-    let mut out = Mat::zeros(k, wv.cols);
-    for r in 0..wv.rows {
-        out.row_mut(r).copy_from_slice(wv.row(r));
-    }
-    Tensor::from_mat(&out)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn pad_factors_shapes() {
-        let wu = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
-        let p = pad_wu(&wu, 4);
-        assert_eq!(p.shape, vec![3, 4]);
-        assert_eq!(p.data[0..2], [1., 2.]);
-        assert_eq!(p.data[2..4], [0., 0.]);
-        let wv = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
-        let q = pad_wv(&wv, 4);
-        assert_eq!(q.shape, vec![4, 3]);
-        assert_eq!(q.data[6..], [0.0; 6]);
+        native::forward(&self.cfg, params, tokens, Some(factors))
     }
 }

@@ -1,6 +1,6 @@
 //! Dense tensors: `Mat` (2-D f32, row-major — the linalg workhorse) and
-//! `Tensor` (n-D f32) + `IntTensor` (i32 token buffers), with conversions to
-//! and from `xla::Literal` for the PJRT runtime boundary.
+//! `Tensor` (n-D f32) + `IntTensor` (i32 token buffers) shared across the
+//! native runtime, the compression engine, and the checkpoint format.
 
 use crate::util::rng::Rng;
 
@@ -181,22 +181,6 @@ impl Tensor {
     pub fn from_mat(m: &Mat) -> Tensor {
         Tensor { shape: vec![m.rows, m.cols], data: m.data.clone() }
     }
-
-    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
-    }
-
-    pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<Tensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = lit.to_vec::<f32>()?;
-        anyhow::ensure!(
-            data.len() == dims.iter().product::<usize>(),
-            "literal size mismatch: {} vs {:?}", data.len(), dims
-        );
-        Ok(Tensor { shape: dims, data })
-    }
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -213,11 +197,6 @@ impl IntTensor {
 
     pub fn scalar(v: i32) -> IntTensor {
         IntTensor { shape: vec![], data: vec![v] }
-    }
-
-    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
     }
 }
 

@@ -76,12 +76,17 @@ pub fn ckpt_path(dir: &Path, config: &str, family: &str, steps: usize) -> PathBu
     dir.join(format!("ckpt_{config}_{family}_{steps}.zst0"))
 }
 
+/// Serializes checkpoint creation: several test threads (or bench sections)
+/// asking for the same pretrained weights must train once, not N times.
+static TRAIN_GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 /// Load a cached pretrained checkpoint or train + save one.
 ///
 /// `family` selects the training-corpus mix ("llama", "vicuna", ...); the
 /// weights, not the architecture, are what differs.
 pub fn ensure_trained(session: &Session, corpus: &Corpus, family: &str,
                       tc: &TrainConfig, ckpt_dir: &Path) -> Result<ParamStore> {
+    let _gate = TRAIN_GATE.lock().unwrap_or_else(|e| e.into_inner());
     std::fs::create_dir_all(ckpt_dir)?;
     let path = ckpt_path(ckpt_dir, &session.cfg.name, family, tc.steps);
     if path.exists() {

@@ -1,5 +1,7 @@
-//! End-to-end integration over the real AOT artifacts (requires
-//! `make artifacts`): every rust↔PJRT ABI surface gets exercised once.
+//! End-to-end integration over the runtime ABI: every session surface
+//! (fwd, b1 dispatch, train, grads, moments, lowrank) gets exercised once.
+//! Runs on the native runtime with the built-in manifest; with
+//! `make artifacts` the same tests validate a real artifact directory.
 
 use std::collections::BTreeMap;
 

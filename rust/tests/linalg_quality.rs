@@ -1,0 +1,142 @@
+//! Linalg kernel quality gates at the shapes the shipped configs hit.
+//!
+//! These back the blocked/parallel kernel rewrite: reconstruction and
+//! orthogonality tolerances are set tight enough that a wrong block edge,
+//! a dropped accumulation, or a transposed index shows up immediately,
+//! while leaving ~10× headroom over the kernels' observed f32 error so the
+//! tests are not flaky across platforms.
+
+use zs_svd::linalg::qr::qr;
+use zs_svd::linalg::{cholesky, gram, matmul, matmul_bt, reconstruct,
+                     solve_lower, solve_lower_t, svd, tail_energy};
+use zs_svd::tensor::Mat;
+use zs_svd::util::rng::Rng;
+
+fn max_rel_dev(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| {
+            ((x - y).abs() / (1.0 + x.abs().max(y.abs()))) as f64
+        })
+        .fold(0.0, f64::max)
+}
+
+fn spd(rng: &mut Rng, n: usize) -> Mat {
+    let x = Mat::randn(rng, 2 * n, n, 1.0);
+    let mut c = gram(&x);
+    c.add_diag(0.05 * n as f32);
+    c
+}
+
+#[test]
+fn svd_reconstruction_and_value_ordering_at_config_shapes() {
+    let mut rng = Rng::new(101);
+    for (m, n) in [(128usize, 128usize), (352, 128), (128, 352), (192, 512)] {
+        let a = Mat::randn(&mut rng, m, n, 1.0);
+        let s = svd(&a);
+        let r = m.min(n);
+        assert_eq!(s.sigma.len(), r);
+        // descending, non-negative
+        for w in s.sigma.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5, "{m}x{n}: sigma not sorted {w:?}");
+        }
+        assert!(s.sigma[r - 1] >= -1e-6);
+        // full-rank reconstruction: relative Frobenius error
+        let rec = reconstruct(&s, r);
+        let err = a.sub(&rec).frob_norm() / a.frob_norm().max(1e-12);
+        assert!(err < 1e-4, "{m}x{n}: svd reconstruction error {err}");
+        // Eckart–Young: rank-k error² == tail energy, k = r/2
+        let k = r / 2;
+        let err2 = a.sub(&reconstruct(&s, k)).frob_norm().powi(2);
+        let tail = tail_energy(&s.sigma, k);
+        assert!((err2 - tail).abs() / tail.max(1e-9) < 1e-2,
+                "{m}x{n}: err² {err2} vs tail {tail}");
+    }
+}
+
+#[test]
+fn svd_singular_vectors_orthonormal() {
+    let mut rng = Rng::new(102);
+    let a = Mat::randn(&mut rng, 352, 128, 1.0);
+    let s = svd(&a);
+    for (mat, label) in [(&s.u, "U"), (&s.v, "V")] {
+        let g = matmul(&mat.transpose(), mat);
+        let dev = max_rel_dev(&g, &Mat::eye(g.rows));
+        assert!(dev < 1e-4, "{label}ᵀ{label} deviates from I by {dev}");
+    }
+}
+
+#[test]
+fn qr_orthogonality_and_reconstruction() {
+    let mut rng = Rng::new(103);
+    for (m, n) in [(128usize, 128usize), (352, 128), (200, 64)] {
+        let a = Mat::randn(&mut rng, m, n, 1.0);
+        let (q, r) = qr(&a);
+        let dev = max_rel_dev(&matmul(&q.transpose(), &q), &Mat::eye(n));
+        assert!(dev < 1e-4, "{m}x{n}: QᵀQ deviates by {dev}");
+        let rec_err = matmul(&q, &r).sub(&a).frob_norm() / a.frob_norm();
+        assert!(rec_err < 1e-4, "{m}x{n}: QR reconstruction error {rec_err}");
+        // R upper-triangular exactly
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn cholesky_roundtrip_and_solves_on_random_spd() {
+    let mut rng = Rng::new(104);
+    for n in [128usize, 352, 512] {
+        let c = spd(&mut rng, n);
+        let l = cholesky(&c).expect("SPD input must factor");
+        // LLᵀ == C
+        let rec = matmul_bt(&l, &l);
+        let dev = max_rel_dev(&rec, &c);
+        assert!(dev < 1e-4, "n={n}: LLᵀ deviates by {dev}");
+        // strict upper part exactly zero
+        for i in 0..n {
+            for j in i + 1..n {
+                assert_eq!(l.at(i, j), 0.0);
+            }
+        }
+        // forward/backward triangular solves
+        let b = Mat::randn(&mut rng, n, 8, 1.0);
+        let x = solve_lower(&l, &b);
+        let res = matmul(&l, &x).sub(&b).frob_norm() / b.frob_norm();
+        assert!(res < 1e-4, "n={n}: forward solve residual {res}");
+        let y = solve_lower_t(&l, &b);
+        let res = matmul(&l.transpose(), &y).sub(&b).frob_norm() / b.frob_norm();
+        assert!(res < 1e-4, "n={n}: backward solve residual {res}");
+    }
+}
+
+#[test]
+fn blocked_matmul_matches_f64_reference_at_config_shapes() {
+    let mut rng = Rng::new(105);
+    for (m, k, n) in [(352usize, 128usize, 352usize), (128, 352, 128),
+                      (512, 192, 512), (131, 257, 67)] {
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let b = Mat::randn(&mut rng, k, n, 1.0);
+        let c = matmul(&a, &b);
+        let mut reference = Mat::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for kk in 0..k {
+                    s += a.at(i, kk) as f64 * b.at(kk, j) as f64;
+                }
+                *reference.at_mut(i, j) = s as f32;
+            }
+        }
+        let dev = max_rel_dev(&c, &reference);
+        assert!(dev < 1e-4, "{m}x{k}x{n}: matmul deviates by {dev}");
+        // Bᵀ variant against the materialized transpose
+        let cbt = matmul_bt(&a, &b.transpose());
+        let dev = max_rel_dev(&cbt, &reference);
+        assert!(dev < 1e-4, "{m}x{k}x{n}: matmul_bt deviates by {dev}");
+    }
+}

@@ -1,0 +1,85 @@
+//! Serial-vs-parallel equivalence harness: the `exec` worker pool must be
+//! invisible in the numbers.  For thread counts {1, 2, 4} the parallel
+//! matmul kernel, `decompose_all`, and a full `compress_zs` run (including
+//! one correction iteration, which exercises the native backward pass and
+//! its parallel projections) must produce BIT-IDENTICAL results — ranks,
+//! `stored_params`, replacement matrices, factors.
+//!
+//! Everything lives in ONE test function: `exec::set_threads` is process
+//! global, and the harness would otherwise race against itself.
+
+use zs_svd::compress::pipeline::decompose_all;
+use zs_svd::compress::{compress_zs, Calibration, ZsOpts};
+use zs_svd::data;
+use zs_svd::exec;
+use zs_svd::linalg::{matmul, matmul_serial};
+use zs_svd::model::init::init_params;
+use zs_svd::runtime::session::Session;
+use zs_svd::runtime::Runtime;
+use zs_svd::tensor::Mat;
+use zs_svd::util::rng::Rng;
+
+#[test]
+fn serial_and_parallel_paths_are_bit_identical() {
+    let rt = Runtime::load_default().unwrap();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(31);
+    let params = init_params(&sess.cfg, &mut rng);
+    let world = data::default_world();
+    let corpus = data::training_corpus("llama", &world);
+    // one real batch so the correction iteration (mean_grads) can run
+    let mut brng = Rng::new(0xBA7C);
+    let batch = corpus.calibration_batch(&mut brng, sess.cfg.batch,
+                                         sess.cfg.seq_len);
+    let calib = Calibration::synthetic(&sess.cfg, 0xE9_01, vec![batch]);
+
+    // ---- parallel matmul kernel vs the serial reference ----
+    let a = Mat::randn(&mut rng, 352, 256, 1.0);
+    let b = Mat::randn(&mut rng, 256, 300, 1.0);
+    let reference = matmul_serial(&a, &b);
+    for t in [1usize, 2, 4] {
+        exec::set_threads(t);
+        assert_eq!(matmul(&a, &b), reference, "matmul at {t} threads");
+    }
+
+    // ---- decompose_all ----
+    exec::set_threads(1);
+    let serial = decompose_all(&sess, &params, &calib);
+    for t in [2usize, 4] {
+        exec::set_threads(t);
+        let par = decompose_all(&sess, &params, &calib);
+        assert_eq!(par.len(), serial.len());
+        for (p, s) in par.iter().zip(&serial) {
+            assert_eq!(p.name, s.name, "{t} threads");
+            assert_eq!(p.lambda, s.lambda, "{}: lambda at {t} threads", p.name);
+            assert_eq!(p.s, s.s, "{}: whitening factor at {t} threads", p.name);
+            assert_eq!(p.svd.sigma, s.svd.sigma, "{}: sigma at {t} threads", p.name);
+            assert_eq!(p.svd.u, s.svd.u, "{}: U at {t} threads", p.name);
+            assert_eq!(p.svd.v, s.svd.v, "{}: V at {t} threads", p.name);
+            assert_eq!(p.dl, s.dl, "{}: dl at {t} threads", p.name);
+        }
+    }
+
+    // ---- full compress_zs, including one correction iteration (native
+    // backward pass + parallel projections) ----
+    let opts = ZsOpts { correction_iters: 1, ..ZsOpts::new(0.5) };
+    exec::set_threads(1);
+    let plan_serial = compress_zs(&sess, &params, &calib, &opts).unwrap();
+    for t in [2usize, 4] {
+        exec::set_threads(t);
+        let plan = compress_zs(&sess, &params, &calib, &opts).unwrap();
+        assert_eq!(plan.ranks(), plan_serial.ranks(), "ranks at {t} threads");
+        assert_eq!(plan.targets.len(), plan_serial.targets.len());
+        for (x, y) in plan.targets.iter().zip(&plan_serial.targets) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.dense, y.dense, "{}: dense flag at {t} threads", x.name);
+            assert_eq!(x.stored_params, y.stored_params,
+                       "{}: stored_params at {t} threads", x.name);
+            assert_eq!(x.replacement, y.replacement,
+                       "{}: replacement differs at {t} threads", x.name);
+            assert_eq!(x.factors, y.factors,
+                       "{}: factors differ at {t} threads", x.name);
+        }
+    }
+    exec::set_threads(0);
+}

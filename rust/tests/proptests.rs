@@ -327,6 +327,73 @@ fn checkpoint_roundtrip_random_stores() {
 }
 
 #[test]
+fn zero_sum_keeps_cumulative_loss_change_balanced() {
+    // The zero-sum invariant (paper Eq. 11): with Strategy::ZeroSum the
+    // running sum of predicted loss changes stays within the sign-balance
+    // bound of zero — one max-|ΔL| step of drift, plus one more per pop
+    // where the preferred-sign heap was empty — and each matrix's kept set
+    // is a σ-descending prefix: a component is never retained while a
+    // higher-scoring (larger-σ) component of the same matrix was dropped.
+    forall("zero-sum-invariant", CASES, |rng| {
+        let count = rng.range(3, 7);
+        let ds = rand_decomps(rng, count);
+        let ratio = 0.15 + 0.7 * rng.uniform();
+        (ds, ratio)
+    }, |(ds, ratio)| {
+        let r = select(ds, *ratio, Costing::Standard, Strategy::ZeroSum);
+        let max_dl = ds
+            .iter()
+            .flat_map(|d| d.dl.iter())
+            .fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+        let bound = (2.0 + r.forced_pops as f64) * max_dl + 1e-9;
+        if r.final_s.abs() > bound {
+            return Err(format!("final drift {} exceeds bound {bound}", r.final_s));
+        }
+        if r.max_abs_s > bound {
+            return Err(format!("peak drift {} exceeds bound {bound}", r.max_abs_s));
+        }
+        for d in ds {
+            let kept = &r.kept[&d.name];
+            if kept.is_empty() {
+                return Err(format!("{} drained to rank 0", d.name));
+            }
+            for (i, &c) in kept.iter().enumerate() {
+                if c != i {
+                    return Err(format!(
+                        "{}: kept {:?} retains component {c} while a \
+                         higher-σ one was dropped", d.name, kept));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zero_sum_removal_monotone_in_budget() {
+    // Shrinking the retention ratio (growing the removal budget) can only
+    // remove more components, never fewer.
+    forall("zero-sum-monotone", CASES, |rng| {
+        let ds = rand_decomps(rng, rng.range(2, 5));
+        let hi = 0.5 + 0.4 * rng.uniform();
+        let lo = hi - 0.3;
+        (ds, lo, hi)
+    }, |(ds, lo, hi)| {
+        let aggressive = select(ds, *lo, Costing::Standard, Strategy::ZeroSum);
+        let mild = select(ds, *hi, Costing::Standard, Strategy::ZeroSum);
+        if aggressive.removed < mild.removed {
+            return Err(format!(
+                "removed {} at ratio {lo} but {} at ratio {hi}",
+                aggressive.removed, mild.removed));
+        }
+        if aggressive.saved_params + 1e-9 < mild.saved_params {
+            return Err("saved_params not monotone in budget".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn whitening_ridge_always_succeeds() {
     forall("ridge", CASES, |rng| {
         // possibly rank-deficient moments (fewer samples than dims)

@@ -1,0 +1,155 @@
+//! Minimal offline shim of the `anyhow` API surface used by `zs-svd`.
+//!
+//! The real crate is unavailable in offline builds; this shim provides the
+//! subset the codebase relies on — `Error`, `Result`, the `anyhow!` /
+//! `bail!` / `ensure!` macros, and the `Context` extension trait — with the
+//! same call-site syntax.  Errors are flattened to strings: context frames
+//! are prepended `"context: cause"` exactly like `anyhow`'s Display chain.
+
+use std::fmt;
+
+/// String-backed error value.  Cheap, `Send + Sync`, and good enough for a
+/// binary that only ever formats its errors.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `From` impls for the concrete error types the codebase propagates with
+/// `?` into `anyhow::Result`.
+macro_rules! impl_from {
+    ($($ty:ty),* $(,)?) => {
+        $(impl From<$ty> for Error {
+            fn from(e: $ty) -> Error {
+                Error::msg(e)
+            }
+        })*
+    };
+}
+
+impl_from!(
+    std::io::Error,
+    std::str::Utf8Error,
+    std::string::FromUtf8Error,
+    std::num::ParseIntError,
+    std::num::ParseFloatError,
+    std::fmt::Error,
+    String,
+);
+
+impl From<&str> for Error {
+    fn from(e: &str) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ", stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_context() {
+        assert_eq!(fails(true).unwrap(), 7);
+        let e = fails(false).unwrap_err();
+        assert_eq!(e.to_string(), "flag was false");
+        let e = anyhow!("x = {}", 3).context("outer");
+        assert_eq!(e.to_string(), "outer: x = 3");
+        let r: Result<()> = Err(anyhow!("inner"));
+        let r = r.with_context(|| "while testing");
+        assert_eq!(r.unwrap_err().to_string(), "while testing: inner");
+    }
+
+    #[test]
+    fn question_mark_conversions() {
+        fn io() -> Result<()> {
+            std::fs::read("/definitely/not/a/path/zs-svd-test")?;
+            Ok(())
+        }
+        assert!(io().is_err());
+    }
+}
