@@ -1,0 +1,65 @@
+//! Decode-phase throughput — dense vs low-rank token generation under the
+//! continuous-batching scheduler (the decode-side companion of Table 7,
+//! matching SVD-LLM's decode tokens/sec efficiency metric).
+//!
+//! Every engine serves the SAME synthetic request stream (random prompts,
+//! greedy sampling, saturating arrivals) through the KV-cached step kernel:
+//! the dense baseline against ZS-SVD low-rank factors at two compression
+//! ratios, capped/padded onto the fixed-rank artifacts exactly as in the
+//! prefill benchmark.
+
+mod common;
+
+use zs_svd::coordinator::{self, Method};
+use zs_svd::decode::{run_decode, synth_requests, DecodeConfig};
+use zs_svd::report::{f2, mb, Table};
+use zs_svd::serve::Engine;
+use zs_svd::util::benchkit::fast_mode;
+
+fn main() {
+    let rt = common::runtime();
+    let p = common::prepare(rt, "tiny", "llama", 7);
+    let (n_requests, max_new) = if fast_mode() { (6, 8) } else { (24, 32) };
+    let prompt_len = p.session.cfg.seq_len / 4;
+
+    let dc = DecodeConfig {
+        max_slots: 4,
+        max_new_tokens: max_new,
+        temperature: 0.0,
+        seed: 1,
+        arrival_steps: 0.0, // saturating queue
+    };
+    let reqs = synth_requests(&p.session.cfg, n_requests, prompt_len, max_new,
+                              0xD0);
+
+    let mut t = Table::new(
+        "decode throughput (KV-cached generation, continuous batching)",
+        &["engine", "compression", "decode tok/s", "total tok/s", "p50 ms",
+          "p95 ms", "ttft p50 ms", "KV MB/slot"],
+    );
+
+    let (d, _) = run_decode(&p.session, &p.params, &Engine::Dense, &reqs, &dc)
+        .expect("dense decode");
+    eprintln!("  dense: {:.0} decode tok/s", d.decode_tok_per_sec);
+    t.row(vec!["original".into(), "0%".into(), f2(d.decode_tok_per_sec),
+               f2(d.total_tok_per_sec), f2(d.p50_ms), f2(d.p95_ms),
+               f2(d.p50_ttft_ms), mb(d.kv_bytes_per_slot as f64)]);
+
+    for (comp, ratio) in [("40%", 0.6), ("60%", 0.4)] {
+        let plan = coordinator::run_method(&p, &Method::zs(ratio), ratio)
+            .expect("compress");
+        let tag = format!("{}", (ratio * 100.0) as usize);
+        let lm = p.session.cfg.lowrank.get(&tag).expect("artifact tag");
+        let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
+        let params = plan.apply(&p.params);
+        let (s, _) = run_decode(&p.session, &params, &engine, &reqs, &dc)
+            .expect("lowrank decode");
+        eprintln!("  {}@{comp}: {:.0} decode tok/s", plan.method,
+                  s.decode_tok_per_sec);
+        t.row(vec![plan.method.clone(), comp.into(), f2(s.decode_tok_per_sec),
+                   f2(s.total_tok_per_sec), f2(s.p50_ms), f2(s.p95_ms),
+                   f2(s.p50_ttft_ms), mb(s.kv_bytes_per_slot as f64)]);
+    }
+
+    common::emit("decode_throughput", &t);
+}

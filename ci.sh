@@ -40,4 +40,9 @@ cargo test -q
 echo "== bench smoke: microbench_linalg (ZS_BENCH_FAST=1) =="
 ZS_BENCH_FAST=1 cargo bench --bench microbench_linalg
 
+echo "== decode smoke: decode_throughput (ZS_BENCH_FAST=1) =="
+# tiny config, a few generated tokens, dense + low-rank engines through the
+# KV-cached continuous-batching path (checkpoint-cached training reused)
+ZS_BENCH_FAST=1 cargo bench --bench decode_throughput
+
 echo "CI OK"

@@ -25,6 +25,10 @@ pub struct ExperimentConfig {
     /// worker threads for the `exec` pool (0 = auto: `PALLAS_THREADS` env
     /// var, else available parallelism)
     pub threads: usize,
+    /// continuous-batching slots for the decode serving path
+    pub decode_slots: usize,
+    /// per-request generation budget for the decode serving path
+    pub max_new_tokens: usize,
     /// where checkpoints live
     pub ckpt_dir: PathBuf,
     /// where result tables are appended
@@ -45,6 +49,8 @@ impl Default for ExperimentConfig {
             ratios: vec![0.8, 0.6, 0.4],
             seed: 7,
             threads: 0,
+            decode_slots: 4,
+            max_new_tokens: 32,
             ckpt_dir: root.join("artifacts").join("ckpts"),
             out_dir: root.join("results"),
         }
@@ -70,6 +76,8 @@ impl ExperimentConfig {
                 .unwrap_or(d.ratios),
             seed: j.f64_or("seed", d.seed as f64) as u64,
             threads: j.usize_or("threads", d.threads),
+            decode_slots: j.usize_or("decode_slots", d.decode_slots),
+            max_new_tokens: j.usize_or("max_new_tokens", d.max_new_tokens),
             ckpt_dir: j
                 .get("ckpt_dir")
                 .and_then(Json::as_str)
@@ -101,6 +109,8 @@ impl ExperimentConfig {
             ("ratios", Json::arr(self.ratios.iter().map(|&r| Json::num(r)))),
             ("seed", Json::num(self.seed as f64)),
             ("threads", Json::num(self.threads as f64)),
+            ("decode_slots", Json::num(self.decode_slots as f64)),
+            ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
             ("ckpt_dir", Json::str(self.ckpt_dir.to_str().unwrap_or("."))),
             ("out_dir", Json::str(self.out_dir.to_str().unwrap_or("."))),
         ])
@@ -112,6 +122,7 @@ impl ExperimentConfig {
         self.calib_batches = self.calib_batches.min(2);
         self.ppl_batches = self.ppl_batches.min(2);
         self.instances_per_family = self.instances_per_family.min(12);
+        self.max_new_tokens = self.max_new_tokens.min(8);
         self
     }
 }
@@ -129,6 +140,8 @@ mod tests {
         assert_eq!(back.train_steps, c.train_steps);
         assert_eq!(back.ratios, c.ratios);
         assert_eq!(back.ckpt_dir, c.ckpt_dir);
+        assert_eq!(back.decode_slots, c.decode_slots);
+        assert_eq!(back.max_new_tokens, c.max_new_tokens);
     }
 
     #[test]

@@ -1,0 +1,118 @@
+//! Per-sequence KV-cache arena for incremental decoding.
+//!
+//! One `KvCache` holds, per transformer layer, a `(max_len × d_model)` K
+//! matrix and V matrix plus a length cursor.  `decode_step` appends the
+//! current position's post-RoPE key and value rows and attends over rows
+//! `0..=pos`; rows `>= len` are never read, so `reset()` (slot reuse in the
+//! continuous-batching scheduler) only rewinds the cursor — the arena
+//! allocation survives for the life of the slot.
+//!
+//! The RoPE cos/sin tables (llama models) are precomputed here once per
+//! cache instead of once per token; they are bit-identical to the tables
+//! the full forward pass builds, which the decode parity gate relies on.
+
+use crate::model::ConfigMeta;
+use crate::runtime::native::rope_tables;
+use crate::tensor::Mat;
+
+/// Per-sequence KV cache: one K/V arena per layer + the position cursor.
+pub struct KvCache {
+    /// arena capacity in positions (== the model's `seq_len`)
+    pub max_len: usize,
+    /// filled positions; the next `decode_step` writes row `len`
+    pub len: usize,
+    /// model width (row length of the arenas)
+    pub d: usize,
+    /// per-layer keys, post-RoPE, `(max_len × d)`
+    pub k: Vec<Mat>,
+    /// per-layer values, `(max_len × d)`
+    pub v: Vec<Mat>,
+    /// RoPE tables `(max_len × dh/2)` flattened; empty for non-llama archs
+    pub(crate) cos: Vec<f32>,
+    pub(crate) sin: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ConfigMeta) -> KvCache {
+        let dh = cfg.d_model / cfg.n_heads;
+        let (cos, sin) = if cfg.arch == "llama" {
+            rope_tables(cfg.seq_len, dh, cfg.rope_theta)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        KvCache {
+            max_len: cfg.seq_len,
+            len: 0,
+            d: cfg.d_model,
+            k: (0..cfg.n_layers)
+                .map(|_| Mat::zeros(cfg.seq_len, cfg.d_model))
+                .collect(),
+            v: (0..cfg.n_layers)
+                .map(|_| Mat::zeros(cfg.seq_len, cfg.d_model))
+                .collect(),
+            cos,
+            sin,
+        }
+    }
+
+    /// Rewind for slot reuse.  Stale rows are unreachable (attention reads
+    /// only rows `< len`), so no zeroing is needed.
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Remaining positions before the arena is full.
+    pub fn remaining(&self) -> usize {
+        self.max_len - self.len
+    }
+
+    /// f32 bytes one arena of this shape holds (K + V, all layers).
+    pub fn arena_bytes_for(cfg: &ConfigMeta) -> usize {
+        2 * cfg.n_layers * cfg.seq_len * cfg.d_model * 4
+    }
+
+    /// f32 bytes held by this cache's K/V arenas.
+    pub fn arena_bytes(&self) -> usize {
+        self.k
+            .iter()
+            .chain(self.v.iter())
+            .map(|m| m.data.len() * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+
+    fn tiny() -> ConfigMeta {
+        Manifest::builtin().config("tiny").clone()
+    }
+
+    #[test]
+    fn arena_shapes_match_config() {
+        let cfg = tiny();
+        let c = KvCache::new(&cfg);
+        assert_eq!(c.k.len(), cfg.n_layers);
+        assert_eq!(c.v.len(), cfg.n_layers);
+        assert_eq!((c.k[0].rows, c.k[0].cols), (cfg.seq_len, cfg.d_model));
+        assert_eq!(c.max_len, cfg.seq_len);
+        assert_eq!(c.len, 0);
+        assert_eq!(c.arena_bytes(), KvCache::arena_bytes_for(&cfg));
+        // llama arch precomputes RoPE tables for every position
+        assert_eq!(c.cos.len(), cfg.seq_len * (cfg.d_model / cfg.n_heads) / 2);
+    }
+
+    #[test]
+    fn reset_rewinds_cursor_only() {
+        let cfg = tiny();
+        let mut c = KvCache::new(&cfg);
+        c.len = 5;
+        c.k[0].row_mut(0)[0] = 7.0;
+        c.reset();
+        assert_eq!(c.len, 0);
+        assert_eq!(c.remaining(), c.max_len);
+        assert_eq!(c.k[0].row(0)[0], 7.0); // arena survives
+    }
+}

@@ -1,0 +1,40 @@
+//! Autoregressive decode engine: KV-cached incremental generation plus a
+//! slot-based continuous-batching scheduler (the ROADMAP serving milestone
+//! beyond the prefill-only loop in `crate::serve`).
+//!
+//! # Layout
+//!
+//! * [`kv`] — per-sequence KV-cache arenas (one (max_len × d_model) K and V
+//!   matrix per layer, plus the RoPE tables for llama-style models).  Slots
+//!   reuse arenas across requests; only rows `< len` are ever read.
+//! * `runtime::native::decode_step` — the incremental step kernel: one token
+//!   at position `cache.len` through the llama/opt graph against the cache,
+//!   via either the dense weights or a compression plan's `(Wu, Wv)`
+//!   low-rank factors.  Dispatched through `Session::{decode_step,
+//!   lowrank_decode_step}`, which validate the artifact ABI exactly like
+//!   the prefill entry points.
+//! * [`sampler`] — greedy argmax and temperature softmax sampling, seeded
+//!   per request so generations are independent of slot assignment,
+//!   scheduling order, and thread count.
+//! * [`scheduler`] — continuous batching: requests are admitted into free
+//!   slots of an executing batch as sequences finish (prefill-then-decode
+//!   lifecycle), instead of draining a static batch to completion.
+//!
+//! # Determinism
+//!
+//! The step kernel reuses the exact per-row kernels and loop structures of
+//! the full forward pass, so KV-cached step logits **bit-match** a full
+//! forward over the same prefix for every thread count — the parity gate in
+//! `rust/tests/decode_parity.rs` enforces this for both the dense and the
+//! low-rank engines.  Scheduling only chooses *when* a sequence advances,
+//! never *what* it computes, so generated tokens are reproducible under any
+//! slot count / thread count / arrival pattern.
+
+pub mod kv;
+pub mod sampler;
+pub mod scheduler;
+
+pub use kv::KvCache;
+pub use sampler::{argmax, Sampler};
+pub use scheduler::{run_decode, synth_requests, CompletedRequest,
+                    DecodeConfig, DecodeRequest, DecodeStats};

@@ -1,0 +1,50 @@
+//! Generation-path evaluation: teacher-forced greedy next-token accuracy
+//! driven through the KV-cached incremental decode kernel.
+//!
+//! Perplexity (`eval::ppl`) measures the same model through the batched
+//! prefill graph; this metric walks each held-out sequence token by token
+//! through `decode_step`, predicting greedily at every position.  Because
+//! decode logits bit-match the full forward, the number doubles as an
+//! end-to-end exercise of the cache over a full-context horizon — a
+//! regression here that ppl misses means the incremental path drifted.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::decode::sampler::argmax;
+use crate::model::ParamStore;
+use crate::runtime::session::Session;
+use crate::tensor::Mat;
+
+/// Teacher-forced greedy next-token accuracy over up to `max_rows` held-out
+/// sequences.  `lowrank = Some((tag, factors))` routes every step through
+/// the fused low-rank path instead of the dense weights.
+pub fn greedy_next_token_acc(sess: &Session, params: &ParamStore,
+                             lowrank: Option<(&str, &BTreeMap<String, (Mat, Mat)>)>,
+                             corpus: &Corpus, max_rows: usize) -> Result<f64> {
+    let seq = sess.cfg.seq_len;
+    let rows = corpus.eval_batches(1, seq, max_rows.max(1));
+    anyhow::ensure!(!rows.is_empty(), "no eval rows for {}", corpus.name);
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    let mut cache = sess.new_kv_cache();
+    for row in &rows {
+        cache.reset();
+        for t in 0..seq {
+            let tok = row.data[t];
+            let logits = match lowrank {
+                None => sess.decode_step(params, &mut cache, tok)?,
+                Some((tag, f)) => {
+                    sess.lowrank_decode_step(tag, params, f, &mut cache, tok)?
+                }
+            };
+            if argmax(&logits.data) as i32 == row.data[t + 1] {
+                hits += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(hits as f64 / total as f64)
+}

@@ -1,6 +1,7 @@
 //! Evaluation: perplexity over the three corpora and zero-shot accuracy over
 //! the seven task families — the two axes of every table in the paper.
 
+pub mod gen;
 pub mod ppl;
 pub mod zeroshot;
 
@@ -10,6 +11,7 @@ use crate::data::{Corpus, TaskFamily, TaskInstance, World, ALL_FAMILIES};
 use crate::model::ParamStore;
 use crate::runtime::session::Session;
 
+pub use gen::greedy_next_token_acc;
 pub use ppl::perplexity;
 pub use zeroshot::score_tasks;
 

@@ -148,6 +148,28 @@ where
     groups.into_iter().flatten().collect()
 }
 
+/// Fold `items` pairwise in fixed rounds: (0,1), (2,3), … then the same
+/// over the survivors, until one remains.  The combination tree depends
+/// only on `items.len()`, never on the thread count — callers fan the
+/// per-item work out with [`par_map`] and reduce here, and the result is
+/// identical for any momentary pool configuration (the batch-level
+/// calibration fan-out in `runtime::session` relies on this).
+pub fn tree_reduce<T>(mut items: Vec<T>, combine: impl Fn(&mut T, T))
+                      -> Option<T> {
+    while items.len() > 1 {
+        let mut next = Vec::with_capacity(items.len().div_ceil(2));
+        let mut it = items.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                combine(&mut a, b);
+            }
+            next.push(a);
+        }
+        items = next;
+    }
+    items.pop()
+}
+
 /// Split `data` into consecutive chunks of `chunk_len` elements (the last
 /// may be shorter) and run `f(chunk_index, chunk)` on each, in parallel.
 ///
@@ -203,6 +225,20 @@ mod tests {
             assert_eq!(par, serial, "threads = {t}");
         }
         set_threads(0);
+    }
+
+    #[test]
+    fn tree_reduce_is_a_fixed_pairwise_tree() {
+        // strings expose the association order
+        let tree = |n: usize| {
+            let items: Vec<String> = (0..n).map(|i| i.to_string()).collect();
+            tree_reduce(items, |a, b| *a = format!("({a}{b})"))
+        };
+        assert_eq!(tree(0), None);
+        assert_eq!(tree(1).as_deref(), Some("0"));
+        assert_eq!(tree(2).as_deref(), Some("(01)"));
+        assert_eq!(tree(5).as_deref(), Some("(((01)(23))4)"));
+        assert_eq!(tree(8).as_deref(), Some("(((01)(23))((45)(67)))"));
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub mod model;
 pub mod runtime;
 pub mod trainer;
 pub mod compress;
+pub mod decode;
 pub mod eval;
 pub mod serve;
 pub mod coordinator;

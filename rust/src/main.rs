@@ -6,15 +6,19 @@
 //!   eval                     evaluate dense or compressed weights
 //!   compress                 run one method at one ratio, report + save
 //!   sweep                    methods × ratios comparison table
-//!   serve                    batched serving benchmark (dense vs low-rank)
+//!   serve                    batched serving benchmark (dense vs low-rank);
+//!                            `--decode` switches to KV-cached generation
+//!                            under continuous batching (`--slots`,
+//!                            `--max-new-tokens`, `--temperature`)
 
 use anyhow::Result;
 
 use zs_svd::compress::baselines::PruneScore;
 use zs_svd::config::ExperimentConfig;
 use zs_svd::coordinator::{self, Method};
+use zs_svd::decode::{run_decode, synth_requests, DecodeConfig};
 use zs_svd::eval::EvalSpec;
-use zs_svd::report::{acc2, f2, pct, Table};
+use zs_svd::report::{acc2, f2, mb, pct, Table};
 use zs_svd::runtime::Runtime;
 use zs_svd::serve::{run_serving, Engine, ServeConfig};
 use zs_svd::util::cli::Args;
@@ -112,6 +116,14 @@ fn main() -> Result<()> {
                 t.row(vec![format!("acc/{n}"), acc2(*v)]);
             }
             t.row(vec!["acc/avg".into(), acc2(report.avg_acc())]);
+            if args.flag("gen") {
+                // greedy next-token accuracy through the KV-cached decode
+                // path (teacher-forced; also a parity exercise of the cache)
+                let acc = zs_svd::eval::greedy_next_token_acc(
+                    &p.session, &p.params, None, &p.eval_corpora[0],
+                    spec.ppl_batches)?;
+                t.row(vec!["gen/greedy-acc".into(), acc2(acc)]);
+            }
             print!("{}", t.to_ascii());
         }
 
@@ -177,33 +189,80 @@ fn main() -> Result<()> {
             let ratio = args.f64_or("ratio", 0.6);
             let requests = args.usize_or("requests", 48);
             let p = coordinator::prepare(&rt, &cfg)?;
-            let sc = ServeConfig {
-                n_requests: requests,
-                workers: args.usize_or("workers", 1),
-                ..Default::default()
-            };
-
-            let dense_bytes = p.session.cfg.param_count() as f64 * 2.0;
-            let d = run_serving(&p.session, &p.params, &Engine::Dense, &sc,
-                                dense_bytes)?;
-            let plan = coordinator::run_method(&p, &Method::zs(ratio), ratio)?;
             let tag = format!("{}", (ratio * 100.0) as usize);
-            let engine = Engine::from_plan(&tag, &plan);
-            let l = run_serving(&p.session, &plan.apply(&p.params), &engine, &sc,
-                                plan.model_bytes(&p.session.cfg))?;
 
-            let mut t = Table::new("serving", &["engine", "tok/s", "p50 ms",
-                                                "p95 ms", "weights MB",
-                                                "act MB", "peak RSS MB"]);
-            for s in [&d, &l] {
-                t.row(vec![
-                    s.engine.clone(), f2(s.tokens_per_sec), f2(s.p50_ms),
-                    f2(s.p95_ms), f2(s.weight_mem_bytes / 1e6),
-                    f2(s.act_mem_bytes as f64 / 1e6),
-                    f2(s.peak_mem_bytes as f64 / 1e6),
-                ]);
+            if args.flag("decode") {
+                // fail fast on an unknown artifact tag, before any
+                // benchmarking or compression work
+                anyhow::ensure!(p.session.cfg.lowrank.contains_key(&tag),
+                                "no lowrank artifact `{tag}`");
+                // KV-cached generation under continuous batching; the dense
+                // baseline runs BEFORE compression so its peak-RSS column
+                // is its own footprint (VmHWM is a monotone high-water mark)
+                let dc = DecodeConfig {
+                    max_slots: args.usize_or("slots", cfg.decode_slots),
+                    max_new_tokens: args.usize_or("max-new-tokens",
+                                                  cfg.max_new_tokens),
+                    temperature: args.f64_or("temperature", 0.0) as f32,
+                    seed: cfg.seed,
+                    arrival_steps: args.f64_or("arrival-steps", 0.0),
+                };
+                let prompt_len = args.usize_or("prompt-len",
+                                               p.session.cfg.seq_len / 4);
+                let reqs = synth_requests(&p.session.cfg, requests, prompt_len,
+                                          dc.max_new_tokens, cfg.seed ^ 0xDEC0);
+                let (d, _) = run_decode(&p.session, &p.params, &Engine::Dense,
+                                        &reqs, &dc)?;
+                let plan = coordinator::run_method(&p, &Method::zs(ratio),
+                                                   ratio)?;
+                let lm = p.session.cfg.lowrank.get(&tag).expect("checked above");
+                let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
+                let (l, _) = run_decode(&p.session, &plan.apply(&p.params),
+                                        &engine, &reqs, &dc)?;
+                let mut t = Table::new(
+                    "decode serving (continuous batching)",
+                    &["engine", "decode tok/s", "total tok/s", "p50 ms",
+                      "p95 ms", "ttft p50 ms", "KV MB/slot", "peak RSS MB"],
+                );
+                for s in [&d, &l] {
+                    t.row(vec![
+                        s.engine.clone(), f2(s.decode_tok_per_sec),
+                        f2(s.total_tok_per_sec), f2(s.p50_ms), f2(s.p95_ms),
+                        f2(s.p50_ttft_ms), mb(s.kv_bytes_per_slot as f64),
+                        mb(s.peak_mem_bytes as f64),
+                    ]);
+                }
+                print!("{}", t.to_ascii());
+            } else {
+                let sc = ServeConfig {
+                    n_requests: requests,
+                    workers: args.usize_or("workers", 1),
+                    ..Default::default()
+                };
+                // dense measured before compression, as above
+                let dense_bytes = p.session.cfg.param_count() as f64 * 2.0;
+                let d = run_serving(&p.session, &p.params, &Engine::Dense, &sc,
+                                    dense_bytes)?;
+                let plan = coordinator::run_method(&p, &Method::zs(ratio),
+                                                   ratio)?;
+                let engine = Engine::from_plan(&tag, &plan);
+                let l = run_serving(&p.session, &plan.apply(&p.params), &engine,
+                                    &sc, plan.model_bytes(&p.session.cfg))?;
+
+                let mut t = Table::new("serving",
+                                       &["engine", "tok/s", "p50 ms", "p95 ms",
+                                         "weights MB", "act MB",
+                                         "peak RSS MB"]);
+                for s in [&d, &l] {
+                    t.row(vec![
+                        s.engine.clone(), f2(s.tokens_per_sec), f2(s.p50_ms),
+                        f2(s.p95_ms), mb(s.weight_mem_bytes),
+                        mb(s.act_mem_bytes as f64),
+                        mb(s.peak_mem_bytes as f64),
+                    ]);
+                }
+                print!("{}", t.to_ascii());
             }
-            print!("{}", t.to_ascii());
         }
 
         other => {

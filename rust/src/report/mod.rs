@@ -100,6 +100,11 @@ pub fn acc2(v: f64) -> String {
     format!("{v:.2}")
 }
 
+/// Bytes rendered as MB (memory columns of the serving tables).
+pub fn mb(bytes: f64) -> String {
+    f2(bytes / 1e6)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +146,7 @@ mod tests {
         assert_eq!(f2(f64::INFINITY), "inf");
         assert_eq!(pct(9.09), "9.1");
         assert_eq!(acc2(0.547), "0.55");
+        assert_eq!(mb(1.5e6), "1.50");
+        assert_eq!(mb(0.0), "0.00");
     }
 }

@@ -14,11 +14,17 @@
 //! the row-partitioned parallel kernels (see `crate::exec`) accelerate the
 //! serving and calibration paths while keeping results bit-identical across
 //! thread counts (every remaining loop here is serial and fixed-order).
+//!
+//! [`decode_step`] is the incremental sibling of [`forward`]: one token
+//! against a per-sequence KV cache (`crate::decode::kv`), sharing the
+//! per-row building blocks so cached decoding reproduces full-forward
+//! logits bit for bit.
 
 use std::collections::BTreeMap;
 
 use anyhow::{ensure, Result};
 
+use crate::decode::kv::KvCache;
 use crate::linalg::matmul::{dot_f32, matmul, matmul_bt, matmul_bt_flat,
                             matmul_flat};
 use crate::model::{ConfigMeta, ParamStore};
@@ -53,6 +59,99 @@ pub fn loss_and_param_grads(cfg: &ConfigMeta, params: &ParamStore,
     let trace = trace.expect("trace requested");
     let grads = backward(cfg, params, &trace);
     Ok((loss, grads))
+}
+
+/// One KV-cached incremental decode step: run `token` (at position
+/// `cache.len`) through the graph against the per-sequence cache and return
+/// the next-token logits (length V).  `lowrank` selects the fused low-rank
+/// path with a compression plan's `(Wu, Wv)` factors, exactly as in
+/// [`forward`].
+///
+/// Every operation reuses the per-row kernels and loop structures of the
+/// full forward pass — projections are single-row `matmul_bt` dots, the
+/// norm/activation scalar code is shared, and [`attention_step`] mirrors
+/// [`attention_fwd`]'s per-position accumulation order — so the returned
+/// logits **bit-match** a full forward over the same prefix for every
+/// thread count (`rust/tests/decode_parity.rs`).
+pub fn decode_step(cfg: &ConfigMeta, params: &ParamStore,
+                   lowrank: Option<&BTreeMap<String, (Mat, Mat)>>,
+                   cache: &mut KvCache, token: i32) -> Result<Vec<f32>> {
+    let pos = cache.len;
+    ensure!(pos < cache.max_len, "kv cache full ({} positions)", cache.max_len);
+    let (d, h, ff, vocab) = (cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.vocab);
+    let dh = d / h;
+    let llama = cfg.arch == "llama";
+    let eps = cfg.norm_eps;
+    ensure!(token >= 0 && (token as usize) < vocab,
+            "token {token} out of range [0, {vocab})");
+    ensure!(cache.k.len() == cfg.n_layers && cache.d == d,
+            "kv cache shaped for a different config");
+
+    let embed = params.get("embed");
+    let mut x = Mat::zeros(1, d);
+    x.row_mut(0).copy_from_slice(trow(embed, token as usize));
+    if !llama {
+        let pe = params.get("pos_embed");
+        for (xv, pv) in x.row_mut(0).iter_mut().zip(trow(pe, pos)) {
+            *xv += pv;
+        }
+    }
+
+    let linear = |name: &str, xin: &Mat| -> Mat {
+        if let Some(lr) = lowrank {
+            if let Some((wu, wv)) = lr.get(name) {
+                return matmul_bt(&matmul_bt(xin, wv), wu);
+            }
+        }
+        project(xin, params.get(name))
+    };
+
+    let half = dh / 2;
+    for li in 0..cfg.n_layers {
+        let p = format!("layers.{li}.");
+
+        let ln1 = norm_fwd(&x, param_1d(params, &format!("{p}ln1")), eps, llama);
+        let mut q = linear(&format!("{p}wq"), &ln1.y);
+        let mut k = linear(&format!("{p}wk"), &ln1.y);
+        let v = linear(&format!("{p}wv"), &ln1.y);
+        if llama {
+            rope_rotate_row(q.row_mut(0), pos * half, h, dh, &cache.cos,
+                            &cache.sin, false);
+            rope_rotate_row(k.row_mut(0), pos * half, h, dh, &cache.cos,
+                            &cache.sin, false);
+        }
+        cache.k[li].set_row(pos, k.row(0));
+        cache.v[li].set_row(pos, v.row(0));
+        let attn = attention_step(&q, &cache.k[li], &cache.v[li], pos, h, dh);
+        let attn_o = linear(&format!("{p}wo"), &attn);
+        x.add_assign(&attn_o);
+
+        let ln2 = norm_fwd(&x, param_1d(params, &format!("{p}ln2")), eps, llama);
+        let act = if llama {
+            let g = linear(&format!("{p}wgate"), &ln2.y);
+            let u = linear(&format!("{p}wup"), &ln2.y);
+            let mut act = Mat::zeros(1, ff);
+            for i in 0..act.data.len() {
+                act.data[i] = silu(g.data[i]) * u.data[i];
+            }
+            act
+        } else {
+            let g = linear(&format!("{p}win"), &ln2.y);
+            let mut act = Mat::zeros(1, ff);
+            for i in 0..act.data.len() {
+                act.data[i] = gelu(g.data[i]);
+            }
+            act
+        };
+        let down_name = if llama { format!("{p}wdown") } else { format!("{p}wout") };
+        let down = linear(&down_name, &act);
+        x.add_assign(&down);
+    }
+
+    let fin = norm_fwd(&x, param_1d(params, "final_ln"), eps, llama);
+    let logits = project(&fin.y, embed); // tied head: (1, V)
+    cache.len = pos + 1;
+    Ok(logits.data)
 }
 
 /// One Adam step (beta1 = 0.9, beta2 = 0.95, eps = 1e-8, no weight decay —
@@ -580,7 +679,9 @@ fn norm_bwd(x: &Mat, nt: &NormTrace, scale: &[f32], dy: &Mat, _eps: f32,
 }
 
 /// Rotary-embedding tables: cos/sin of pos·θ^(-i/half), (T × half).
-fn rope_tables(t_len: usize, dh: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
+/// `pub(crate)` so the KV cache can precompute them once per sequence.
+pub(crate) fn rope_tables(t_len: usize, dh: usize, theta: f64)
+                          -> (Vec<f32>, Vec<f32>) {
     let half = dh / 2;
     let freqs: Vec<f64> = (0..half)
         .map(|i| theta.powf(-(i as f64) / half as f64))
@@ -604,22 +705,29 @@ fn rope_apply(m: &mut Mat, t_len: usize, h: usize, dh: usize, cos: &[f32],
     let half = dh / 2;
     for r in 0..m.rows {
         let t = r % t_len;
-        let tab = t * half;
-        let row = m.row_mut(r);
-        for hi in 0..h {
-            let off = hi * dh;
-            for i in 0..half {
-                let c = cos[tab + i];
-                let s = sin[tab + i];
-                let x1 = row[off + i];
-                let x2 = row[off + half + i];
-                if inverse {
-                    row[off + i] = x1 * c + x2 * s;
-                    row[off + half + i] = -x1 * s + x2 * c;
-                } else {
-                    row[off + i] = x1 * c - x2 * s;
-                    row[off + half + i] = x1 * s + x2 * c;
-                }
+        rope_rotate_row(m.row_mut(r), t * half, h, dh, cos, sin, inverse);
+    }
+}
+
+/// Rotate one (H heads × dh) row in place at table offset `tab`
+/// (= position · dh/2).  Shared by the batched apply above and the
+/// single-position decode step, so both produce identical bits.
+fn rope_rotate_row(row: &mut [f32], tab: usize, h: usize, dh: usize,
+                   cos: &[f32], sin: &[f32], inverse: bool) {
+    let half = dh / 2;
+    for hi in 0..h {
+        let off = hi * dh;
+        for i in 0..half {
+            let c = cos[tab + i];
+            let s = sin[tab + i];
+            let x1 = row[off + i];
+            let x2 = row[off + half + i];
+            if inverse {
+                row[off + i] = x1 * c + x2 * s;
+                row[off + half + i] = -x1 * s + x2 * c;
+            } else {
+                row[off + i] = x1 * c - x2 * s;
+                row[off + half + i] = x1 * s + x2 * c;
             }
         }
     }
@@ -680,6 +788,51 @@ fn attention_fwd(q: &Mat, k: &Mat, v: &Mat, b: usize, t_len: usize, h: usize,
         }
     }
     (attn, probs)
+}
+
+/// Causal attention for ONE query position `t` against the cached K/V rows
+/// `0..=t` of a single sequence.  The score/softmax/merge loops mirror
+/// [`attention_fwd`]'s per-position body operation for operation (f32 score
+/// + running max, f64 exp-sum, f32 normalizer, value merge in ascending-u
+/// order), so the output row bit-matches the full forward's row `t`.
+fn attention_step(q: &Mat, kc: &Mat, vc: &Mat, t: usize, h: usize, dh: usize)
+                  -> Mat {
+    let d = h * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut attn = Mat::zeros(1, d);
+    let mut prow = vec![0.0f32; t + 1];
+    for hi in 0..h {
+        let off = hi * dh;
+        let qrow = &q.row(0)[off..off + dh];
+        let mut maxv = f32::NEG_INFINITY;
+        for u in 0..=t {
+            let krow = &kc.data[u * d + off..u * d + off + dh];
+            let s = dot_f32(qrow, krow) * scale;
+            prow[u] = s;
+            maxv = maxv.max(s);
+        }
+        let mut sum = 0.0f64;
+        for u in 0..=t {
+            let e = ((prow[u] - maxv) as f64).exp();
+            prow[u] = e as f32;
+            sum += e;
+        }
+        let isum = (1.0 / sum) as f32;
+        for u in 0..=t {
+            prow[u] *= isum;
+        }
+        let orow = &mut attn.data[off..off + dh];
+        for (u, &pu) in prow.iter().enumerate().take(t + 1) {
+            if pu == 0.0 {
+                continue;
+            }
+            let vrow = &vc.data[u * d + off..u * d + off + dh];
+            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                *o += pu * vv;
+            }
+        }
+    }
+    attn
 }
 
 /// Backward of `attention_fwd`: gradients w.r.t. q, k, v (all (B·T, d)).
@@ -779,6 +932,23 @@ mod tests {
         rope_apply(&mut m, 8, 2, 4, &cos, &sin, true);
         for (a, b2) in m.data.iter().zip(&orig.data) {
             assert!((a - b2).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn attention_step_bitmatches_batched_rows() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let (t_len, h, dh) = (7usize, 2usize, 4usize);
+        let d = h * dh;
+        let q = Mat::randn(&mut rng, t_len, d, 1.0);
+        let k = Mat::randn(&mut rng, t_len, d, 1.0);
+        let v = Mat::randn(&mut rng, t_len, d, 1.0);
+        let (full, _) = attention_fwd(&q, &k, &v, 1, t_len, h, dh);
+        for t in 0..t_len {
+            let mut q1 = Mat::zeros(1, d);
+            q1.row_mut(0).copy_from_slice(q.row(t));
+            let step = attention_step(&q1, &k, &v, t, h, dh);
+            assert_eq!(step.row(0), full.row(t), "position {t}");
         }
     }
 

@@ -3,14 +3,19 @@
 //! Each method validates the exact ordered signature the artifact's
 //! manifest declares (the rust↔build-side ABI), then executes the graph on
 //! the native kernels (`runtime::native`) and unpacks outputs into host
-//! types.  All request-path model math goes through here.  `Session` is
-//! `Sync` — the serving drain shares one session across worker threads.
+//! types.  All request-path model math goes through here — batched prefill
+//! (`fwd` / `lowrank_fwd`), KV-cached incremental decode (`decode_step` /
+//! `lowrank_decode_step`), and the calibration passes, whose per-batch
+//! work fans out across the `exec` pool with a fixed-order tree reduction.
+//! `Session` is `Sync` — the serving drain and the continuous-batching
+//! scheduler share one session across worker threads.
 
 use std::collections::BTreeMap;
 
 use anyhow::{ensure, Result};
 
 use super::{native, Runtime};
+use crate::decode::kv::KvCache;
 use crate::model::{ConfigMeta, ParamStore};
 use crate::tensor::{IntTensor, Mat, Tensor};
 
@@ -107,46 +112,98 @@ impl<'rt> Session<'rt> {
         Ok(result)
     }
 
+    /// Whether batch-level fan-out pays off: with fewer batches than
+    /// workers, the outer fan-out would *suppress* the row-parallel matmuls
+    /// inside each pass (nested `par_*` degrades to serial) and shrink
+    /// total parallelism to the batch count — keep the inner parallelism
+    /// instead.  Either path produces identical bits: per-batch passes are
+    /// thread-count independent and the reduction order is fixed.
+    fn fan_out_batches(batches: &[IntTensor]) -> bool {
+        batches.len() >= crate::exec::threads()
+    }
+
     /// Accumulate moments over several calibration batches.
+    ///
+    /// Batches are independent, so the per-batch moments passes fan out
+    /// across the `exec` worker pool (when there are enough of them — see
+    /// `fan_out_batches`); the sums then come from a fixed-order pairwise
+    /// tree reduction, so the result is bit-identical for any thread count
+    /// (`rust/tests/parallel_equiv.rs`).
     pub fn accumulate_moments(&self, params: &ParamStore, batches: &[IntTensor])
                               -> Result<Vec<SiteMoments>> {
         ensure!(!batches.is_empty());
-        let mut acc = self.moments(params, &batches[0])?;
-        for b in &batches[1..] {
-            let next = self.moments(params, b)?;
-            for (a, n) in acc.iter_mut().zip(next) {
-                a.xx.add_assign(&n.xx);
-                for (x, y) in a.sum.iter_mut().zip(&n.sum) {
-                    *x += y;
+        let per: Result<Vec<Vec<SiteMoments>>> = if Self::fan_out_batches(batches) {
+            crate::exec::par_map(batches, |_, b| self.moments(params, b))
+                .into_iter()
+                .collect()
+        } else {
+            batches.iter().map(|b| self.moments(params, b)).collect()
+        };
+        let acc = crate::exec::tree_reduce(per?, |a, n| {
+            for (x, y) in a.iter_mut().zip(n) {
+                x.xx.add_assign(&y.xx);
+                for (u, v) in x.sum.iter_mut().zip(&y.sum) {
+                    *u += v;
                 }
-                for (x, y) in a.abssum.iter_mut().zip(&n.abssum) {
-                    *x += y;
+                for (u, v) in x.abssum.iter_mut().zip(&y.abssum) {
+                    *u += v;
                 }
-                a.count += n.count;
+                x.count += y.count;
             }
-        }
-        Ok(acc)
+        });
+        Ok(acc.expect("non-empty batches"))
     }
 
     /// Average gradients (and Fisher diag Σg²) over calibration batches.
+    ///
+    /// Same batch-level fan-out + fixed-order tree reduction as
+    /// `accumulate_moments`.  Fisher terms (g²) are materialized lazily
+    /// inside the reduction — each batch's term exists only while its pair
+    /// combines, instead of one extra param-store-sized map per batch up
+    /// front.
     pub fn mean_grads(&self, params: &ParamStore, batches: &[IntTensor])
                       -> Result<(f32, BTreeMap<String, Mat>, BTreeMap<String, Mat>)> {
         ensure!(!batches.is_empty());
-        let mut mean_loss = 0.0f32;
-        let mut mean: BTreeMap<String, Mat> = BTreeMap::new();
-        let mut fisher: BTreeMap<String, Mat> = BTreeMap::new();
-        for b in batches {
-            let (loss, grads) = self.grads(params, b)?;
-            mean_loss += loss;
-            for (name, g) in grads {
-                let e = mean.entry(name.clone()).or_insert_with(|| Mat::zeros(g.rows, g.cols));
-                e.add_assign(&g);
-                let f = fisher.entry(name).or_insert_with(|| Mat::zeros(g.rows, g.cols));
-                for (fv, gv) in f.data.iter_mut().zip(&g.data) {
-                    *fv += gv * gv;
-                }
-            }
+        fn square(g: &BTreeMap<String, Mat>) -> BTreeMap<String, Mat> {
+            g.iter()
+                .map(|(name, g)| {
+                    let mut f = Mat::zeros(g.rows, g.cols);
+                    for (fv, gv) in f.data.iter_mut().zip(&g.data) {
+                        *fv = gv * gv;
+                    }
+                    (name.clone(), f)
+                })
+                .collect()
         }
+        let per: Result<Vec<(f32, BTreeMap<String, Mat>)>> =
+            if Self::fan_out_batches(batches) {
+                crate::exec::par_map(batches, |_, b| self.grads(params, b))
+                    .into_iter()
+                    .collect()
+            } else {
+                batches.iter().map(|b| self.grads(params, b)).collect()
+            };
+        type Item = (f32, BTreeMap<String, Mat>, Option<BTreeMap<String, Mat>>);
+        let items: Vec<Item> =
+            per?.into_iter().map(|(l, g)| (l, g, None)).collect();
+        let (mut mean_loss, mut mean, fisher) =
+            crate::exec::tree_reduce(items, |a, mut b| {
+                a.0 += b.0;
+                if a.2.is_none() {
+                    a.2 = Some(square(&a.1));
+                }
+                let bf = b.2.take().unwrap_or_else(|| square(&b.1));
+                let af = a.2.as_mut().expect("materialized above");
+                for (name, f) in bf {
+                    af.get_mut(&name).expect("same targets").add_assign(&f);
+                }
+                for (name, g) in b.1 {
+                    a.1.get_mut(&name).expect("same targets").add_assign(&g);
+                }
+            })
+            .expect("non-empty batches");
+        // single batch: the fold never ran, Fisher is just g²
+        let mut fisher = fisher.unwrap_or_else(|| square(&mean));
         let inv = 1.0 / batches.len() as f32;
         mean_loss *= inv;
         for m in mean.values_mut() {
@@ -195,5 +252,72 @@ impl<'rt> Session<'rt> {
                     "{}: rank {} exceeds artifact rank {k_art}", t.name, wu.cols);
         }
         native::forward(&self.cfg, params, tokens, Some(factors))
+    }
+
+    // -----------------------------------------------------------------------
+    // incremental decode (KV-cached generation)
+    // -----------------------------------------------------------------------
+
+    /// Fresh per-sequence KV cache sized for this config (capacity
+    /// `seq_len` positions; reusable across requests via `reset()`).
+    pub fn new_kv_cache(&self) -> KvCache {
+        KvCache::new(&self.cfg)
+    }
+
+    /// One dense KV-cached decode step: `token` at position `cache.len` →
+    /// next-token logits (shape [V]).  Uses the b1 artifact when the config
+    /// ships one (decode is single-sequence per slot), else the batch
+    /// artifact's graph.
+    ///
+    /// ABI validation (artifact mark + parameter shape check) runs on the
+    /// FIRST position of each sequence; later steps of the same sequence
+    /// reuse it — per-token revalidation would put a global mutex and a
+    /// full param walk on the generation hot path.  The kernel itself
+    /// still checks token range and cache shape every step.
+    pub fn decode_step(&self, params: &ParamStore, cache: &mut KvCache,
+                       token: i32) -> Result<Tensor> {
+        if cache.len == 0 {
+            let file = self
+                .cfg
+                .fwd_b1
+                .as_ref()
+                .map(|a| a.file.as_str())
+                .unwrap_or(&self.cfg.fwd.file);
+            self.rt.mark_compiled(file);
+            params.check_matches(&self.cfg)?;
+        }
+        let logits = native::decode_step(&self.cfg, params, None, cache, token)?;
+        Ok(Tensor::from_vec(&[self.cfg.vocab], logits))
+    }
+
+    /// One low-rank (fused-path) KV-cached decode step at ratio tag `tag`.
+    /// ABI validation matches `lowrank_fwd` — every target needs factors
+    /// with matching inner rank, ≤ the artifact's baked-in rank — and runs
+    /// on the first position of each sequence (see `decode_step`).
+    pub fn lowrank_decode_step(&self, tag: &str, params: &ParamStore,
+                               factors: &BTreeMap<String, (Mat, Mat)>,
+                               cache: &mut KvCache, token: i32)
+                               -> Result<Tensor> {
+        if cache.len == 0 {
+            let lm = self
+                .cfg
+                .lowrank
+                .get(tag)
+                .ok_or_else(|| anyhow::anyhow!("no lowrank artifact `{tag}`"))?;
+            self.rt.mark_compiled(&lm.art.file);
+            for t in &self.cfg.targets {
+                let k_art = lm.ranks[&t.name];
+                let (wu, wv) = factors.get(&t.name).ok_or_else(|| {
+                    anyhow::anyhow!("missing factors for {}", t.name)
+                })?;
+                ensure!(wu.cols == wv.rows, "factor rank mismatch for {}", t.name);
+                ensure!(wu.cols <= k_art,
+                        "{}: rank {} exceeds artifact rank {k_art}",
+                        t.name, wu.cols);
+            }
+        }
+        let logits =
+            native::decode_step(&self.cfg, params, Some(factors), cache, token)?;
+        Ok(Tensor::from_vec(&[self.cfg.vocab], logits))
     }
 }

@@ -12,6 +12,11 @@
 //! queue admission.  Latency accounting is unchanged — each request's
 //! latency spans arrival → completion of the batch that served it, so
 //! queue-wait remains visible in p95 under either drain mode.
+//!
+//! This module covers the *prefill* workload (one full forward per
+//! request).  Token-by-token generation — KV-cached decoding under a
+//! slot-based continuous-batching scheduler — lives in `crate::decode` and
+//! reuses [`Engine`] for dense vs low-rank dispatch.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -47,18 +52,23 @@ impl Engine {
         let mut factors = plan.factors();
         for (name, (wu, wv)) in factors.iter_mut() {
             let k_art = ranks[name];
-            if wu.cols > k_art {
-                let mut nu = Mat::zeros(wu.rows, k_art);
-                for r in 0..wu.rows {
-                    nu.row_mut(r).copy_from_slice(&wu.row(r)[..k_art]);
-                }
-                let mut nv = Mat::zeros(k_art, wv.cols);
-                for r in 0..k_art {
-                    nv.row_mut(r).copy_from_slice(wv.row(r));
-                }
-                *wu = nu;
-                *wv = nv;
+            if wu.cols == k_art {
+                continue;
             }
+            // kept components are the first `kc` columns of Wu / rows of
+            // Wv: capping drops the smallest-σ tail, padding appends zero
+            // components that contribute exactly 0.0 to every accumulation
+            let kc = wu.cols.min(k_art);
+            let mut nu = Mat::zeros(wu.rows, k_art);
+            for r in 0..wu.rows {
+                nu.row_mut(r)[..kc].copy_from_slice(&wu.row(r)[..kc]);
+            }
+            let mut nv = Mat::zeros(k_art, wv.cols);
+            for r in 0..kc {
+                nv.set_row(r, wv.row(r));
+            }
+            *wu = nu;
+            *wv = nv;
         }
         Engine::Lowrank { tag: tag.to_string(), factors }
     }
@@ -286,6 +296,74 @@ mod tests {
         let t = assemble(&rows, 4, 5);
         assert_eq!(t.shape, vec![4, 5]);
         assert_eq!(&t.data[15..20], &[1i32; 5]); // padded with row 0
+    }
+
+    fn plan_with_rank(k: usize) -> (CompressionPlan, Mat) {
+        use crate::compress::plan::{factored_params, TargetPlan};
+        let mut rng = Rng::new(5);
+        let wu = Mat::randn(&mut rng, 6, k, 0.5);
+        let wv = Mat::randn(&mut rng, k, 4, 0.5);
+        let product = crate::linalg::matmul(&wu, &wv);
+        let plan = CompressionPlan {
+            method: "test".into(),
+            ratio: 0.5,
+            seconds: 0.0,
+            targets: vec![TargetPlan {
+                name: "t".into(), m: 6, n: 4, rank: k, dense: false,
+                replacement: product.clone(), factors: Some((wu, wv)),
+                stored_params: factored_params(6, 4, k),
+            }],
+        };
+        (plan, product)
+    }
+
+    fn capped_factors(plan: &CompressionPlan, k_art: usize) -> (Mat, Mat) {
+        let ranks: BTreeMap<String, usize> =
+            [("t".to_string(), k_art)].into_iter().collect();
+        match Engine::from_plan_capped("60", plan, &ranks) {
+            Engine::Lowrank { factors, .. } => factors["t"].clone(),
+            Engine::Dense => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn capped_engine_pads_heterogeneous_ranks_up() {
+        let (plan, product) = plan_with_rank(2);
+        let (wu, wv) = capped_factors(&plan, 4); // pad 2 -> 4
+        assert_eq!((wu.rows, wu.cols), (6, 4));
+        assert_eq!((wv.rows, wv.cols), (4, 4));
+        // zero components contribute exactly nothing: product unchanged
+        let padded = crate::linalg::matmul(&wu, &wv);
+        assert_eq!(padded, product);
+        // the appended components are all-zero
+        for r in 0..wu.rows {
+            assert_eq!(&wu.row(r)[2..], &[0.0, 0.0]);
+        }
+        assert!(wv.row(2).iter().chain(wv.row(3)).all(|&z| z == 0.0));
+    }
+
+    #[test]
+    fn capped_engine_caps_ranks_down() {
+        let (plan, _) = plan_with_rank(4);
+        let (orig_u, orig_v) = plan.factors()["t"].clone();
+        let (wu, wv) = capped_factors(&plan, 2); // cap 4 -> 2
+        assert_eq!((wu.rows, wu.cols), (6, 2));
+        assert_eq!((wv.rows, wv.cols), (2, 4));
+        // the two kept components are the leading ones
+        for r in 0..wu.rows {
+            assert_eq!(wu.row(r), &orig_u.row(r)[..2]);
+        }
+        assert_eq!(wv.row(0), orig_v.row(0));
+        assert_eq!(wv.row(1), orig_v.row(1));
+    }
+
+    #[test]
+    fn capped_engine_exact_rank_untouched() {
+        let (plan, _) = plan_with_rank(3);
+        let before = plan.factors()["t"].clone();
+        let after = capped_factors(&plan, 3);
+        assert_eq!(after.0, before.0);
+        assert_eq!(after.1, before.1);
     }
 
     #[test]

@@ -62,6 +62,12 @@ impl Mat {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Copy `src` over row `r` (KV-cache appends, factor re-shaping).
+    #[inline]
+    pub fn set_row(&mut self, r: usize, src: &[f32]) {
+        self.row_mut(r).copy_from_slice(src);
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         // blocked transpose for cache friendliness on larger matrices
@@ -210,6 +216,14 @@ mod tests {
         *m.at_mut(1, 2) = 5.0;
         assert_eq!(m.at(1, 2), 5.0);
         assert_eq!(m.row(1)[2], 5.0);
+    }
+
+    #[test]
+    fn set_row_copies_whole_row() {
+        let mut m = Mat::zeros(2, 3);
+        m.set_row(1, &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(0), &[0.0; 3]);
+        assert_eq!(m.row(1), &[1.0, 2.0, 3.0]);
     }
 
     #[test]

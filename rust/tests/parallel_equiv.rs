@@ -60,6 +60,34 @@ fn serial_and_parallel_paths_are_bit_identical() {
         }
     }
 
+    // ---- calibration passes: batch-level fan-out + fixed-order tree
+    // reduction must be bit-identical across thread counts ----
+    let mut crng = Rng::new(0xCA1B);
+    let cal_batches: Vec<_> = (0..3)
+        .map(|_| corpus.calibration_batch(&mut crng, sess.cfg.batch,
+                                          sess.cfg.seq_len))
+        .collect();
+    exec::set_threads(1);
+    let m_ref = sess.accumulate_moments(&params, &cal_batches).unwrap();
+    let (l_ref, g_ref, f_ref) = sess.mean_grads(&params, &cal_batches).unwrap();
+    for t in [2usize, 4] {
+        exec::set_threads(t);
+        let m = sess.accumulate_moments(&params, &cal_batches).unwrap();
+        assert_eq!(m.len(), m_ref.len());
+        for (a, b2) in m.iter().zip(&m_ref) {
+            assert_eq!(a.site, b2.site);
+            assert_eq!(a.xx, b2.xx, "{}: moments xx at {t} threads", a.site);
+            assert_eq!(a.sum, b2.sum, "{}: moments sum at {t} threads", a.site);
+            assert_eq!(a.abssum, b2.abssum,
+                       "{}: moments abssum at {t} threads", a.site);
+            assert_eq!(a.count, b2.count);
+        }
+        let (l, g, f) = sess.mean_grads(&params, &cal_batches).unwrap();
+        assert_eq!(l.to_bits(), l_ref.to_bits(), "loss at {t} threads");
+        assert_eq!(g, g_ref, "mean grads at {t} threads");
+        assert_eq!(f, f_ref, "fisher at {t} threads");
+    }
+
     // ---- full compress_zs, including one correction iteration (native
     // backward pass + parallel projections) ----
     let opts = ZsOpts { correction_iters: 1, ..ZsOpts::new(0.5) };
