@@ -12,7 +12,7 @@ mod common;
 
 use zs_svd::coordinator::{self, Method};
 use zs_svd::decode::{run_decode, synth_requests, DecodeConfig};
-use zs_svd::report::{f2, mb, Table};
+use zs_svd::report::{f2, latency_cells, mb, Table, LATENCY_HEADERS};
 use zs_svd::serve::Engine;
 use zs_svd::util::benchkit::fast_mode;
 
@@ -32,18 +32,23 @@ fn main() {
     let reqs = synth_requests(&p.session.cfg, n_requests, prompt_len, max_new,
                               0xD0);
 
+    let mut headers = vec!["engine", "compression", "decode tok/s",
+                           "total tok/s"];
+    headers.extend(LATENCY_HEADERS);
+    headers.extend(["ttft p50 ms", "KV MB/slot"]);
     let mut t = Table::new(
         "decode throughput (KV-cached generation, continuous batching)",
-        &["engine", "compression", "decode tok/s", "total tok/s", "p50 ms",
-          "p95 ms", "ttft p50 ms", "KV MB/slot"],
+        &headers,
     );
 
     let (d, _) = run_decode(&p.session, &p.params, &Engine::Dense, &reqs, &dc)
         .expect("dense decode");
     eprintln!("  dense: {:.0} decode tok/s", d.decode_tok_per_sec);
-    t.row(vec!["original".into(), "0%".into(), f2(d.decode_tok_per_sec),
-               f2(d.total_tok_per_sec), f2(d.p50_ms), f2(d.p95_ms),
-               f2(d.p50_ttft_ms), mb(d.kv_bytes_per_slot as f64)]);
+    let mut row = vec!["original".into(), "0%".into(),
+                       f2(d.decode_tok_per_sec), f2(d.total_tok_per_sec)];
+    row.extend(latency_cells(&d.latency));
+    row.extend([f2(d.ttft.p50), mb(d.kv_bytes_per_slot as f64)]);
+    t.row(row);
 
     for (comp, ratio) in [("40%", 0.6), ("60%", 0.4)] {
         let plan = coordinator::run_method(&p, &Method::zs(ratio), ratio)
@@ -56,9 +61,11 @@ fn main() {
             .expect("lowrank decode");
         eprintln!("  {}@{comp}: {:.0} decode tok/s", plan.method,
                   s.decode_tok_per_sec);
-        t.row(vec![plan.method.clone(), comp.into(), f2(s.decode_tok_per_sec),
-                   f2(s.total_tok_per_sec), f2(s.p50_ms), f2(s.p95_ms),
-                   f2(s.p50_ttft_ms), mb(s.kv_bytes_per_slot as f64)]);
+        let mut row = vec![plan.method.clone(), comp.into(),
+                           f2(s.decode_tok_per_sec), f2(s.total_tok_per_sec)];
+        row.extend(latency_cells(&s.latency));
+        row.extend([f2(s.ttft.p50), mb(s.kv_bytes_per_slot as f64)]);
+        t.row(row);
     }
 
     common::emit("decode_throughput", &t);

@@ -1,0 +1,128 @@
+//! Network serving throughput — dense vs ZS-SVD low-rank engines behind the
+//! TCP front-end, measured end-to-end from loopback clients (socket + wire
+//! protocol + admission + continuous-batching decode), the network-side
+//! companion of `decode_throughput`.
+//!
+//! Each engine serves the SAME closed-loop client fleet: C connections,
+//! each sending R greedy generation requests back-to-back and reading its
+//! token stream.  Reported latencies are the server's own end-to-end
+//! summaries (enqueue → completion, the shared p50/p95/p99/mean shape).
+
+mod common;
+
+use std::net::SocketAddr;
+use std::sync::mpsc;
+
+use zs_svd::coordinator::{self, Method, Prepared};
+use zs_svd::decode::DecodeConfig;
+use zs_svd::report::{f2, latency_cells, Table, LATENCY_HEADERS};
+use zs_svd::serve::Engine;
+use zs_svd::server::{self, Client, GenerateOutcome, GenerateReq,
+                     ServerConfig, ServerStats};
+use zs_svd::util::benchkit::fast_mode;
+
+struct Load {
+    clients: usize,
+    per_client: usize,
+    prompt_len: usize,
+    max_new: usize,
+}
+
+fn drive(p: &Prepared, params: &zs_svd::model::ParamStore, engine: &Engine,
+         load: &Load) -> ServerStats {
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        queue_depth: 128,
+        decode: DecodeConfig { max_slots: 4, max_new_tokens: load.max_new,
+                               temperature: 0.0, seed: 1, arrival_steps: 0.0 },
+    };
+    let vocab = p.session.cfg.vocab;
+    let (tx, rx) = mpsc::channel::<SocketAddr>();
+    let sess = &p.session;
+
+    std::thread::scope(|s| {
+        let cfg = &cfg;
+        let srv = s.spawn(move || {
+            server::run(sess, params, engine, cfg, move |a| {
+                tx.send(a).expect("report addr");
+            })
+        });
+        let addr = rx.recv().expect("server bound");
+
+        let handles: Vec<_> = (0..load.clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut cl = Client::connect(addr).expect("connect");
+                    for i in 0..load.per_client {
+                        let k = c * load.per_client + i;
+                        let prompt =
+                            server::scripted_prompt(k, load.prompt_len, vocab);
+                        let g = GenerateReq { id: k as u64, prompt,
+                                              max_new_tokens: load.max_new,
+                                              temperature: None, seed: None };
+                        match cl.run_generate(&g).expect("generate") {
+                            GenerateOutcome::Done(r) => {
+                                assert_eq!(r.tokens.len(), load.max_new);
+                            }
+                            GenerateOutcome::Rejected { code, message } => {
+                                panic!("request {k} rejected: {code} \
+                                        ({message})");
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("client thread");
+        }
+
+        let mut cl = Client::connect(addr).expect("connect for shutdown");
+        cl.shutdown_server().expect("shutdown");
+        srv.join().expect("server thread").expect("server run")
+    })
+}
+
+fn main() {
+    let rt = common::runtime();
+    let p = common::prepare(rt, "tiny", "llama", 7);
+    let load = if fast_mode() {
+        Load { clients: 2, per_client: 2, prompt_len: 8, max_new: 6 }
+    } else {
+        Load { clients: 4, per_client: 6, prompt_len: 16, max_new: 16 }
+    };
+
+    let mut headers = vec!["engine", "compression", "decode tok/s"];
+    headers.extend(LATENCY_HEADERS);
+    headers.extend(["ttft p50 ms", "rejected"]);
+    let mut t = Table::new(
+        "server throughput (TCP loopback, streaming decode)", &headers);
+
+    let mut emit_row = |label: &str, comp: &str, s: &ServerStats| {
+        // steady-state rate (prefill-free iterations), the same definition
+        // decode_throughput reports — NOT tokens over the whole wall clock,
+        // which would charge connect gaps and the drain to the TCP tier
+        let tok_s = s.counters.decode_tok_per_sec();
+        eprintln!("  {label}@{comp}: {tok_s:.0} decode tok/s over TCP");
+        let mut row = vec![label.to_string(), comp.to_string(), f2(tok_s)];
+        row.extend(latency_cells(&s.e2e));
+        row.extend([f2(s.ttft.p50), format!("{}", s.requests_rejected)]);
+        t.row(row);
+    };
+
+    let d = drive(&p, &p.params, &Engine::Dense, &load);
+    emit_row("original", "0%", &d);
+
+    for (comp, ratio) in [("40%", 0.6), ("60%", 0.4)] {
+        let plan = coordinator::run_method(&p, &Method::zs(ratio), ratio)
+            .expect("compress");
+        let tag = format!("{}", (ratio * 100.0) as usize);
+        let lm = p.session.cfg.lowrank.get(&tag).expect("artifact tag");
+        let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
+        let params = plan.apply(&p.params);
+        let s = drive(&p, &params, &engine, &load);
+        emit_row(&plan.method, comp, &s);
+    }
+
+    common::emit("server_throughput", &t);
+}

@@ -19,7 +19,7 @@ fn main() {
 
     let mut t = Table::new(
         "Table 7: throughput & memory (dense vs low-rank serving)",
-        &["regime", "compression", "method", "tok/s", "p95 ms",
+        &["regime", "compression", "method", "tok/s", "p95 ms", "p99 ms",
           "weights MB", "act MB", "peak RSS MB"],
     );
 
@@ -31,7 +31,7 @@ fn main() {
         let d = run_serving(&p.session, &p.params, &Engine::Dense, &sc,
                             dense_bytes).unwrap();
         t.row(vec![regime.into(), "0%".into(), "original".into(),
-                   f2(d.tokens_per_sec), f2(d.p95_ms),
+                   f2(d.tokens_per_sec), f2(d.latency.p95), f2(d.latency.p99),
                    f2(d.weight_mem_bytes / 1e6),
                    f2(d.act_mem_bytes as f64 / 1e6),
                    f2(d.peak_mem_bytes as f64 / 1e6)]);
@@ -48,7 +48,8 @@ fn main() {
                 eprintln!("  {regime}/{comp}/{}: {:.0} tok/s",
                           plan.method, s.tokens_per_sec);
                 t.row(vec![regime.into(), comp.into(), plan.method.clone(),
-                           f2(s.tokens_per_sec), f2(s.p95_ms),
+                           f2(s.tokens_per_sec), f2(s.latency.p95),
+                           f2(s.latency.p99),
                            f2(s.weight_mem_bytes / 1e6),
                            f2(s.act_mem_bytes as f64 / 1e6),
                            f2(s.peak_mem_bytes as f64 / 1e6)]);

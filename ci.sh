@@ -45,4 +45,40 @@ echo "== decode smoke: decode_throughput (ZS_BENCH_FAST=1) =="
 # KV-cached continuous-batching path (checkpoint-cached training reused)
 ZS_BENCH_FAST=1 cargo bench --bench decode_throughput
 
+echo "== server smoke: server_throughput (ZS_BENCH_FAST=1) =="
+# dense + low-rank engines behind the TCP front-end, loopback client fleet
+ZS_BENCH_FAST=1 cargo bench --bench server_throughput
+
+echo "== server loopback smoke: serve --listen + scripted client =="
+# start the network server on an OS-assigned port, run a short scripted
+# client session (streamed completions + metrics), then drain it via the
+# protocol shutdown and require a clean exit
+PORT_FILE="$(mktemp)"
+rm -f "$PORT_FILE"
+./target/release/zs-svd serve --listen 127.0.0.1:0 \
+    --port-file "$PORT_FILE" --max-new-tokens 4 --fast &
+SRV_PID=$!
+# never leave the background server orphaned: if the client (or anything
+# below) fails under `set -e`, kill it on the way out
+trap 'kill "$SRV_PID" 2>/dev/null || true' EXIT
+for _ in $(seq 1 600); do
+    [ -s "$PORT_FILE" ] && break
+    if ! kill -0 "$SRV_PID" 2>/dev/null; then
+        echo "FATAL: server exited before binding"
+        exit 1
+    fi
+    sleep 0.5
+done
+if [ ! -s "$PORT_FILE" ]; then
+    echo "FATAL: server never wrote its port file"
+    kill "$SRV_PID" 2>/dev/null || true
+    exit 1
+fi
+./target/release/zs-svd client --connect "$(cat "$PORT_FILE")" \
+    --requests 2 --prompt-len 8 --max-new-tokens 4 --shutdown
+wait "$SRV_PID"
+trap - EXIT
+rm -f "$PORT_FILE"
+echo "server smoke OK (clean streamed completion + shutdown)"
+
 echo "CI OK"

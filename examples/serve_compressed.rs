@@ -41,12 +41,13 @@ fn main() -> Result<()> {
 
     let mut t = Table::new(
         &format!("serving tiny @ {}% compression", ((1.0 - ratio) * 100.0) as usize),
-        &["engine", "tok/s", "p50 ms", "p95 ms", "weights MB", "act MB",
-          "peak RSS MB"],
+        &["engine", "tok/s", "p50 ms", "p95 ms", "p99 ms", "weights MB",
+          "act MB", "peak RSS MB"],
     );
     for s in [&d, &l] {
-        t.row(vec![s.engine.clone(), f2(s.tokens_per_sec), f2(s.p50_ms),
-                   f2(s.p95_ms), f2(s.weight_mem_bytes / 1e6),
+        t.row(vec![s.engine.clone(), f2(s.tokens_per_sec), f2(s.latency.p50),
+                   f2(s.latency.p95), f2(s.latency.p99),
+                   f2(s.weight_mem_bytes / 1e6),
                    f2(s.act_mem_bytes as f64 / 1e6),
                    f2(s.peak_mem_bytes as f64 / 1e6)]);
     }

@@ -29,6 +29,8 @@ pub struct ExperimentConfig {
     pub decode_slots: usize,
     /// per-request generation budget for the decode serving path
     pub max_new_tokens: usize,
+    /// admission-queue depth for the network server (`serve --listen`)
+    pub queue_depth: usize,
     /// where checkpoints live
     pub ckpt_dir: PathBuf,
     /// where result tables are appended
@@ -51,6 +53,7 @@ impl Default for ExperimentConfig {
             threads: 0,
             decode_slots: 4,
             max_new_tokens: 32,
+            queue_depth: 64,
             ckpt_dir: root.join("artifacts").join("ckpts"),
             out_dir: root.join("results"),
         }
@@ -78,6 +81,7 @@ impl ExperimentConfig {
             threads: j.usize_or("threads", d.threads),
             decode_slots: j.usize_or("decode_slots", d.decode_slots),
             max_new_tokens: j.usize_or("max_new_tokens", d.max_new_tokens),
+            queue_depth: j.usize_or("queue_depth", d.queue_depth),
             ckpt_dir: j
                 .get("ckpt_dir")
                 .and_then(Json::as_str)
@@ -111,6 +115,7 @@ impl ExperimentConfig {
             ("threads", Json::num(self.threads as f64)),
             ("decode_slots", Json::num(self.decode_slots as f64)),
             ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
             ("ckpt_dir", Json::str(self.ckpt_dir.to_str().unwrap_or("."))),
             ("out_dir", Json::str(self.out_dir.to_str().unwrap_or("."))),
         ])
@@ -142,6 +147,7 @@ mod tests {
         assert_eq!(back.ckpt_dir, c.ckpt_dir);
         assert_eq!(back.decode_slots, c.decode_slots);
         assert_eq!(back.max_new_tokens, c.max_new_tokens);
+        assert_eq!(back.queue_depth, c.queue_depth);
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //! cache instead of once per token; they are bit-identical to the tables
 //! the full forward pass builds, which the decode parity gate relies on.
 
+use std::sync::Arc;
+
 use crate::model::ConfigMeta;
-use crate::runtime::native::rope_tables;
+use crate::runtime::native::{layer_names, rope_tables, LayerNames};
 use crate::tensor::Mat;
 
 /// Per-sequence KV cache: one K/V arena per layer + the position cursor.
@@ -30,6 +32,9 @@ pub struct KvCache {
     /// RoPE tables `(max_len × dh/2)` flattened; empty for non-llama archs
     pub(crate) cos: Vec<f32>,
     pub(crate) sin: Vec<f32>,
+    /// pre-rendered per-layer parameter names (process-wide table, shared):
+    /// the per-token step does zero string formatting or cache lookups
+    pub(crate) names: Arc<Vec<LayerNames>>,
 }
 
 impl KvCache {
@@ -52,6 +57,7 @@ impl KvCache {
                 .collect(),
             cos,
             sin,
+            names: layer_names(cfg),
         }
     }
 

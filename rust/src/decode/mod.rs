@@ -1,6 +1,6 @@
 //! Autoregressive decode engine: KV-cached incremental generation plus a
-//! slot-based continuous-batching scheduler (the ROADMAP serving milestone
-//! beyond the prefill-only loop in `crate::serve`).
+//! long-lived slot-based continuous-batching scheduler (the ROADMAP serving
+//! milestone beyond the prefill-only loop in `crate::serve`).
 //!
 //! # Layout
 //!
@@ -16,9 +16,11 @@
 //! * [`sampler`] — greedy argmax and temperature softmax sampling, seeded
 //!   per request so generations are independent of slot assignment,
 //!   scheduling order, and thread count.
-//! * [`scheduler`] — continuous batching: requests are admitted into free
-//!   slots of an executing batch as sequences finish (prefill-then-decode
-//!   lifecycle), instead of draining a static batch to completion.
+//! * [`scheduler`] — the continuous-batching loop: [`run_engine`] pulls
+//!   work from a [`RequestSource`] (a fixed benchmark workload or the
+//!   network server's admission queue) and streams every generated token
+//!   through a [`DecodeEvent`] sink; [`run_decode`] is the classic
+//!   run-to-completion wrapper over a [`WorkloadSource`].
 //!
 //! # Determinism
 //!
@@ -28,7 +30,9 @@
 //! `rust/tests/decode_parity.rs` enforces this for both the dense and the
 //! low-rank engines.  Scheduling only chooses *when* a sequence advances,
 //! never *what* it computes, so generated tokens are reproducible under any
-//! slot count / thread count / arrival pattern.
+//! slot count / thread count / arrival pattern — including tokens streamed
+//! over TCP by `crate::server`, which bit-match the offline path
+//! (`rust/tests/server_loopback.rs`).
 
 pub mod kv;
 pub mod sampler;
@@ -36,5 +40,7 @@ pub mod scheduler;
 
 pub use kv::KvCache;
 pub use sampler::{argmax, Sampler};
-pub use scheduler::{run_decode, synth_requests, CompletedRequest,
-                    DecodeConfig, DecodeRequest, DecodeStats};
+pub use scheduler::{run_decode, run_engine, sampler_seed, synth_requests,
+                    CompletedRequest, DecodeConfig, DecodeEvent,
+                    DecodeRequest, DecodeStats, EngineCounters,
+                    RequestSource, SourcePoll, WorkloadSource};

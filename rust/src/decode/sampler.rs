@@ -2,8 +2,23 @@
 //! softmax.  Each sequence owns its sampler (seeded per request id), so
 //! generations are reproducible regardless of slot assignment, scheduling
 //! order, or thread count.
+//!
+//! Edge-case contract (unit-tested below):
+//! * temperature → 0 reproduces greedy argmax **exactly** — any temperature
+//!   at or below [`GREEDY_TEMP_EPS`] selects the greedy path, so ties also
+//!   break by index there instead of depending on underflowed softmax
+//!   weights;
+//! * greedy logit ties break deterministically to the lowest index;
+//! * temperature sampling is a pure function of (logits, seed): the same
+//!   `util::rng` seed replays the same tokens.
 
 use crate::util::rng::Rng;
+
+/// Temperatures at or below this are treated as exactly greedy.  Softmax at
+/// such temperatures already underflows every non-maximal weight to zero;
+/// routing them through `argmax` additionally pins tie-breaking to the
+/// lowest index (`sample_softmax` would pick among tied maxima by rng).
+pub const GREEDY_TEMP_EPS: f32 = 1e-6;
 
 /// First index of the maximum logit (ties break to the lowest index, so
 /// greedy decoding is fully deterministic).
@@ -26,9 +41,10 @@ pub enum Sampler {
 }
 
 impl Sampler {
-    /// `temperature <= 0` selects greedy decoding.
+    /// `temperature <= GREEDY_TEMP_EPS` (including 0 and negative values)
+    /// selects greedy decoding.
     pub fn new(temperature: f32, seed: u64) -> Sampler {
-        if temperature > 0.0 {
+        if temperature > GREEDY_TEMP_EPS {
             Sampler::Temperature { temp: temperature, rng: Rng::new(seed) }
         } else {
             Sampler::Greedy
@@ -54,15 +70,26 @@ fn sample_softmax(logits: &[f32], temp: f32, rng: &mut Rng) -> usize {
         .map(|&z| ((z as f64 - maxv) / t).exp())
         .collect();
     let total: f64 = weights.iter().sum();
+    if !(total > 0.0) || !total.is_finite() {
+        // degenerate logits (all -inf / NaN): fall back to the greedy rule
+        return argmax(logits);
+    }
     let u = rng.uniform() * total;
     let mut acc = 0.0f64;
-    for (i, w) in weights.iter().enumerate() {
+    let mut last_positive = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        if w > 0.0 {
+            last_positive = i;
+        }
         acc += w;
         if u < acc {
             return i;
         }
     }
-    logits.len() - 1
+    // floating-point slack put u at/over the final accumulator: return the
+    // last index that actually carried probability mass, never a zero-weight
+    // trailing entry
+    last_positive
 }
 
 #[cfg(test)]
@@ -80,6 +107,21 @@ mod tests {
     fn greedy_matches_argmax() {
         let mut s = Sampler::new(0.0, 1);
         assert_eq!(s.sample(&[0.1, 9.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn temperature_to_zero_is_exactly_greedy() {
+        // at, below, and just above zero — all take the greedy path,
+        // including on tied maxima (index tie-break, no rng draw)
+        let tied = vec![1.0f32, 5.0, 5.0, 0.0];
+        for temp in [0.0f32, -1.0, 1e-9, GREEDY_TEMP_EPS] {
+            for seed in [1u64, 2, 99] {
+                let mut s = Sampler::new(temp, seed);
+                assert_eq!(s.sample(&tied), argmax(&tied),
+                           "temp {temp} seed {seed}");
+                assert_eq!(s.sample(&[0.3f32, 0.1, 0.2]), 0);
+            }
+        }
     }
 
     #[test]
@@ -101,5 +143,24 @@ mod tests {
         for _ in 0..50 {
             assert_eq!(s.sample(&logits), 1);
         }
+    }
+
+    #[test]
+    fn softmax_never_returns_zero_weight_tail() {
+        // huge logit gap underflows every non-max weight to exactly 0.0; the
+        // trailing entries must never be selected even when the uniform draw
+        // lands at the top of the accumulator
+        let logits = vec![1000.0f32, -1000.0, -1000.0];
+        for seed in 0..50u64 {
+            let mut s = Sampler::new(0.5, seed);
+            assert_eq!(s.sample(&logits), 0, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn degenerate_logits_fall_back_to_greedy_rule() {
+        let all_neg_inf = vec![f32::NEG_INFINITY; 4];
+        let mut s = Sampler::new(0.7, 11);
+        assert_eq!(s.sample(&all_neg_inf), argmax(&all_neg_inf));
     }
 }

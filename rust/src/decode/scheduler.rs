@@ -1,5 +1,6 @@
 //! Continuous-batching scheduler: slot-based admission into an executing
-//! decode batch.
+//! decode batch, driven by an **external request source** with **per-token
+//! emission callbacks**.
 //!
 //! A request's lifecycle is prefill-then-decode: on admission into a free
 //! slot its whole prompt is driven through the incremental step kernel
@@ -8,20 +9,35 @@
 //! generated token.  When a sequence hits its generation budget (or its KV
 //! arena fills) the slot retires, its arena is rewound into the free pool,
 //! and the next pending request is admitted — the batch never drains to
-//! empty while work is queued, unlike the static prefill drain in
-//! `crate::serve`.
+//! empty while work is queued.
+//!
+//! The core loop is [`run_engine`]: a **long-lived** scheduler that pulls
+//! work from a [`RequestSource`] and reports progress through a sink
+//! callback ([`DecodeEvent`]: one event per generated token, one per
+//! completion).  Two sources exist:
+//!
+//! * [`WorkloadSource`] — a fixed request list with virtual-clock arrivals
+//!   (request `i` becomes eligible at iteration `i * arrival_steps`; `0`
+//!   saturates the queue).  [`run_decode`] wraps it to reproduce the
+//!   classic run-to-completion benchmark API.
+//! * the network server's queue-backed source (`crate::server`), where the
+//!   scheduler runs for the life of the process, idles cheaply when no
+//!   requests are queued, and drains gracefully when the queue closes.
 //!
 //! Slot steps are independent, so each iteration fans the occupied slots
-//! out across the `exec` worker pool in contiguous bands.  Generated tokens
-//! are bit-reproducible for any slot count / thread count / arrival
-//! pattern: the step kernel is deterministic per sequence and every
-//! sequence samples from its own request-seeded `Sampler`.
+//! out across the persistent `exec` worker pool in contiguous bands.
+//! Generated tokens are bit-reproducible for any slot count / thread count
+//! / arrival pattern: the step kernel is deterministic per sequence and
+//! every sequence samples from its own seeded `Sampler` — explicitly via
+//! `DecodeRequest::seed`, or derived from the scheduler seed and request id
+//! by [`sampler_seed`].  Scheduling chooses *when* a sequence advances,
+//! never *what* it computes, which is what lets network generations
+//! bit-match the offline path (`rust/tests/server_loopback.rs`).
 //!
-//! Admission uses a virtual clock (scheduler iterations): request `i`
-//! becomes eligible at iteration `i * arrival_steps`, with `0` meaning all
-//! requests arrive up front (a saturating queue).  Latency is wall-clock
-//! from eligibility to completion, so queue wait is visible in p95 exactly
-//! as in the prefill serving loop.
+//! Latency accounting: a request's latency spans eligibility → completion
+//! (queue wait included, so admission pressure is visible in p95/p99);
+//! TTFT spans eligibility → first generated token; queue wait is reported
+//! separately as eligibility → slot admission.
 
 use std::time::Instant;
 
@@ -35,7 +51,7 @@ use crate::runtime::session::Session;
 use crate::serve::{peak_rss_bytes, Engine};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
-use crate::util::stats::summarize;
+use crate::util::stats::LatencySummary;
 
 /// One generation request.
 #[derive(Clone, Debug)]
@@ -43,6 +59,27 @@ pub struct DecodeRequest {
     pub id: usize,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    /// per-request sampling temperature (None = the scheduler default).
+    /// The network front-end threads client-supplied values through these
+    /// overrides so a server generation bit-matches an offline
+    /// [`run_decode`] carrying the same explicit settings.
+    pub temperature: Option<f32>,
+    /// per-request sampler seed (None = derived via [`sampler_seed`])
+    pub seed: Option<u64>,
+}
+
+impl DecodeRequest {
+    pub fn new(id: usize, prompt: Vec<i32>, max_new_tokens: usize)
+               -> DecodeRequest {
+        DecodeRequest { id, prompt, max_new_tokens, temperature: None,
+                        seed: None }
+    }
+}
+
+/// Default per-request sampler seed: scheduler seed mixed with the request
+/// id, so generations are independent of slot assignment and scheduling.
+pub fn sampler_seed(base: u64, id: usize) -> u64 {
+    base ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 /// Synthetic request stream for the benchmarks: random prompts (compute
@@ -52,11 +89,11 @@ pub fn synth_requests(cfg: &ConfigMeta, n: usize, prompt_len: usize,
     let mut rng = Rng::new(seed);
     let plen = prompt_len.clamp(1, cfg.seq_len);
     (0..n)
-        .map(|id| DecodeRequest {
+        .map(|id| DecodeRequest::new(
             id,
-            prompt: (0..plen).map(|_| rng.range(1, cfg.vocab) as i32).collect(),
+            (0..plen).map(|_| rng.range(1, cfg.vocab) as i32).collect(),
             max_new_tokens,
-        })
+        ))
         .collect()
 }
 
@@ -67,12 +104,13 @@ pub struct DecodeConfig {
     /// default generation budget (requests carry their own, already set by
     /// `synth_requests`; this caps the CLI/bench default)
     pub max_new_tokens: usize,
-    /// 0 = greedy argmax; > 0 = softmax sampling at this temperature
+    /// default sampling temperature: 0 = greedy argmax; > 0 = softmax
+    /// sampling at this temperature (requests may override per-request)
     pub temperature: f32,
     pub seed: u64,
-    /// arrival gap in scheduler iterations (deterministic schedule:
-    /// request `i` becomes eligible at iteration `i * arrival_steps`);
-    /// 0 saturates the queue
+    /// arrival gap in scheduler iterations for [`WorkloadSource`]
+    /// (deterministic schedule: request `i` becomes eligible at iteration
+    /// `i * arrival_steps`); 0 saturates the queue
     pub arrival_steps: f64,
 }
 
@@ -83,7 +121,7 @@ impl Default for DecodeConfig {
     }
 }
 
-/// One finished request, in request-id order.
+/// One finished request.
 #[derive(Clone, Debug)]
 pub struct CompletedRequest {
     pub id: usize,
@@ -94,6 +132,141 @@ pub struct CompletedRequest {
     pub latency_ms: f64,
     /// eligibility → first generated token, ms
     pub ttft_ms: f64,
+    /// eligibility → slot admission, ms (pure queue wait)
+    pub queue_ms: f64,
+}
+
+/// Per-token / per-completion emissions from [`run_engine`], delivered on
+/// the driver thread in slot order after each iteration — never from the
+/// band workers, so sinks need no synchronization of their own.
+#[derive(Debug)]
+pub enum DecodeEvent {
+    /// the `index`-th generated token of request `id`
+    Token {
+        id: usize,
+        index: usize,
+        token: i32,
+        /// gap since this request's previous emission (the first token's
+        /// gap is its TTFT), seconds
+        gap_secs: f64,
+    },
+    /// request finished (budget reached or KV arena full)
+    Done(CompletedRequest),
+}
+
+/// What a [`RequestSource`] hands the scheduler when asked for work.
+pub enum SourcePoll {
+    /// next request plus the instant it became eligible (latency baseline)
+    Ready(DecodeRequest, Instant),
+    /// nothing eligible right now, but the stream is still open
+    Pending,
+    /// the stream has ended: drain in-flight slots and return
+    Drained,
+}
+
+/// External request feed for the long-lived scheduler loop.
+pub trait RequestSource {
+    /// Called once per scheduler iteration, before admission — virtual-
+    /// clock sources stamp newly-eligible arrivals here so queue wait is
+    /// charged even while every slot is busy.
+    fn tick(&mut self, _iter: usize) {}
+
+    /// Next request for a free slot.
+    fn poll(&mut self, iter: usize) -> SourcePoll;
+
+    /// The batch is empty and `poll` returned `Pending`: block until work
+    /// may be available and return the iteration to resume at.  Virtual
+    /// clocks fast-forward (discrete-event style) instead of busy-spinning;
+    /// live sources wait on a condvar with a bounded timeout.
+    fn idle_wait(&mut self, iter: usize) -> usize;
+}
+
+/// Fixed request list with virtual-clock arrivals — the offline benchmark
+/// workload expressed as a [`RequestSource`].
+pub struct WorkloadSource<'a> {
+    requests: &'a [DecodeRequest],
+    arrival_steps: f64,
+    next: usize,
+    arrivals: Vec<Option<Instant>>,
+}
+
+impl<'a> WorkloadSource<'a> {
+    pub fn new(requests: &'a [DecodeRequest], arrival_steps: f64)
+               -> WorkloadSource<'a> {
+        WorkloadSource {
+            requests,
+            arrival_steps,
+            next: 0,
+            arrivals: vec![None; requests.len()],
+        }
+    }
+}
+
+impl RequestSource for WorkloadSource<'_> {
+    fn tick(&mut self, iter: usize) {
+        let now = Instant::now();
+        for (i, a) in self.arrivals.iter_mut().enumerate() {
+            if a.is_none() && (i as f64) * self.arrival_steps <= iter as f64 {
+                *a = Some(now);
+            }
+        }
+    }
+
+    fn poll(&mut self, _iter: usize) -> SourcePoll {
+        if self.next >= self.requests.len() {
+            return SourcePoll::Drained;
+        }
+        match self.arrivals[self.next] {
+            Some(at) => {
+                let r = self.requests[self.next].clone();
+                self.next += 1;
+                SourcePoll::Ready(r, at)
+            }
+            None => SourcePoll::Pending,
+        }
+    }
+
+    fn idle_wait(&mut self, iter: usize) -> usize {
+        // batch fully drained before the next arrival: fast-forward the
+        // virtual clock to it instead of spinning through empty iterations
+        let due = ((self.next as f64) * self.arrival_steps).ceil() as usize;
+        due.max(iter + 1)
+    }
+}
+
+/// Aggregate counters from one [`run_engine`] run.  Percentiles are the
+/// sink's business: a long-lived server summarizes from its metrics
+/// registry, [`run_decode`] from the completions it collects.
+#[derive(Clone, Debug, Default)]
+pub struct EngineCounters {
+    pub iterations: usize,
+    pub requests_completed: usize,
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+    pub wall_seconds: f64,
+    /// wall time of scheduler iterations that carried no prefill (the
+    /// steady-state decode phase)
+    pub decode_only_secs: f64,
+    /// tokens generated during those prefill-free iterations
+    pub decode_only_tokens: usize,
+}
+
+impl EngineCounters {
+    /// Steady-state decode throughput — the ONE definition every surface
+    /// reports (`DecodeStats::decode_tok_per_sec`, the network server's
+    /// session table, `benches/server_throughput.rs`): tokens generated
+    /// during prefill-free iterations over those iterations' wall time,
+    /// falling back to the whole-run average when every iteration carried
+    /// a prefill.
+    pub fn decode_tok_per_sec(&self) -> f64 {
+        if self.decode_only_secs > 0.0 {
+            self.decode_only_tokens as f64 / self.decode_only_secs
+        } else if self.wall_seconds > 0.0 {
+            self.decode_tokens as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -107,15 +280,14 @@ pub struct DecodeStats {
     /// prefill-free scheduler iterations over those iterations' wall time
     /// (falls back to decode_tokens / wall when every iteration carried a
     /// prefill).  Most meaningful under saturating arrivals
-    /// (`arrival_steps == 0`, the benchmarks' setting); with staggered
-    /// arrivals admissions land in most iterations and the prefill-free
-    /// sample shrinks toward the drain tail.
+    /// (`arrival_steps == 0`, the benchmarks' setting).
     pub decode_tok_per_sec: f64,
     /// prefill + decode tokens over the full wall clock
     pub total_tok_per_sec: f64,
-    pub p50_ms: f64,
-    pub p95_ms: f64,
-    pub p50_ttft_ms: f64,
+    /// end-to-end latency summary (eligibility → completion), ms
+    pub latency: LatencySummary,
+    /// time-to-first-token summary, ms
+    pub ttft: LatencySummary,
     /// K/V arena bytes one slot holds (f32)
     pub kv_bytes_per_slot: usize,
     pub peak_mem_bytes: usize,
@@ -123,18 +295,23 @@ pub struct DecodeStats {
 
 /// Per-slot in-flight sequence state.
 struct Active {
-    /// index into the request slice
-    req: usize,
+    req: DecodeRequest,
     cache: KvCache,
     sampler: Sampler,
     prefilled: bool,
     last_token: i32,
     tokens: Vec<i32>,
+    /// tokens already delivered to the sink
+    emitted: usize,
     /// generation budget for this request
     limit: usize,
-    /// wall seconds at eligibility
-    arrival: f64,
-    ttft: Option<f64>,
+    /// eligibility instant (latency baseline; includes queue wait)
+    arrival: Instant,
+    /// slot-admission instant (arrival → admitted = queue wait)
+    admitted: Instant,
+    first_token_at: Option<Instant>,
+    /// previous emission instant (token-gap baseline; starts at arrival)
+    last_emit: Instant,
     err: Option<anyhow::Error>,
     done: bool,
 }
@@ -153,22 +330,24 @@ fn step_engine(sess: &Session, params: &ParamStore, engine: &Engine,
 /// Advance one slot: full-prompt prefill on first touch, else one decode
 /// step.  Errors are parked on the slot and surfaced by the driver loop.
 fn advance(sess: &Session, params: &ParamStore, engine: &Engine,
-           req: &DecodeRequest, a: &mut Active, start: &Instant) {
+           a: &mut Active) {
     let r = (|| -> Result<()> {
         let logits = if a.prefilled {
             step_engine(sess, params, engine, &mut a.cache, a.last_token)?
         } else {
             let mut last = None;
-            for &t in &req.prompt {
+            for &t in &a.req.prompt {
                 last = Some(step_engine(sess, params, engine, &mut a.cache, t)?);
             }
             a.prefilled = true;
-            a.ttft = Some(start.elapsed().as_secs_f64());
             last.expect("admission rejects empty prompts")
         };
         let tok = a.sampler.sample(&logits.data) as i32;
         a.tokens.push(tok);
         a.last_token = tok;
+        if a.first_token_at.is_none() {
+            a.first_token_at = Some(Instant::now());
+        }
         Ok(())
     })();
     if let Err(e) = r {
@@ -179,20 +358,19 @@ fn advance(sess: &Session, params: &ParamStore, engine: &Engine,
     }
 }
 
-/// Run the continuous-batching generation workload.  Returns aggregate
-/// stats plus every completed request (sorted by id; generated tokens are
-/// deterministic for a given engine + config).
-pub fn run_decode(sess: &Session, params: &ParamStore, engine: &Engine,
-                  requests: &[DecodeRequest], cfg: &DecodeConfig)
-                  -> Result<(DecodeStats, Vec<CompletedRequest>)> {
+/// Run the long-lived continuous-batching scheduler until `source` drains:
+/// admit from `source` into free slots, advance occupied slots band-
+/// parallel on the persistent `exec` pool, and deliver every generated
+/// token and completion to `sink` in slot order.
+///
+/// Engine errors (a failing step kernel) abort the run; request validation
+/// belongs to the caller — the offline wrapper checks its whole workload up
+/// front and the network front-end screens at admission.
+pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
+                  cfg: &DecodeConfig, source: &mut dyn RequestSource,
+                  sink: &mut dyn FnMut(DecodeEvent))
+                  -> Result<EngineCounters> {
     anyhow::ensure!(cfg.max_slots >= 1, "decode needs at least one slot");
-    anyhow::ensure!(!requests.is_empty(), "no decode requests");
-    for r in requests {
-        anyhow::ensure!(!r.prompt.is_empty(), "request {}: empty prompt", r.id);
-        anyhow::ensure!(r.prompt.len() <= sess.cfg.seq_len,
-                        "request {}: prompt {} exceeds seq_len {}",
-                        r.id, r.prompt.len(), sess.cfg.seq_len);
-    }
 
     let start = Instant::now();
     let mut slots: Vec<Option<Active>> = Vec::new();
@@ -201,133 +379,191 @@ pub fn run_decode(sess: &Session, params: &ParamStore, engine: &Engine,
     }
     // rewound arenas from retired slots, reused by later admissions
     let mut arena_pool: Vec<KvCache> = Vec::new();
-    let mut arrivals: Vec<Option<f64>> = vec![None; requests.len()];
-    let mut next_admit = 0usize;
-    let mut done: Vec<CompletedRequest> = Vec::with_capacity(requests.len());
+    let mut c = EngineCounters::default();
     let mut iter = 0usize;
-    let mut decode_only_secs = 0.0f64;
-    let mut decode_only_tokens = 0usize;
+    let mut drained = false;
 
-    while next_admit < requests.len() || slots.iter().any(Option::is_some) {
-        // eligibility on the virtual clock (latency includes queue wait)
-        let now = start.elapsed().as_secs_f64();
-        for (i, a) in arrivals.iter_mut().enumerate() {
-            if a.is_none() && (i as f64) * cfg.arrival_steps <= iter as f64 {
-                *a = Some(now);
-            }
-        }
+    loop {
+        source.tick(iter);
 
-        // admit pending requests into free slots, in arrival order
-        for slot in slots.iter_mut() {
-            if slot.is_some() || next_admit >= requests.len() {
-                continue;
-            }
-            let Some(arrival) = arrivals[next_admit] else { break };
-            let r = &requests[next_admit];
-            let cache = match arena_pool.pop() {
-                Some(mut c) => {
-                    c.reset();
-                    c
+        // admit pending requests into free slots, in source order
+        if !drained {
+            for slot in slots.iter_mut() {
+                if slot.is_some() {
+                    continue;
                 }
-                None => KvCache::new(&sess.cfg),
-            };
-            *slot = Some(Active {
-                req: next_admit,
-                cache,
-                sampler: Sampler::new(
-                    cfg.temperature,
-                    cfg.seed ^ (r.id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
-                ),
-                prefilled: false,
-                last_token: 0,
-                tokens: Vec::with_capacity(r.max_new_tokens),
-                limit: r.max_new_tokens.max(1),
-                arrival,
-                ttft: None,
-                err: None,
-                done: false,
-            });
-            next_admit += 1;
+                match source.poll(iter) {
+                    SourcePoll::Ready(req, arrival) => {
+                        anyhow::ensure!(!req.prompt.is_empty(),
+                                        "request {}: empty prompt", req.id);
+                        anyhow::ensure!(
+                            req.prompt.len() <= sess.cfg.seq_len,
+                            "request {}: prompt {} exceeds seq_len {}",
+                            req.id, req.prompt.len(), sess.cfg.seq_len);
+                        let cache = match arena_pool.pop() {
+                            Some(mut cached) => {
+                                cached.reset();
+                                cached
+                            }
+                            None => KvCache::new(&sess.cfg),
+                        };
+                        let sampler = Sampler::new(
+                            req.temperature.unwrap_or(cfg.temperature),
+                            req.seed
+                                .unwrap_or_else(|| sampler_seed(cfg.seed, req.id)),
+                        );
+                        let now = Instant::now();
+                        let limit = req.max_new_tokens.max(1);
+                        // generation can never exceed the KV capacity, so a
+                        // huge client-supplied budget must not drive a huge
+                        // pre-allocation
+                        let cap = limit.min(sess.cfg.seq_len);
+                        *slot = Some(Active {
+                            cache,
+                            sampler,
+                            prefilled: false,
+                            last_token: 0,
+                            tokens: Vec::with_capacity(cap),
+                            emitted: 0,
+                            limit,
+                            arrival,
+                            admitted: now,
+                            first_token_at: None,
+                            last_emit: arrival,
+                            err: None,
+                            done: false,
+                            req,
+                        });
+                    }
+                    SourcePoll::Pending => break,
+                    SourcePoll::Drained => {
+                        drained = true;
+                        break;
+                    }
+                }
+            }
         }
 
-        // advance every occupied slot by one engine step, band-parallel;
-        // iterations with no prefill in them time the steady-state decode
-        // phase (each active slot emits exactly one token per iteration)
+        if !slots.iter().any(Option::is_some) {
+            if drained {
+                break;
+            }
+            iter = source.idle_wait(iter);
+            continue;
+        }
+
+        // advance every occupied slot by one engine step, band-parallel on
+        // the persistent pool; iterations with no prefill in them time the
+        // steady-state decode phase (each active slot emits exactly one
+        // token per iteration)
         {
             let mut act: Vec<&mut Active> =
                 slots.iter_mut().filter_map(|s| s.as_mut()).collect();
-            if !act.is_empty() {
-                let had_prefill = act.iter().any(|a| !a.prefilled);
-                let stepped = act.len();
-                let t_band = Instant::now();
-                let band = act.len().div_ceil(exec::threads().min(act.len()));
-                exec::par_chunks_mut(&mut act, band, |_, band| {
-                    for a in band.iter_mut() {
-                        advance(sess, params, engine, &requests[a.req], a,
-                                &start);
-                    }
-                });
-                if !had_prefill {
-                    decode_only_secs += t_band.elapsed().as_secs_f64();
-                    decode_only_tokens += stepped;
+            let had_prefill = act.iter().any(|a| !a.prefilled);
+            let stepped = act.len();
+            let t_band = Instant::now();
+            let band = act.len().div_ceil(exec::threads().min(act.len()));
+            exec::par_chunks_mut(&mut act, band, |_, band| {
+                for a in band.iter_mut() {
+                    advance(sess, params, engine, a);
                 }
+            });
+            if !had_prefill {
+                c.decode_only_secs += t_band.elapsed().as_secs_f64();
+                c.decode_only_tokens += stepped;
             }
         }
 
-        // retire finished sequences; their arenas go back to the pool
-        let now = start.elapsed().as_secs_f64();
+        // emit new tokens and retire finished sequences, in slot order;
+        // retired arenas go back to the pool
         for slot in slots.iter_mut() {
-            if !slot.as_ref().map(|a| a.done).unwrap_or(false) {
+            let Some(a) = slot.as_mut() else { continue };
+            while a.emitted < a.tokens.len() {
+                let now = Instant::now();
+                let gap = now.duration_since(a.last_emit).as_secs_f64();
+                a.last_emit = now;
+                sink(DecodeEvent::Token {
+                    id: a.req.id,
+                    index: a.emitted,
+                    token: a.tokens[a.emitted],
+                    gap_secs: gap,
+                });
+                a.emitted += 1;
+            }
+            if !a.done {
                 continue;
             }
             let mut a = slot.take().expect("checked occupied");
             if let Some(e) = a.err.take() {
                 return Err(e);
             }
-            done.push(CompletedRequest {
-                id: requests[a.req].id,
-                prompt_len: requests[a.req].prompt.len(),
-                tokens: a.tokens,
-                latency_ms: (now - a.arrival) * 1e3,
-                ttft_ms: a.ttft.map(|t| (t - a.arrival) * 1e3).unwrap_or(0.0),
-            });
-            // admission rewinds pooled arenas; no reset needed here
+            let now = Instant::now();
+            c.requests_completed += 1;
+            c.prefill_tokens += a.req.prompt.len();
+            c.decode_tokens += a.tokens.len();
+            sink(DecodeEvent::Done(CompletedRequest {
+                id: a.req.id,
+                prompt_len: a.req.prompt.len(),
+                tokens: std::mem::take(&mut a.tokens),
+                latency_ms: now.duration_since(a.arrival).as_secs_f64() * 1e3,
+                ttft_ms: a
+                    .first_token_at
+                    .map(|t| t.duration_since(a.arrival).as_secs_f64() * 1e3)
+                    .unwrap_or(0.0),
+                queue_ms: a.admitted.duration_since(a.arrival).as_secs_f64()
+                    * 1e3,
+            }));
             arena_pool.push(a.cache);
         }
         iter += 1;
-        if next_admit < requests.len() && slots.iter().all(Option::is_none) {
-            // batch fully drained before the next arrival: fast-forward the
-            // virtual clock to it (discrete-event style) instead of
-            // busy-spinning through empty iterations
-            let next_due =
-                ((next_admit as f64) * cfg.arrival_steps).ceil() as usize;
-            iter = iter.max(next_due);
-        }
     }
 
+    c.iterations = iter;
+    c.wall_seconds = start.elapsed().as_secs_f64();
+    Ok(c)
+}
+
+/// Run the fixed-workload generation benchmark: [`run_engine`] over a
+/// [`WorkloadSource`].  Returns aggregate stats plus every completed
+/// request (sorted by id; generated tokens are deterministic for a given
+/// engine + config).
+pub fn run_decode(sess: &Session, params: &ParamStore, engine: &Engine,
+                  requests: &[DecodeRequest], cfg: &DecodeConfig)
+                  -> Result<(DecodeStats, Vec<CompletedRequest>)> {
+    anyhow::ensure!(!requests.is_empty(), "no decode requests");
+    for r in requests {
+        anyhow::ensure!(!r.prompt.is_empty(), "request {}: empty prompt", r.id);
+        anyhow::ensure!(r.prompt.len() <= sess.cfg.seq_len,
+                        "request {}: prompt {} exceeds seq_len {}",
+                        r.id, r.prompt.len(), sess.cfg.seq_len);
+    }
+
+    let mut source = WorkloadSource::new(requests, cfg.arrival_steps);
+    let mut done: Vec<CompletedRequest> = Vec::with_capacity(requests.len());
+    let counters = {
+        let mut sink = |ev: DecodeEvent| {
+            if let DecodeEvent::Done(c) = ev {
+                done.push(c);
+            }
+        };
+        run_engine(sess, params, engine, cfg, &mut source, &mut sink)?
+    };
+
     done.sort_by_key(|c| c.id);
-    let wall = start.elapsed().as_secs_f64();
-    let prefill_tokens: usize = done.iter().map(|c| c.prompt_len).sum();
-    let decode_tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
     let lats: Vec<f64> = done.iter().map(|c| c.latency_ms).collect();
     let ttfts: Vec<f64> = done.iter().map(|c| c.ttft_ms).collect();
-    let s = summarize(&lats);
-    let st = summarize(&ttfts);
     let stats = DecodeStats {
         engine: engine.label(),
         requests: done.len(),
-        prefill_tokens,
-        decode_tokens,
-        wall_seconds: wall,
-        decode_tok_per_sec: if decode_only_secs > 0.0 {
-            decode_only_tokens as f64 / decode_only_secs
-        } else {
-            decode_tokens as f64 / wall
-        },
-        total_tok_per_sec: (prefill_tokens + decode_tokens) as f64 / wall,
-        p50_ms: s.median,
-        p95_ms: s.p95,
-        p50_ttft_ms: st.median,
+        prefill_tokens: counters.prefill_tokens,
+        decode_tokens: counters.decode_tokens,
+        wall_seconds: counters.wall_seconds,
+        decode_tok_per_sec: counters.decode_tok_per_sec(),
+        total_tok_per_sec: (counters.prefill_tokens + counters.decode_tokens)
+            as f64
+            / counters.wall_seconds,
+        latency: LatencySummary::from_samples(&lats),
+        ttft: LatencySummary::from_samples(&ttfts),
         kv_bytes_per_slot: KvCache::arena_bytes_for(&sess.cfg),
         peak_mem_bytes: peak_rss_bytes(),
     };
@@ -347,6 +583,7 @@ mod tests {
             assert_eq!(r.id, i);
             assert_eq!(r.prompt.len(), 16);
             assert_eq!(r.max_new_tokens, 8);
+            assert!(r.temperature.is_none() && r.seed.is_none());
             assert!(r.prompt.iter().all(|&t| t >= 1 && (t as usize) < cfg.vocab));
         }
     }
@@ -358,5 +595,29 @@ mod tests {
         assert_eq!(reqs[0].prompt.len(), cfg.seq_len);
         let reqs = synth_requests(&cfg, 1, 0, 4, 2);
         assert_eq!(reqs[0].prompt.len(), 1);
+    }
+
+    #[test]
+    fn workload_source_respects_virtual_clock() {
+        let reqs: Vec<DecodeRequest> =
+            (0..3).map(|i| DecodeRequest::new(i, vec![1], 2)).collect();
+        let mut src = WorkloadSource::new(&reqs, 2.0);
+        // iter 0: only request 0 is eligible
+        src.tick(0);
+        assert!(matches!(src.poll(0), SourcePoll::Ready(r, _) if r.id == 0));
+        assert!(matches!(src.poll(0), SourcePoll::Pending));
+        // fast-forward lands exactly on request 1's due iteration
+        assert_eq!(src.idle_wait(0), 2);
+        src.tick(2);
+        assert!(matches!(src.poll(2), SourcePoll::Ready(r, _) if r.id == 1));
+        src.tick(4);
+        assert!(matches!(src.poll(4), SourcePoll::Ready(r, _) if r.id == 2));
+        assert!(matches!(src.poll(4), SourcePoll::Drained));
+    }
+
+    #[test]
+    fn sampler_seed_mixes_ids() {
+        assert_ne!(sampler_seed(1, 0), sampler_seed(1, 1));
+        assert_eq!(sampler_seed(7, 3), sampler_seed(7, 3));
     }
 }

@@ -1,6 +1,5 @@
-//! Parallel execution substrate: a std::thread scoped worker pool with
-//! deterministic fork/join primitives (no external crates, no persistent
-//! threads to manage).
+//! Parallel execution substrate: a **persistent** std::thread worker pool
+//! with deterministic fork/join primitives (no external crates).
 //!
 //! Everything compute-heavy in the repo funnels through two primitives:
 //!
@@ -8,10 +7,24 @@
 //!   ranges out to workers and reassembling results **in input order**.
 //!   Used for the embarrassingly-parallel per-target work (whitened SVD +
 //!   sensitivity in `compress::pipeline::decompose_all`, plan building,
-//!   the correction loop).
+//!   the correction loop, the calibration batch fan-out).
 //! * [`par_chunks_mut`] — hand disjoint `&mut` chunks of one buffer to
 //!   workers.  Used by the row-partitioned matmul kernels in
-//!   `linalg::matmul`: each worker owns a contiguous band of output rows.
+//!   `linalg::matmul` and by the decode scheduler's slot bands: each worker
+//!   owns a contiguous band of output rows / slots.
+//!
+//! # Persistent pool
+//!
+//! Both primitives execute on one process-lifetime worker pool (lazily
+//! spawned on first parallel call) instead of spawning fresh scoped threads
+//! per call.  That amortizes thread start-up across the per-token scheduler
+//! iterations and the per-matmul fan-outs the ROADMAP flagged: a `par_*`
+//! call now costs one queue lock + condvar wake, not N `clone(2)`s.  Work
+//! is submitted as boxed jobs with a completion latch; the submitting
+//! thread blocks until every job has run, which is what makes the borrowed
+//! (non-`'static`) closures sound — see `run_jobs`.  Worker panics are
+//! caught, the pool survives, and the panic is re-raised on the submitting
+//! thread (same observable behavior as the old scoped join).
 //!
 //! # Determinism
 //!
@@ -22,9 +35,9 @@
 //! * `par_map` writes each element's result to its input index — scheduling
 //!   cannot reorder outputs, and element computations are independent.
 //! * `par_chunks_mut` partitions the output into disjoint slices up front;
-//!   workers never share a cacheline of results, and the per-element
-//!   floating-point accumulation order inside a chunk is exactly the serial
-//!   kernel's order (see `linalg::matmul`).
+//!   workers never share results, and the per-element floating-point
+//!   accumulation order inside a chunk is exactly the serial kernel's order
+//!   (see `linalg::matmul`).
 //!
 //! # Thread-count knob
 //!
@@ -34,17 +47,25 @@
 //! 2. the `PALLAS_THREADS` environment variable,
 //! 3. `std::thread::available_parallelism()`, capped at [`MAX_THREADS`].
 //!
+//! The pool itself is sized once, at first use, to the larger of the
+//! resolved count and the detected parallelism (capped at [`MAX_THREADS`]);
+//! later `set_threads` calls change how much work each `par_*` call
+//! *submits*, not the pool size — excess chunks simply queue.
+//!
 //! Nested parallelism is suppressed: a `par_map`/`par_chunks_mut` call made
 //! *from inside a worker* runs serially on that worker, so parallelizing an
 //! outer loop (per-target decomposition) never multiplies against the inner
-//! parallel matmuls.
+//! parallel matmuls — and, as a corollary, pool workers never submit (and
+//! never block on) pool jobs, so waiting for a latch cannot deadlock.
 
 use std::cell::Cell;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Upper bound on the worker count from auto-detection (explicit settings
-/// may exceed it; they are clamped to [`HARD_MAX_THREADS`]).
+/// Upper bound on the worker count from auto-detection, and on the size of
+/// the persistent pool (explicit settings may exceed it for *submission*
+/// granularity; they are clamped to [`HARD_MAX_THREADS`]).
 pub const MAX_THREADS: usize = 16;
 
 /// Absolute clamp for explicit settings — a backstop against misconfigured
@@ -112,6 +133,144 @@ pub fn with_worker_flag<R>(f: impl FnOnce() -> R) -> R {
     f()
 }
 
+// ---------------------------------------------------------------------------
+// persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// A queued unit of work.  Always the wrapper built in `run_jobs` (which
+/// catches panics and counts down a latch), never a raw caller closure.
+type Job = Box<dyn FnOnce() + Send>;
+
+struct JobQueue {
+    jobs: Mutex<VecDeque<Job>>,
+    available: Condvar,
+}
+
+struct Pool {
+    q: Arc<JobQueue>,
+    /// worker threads alive (fixed after spawn; informational)
+    size: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let auto = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let size = threads().max(auto).clamp(1, MAX_THREADS);
+        let q = Arc::new(JobQueue {
+            jobs: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+        });
+        for i in 0..size {
+            let q = Arc::clone(&q);
+            std::thread::Builder::new()
+                .name(format!("pallas-pool-{i}"))
+                .spawn(move || {
+                    IN_WORKER.with(|w| w.set(true));
+                    loop {
+                        let job = {
+                            let mut jobs =
+                                q.jobs.lock().unwrap_or_else(|e| e.into_inner());
+                            loop {
+                                if let Some(j) = jobs.pop_front() {
+                                    break j;
+                                }
+                                jobs = q
+                                    .available
+                                    .wait(jobs)
+                                    .unwrap_or_else(|e| e.into_inner());
+                            }
+                        };
+                        // jobs are panic-catching wrappers; nothing unwinds
+                        // through here and the worker lives forever
+                        job();
+                    }
+                })
+                .expect("spawn pool worker");
+        }
+        Pool { q, size }
+    })
+}
+
+/// Number of threads in the persistent pool (0 if it has not been spawned
+/// yet).  Diagnostic only.
+pub fn pool_size() -> usize {
+    POOL.get().map(|p| p.size).unwrap_or(0)
+}
+
+/// Execute `jobs` on the persistent pool and block until every one has
+/// finished.  Job panics are caught (workers survive) and the first one is
+/// re-raised here after all jobs complete.
+///
+/// # Safety of the lifetime erasure
+///
+/// Jobs may borrow caller state (`'a`), yet the queue stores `'static`
+/// boxes.  This is sound because this function does not return until the
+/// completion latch reports every job done — the borrows outlive every
+/// job's execution.  Callers must not be pool workers (all callers guard
+/// with [`in_worker`]), so blocking on the latch cannot starve the queue.
+fn run_jobs<'a>(jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+    let n = jobs.len();
+    if n == 0 {
+        return;
+    }
+    if n == 1 || in_worker() {
+        for j in jobs {
+            j();
+        }
+        return;
+    }
+    let p = pool();
+    let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+    type Panic = Box<dyn std::any::Any + Send + 'static>;
+    let panic: Arc<Mutex<Option<Panic>>> = Arc::new(Mutex::new(None));
+    {
+        let mut q = p.q.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        for job in jobs {
+            // SAFETY: see function docs — we block on `done` below until
+            // every job has executed, so the 'a borrows stay valid for the
+            // whole execution of `job`.
+            let job: Box<dyn FnOnce() + Send + 'static> =
+                unsafe { std::mem::transmute(job) };
+            let done = Arc::clone(&done);
+            let panic = Arc::clone(&panic);
+            q.push_back(Box::new(move || {
+                let r = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(job));
+                if let Err(e) = r {
+                    let mut slot =
+                        panic.lock().unwrap_or_else(|p| p.into_inner());
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                }
+                let (count, cv) = &*done;
+                let mut c = count.lock().unwrap_or_else(|p| p.into_inner());
+                *c += 1;
+                cv.notify_all();
+            }));
+        }
+        p.q.available.notify_all();
+    }
+    let (count, cv) = &*done;
+    let mut c = count.lock().unwrap_or_else(|p| p.into_inner());
+    while *c < n {
+        c = cv.wait(c).unwrap_or_else(|p| p.into_inner());
+    }
+    drop(c);
+    let first = panic.lock().unwrap_or_else(|p| p.into_inner()).take();
+    if let Some(e) = first {
+        std::panic::resume_unwind(e);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fork/join primitives
+// ---------------------------------------------------------------------------
+
 /// Map `f` over `items`, in parallel when worthwhile.  `f` receives the
 /// element index and a reference; results come back in input order.
 pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
@@ -126,26 +285,32 @@ where
     }
     let nt = nt.min(items.len());
     let chunk = items.len().div_ceil(nt);
-    let f = &f;
-    let mut groups: Vec<Vec<R>> = Vec::new();
-    std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(nt);
+    let n_chunks = items.len().div_ceil(chunk);
+    // one output slot per chunk, written exactly once by its job
+    let slots: Vec<Mutex<Vec<R>>> =
+        (0..n_chunks).map(|_| Mutex::new(Vec::new())).collect();
+    {
+        let f = &f;
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(n_chunks);
         for (ci, slab) in items.chunks(chunk).enumerate() {
-            let base = ci * chunk;
-            handles.push(s.spawn(move || {
-                IN_WORKER.with(|w| w.set(true));
-                slab.iter()
+            let slot = &slots[ci];
+            jobs.push(Box::new(move || {
+                let base = ci * chunk;
+                let out: Vec<R> = slab
+                    .iter()
                     .enumerate()
                     .map(|(j, t)| f(base + j, t))
-                    .collect::<Vec<R>>()
+                    .collect();
+                *slot.lock().unwrap_or_else(|e| e.into_inner()) = out;
             }));
         }
-        groups = handles
-            .into_iter()
-            .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
-            .collect();
-    });
-    groups.into_iter().flatten().collect()
+        run_jobs(jobs);
+    }
+    slots
+        .into_iter()
+        .flat_map(|m| m.into_inner().unwrap_or_else(|e| e.into_inner()))
+        .collect()
 }
 
 /// Fold `items` pairwise in fixed rounds: (0,1), (2,3), … then the same
@@ -171,11 +336,12 @@ pub fn tree_reduce<T>(mut items: Vec<T>, combine: impl Fn(&mut T, T))
 }
 
 /// Split `data` into consecutive chunks of `chunk_len` elements (the last
-/// may be shorter) and run `f(chunk_index, chunk)` on each, in parallel.
+/// may be shorter) and run `f(chunk_index, chunk)` on each, in parallel on
+/// the persistent pool.
 ///
 /// The caller picks `chunk_len` so the chunk count roughly matches
-/// [`threads`] — one worker thread is spawned per chunk.  Chunks are
-/// disjoint `&mut` slices, so workers cannot race by construction.
+/// [`threads`].  Chunks are disjoint `&mut` slices, so workers cannot race
+/// by construction; chunks beyond the pool size queue and drain.
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
 where
     T: Send,
@@ -190,14 +356,11 @@ where
         return;
     }
     let f = &f;
-    std::thread::scope(|s| {
-        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
-            s.spawn(move || {
-                IN_WORKER.with(|w| w.set(true));
-                f(i, c);
-            });
-        }
-    });
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+        jobs.push(Box::new(move || f(i, c)));
+    }
+    run_jobs(jobs);
 }
 
 #[cfg(test)]
@@ -228,6 +391,38 @@ mod tests {
     }
 
     #[test]
+    fn pool_survives_many_rounds() {
+        // repeated fan-outs reuse the same persistent workers; results stay
+        // exact across rounds and momentary thread-count changes
+        for round in 0..20u64 {
+            set_threads(2 + (round as usize % 3));
+            let items: Vec<u64> = (0..41).map(|i| i + round).collect();
+            let out = par_map(&items, |_, &x| x * 3);
+            assert_eq!(out, items.iter().map(|&x| x * 3).collect::<Vec<_>>());
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        set_threads(4);
+        let items = vec![0usize, 1, 2, 3, 4, 5, 6, 7];
+        let r = std::panic::catch_unwind(|| {
+            par_map(&items, |_, &x| {
+                if x == 5 {
+                    panic!("boom");
+                }
+                x
+            })
+        });
+        assert!(r.is_err(), "panic must reach the caller");
+        // the pool still works after a job panicked
+        let ok = par_map(&items, |_, &x| x + 1);
+        assert_eq!(ok, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        set_threads(0);
+    }
+
+    #[test]
     fn tree_reduce_is_a_fixed_pairwise_tree() {
         // strings expose the association order
         let tree = |n: usize| {
@@ -254,6 +449,17 @@ mod tests {
         for (i, &v) in data.iter().enumerate() {
             assert_eq!(v, i as u32);
         }
+    }
+
+    #[test]
+    fn more_chunks_than_workers_all_run() {
+        // submission granularity may exceed the pool size; every chunk must
+        // still execute exactly once
+        let mut data = vec![0u8; 64];
+        set_threads(4);
+        par_chunks_mut(&mut data, 1, |_, c| c[0] += 1);
+        set_threads(0);
+        assert!(data.iter().all(|&v| v == 1));
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub mod compress;
 pub mod decode;
 pub mod eval;
 pub mod serve;
+pub mod server;
 pub mod coordinator;
 pub mod config;
 pub mod report;

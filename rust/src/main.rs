@@ -9,7 +9,16 @@
 //!   serve                    batched serving benchmark (dense vs low-rank);
 //!                            `--decode` switches to KV-cached generation
 //!                            under continuous batching (`--slots`,
-//!                            `--max-new-tokens`, `--temperature`)
+//!                            `--max-new-tokens`, `--temperature`);
+//!                            `--listen <addr>` starts the network server
+//!                            (streaming TCP front-end; `--plan` serves the
+//!                            ZS-SVD low-rank engine, `--queue-depth` bounds
+//!                            admission, `--port-file` writes the bound
+//!                            address for scripts)
+//!   client                   drive a running server over TCP
+//!                            (`--connect <addr>`, `--requests`,
+//!                            `--prompt-len`, `--max-new-tokens`,
+//!                            `--shutdown` to drain the server afterwards)
 
 use anyhow::Result;
 
@@ -18,9 +27,11 @@ use zs_svd::config::ExperimentConfig;
 use zs_svd::coordinator::{self, Method};
 use zs_svd::decode::{run_decode, synth_requests, DecodeConfig};
 use zs_svd::eval::EvalSpec;
-use zs_svd::report::{acc2, f2, mb, pct, Table};
+use zs_svd::report::{acc2, f2, latency_cells, mb, pct, Table,
+                     LATENCY_HEADERS};
 use zs_svd::runtime::Runtime;
 use zs_svd::serve::{run_serving, Engine, ServeConfig};
+use zs_svd::server::{self, GenerateOutcome, GenerateReq};
 use zs_svd::util::cli::Args;
 
 fn parse_method(name: &str, ratio: f64) -> Method {
@@ -73,6 +84,120 @@ fn eval_spec(args: &Args, cfg: &ExperimentConfig) -> EvalSpec {
         instances_per_family: args.usize_or("instances", cfg.instances_per_family),
         task_seed: 0xE1,
     }
+}
+
+/// `serve --listen <addr>`: the network server (dense or `--plan` low-rank
+/// engine), blocking until a protocol `shutdown` drains it.
+fn serve_listen(rt: &Runtime, args: &Args, cfg: &ExperimentConfig,
+                listen: &str) -> Result<()> {
+    let ratio = args.f64_or("ratio", 0.6);
+    let p = coordinator::prepare(rt, cfg)?;
+
+    let applied; // low-rank-applied weights must outlive the server run
+    let (params, engine) = if args.flag("plan") {
+        let tag = format!("{}", (ratio * 100.0) as usize);
+        anyhow::ensure!(p.session.cfg.lowrank.contains_key(&tag),
+                        "no lowrank artifact `{tag}`");
+        let plan = coordinator::run_method(&p, &Method::zs(ratio), ratio)?;
+        let lm = p.session.cfg.lowrank.get(&tag).expect("checked above");
+        let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
+        applied = plan.apply(&p.params);
+        (&applied, engine)
+    } else {
+        (&p.params, Engine::Dense)
+    };
+
+    let scfg = server::ServerConfig {
+        addr: listen.to_string(),
+        queue_depth: args.usize_or("queue-depth", cfg.queue_depth),
+        decode: DecodeConfig {
+            max_slots: args.usize_or("slots", cfg.decode_slots),
+            max_new_tokens: args.usize_or("max-new-tokens", cfg.max_new_tokens),
+            temperature: args.f64_or("temperature", 0.0) as f32,
+            seed: cfg.seed,
+            arrival_steps: 0.0,
+        },
+    };
+    let port_file = args.get("port-file").map(|s| s.to_string());
+    println!("serving {} engine on {listen} (slots {}, queue depth {})",
+             engine.label(), scfg.decode.max_slots, scfg.queue_depth);
+
+    let stats = server::run(&p.session, params, &engine, &scfg, |addr| {
+        println!("listening on {addr}");
+        if let Some(pf) = &port_file {
+            if let Err(e) = std::fs::write(pf, addr.to_string()) {
+                eprintln!("warn: could not write port file {pf}: {e}");
+            }
+        }
+    })?;
+
+    let mut t = Table::new(
+        &format!("server session ({})", stats.engine),
+        &["metric", "value"],
+    );
+    t.row(vec!["connections".into(), format!("{}", stats.connections)]);
+    t.row(vec!["admitted".into(), format!("{}", stats.requests_admitted)]);
+    t.row(vec!["rejected".into(), format!("{}", stats.requests_rejected)]);
+    t.row(vec!["completed".into(),
+               format!("{}", stats.counters.requests_completed)]);
+    t.row(vec!["decode tokens".into(),
+               format!("{}", stats.counters.decode_tokens)]);
+    t.row(vec!["decode tok/s".into(),
+               f2(stats.counters.decode_tok_per_sec())]);
+    for (h, v) in LATENCY_HEADERS.iter().zip(latency_cells(&stats.e2e)) {
+        t.row(vec![format!("e2e {h}"), v]);
+    }
+    for (h, v) in LATENCY_HEADERS.iter().zip(latency_cells(&stats.token_gap)) {
+        t.row(vec![format!("token {h}"), v]);
+    }
+    print!("{}", t.to_ascii());
+    Ok(())
+}
+
+/// `client --connect <addr>`: scripted session against a running server.
+fn client_session(args: &Args, rt: &Runtime) -> Result<()> {
+    let addr = args.str_or("connect", "127.0.0.1:8650");
+    let n = args.usize_or("requests", 2);
+    let plen = args.usize_or("prompt-len", 8).max(1);
+    let max_new = args.usize_or("max-new-tokens", 4);
+    // prompts must fit the SERVER's vocabulary: derive it from the same
+    // manifest config the server loads (`--model` must match its setting)
+    let model = args.str_or("model", "tiny");
+    let vocab = rt
+        .manifest
+        .configs
+        .get(&model)
+        .map(|c| c.vocab)
+        .unwrap_or(256)
+        .max(2);
+    let mut c = server::Client::connect(addr.as_str())?;
+    for i in 0..n {
+        let prompt = server::scripted_prompt(i, plen, vocab);
+        let g = GenerateReq { id: i as u64, prompt, max_new_tokens: max_new,
+                              temperature: None, seed: None };
+        match c.run_generate(&g)? {
+            GenerateOutcome::Done(r) => {
+                println!(
+                    "request {i}: {} tokens streamed, queue {:.1} ms, \
+                     ttft {:.1} ms, e2e {:.1} ms",
+                    r.tokens.len(), r.queue_ms, r.ttft_ms, r.latency_ms);
+            }
+            GenerateOutcome::Rejected { code, message } => {
+                anyhow::bail!("request {i} rejected: {code} ({message})");
+            }
+        }
+    }
+    let snap = c.metrics()?;
+    println!("server metrics: {} tok/s over uptime, queue depth {}, \
+              uptime {:.1}s",
+             f2(snap.f64_or("uptime_tok_per_sec", 0.0)),
+             snap.usize_or("queue_depth", 0),
+             snap.f64_or("uptime_secs", 0.0));
+    if args.flag("shutdown") {
+        c.shutdown_server()?;
+        println!("server acknowledged shutdown");
+    }
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -186,6 +311,10 @@ fn main() -> Result<()> {
 
         "serve" => {
             let cfg = exp_config(&args);
+            if let Some(listen) = args.get("listen") {
+                let listen = listen.to_string();
+                return serve_listen(&rt, &args, &cfg, &listen);
+            }
             let ratio = args.f64_or("ratio", 0.6);
             let requests = args.usize_or("requests", 48);
             let p = coordinator::prepare(&rt, &cfg)?;
@@ -219,18 +348,21 @@ fn main() -> Result<()> {
                 let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
                 let (l, _) = run_decode(&p.session, &plan.apply(&p.params),
                                         &engine, &reqs, &dc)?;
+                let mut headers = vec!["engine", "decode tok/s",
+                                       "total tok/s"];
+                headers.extend(LATENCY_HEADERS);
+                headers.extend(["ttft p50 ms", "KV MB/slot", "peak RSS MB"]);
                 let mut t = Table::new(
-                    "decode serving (continuous batching)",
-                    &["engine", "decode tok/s", "total tok/s", "p50 ms",
-                      "p95 ms", "ttft p50 ms", "KV MB/slot", "peak RSS MB"],
-                );
+                    "decode serving (continuous batching)", &headers);
                 for s in [&d, &l] {
-                    t.row(vec![
-                        s.engine.clone(), f2(s.decode_tok_per_sec),
-                        f2(s.total_tok_per_sec), f2(s.p50_ms), f2(s.p95_ms),
-                        f2(s.p50_ttft_ms), mb(s.kv_bytes_per_slot as f64),
-                        mb(s.peak_mem_bytes as f64),
-                    ]);
+                    let mut row = vec![s.engine.clone(),
+                                       f2(s.decode_tok_per_sec),
+                                       f2(s.total_tok_per_sec)];
+                    row.extend(latency_cells(&s.latency));
+                    row.extend([f2(s.ttft.p50),
+                                mb(s.kv_bytes_per_slot as f64),
+                                mb(s.peak_mem_bytes as f64)]);
+                    t.row(row);
                 }
                 print!("{}", t.to_ascii());
             } else {
@@ -249,25 +381,30 @@ fn main() -> Result<()> {
                 let l = run_serving(&p.session, &plan.apply(&p.params), &engine,
                                     &sc, plan.model_bytes(&p.session.cfg))?;
 
-                let mut t = Table::new("serving",
-                                       &["engine", "tok/s", "p50 ms", "p95 ms",
-                                         "weights MB", "act MB",
-                                         "peak RSS MB"]);
+                let mut headers = vec!["engine", "tok/s"];
+                headers.extend(LATENCY_HEADERS);
+                headers.extend(["weights MB", "act MB", "peak RSS MB"]);
+                let mut t = Table::new("serving", &headers);
                 for s in [&d, &l] {
-                    t.row(vec![
-                        s.engine.clone(), f2(s.tokens_per_sec), f2(s.p50_ms),
-                        f2(s.p95_ms), mb(s.weight_mem_bytes),
-                        mb(s.act_mem_bytes as f64),
-                        mb(s.peak_mem_bytes as f64),
-                    ]);
+                    let mut row = vec![s.engine.clone(),
+                                       f2(s.tokens_per_sec)];
+                    row.extend(latency_cells(&s.latency));
+                    row.extend([mb(s.weight_mem_bytes),
+                                mb(s.act_mem_bytes as f64),
+                                mb(s.peak_mem_bytes as f64)]);
+                    t.row(row);
                 }
                 print!("{}", t.to_ascii());
             }
         }
 
+        "client" => {
+            return client_session(&args, &rt);
+        }
+
         other => {
             anyhow::bail!("unknown subcommand `{other}` \
-                           (info|train|eval|compress|sweep|serve)");
+                           (info|train|eval|compress|sweep|serve|client)");
         }
     }
     Ok(())

@@ -1,7 +1,10 @@
 //! Paper-style table rendering (markdown + aligned ASCII) used by every
-//! bench harness and by EXPERIMENTS.md generation.
+//! bench harness and by EXPERIMENTS.md generation, plus the shared latency
+//! column shape every serving surface reports.
 
 use std::fmt::Write as _;
+
+use crate::util::stats::LatencySummary;
 
 #[derive(Clone, Debug)]
 pub struct Table {
@@ -105,6 +108,17 @@ pub fn mb(bytes: f64) -> String {
     f2(bytes / 1e6)
 }
 
+/// The one latency column shape (prefill serve, decode scheduler, network
+/// server): pair with [`latency_cells`] so every table agrees on which
+/// percentiles exist.
+pub const LATENCY_HEADERS: [&str; 4] = ["p50 ms", "p95 ms", "p99 ms",
+                                        "mean ms"];
+
+/// Cells matching [`LATENCY_HEADERS`].
+pub fn latency_cells(l: &LatencySummary) -> Vec<String> {
+    vec![f2(l.p50), f2(l.p95), f2(l.p99), f2(l.mean)]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +151,16 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new("X", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn latency_cells_match_headers() {
+        let l = LatencySummary::from_samples(&[1.0, 2.0, 3.0, 100.0]);
+        let cells = latency_cells(&l);
+        assert_eq!(cells.len(), LATENCY_HEADERS.len());
+        assert_eq!(cells[0], f2(l.p50));
+        assert_eq!(cells[2], f2(l.p99));
+        assert_eq!(cells[3], f2(l.mean));
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! logits bit for bit.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{ensure, Result};
 
@@ -29,6 +30,80 @@ use crate::linalg::matmul::{dot_f32, matmul, matmul_bt, matmul_bt_flat,
                             matmul_flat};
 use crate::model::{ConfigMeta, ParamStore};
 use crate::tensor::{IntTensor, Mat, Tensor};
+
+// ---------------------------------------------------------------------------
+// per-layer parameter-name tables
+// ---------------------------------------------------------------------------
+
+/// Pre-rendered parameter names for one transformer layer.  `decode_step`
+/// runs once per generated token and used to re-`format!` every
+/// `layers.{li}.*` string on each call — the tables are built once per
+/// (config, arch) and cached for the life of the process, so the per-token
+/// path does zero string allocation for name lookups.  The KV cache holds
+/// an `Arc` to its config's table (`decode::kv`), so the decode hot path
+/// doesn't even pay the cache lookup per token.
+pub(crate) struct LayerNames {
+    /// `layers.{li}.` — kept for the site names the calibration pass builds
+    prefix: String,
+    ln1: String,
+    wq: String,
+    wk: String,
+    wv: String,
+    wo: String,
+    ln2: String,
+    /// llama: `wgate`; opt: `win`
+    mlp_gate: String,
+    /// llama: `wup` (unused for opt)
+    mlp_up: String,
+    /// llama: `wdown`; opt: `wout`
+    mlp_down: String,
+}
+
+/// One process-wide table per config.  Keyed by config name with an
+/// (arch, layer-count) verification so ad-hoc test configs sharing a name
+/// cannot alias a stale table; the hit path allocates nothing.
+struct NamesEntry {
+    arch: String,
+    n_layers: usize,
+    names: Arc<Vec<LayerNames>>,
+}
+
+pub(crate) fn layer_names(cfg: &ConfigMeta) -> Arc<Vec<LayerNames>> {
+    static CACHE: OnceLock<Mutex<BTreeMap<String, NamesEntry>>> =
+        OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+    let mut m = cache.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(e) = m.get(cfg.name.as_str()) {
+        if e.arch == cfg.arch && e.n_layers == cfg.n_layers {
+            return Arc::clone(&e.names);
+        }
+    }
+    let llama = cfg.arch == "llama";
+    let names: Vec<LayerNames> = (0..cfg.n_layers)
+        .map(|li| {
+            let p = format!("layers.{li}.");
+            LayerNames {
+                ln1: format!("{p}ln1"),
+                wq: format!("{p}wq"),
+                wk: format!("{p}wk"),
+                wv: format!("{p}wv"),
+                wo: format!("{p}wo"),
+                ln2: format!("{p}ln2"),
+                mlp_gate: if llama { format!("{p}wgate") } else { format!("{p}win") },
+                mlp_up: format!("{p}wup"),
+                mlp_down: if llama { format!("{p}wdown") } else { format!("{p}wout") },
+                prefix: p,
+            }
+        })
+        .collect();
+    let a = Arc::new(names);
+    m.insert(cfg.name.clone(), NamesEntry {
+        arch: cfg.arch.clone(),
+        n_layers: cfg.n_layers,
+        names: Arc::clone(&a),
+    });
+    a
+}
 
 // ---------------------------------------------------------------------------
 // public entry points
@@ -106,14 +181,17 @@ pub fn decode_step(cfg: &ConfigMeta, params: &ParamStore,
         project(xin, params.get(name))
     };
 
+    // the cache carries its config's pre-rendered name table (built once
+    // per model via `layer_names`): zero lookups or allocations per token
+    let names = Arc::clone(&cache.names);
     let half = dh / 2;
     for li in 0..cfg.n_layers {
-        let p = format!("layers.{li}.");
+        let ln = &names[li];
 
-        let ln1 = norm_fwd(&x, param_1d(params, &format!("{p}ln1")), eps, llama);
-        let mut q = linear(&format!("{p}wq"), &ln1.y);
-        let mut k = linear(&format!("{p}wk"), &ln1.y);
-        let v = linear(&format!("{p}wv"), &ln1.y);
+        let ln1 = norm_fwd(&x, param_1d(params, &ln.ln1), eps, llama);
+        let mut q = linear(&ln.wq, &ln1.y);
+        let mut k = linear(&ln.wk, &ln1.y);
+        let v = linear(&ln.wv, &ln1.y);
         if llama {
             rope_rotate_row(q.row_mut(0), pos * half, h, dh, &cache.cos,
                             &cache.sin, false);
@@ -123,28 +201,27 @@ pub fn decode_step(cfg: &ConfigMeta, params: &ParamStore,
         cache.k[li].set_row(pos, k.row(0));
         cache.v[li].set_row(pos, v.row(0));
         let attn = attention_step(&q, &cache.k[li], &cache.v[li], pos, h, dh);
-        let attn_o = linear(&format!("{p}wo"), &attn);
+        let attn_o = linear(&ln.wo, &attn);
         x.add_assign(&attn_o);
 
-        let ln2 = norm_fwd(&x, param_1d(params, &format!("{p}ln2")), eps, llama);
+        let ln2 = norm_fwd(&x, param_1d(params, &ln.ln2), eps, llama);
         let act = if llama {
-            let g = linear(&format!("{p}wgate"), &ln2.y);
-            let u = linear(&format!("{p}wup"), &ln2.y);
+            let g = linear(&ln.mlp_gate, &ln2.y);
+            let u = linear(&ln.mlp_up, &ln2.y);
             let mut act = Mat::zeros(1, ff);
             for i in 0..act.data.len() {
                 act.data[i] = silu(g.data[i]) * u.data[i];
             }
             act
         } else {
-            let g = linear(&format!("{p}win"), &ln2.y);
+            let g = linear(&ln.mlp_gate, &ln2.y);
             let mut act = Mat::zeros(1, ff);
             for i in 0..act.data.len() {
                 act.data[i] = gelu(g.data[i]);
             }
             act
         };
-        let down_name = if llama { format!("{p}wdown") } else { format!("{p}wout") };
-        let down = linear(&down_name, &act);
+        let down = linear(&ln.mlp_down, &act);
         x.add_assign(&down);
     }
 
@@ -309,43 +386,44 @@ fn run(cfg: &ConfigMeta, params: &ParamStore, tokens: &IntTensor,
     let mut sites: Vec<(String, Mat)> = Vec::new();
     let mut layers: Vec<LayerTrace> = Vec::new();
 
+    let names = layer_names(cfg);
     for li in 0..cfg.n_layers {
-        let p = format!("layers.{li}.");
+        let ln = &names[li];
         let x_in = if keep { x.clone() } else { Mat::zeros(0, 0) };
 
-        let ln1 = norm_fwd(&x, param_1d(params, &format!("{p}ln1")), eps, llama);
+        let ln1 = norm_fwd(&x, param_1d(params, &ln.ln1), eps, llama);
         if want_sites {
-            sites.push((format!("{p}attn_in"), ln1.y.clone()));
+            sites.push((format!("{}attn_in", ln.prefix), ln1.y.clone()));
         }
-        let mut q = linear(&format!("{p}wq"), &ln1.y);
-        let mut k = linear(&format!("{p}wk"), &ln1.y);
-        let v = linear(&format!("{p}wv"), &ln1.y);
+        let mut q = linear(&ln.wq, &ln1.y);
+        let mut k = linear(&ln.wk, &ln1.y);
+        let v = linear(&ln.wv, &ln1.y);
         if llama {
             rope_apply(&mut q, t_len, h, dh, &cos_tab, &sin_tab, false);
             rope_apply(&mut k, t_len, h, dh, &cos_tab, &sin_tab, false);
         }
         let (attn, probs) = attention_fwd(&q, &k, &v, b, t_len, h, dh);
         if want_sites {
-            sites.push((format!("{p}attn_out_in"), attn.clone()));
+            sites.push((format!("{}attn_out_in", ln.prefix), attn.clone()));
         }
-        let attn_o = linear(&format!("{p}wo"), &attn);
+        let attn_o = linear(&ln.wo, &attn);
         x.add_assign(&attn_o);
         let x_mid = if keep { x.clone() } else { Mat::zeros(0, 0) };
 
-        let ln2 = norm_fwd(&x, param_1d(params, &format!("{p}ln2")), eps, llama);
+        let ln2 = norm_fwd(&x, param_1d(params, &ln.ln2), eps, llama);
         if want_sites {
-            sites.push((format!("{p}mlp_in"), ln2.y.clone()));
+            sites.push((format!("{}mlp_in", ln.prefix), ln2.y.clone()));
         }
         let (g, u, act) = if llama {
-            let g = linear(&format!("{p}wgate"), &ln2.y);
-            let u = linear(&format!("{p}wup"), &ln2.y);
+            let g = linear(&ln.mlp_gate, &ln2.y);
+            let u = linear(&ln.mlp_up, &ln2.y);
             let mut act = Mat::zeros(bt, ff);
             for i in 0..act.data.len() {
                 act.data[i] = silu(g.data[i]) * u.data[i];
             }
             (g, u, act)
         } else {
-            let g = linear(&format!("{p}win"), &ln2.y);
+            let g = linear(&ln.mlp_gate, &ln2.y);
             let mut act = Mat::zeros(bt, ff);
             for i in 0..act.data.len() {
                 act.data[i] = gelu(g.data[i]);
@@ -353,10 +431,9 @@ fn run(cfg: &ConfigMeta, params: &ParamStore, tokens: &IntTensor,
             (g, Mat::zeros(0, 0), act)
         };
         if want_sites {
-            sites.push((format!("{p}mlp_down_in"), act.clone()));
+            sites.push((format!("{}mlp_down_in", ln.prefix), act.clone()));
         }
-        let down_name = if llama { format!("{p}wdown") } else { format!("{p}wout") };
-        let down = linear(&down_name, &act);
+        let down = linear(&ln.mlp_down, &act);
         x.add_assign(&down);
 
         if keep {
@@ -950,6 +1027,27 @@ mod tests {
             let step = attention_step(&q1, &k, &v, t, h, dh);
             assert_eq!(step.row(0), full.row(t), "position {t}");
         }
+    }
+
+    #[test]
+    fn layer_name_tables_cached_and_correct() {
+        let m = crate::model::Manifest::builtin();
+        let llama = m.config("tiny");
+        let a = layer_names(llama);
+        let b = layer_names(llama);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup hits the cache");
+        assert_eq!(a.len(), llama.n_layers);
+        assert_eq!(a[0].wq, "layers.0.wq");
+        assert_eq!(a[0].mlp_gate, "layers.0.wgate");
+        assert_eq!(a[0].mlp_down, "layers.0.wdown");
+        let last = llama.n_layers - 1;
+        assert_eq!(a[last].ln2, format!("layers.{last}.ln2"));
+
+        let opt = m.config("opt_tiny");
+        let o = layer_names(opt);
+        assert_eq!(o[0].mlp_gate, "layers.0.win");
+        assert_eq!(o[0].mlp_down, "layers.0.wout");
+        assert_eq!(o[0].prefix, "layers.0.");
     }
 
     #[test]

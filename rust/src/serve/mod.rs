@@ -29,7 +29,7 @@ use crate::model::ParamStore;
 use crate::runtime::session::Session;
 use crate::tensor::{IntTensor, Mat};
 use crate::util::rng::Rng;
-use crate::util::stats::summarize;
+use crate::util::stats::LatencySummary;
 
 /// Which executable serves the requests.
 pub enum Engine {
@@ -107,8 +107,8 @@ pub struct ServeStats {
     pub tokens: usize,
     pub wall_seconds: f64,
     pub tokens_per_sec: f64,
-    pub p50_ms: f64,
-    pub p95_ms: f64,
+    /// request latency summary (arrival → completion), ms
+    pub latency: LatencySummary,
     /// peak RSS of the process (VmHWM), bytes
     pub peak_mem_bytes: usize,
     /// analytic activation memory of one max batch, bytes
@@ -232,15 +232,13 @@ pub fn run_serving(sess: &Session, params: &ParamStore, engine: &Engine,
 
     let wall = start.elapsed().as_secs_f64();
     let tokens = cfg.n_requests * seq;
-    let s = summarize(&latencies);
     Ok(ServeStats {
         engine: engine.label(),
         requests: cfg.n_requests,
         tokens,
         wall_seconds: wall,
         tokens_per_sec: tokens as f64 / wall,
-        p50_ms: s.median,
-        p95_ms: s.p95,
+        latency: LatencySummary::from_samples(&latencies),
         peak_mem_bytes: peak_rss_bytes(),
         act_mem_bytes: activation_bytes(cfg.max_batch, seq, sess.cfg.d_model,
                                         sess.cfg.d_ff, sess.cfg.n_heads,
@@ -381,7 +379,8 @@ mod tests {
         let stats = run_serving(&sess, &params, &Engine::Dense, &cfg, 0.0).unwrap();
         assert_eq!(stats.requests, 3);
         assert_eq!(stats.tokens, 3 * sess.cfg.seq_len);
-        assert!(stats.p95_ms >= stats.p50_ms);
+        assert!(stats.latency.p95 >= stats.latency.p50);
+        assert!(stats.latency.p99 >= stats.latency.p95);
         assert!(stats.tokens_per_sec > 0.0);
     }
 }

@@ -1,0 +1,222 @@
+//! Admission control: a bounded FIFO queue between connection readers and
+//! the decode scheduler.
+//!
+//! `try_push` never blocks — a full queue is a structured [`PushError::Full`]
+//! that the connection layer turns into an `overloaded` wire error, so
+//! admission pressure surfaces to clients instead of growing an unbounded
+//! backlog.  `close` starts the graceful drain: further pushes are rejected
+//! with [`PushError::Closed`] while queued items remain poppable, and the
+//! scheduler's source reports `Drained` once the queue is closed *and*
+//! empty.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Rejection reasons; the rejected item rides back to the caller.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// at capacity — back-pressure the client
+    Full(T),
+    /// draining for shutdown — no new admissions
+    Closed(T),
+}
+
+/// Atomic pop-or-state: consumers that must distinguish "momentarily empty"
+/// from "closed and fully drained" need both facts under ONE lock — separate
+/// `try_pop` + `is_closed` calls would race an admission slipping between
+/// them and drop it at shutdown.
+#[derive(Debug)]
+pub enum PopState<T> {
+    Item(T),
+    /// empty but still open: more work may arrive
+    Empty,
+    /// closed AND empty: nothing can ever arrive again
+    Drained,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+pub struct BoundedQueue<T> {
+    depth: usize,
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(depth: usize) -> BoundedQueue<T> {
+        assert!(depth >= 1, "admission queue needs depth >= 1");
+        BoundedQueue {
+            depth,
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner<T>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Non-blocking admission attempt.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.lock();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.depth {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Non-blocking pop (FIFO).  Items queued before `close` stay poppable.
+    pub fn try_pop(&self) -> Option<T> {
+        self.lock().items.pop_front()
+    }
+
+    /// Non-blocking pop that atomically reports the drain state on empty —
+    /// `Drained` is definitive: the closed flag and the emptiness are
+    /// observed under the same lock, so no admitted item can be lost.
+    pub fn pop_or_state(&self) -> PopState<T> {
+        let mut g = self.lock();
+        match g.items.pop_front() {
+            Some(t) => PopState::Item(t),
+            None if g.closed => PopState::Drained,
+            None => PopState::Empty,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().items.is_empty()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    /// Stop admissions; queued items drain normally.  Wakes every waiter.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until the queue is non-empty or closed, bounded by `timeout`
+    /// (so callers re-check external state on a heartbeat).
+    pub fn wait_nonempty(&self, timeout: Duration) {
+        let g = self.lock();
+        if g.items.is_empty() && !g.closed {
+            let _ = self.cv.wait_timeout(g, timeout);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_and_bounds() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.depth(), 2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        match q.try_push(3) {
+            Err(PushError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Some(1));
+        // a pop frees capacity immediately
+        q.try_push(4).unwrap();
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(4));
+        assert_eq!(q.try_pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_or_state_is_atomic_about_draining() {
+        let q = BoundedQueue::new(2);
+        assert!(matches!(q.pop_or_state(), PopState::Empty));
+        q.try_push(7).unwrap();
+        q.close();
+        // closed but not drained: the queued item must still come out
+        match q.pop_or_state() {
+            PopState::Item(7) => {}
+            other => panic!("expected Item(7), got {other:?}"),
+        }
+        assert!(matches!(q.pop_or_state(), PopState::Drained));
+    }
+
+    #[test]
+    fn close_rejects_new_but_drains_queued() {
+        let q = BoundedQueue::new(4);
+        q.try_push("a").unwrap();
+        q.close();
+        assert!(q.is_closed());
+        match q.try_push("b") {
+            Err(PushError::Closed("b")) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // queued work survives the close
+        assert_eq!(q.try_pop(), Some("a"));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn wait_nonempty_returns_when_closed_or_filled() {
+        let q = BoundedQueue::new(1);
+        q.close();
+        // closed: returns without waiting out the timeout
+        q.wait_nonempty(Duration::from_secs(5));
+
+        let q = BoundedQueue::new(1);
+        q.try_push(1).unwrap();
+        // non-empty: immediate
+        q.wait_nonempty(Duration::from_secs(5));
+        assert_eq!(q.try_pop(), Some(1));
+        // empty + open: bounded nap, then back to the caller
+        q.wait_nonempty(Duration::from_millis(5));
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = std::sync::Arc::new(BoundedQueue::new(8));
+        let qp = std::sync::Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                loop {
+                    match qp.try_push(i) {
+                        Ok(()) => break,
+                        Err(PushError::Full(_)) => std::thread::yield_now(),
+                        Err(PushError::Closed(_)) => panic!("closed early"),
+                    }
+                }
+            }
+            qp.close();
+        });
+        let mut got = Vec::new();
+        loop {
+            match q.try_pop() {
+                Some(v) => got.push(v),
+                None if q.is_closed() && q.is_empty() => break,
+                None => q.wait_nonempty(Duration::from_millis(10)),
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,189 @@
+//! Minimal blocking client for the wire protocol — the loopback tests, the
+//! `server_throughput` bench, and the `zs-svd client` CLI subcommand all
+//! drive the server through this, so stream-discipline checks (sequential
+//! token indices, streamed == final tokens) live in exactly one place.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use super::protocol::{self, Event, GenerateReq, Request};
+
+/// Deterministic vocab-safe prompt for scripted clients — the CLI `client`
+/// subcommand and `benches/server_throughput.rs` share this, so the two
+/// drivers can never drift apart on what a "valid" prompt is.
+pub fn scripted_prompt(k: usize, len: usize, vocab: usize) -> Vec<i32> {
+    let v = vocab.max(2);
+    (0..len).map(|j| (1 + (k * 31 + j * 7) % (v - 1)) as i32).collect()
+}
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// Outcome of one blocking generation round-trip.
+#[derive(Clone, Debug)]
+pub enum GenerateOutcome {
+    Done(GenerationResult),
+    /// structured rejection (`overloaded`, `bad_request`, `shutting_down`)
+    Rejected { code: String, message: String },
+}
+
+#[derive(Clone, Debug)]
+pub struct GenerationResult {
+    /// final tokens from the `done` summary
+    pub tokens: Vec<i32>,
+    /// tokens as they streamed in (`run_generate` asserts == `tokens`)
+    pub streamed: Vec<i32>,
+    pub prompt_len: usize,
+    pub queue_ms: f64,
+    pub ttft_ms: f64,
+    pub latency_ms: f64,
+}
+
+fn bad_data(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request line.
+    pub fn send(&mut self, r: &Request) -> io::Result<()> {
+        let mut line = protocol::request_line(r);
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())
+    }
+
+    /// Next event, or `None` on server-side EOF.
+    pub fn next_event(&mut self) -> io::Result<Option<Event>> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Ok(None);
+            }
+            let t = line.trim();
+            if t.is_empty() {
+                continue;
+            }
+            return protocol::parse_event(t).map(Some).map_err(bad_data);
+        }
+    }
+
+    /// Closed-loop generation: send `g`, then consume this request's event
+    /// stream until its `done` (or `error`), checking stream discipline —
+    /// token indices strictly sequential, and the streamed tokens equal to
+    /// the final summary.  Only events for `g.id` may be in flight on this
+    /// connection.
+    pub fn run_generate(&mut self, g: &GenerateReq)
+                        -> io::Result<GenerateOutcome> {
+        self.send(&Request::Generate(g.clone()))?;
+        let mut streamed: Vec<i32> = Vec::new();
+        loop {
+            let ev = self.next_event()?.ok_or_else(|| {
+                bad_data("connection closed mid-generation".into())
+            })?;
+            match ev {
+                Event::Token { id, index, token } => {
+                    if id != g.id {
+                        return Err(bad_data(format!(
+                            "token for unexpected id {id} (want {})", g.id)));
+                    }
+                    if index != streamed.len() {
+                        return Err(bad_data(format!(
+                            "token index {index} out of order (want {})",
+                            streamed.len())));
+                    }
+                    streamed.push(token);
+                }
+                Event::Done { id, tokens, prompt_len, queue_ms, ttft_ms,
+                              latency_ms } => {
+                    if id != g.id {
+                        return Err(bad_data(format!(
+                            "done for unexpected id {id} (want {})", g.id)));
+                    }
+                    if tokens != streamed {
+                        return Err(bad_data(format!(
+                            "final tokens differ from stream \
+                             ({} streamed, {} final)",
+                            streamed.len(), tokens.len())));
+                    }
+                    return Ok(GenerateOutcome::Done(GenerationResult {
+                        tokens,
+                        streamed,
+                        prompt_len,
+                        queue_ms,
+                        ttft_ms,
+                        latency_ms,
+                    }));
+                }
+                Event::Error { id, code, message } => {
+                    if id.is_none() || id == Some(g.id) {
+                        return Ok(GenerateOutcome::Rejected { code, message });
+                    }
+                    return Err(bad_data(format!(
+                        "error for unexpected id {id:?}: {code}")));
+                }
+                Event::Metrics(_) => {
+                    return Err(bad_data("unexpected metrics event".into()));
+                }
+                Event::ShuttingDown => {
+                    return Ok(GenerateOutcome::Rejected {
+                        code: protocol::ERR_SHUTTING_DOWN.into(),
+                        message: "server shutting down".into(),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Request a metrics snapshot and block for the reply.  Only safe with
+    /// no generation in flight on this connection.
+    pub fn metrics(&mut self) -> io::Result<crate::util::json::Json> {
+        self.send(&Request::Metrics)?;
+        loop {
+            match self.next_event()? {
+                Some(Event::Metrics(j)) => return Ok(j),
+                Some(other) => {
+                    return Err(bad_data(format!(
+                        "unexpected event awaiting metrics: {other:?}")));
+                }
+                None => return Err(bad_data("eof awaiting metrics".into())),
+            }
+        }
+    }
+
+    /// Send `shutdown` and wait for the acknowledgement + EOF.
+    pub fn shutdown_server(&mut self) -> io::Result<()> {
+        self.send(&Request::Shutdown)?;
+        loop {
+            match self.next_event()? {
+                Some(Event::ShuttingDown) | None => return Ok(()),
+                Some(_other) => continue, // stragglers from earlier requests
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_prompts_are_vocab_safe_and_deterministic() {
+        for vocab in [2usize, 16, 256] {
+            for k in 0..5 {
+                let p = scripted_prompt(k, 12, vocab);
+                assert_eq!(p.len(), 12);
+                assert!(p.iter().all(|&t| t >= 1 && (t as usize) < vocab),
+                        "vocab {vocab} k {k}: {p:?}");
+            }
+        }
+        assert_eq!(scripted_prompt(3, 8, 256), scripted_prompt(3, 8, 256));
+    }
+}

@@ -1,0 +1,594 @@
+//! Blocking TCP front-end: accept loop, per-connection reader/writer
+//! threads, admission into the long-lived decode scheduler, and streamed
+//! token fan-out.
+//!
+//! # Thread anatomy (all inside one `std::thread::scope`, so [`run`] blocks
+//! until the server has fully unwound)
+//!
+//! * the **calling thread** runs the accept loop;
+//! * one **engine thread** runs `decode::run_engine` over a queue-backed
+//!   [`RequestSource`]; its emission sink routes every token/completion to
+//!   the owning connection's outbox and feeds the metrics registry;
+//! * per connection, a **reader** parses newline-delimited requests and
+//!   admits them (bounded queue — full ⇒ structured `overloaded` reply),
+//!   and a **writer** drains that connection's outbox to the socket, so a
+//!   slow client never stalls the engine or other connections.
+//!
+//! # Shutdown
+//!
+//! A `shutdown` request (or an engine exit) closes the admission queue and
+//! wakes the accept loop via a loopback connect.  The engine drains every
+//! admitted request, then outboxes are closed: writers flush and shut their
+//! sockets down, which unblocks the readers, and the scope joins.  Clients
+//! with in-flight work see it complete; new work is rejected with
+//! `shutting_down`.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::admission::{BoundedQueue, PopState, PushError};
+use super::metrics::Metrics;
+use super::protocol::{self, Event, Request, ERR_BAD_REQUEST, ERR_OVERLOADED,
+                      ERR_SHUTTING_DOWN};
+use crate::decode::{self, DecodeConfig, DecodeEvent, DecodeRequest,
+                    EngineCounters, RequestSource, SourcePoll};
+use crate::model::ParamStore;
+use crate::runtime::session::Session;
+use crate::serve::Engine;
+use crate::util::stats::LatencySummary;
+
+/// Network server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// listen address, e.g. `"127.0.0.1:0"` (0 = OS-assigned port)
+    pub addr: String,
+    /// admission-queue depth; requests beyond it get `overloaded`
+    pub queue_depth: usize,
+    /// scheduler shape + per-request defaults (slots, default generation
+    /// budget, default temperature, engine seed; `arrival_steps` is unused
+    /// here — arrivals are real network events)
+    pub decode: DecodeConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            queue_depth: 64,
+            decode: DecodeConfig::default(),
+        }
+    }
+}
+
+/// Final accounting for one server run (the live view is the metrics
+/// snapshot over the wire).
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    pub engine: String,
+    pub counters: EngineCounters,
+    pub connections: u64,
+    pub requests_admitted: u64,
+    pub requests_rejected: u64,
+    /// end-to-end request latency (enqueue → completion), ms
+    pub e2e: LatencySummary,
+    /// time-to-first-token, ms
+    pub ttft: LatencySummary,
+    /// inter-token gap, ms
+    pub token_gap: LatencySummary,
+    /// admission-queue wait, ms
+    pub queue_wait: LatencySummary,
+}
+
+// ---------------------------------------------------------------------------
+// per-connection outbox
+// ---------------------------------------------------------------------------
+
+/// Hard bound on queued-but-unwritten lines per connection: a client that
+/// stops reading cannot grow server memory without limit — at the cap the
+/// connection is declared dead (outbox closed, backlog dropped).
+const OUTBOX_MAX_LINES: usize = 16_384;
+
+/// How long a single socket write may block before the connection is
+/// declared dead.  Bounds shutdown: a stalled client cannot pin its writer
+/// thread (and therefore `server::run`'s scope join) forever.
+const WRITE_STALL_LIMIT: Duration = Duration::from_secs(30);
+
+struct OutboxInner {
+    lines: VecDeque<String>,
+    closed: bool,
+}
+
+/// FIFO of wire lines from any producer (reader replies, engine emissions)
+/// to the connection's writer thread.
+struct Outbox {
+    inner: Mutex<OutboxInner>,
+    cv: Condvar,
+}
+
+impl Outbox {
+    fn new() -> Outbox {
+        Outbox {
+            inner: Mutex::new(OutboxInner { lines: VecDeque::new(),
+                                            closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, line: String) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if g.closed {
+            return;
+        }
+        if g.lines.len() >= OUTBOX_MAX_LINES {
+            // the client stopped reading long ago: drop the connection
+            // rather than buffer without bound
+            g.closed = true;
+            g.lines.clear();
+            self.cv.notify_all();
+            return;
+        }
+        g.lines.push_back(line);
+        self.cv.notify_all();
+    }
+
+    /// Close for new lines; queued lines still drain through `pop`.
+    fn close(&self) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Blocking pop; `None` once closed *and* drained.
+    fn pop(&self) -> Option<String> {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(l) = g.lines.pop_front() {
+                return Some(l);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+struct ConnState {
+    outbox: Outbox,
+    /// requests admitted on this connection and not yet completed
+    inflight: AtomicUsize,
+    /// reader saw EOF — close the outbox once in-flight work finishes
+    draining: AtomicBool,
+}
+
+impl ConnState {
+    fn new() -> ConnState {
+        ConnState { outbox: Outbox::new(), inflight: AtomicUsize::new(0),
+                    draining: AtomicBool::new(false) }
+    }
+
+    fn send(&self, ev: &Event) {
+        self.outbox.push(protocol::event_line(ev));
+    }
+
+    fn maybe_close(&self) {
+        if self.draining.load(Ordering::SeqCst)
+            && self.inflight.load(Ordering::SeqCst) == 0
+        {
+            self.outbox.close();
+        }
+    }
+
+    /// Fully torn down: nothing will ever be written to this connection
+    /// again, so the registry may drop it.
+    fn is_closed(&self) -> bool {
+        self.outbox.inner.lock().unwrap_or_else(|e| e.into_inner()).closed
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared server state + the queue-backed request source
+// ---------------------------------------------------------------------------
+
+struct Route {
+    conn: Arc<ConnState>,
+    client_id: u64,
+}
+
+struct Admitted {
+    req: DecodeRequest,
+    client_id: u64,
+    conn: Arc<ConnState>,
+    enqueued: Instant,
+}
+
+struct Shared {
+    queue: BoundedQueue<Admitted>,
+    /// server-assigned request id → owning connection (sink fan-out)
+    routes: Mutex<BTreeMap<usize, Route>>,
+    metrics: Metrics,
+    shutdown: AtomicBool,
+}
+
+/// Start the graceful drain exactly once: close admissions and wake the
+/// blocked accept loop with a loopback connect.
+fn initiate_shutdown(shared: &Shared, local: SocketAddr) {
+    if shared.shutdown.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    shared.queue.close();
+    let _ = TcpStream::connect(local);
+}
+
+struct NetSource<'a> {
+    shared: &'a Shared,
+}
+
+impl RequestSource for NetSource<'_> {
+    fn poll(&mut self, _iter: usize) -> SourcePoll {
+        // pop and drain-state must be one atomic observation: a separate
+        // `is_closed` check could see a close that raced in AFTER an
+        // admission slipped into the momentarily-empty queue, and silently
+        // drop that admitted request at shutdown
+        match self.shared.queue.pop_or_state() {
+            PopState::Item(a) => {
+                self.shared
+                    .routes
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .insert(a.req.id, Route { conn: a.conn,
+                                              client_id: a.client_id });
+                SourcePoll::Ready(a.req, a.enqueued)
+            }
+            PopState::Drained => SourcePoll::Drained,
+            PopState::Empty => SourcePoll::Pending,
+        }
+    }
+
+    fn idle_wait(&mut self, iter: usize) -> usize {
+        self.shared.queue.wait_nonempty(Duration::from_millis(50));
+        iter + 1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// connection threads
+// ---------------------------------------------------------------------------
+
+fn writer_loop(conn: &ConnState, mut stream: TcpStream) {
+    while let Some(mut line) = conn.outbox.pop() {
+        line.push('\n');
+        if stream.write_all(line.as_bytes()).is_err() {
+            // client gone: stop queueing for it and drain the rest cheaply
+            conn.outbox.close();
+        }
+    }
+    let _ = stream.flush();
+    // closing both halves unblocks this connection's reader
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn reader_loop(shared: &Shared, conn: &Arc<ConnState>, stream: TcpStream,
+               next_id: &AtomicUsize, scfg: &ServerConfig, seq_len: usize,
+               vocab: usize, local: SocketAddr) {
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    loop {
+        buf.clear();
+        match reader.read_line(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let line = buf.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match protocol::parse_request(line) {
+            Err(e) => conn.send(&Event::Error {
+                id: None,
+                code: ERR_BAD_REQUEST.into(),
+                message: e,
+            }),
+            Ok(Request::Metrics) => {
+                conn.send(&Event::Metrics(
+                    shared.metrics.snapshot(shared.queue.len())));
+            }
+            Ok(Request::Shutdown) => {
+                conn.send(&Event::ShuttingDown);
+                initiate_shutdown(shared, local);
+            }
+            Ok(Request::Generate(g)) => {
+                if let Err(msg) = validate_prompt(&g.prompt, seq_len, vocab) {
+                    conn.send(&Event::Error {
+                        id: Some(g.id),
+                        code: ERR_BAD_REQUEST.into(),
+                        message: msg,
+                    });
+                    continue;
+                }
+                let gid = next_id.fetch_add(1, Ordering::SeqCst);
+                // clamp the budget to the KV capacity: generation stops at a
+                // full arena anyway, and an absurd client-supplied budget
+                // must never size an allocation
+                let budget = if g.max_new_tokens == 0 {
+                    scfg.decode.max_new_tokens
+                } else {
+                    g.max_new_tokens
+                }
+                .min(seq_len);
+                let req = DecodeRequest {
+                    id: gid,
+                    prompt: g.prompt,
+                    max_new_tokens: budget,
+                    temperature: g.temperature,
+                    seed: g.seed,
+                };
+                conn.inflight.fetch_add(1, Ordering::SeqCst);
+                let admitted = Admitted {
+                    req,
+                    client_id: g.id,
+                    conn: Arc::clone(conn),
+                    enqueued: Instant::now(),
+                };
+                match shared.queue.try_push(admitted) {
+                    Ok(()) => shared.metrics.inc("requests_admitted", 1),
+                    Err(PushError::Full(_)) => {
+                        conn.inflight.fetch_sub(1, Ordering::SeqCst);
+                        shared.metrics.inc("requests_rejected", 1);
+                        conn.send(&Event::Error {
+                            id: Some(g.id),
+                            code: ERR_OVERLOADED.into(),
+                            message: format!(
+                                "admission queue full (depth {})",
+                                shared.queue.depth()),
+                        });
+                    }
+                    Err(PushError::Closed(_)) => {
+                        conn.inflight.fetch_sub(1, Ordering::SeqCst);
+                        conn.send(&Event::Error {
+                            id: Some(g.id),
+                            code: ERR_SHUTTING_DOWN.into(),
+                            message: "server is draining".into(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    conn.draining.store(true, Ordering::SeqCst);
+    conn.maybe_close();
+}
+
+fn validate_prompt(prompt: &[i32], seq_len: usize, vocab: usize)
+                   -> Result<(), String> {
+    if prompt.is_empty() {
+        return Err("empty prompt".into());
+    }
+    if prompt.len() > seq_len {
+        return Err(format!("prompt {} exceeds seq_len {seq_len}",
+                           prompt.len()));
+    }
+    for &t in prompt {
+        if t < 0 || t as usize >= vocab {
+            return Err(format!("token {t} out of range [0, {vocab})"));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// server entry point
+// ---------------------------------------------------------------------------
+
+/// Bind `cfg.addr`, report the bound address through `ready`, and serve
+/// until a `shutdown` request drains the engine.  Blocking: returns only
+/// after every connection and the engine have unwound, with the session's
+/// final accounting.
+pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
+           cfg: &ServerConfig, ready: impl FnOnce(SocketAddr))
+           -> Result<ServerStats> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let local = listener.local_addr()?;
+    let shared = Shared {
+        queue: BoundedQueue::new(cfg.queue_depth.max(1)),
+        routes: Mutex::new(BTreeMap::new()),
+        metrics: Metrics::new(),
+        shutdown: AtomicBool::new(false),
+    };
+    let next_id = AtomicUsize::new(0);
+    let conns: Mutex<Vec<Arc<ConnState>>> = Mutex::new(Vec::new());
+    let seq_len = sess.cfg.seq_len;
+    let vocab = sess.cfg.vocab;
+
+    ready(local);
+
+    let counters: Result<EngineCounters> = std::thread::scope(|s| {
+        let shared = &shared;
+        let next_id = &next_id;
+        let conns = &conns;
+
+        let engine_h = s.spawn(move || {
+            // the server cannot serve without its engine: whatever way this
+            // thread exits (drain, error, panic), release the accept loop
+            struct ShutdownOnExit<'a> {
+                shared: &'a Shared,
+                local: SocketAddr,
+            }
+            impl Drop for ShutdownOnExit<'_> {
+                fn drop(&mut self) {
+                    initiate_shutdown(self.shared, self.local);
+                }
+            }
+            let _guard = ShutdownOnExit { shared, local };
+
+            let mut source = NetSource { shared };
+            let mut sink = |ev: DecodeEvent| match ev {
+                DecodeEvent::Token { id, index, token, gap_secs } => {
+                    shared.metrics.inc("decode_tokens", 1);
+                    shared.metrics.record_ms("token_gap_ms", gap_secs * 1e3);
+                    let routes =
+                        shared.routes.lock().unwrap_or_else(|e| e.into_inner());
+                    if let Some(r) = routes.get(&id) {
+                        r.conn.send(&Event::Token {
+                            id: r.client_id,
+                            index,
+                            token,
+                        });
+                    }
+                }
+                DecodeEvent::Done(c) => {
+                    shared.metrics.inc("requests_completed", 1);
+                    shared.metrics.inc("prefill_tokens", c.prompt_len as u64);
+                    shared.metrics.record_ms("e2e_ms", c.latency_ms);
+                    shared.metrics.record_ms("ttft_ms", c.ttft_ms);
+                    shared.metrics.record_ms("queue_ms", c.queue_ms);
+                    let route = shared
+                        .routes
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .remove(&c.id);
+                    if let Some(r) = route {
+                        r.conn.send(&Event::Done {
+                            id: r.client_id,
+                            tokens: c.tokens,
+                            prompt_len: c.prompt_len,
+                            queue_ms: c.queue_ms,
+                            ttft_ms: c.ttft_ms,
+                            latency_ms: c.latency_ms,
+                        });
+                        r.conn.inflight.fetch_sub(1, Ordering::SeqCst);
+                        r.conn.maybe_close();
+                    }
+                }
+            };
+            decode::run_engine(sess, params, engine, &cfg.decode, &mut source,
+                               &mut sink)
+        });
+
+        // accept loop on the calling thread.  Non-blocking + bounded nap:
+        // shutdown must never depend on another connection arriving (the
+        // loopback connect in `initiate_shutdown` is only a latency
+        // optimization and can fail on exotic bind addresses).
+        let nonblocking = listener.set_nonblocking(true).is_ok();
+        loop {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let read_stream = match listener.accept() {
+                Ok((st, _)) => st,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                    continue;
+                }
+                Err(_) => {
+                    // transient accept failure; don't spin hot on it
+                    std::thread::sleep(Duration::from_millis(25));
+                    continue;
+                }
+            };
+            if nonblocking {
+                // accepted sockets must be blocking regardless of what they
+                // inherit from the listener on this platform
+                let _ = read_stream.set_nonblocking(false);
+            }
+            let Ok(write_stream) = read_stream.try_clone() else { continue };
+            // a stalled client must not block its writer forever (see
+            // WRITE_STALL_LIMIT) — shutdown joins every writer thread
+            let _ = write_stream.set_write_timeout(Some(WRITE_STALL_LIMIT));
+            shared.metrics.inc("connections", 1);
+            let conn = Arc::new(ConnState::new());
+            {
+                // the registry exists only for the final shutdown flush:
+                // prune fully-closed connections so a long-lived server
+                // doesn't accumulate one dead entry per past connection
+                let mut reg = conns.lock().unwrap_or_else(|e| e.into_inner());
+                reg.retain(|c| !c.is_closed());
+                reg.push(Arc::clone(&conn));
+            }
+            {
+                let conn = Arc::clone(&conn);
+                s.spawn(move || {
+                    reader_loop(shared, &conn, read_stream, next_id, cfg,
+                                seq_len, vocab, local);
+                });
+            }
+            s.spawn(move || writer_loop(&conn, write_stream));
+        }
+
+        let joined = engine_h.join();
+
+        // engine is done (or died): flush a final notice and release every
+        // connection BEFORE propagating any engine panic — writers flush +
+        // shut their sockets, unblocking the readers, so the scope can
+        // always join its threads instead of hanging on a dead engine
+        for conn in conns.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+            conn.send(&Event::ShuttingDown);
+            conn.outbox.close();
+        }
+        joined.unwrap_or_else(|e| std::panic::resume_unwind(e))
+    });
+
+    let counters = counters?;
+    let m = &shared.metrics;
+    Ok(ServerStats {
+        engine: engine.label(),
+        counters,
+        connections: m.counter("connections"),
+        requests_admitted: m.counter("requests_admitted"),
+        requests_rejected: m.counter("requests_rejected"),
+        e2e: m.summary("e2e_ms"),
+        ttft: m.summary("ttft_ms"),
+        token_gap: m.summary("token_gap_ms"),
+        queue_wait: m.summary("queue_ms"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outbox_drains_then_reports_closed() {
+        let o = Outbox::new();
+        o.push("a".into());
+        o.push("b".into());
+        o.close();
+        // close is not loss: queued lines still come out, in order
+        assert_eq!(o.pop().as_deref(), Some("a"));
+        assert_eq!(o.pop().as_deref(), Some("b"));
+        assert_eq!(o.pop(), None);
+        // pushes after close are dropped
+        o.push("c".into());
+        assert_eq!(o.pop(), None);
+    }
+
+    #[test]
+    fn conn_close_waits_for_inflight() {
+        let c = ConnState::new();
+        c.inflight.fetch_add(1, Ordering::SeqCst);
+        c.draining.store(true, Ordering::SeqCst);
+        c.maybe_close();
+        c.outbox.push("still open".into());
+        assert_eq!(c.outbox.pop().as_deref(), Some("still open"));
+        // last in-flight request completes → outbox closes
+        c.inflight.fetch_sub(1, Ordering::SeqCst);
+        c.maybe_close();
+        assert_eq!(c.outbox.pop(), None);
+    }
+
+    #[test]
+    fn prompt_validation() {
+        assert!(validate_prompt(&[], 8, 256).is_err());
+        assert!(validate_prompt(&[1; 9], 8, 256).is_err());
+        assert!(validate_prompt(&[-1], 8, 256).is_err());
+        assert!(validate_prompt(&[256], 8, 256).is_err());
+        assert!(validate_prompt(&[0, 255], 8, 256).is_ok());
+    }
+}

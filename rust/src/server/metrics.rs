@@ -1,0 +1,186 @@
+//! Per-engine serving metrics: monotonic counters plus bounded latency
+//! reservoirs, queryable over the wire protocol (`{"type":"metrics"}`).
+//!
+//! Counters are u64 totals since server start (admitted / rejected /
+//! completed requests, prefill and decode tokens, connections).  Latency
+//! series keep the most recent [`RESERVOIR_CAP`] samples in a ring, so a
+//! long-lived server summarizes recent behavior in O(cap) memory while the
+//! percentile shape stays exactly `util::stats::LatencySummary` — the same
+//! p50/p95/p99/mean every offline table reports.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::LatencySummary;
+
+/// Samples each latency series retains (newest-wins ring).
+pub const RESERVOIR_CAP: usize = 4096;
+
+struct Ring {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl Ring {
+    fn push(&mut self, v: f64) {
+        if self.buf.len() < RESERVOIR_CAP {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % RESERVOIR_CAP;
+        }
+    }
+}
+
+pub struct Metrics {
+    started: Instant,
+    counters: Mutex<BTreeMap<&'static str, u64>>,
+    series: Mutex<BTreeMap<&'static str, Ring>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            counters: Mutex::new(BTreeMap::new()),
+            series: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn inc(&self, name: &'static str, by: u64) {
+        let mut m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        *m.entry(name).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Record one latency sample (ms) into the named series.
+    pub fn record_ms(&self, name: &'static str, v: f64) {
+        let mut m = self.series.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(name).or_insert_with(|| Ring { buf: Vec::new(), next: 0 })
+            .push(v);
+    }
+
+    /// Summary of the named series (zeros when empty/unknown).
+    pub fn summary(&self, name: &str) -> LatencySummary {
+        let m = self.series.lock().unwrap_or_else(|e| e.into_inner());
+        m.get(name)
+            .map(|r| LatencySummary::from_samples(&r.buf))
+            .unwrap_or_default()
+    }
+
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Wire snapshot (already shaped as a `metrics` event payload).
+    /// `queue_depth` is the caller-sampled admission-queue length — a gauge,
+    /// so it rides with the snapshot rather than living in a counter.
+    pub fn snapshot(&self, queue_depth: usize) -> Json {
+        let uptime = self.uptime_secs().max(1e-9);
+        let counters = {
+            let m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+            Json::Obj(m.iter()
+                .map(|(k, v)| (k.to_string(), Json::num(*v as f64)))
+                .collect())
+        };
+        let latency = {
+            let m = self.series.lock().unwrap_or_else(|e| e.into_inner());
+            Json::Obj(m.iter()
+                .map(|(k, r)| {
+                    (k.to_string(),
+                     LatencySummary::from_samples(&r.buf).to_json())
+                })
+                .collect())
+        };
+        Json::obj(vec![
+            ("type", Json::str("metrics")),
+            ("uptime_secs", Json::num(uptime)),
+            ("queue_depth", Json::num(queue_depth as f64)),
+            // whole-uptime average (an activity gauge — near zero on a
+            // mostly-idle server); deliberately NOT named like the
+            // steady-state `decode tok/s` the tables report, which comes
+            // from `EngineCounters::decode_tok_per_sec`
+            ("uptime_tok_per_sec",
+             Json::num(self.counter("decode_tokens") as f64 / uptime)),
+            ("counters", counters),
+            ("latency_ms", latency),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        assert_eq!(m.counter("decode_tokens"), 0);
+        m.inc("decode_tokens", 3);
+        m.inc("decode_tokens", 4);
+        m.inc("requests_admitted", 1);
+        assert_eq!(m.counter("decode_tokens"), 7);
+        assert_eq!(m.counter("requests_admitted"), 1);
+        assert_eq!(m.counter("never_touched"), 0);
+    }
+
+    #[test]
+    fn series_summarizes() {
+        let m = Metrics::new();
+        assert_eq!(m.summary("e2e_ms"), LatencySummary::default());
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            m.record_ms("e2e_ms", v);
+        }
+        let s = m.summary("e2e_ms");
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn reservoir_is_bounded() {
+        let m = Metrics::new();
+        for i in 0..(RESERVOIR_CAP + 500) {
+            m.record_ms("token_gap_ms", i as f64);
+        }
+        let s = m.summary("token_gap_ms");
+        assert_eq!(s.n, RESERVOIR_CAP);
+        // the newest samples are retained (oldest were overwritten)
+        assert!(s.max >= (RESERVOIR_CAP + 499) as f64 - 0.5);
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        let m = Metrics::new();
+        m.inc("decode_tokens", 10);
+        m.record_ms("e2e_ms", 12.5);
+        let j = m.snapshot(3);
+        assert_eq!(j.str_or("type", ""), "metrics");
+        assert_eq!(j.usize_or("queue_depth", 99), 3);
+        assert!(j.f64_or("uptime_secs", 0.0) > 0.0);
+        assert!(j.f64_or("uptime_tok_per_sec", 0.0) > 0.0);
+        let c = j.get("counters").expect("counters");
+        assert_eq!(c.usize_or("decode_tokens", 0), 10);
+        let l = j.get("latency_ms").and_then(Json::as_obj).expect("latency");
+        assert!((l["e2e_ms"].f64_or("p50", 0.0) - 12.5).abs() < 1e-12);
+        // snapshot parses back as a wire event
+        let line = j.to_string();
+        assert!(super::super::protocol::parse_event(&line).is_ok());
+    }
+}

@@ -1,0 +1,94 @@
+//! Network serving subsystem: a dependency-free TCP front-end over the
+//! KV-cached continuous-batching decode engine, with streaming output,
+//! bounded admission, graceful drain, and wire-queryable metrics.
+//!
+//! # Layout
+//!
+//! * [`protocol`] — the newline-delimited JSON wire format (spec below),
+//!   built on `util::json`.
+//! * [`conn`] — the blocking `TcpListener` accept loop, per-connection
+//!   reader/writer threads, and the queue-backed `RequestSource` feeding
+//!   `decode::run_engine` ([`run`] is the entry point).
+//! * [`admission`] — the bounded queue between readers and the scheduler;
+//!   a full queue answers with a structured `overloaded` error instead of
+//!   growing an unbounded backlog.
+//! * [`metrics`] — counters + latency reservoirs (tokens/sec, queue depth,
+//!   p50/p95/p99 per-token and end-to-end), queryable over the protocol.
+//! * [`client`] — a minimal blocking client (loopback tests, the
+//!   throughput bench, the `zs-svd client` CLI).
+//!
+//! Determinism: generated tokens depend only on (engine weights, prompt,
+//! sampling temperature, sampler seed) — never on connection interleaving,
+//! slot assignment, or thread count — so a generation served over TCP
+//! **bit-matches** the offline `decode::run_decode` path for the same
+//! explicit settings (`rust/tests/server_loopback.rs` gates this for the
+//! dense and low-rank engines at `PALLAS_THREADS` ∈ {1, 4}).
+//!
+//! # Wire protocol
+//!
+//! One JSON object per `\n`-terminated line, both directions.  Client
+//! messages:
+//!
+//! | type       | fields                                                              |
+//! |------------|---------------------------------------------------------------------|
+//! | `generate` | `id` (echoed on every reply), `prompt` (token array), optional `max_new_tokens` (0/absent = server default), `temperature`, `seed` |
+//! | `metrics`  | — (replies with one `metrics` snapshot)                             |
+//! | `shutdown` | — (ack `shutting_down`, then drain + close)                         |
+//!
+//! Server messages:
+//!
+//! | type            | fields                                                         |
+//! |-----------------|----------------------------------------------------------------|
+//! | `token`         | `id`, `index` (0-based, strictly sequential), `token` — one per sampled token, streamed as produced |
+//! | `done`          | `id`, `tokens` (the full generation), `prompt_len`, latency breakdown `queue_ms` / `ttft_ms` / `latency_ms` |
+//! | `error`         | `code` (`overloaded` \| `bad_request` \| `shutting_down`), `message`, `id` when attributable to one request |
+//! | `metrics`       | `uptime_secs`, `queue_depth`, `uptime_tok_per_sec` (whole-uptime average), `counters{..}`, `latency_ms{series → {n,mean,p50,p95,p99,max}}` |
+//! | `shutting_down` | — (the connection closes after in-flight work completes)        |
+//!
+//! Requests from one connection may interleave; every reply carries the
+//! client-chosen `id`.  A rejected request produces exactly one `error` and
+//! nothing else; an accepted request produces its `token` stream followed
+//! by exactly one `done`.
+//!
+//! # Worked client session
+//!
+//! ```text
+//! C: {"type":"generate","id":1,"prompt":[5,17,200],"max_new_tokens":3,"seed":42}
+//! S: {"type":"token","id":1,"index":0,"token":137}
+//! S: {"type":"token","id":1,"index":1,"token":9}
+//! S: {"type":"token","id":1,"index":2,"token":41}
+//! S: {"type":"done","id":1,"tokens":[137,9,41],"prompt_len":3,
+//!     "queue_ms":0.2,"ttft_ms":14.8,"latency_ms":31.5}
+//! C: {"type":"metrics"}
+//! S: {"type":"metrics","uptime_secs":2.1,"queue_depth":0,"uptime_tok_per_sec":95.1,
+//!     "counters":{"connections":1,"decode_tokens":3,...},
+//!     "latency_ms":{"e2e_ms":{"n":1,"p50":31.5,...},...}}
+//! C: {"type":"shutdown"}
+//! S: {"type":"shutting_down"}
+//! (connection closes)
+//! ```
+//!
+//! From Rust, the same session via [`client::Client`]:
+//!
+//! ```text
+//! let mut c = Client::connect(addr)?;
+//! let out = c.run_generate(&GenerateReq { id: 1, prompt, max_new_tokens: 3,
+//!                                         temperature: None, seed: Some(42) })?;
+//! let snap = c.metrics()?;
+//! c.shutdown_server()?;
+//! ```
+//!
+//! Start a server from the CLI with `zs-svd serve --listen 127.0.0.1:0`
+//! (dense) or `--plan --ratio 0.6` (ZS-SVD low-rank engine), and drive it
+//! with `zs-svd client --connect <addr>`.
+
+pub mod admission;
+pub mod client;
+pub mod conn;
+pub mod metrics;
+pub mod protocol;
+
+pub use client::{scripted_prompt, Client, GenerateOutcome, GenerationResult};
+pub use conn::{run, ServerConfig, ServerStats};
+pub use metrics::Metrics;
+pub use protocol::{Event, GenerateReq, Request};

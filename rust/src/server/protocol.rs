@@ -1,0 +1,336 @@
+//! Wire format: newline-delimited JSON, one message per line (full spec
+//! with a worked client session in the `crate::server` module docs).
+//!
+//! Client → server messages are [`Request`]s; server → client messages are
+//! [`Event`]s.  Both directions serialize through `util::json`, so the
+//! protocol shares the repo's single JSON implementation and every message
+//! round-trips through `parse_request` / `parse_event` (unit-tested below).
+//! Numbers ride as JSON numbers (f64), exact up to 2^53.  Token ids and
+//! request ids never approach that; explicit sampler **seeds are required
+//! to be < 2^53** — a larger seed would be silently rounded in transit and
+//! break the server-vs-offline bit-match, so `parse_request` rejects it
+//! with `bad_request` instead.
+
+use crate::util::json::{self, Json};
+
+/// Structured error codes carried by [`Event::Error`].
+pub const ERR_OVERLOADED: &str = "overloaded";
+pub const ERR_BAD_REQUEST: &str = "bad_request";
+pub const ERR_SHUTTING_DOWN: &str = "shutting_down";
+
+/// One generation request.  `id` is client-chosen and echoed verbatim on
+/// every event for this request (scope: one connection).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenerateReq {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// 0 = use the server's default budget
+    pub max_new_tokens: usize,
+    /// None = server default (greedy unless configured otherwise)
+    pub temperature: Option<f32>,
+    /// explicit sampler seed; None derives one from the engine seed and the
+    /// server-assigned request id
+    pub seed: Option<u64>,
+}
+
+impl GenerateReq {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("type", Json::str("generate")),
+            ("id", Json::num(self.id as f64)),
+            ("prompt", Json::arr(self.prompt.iter()
+                                     .map(|&t| Json::num(t as f64)))),
+            ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
+        ];
+        if let Some(t) = self.temperature {
+            pairs.push(("temperature", Json::num(t as f64)));
+        }
+        if let Some(s) = self.seed {
+            pairs.push(("seed", Json::num(s as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Client → server messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Generate(GenerateReq),
+    /// ask for a metrics snapshot ([`Event::Metrics`] reply)
+    Metrics,
+    /// stop accepting work, drain in-flight requests, exit
+    Shutdown,
+}
+
+/// One wire line (no trailing newline) for a request.
+pub fn request_line(r: &Request) -> String {
+    match r {
+        Request::Generate(g) => g.to_json().to_string(),
+        Request::Metrics => Json::obj(vec![("type", Json::str("metrics"))])
+            .to_string(),
+        Request::Shutdown => Json::obj(vec![("type", Json::str("shutdown"))])
+            .to_string(),
+    }
+}
+
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let j = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    match j.get("type").and_then(Json::as_str) {
+        Some("generate") => {
+            let prompt = j
+                .get("prompt")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| "generate: missing `prompt` array".to_string())?
+                .iter()
+                .map(|t| t.as_f64().map(|v| v as i32))
+                .collect::<Option<Vec<i32>>>()
+                .ok_or_else(|| "generate: non-numeric prompt token".to_string())?;
+            let seed = match j.get("seed").and_then(Json::as_f64) {
+                // f64 represents integers exactly only below 2^53; a bigger
+                // seed would be silently rounded and the generation would no
+                // longer reproduce an offline run with the same seed
+                Some(s) if !(0.0..9_007_199_254_740_992.0).contains(&s) => {
+                    return Err(format!(
+                        "generate: seed {s} outside [0, 2^53)"));
+                }
+                Some(s) => Some(s as u64),
+                None => None,
+            };
+            Ok(Request::Generate(GenerateReq {
+                id: j.f64_or("id", 0.0) as u64,
+                prompt,
+                max_new_tokens: j.usize_or("max_new_tokens", 0),
+                temperature: j.get("temperature").and_then(Json::as_f64)
+                    .map(|t| t as f32),
+                seed,
+            }))
+        }
+        Some("metrics") => Ok(Request::Metrics),
+        Some("shutdown") => Ok(Request::Shutdown),
+        Some(other) => Err(format!("unknown request type `{other}`")),
+        None => Err("missing `type`".to_string()),
+    }
+}
+
+/// Server → client messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// one streamed token, emitted as it is sampled
+    Token { id: u64, index: usize, token: i32 },
+    /// final summary for a request, after its last `Token`
+    Done {
+        id: u64,
+        tokens: Vec<i32>,
+        prompt_len: usize,
+        /// latency breakdown, ms: queue wait / first token / end-to-end
+        queue_ms: f64,
+        ttft_ms: f64,
+        latency_ms: f64,
+    },
+    /// structured rejection or protocol error; `id` present when the error
+    /// is attributable to one request
+    Error { id: Option<u64>, code: String, message: String },
+    /// metrics snapshot (the whole registry object)
+    Metrics(Json),
+    /// the server acknowledged shutdown / is closing this connection
+    ShuttingDown,
+}
+
+/// One wire line (no trailing newline) for an event.
+pub fn event_line(e: &Event) -> String {
+    match e {
+        Event::Token { id, index, token } => Json::obj(vec![
+            ("type", Json::str("token")),
+            ("id", Json::num(*id as f64)),
+            ("index", Json::num(*index as f64)),
+            ("token", Json::num(*token as f64)),
+        ])
+        .to_string(),
+        Event::Done { id, tokens, prompt_len, queue_ms, ttft_ms, latency_ms } => {
+            Json::obj(vec![
+                ("type", Json::str("done")),
+                ("id", Json::num(*id as f64)),
+                ("tokens", Json::arr(tokens.iter()
+                                         .map(|&t| Json::num(t as f64)))),
+                ("prompt_len", Json::num(*prompt_len as f64)),
+                ("queue_ms", Json::num(*queue_ms)),
+                ("ttft_ms", Json::num(*ttft_ms)),
+                ("latency_ms", Json::num(*latency_ms)),
+            ])
+            .to_string()
+        }
+        Event::Error { id, code, message } => {
+            let mut pairs = vec![
+                ("type", Json::str("error")),
+                ("code", Json::str(code)),
+                ("message", Json::str(message)),
+            ];
+            if let Some(id) = id {
+                pairs.push(("id", Json::num(*id as f64)));
+            }
+            Json::obj(pairs).to_string()
+        }
+        Event::Metrics(snapshot) => snapshot.to_string(),
+        Event::ShuttingDown => Json::obj(vec![
+            ("type", Json::str("shutting_down")),
+        ])
+        .to_string(),
+    }
+}
+
+pub fn parse_event(line: &str) -> Result<Event, String> {
+    let j = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    // own the tag: the `metrics` arm moves `j` whole, so the scrutinee must
+    // not keep a borrow of it alive across the match
+    let tag = j.get("type").and_then(Json::as_str).map(str::to_string);
+    match tag.as_deref() {
+        Some("token") => Ok(Event::Token {
+            id: j.f64_or("id", 0.0) as u64,
+            index: j.usize_or("index", 0),
+            token: j.f64_or("token", -1.0) as i32,
+        }),
+        Some("done") => {
+            let tokens = j
+                .get("tokens")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| "done: missing `tokens`".to_string())?
+                .iter()
+                .map(|t| t.as_f64().map(|v| v as i32))
+                .collect::<Option<Vec<i32>>>()
+                .ok_or_else(|| "done: non-numeric token".to_string())?;
+            Ok(Event::Done {
+                id: j.f64_or("id", 0.0) as u64,
+                tokens,
+                prompt_len: j.usize_or("prompt_len", 0),
+                queue_ms: j.f64_or("queue_ms", 0.0),
+                ttft_ms: j.f64_or("ttft_ms", 0.0),
+                latency_ms: j.f64_or("latency_ms", 0.0),
+            })
+        }
+        Some("error") => Ok(Event::Error {
+            id: j.get("id").and_then(Json::as_f64).map(|v| v as u64),
+            code: j.str_or("code", "unknown"),
+            message: j.str_or("message", ""),
+        }),
+        Some("metrics") => Ok(Event::Metrics(j)),
+        Some("shutting_down") => Ok(Event::ShuttingDown),
+        Some(other) => Err(format!("unknown event type `{other}`")),
+        None => Err("missing `type`".to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_roundtrips() {
+        let g = GenerateReq {
+            id: 7,
+            prompt: vec![1, 2, 250],
+            max_new_tokens: 16,
+            temperature: Some(0.75),
+            seed: Some(42),
+        };
+        let line = request_line(&Request::Generate(g.clone()));
+        assert!(!line.contains('\n'), "one message per line");
+        match parse_request(&line).unwrap() {
+            Request::Generate(back) => {
+                assert_eq!(back.id, 7);
+                assert_eq!(back.prompt, g.prompt);
+                assert_eq!(back.max_new_tokens, 16);
+                assert_eq!(back.seed, Some(42));
+                assert!((back.temperature.unwrap() - 0.75).abs() < 1e-6);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn generate_defaults_omitted_fields() {
+        let g = GenerateReq { id: 0, prompt: vec![5], max_new_tokens: 0,
+                              temperature: None, seed: None };
+        let line = request_line(&Request::Generate(g));
+        assert!(!line.contains("temperature"));
+        assert!(!line.contains("seed"));
+        match parse_request(&line).unwrap() {
+            Request::Generate(back) => {
+                assert_eq!(back.temperature, None);
+                assert_eq!(back.seed, None);
+                assert_eq!(back.max_new_tokens, 0);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_requests_roundtrip() {
+        for r in [Request::Metrics, Request::Shutdown] {
+            let line = request_line(&r);
+            assert_eq!(parse_request(&line).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn events_roundtrip() {
+        let events = vec![
+            Event::Token { id: 3, index: 12, token: 199 },
+            Event::Done { id: 3, tokens: vec![4, 5, 6], prompt_len: 8,
+                          queue_ms: 1.5, ttft_ms: 10.25, latency_ms: 30.5 },
+            Event::Error { id: Some(9), code: ERR_OVERLOADED.into(),
+                           message: "queue full".into() },
+            Event::Error { id: None, code: ERR_BAD_REQUEST.into(),
+                           message: "bad json".into() },
+            Event::ShuttingDown,
+        ];
+        for e in events {
+            let line = event_line(&e);
+            assert!(!line.contains('\n'));
+            assert_eq!(parse_event(&line).unwrap(), e, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn metrics_event_carries_snapshot() {
+        let snap = Json::obj(vec![
+            ("type", Json::str("metrics")),
+            ("uptime_secs", Json::num(1.25)),
+        ]);
+        let line = event_line(&Event::Metrics(snap.clone()));
+        match parse_event(&line).unwrap() {
+            Event::Metrics(j) => {
+                assert!((j.f64_or("uptime_secs", 0.0) - 1.25).abs() < 1e-12);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request("{\"type\":\"nope\"}").is_err());
+        assert!(parse_request("{\"type\":\"generate\"}").is_err());
+        assert!(parse_event("{\"no_type\":1}").is_err());
+        assert!(parse_event("{\"type\":\"done\"}").is_err());
+    }
+
+    #[test]
+    fn rejects_unrepresentable_seeds() {
+        // 2^53 and above (or negative) would be rounded by the f64 wire and
+        // silently break seed-exact reproduction — must be a parse error
+        let line = |seed: &str| {
+            format!("{{\"type\":\"generate\",\"id\":1,\"prompt\":[1],\
+                     \"seed\":{seed}}}")
+        };
+        assert!(parse_request(&line("9007199254740992")).is_err());
+        assert!(parse_request(&line("18446744073709551615")).is_err());
+        assert!(parse_request(&line("-1")).is_err());
+        // the largest exact integer is fine
+        match parse_request(&line("9007199254740991")).unwrap() {
+            Request::Generate(g) => {
+                assert_eq!(g.seed, Some((1u64 << 53) - 1));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+}

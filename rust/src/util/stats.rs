@@ -1,5 +1,7 @@
 //! Small numeric/statistics helpers shared by eval, serving and benches.
 
+use crate::util::json::Json;
+
 /// Online mean/variance (Welford).
 #[derive(Clone, Debug, Default)]
 pub struct Welford {
@@ -33,7 +35,7 @@ impl Welford {
     }
 }
 
-/// Summary of a sample: mean/std/median/p95/min/max.
+/// Summary of a sample: mean/std/median/p95/p99/min/max.
 #[derive(Clone, Debug)]
 pub struct Summary {
     pub n: usize,
@@ -41,6 +43,7 @@ pub struct Summary {
     pub std: f64,
     pub median: f64,
     pub p95: f64,
+    pub p99: f64,
     pub min: f64,
     pub max: f64,
 }
@@ -59,8 +62,54 @@ pub fn summarize(xs: &[f64]) -> Summary {
         std: w.std(),
         median: percentile(&sorted, 0.5),
         p95: percentile(&sorted, 0.95),
+        p99: percentile(&sorted, 0.99),
         min: sorted[0],
         max: sorted[sorted.len() - 1],
+    }
+}
+
+/// The one latency-summary shape every serving surface reports — prefill
+/// serving, the decode scheduler, and the network server all thread this
+/// through `report::latency_cells`, so tables and wire metrics agree on
+/// which percentiles exist.  Values are milliseconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencySummary {
+    /// Empty-safe summary (all zeros when there are no samples — e.g. a
+    /// server queried before its first completion).
+    pub fn from_samples(xs: &[f64]) -> LatencySummary {
+        if xs.is_empty() {
+            return LatencySummary::default();
+        }
+        let s = summarize(xs);
+        LatencySummary {
+            n: s.n,
+            mean: s.mean,
+            p50: s.median,
+            p95: s.p95,
+            p99: s.p99,
+            max: s.max,
+        }
+    }
+
+    /// Wire form used by the server's metrics snapshot.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("mean", Json::num(self.mean)),
+            ("p50", Json::num(self.p50)),
+            ("p95", Json::num(self.p95)),
+            ("p99", Json::num(self.p99)),
+            ("max", Json::num(self.max)),
+        ])
     }
 }
 
@@ -116,6 +165,41 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
         assert_eq!(s.median, 2.0);
+        // p99 sits between p95 and max by construction
+        assert!(s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn p99_orders_correctly_on_larger_samples() {
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let s = summarize(&xs);
+        assert!((s.median - 500.5).abs() < 1e-9);
+        assert!(s.p95 < s.p99 && s.p99 < s.max);
+        assert!((s.p99 - 990.01).abs() < 0.5, "p99 {}", s.p99);
+        assert!((s.mean - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_summary_empty_safe() {
+        let l = LatencySummary::from_samples(&[]);
+        assert_eq!(l.n, 0);
+        assert_eq!(l.p50, 0.0);
+        assert_eq!(l.p99, 0.0);
+        let l = LatencySummary::from_samples(&[5.0]);
+        assert_eq!(l.n, 1);
+        assert_eq!(l.p50, 5.0);
+        assert_eq!(l.p99, 5.0);
+        assert_eq!(l.max, 5.0);
+    }
+
+    #[test]
+    fn latency_summary_json_roundtrips_fields() {
+        let l = LatencySummary::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        let j = l.to_json();
+        assert_eq!(j.usize_or("n", 0), 4);
+        assert!((j.f64_or("p50", 0.0) - l.p50).abs() < 1e-12);
+        assert!((j.f64_or("p99", 0.0) - l.p99).abs() < 1e-12);
+        assert!((j.f64_or("mean", 0.0) - 2.5).abs() < 1e-12);
     }
 
     #[test]

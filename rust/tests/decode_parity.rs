@@ -133,7 +133,8 @@ fn continuous_batching_serves_every_request_exactly_once() {
     assert_eq!(stats.decode_tokens, 9 * 4);
     assert_eq!(stats.prefill_tokens, 9 * 12);
     assert!(stats.decode_tok_per_sec > 0.0);
-    assert!(stats.p95_ms >= stats.p50_ms);
+    assert!(stats.latency.p95 >= stats.latency.p50);
+    assert!(stats.latency.p99 >= stats.latency.p95);
     assert!(stats.kv_bytes_per_slot > 0);
 }
 
@@ -170,9 +171,7 @@ fn generation_respects_kv_capacity() {
     let seq = sess.cfg.seq_len;
 
     // prompt nearly fills the arena: the budget of 10 must be cut short
-    let reqs = vec![DecodeRequest { id: 0,
-                                    prompt: vec![1i32; seq - 2],
-                                    max_new_tokens: 10 }];
+    let reqs = vec![DecodeRequest::new(0, vec![1i32; seq - 2], 10)];
     let cfg = DecodeConfig { max_slots: 1, max_new_tokens: 10,
                              temperature: 0.0, seed: 1, arrival_steps: 0.0 };
     let (stats, done) = run_decode(&sess, &params, &Engine::Dense, &reqs, &cfg)
