@@ -58,6 +58,21 @@ pub fn results_dir() -> PathBuf {
     d
 }
 
+/// Headers for the split serving-phase token rates the decode/server
+/// benches report: prefill = prompt tokens over the wall time of the
+/// batched chunk-ingest calls alone; decode = the steady-state generation
+/// rate over the batched decode-step sections alone.  One number per phase
+/// makes the chunked-prefill win measurable instead of being averaged into
+/// a single tok/s figure.
+pub const PHASE_HEADERS: [&str; 2] = ["prefill tok/s", "decode tok/s"];
+
+/// Cells matching [`PHASE_HEADERS`], from one engine run's phase rates.
+pub fn phase_cells(prefill_tok_per_sec: f64, decode_tok_per_sec: f64)
+                   -> Vec<String> {
+    vec![zs_svd::report::f2(prefill_tok_per_sec),
+         zs_svd::report::f2(decode_tok_per_sec)]
+}
+
 /// Print + persist one table.
 pub fn emit(name: &str, t: &Table) {
     print!("{}", t.to_ascii());

@@ -3,10 +3,13 @@
 //! matching SVD-LLM's decode tokens/sec efficiency metric).
 //!
 //! Every engine serves the SAME synthetic request stream (random prompts,
-//! greedy sampling, saturating arrivals) through the KV-cached step kernel:
-//! the dense baseline against ZS-SVD low-rank factors at two compression
-//! ratios, capped/padded onto the fixed-rank artifacts exactly as in the
-//! prefill benchmark.
+//! greedy sampling, saturating arrivals) through the KV-cached batched
+//! step kernel: the dense baseline against ZS-SVD low-rank factors at two
+//! compression ratios, capped/padded onto the fixed-rank artifacts exactly
+//! as in the prefill benchmark.  Prefill and decode phases are reported as
+//! separate token rates (`common::PHASE_HEADERS`): prefill runs through
+//! the chunked batched-GEMM ingest, decode through the across-slot batched
+//! step, and folding them into one number would hide both effects.
 
 mod common;
 
@@ -28,12 +31,14 @@ fn main() {
         temperature: 0.0,
         seed: 1,
         arrival_steps: 0.0, // saturating queue
+        prefill_chunk: 0,   // whole-prompt chunks: peak prefill batching
     };
     let reqs = synth_requests(&p.session.cfg, n_requests, prompt_len, max_new,
                               0xD0);
 
-    let mut headers = vec!["engine", "compression", "decode tok/s",
-                           "total tok/s"];
+    let mut headers = vec!["engine", "compression"];
+    headers.extend(common::PHASE_HEADERS);
+    headers.push("total tok/s");
     headers.extend(LATENCY_HEADERS);
     headers.extend(["ttft p50 ms", "KV MB/slot"]);
     let mut t = Table::new(
@@ -43,9 +48,12 @@ fn main() {
 
     let (d, _) = run_decode(&p.session, &p.params, &Engine::Dense, &reqs, &dc)
         .expect("dense decode");
-    eprintln!("  dense: {:.0} decode tok/s", d.decode_tok_per_sec);
-    let mut row = vec!["original".into(), "0%".into(),
-                       f2(d.decode_tok_per_sec), f2(d.total_tok_per_sec)];
+    eprintln!("  dense: {:.0} prefill tok/s, {:.0} decode tok/s",
+              d.prefill_tok_per_sec, d.decode_tok_per_sec);
+    let mut row = vec!["original".into(), "0%".into()];
+    row.extend(common::phase_cells(d.prefill_tok_per_sec,
+                                   d.decode_tok_per_sec));
+    row.push(f2(d.total_tok_per_sec));
     row.extend(latency_cells(&d.latency));
     row.extend([f2(d.ttft.p50), mb(d.kv_bytes_per_slot as f64)]);
     t.row(row);
@@ -59,10 +67,12 @@ fn main() {
         let params = plan.apply(&p.params);
         let (s, _) = run_decode(&p.session, &params, &engine, &reqs, &dc)
             .expect("lowrank decode");
-        eprintln!("  {}@{comp}: {:.0} decode tok/s", plan.method,
-                  s.decode_tok_per_sec);
-        let mut row = vec![plan.method.clone(), comp.into(),
-                           f2(s.decode_tok_per_sec), f2(s.total_tok_per_sec)];
+        eprintln!("  {}@{comp}: {:.0} prefill tok/s, {:.0} decode tok/s",
+                  plan.method, s.prefill_tok_per_sec, s.decode_tok_per_sec);
+        let mut row = vec![plan.method.clone(), comp.into()];
+        row.extend(common::phase_cells(s.prefill_tok_per_sec,
+                                       s.decode_tok_per_sec));
+        row.push(f2(s.total_tok_per_sec));
         row.extend(latency_cells(&s.latency));
         row.extend([f2(s.ttft.p50), mb(s.kv_bytes_per_slot as f64)]);
         t.row(row);

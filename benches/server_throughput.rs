@@ -6,7 +6,14 @@
 //! Each engine serves the SAME closed-loop client fleet: C connections,
 //! each sending R greedy generation requests back-to-back and reading its
 //! token stream.  Reported latencies are the server's own end-to-end
-//! summaries (enqueue → completion, the shared p50/p95/p99/mean shape).
+//! summaries (enqueue → completion, the shared p50/p95/p99/mean shape);
+//! prefill and decode phases are reported as separate token rates
+//! (`common::PHASE_HEADERS`).  The zs-svd engine additionally sweeps the
+//! `prefill_chunk` knob — prompt tokens ingested per scheduler iteration —
+//! so the chunked-prefill batching win is visible directly: bigger chunks
+//! put more rows into each prefill GEMM and the prefill tok/s column rises
+//! with them (tokens streamed to clients are identical for every chunk
+//! size; `rust/tests/server_loopback.rs` gates that bit-exactly).
 
 mod common;
 
@@ -29,12 +36,13 @@ struct Load {
 }
 
 fn drive(p: &Prepared, params: &zs_svd::model::ParamStore, engine: &Engine,
-         load: &Load) -> ServerStats {
+         load: &Load, prefill_chunk: usize) -> ServerStats {
     let cfg = ServerConfig {
         addr: "127.0.0.1:0".into(),
         queue_depth: 128,
         decode: DecodeConfig { max_slots: 4, max_new_tokens: load.max_new,
-                               temperature: 0.0, seed: 1, arrival_steps: 0.0 },
+                               temperature: 0.0, seed: 1, arrival_steps: 0.0,
+                               prefill_chunk },
     };
     let vocab = p.session.cfg.vocab;
     let (tx, rx) = mpsc::channel::<SocketAddr>();
@@ -83,6 +91,16 @@ fn drive(p: &Prepared, params: &zs_svd::model::ParamStore, engine: &Engine,
     })
 }
 
+/// Human label for a `prefill_chunk` setting (0 = whole prompt per
+/// iteration).
+fn chunk_label(prefill_chunk: usize) -> String {
+    if prefill_chunk == 0 {
+        "full".into()
+    } else {
+        format!("{prefill_chunk}")
+    }
+}
+
 fn main() {
     let rt = common::runtime();
     let p = common::prepare(rt, "tiny", "llama", 7);
@@ -92,36 +110,55 @@ fn main() {
         Load { clients: 4, per_client: 6, prompt_len: 16, max_new: 16 }
     };
 
-    let mut headers = vec!["engine", "compression", "decode tok/s"];
+    let mut headers = vec!["engine", "compression", "chunk"];
+    headers.extend(common::PHASE_HEADERS);
     headers.extend(LATENCY_HEADERS);
     headers.extend(["ttft p50 ms", "rejected"]);
     let mut t = Table::new(
         "server throughput (TCP loopback, streaming decode)", &headers);
 
-    let mut emit_row = |label: &str, comp: &str, s: &ServerStats| {
-        // steady-state rate (prefill-free iterations), the same definition
-        // decode_throughput reports — NOT tokens over the whole wall clock,
-        // which would charge connect gaps and the drain to the TCP tier
-        let tok_s = s.counters.decode_tok_per_sec();
-        eprintln!("  {label}@{comp}: {tok_s:.0} decode tok/s over TCP");
-        let mut row = vec![label.to_string(), comp.to_string(), f2(tok_s)];
+    let mut emit_row = |label: &str, comp: &str, chunk: usize,
+                        s: &ServerStats| {
+        // steady-state decode rate (decode-step sections only) next to the
+        // prefill-phase rate — the same split definitions decode_throughput
+        // reports.  NOT tokens over the whole wall clock, which would
+        // charge connect gaps and the drain to the TCP tier
+        let pre = s.counters.prefill_tok_per_sec();
+        let dec = s.counters.decode_tok_per_sec();
+        eprintln!("  {label}@{comp} chunk {}: {pre:.0} prefill tok/s, \
+                   {dec:.0} decode tok/s over TCP",
+                  chunk_label(chunk));
+        let mut row = vec![label.to_string(), comp.to_string(),
+                           chunk_label(chunk)];
+        row.extend(common::phase_cells(pre, dec));
         row.extend(latency_cells(&s.e2e));
         row.extend([f2(s.ttft.p50), format!("{}", s.requests_rejected)]);
         t.row(row);
     };
 
-    let d = drive(&p, &p.params, &Engine::Dense, &load);
-    emit_row("original", "0%", &d);
+    let d = drive(&p, &p.params, &Engine::Dense, &load, 0);
+    emit_row("original", "0%", 0, &d);
 
-    for (comp, ratio) in [("40%", 0.6), ("60%", 0.4)] {
-        let plan = coordinator::run_method(&p, &Method::zs(ratio), ratio)
+    // the zs-svd engine sweeps the prefill chunk: tokens are identical at
+    // every size, so the prefill tok/s column isolates the batching win
+    // (1 ≈ the old token-at-a-time path, full = whole-prompt GEMMs)
+    let chunk_sweep = [1usize, 4, 0];
+    for (i, (comp, ratio)) in [("40%", 0.6), ("60%", 0.4)].iter().enumerate() {
+        let plan = coordinator::run_method(&p, &Method::zs(*ratio), *ratio)
             .expect("compress");
         let tag = format!("{}", (ratio * 100.0) as usize);
         let lm = p.session.cfg.lowrank.get(&tag).expect("artifact tag");
         let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
         let params = plan.apply(&p.params);
-        let s = drive(&p, &params, &engine, &load);
-        emit_row(&plan.method, comp, &s);
+        if i == 0 {
+            for &chunk in &chunk_sweep {
+                let s = drive(&p, &params, &engine, &load, chunk);
+                emit_row(&plan.method, comp, chunk, &s);
+            }
+        } else {
+            let s = drive(&p, &params, &engine, &load, 0);
+            emit_row(&plan.method, comp, 0, &s);
+        }
     }
 
     common::emit("server_throughput", &t);

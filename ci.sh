@@ -37,6 +37,12 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
+# the doc gate is fatal: rustdoc ships with the toolchain (unlike the
+# rustfmt/clippy components), and the crate enforces #![warn(missing_docs)]
+# — so a broken intra-doc link or an undocumented public item fails CI here
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "== bench smoke: microbench_linalg (ZS_BENCH_FAST=1) =="
 ZS_BENCH_FAST=1 cargo bench --bench microbench_linalg
 

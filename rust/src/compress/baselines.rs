@@ -221,6 +221,7 @@ pub fn dobi_sim(sess: &Session, params: &ParamStore, calib: &Calibration,
 // structured pruning family
 // ---------------------------------------------------------------------------
 
+/// Scoring rule for the structured-pruning baselines.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PruneScore {
     /// weight-magnitude (LLM-Pruner analog)

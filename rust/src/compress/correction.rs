@@ -12,6 +12,8 @@
 
 use crate::tensor::Mat;
 
+/// Which correction operator a truncate–correct–re-truncate iteration
+/// applies (the paper's Eq. 13 default plus the App. B.1 ablations).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum CorrectionKind {
     /// the paper's one-step correction: project ΔW onto g (Eq. 13/27)
@@ -25,6 +27,7 @@ pub enum CorrectionKind {
 }
 
 impl CorrectionKind {
+    /// Table-row label.
     pub fn label(&self) -> String {
         match self {
             CorrectionKind::ProjGrad => "proj-grad".into(),

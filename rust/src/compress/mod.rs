@@ -6,6 +6,19 @@
 //! * `plan` — materialized plans + storage accounting (Sec. 4.4 remap / HQ)
 //! * `pipeline` — calibration + the end-to-end ZS-SVD flow
 //! * `baselines` — ASVD/FWSVD/SVD-LLM/Dobi-sim + structured pruning
+//!
+//! # Determinism contract
+//!
+//! Every parallel path in here is **bit-identical to its serial
+//! equivalent for any thread count**: per-target decomposition, plan
+//! building, and the correction loop fan out with `exec::par_map` (results
+//! land at their input index, so scheduling cannot reorder them), and the
+//! calibration sums reduce through `exec::tree_reduce`'s fixed pairwise
+//! tree, whose association order depends only on the batch count — never
+//! on workers.  `rust/tests/parallel_equiv.rs` gates a full `compress_zs`
+//! at threads {1, 2, 4}.  The same fixed-order-reduction discipline is what
+//! the serving-side batched kernels uphold (see `crate::decode`), so a
+//! compressed plan serves identically however it is scheduled.
 
 pub mod baselines;
 pub mod correction;

@@ -24,13 +24,21 @@ use crate::util::rng::Rng;
 /// whitening site plus mean gradients / Fisher diagonals per target.
 #[derive(Clone, Debug)]
 pub struct Calibration {
+    /// the calibration token batches themselves (reused by correction)
     pub batches: Vec<IntTensor>,
+    /// per-site Σ X Xᵀ activation second moments
     pub site_xx: BTreeMap<String, Mat>,
+    /// per-site Σ x activation sums
     pub site_sum: BTreeMap<String, Vec<f32>>,
+    /// per-site Σ |x| absolute activation sums
     pub site_abssum: BTreeMap<String, Vec<f32>>,
+    /// tokens the site statistics were accumulated over
     pub token_count: usize,
+    /// per-target mean calibration gradients
     pub grads: BTreeMap<String, Mat>,
+    /// per-target Fisher diagonals (mean g²)
     pub fisher: BTreeMap<String, Mat>,
+    /// mean calibration loss of the dense model
     pub base_loss: f32,
     /// seconds spent on the moments pass (whitening-statistics cost)
     pub moments_seconds: f64,
@@ -111,25 +119,32 @@ pub fn calibrate(sess: &Session, params: &ParamStore, corpus: &Corpus,
                      grads, fisher, base_loss, moments_seconds, grads_seconds })
 }
 
+/// Knobs of one ZS-SVD run (the paper's method variants).
 #[derive(Clone, Debug)]
 pub struct ZsOpts {
+    /// kept-parameter ratio of the global budget
     pub ratio: f64,
+    /// storage accounting (standard factored vs remap)
     pub costing: Costing,
+    /// component-selection strategy (zero-sum vs the ablations)
     pub strategy: Strategy,
     /// truncate–correct–re-truncate iterations (0 = plain ZS-SVD)
     pub correction_iters: usize,
+    /// which correction operator the iterations apply
     pub correction_kind: CorrectionKind,
     /// HQ: prune to half the footprint reduction, int8-quantize the rest
     pub hq: bool,
 }
 
 impl ZsOpts {
+    /// The paper's default settings at one ratio.
     pub fn new(ratio: f64) -> ZsOpts {
         ZsOpts { ratio, costing: Costing::Standard, strategy: Strategy::ZeroSum,
                  correction_iters: 0, correction_kind: CorrectionKind::ProjGrad,
                  hq: false }
     }
 
+    /// Table-row label for this variant.
     pub fn label(&self) -> String {
         let mut s = String::from("zs-svd");
         match self.costing {

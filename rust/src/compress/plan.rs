@@ -10,10 +10,14 @@ use std::collections::BTreeMap;
 use crate::model::{ConfigMeta, ParamStore};
 use crate::tensor::{Mat, Tensor};
 
+/// Materialized decision for one target matrix.
 #[derive(Clone, Debug)]
 pub struct TargetPlan {
+    /// parameter name of the target
     pub name: String,
+    /// rows (output dim)
     pub m: usize,
+    /// cols (input dim)
     pub n: usize,
     /// final rank (kept components); == min(m,n) when dense
     pub rank: usize,
@@ -27,10 +31,16 @@ pub struct TargetPlan {
     pub stored_params: f64,
 }
 
+/// A complete compression decision: one [`TargetPlan`] per target plus
+/// run metadata, ready to splice into a parameter store or serve as
+/// low-rank factors.
 #[derive(Clone, Debug)]
 pub struct CompressionPlan {
+    /// method label that produced the plan
     pub method: String,
+    /// requested kept-parameter ratio
     pub ratio: f64,
+    /// per-target decisions, in manifest target order
     pub targets: Vec<TargetPlan>,
     /// wall-clock seconds the compression took (Table 8)
     pub seconds: f64,
@@ -58,6 +68,7 @@ impl CompressionPlan {
             .collect()
     }
 
+    /// Look a target's plan up by name; panics on a miss.
     pub fn target(&self, name: &str) -> &TargetPlan {
         self.targets
             .iter()

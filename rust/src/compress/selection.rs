@@ -29,13 +29,20 @@ pub enum Strategy {
     /// the paper's method: per-W spectral order + sign-balanced ΔL
     ZeroSum,
     /// greedily take the most negative ΔL
-    MostNegative { per_w_order: bool },
+    MostNegative {
+        /// keep each matrix's spectral pop order
+        per_w_order: bool,
+    },
     /// smallest |ΔL| first
-    MagnitudeDl { per_w_order: bool },
+    MagnitudeDl {
+        /// keep each matrix's spectral pop order
+        per_w_order: bool,
+    },
     /// smallest σ first (loss-blind; per-W order is implied)
     SigmaSmallest,
 }
 
+/// Outcome of one global budgeted selection run.
 #[derive(Clone, Debug)]
 pub struct SelectionResult {
     /// kept component indices per target (sorted ascending = descending σ)
@@ -55,6 +62,7 @@ pub struct SelectionResult {
     pub forced_pops: usize,
 }
 
+/// Rank above which factored storage stops paying for an m-by-n matrix.
 pub fn k_threshold(m: usize, n: usize) -> usize {
     // ⌈mn/(m+n)⌉ — factored storage beats dense strictly below this
     (m * n).div_ceil(m + n)

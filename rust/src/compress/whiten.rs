@@ -16,8 +16,11 @@ use crate::tensor::Mat;
 /// predicted loss changes.
 #[derive(Clone, Debug)]
 pub struct TargetDecomp {
+    /// parameter name of the decomposed target
     pub name: String,
+    /// rows (output dim)
     pub m: usize,
+    /// cols (input dim)
     pub n: usize,
     /// lower-triangular whitening factor S (n×n), S·Sᵀ = C + λI
     pub s: Mat,

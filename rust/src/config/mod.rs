@@ -5,6 +5,9 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::{parse, Json};
 
+/// One experiment's settings: model/family, training + calibration sizes,
+/// serving shape, and output locations.  Parsed from JSON with per-field
+/// defaults; every CLI flag overrides one field.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     /// model config name from the manifest ("tiny", "small", "opt_tiny")
@@ -13,14 +16,17 @@ pub struct ExperimentConfig {
     pub family: String,
     /// pretraining steps (checkpoint-cached)
     pub train_steps: usize,
+    /// peak pretraining learning rate
     pub train_lr: f64,
     /// calibration batches (the paper's 256×2048 scaled down)
     pub calib_batches: usize,
     /// eval sizes
     pub ppl_batches: usize,
+    /// zero-shot instances per task family
     pub instances_per_family: usize,
     /// compression ratios to sweep
     pub ratios: Vec<f64>,
+    /// experiment seed (training, calibration, serving defaults)
     pub seed: u64,
     /// worker threads for the `exec` pool (0 = auto: `PALLAS_THREADS` env
     /// var, else available parallelism)
@@ -31,6 +37,14 @@ pub struct ExperimentConfig {
     pub max_new_tokens: usize,
     /// admission-queue depth for the network server (`serve --listen`)
     pub queue_depth: usize,
+    /// prompt tokens a prefilling slot ingests per scheduler iteration
+    /// through the batched kernels (`serve --prefill-chunk`); 0 = the whole
+    /// prompt in one iteration.  Generated tokens are identical for every
+    /// chunk size — the knob trades single-iteration latency (smaller
+    /// chunks let decode steps interleave with a long prompt's prefill)
+    /// against peak prefill throughput (larger chunks batch more rows per
+    /// GEMM).
+    pub prefill_chunk: usize,
     /// where checkpoints live
     pub ckpt_dir: PathBuf,
     /// where result tables are appended
@@ -54,6 +68,7 @@ impl Default for ExperimentConfig {
             decode_slots: 4,
             max_new_tokens: 32,
             queue_depth: 64,
+            prefill_chunk: 16,
             ckpt_dir: root.join("artifacts").join("ckpts"),
             out_dir: root.join("results"),
         }
@@ -61,6 +76,7 @@ impl Default for ExperimentConfig {
 }
 
 impl ExperimentConfig {
+    /// Parse from a JSON object, defaulting every missing field.
     pub fn from_json(j: &Json) -> ExperimentConfig {
         let d = ExperimentConfig::default();
         ExperimentConfig {
@@ -82,6 +98,7 @@ impl ExperimentConfig {
             decode_slots: j.usize_or("decode_slots", d.decode_slots),
             max_new_tokens: j.usize_or("max_new_tokens", d.max_new_tokens),
             queue_depth: j.usize_or("queue_depth", d.queue_depth),
+            prefill_chunk: j.usize_or("prefill_chunk", d.prefill_chunk),
             ckpt_dir: j
                 .get("ckpt_dir")
                 .and_then(Json::as_str)
@@ -95,12 +112,14 @@ impl ExperimentConfig {
         }
     }
 
+    /// Read + parse a config file.
     pub fn from_file(path: &Path) -> Result<ExperimentConfig, String> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("read {}: {e}", path.display()))?;
         Ok(Self::from_json(&parse(&text)?))
     }
 
+    /// Serialize (the round-trip inverse of `from_json`).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::str(&self.model)),
@@ -116,6 +135,7 @@ impl ExperimentConfig {
             ("decode_slots", Json::num(self.decode_slots as f64)),
             ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("prefill_chunk", Json::num(self.prefill_chunk as f64)),
             ("ckpt_dir", Json::str(self.ckpt_dir.to_str().unwrap_or("."))),
             ("out_dir", Json::str(self.out_dir.to_str().unwrap_or("."))),
         ])
@@ -148,6 +168,7 @@ mod tests {
         assert_eq!(back.decode_slots, c.decode_slots);
         assert_eq!(back.max_new_tokens, c.max_new_tokens);
         assert_eq!(back.queue_depth, c.queue_depth);
+        assert_eq!(back.prefill_chunk, c.prefill_chunk);
     }
 
     #[test]

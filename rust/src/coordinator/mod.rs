@@ -23,20 +23,32 @@ use crate::trainer::{ensure_trained, TrainConfig};
 pub enum Method {
     /// plain truncated SVD
     Svd,
+    /// Fisher-weighted SVD
     Fwsvd,
+    /// activation-aware SVD
     Asvd,
+    /// SVD-LLM (whitened truncation)
     SvdLlm,
     /// Dobi-SVD cost simulator with N optimization sweeps
-    DobiSim { sweeps: usize },
+    DobiSim {
+        /// optimization sweeps
+        sweeps: usize,
+    },
     /// Dobi with remap accounting (reported as Dobi-SVD* in the paper)
-    DobiSimRemap { sweeps: usize },
+    DobiSimRemap {
+        /// optimization sweeps
+        sweeps: usize,
+    },
     /// ZS-SVD and its variants
     Zs(ZsOpts),
+    /// structured pruning at one of the supported scores
     Prune(PruneScore),
+    /// SliceGPT-style rotation + slicing
     SliceGpt,
 }
 
 impl Method {
+    /// Table-row label (paper nomenclature).
     pub fn label(&self) -> String {
         match self {
             Method::Svd => "svd".into(),
@@ -60,22 +72,27 @@ impl Method {
         Method::Zs(ZsOpts::new(ratio))
     }
 
+    /// ZS-SVD with `iters` projected-gradient correction iterations.
     pub fn zs_corrected(ratio: f64, iters: usize) -> Method {
         Method::Zs(ZsOpts { correction_iters: iters, ..ZsOpts::new(ratio) })
     }
 
+    /// ZS-SVD under remap storage accounting (ZS-SVD* rows).
     pub fn zs_remap(ratio: f64) -> Method {
         Method::Zs(ZsOpts { costing: Costing::Remap, ..ZsOpts::new(ratio) })
     }
 
+    /// ZS-SVD with the high-quality (†) search settings.
     pub fn zs_hq(ratio: f64) -> Method {
         Method::Zs(ZsOpts { hq: true, ..ZsOpts::new(ratio) })
     }
 
+    /// ZS-SVD with an explicit selection strategy (ablation rows).
     pub fn zs_strategy(ratio: f64, strategy: Strategy) -> Method {
         Method::Zs(ZsOpts { strategy, ..ZsOpts::new(ratio) })
     }
 
+    /// ZS-SVD with one correction iteration of the given kind.
     pub fn zs_correction_kind(ratio: f64, kind: CorrectionKind) -> Method {
         Method::Zs(ZsOpts { correction_iters: 1, correction_kind: kind,
                             ..ZsOpts::new(ratio) })
@@ -85,11 +102,17 @@ impl Method {
 /// Prepared experiment context for one model: session + pretrained weights +
 /// data + calibration.
 pub struct Prepared<'rt> {
+    /// typed execution facade over the runtime + model config
     pub session: Session<'rt>,
+    /// pretrained dense weights (checkpoint-cached)
     pub params: ParamStore,
+    /// the synthetic world the corpora/tasks are generated from
     pub world: World,
+    /// the family's training corpus
     pub train_corpus: Corpus,
+    /// held-out eval corpora (wiki/ptb/c4 styles)
     pub eval_corpora: Vec<Corpus>,
+    /// whitening moments + calibration gradients
     pub calib: Calibration,
 }
 

@@ -7,8 +7,10 @@ use super::world::{World, WORLD_SEED};
 use crate::tensor::IntTensor;
 use crate::util::rng::Rng;
 
+/// One synthetic byte-level corpus with disjoint train/eval splits.
 #[derive(Clone, Debug)]
 pub struct Corpus {
+    /// corpus name ("wiki-syn", ...)
     pub name: String,
     train: Vec<u8>,
     eval: Vec<u8>,
@@ -17,9 +19,11 @@ pub struct Corpus {
 /// Default sizes: enough structure for a ~1M-param model to learn from while
 /// keeping single-core generation instant.
 pub const TRAIN_BYTES: usize = 2_000_000;
+/// Default eval-split size in bytes.
 pub const EVAL_BYTES: usize = 200_000;
 
 impl Corpus {
+    /// Generate a corpus of the given style and sizes from a world.
     pub fn build(style: GrammarStyle, world: &World, train_bytes: usize,
                  eval_bytes: usize) -> Corpus {
         let g = Grammar::new(world, style.clone());
@@ -33,10 +37,12 @@ impl Corpus {
         }
     }
 
+    /// Train-split size in bytes.
     pub fn train_len(&self) -> usize {
         self.train.len()
     }
 
+    /// Eval-split size in bytes.
     pub fn eval_len(&self) -> usize {
         self.eval.len()
     }
@@ -105,6 +111,7 @@ pub fn training_corpus(family: &str, world: &World) -> Corpus {
     }
 }
 
+/// The fixed world every experiment shares (seeded constant).
 pub fn default_world() -> World {
     World::new(WORLD_SEED)
 }

@@ -11,8 +11,10 @@
 use super::world::World;
 use crate::util::rng::Rng;
 
+/// Style knobs distinguishing the synthetic corpora (wiki/ptb/c4 analogs).
 #[derive(Clone, Debug)]
 pub struct GrammarStyle {
+    /// corpus name ("wiki-syn", ...)
     pub name: &'static str,
     /// mixture weights: [agreement sentence, fact sentence, math line, noise line]
     pub mix: [f32; 4],
@@ -24,16 +26,19 @@ pub struct GrammarStyle {
     pub vocab_frac: f32,
 }
 
+/// Clean encyclopedic mix (WikiText-2 analog).
 pub fn wiki_style() -> GrammarStyle {
     GrammarStyle { name: "wiki-syn", mix: [0.55, 0.2, 0.1, 0.15],
                    max_chain: 2, char_noise: 0.0, vocab_frac: 1.0 }
 }
 
+/// Restricted-vocabulary mix (PTB analog).
 pub fn ptb_style() -> GrammarStyle {
     GrammarStyle { name: "ptb-syn", mix: [0.6, 0.25, 0.15, 0.0],
                    max_chain: 1, char_noise: 0.0, vocab_frac: 0.5 }
 }
 
+/// Noisy web-crawl mix (C4 analog).
 pub fn c4_style() -> GrammarStyle {
     GrammarStyle { name: "c4-syn", mix: [0.45, 0.15, 0.1, 0.3],
                    max_chain: 3, char_noise: 0.02, vocab_frac: 1.0 }
@@ -46,12 +51,16 @@ pub fn vicuna_style() -> GrammarStyle {
                    max_chain: 2, char_noise: 0.0, vocab_frac: 1.0 }
 }
 
+/// Sentence generator binding a [`GrammarStyle`] to a [`World`].
 pub struct Grammar<'w> {
+    /// the shared lexicon/fact world sentences draw from
     pub world: &'w World,
+    /// mixture + noise knobs of this corpus flavour
     pub style: GrammarStyle,
 }
 
 impl<'w> Grammar<'w> {
+    /// Bind a style to a world.
     pub fn new(world: &'w World, style: GrammarStyle) -> Self {
         Grammar { world, style }
     }
@@ -90,10 +99,12 @@ impl<'w> Grammar<'w> {
         s
     }
 
+    /// A planted world fact ("`<noun> iz <attr> .`").
     pub fn fact_sentence(&self, rng: &mut Rng) -> String {
         self.world.fact_sentence(rng.below(self.n_nouns()))
     }
 
+    /// A single-digit arithmetic line ("a + b = c .").
     pub fn math_sentence(&self, rng: &mut Rng) -> String {
         World::math_sentence(rng.below(10) as u32, rng.below(10) as u32)
     }
@@ -114,6 +125,7 @@ impl<'w> Grammar<'w> {
         parts.join("/")
     }
 
+    /// One sentence drawn from the style's mixture (+ char noise).
     pub fn sentence(&self, rng: &mut Rng) -> String {
         let mut s = match rng.categorical(&self.style.mix) {
             0 => self.agreement_sentence(rng),

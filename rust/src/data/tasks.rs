@@ -9,6 +9,7 @@
 use super::world::World;
 use crate::util::rng::Rng;
 
+/// The seven zero-shot task families (analogs of the paper's eval suite).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TaskFamily {
     /// stored-fact recall (OpenBookQA analog): "tup iz" -> attribute
@@ -27,6 +28,7 @@ pub enum TaskFamily {
     MathqaSyn,
 }
 
+/// Every task family, in the paper's table order.
 pub const ALL_FAMILIES: [TaskFamily; 7] = [
     TaskFamily::OpenbSyn, TaskFamily::ArcESyn, TaskFamily::ArcCSyn,
     TaskFamily::WinogSyn, TaskFamily::HellasSyn, TaskFamily::PiqaSyn,
@@ -34,6 +36,7 @@ pub const ALL_FAMILIES: [TaskFamily; 7] = [
 ];
 
 impl TaskFamily {
+    /// Table-row name of the family.
     pub fn name(&self) -> &'static str {
         match self {
             TaskFamily::OpenbSyn => "openb-syn",
@@ -51,13 +54,18 @@ impl TaskFamily {
 /// streams; `correct` indexes `options`.
 #[derive(Clone, Debug)]
 pub struct TaskInstance {
+    /// family this instance belongs to
     pub family: TaskFamily,
+    /// context the model scores each option against
     pub prompt: String,
+    /// candidate continuations
     pub options: Vec<String>,
+    /// index of the correct option
     pub correct: usize,
 }
 
 impl TaskInstance {
+    /// Number of candidate options.
     pub fn n_options(&self) -> usize {
         self.options.len()
     }
@@ -76,6 +84,7 @@ pub fn generate(world: &World, family: TaskFamily, rng: &mut Rng) -> TaskInstanc
     }
 }
 
+/// Generate `n` instances of one family from a family-mixed seed.
 pub fn generate_set(world: &World, family: TaskFamily, n: usize, seed: u64)
                     -> Vec<TaskInstance> {
     let mut rng = Rng::new(seed ^ hash_family(family.name()));

@@ -11,11 +11,16 @@ use crate::util::rng::Rng;
 /// Deterministic lexicon + facts, derived from a world seed.
 #[derive(Clone, Debug)]
 pub struct World {
-    pub nouns: Vec<String>,        // singular forms; plural = +"s"
-    pub verbs_sing: Vec<String>,   // verb form agreeing with singular subject
-    pub verbs_plur: Vec<String>,   // verb form agreeing with plural subject
-    pub attrs: Vec<String>,        // attribute words
-    /// facts[i] = index into attrs: the attribute of noun i ("<noun> iz <attr>")
+    /// singular noun forms; plural = +"s"
+    pub nouns: Vec<String>,
+    /// verb form agreeing with a singular subject
+    pub verbs_sing: Vec<String>,
+    /// verb form agreeing with a plural subject
+    pub verbs_plur: Vec<String>,
+    /// attribute words
+    pub attrs: Vec<String>,
+    /// `facts[i]` = index into attrs: the attribute of noun i
+    /// ("`<noun> iz <attr>`")
     pub facts: Vec<usize>,
 }
 
@@ -48,6 +53,7 @@ fn make_inventory(rng: &mut Rng, count: usize, syllables: usize) -> Vec<String> 
 }
 
 impl World {
+    /// Generate a lexicon + fact table from a seed.
     pub fn new(seed: u64) -> World {
         let mut rng = Rng::new(seed);
         let nouns = make_inventory(&mut rng, 24, 1);
@@ -63,10 +69,12 @@ impl World {
         World { nouns, verbs_sing, verbs_plur, attrs, facts }
     }
 
+    /// Plural surface form of a noun.
     pub fn plural(&self, noun_idx: usize) -> String {
         format!("{}s", self.nouns[noun_idx])
     }
 
+    /// The attribute the world assigns to a noun.
     pub fn fact_attr(&self, noun_idx: usize) -> &str {
         &self.attrs[self.facts[noun_idx]]
     }

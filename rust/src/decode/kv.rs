@@ -3,9 +3,12 @@
 //! One `KvCache` holds, per transformer layer, a `(max_len × d_model)` K
 //! matrix and V matrix plus a length cursor.  `decode_step` appends the
 //! current position's post-RoPE key and value rows and attends over rows
-//! `0..=pos`; rows `>= len` are never read, so `reset()` (slot reuse in the
-//! continuous-batching scheduler) only rewinds the cursor — the arena
-//! allocation survives for the life of the slot.
+//! `0..=pos`; the batched `decode_batch` kernel appends a whole token run
+//! (a prefill chunk, or one token per scheduled slot) the same way, rows
+//! in ascending position order.  Rows `>= len` are never read, so
+//! `reset()` (slot reuse in the continuous-batching scheduler) only
+//! rewinds the cursor — the arena allocation survives for the life of the
+//! slot.
 //!
 //! The RoPE cos/sin tables (llama models) are precomputed here once per
 //! cache instead of once per token; they are bit-identical to the tables
@@ -38,6 +41,7 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Fresh arena sized for `cfg` (capacity `seq_len` positions).
     pub fn new(cfg: &ConfigMeta) -> KvCache {
         let dh = cfg.d_model / cfg.n_heads;
         let (cos, sin) = if cfg.arch == "llama" {

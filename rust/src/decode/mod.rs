@@ -10,28 +10,39 @@
 //! * `runtime::native::decode_step` — the incremental step kernel: one token
 //!   at position `cache.len` through the llama/opt graph against the cache,
 //!   via either the dense weights or a compression plan's `(Wu, Wv)`
-//!   low-rank factors.  Dispatched through `Session::{decode_step,
-//!   lowrank_decode_step}`, which validate the artifact ABI exactly like
+//!   low-rank factors.  `runtime::native::decode_batch` is its batched
+//!   sibling and the serving hot path: many sequences and/or multi-token
+//!   prompt chunks advance through ONE set of per-layer GEMMs (chunked
+//!   prefill, batched-across-slots decode).  Both are dispatched through
+//!   `Session::{decode_step, lowrank_decode_step, decode_batch,
+//!   lowrank_decode_batch}`, which validate the artifact ABI exactly like
 //!   the prefill entry points.
 //! * [`sampler`] — greedy argmax and temperature softmax sampling, seeded
 //!   per request so generations are independent of slot assignment,
 //!   scheduling order, and thread count.
 //! * [`scheduler`] — the continuous-batching loop: [`run_engine`] pulls
 //!   work from a [`RequestSource`] (a fixed benchmark workload or the
-//!   network server's admission queue) and streams every generated token
+//!   network server's admission queue), advances the batch through at most
+//!   two batched kernel calls per iteration (one across-slot decode step,
+//!   one chunk of every prefilling prompt — see
+//!   [`DecodeConfig::prefill_chunk`]), and streams every generated token
 //!   through a [`DecodeEvent`] sink; [`run_decode`] is the classic
 //!   run-to-completion wrapper over a [`WorkloadSource`].
 //!
 //! # Determinism
 //!
-//! The step kernel reuses the exact per-row kernels and loop structures of
+//! The step kernels reuse the exact per-row kernels and loop structures of
 //! the full forward pass, so KV-cached step logits **bit-match** a full
-//! forward over the same prefix for every thread count — the parity gate in
-//! `rust/tests/decode_parity.rs` enforces this for both the dense and the
-//! low-rank engines.  Scheduling only chooses *when* a sequence advances,
-//! never *what* it computes, so generated tokens are reproducible under any
-//! slot count / thread count / arrival pattern — including tokens streamed
-//! over TCP by `crate::server`, which bit-match the offline path
+//! forward over the same prefix for every thread count — and the batched
+//! kernel's projections are row-independent (each output row is one
+//! fixed-order accumulation; see `linalg::matmul`), so its logits also
+//! bit-match the token-at-a-time reference for every chunk size and batch
+//! composition.  The parity gate in `rust/tests/decode_parity.rs` enforces
+//! both halves for the dense and the low-rank engines.  Scheduling only
+//! chooses *when* a sequence advances, never *what* it computes, so
+//! generated tokens are reproducible under any slot count / thread count /
+//! prefill chunk size / arrival pattern — including tokens streamed over
+//! TCP by `crate::server`, which bit-match the offline path
 //! (`rust/tests/server_loopback.rs`).
 
 pub mod kv;

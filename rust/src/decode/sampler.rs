@@ -36,8 +36,15 @@ pub fn argmax(logits: &[f32]) -> usize {
 
 /// Per-sequence sampling policy.
 pub enum Sampler {
+    /// argmax (temperature <= 1e-6), ties broken by lowest index
     Greedy,
-    Temperature { temp: f32, rng: Rng },
+    /// softmax sampling at `temp` from a per-request seeded stream
+    Temperature {
+        /// sampling temperature (> 0)
+        temp: f32,
+        /// per-request random stream
+        rng: Rng,
+    },
 }
 
 impl Sampler {
@@ -51,6 +58,7 @@ impl Sampler {
         }
     }
 
+    /// Draw the next token id from a logits row.
     pub fn sample(&mut self, logits: &[f32]) -> usize {
         match self {
             Sampler::Greedy => argmax(logits),

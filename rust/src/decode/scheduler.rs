@@ -3,13 +3,15 @@
 //! emission callbacks**.
 //!
 //! A request's lifecycle is prefill-then-decode: on admission into a free
-//! slot its whole prompt is driven through the incremental step kernel
-//! (filling the slot's KV arena and sampling the first new token), and on
-//! every subsequent scheduler iteration each occupied slot advances by one
-//! generated token.  When a sequence hits its generation budget (or its KV
-//! arena fills) the slot retires, its arena is rewound into the free pool,
-//! and the next pending request is admitted — the batch never drains to
-//! empty while work is queued.
+//! slot its prompt is ingested in **chunks** of
+//! [`DecodeConfig::prefill_chunk`] tokens per scheduler iteration (each
+//! chunk one batched [`crate::runtime::native::decode_batch`] call, filling
+//! the slot's KV arena as it goes; the first new token is sampled from the
+//! final chunk's logits), and on every subsequent iteration each occupied
+//! slot advances by one generated token.  When a sequence hits its
+//! generation budget (or its KV arena fills) the slot retires, its arena is
+//! rewound into the free pool, and the next pending request is admitted —
+//! the batch never drains to empty while work is queued.
 //!
 //! The core loop is [`run_engine`]: a **long-lived** scheduler that pulls
 //! work from a [`RequestSource`] and reports progress through a sink
@@ -24,11 +26,25 @@
 //!   scheduler runs for the life of the process, idles cheaply when no
 //!   requests are queued, and drains gracefully when the queue closes.
 //!
-//! Slot steps are independent, so each iteration fans the occupied slots
-//! out across the persistent `exec` worker pool in contiguous bands.
+//! # Batched execution
+//!
+//! Each iteration issues at most two batched kernel calls: one advancing
+//! every decoding slot by one token (the slots' hidden states share a
+//! single activation matrix per layer — one GEMM across the batch instead
+//! of per-slot single-row products), and one ingesting the current prompt
+//! chunk of every prefilling slot.  Chunked prefill bounds the work any
+//! single iteration performs, so a long prompt no longer stalls the whole
+//! batch for its entire prefill: ongoing decode steps interleave with its
+//! chunks, one per iteration.  Row-level parallelism inside the GEMMs comes
+//! from the persistent `exec` pool.
+//!
+//! # Determinism
+//!
 //! Generated tokens are bit-reproducible for any slot count / thread count
-//! / arrival pattern: the step kernel is deterministic per sequence and
-//! every sequence samples from its own seeded `Sampler` — explicitly via
+//! / chunk size / arrival pattern: the batched kernel is row-independent
+//! (a sequence's logits cannot depend on which other sequences share the
+//! GEMM — see `decode_batch`'s bit-identity contract), and every sequence
+//! samples from its own seeded `Sampler` — explicitly via
 //! `DecodeRequest::seed`, or derived from the scheduler seed and request id
 //! by [`sampler_seed`].  Scheduling chooses *when* a sequence advances,
 //! never *what* it computes, which is what lets network generations
@@ -37,7 +53,11 @@
 //! Latency accounting: a request's latency spans eligibility → completion
 //! (queue wait included, so admission pressure is visible in p95/p99);
 //! TTFT spans eligibility → first generated token; queue wait is reported
-//! separately as eligibility → slot admission.
+//! separately as eligibility → slot admission.  Prefill and decode phases
+//! are separate kernel calls per iteration and are clocked separately
+//! ([`EngineCounters::prefill_secs`] vs the decode-section clock behind
+//! [`EngineCounters::decode_tok_per_sec`]), so the serving benches report
+//! split prefill/decode token rates.
 
 use std::time::Instant;
 
@@ -45,7 +65,6 @@ use anyhow::Result;
 
 use super::kv::KvCache;
 use super::sampler::Sampler;
-use crate::exec;
 use crate::model::{ConfigMeta, ParamStore};
 use crate::runtime::session::Session;
 use crate::serve::{peak_rss_bytes, Engine};
@@ -56,8 +75,11 @@ use crate::util::stats::LatencySummary;
 /// One generation request.
 #[derive(Clone, Debug)]
 pub struct DecodeRequest {
+    /// caller-assigned id, unique within one engine run
     pub id: usize,
+    /// prompt token ids (non-empty, <= the model's seq_len)
     pub prompt: Vec<i32>,
+    /// generation budget for this request
     pub max_new_tokens: usize,
     /// per-request sampling temperature (None = the scheduler default).
     /// The network front-end threads client-supplied values through these
@@ -69,6 +91,7 @@ pub struct DecodeRequest {
 }
 
 impl DecodeRequest {
+    /// Request with default sampling (scheduler temperature, derived seed).
     pub fn new(id: usize, prompt: Vec<i32>, max_new_tokens: usize)
                -> DecodeRequest {
         DecodeRequest { id, prompt, max_new_tokens, temperature: None,
@@ -97,6 +120,7 @@ pub fn synth_requests(cfg: &ConfigMeta, n: usize, prompt_len: usize,
         .collect()
 }
 
+/// Scheduler shape + per-request defaults for one engine run.
 #[derive(Clone, Debug)]
 pub struct DecodeConfig {
     /// concurrent sequences in the executing batch
@@ -107,24 +131,33 @@ pub struct DecodeConfig {
     /// default sampling temperature: 0 = greedy argmax; > 0 = softmax
     /// sampling at this temperature (requests may override per-request)
     pub temperature: f32,
+    /// base sampler seed, mixed per request by [`sampler_seed`]
     pub seed: u64,
     /// arrival gap in scheduler iterations for [`WorkloadSource`]
     /// (deterministic schedule: request `i` becomes eligible at iteration
     /// `i * arrival_steps`); 0 saturates the queue
     pub arrival_steps: f64,
+    /// prompt tokens a prefilling slot ingests per scheduler iteration
+    /// (each chunk is one batched kernel call); 0 = the whole remaining
+    /// prompt in a single iteration.  Smaller chunks bound per-iteration
+    /// work so ongoing decode steps interleave with a long prompt's
+    /// prefill; generated tokens are identical for every chunk size.
+    pub prefill_chunk: usize,
 }
 
 impl Default for DecodeConfig {
     fn default() -> Self {
         DecodeConfig { max_slots: 4, max_new_tokens: 32, temperature: 0.0,
-                       seed: 1, arrival_steps: 0.0 }
+                       seed: 1, arrival_steps: 0.0, prefill_chunk: 0 }
     }
 }
 
 /// One finished request.
 #[derive(Clone, Debug)]
 pub struct CompletedRequest {
+    /// the request's caller-assigned id
     pub id: usize,
+    /// prompt length, tokens
     pub prompt_len: usize,
     /// generated tokens (the prompt is not echoed)
     pub tokens: Vec<i32>,
@@ -137,14 +170,17 @@ pub struct CompletedRequest {
 }
 
 /// Per-token / per-completion emissions from [`run_engine`], delivered on
-/// the driver thread in slot order after each iteration — never from the
-/// band workers, so sinks need no synchronization of their own.
+/// the driver thread in slot order after each iteration — never from pool
+/// workers, so sinks need no synchronization of their own.
 #[derive(Debug)]
 pub enum DecodeEvent {
     /// the `index`-th generated token of request `id`
     Token {
+        /// the request's caller-assigned id
         id: usize,
+        /// 0-based position in this request's generation
         index: usize,
+        /// the sampled token id
         token: i32,
         /// gap since this request's previous emission (the first token's
         /// gap is its TTFT), seconds
@@ -191,6 +227,7 @@ pub struct WorkloadSource<'a> {
 }
 
 impl<'a> WorkloadSource<'a> {
+    /// Source over a fixed request list with the given arrival gap.
     pub fn new(requests: &'a [DecodeRequest], arrival_steps: f64)
                -> WorkloadSource<'a> {
         WorkloadSource {
@@ -239,25 +276,37 @@ impl RequestSource for WorkloadSource<'_> {
 /// registry, [`run_decode`] from the completions it collects.
 #[derive(Clone, Debug, Default)]
 pub struct EngineCounters {
+    /// scheduler iterations executed
     pub iterations: usize,
+    /// requests that ran to completion
     pub requests_completed: usize,
+    /// prompt tokens ingested through the chunked-prefill path
     pub prefill_tokens: usize,
+    /// tokens generated across all requests
     pub decode_tokens: usize,
+    /// whole-run wall time, seconds
     pub wall_seconds: f64,
-    /// wall time of scheduler iterations that carried no prefill (the
-    /// steady-state decode phase)
+    /// wall time spent inside the batched decode-step sections (every
+    /// iteration's decode call + sampling; prefill runs as a separate
+    /// kernel call and is never charged here)
     pub decode_only_secs: f64,
-    /// tokens generated during those prefill-free iterations
+    /// tokens generated during those decode-step sections
     pub decode_only_tokens: usize,
+    /// wall time spent inside the batched prefill-chunk kernel calls
+    /// (the denominator of [`EngineCounters::prefill_tok_per_sec`])
+    pub prefill_secs: f64,
 }
 
 impl EngineCounters {
     /// Steady-state decode throughput — the ONE definition every surface
     /// reports (`DecodeStats::decode_tok_per_sec`, the network server's
     /// session table, `benches/server_throughput.rs`): tokens generated
-    /// during prefill-free iterations over those iterations' wall time,
-    /// falling back to the whole-run average when every iteration carried
-    /// a prefill.
+    /// over the wall time of the batched decode-step sections alone.
+    /// Prefill runs as its own kernel call per iteration, so this stays
+    /// meaningful for any chunk size — mixed iterations charge only their
+    /// decode section here (the pre-PR-4 definition counted whole
+    /// prefill-free iterations, which chunked prefill can starve).  Falls
+    /// back to the whole-run average when no decode section ever ran.
     pub fn decode_tok_per_sec(&self) -> f64 {
         if self.decode_only_secs > 0.0 {
             self.decode_only_tokens as f64 / self.decode_only_secs
@@ -267,21 +316,43 @@ impl EngineCounters {
             0.0
         }
     }
+
+    /// Prefill-phase throughput: prompt tokens ingested over the wall time
+    /// of the batched prefill-chunk calls alone (decode iterations and
+    /// queue idling excluded), so the chunked-prefill win is measurable
+    /// separately from the steady-state decode rate.
+    pub fn prefill_tok_per_sec(&self) -> f64 {
+        if self.prefill_secs > 0.0 {
+            self.prefill_tokens as f64 / self.prefill_secs
+        } else {
+            0.0
+        }
+    }
 }
 
+/// Aggregate result of one [`run_decode`] benchmark run.
 #[derive(Clone, Debug)]
 pub struct DecodeStats {
+    /// engine label (`dense` / `lowrank-r<tag>`)
     pub engine: String,
+    /// requests completed
     pub requests: usize,
+    /// prompt tokens ingested
     pub prefill_tokens: usize,
+    /// tokens generated
     pub decode_tokens: usize,
+    /// whole-run wall time, seconds
     pub wall_seconds: f64,
-    /// steady-state decode throughput: tokens generated during
-    /// prefill-free scheduler iterations over those iterations' wall time
-    /// (falls back to decode_tokens / wall when every iteration carried a
-    /// prefill).  Most meaningful under saturating arrivals
-    /// (`arrival_steps == 0`, the benchmarks' setting).
+    /// steady-state decode throughput: tokens generated over the wall
+    /// time of the batched decode-step sections alone (prefill is a
+    /// separate per-iteration kernel call and is never charged).  Most
+    /// meaningful under saturating arrivals (`arrival_steps == 0`, the
+    /// benchmarks' setting).
     pub decode_tok_per_sec: f64,
+    /// prefill-phase throughput: prompt tokens over the wall time of the
+    /// batched prefill-chunk calls alone
+    /// ([`EngineCounters::prefill_tok_per_sec`])
+    pub prefill_tok_per_sec: f64,
     /// prefill + decode tokens over the full wall clock
     pub total_tok_per_sec: f64,
     /// end-to-end latency summary (eligibility → completion), ms
@@ -290,6 +361,7 @@ pub struct DecodeStats {
     pub ttft: LatencySummary,
     /// K/V arena bytes one slot holds (f32)
     pub kv_bytes_per_slot: usize,
+    /// peak RSS of the process (VmHWM), bytes
     pub peak_mem_bytes: usize,
 }
 
@@ -298,7 +370,9 @@ struct Active {
     req: DecodeRequest,
     cache: KvCache,
     sampler: Sampler,
-    prefilled: bool,
+    /// prompt tokens already ingested; prefill is complete once this
+    /// reaches the prompt length
+    prefill_pos: usize,
     last_token: i32,
     tokens: Vec<i32>,
     /// tokens already delivered to the sink
@@ -312,56 +386,50 @@ struct Active {
     first_token_at: Option<Instant>,
     /// previous emission instant (token-gap baseline; starts at arrival)
     last_emit: Instant,
-    err: Option<anyhow::Error>,
     done: bool,
 }
 
-/// One engine step: `token` at position `cache.len` → next-token logits.
-fn step_engine(sess: &Session, params: &ParamStore, engine: &Engine,
-               cache: &mut KvCache, token: i32) -> Result<Tensor> {
-    match engine {
-        Engine::Dense => sess.decode_step(params, cache, token),
-        Engine::Lowrank { tag, factors } => {
-            sess.lowrank_decode_step(tag, params, factors, cache, token)
+impl Active {
+    /// Still ingesting its prompt (not yet generating).
+    fn prefilling(&self) -> bool {
+        self.prefill_pos < self.req.prompt.len()
+    }
+
+    /// Bookkeeping after a sampled token: record it, stamp TTFT, and
+    /// retire the slot once the budget or the KV arena is exhausted.
+    fn push_token(&mut self, tok: i32) {
+        self.tokens.push(tok);
+        self.last_token = tok;
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(Instant::now());
+        }
+        if self.tokens.len() >= self.limit || self.cache.len >= self.cache.max_len {
+            self.done = true;
         }
     }
 }
 
-/// Advance one slot: full-prompt prefill on first touch, else one decode
-/// step.  Errors are parked on the slot and surfaced by the driver loop.
-fn advance(sess: &Session, params: &ParamStore, engine: &Engine,
-           a: &mut Active) {
-    let r = (|| -> Result<()> {
-        let logits = if a.prefilled {
-            step_engine(sess, params, engine, &mut a.cache, a.last_token)?
-        } else {
-            let mut last = None;
-            for &t in &a.req.prompt {
-                last = Some(step_engine(sess, params, engine, &mut a.cache, t)?);
-            }
-            a.prefilled = true;
-            last.expect("admission rejects empty prompts")
-        };
-        let tok = a.sampler.sample(&logits.data) as i32;
-        a.tokens.push(tok);
-        a.last_token = tok;
-        if a.first_token_at.is_none() {
-            a.first_token_at = Some(Instant::now());
+/// One batched engine advance over several sequences' token runs: each
+/// sequence with `want_logits[s]` set gets back the next-token logits
+/// after its last run token (interior prefill chunks request none and skip
+/// the vocab projection).
+fn step_engine_batch(sess: &Session, params: &ParamStore, engine: &Engine,
+                     seqs: &mut [(&mut KvCache, &[i32])],
+                     want_logits: &[bool])
+                     -> Result<Vec<Option<Tensor>>> {
+    match engine {
+        Engine::Dense => sess.decode_batch(params, seqs, want_logits),
+        Engine::Lowrank { tag, factors } => {
+            sess.lowrank_decode_batch(tag, params, factors, seqs, want_logits)
         }
-        Ok(())
-    })();
-    if let Err(e) = r {
-        a.err = Some(e);
-    }
-    if a.err.is_some() || a.tokens.len() >= a.limit || a.cache.len >= a.cache.max_len {
-        a.done = true;
     }
 }
 
 /// Run the long-lived continuous-batching scheduler until `source` drains:
-/// admit from `source` into free slots, advance occupied slots band-
-/// parallel on the persistent `exec` pool, and deliver every generated
-/// token and completion to `sink` in slot order.
+/// admit from `source` into free slots, advance occupied slots through the
+/// batched step/prefill kernels (one GEMM set across the batch per
+/// iteration, row-parallel on the persistent `exec` pool), and deliver
+/// every generated token and completion to `sink` in slot order.
 ///
 /// Engine errors (a failing step kernel) abort the run; request validation
 /// belongs to the caller — the offline wrapper checks its whole workload up
@@ -421,7 +489,7 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                         *slot = Some(Active {
                             cache,
                             sampler,
-                            prefilled: false,
+                            prefill_pos: 0,
                             last_token: 0,
                             tokens: Vec::with_capacity(cap),
                             emitted: 0,
@@ -430,7 +498,6 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                             admitted: now,
                             first_token_at: None,
                             last_emit: arrival,
-                            err: None,
                             done: false,
                             req,
                         });
@@ -452,25 +519,113 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
             continue;
         }
 
-        // advance every occupied slot by one engine step, band-parallel on
-        // the persistent pool; iterations with no prefill in them time the
-        // steady-state decode phase (each active slot emits exactly one
-        // token per iteration)
-        {
-            let mut act: Vec<&mut Active> =
-                slots.iter_mut().filter_map(|s| s.as_mut()).collect();
-            let had_prefill = act.iter().any(|a| !a.prefilled);
-            let stepped = act.len();
-            let t_band = Instant::now();
-            let band = act.len().div_ceil(exec::threads().min(act.len()));
-            exec::par_chunks_mut(&mut act, band, |_, band| {
-                for a in band.iter_mut() {
-                    advance(sess, params, engine, a);
+        // advance the batch with at most two batched kernel calls: one
+        // single-token step across every decoding slot (their hidden states
+        // share one activation matrix per layer), then one prompt-chunk
+        // ingest across every prefilling slot.  Decoding slots therefore
+        // emit exactly one token per iteration while long prompts make
+        // bounded, chunk-sized progress alongside them.
+        let had_prefill = slots
+            .iter()
+            .any(|s| s.as_ref().is_some_and(Active::prefilling));
+
+        // --- batched decode step across decoding slots ---
+        let step_toks: Vec<i32> = slots
+            .iter()
+            .filter_map(|s| s.as_ref())
+            .filter(|a| !a.prefilling())
+            .map(|a| a.last_token)
+            .collect();
+        if !step_toks.is_empty() {
+            let t_step = Instant::now();
+            let logits = {
+                let mut seqs: Vec<(&mut KvCache, &[i32])> =
+                    Vec::with_capacity(step_toks.len());
+                let mut k = 0usize;
+                for s in slots.iter_mut() {
+                    let Some(a) = s else { continue };
+                    if a.prefilling() {
+                        continue;
+                    }
+                    seqs.push((&mut a.cache,
+                               std::slice::from_ref(&step_toks[k])));
+                    k += 1;
                 }
-            });
-            if !had_prefill {
-                c.decode_only_secs += t_band.elapsed().as_secs_f64();
-                c.decode_only_tokens += stepped;
+                // every decode step feeds its slot's sampler
+                let want = vec![true; seqs.len()];
+                step_engine_batch(sess, params, engine, &mut seqs, &want)?
+            };
+            let stepped = step_toks.len();
+            // sampling stays on the driver thread, in slot order — cheap
+            // next to the GEMMs, and per-sequence seeding keeps it
+            // independent of batch composition anyway
+            let mut k = 0usize;
+            for s in slots.iter_mut() {
+                let Some(a) = s else { continue };
+                if a.prefilling() {
+                    continue;
+                }
+                let l = logits[k].as_ref().expect("decode logits requested");
+                let tok = a.sampler.sample(&l.data) as i32;
+                k += 1;
+                a.push_token(tok);
+            }
+            // the decode section is its own kernel call, so its clock is
+            // clean even when the same iteration also prefills a chunk —
+            // charge it always (a prefill-free-iterations-only clock would
+            // starve under small chunk sizes and steady admissions)
+            c.decode_only_secs += t_step.elapsed().as_secs_f64();
+            c.decode_only_tokens += stepped;
+        }
+
+        // --- chunked prefill across prefilling slots ---
+        if had_prefill {
+            let t_pre = Instant::now();
+            // the chunk plan is computed ONCE and replayed below, so the
+            // logits index can never drift from the slot it belongs to
+            let (logits, takes) = {
+                let mut seqs: Vec<(&mut KvCache, &[i32])> = Vec::new();
+                let mut takes: Vec<usize> = Vec::new();
+                let mut want: Vec<bool> = Vec::new();
+                for s in slots.iter_mut() {
+                    let Some(a) = s else { continue };
+                    if !a.prefilling() {
+                        continue;
+                    }
+                    let rem = a.req.prompt.len() - a.prefill_pos;
+                    let take = match cfg.prefill_chunk {
+                        0 => rem,
+                        chunk => rem.min(chunk),
+                    };
+                    seqs.push((&mut a.cache,
+                               &a.req.prompt[a.prefill_pos
+                                   ..a.prefill_pos + take]));
+                    takes.push(take);
+                    // only a prompt-completing chunk feeds the sampler
+                    want.push(take == rem);
+                }
+                (step_engine_batch(sess, params, engine, &mut seqs, &want)?,
+                 takes)
+            };
+            c.prefill_secs += t_pre.elapsed().as_secs_f64();
+            let mut k = 0usize;
+            for s in slots.iter_mut() {
+                let Some(a) = s else { continue };
+                if !a.prefilling() {
+                    continue;
+                }
+                let take = takes[k];
+                a.prefill_pos += take;
+                c.prefill_tokens += take;
+                if !a.prefilling() {
+                    // prompt fully ingested: the final chunk's logits are
+                    // the last prompt position's — sample the first token
+                    let l = logits[k].as_ref()
+                        .expect("final-chunk logits requested");
+                    let tok = a.sampler.sample(&l.data) as i32;
+                    a.push_token(tok);
+                }
+                k += 1;
             }
         }
 
@@ -494,12 +649,8 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                 continue;
             }
             let mut a = slot.take().expect("checked occupied");
-            if let Some(e) = a.err.take() {
-                return Err(e);
-            }
             let now = Instant::now();
             c.requests_completed += 1;
-            c.prefill_tokens += a.req.prompt.len();
             c.decode_tokens += a.tokens.len();
             sink(DecodeEvent::Done(CompletedRequest {
                 id: a.req.id,
@@ -559,6 +710,7 @@ pub fn run_decode(sess: &Session, params: &ParamStore, engine: &Engine,
         decode_tokens: counters.decode_tokens,
         wall_seconds: counters.wall_seconds,
         decode_tok_per_sec: counters.decode_tok_per_sec(),
+        prefill_tok_per_sec: counters.prefill_tok_per_sec(),
         total_tok_per_sec: (counters.prefill_tokens + counters.decode_tokens)
             as f64
             / counters.wall_seconds,

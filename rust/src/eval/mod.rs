@@ -25,6 +25,7 @@ pub struct EvalReport {
 }
 
 impl EvalReport {
+    /// Mean zero-shot accuracy across every task family.
     pub fn avg_acc(&self) -> f64 {
         if self.acc.is_empty() {
             return 0.0;
@@ -41,6 +42,7 @@ impl EvalReport {
         100.0 * (b - self.avg_acc()) / b
     }
 
+    /// Perplexity on one named corpus; panics on an unknown name.
     pub fn ppl_of(&self, name: &str) -> f64 {
         self.ppl
             .iter()
@@ -54,8 +56,11 @@ impl EvalReport {
 /// precision; ZS_BENCH_FAST shrinks them further at the harness level).
 #[derive(Clone, Copy, Debug)]
 pub struct EvalSpec {
+    /// eval batches per PPL corpus
     pub ppl_batches: usize,
+    /// zero-shot instances generated per task family
     pub instances_per_family: usize,
+    /// task-generation seed (fixed across methods for paired comparisons)
     pub task_seed: u64,
 }
 

@@ -10,8 +10,11 @@
 //!   the correction loop, the calibration batch fan-out).
 //! * [`par_chunks_mut`] — hand disjoint `&mut` chunks of one buffer to
 //!   workers.  Used by the row-partitioned matmul kernels in
-//!   `linalg::matmul` and by the decode scheduler's slot bands: each worker
-//!   owns a contiguous band of output rows / slots.
+//!   `linalg::matmul`: each worker owns a contiguous band of output rows.
+//!   The decode scheduler reaches the pool through those kernels — its
+//!   per-iteration batched step/prefill GEMMs (`runtime::native::
+//!   decode_batch`) stack all live slots' rows into one product, and the
+//!   pool splits that product's output rows into bands.
 //!
 //! # Persistent pool
 //!

@@ -13,6 +13,14 @@
 //!
 //! Python never runs at request time: after `make artifacts`, the `zs-svd`
 //! binary is self-contained.
+//!
+//! See the top-level `README.md` for the crate layout, quickstart, and the
+//! determinism guarantees every subsystem upholds.
+
+// Public API documentation is part of the CI gate: ci.sh runs
+// `cargo doc --no-deps` with RUSTDOCFLAGS="-D warnings", so an
+// undocumented public item or a broken intra-doc link fails the build.
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod exec;

@@ -168,6 +168,8 @@ pub fn gram(a: &Mat) -> Mat {
     c
 }
 
+/// Fixed-order f32 dot product (4-lane unrolled) — the one accumulation
+/// the projection kernels build on, hence the unit of bit-reproducibility.
 #[inline]
 pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());

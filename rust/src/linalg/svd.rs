@@ -11,11 +11,15 @@
 
 use crate::tensor::Mat;
 
+/// A thin SVD A = U·diag(σ)·Vᵀ.
 #[derive(Clone, Debug)]
 pub struct Svd {
-    pub u: Mat,          // m × r, orthonormal columns
-    pub sigma: Vec<f32>, // r, descending
-    pub v: Mat,          // n × r, orthonormal columns
+    /// m × r, orthonormal columns
+    pub u: Mat,
+    /// r singular values, descending
+    pub sigma: Vec<f32>,
+    /// n × r, orthonormal columns
+    pub v: Mat,
 }
 
 const MAX_SWEEPS: usize = 60;

@@ -9,7 +9,9 @@
 //!   serve                    batched serving benchmark (dense vs low-rank);
 //!                            `--decode` switches to KV-cached generation
 //!                            under continuous batching (`--slots`,
-//!                            `--max-new-tokens`, `--temperature`);
+//!                            `--max-new-tokens`, `--temperature`,
+//!                            `--prefill-chunk` prompt tokens ingested per
+//!                            scheduler iteration, 0 = whole prompt);
 //!                            `--listen <addr>` starts the network server
 //!                            (streaming TCP front-end; `--plan` serves the
 //!                            ZS-SVD low-rank engine, `--queue-depth` bounds
@@ -116,6 +118,7 @@ fn serve_listen(rt: &Runtime, args: &Args, cfg: &ExperimentConfig,
             temperature: args.f64_or("temperature", 0.0) as f32,
             seed: cfg.seed,
             arrival_steps: 0.0,
+            prefill_chunk: args.usize_or("prefill-chunk", cfg.prefill_chunk),
         },
     };
     let port_file = args.get("port-file").map(|s| s.to_string());
@@ -142,6 +145,8 @@ fn serve_listen(rt: &Runtime, args: &Args, cfg: &ExperimentConfig,
                format!("{}", stats.counters.requests_completed)]);
     t.row(vec!["decode tokens".into(),
                format!("{}", stats.counters.decode_tokens)]);
+    t.row(vec!["prefill tok/s".into(),
+               f2(stats.counters.prefill_tok_per_sec())]);
     t.row(vec!["decode tok/s".into(),
                f2(stats.counters.decode_tok_per_sec())]);
     for (h, v) in LATENCY_HEADERS.iter().zip(latency_cells(&stats.e2e)) {
@@ -335,6 +340,8 @@ fn main() -> Result<()> {
                     temperature: args.f64_or("temperature", 0.0) as f32,
                     seed: cfg.seed,
                     arrival_steps: args.f64_or("arrival-steps", 0.0),
+                    prefill_chunk: args.usize_or("prefill-chunk",
+                                                 cfg.prefill_chunk),
                 };
                 let prompt_len = args.usize_or("prompt-len",
                                                p.session.cfg.seq_len / 4);
@@ -348,14 +355,15 @@ fn main() -> Result<()> {
                 let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
                 let (l, _) = run_decode(&p.session, &plan.apply(&p.params),
                                         &engine, &reqs, &dc)?;
-                let mut headers = vec!["engine", "decode tok/s",
-                                       "total tok/s"];
+                let mut headers = vec!["engine", "prefill tok/s",
+                                       "decode tok/s", "total tok/s"];
                 headers.extend(LATENCY_HEADERS);
                 headers.extend(["ttft p50 ms", "KV MB/slot", "peak RSS MB"]);
                 let mut t = Table::new(
                     "decode serving (continuous batching)", &headers);
                 for s in [&d, &l] {
                     let mut row = vec![s.engine.clone(),
+                                       f2(s.prefill_tok_per_sec),
                                        f2(s.decode_tok_per_sec),
                                        f2(s.total_tok_per_sec)];
                     row.extend(latency_cells(&s.latency));

@@ -7,6 +7,8 @@ use super::store::ParamStore;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
+/// Random initialization matching `model.py::init_params` (scaled normal
+/// projections, ones for norm scales).
 pub fn init_params(cfg: &ConfigMeta, rng: &mut Rng) -> ParamStore {
     let mut store = ParamStore::zeros_like(cfg);
     let resid_scale = 0.02 / (2.0 * cfg.n_layers as f32).sqrt();

@@ -6,76 +6,118 @@ use std::path::Path;
 
 use crate::util::json::{parse_file, Json};
 
+/// One declared input or output of an artifact graph.
 #[derive(Clone, Debug)]
 pub struct IoMeta {
+    /// logical name ("tokens", "loss", a parameter name, ...)
     pub name: String,
+    /// declared shape, outermost dimension first
     pub shape: Vec<usize>,
-    pub dtype: String, // "f32" | "i32"
+    /// element type: "f32" | "i32"
+    pub dtype: String,
 }
 
+/// One AOT-lowered graph artifact: its file plus the ordered, shaped
+/// signature the runtime validates before dispatch.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// artifact file name inside the artifacts directory
     pub file: String,
+    /// ordered input signature
     pub inputs: Vec<IoMeta>,
+    /// ordered output signature
     pub outputs: Vec<IoMeta>,
 }
 
+/// A low-rank (fused-factor) forward artifact at one compression ratio.
 #[derive(Clone, Debug)]
 pub struct LowrankMeta {
+    /// the fused-kernel forward graph
     pub art: ArtifactMeta,
     /// target name -> uniform rank baked into this artifact's shapes
     pub ranks: BTreeMap<String, usize>,
 }
 
+/// Name + shape of one model parameter tensor.
 #[derive(Clone, Debug)]
 pub struct ParamMeta {
+    /// parameter name ("embed", "layers.0.wq", ...)
     pub name: String,
+    /// tensor shape, outermost dimension first
     pub shape: Vec<usize>,
 }
 
+/// One compression target: a weight matrix the engine may factorize.
 #[derive(Clone, Debug)]
 pub struct TargetMeta {
+    /// parameter name of the targeted matrix
     pub name: String,
     /// (m, n) — rows (output dim), cols (input dim)
     pub shape: (usize, usize),
+    /// whitening-site name whose activations feed this matrix
     pub site: String,
 }
 
+/// One whitening site: a named activation tap with its feature dimension.
 #[derive(Clone, Debug)]
 pub struct SiteMeta {
+    /// site name ("layers.0.attn_in", ...)
     pub name: String,
+    /// feature dimension of the tapped activations
     pub dim: usize,
 }
 
+/// Full description of one model configuration: architecture hyper-
+/// parameters, the parameter/target/site tables, and every graph artifact
+/// the build side lowered for it.
 #[derive(Clone, Debug)]
 pub struct ConfigMeta {
+    /// config name ("tiny", "small", "opt_tiny", ...)
     pub name: String,
+    /// architecture family: "llama" | "opt"
     pub arch: String,
+    /// vocabulary size
     pub vocab: usize,
+    /// residual-stream width
     pub d_model: usize,
+    /// transformer layer count
     pub n_layers: usize,
+    /// attention head count
     pub n_heads: usize,
+    /// MLP hidden width
     pub d_ff: usize,
+    /// maximum sequence length (also the KV-arena capacity)
     pub seq_len: usize,
+    /// batch size the main forward artifact was lowered at
     pub batch: usize,
     /// RoPE base (llama arch only)
     pub rope_theta: f64,
     /// normalization epsilon (rmsnorm / layernorm)
     pub norm_eps: f32,
+    /// every parameter tensor, in canonical order
     pub params: Vec<ParamMeta>,
+    /// compression targets (the factorizable weight matrices)
     pub targets: Vec<TargetMeta>,
+    /// whitening sites, in the order the moments pass emits them
     pub sites: Vec<SiteMeta>,
+    /// batched forward graph
     pub fwd: ArtifactMeta,
+    /// optional single-sequence forward graph (serving / decode)
     pub fwd_b1: Option<ArtifactMeta>,
+    /// calibration-gradients graph
     pub grads: ArtifactMeta,
+    /// whitening-moments graph
     pub moments: ArtifactMeta,
+    /// Adam train-step graph
     pub train: ArtifactMeta,
     /// keyed by ratio tag: "80", "60", "40", "20", "60_b1", ...
     pub lowrank: BTreeMap<String, LowrankMeta>,
 }
 
+/// The artifact manifest: every model config the build side produced.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// configs keyed by name
     pub configs: BTreeMap<String, ConfigMeta>,
 }
 
@@ -208,6 +250,9 @@ impl Manifest {
         Manifest { configs }
     }
 
+    /// Look a config up by name; panics with the known names on a miss
+    /// (configs are compile-time constants of the experiment, not user
+    /// input).
     pub fn config(&self, name: &str) -> &ConfigMeta {
         self.configs
             .get(name)
@@ -425,10 +470,12 @@ fn builtin_config(name: &str, arch: &str, d: usize, n_layers: usize,
 }
 
 impl ConfigMeta {
+    /// Total parameter count across every tensor of the model.
     pub fn param_count(&self) -> usize {
         self.params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
     }
 
+    /// Look a compression target up by name; panics on a miss.
     pub fn target(&self, name: &str) -> &TargetMeta {
         self.targets
             .iter()
@@ -436,6 +483,7 @@ impl ConfigMeta {
             .unwrap_or_else(|| panic!("unknown target `{name}`"))
     }
 
+    /// Feature dimension of a whitening site; panics on a miss.
     pub fn site_dim(&self, name: &str) -> usize {
         self.sites
             .iter()

@@ -14,6 +14,8 @@ use super::manifest::ConfigMeta;
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
 
+/// Ordered, named parameter tensors — the in-memory weight format shared
+/// by training, compression, serving, and the ZST0 checkpoint format.
 #[derive(Clone, Debug)]
 pub struct ParamStore {
     names: Vec<String>,
@@ -21,6 +23,7 @@ pub struct ParamStore {
 }
 
 impl ParamStore {
+    /// Store knowing its parameter names but holding no tensors yet.
     pub fn new_empty(names: Vec<String>) -> ParamStore {
         ParamStore { names, map: BTreeMap::new() }
     }
@@ -35,18 +38,22 @@ impl ParamStore {
         s
     }
 
+    /// Parameter names in canonical (manifest) order.
     pub fn names(&self) -> &[String] {
         &self.names
     }
 
+    /// Number of parameters.
     pub fn len(&self) -> usize {
         self.names.len()
     }
 
+    /// True when the store names no parameters.
     pub fn is_empty(&self) -> bool {
         self.names.is_empty()
     }
 
+    /// Tensor lookup by name; panics on a miss.
     pub fn get(&self, name: &str) -> &Tensor {
         self.map
             .get(name)
@@ -61,6 +68,7 @@ impl ParamStore {
             .unwrap_or_else(|| panic!("param `{name}` missing"))
     }
 
+    /// Replace a tensor (name must be declared).
     pub fn set(&mut self, name: &str, t: Tensor) {
         assert!(self.names.iter().any(|n| n == name), "unknown param `{name}`");
         self.map.insert(name.to_string(), t);
@@ -71,6 +79,7 @@ impl ParamStore {
         self.names.iter().map(|n| self.get(n)).collect()
     }
 
+    /// Total scalar count across every tensor.
     pub fn total_values(&self) -> usize {
         self.names.iter().map(|n| self.get(n).len()).sum()
     }
@@ -84,6 +93,7 @@ impl ParamStore {
     // ZST0 checkpoint format
     // ------------------------------------------------------------------
 
+    /// Write the ZST0 checkpoint format (JSON header + raw f32 payload).
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
         let mut header_entries = Vec::new();
         let mut offset = 0usize;
@@ -114,6 +124,7 @@ impl ParamStore {
         Ok(())
     }
 
+    /// Read a ZST0 checkpoint written by [`ParamStore::save`].
     pub fn load(path: &Path) -> anyhow::Result<ParamStore> {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 4];

@@ -7,13 +7,18 @@ use std::fmt::Write as _;
 use crate::util::stats::LatencySummary;
 
 #[derive(Clone, Debug)]
+/// Titled table rendered as aligned ASCII or markdown.
 pub struct Table {
+    /// table title
     pub title: String,
+    /// column headers
     pub headers: Vec<String>,
+    /// data rows (cell strings, one per header)
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a title and headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -22,6 +27,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(),
                    "row width {} != header width {}", cells.len(), self.headers.len());
@@ -95,10 +101,12 @@ pub fn f2(v: f64) -> String {
     }
 }
 
+/// Percentage cell with one decimal.
 pub fn pct(v: f64) -> String {
     format!("{v:.1}")
 }
 
+/// Accuracy cell: two decimals.
 pub fn acc2(v: f64) -> String {
     format!("{v:.2}")
 }

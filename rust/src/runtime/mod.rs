@@ -7,6 +7,18 @@
 //! validated, and the per-artifact "compile" cache is preserved so warmup
 //! and lazy-compile accounting behave as before.  `Runtime` is `Sync`: the
 //! multi-worker serving drain shares one instance across worker threads.
+//!
+//! # Invariants
+//!
+//! Every kernel in [`native`] is deterministic and bit-identical for any
+//! thread count: heavy projections route through the row-partitioned
+//! parallel matmuls (`linalg::matmul`), whose per-element accumulation
+//! order is fixed, and everything else is serial fixed-order scalar code.
+//! The incremental decode kernels (`native::decode_step`,
+//! `native::decode_batch`) additionally bit-match the full forward over
+//! the same prefix — for every prompt chunking and across-slot batch
+//! composition — which is the contract the decode/serving tiers build on
+//! (`rust/tests/decode_parity.rs`, `rust/tests/server_loopback.rs`).
 
 pub mod native;
 pub mod session;
@@ -19,8 +31,10 @@ use anyhow::Result;
 
 use crate::model::Manifest;
 
+/// The loaded artifact directory: manifest + compile-cache bookkeeping.
 pub struct Runtime {
     dir: PathBuf,
+    /// every model config the artifact set declares
     pub manifest: Manifest,
     /// artifact files "compiled" (first dispatched) so far
     cache: Mutex<BTreeSet<String>>,
@@ -48,10 +62,12 @@ impl Runtime {
             })
     }
 
+    /// Load from the default artifacts directory (env-overridable).
     pub fn load_default() -> Result<Runtime> {
         Runtime::load(&Self::default_dir())
     }
 
+    /// The directory this runtime loaded from.
     pub fn artifacts_dir(&self) -> &Path {
         &self.dir
     }
@@ -71,6 +87,7 @@ impl Runtime {
         Ok(())
     }
 
+    /// Distinct artifacts dispatched ("compiled") so far.
     pub fn compiled_count(&self) -> usize {
         self.cache.lock().unwrap_or_else(|e| e.into_inner()).len()
     }

@@ -18,7 +18,12 @@
 //! [`decode_step`] is the incremental sibling of [`forward`]: one token
 //! against a per-sequence KV cache (`crate::decode::kv`), sharing the
 //! per-row building blocks so cached decoding reproduces full-forward
-//! logits bit for bit.
+//! logits bit for bit.  [`decode_batch`] generalizes it to the serving hot
+//! path — many sequences and/or multi-token prompt chunks through ONE set
+//! of batched per-layer GEMMs (chunked prefill, batched-across-slots decode
+//! steps) — while keeping the same bit-identity contract: every projection
+//! is row-independent, so a sequence's logits cannot depend on which other
+//! rows share the GEMM.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -26,6 +31,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use anyhow::{ensure, Result};
 
 use crate::decode::kv::KvCache;
+use crate::exec;
 use crate::linalg::matmul::{dot_f32, matmul, matmul_bt, matmul_bt_flat,
                             matmul_flat};
 use crate::model::{ConfigMeta, ParamStore};
@@ -144,8 +150,8 @@ pub fn loss_and_param_grads(cfg: &ConfigMeta, params: &ParamStore,
 ///
 /// Every operation reuses the per-row kernels and loop structures of the
 /// full forward pass — projections are single-row `matmul_bt` dots, the
-/// norm/activation scalar code is shared, and [`attention_step`] mirrors
-/// [`attention_fwd`]'s per-position accumulation order — so the returned
+/// norm/activation scalar code is shared, and `attention_step` mirrors
+/// `attention_fwd`'s per-position accumulation order — so the returned
 /// logits **bit-match** a full forward over the same prefix for every
 /// thread count (`rust/tests/decode_parity.rs`).
 pub fn decode_step(cfg: &ConfigMeta, params: &ParamStore,
@@ -229,6 +235,213 @@ pub fn decode_step(cfg: &ConfigMeta, params: &ParamStore,
     let logits = project(&fin.y, embed); // tied head: (1, V)
     cache.len = pos + 1;
     Ok(logits.data)
+}
+
+/// Batched KV-cached advance: run every sequence's token run through ONE
+/// set of per-layer GEMMs and return, per requested sequence, the
+/// next-token logits after its last token.
+///
+/// Each entry of `seqs` is a (cache, tokens) pair; the tokens occupy
+/// positions `cache.len ..` of that sequence and the cache cursor advances
+/// past them on return.  `want_logits[s]` selects which sequences pay the
+/// final-norm + tied-head vocab projection (`None` entries otherwise) —
+/// interior prefill chunks feed no sampler, so the scheduler skips their
+/// head GEMM entirely.  Two serving shapes collapse onto this one kernel:
+///
+/// * **chunked prefill** — one sequence, a multi-token run: a prompt chunk
+///   flows through the batched matmul kernels (`chunk` rows per projection)
+///   instead of one token-at-a-time [`decode_step`] call per position;
+/// * **batched decode** — many sequences, one token each: the active slots
+///   of the continuous-batching scheduler share a single activation matrix
+///   per layer instead of issuing per-slot single-row GEMMs.
+///
+/// Mixed runs (several sequences, several tokens each) also work, which is
+/// how the scheduler prefills multiple admitted prompts in one call.
+///
+/// # Bit-identity
+///
+/// The returned logits — and every K/V row written — are **bit-identical**
+/// to driving the same tokens through [`decode_step`] one at a time, for
+/// any grouping and any thread count (`rust/tests/decode_parity.rs`).  The
+/// contract rests on three properties:
+///
+/// * every projection routes through `matmul_bt`, whose output rows are
+///   each one fixed-order `dot_f32` accumulation — a row's bits cannot
+///   depend on which other rows share the GEMM (see `linalg::matmul`);
+/// * the norm / activation scalar code operates row-locally;
+/// * attention runs per position through the shared `attention_step_row`
+///   helper, after the whole run's K/V rows are appended — in-run causality
+///   (a chunk position attending to earlier positions of the same chunk)
+///   needs exactly the rows that an incremental step would already have
+///   written.  The rows are independent, so they fan out across the
+///   persistent `exec` pool in contiguous bands; each output row is
+///   computed by exactly one worker with the serial loop body, so the
+///   partition cannot change bits.
+pub fn decode_batch(cfg: &ConfigMeta, params: &ParamStore,
+                    lowrank: Option<&BTreeMap<String, (Mat, Mat)>>,
+                    seqs: &mut [(&mut KvCache, &[i32])],
+                    want_logits: &[bool])
+                    -> Result<Vec<Option<Vec<f32>>>> {
+    ensure!(!seqs.is_empty(), "decode_batch: no sequences");
+    ensure!(want_logits.len() == seqs.len(),
+            "decode_batch: want_logits length {} != {} sequences",
+            want_logits.len(), seqs.len());
+    let (d, h, ff, vocab) = (cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.vocab);
+    let dh = d / h;
+    let llama = cfg.arch == "llama";
+    let eps = cfg.norm_eps;
+    let half = dh / 2;
+
+    // row layout: sequence `s` owns rows `base[s] .. base[s] + len_s`
+    let mut base = Vec::with_capacity(seqs.len());
+    let mut total = 0usize;
+    for (cache, toks) in seqs.iter() {
+        ensure!(!toks.is_empty(), "decode_batch: empty token run");
+        ensure!(cache.len + toks.len() <= cache.max_len,
+                "kv cache full ({} + {} > {} positions)", cache.len,
+                toks.len(), cache.max_len);
+        ensure!(cache.k.len() == cfg.n_layers && cache.d == d,
+                "kv cache shaped for a different config");
+        for &t in toks.iter() {
+            ensure!(t >= 0 && (t as usize) < vocab,
+                    "token {t} out of range [0, {vocab})");
+        }
+        base.push(total);
+        total += toks.len();
+    }
+
+    // token gather (+ learned positions for opt, at each row's own position)
+    let embed = params.get("embed");
+    // llama stores carry no "pos_embed" (the lookup would panic), so the
+    // hoisted fetch stays arch-conditional
+    let pos_embed = (!llama).then(|| params.get("pos_embed"));
+    let mut x = Mat::zeros(total, d);
+    for (s, (cache, toks)) in seqs.iter().enumerate() {
+        for (j, &t) in toks.iter().enumerate() {
+            x.row_mut(base[s] + j).copy_from_slice(trow(embed, t as usize));
+        }
+        if let Some(pe) = pos_embed {
+            for j in 0..toks.len() {
+                let xr = x.row_mut(base[s] + j);
+                for (xv, pv) in xr.iter_mut().zip(trow(pe, cache.len + j)) {
+                    *xv += pv;
+                }
+            }
+        }
+    }
+
+    let linear = |name: &str, xin: &Mat| -> Mat {
+        if let Some(lr) = lowrank {
+            if let Some((wu, wv)) = lr.get(name) {
+                return matmul_bt(&matmul_bt(xin, wv), wu);
+            }
+        }
+        project(xin, params.get(name))
+    };
+
+    // all caches share one config, hence one name table (shape-checked
+    // above); per-sequence RoPE tables are bit-identical for equal configs
+    let names = Arc::clone(&seqs[0].0.names);
+    for li in 0..cfg.n_layers {
+        let ln = &names[li];
+
+        let ln1 = norm_fwd(&x, param_1d(params, &ln.ln1), eps, llama);
+        let mut q = linear(&ln.wq, &ln1.y);
+        let mut k = linear(&ln.wk, &ln1.y);
+        let v = linear(&ln.wv, &ln1.y);
+        // rotate each row at its own absolute position, then append the
+        // whole run's K/V rows BEFORE any attention — later in-run
+        // positions attend over earlier ones through the cache
+        for (s, (cache, toks)) in seqs.iter_mut().enumerate() {
+            for j in 0..toks.len() {
+                let r = base[s] + j;
+                let pos = cache.len + j;
+                if llama {
+                    rope_rotate_row(q.row_mut(r), pos * half, h, dh,
+                                    &cache.cos, &cache.sin, false);
+                    rope_rotate_row(k.row_mut(r), pos * half, h, dh,
+                                    &cache.cos, &cache.sin, false);
+                }
+                cache.k[li].set_row(pos, k.row(r));
+                cache.v[li].set_row(pos, v.row(r));
+            }
+        }
+        // attention rows are independent (each reads only its own cache and
+        // its q row, and writes its own output row), so they fan out across
+        // the pool in contiguous bands — this keeps the multi-slot decode
+        // attention parallel, not just the GEMMs.  Per-row (K, V, position)
+        // tables are snapshotted first so workers only read shared state.
+        let mut attn = Mat::zeros(total, d);
+        {
+            let mut row_seq = Vec::with_capacity(total);
+            let mut row_pos = Vec::with_capacity(total);
+            for (s, (cache, toks)) in seqs.iter().enumerate() {
+                for j in 0..toks.len() {
+                    row_seq.push(s);
+                    row_pos.push(cache.len + j);
+                }
+            }
+            let kv: Vec<(&Mat, &Mat)> =
+                seqs.iter().map(|(c, _)| (&c.k[li], &c.v[li])).collect();
+            let band = total.div_ceil(exec::threads().min(total));
+            exec::par_chunks_mut(&mut attn.data, band * d, |ci, chunk| {
+                for (i, out) in chunk.chunks_mut(d).enumerate() {
+                    let r = ci * band + i;
+                    let (kc, vc) = kv[row_seq[r]];
+                    attention_step_row(q.row(r), kc, vc, row_pos[r], h, dh,
+                                       out);
+                }
+            });
+        }
+        let attn_o = linear(&ln.wo, &attn);
+        x.add_assign(&attn_o);
+
+        let ln2 = norm_fwd(&x, param_1d(params, &ln.ln2), eps, llama);
+        let act = if llama {
+            let g = linear(&ln.mlp_gate, &ln2.y);
+            let u = linear(&ln.mlp_up, &ln2.y);
+            let mut act = Mat::zeros(total, ff);
+            for i in 0..act.data.len() {
+                act.data[i] = silu(g.data[i]) * u.data[i];
+            }
+            act
+        } else {
+            let g = linear(&ln.mlp_gate, &ln2.y);
+            let mut act = Mat::zeros(total, ff);
+            for i in 0..act.data.len() {
+                act.data[i] = gelu(g.data[i]);
+            }
+            act
+        };
+        let down = linear(&ln.mlp_down, &act);
+        x.add_assign(&down);
+    }
+
+    // only each run's LAST position can feed sampling, and only the
+    // requested sequences pay for it: gather those rows and push them
+    // through one batched final-norm + tied-head projection.  Interior
+    // prefill chunks request nothing and skip the vocab GEMM entirely.
+    let wanted: Vec<usize> =
+        (0..seqs.len()).filter(|&s| want_logits[s]).collect();
+    let mut out: Vec<Option<Vec<f32>>> =
+        (0..seqs.len()).map(|_| None).collect();
+    if !wanted.is_empty() {
+        let mut xl = Mat::zeros(wanted.len(), d);
+        for (w, &s) in wanted.iter().enumerate() {
+            let toks = seqs[s].1;
+            xl.row_mut(w).copy_from_slice(x.row(base[s] + toks.len() - 1));
+        }
+        let fin = norm_fwd(&xl, param_1d(params, "final_ln"), eps, llama);
+        let logits = project(&fin.y, embed); // tied head: (W, V)
+        for (w, &s) in wanted.iter().enumerate() {
+            out[s] = Some(logits.row(w).to_vec());
+        }
+    }
+
+    for (cache, toks) in seqs.iter_mut() {
+        cache.len += toks.len();
+    }
+    Ok(out)
 }
 
 /// One Adam step (beta1 = 0.9, beta2 = 0.95, eps = 1e-8, no weight decay —
@@ -874,13 +1087,23 @@ fn attention_fwd(q: &Mat, k: &Mat, v: &Mat, b: usize, t_len: usize, h: usize,
 /// order), so the output row bit-matches the full forward's row `t`.
 fn attention_step(q: &Mat, kc: &Mat, vc: &Mat, t: usize, h: usize, dh: usize)
                   -> Mat {
+    let mut attn = Mat::zeros(1, h * dh);
+    attention_step_row(q.row(0), kc, vc, t, h, dh, attn.row_mut(0));
+    attn
+}
+
+/// The per-row body of [`attention_step`]: query row `qr` at position `t`
+/// against cached K/V, accumulated into the zeroed output row `out`.
+/// Shared by the single-sequence step and the batched [`decode_batch`]
+/// kernel, so every path produces identical bits per position.
+fn attention_step_row(qr: &[f32], kc: &Mat, vc: &Mat, t: usize, h: usize,
+                      dh: usize, out: &mut [f32]) {
     let d = h * dh;
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut attn = Mat::zeros(1, d);
     let mut prow = vec![0.0f32; t + 1];
     for hi in 0..h {
         let off = hi * dh;
-        let qrow = &q.row(0)[off..off + dh];
+        let qrow = &qr[off..off + dh];
         let mut maxv = f32::NEG_INFINITY;
         for u in 0..=t {
             let krow = &kc.data[u * d + off..u * d + off + dh];
@@ -898,7 +1121,7 @@ fn attention_step(q: &Mat, kc: &Mat, vc: &Mat, t: usize, h: usize, dh: usize)
         for u in 0..=t {
             prow[u] *= isum;
         }
-        let orow = &mut attn.data[off..off + dh];
+        let orow = &mut out[off..off + dh];
         for (u, &pu) in prow.iter().enumerate().take(t + 1) {
             if pu == 0.0 {
                 continue;
@@ -909,7 +1132,6 @@ fn attention_step(q: &Mat, kc: &Mat, vc: &Mat, t: usize, h: usize, dh: usize)
             }
         }
     }
-    attn
 }
 
 /// Backward of `attention_fwd`: gradients w.r.t. q, k, v (all (B·T, d)).

@@ -5,7 +5,9 @@
 //! the native kernels (`runtime::native`) and unpacks outputs into host
 //! types.  All request-path model math goes through here — batched prefill
 //! (`fwd` / `lowrank_fwd`), KV-cached incremental decode (`decode_step` /
-//! `lowrank_decode_step`), and the calibration passes, whose per-batch
+//! `lowrank_decode_step`), the batched serving advance (`decode_batch` /
+//! `lowrank_decode_batch`: chunked prompt prefill and across-slot step
+//! GEMMs in one kernel), and the calibration passes, whose per-batch
 //! work fans out across the `exec` pool with a fixed-order tree reduction.
 //! `Session` is `Sync` — the serving drain and the continuous-batching
 //! scheduler share one session across worker threads.
@@ -22,6 +24,7 @@ use crate::tensor::{IntTensor, Mat, Tensor};
 /// Per-site calibration statistics accumulated from the moments pass.
 #[derive(Clone, Debug)]
 pub struct SiteMoments {
+    /// whitening-site name these moments belong to
     pub site: String,
     /// Σ X Xᵀ over all calibration tokens (n×n)
     pub xx: Mat,
@@ -33,12 +36,16 @@ pub struct SiteMoments {
     pub count: usize,
 }
 
+/// Typed execution facade over one (runtime, model config) pair.
 pub struct Session<'rt> {
+    /// the artifact runtime every dispatch validates against
     pub rt: &'rt Runtime,
+    /// the model configuration this session executes
     pub cfg: ConfigMeta,
 }
 
 impl<'rt> Session<'rt> {
+    /// Session for the named manifest config.
     pub fn new(rt: &'rt Runtime, config: &str) -> Session<'rt> {
         Session { rt, cfg: rt.manifest.config(config).clone() }
     }
@@ -265,7 +272,7 @@ impl<'rt> Session<'rt> {
     }
 
     /// One dense KV-cached decode step: `token` at position `cache.len` →
-    /// next-token logits (shape [V]).  Uses the b1 artifact when the config
+    /// next-token logits (shape `[V]`).  Uses the b1 artifact when the config
     /// ships one (decode is single-sequence per slot), else the batch
     /// artifact's graph.
     ///
@@ -319,5 +326,74 @@ impl<'rt> Session<'rt> {
         let logits =
             native::decode_step(&self.cfg, params, Some(factors), cache, token)?;
         Ok(Tensor::from_vec(&[self.cfg.vocab], logits))
+    }
+
+    /// Batched dense KV-cached advance: every sequence's token run flows
+    /// through ONE set of per-layer GEMMs (`native::decode_batch`) and each
+    /// sequence with `want_logits[s]` set gets back the next-token logits
+    /// after its last token (shape `[V]`; `None` for unrequested sequences
+    /// — interior prefill chunks skip the vocab projection).  Covers
+    /// chunked prefill (one sequence, many tokens) and
+    /// batched-across-slots decode (many sequences, one token each);
+    /// results bit-match per-token [`Session::decode_step`] calls for any
+    /// grouping and thread count.
+    ///
+    /// ABI validation runs when the call contains a sequence at its FIRST
+    /// position, exactly like `decode_step`'s per-sequence policy.
+    pub fn decode_batch(&self, params: &ParamStore,
+                        seqs: &mut [(&mut KvCache, &[i32])],
+                        want_logits: &[bool])
+                        -> Result<Vec<Option<Tensor>>> {
+        if seqs.iter().any(|(c, _)| c.len == 0) {
+            let file = self
+                .cfg
+                .fwd_b1
+                .as_ref()
+                .map(|a| a.file.as_str())
+                .unwrap_or(&self.cfg.fwd.file);
+            self.rt.mark_compiled(file);
+            params.check_matches(&self.cfg)?;
+        }
+        let logits =
+            native::decode_batch(&self.cfg, params, None, seqs, want_logits)?;
+        Ok(logits
+            .into_iter()
+            .map(|l| l.map(|l| Tensor::from_vec(&[self.cfg.vocab], l)))
+            .collect())
+    }
+
+    /// Batched low-rank (fused-path) KV-cached advance at ratio tag `tag` —
+    /// the low-rank sibling of [`Session::decode_batch`].  Factor
+    /// validation matches [`Session::lowrank_decode_step`] and runs when
+    /// the call contains a sequence at its first position.
+    pub fn lowrank_decode_batch(&self, tag: &str, params: &ParamStore,
+                                factors: &BTreeMap<String, (Mat, Mat)>,
+                                seqs: &mut [(&mut KvCache, &[i32])],
+                                want_logits: &[bool])
+                                -> Result<Vec<Option<Tensor>>> {
+        if seqs.iter().any(|(c, _)| c.len == 0) {
+            let lm = self
+                .cfg
+                .lowrank
+                .get(tag)
+                .ok_or_else(|| anyhow::anyhow!("no lowrank artifact `{tag}`"))?;
+            self.rt.mark_compiled(&lm.art.file);
+            for t in &self.cfg.targets {
+                let k_art = lm.ranks[&t.name];
+                let (wu, wv) = factors.get(&t.name).ok_or_else(|| {
+                    anyhow::anyhow!("missing factors for {}", t.name)
+                })?;
+                ensure!(wu.cols == wv.rows, "factor rank mismatch for {}", t.name);
+                ensure!(wu.cols <= k_art,
+                        "{}: rank {} exceeds artifact rank {k_art}",
+                        t.name, wu.cols);
+            }
+        }
+        let logits = native::decode_batch(&self.cfg, params, Some(factors),
+                                          seqs, want_logits)?;
+        Ok(logits
+            .into_iter()
+            .map(|l| l.map(|l| Tensor::from_vec(&[self.cfg.vocab], l)))
+            .collect())
     }
 }

@@ -33,12 +33,20 @@ use crate::util::stats::LatencySummary;
 
 /// Which executable serves the requests.
 pub enum Engine {
+    /// the uncompressed weights through the dense graphs
     Dense,
-    /// low-rank artifact tag ("60", "40", "60_b1", ...) + factors
-    Lowrank { tag: String, factors: BTreeMap<String, (Mat, Mat)> },
+    /// low-rank factors through the fused graphs
+    Lowrank {
+        /// artifact tag ("60", "40", "60_b1", ...)
+        tag: String,
+        /// per-target `(Wu, Wv)` factors
+        factors: BTreeMap<String, (Mat, Mat)>,
+    },
 }
 
 impl Engine {
+    /// Low-rank engine straight from a plan's factors (ranks must already
+    /// fit the artifact).
     pub fn from_plan(tag: &str, plan: &CompressionPlan) -> Engine {
         Engine::Lowrank { tag: tag.to_string(), factors: plan.factors() }
     }
@@ -73,6 +81,7 @@ impl Engine {
         Engine::Lowrank { tag: tag.to_string(), factors }
     }
 
+    /// Table-row label (`dense` / `lowrank-r<tag>`).
     pub fn label(&self) -> String {
         match self {
             Engine::Dense => "dense".into(),
@@ -81,12 +90,16 @@ impl Engine {
     }
 }
 
+/// Shape of one prefill-serving benchmark run.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
+    /// requests in the closed-loop workload
     pub n_requests: usize,
+    /// largest batch the drain assembles
     pub max_batch: usize,
     /// mean inter-arrival gap in units of one batch-forward; < 1 saturates
     pub arrival_factor: f64,
+    /// arrival-jitter seed
     pub seed: u64,
     /// drain workers; 1 = the classic serial loop, >1 overlaps batch
     /// execution with admission on scoped threads
@@ -100,12 +113,18 @@ impl Default for ServeConfig {
     }
 }
 
+/// Aggregate result of one prefill-serving benchmark run.
 #[derive(Clone, Debug)]
 pub struct ServeStats {
+    /// engine label
     pub engine: String,
+    /// requests served
     pub requests: usize,
+    /// prompt tokens processed
     pub tokens: usize,
+    /// whole-run wall time, seconds
     pub wall_seconds: f64,
+    /// tokens over the full wall clock
     pub tokens_per_sec: f64,
     /// request latency summary (arrival → completion), ms
     pub latency: LatencySummary,

@@ -28,6 +28,7 @@ pub enum PushError<T> {
 /// them and drop it at shutdown.
 #[derive(Debug)]
 pub enum PopState<T> {
+    /// an item was dequeued
     Item(T),
     /// empty but still open: more work may arrive
     Empty,
@@ -40,6 +41,8 @@ struct Inner<T> {
     closed: bool,
 }
 
+/// Bounded FIFO with explicit close semantics — the server's admission
+/// queue (full ⇒ structured `overloaded`, closed ⇒ `shutting_down`).
 pub struct BoundedQueue<T> {
     depth: usize,
     inner: Mutex<Inner<T>>,
@@ -47,6 +50,7 @@ pub struct BoundedQueue<T> {
 }
 
 impl<T> BoundedQueue<T> {
+    /// Queue admitting at most `depth` items at a time (depth >= 1).
     pub fn new(depth: usize) -> BoundedQueue<T> {
         assert!(depth >= 1, "admission queue needs depth >= 1");
         BoundedQueue {
@@ -56,6 +60,7 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// The configured admission bound.
     pub fn depth(&self) -> usize {
         self.depth
     }
@@ -95,14 +100,17 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         self.lock().items.len()
     }
 
+    /// True when nothing is queued right now.
     pub fn is_empty(&self) -> bool {
         self.lock().items.is_empty()
     }
 
+    /// True once `close` has been called.
     pub fn is_closed(&self) -> bool {
         self.lock().closed
     }

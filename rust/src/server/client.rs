@@ -16,6 +16,8 @@ pub fn scripted_prompt(k: usize, len: usize, vocab: usize) -> Vec<i32> {
     (0..len).map(|j| (1 + (k * 31 + j * 7) % (v - 1)) as i32).collect()
 }
 
+/// Blocking wire client with stream-discipline checks — the scripted CLI
+/// driver, the loopback tests, and the server bench all speak through it.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -24,20 +26,31 @@ pub struct Client {
 /// Outcome of one blocking generation round-trip.
 #[derive(Clone, Debug)]
 pub enum GenerateOutcome {
+    /// the request completed; summary + streamed tokens
     Done(GenerationResult),
     /// structured rejection (`overloaded`, `bad_request`, `shutting_down`)
-    Rejected { code: String, message: String },
+    Rejected {
+        /// structured error code
+        code: String,
+        /// human-readable detail
+        message: String,
+    },
 }
 
+/// One completed generation as the client observed it.
 #[derive(Clone, Debug)]
 pub struct GenerationResult {
     /// final tokens from the `done` summary
     pub tokens: Vec<i32>,
     /// tokens as they streamed in (`run_generate` asserts == `tokens`)
     pub streamed: Vec<i32>,
+    /// prompt length the server accounted
     pub prompt_len: usize,
+    /// admission-queue wait, ms
     pub queue_ms: f64,
+    /// time to first token, ms
     pub ttft_ms: f64,
+    /// end-to-end latency, ms
     pub latency_ms: f64,
 }
 
@@ -46,6 +59,7 @@ fn bad_data(msg: String) -> io::Error {
 }
 
 impl Client {
+    /// Connect to a running server.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let writer = stream.try_clone()?;

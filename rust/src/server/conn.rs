@@ -51,8 +51,10 @@ pub struct ServerConfig {
     /// admission-queue depth; requests beyond it get `overloaded`
     pub queue_depth: usize,
     /// scheduler shape + per-request defaults (slots, default generation
-    /// budget, default temperature, engine seed; `arrival_steps` is unused
-    /// here — arrivals are real network events)
+    /// budget, default temperature, engine seed, and the chunked-prefill
+    /// budget `prefill_chunk` — large prompts ingest in bounded chunks that
+    /// interleave with ongoing decode steps instead of stalling the batch;
+    /// `arrival_steps` is unused here — arrivals are real network events)
     pub decode: DecodeConfig,
 }
 
@@ -70,10 +72,15 @@ impl Default for ServerConfig {
 /// snapshot over the wire).
 #[derive(Clone, Debug)]
 pub struct ServerStats {
+    /// engine label (`dense` / `lowrank-r<tag>`)
     pub engine: String,
+    /// the decode engine's aggregate counters
     pub counters: EngineCounters,
+    /// connections accepted over the run
     pub connections: u64,
+    /// requests admitted into the queue
     pub requests_admitted: u64,
+    /// requests rejected (overloaded / shutting down)
     pub requests_rejected: u64,
     /// end-to-end request latency (enqueue → completion), ms
     pub e2e: LatencySummary,

@@ -34,6 +34,8 @@ impl Ring {
     }
 }
 
+/// Process-lifetime counter + latency-reservoir registry, wire-queryable
+/// through the `metrics` request.
 pub struct Metrics {
     started: Instant,
     counters: Mutex<BTreeMap<&'static str, u64>>,
@@ -47,6 +49,7 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Empty registry; uptime starts now.
     pub fn new() -> Metrics {
         Metrics {
             started: Instant::now(),
@@ -55,11 +58,13 @@ impl Metrics {
         }
     }
 
+    /// Add `by` to the named counter (created at zero on first use).
     pub fn inc(&self, name: &'static str, by: u64) {
         let mut m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
         *m.entry(name).or_insert(0) += by;
     }
 
+    /// Current value of the named counter (0 if never incremented).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters
             .lock()
@@ -84,6 +89,7 @@ impl Metrics {
             .unwrap_or_default()
     }
 
+    /// Seconds since the registry was created.
     pub fn uptime_secs(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
     }

@@ -13,16 +13,20 @@
 
 use crate::util::json::{self, Json};
 
-/// Structured error codes carried by [`Event::Error`].
+/// Structured error code carried by [`Event::Error`]: admission queue full.
 pub const ERR_OVERLOADED: &str = "overloaded";
+/// Structured error code: malformed or invalid request.
 pub const ERR_BAD_REQUEST: &str = "bad_request";
+/// Structured error code: server is draining and admits no new work.
 pub const ERR_SHUTTING_DOWN: &str = "shutting_down";
 
 /// One generation request.  `id` is client-chosen and echoed verbatim on
 /// every event for this request (scope: one connection).
 #[derive(Clone, Debug, PartialEq)]
 pub struct GenerateReq {
+    /// client-chosen request id, echoed on every event
     pub id: u64,
+    /// prompt token ids (validated against the model's vocab)
     pub prompt: Vec<i32>,
     /// 0 = use the server's default budget
     pub max_new_tokens: usize,
@@ -34,6 +38,7 @@ pub struct GenerateReq {
 }
 
 impl GenerateReq {
+    /// Wire form of the request.
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("type", Json::str("generate")),
@@ -55,6 +60,7 @@ impl GenerateReq {
 /// Client → server messages.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
+    /// start one generation
     Generate(GenerateReq),
     /// ask for a metrics snapshot ([`Event::Metrics`] reply)
     Metrics,
@@ -73,6 +79,7 @@ pub fn request_line(r: &Request) -> String {
     }
 }
 
+/// Parse one request line; the error string becomes a `bad_request` reply.
 pub fn parse_request(line: &str) -> Result<Request, String> {
     let j = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
     match j.get("type").and_then(Json::as_str) {
@@ -116,20 +123,39 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Event {
     /// one streamed token, emitted as it is sampled
-    Token { id: u64, index: usize, token: i32 },
+    Token {
+        /// client-chosen request id
+        id: u64,
+        /// 0-based position in this request's generation
+        index: usize,
+        /// the sampled token id
+        token: i32,
+    },
     /// final summary for a request, after its last `Token`
     Done {
+        /// client-chosen request id
         id: u64,
+        /// every generated token, in order
         tokens: Vec<i32>,
+        /// prompt length the server accounted
         prompt_len: usize,
-        /// latency breakdown, ms: queue wait / first token / end-to-end
+        /// admission-queue wait, ms
         queue_ms: f64,
+        /// time to first token, ms
         ttft_ms: f64,
+        /// end-to-end latency, ms
         latency_ms: f64,
     },
     /// structured rejection or protocol error; `id` present when the error
     /// is attributable to one request
-    Error { id: Option<u64>, code: String, message: String },
+    Error {
+        /// client-chosen request id, when attributable
+        id: Option<u64>,
+        /// structured code (`overloaded`, `bad_request`, `shutting_down`)
+        code: String,
+        /// human-readable detail
+        message: String,
+    },
     /// metrics snapshot (the whole registry object)
     Metrics(Json),
     /// the server acknowledged shutdown / is closing this connection
@@ -178,6 +204,7 @@ pub fn event_line(e: &Event) -> String {
     }
 }
 
+/// Parse one event line (the client side of the wire).
 pub fn parse_event(line: &str) -> Result<Event, String> {
     let j = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
     // own the tag: the `metrics` arm moves `j` whole, so the scrutinee must

@@ -11,21 +11,27 @@ use crate::util::rng::Rng;
 /// Row-major dense f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// row count
     pub rows: usize,
+    /// column count
     pub cols: usize,
+    /// row-major element storage, `rows * cols` long
     pub data: Vec<f32>,
 }
 
 impl Mat {
+    /// All-zero matrix of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Mat {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Wrap an existing row-major buffer; panics on a length mismatch.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
         assert_eq!(data.len(), rows * cols, "Mat::from_vec shape mismatch");
         Mat { rows, cols, data }
     }
 
+    /// The n-by-n identity.
     pub fn eye(n: usize) -> Mat {
         let mut m = Mat::zeros(n, n);
         for i in 0..n {
@@ -34,29 +40,34 @@ impl Mat {
         m
     }
 
+    /// I.i.d. normal entries with mean 0 and the given std.
     pub fn randn(rng: &mut Rng, rows: usize, cols: usize, std: f32) -> Mat {
         let mut m = Mat::zeros(rows, cols);
         rng.fill_normal(&mut m.data, 0.0, std);
         m
     }
 
+    /// Element (r, c).
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f32 {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
 
+    /// Mutable element (r, c).
     #[inline]
     pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
         debug_assert!(r < self.rows && c < self.cols);
         &mut self.data[r * self.cols + c]
     }
 
+    /// Row `r` as a contiguous slice.
     #[inline]
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Row `r` as a mutable contiguous slice.
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
@@ -68,6 +79,7 @@ impl Mat {
         self.row_mut(r).copy_from_slice(src);
     }
 
+    /// Materialized transpose.
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         // blocked transpose for cache friendliness on larger matrices
@@ -84,12 +96,14 @@ impl Mat {
         out
     }
 
+    /// Multiply every element by `s` in place.
     pub fn scale(&mut self, s: f32) {
         for v in &mut self.data {
             *v *= s;
         }
     }
 
+    /// Elementwise `self += other`; shapes must match.
     pub fn add_assign(&mut self, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         for (a, b) in self.data.iter_mut().zip(&other.data) {
@@ -97,18 +111,21 @@ impl Mat {
         }
     }
 
+    /// Elementwise difference `self - other`; shapes must match.
     pub fn sub(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
         Mat { rows: self.rows, cols: self.cols, data }
     }
 
+    /// Elementwise sum `self + other`; shapes must match.
     pub fn add(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
         Mat { rows: self.rows, cols: self.cols, data }
     }
 
+    /// Copy of `self` with every element multiplied by `s`.
     pub fn scaled(&self, s: f32) -> Mat {
         let mut out = self.clone();
         out.scale(s);
@@ -125,6 +142,7 @@ impl Mat {
             .sum()
     }
 
+    /// Frobenius norm, accumulated in f64.
     pub fn frob_norm(&self) -> f64 {
         self.dot(self).sqrt()
     }
@@ -137,10 +155,12 @@ impl Mat {
         }
     }
 
+    /// The main diagonal (length `min(rows, cols)`).
     pub fn diag(&self) -> Vec<f32> {
         (0..self.rows.min(self.cols)).map(|i| self.at(i, i)).collect()
     }
 
+    /// True when every element is finite (no NaN / infinity).
     pub fn is_finite(&self) -> bool {
         self.data.iter().all(|v| v.is_finite())
     }
@@ -150,30 +170,39 @@ impl Mat {
 // Tensor (n-D f32) and IntTensor (n-D i32)
 // ---------------------------------------------------------------------------
 
+/// N-dimensional f32 tensor (row-major), the parameter/activation type of
+/// the native runtime and the checkpoint format.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// dimensions, outermost first; empty = scalar
     pub shape: Vec<usize>,
+    /// row-major element storage
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// 0-dimensional tensor holding one value.
     pub fn scalar(v: f32) -> Tensor {
         Tensor { shape: vec![], data: vec![v] }
     }
 
+    /// Wrap an existing buffer; panics on a length mismatch.
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(data.len(), shape.iter().product::<usize>());
         Tensor { shape: shape.to_vec(), data }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True for a zero-element tensor (some dimension is 0).
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -184,23 +213,29 @@ impl Tensor {
         Mat::from_vec(self.shape[0], self.shape[1], self.data.clone())
     }
 
+    /// Copy a `Mat` into a 2-D tensor.
     pub fn from_mat(m: &Mat) -> Tensor {
         Tensor { shape: vec![m.rows, m.cols], data: m.data.clone() }
     }
 }
 
+/// N-dimensional i32 tensor — token id buffers for the model graphs.
 #[derive(Clone, Debug, PartialEq)]
 pub struct IntTensor {
+    /// dimensions, outermost first; empty = scalar
     pub shape: Vec<usize>,
+    /// row-major element storage
     pub data: Vec<i32>,
 }
 
 impl IntTensor {
+    /// Wrap an existing buffer; panics on a length mismatch.
     pub fn from_vec(shape: &[usize], data: Vec<i32>) -> IntTensor {
         assert_eq!(data.len(), shape.iter().product::<usize>());
         IntTensor { shape: shape.to_vec(), data }
     }
 
+    /// 0-dimensional tensor holding one value.
     pub fn scalar(v: i32) -> IntTensor {
         IntTensor { shape: vec![], data: vec![v] }
     }

@@ -12,12 +12,18 @@ use crate::model::{init, ParamStore};
 use crate::runtime::session::Session;
 use crate::util::rng::Rng;
 
+/// Pretraining hyper-parameters.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Adam steps
     pub steps: usize,
+    /// peak learning rate (warmup + cosine decay)
     pub lr: f32,
+    /// linear-warmup steps
     pub warmup: usize,
+    /// data-order / init seed
     pub seed: u64,
+    /// progress-log interval in steps
     pub log_every: usize,
 }
 
@@ -38,8 +44,11 @@ pub fn lr_at(cfg: &TrainConfig, step: usize) -> f32 {
     }
 }
 
+/// Outcome of one training run.
 pub struct TrainResult {
+    /// the trained weights
     pub params: ParamStore,
+    /// per-step training losses
     pub losses: Vec<f32>,
 }
 

@@ -9,8 +9,11 @@ use std::time::Instant;
 
 use super::stats::{summarize, Summary};
 
+/// Warmup-then-measure micro-benchmark loop.
 pub struct Bench {
+    /// untimed warmup iterations
     pub warmup: usize,
+    /// timed iterations
     pub iters: usize,
 }
 
@@ -24,11 +27,13 @@ impl Default for Bench {
     }
 }
 
+/// True when `ZS_BENCH_FAST=1` — benches shrink workloads for CI smoke.
 pub fn fast_mode() -> bool {
     std::env::var("ZS_BENCH_FAST").map(|v| v != "0").unwrap_or(false)
 }
 
 impl Bench {
+    /// Bench with explicit warmup/measure iteration counts.
     pub fn new(warmup: usize, iters: usize) -> Self {
         Bench { warmup, iters }
     }
@@ -62,6 +67,7 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
     (out, t0.elapsed().as_secs_f64())
 }
 
+/// Human duration: ns/µs/ms/s with three significant digits.
 pub fn fmt_duration(secs: f64) -> String {
     if secs < 1e-3 {
         format!("{:.1} us", secs * 1e6)

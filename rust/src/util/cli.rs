@@ -6,19 +6,24 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// first bare token (the subcommand), if any
     pub subcommand: Option<String>,
+    /// bare tokens after the subcommand
     pub positional: Vec<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
 }
 
 impl Args {
+    /// Parse the process arguments (argv[0] skipped).
     pub fn parse_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Parse an explicit token stream (tests, scripting).
     pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
         let mut out = Args::default();
         let mut iter = items.into_iter().peekable();
@@ -46,30 +51,39 @@ impl Args {
         out
     }
 
+    /// True when `--name` appeared with no value.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name <value>` / `--name=<value>`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// String option with a default.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// usize option, defaulting when the flag is absent (an unparsable
+    /// value panics with the flag name — misuse, not a runtime condition).
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got `{v}`")))
             .unwrap_or(default)
     }
 
+    /// u64 option, defaulting when the flag is absent (an unparsable
+    /// value panics with the flag name — misuse, not a runtime condition).
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got `{v}`")))
             .unwrap_or(default)
     }
 
+    /// f64 option, defaulting when the flag is absent (an unparsable
+    /// value panics with the flag name — misuse, not a runtime condition).
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants a number, got `{v}`")))
@@ -87,6 +101,7 @@ impl Args {
         }
     }
 
+    /// Comma-separated string-list option with a default.
     pub fn str_list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
         match self.get(name) {
             None => default.iter().map(|s| s.to_string()).collect(),

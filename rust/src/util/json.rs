@@ -7,18 +7,26 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A parsed JSON value.  Numbers are kept as f64 (the JSON model).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// any JSON number
     Num(f64),
+    /// a string
     Str(String),
+    /// an array
     Arr(Vec<Json>),
+    /// an object (sorted keys — deterministic serialization)
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ---------------- accessors ----------------
+    /// Object field lookup; `None` for non-objects and missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -33,6 +41,7 @@ impl Json {
             .unwrap_or_else(|| panic!("missing json key `{key}` in {self:.0?}"))
     }
 
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -40,6 +49,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -47,10 +57,12 @@ impl Json {
         }
     }
 
+    /// The numeric payload truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -58,6 +70,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -65,18 +78,22 @@ impl Json {
         }
     }
 
+    /// String field with a default for missing/mistyped values.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).and_then(Json::as_str).unwrap_or(default).to_string()
     }
 
+    /// Numeric field with a default for missing/mistyped values.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(Json::as_f64).unwrap_or(default)
     }
 
+    /// usize field with a default for missing/mistyped values.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(Json::as_usize).unwrap_or(default)
     }
 
+    /// Bool field with a default for missing/mistyped values.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         match self.get(key) {
             Some(Json::Bool(b)) => *b,
@@ -93,29 +110,35 @@ impl Json {
     }
 
     // ---------------- constructors ----------------
+    /// Object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Array from any iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Number value.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
 
+    /// String value.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
 
     // ---------------- serialization ----------------
+    /// Compact single-line serialization.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, false);
         out
     }
 
+    /// Indented multi-line serialization.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, true);
@@ -199,6 +222,7 @@ fn write_escaped(out: &mut String, s: &str) {
 
 // ---------------- parsing ----------------
 
+/// Parse one complete JSON document (trailing data is an error).
 pub fn parse(input: &str) -> Result<Json, String> {
     let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
     p.skip_ws();
@@ -210,6 +234,7 @@ pub fn parse(input: &str) -> Result<Json, String> {
     Ok(v)
 }
 
+/// Read and parse a JSON file, prefixing errors with the path.
 pub fn parse_file(path: &std::path::Path) -> Result<Json, String> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| format!("read {}: {e}", path.display()))?;

@@ -7,6 +7,7 @@
 
 use super::rng::Rng;
 
+/// Default random cases per property test.
 pub const DEFAULT_CASES: usize = 64;
 
 /// Run `check(gen(rng))` for `cases` deterministic seeds; panic with the

@@ -19,6 +19,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seeded stream (SplitMix64-initialized xoshiro-style state).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm),
@@ -30,6 +31,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -50,6 +52,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform f32 in [0, 1).
     pub fn uniform_f32(&mut self) -> f32 {
         self.uniform() as f32
     }
@@ -87,6 +90,7 @@ impl Rng {
         }
     }
 
+    /// One normal draw (Box–Muller).
     pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
         mean + std * self.normal() as f32
     }

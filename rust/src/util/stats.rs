@@ -11,6 +11,7 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Fold one sample into the running moments.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -18,18 +19,22 @@ impl Welford {
         self.m2 += d * (x - self.mean);
     }
 
+    /// Samples folded in so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0 before any sample).
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Unbiased sample variance (0 with fewer than two samples).
     pub fn var(&self) -> f64 {
         if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
@@ -38,16 +43,25 @@ impl Welford {
 /// Summary of a sample: mean/std/median/p95/p99/min/max.
 #[derive(Clone, Debug)]
 pub struct Summary {
+    /// sample count
     pub n: usize,
+    /// arithmetic mean
     pub mean: f64,
+    /// sample standard deviation
     pub std: f64,
+    /// 50th percentile
     pub median: f64,
+    /// 95th percentile
     pub p95: f64,
+    /// 99th percentile
     pub p99: f64,
+    /// smallest sample
     pub min: f64,
+    /// largest sample
     pub max: f64,
 }
 
+/// Full summary of a non-empty sample.
 pub fn summarize(xs: &[f64]) -> Summary {
     assert!(!xs.is_empty());
     let mut sorted = xs.to_vec();
@@ -74,11 +88,17 @@ pub fn summarize(xs: &[f64]) -> Summary {
 /// which percentiles exist.  Values are milliseconds.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct LatencySummary {
+    /// sample count
     pub n: usize,
+    /// arithmetic mean, ms
     pub mean: f64,
+    /// 50th percentile, ms
     pub p50: f64,
+    /// 95th percentile, ms
     pub p95: f64,
+    /// 99th percentile, ms
     pub p99: f64,
+    /// largest sample, ms
     pub max: f64,
 }
 

@@ -1,16 +1,24 @@
 //! Decode parity gate + continuous-batching contract.
 //!
-//! The parity half proves the headline invariant of the decode subsystem:
-//! for a fixed prefix, the KV-cached incremental path reproduces the full
-//! forward's last-token logits BIT-EXACTLY, for threads {1, 2, 4}, on both
-//! the dense and the low-rank engines.  Everything thread-global lives in
-//! ONE test function (`exec::set_threads` is process-wide, same pattern as
+//! The parity half proves the headline invariants of the decode subsystem:
+//!
+//! * for a fixed prefix, the KV-cached incremental path reproduces the full
+//!   forward's last-token logits BIT-EXACTLY, for threads {1, 2, 4}, on
+//!   both the dense and the low-rank engines;
+//! * the batched `decode_batch` kernel reproduces the token-at-a-time
+//!   `decode_step` reference BIT-EXACTLY for every prefill chunking
+//!   (chunk sizes {1, 3, full} leave identical KV contents and logits) and
+//!   for every across-slot batch composition, at threads {1, 4}.
+//!
+//! Everything thread-global lives in ONE test function per sweep
+//! (`exec::set_threads` is process-wide, same pattern as
 //! `parallel_equiv.rs`); the scheduler tests rely only on results that are
 //! thread-count independent by construction.
 
 use std::collections::BTreeMap;
 
-use zs_svd::decode::{run_decode, synth_requests, DecodeConfig, DecodeRequest};
+use zs_svd::decode::{run_decode, synth_requests, DecodeConfig, DecodeRequest,
+                     KvCache};
 use zs_svd::exec;
 use zs_svd::model::init::init_params;
 use zs_svd::runtime::session::Session;
@@ -107,15 +115,177 @@ fn decode_matches_forward_on_opt_arch() {
 }
 
 #[test]
+fn chunked_prefill_bitmatches_token_at_a_time() {
+    let rt = Runtime::load_default().unwrap();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(0xC4A);
+    let params = init_params(&sess.cfg, &mut rng);
+    let tag = "60";
+    let factors = synthetic_factors(&sess, tag, &mut rng);
+    let d = sess.cfg.d_model;
+
+    // prompt length indivisible by 3 so the last chunk is ragged
+    let plen = 11usize;
+    let prompt: Vec<i32> = (0..plen)
+        .map(|_| rng.range(1, sess.cfg.vocab) as i32)
+        .collect();
+
+    for threads in [1usize, 4] {
+        exec::set_threads(threads);
+        // token-at-a-time reference through the incremental step kernel
+        let mut ref_dense = sess.new_kv_cache();
+        let mut ref_lr = sess.new_kv_cache();
+        let mut ref_dense_logits = None;
+        let mut ref_lr_logits = None;
+        for &t in &prompt {
+            ref_dense_logits =
+                Some(sess.decode_step(&params, &mut ref_dense, t).unwrap());
+            ref_lr_logits = Some(
+                sess.lowrank_decode_step(tag, &params, &factors, &mut ref_lr, t)
+                    .unwrap(),
+            );
+        }
+
+        for chunk in [1usize, 3, plen] {
+            let mut dense_cache = sess.new_kv_cache();
+            let mut lr_cache = sess.new_kv_cache();
+            let mut dense_logits = None;
+            let mut lr_logits = None;
+            let mut pos = 0usize;
+            while pos < plen {
+                let end = (pos + chunk).min(plen);
+                // logits are requested only for the prompt-completing
+                // chunk, exactly as the scheduler drives prefill
+                let last = end == plen;
+                {
+                    let mut seqs =
+                        vec![(&mut dense_cache, &prompt[pos..end])];
+                    let got = sess.decode_batch(&params, &mut seqs, &[last])
+                        .unwrap()
+                        .remove(0);
+                    assert_eq!(got.is_some(), last,
+                               "logits exactly when requested");
+                    if last {
+                        dense_logits = got;
+                    }
+                }
+                {
+                    let mut seqs = vec![(&mut lr_cache, &prompt[pos..end])];
+                    let got = sess
+                        .lowrank_decode_batch(tag, &params, &factors,
+                                              &mut seqs, &[last])
+                        .unwrap()
+                        .remove(0);
+                    assert_eq!(got.is_some(), last,
+                               "logits exactly when requested");
+                    if last {
+                        lr_logits = got;
+                    }
+                }
+                pos = end;
+            }
+            assert_eq!(dense_cache.len, plen);
+            assert_eq!(lr_cache.len, plen);
+            // the final chunk's logits are the last prompt position's
+            assert_eq!(dense_logits.unwrap().data,
+                       ref_dense_logits.as_ref().unwrap().data,
+                       "dense chunk {chunk} logits @ {threads} threads");
+            assert_eq!(lr_logits.unwrap().data,
+                       ref_lr_logits.as_ref().unwrap().data,
+                       "lowrank chunk {chunk} logits @ {threads} threads");
+            // and every K/V row written along the way is identical too
+            for li in 0..sess.cfg.n_layers {
+                assert_eq!(&dense_cache.k[li].data[..plen * d],
+                           &ref_dense.k[li].data[..plen * d],
+                           "dense K layer {li} chunk {chunk}");
+                assert_eq!(&dense_cache.v[li].data[..plen * d],
+                           &ref_dense.v[li].data[..plen * d],
+                           "dense V layer {li} chunk {chunk}");
+                assert_eq!(&lr_cache.k[li].data[..plen * d],
+                           &ref_lr.k[li].data[..plen * d],
+                           "lowrank K layer {li} chunk {chunk}");
+                assert_eq!(&lr_cache.v[li].data[..plen * d],
+                           &ref_lr.v[li].data[..plen * d],
+                           "lowrank V layer {li} chunk {chunk}");
+            }
+        }
+    }
+    exec::set_threads(0);
+}
+
+#[test]
+fn batched_slots_bitmatch_per_slot_steps() {
+    let rt = Runtime::load_default().unwrap();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(0xBA7C);
+    let params = init_params(&sess.cfg, &mut rng);
+
+    // teacher-forced token streams of unequal length, so the batch
+    // composition changes as short streams finish
+    let lens = [6usize, 9, 3];
+    let streams: Vec<Vec<i32>> = lens
+        .iter()
+        .map(|&n| {
+            (0..n).map(|_| rng.range(1, sess.cfg.vocab) as i32).collect()
+        })
+        .collect();
+
+    for threads in [1usize, 4] {
+        exec::set_threads(threads);
+        // per-slot reference: each stream through its own decode_step calls
+        let ref_logits: Vec<Vec<zs_svd::tensor::Tensor>> = streams
+            .iter()
+            .map(|st| {
+                let mut c = sess.new_kv_cache();
+                st.iter()
+                    .map(|&t| sess.decode_step(&params, &mut c, t).unwrap())
+                    .collect()
+            })
+            .collect();
+
+        // batched: step j advances every still-live stream by one token
+        // through ONE decode_batch call
+        let mut caches: Vec<KvCache> =
+            (0..streams.len()).map(|_| sess.new_kv_cache()).collect();
+        let max_len = *lens.iter().max().unwrap();
+        for j in 0..max_len {
+            let mut live: Vec<usize> = Vec::new();
+            let mut seqs: Vec<(&mut KvCache, &[i32])> = Vec::new();
+            for (s, c) in caches.iter_mut().enumerate() {
+                if j < streams[s].len() {
+                    live.push(s);
+                    seqs.push((c, &streams[s][j..j + 1]));
+                }
+            }
+            let want = vec![true; seqs.len()];
+            let logits = sess.decode_batch(&params, &mut seqs, &want).unwrap();
+            assert_eq!(logits.len(), live.len());
+            for (b, &s) in live.iter().enumerate() {
+                assert_eq!(logits[b].as_ref().unwrap().data,
+                           ref_logits[s][j].data,
+                           "stream {s} step {j} @ {threads} threads: \
+                            batched-across-slots must bit-match per-slot");
+            }
+        }
+        for (s, c) in caches.iter().enumerate() {
+            assert_eq!(c.len, streams[s].len());
+        }
+    }
+    exec::set_threads(0);
+}
+
+#[test]
 fn continuous_batching_serves_every_request_exactly_once() {
     let rt = Runtime::load_default().unwrap();
     let sess = Session::new(&rt, "tiny");
     let mut rng = Rng::new(0xBA7);
     let params = init_params(&sess.cfg, &mut rng);
 
-    // saturating arrivals: 9 requests into 3 slots, all eligible at t=0
+    // saturating arrivals: 9 requests into 3 slots, all eligible at t=0;
+    // 12-token prompts over a 5-token prefill chunk exercise the ragged
+    // chunked-prefill path (5 + 5 + 2) under continuous batching
     let cfg = DecodeConfig { max_slots: 3, max_new_tokens: 4, temperature: 0.0,
-                             seed: 5, arrival_steps: 0.0 };
+                             seed: 5, arrival_steps: 0.0, prefill_chunk: 5 };
     let reqs = synth_requests(&sess.cfg, 9, 12, 4, 0xFEED);
     let (stats, done) = run_decode(&sess, &params, &Engine::Dense, &reqs, &cfg)
         .unwrap();
@@ -146,9 +316,10 @@ fn generation_is_reproducible_and_slot_count_invariant() {
     let params = init_params(&sess.cfg, &mut rng);
     let reqs = synth_requests(&sess.cfg, 5, 8, 6, 0xAB);
 
-    let run = |slots: usize, temperature: f32| {
+    let run = |slots: usize, temperature: f32, prefill_chunk: usize| {
         let cfg = DecodeConfig { max_slots: slots, max_new_tokens: 6,
-                                 temperature, seed: 11, arrival_steps: 0.0 };
+                                 temperature, seed: 11, arrival_steps: 0.0,
+                                 prefill_chunk };
         let (_, done) = run_decode(&sess, &params, &Engine::Dense, &reqs, &cfg)
             .unwrap();
         done.into_iter().map(|c| c.tokens).collect::<Vec<_>>()
@@ -156,10 +327,16 @@ fn generation_is_reproducible_and_slot_count_invariant() {
 
     // greedy and temperature sampling are both deterministic per request,
     // so tokens cannot depend on the slot count (scheduling) at all
-    assert_eq!(run(1, 0.0), run(4, 0.0));
-    assert_eq!(run(2, 0.8), run(3, 0.8));
+    assert_eq!(run(1, 0.0, 0), run(4, 0.0, 0));
+    assert_eq!(run(2, 0.8, 0), run(3, 0.8, 0));
     // and repeated runs reproduce exactly
-    assert_eq!(run(2, 0.8), run(2, 0.8));
+    assert_eq!(run(2, 0.8, 0), run(2, 0.8, 0));
+    // the prefill chunk size chooses WHEN prompt tokens are ingested,
+    // never what the model computes: any chunking reproduces the
+    // whole-prompt tokens exactly
+    assert_eq!(run(4, 0.0, 0), run(4, 0.0, 1));
+    assert_eq!(run(4, 0.0, 0), run(4, 0.0, 3));
+    assert_eq!(run(2, 0.8, 0), run(2, 0.8, 3));
 }
 
 #[test]
@@ -173,7 +350,8 @@ fn generation_respects_kv_capacity() {
     // prompt nearly fills the arena: the budget of 10 must be cut short
     let reqs = vec![DecodeRequest::new(0, vec![1i32; seq - 2], 10)];
     let cfg = DecodeConfig { max_slots: 1, max_new_tokens: 10,
-                             temperature: 0.0, seed: 1, arrival_steps: 0.0 };
+                             temperature: 0.0, seed: 1, arrival_steps: 0.0,
+                             prefill_chunk: 0 };
     let (stats, done) = run_decode(&sess, &params, &Engine::Dense, &reqs, &cfg)
         .unwrap();
     // prefill leaves 2 free positions; each decode step consumes one, and

@@ -3,9 +3,12 @@
 //! 1. **Loopback bit-match** — N concurrent TCP clients stream generations
 //!    that reproduce the offline `decode::run_decode` tokens BIT-EXACTLY
 //!    for the same prompts / temperatures / seeds, on both the dense and a
-//!    low-rank engine, at thread counts {1, 4}.  Everything thread-global
-//!    lives in one test function (`exec::set_threads` is process-wide, the
-//!    `parallel_equiv.rs` pattern).
+//!    low-rank engine, at thread counts {1, 4} and prefill chunk sizes
+//!    {1, 3, whole-prompt} (the offline reference always runs whole-prompt,
+//!    so the sweep also proves chunk-size invariance over the wire).
+//!    Everything thread-global lives in one test function
+//!    (`exec::set_threads` is process-wide, the `parallel_equiv.rs`
+//!    pattern).
 //! 2. **Backpressure** — with one slot busy and the admission queue full,
 //!    further requests get a structured `overloaded` reply (never a silent
 //!    drop), every admitted request completes exactly once, and the server
@@ -67,16 +70,18 @@ fn sampling_for(k: usize) -> (Option<f32>, Option<u64>) {
     }
 }
 
-/// One loopback round: serve `engine` over TCP, drive it with concurrent
-/// clients, and return the tokens each logical request streamed.
-fn serve_and_collect(sess: &Session, params: &ParamStore, engine: &Engine)
-                     -> Vec<(usize, Vec<i32>)> {
+/// One loopback round: serve `engine` over TCP at the given prefill chunk
+/// size, drive it with concurrent clients, and return the tokens each
+/// logical request streamed.
+fn serve_and_collect(sess: &Session, params: &ParamStore, engine: &Engine,
+                     prefill_chunk: usize) -> Vec<(usize, Vec<i32>)> {
     let vocab = sess.cfg.vocab;
     let cfg = ServerConfig {
         addr: "127.0.0.1:0".into(),
         queue_depth: 64,
         decode: DecodeConfig { max_slots: 3, max_new_tokens: MAX_NEW,
-                               temperature: 0.0, seed: 9, arrival_steps: 0.0 },
+                               temperature: 0.0, seed: 9, arrival_steps: 0.0,
+                               prefill_chunk },
     };
     let (tx, rx) = mpsc::channel::<SocketAddr>();
     let mut collected: Vec<(usize, Vec<i32>)> = Vec::new();
@@ -157,8 +162,11 @@ fn offline_reference(sess: &Session, params: &ParamStore, engine: &Engine)
             }
         })
         .collect();
+    // whole-prompt prefill: the fixed reference every chunked server run
+    // must reproduce
     let dc = DecodeConfig { max_slots: 3, max_new_tokens: MAX_NEW,
-                            temperature: 0.0, seed: 9, arrival_steps: 0.0 };
+                            temperature: 0.0, seed: 9, arrival_steps: 0.0,
+                            prefill_chunk: 0 };
     let (_, done) = run_decode(sess, params, engine, &reqs, &dc)
         .expect("offline decode");
     done.into_iter().map(|c| c.tokens).collect()
@@ -173,17 +181,24 @@ fn streamed_tokens_bitmatch_offline_for_both_engines() {
     let factors = synthetic_factors(&sess, "60", &mut rng);
     let lowrank = Engine::Lowrank { tag: "60".into(), factors };
 
+    // chunk sizes {1, 3, whole-prompt}: the offline reference is computed
+    // once per engine at whole-prompt prefill, so every chunked server run
+    // matching it proves both network parity AND chunk-size invariance
     for threads in [1usize, 4] {
         exec::set_threads(threads);
         for engine in [&Engine::Dense, &lowrank] {
-            let served = serve_and_collect(&sess, &params, engine);
             let offline = offline_reference(&sess, &params, engine);
-            assert_eq!(served.len(), CLIENTS * PER_CLIENT);
-            for (k, tokens) in &served {
-                assert_eq!(tokens, &offline[*k],
-                           "engine {} request {k} @ {threads} threads: \
-                            network generation must bit-match offline",
-                           engine.label());
+            for prefill_chunk in [1usize, 3, 0] {
+                let served =
+                    serve_and_collect(&sess, &params, engine, prefill_chunk);
+                assert_eq!(served.len(), CLIENTS * PER_CLIENT);
+                for (k, tokens) in &served {
+                    assert_eq!(tokens, &offline[*k],
+                               "engine {} request {k} @ {threads} threads, \
+                                prefill chunk {prefill_chunk}: network \
+                                generation must bit-match offline",
+                               engine.label());
+                }
             }
         }
     }
@@ -205,7 +220,8 @@ fn queue_full_gets_overloaded_and_server_stays_live() {
         addr: "127.0.0.1:0".into(),
         queue_depth: 1,
         decode: DecodeConfig { max_slots: 1, max_new_tokens: 24,
-                               temperature: 0.0, seed: 3, arrival_steps: 0.0 },
+                               temperature: 0.0, seed: 3, arrival_steps: 0.0,
+                               prefill_chunk: 0 },
     };
     let (tx, rx) = mpsc::channel::<SocketAddr>();
 
