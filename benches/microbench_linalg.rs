@@ -2,21 +2,112 @@
 //! Cholesky, triangular solves, matmul) at the shapes the shipped configs
 //! actually hit — the profile driving the §Perf optimization pass — plus
 //! the thread-scaling sweep for the `exec` parallel subsystem (parallel
-//! matmul and `decompose_all` at 1/2/4 workers, with speedups vs serial).
+//! matmul and `decompose_all` at 1/2/4 workers, with speedups vs serial)
+//! and the **kernel-level GFLOP/s sweep** for the SIMD micro-kernel layer:
+//! the pre-SIMD scalar kernels vs the portable lane-strided backend vs the
+//! AVX2 backend, at decode-single-row through prefill-chunk shapes.  The
+//! kernel sweep is written machine-readably to `BENCH_5.json` at the repo
+//! root to start the perf trajectory; `PAR_MIN_MACS` in `linalg::matmul`
+//! is calibrated against it.
 
 mod common;
 
 use zs_svd::compress::pipeline::decompose_all;
 use zs_svd::compress::Calibration;
 use zs_svd::exec;
-use zs_svd::linalg::{cholesky_ridge, gram, matmul, right_solve_lower, svd};
+use zs_svd::linalg::kernels::{self, Backend};
+use zs_svd::linalg::{cholesky_ridge, dot_f32, gram, matmul, matmul_bt,
+                     right_solve_lower, svd};
 use zs_svd::model::init::init_params;
 use zs_svd::report::{f2, Table};
 use zs_svd::runtime::session::Session;
 use zs_svd::runtime::Runtime;
 use zs_svd::tensor::Mat;
 use zs_svd::util::benchkit::{fast_mode, Bench};
+use zs_svd::util::json::Json;
 use zs_svd::util::rng::Rng;
+use zs_svd::util::stats::Summary;
+
+// ---------------------------------------------------------------------------
+// the pre-SIMD kernels, frozen here as the GFLOP/s baseline
+// ---------------------------------------------------------------------------
+
+/// The pre-SIMD 4-lane unrolled dot (what the autovectorizer used to get).
+fn legacy_dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// The pre-SIMD blocked scalar GEMM (including its `aik == 0` skip branch).
+fn legacy_matmul(a: &Mat, b: &Mat) -> Mat {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    const BK: usize = 64;
+    const BJ: usize = 256;
+    for kb in (0..k).step_by(BK) {
+        let kend = (kb + BK).min(k);
+        for jb in (0..n).step_by(BJ) {
+            let jend = (jb + BJ).min(n);
+            for i in 0..m {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for j in jb..jend {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// The pre-SIMD A·Bᵀ (one legacy dot per output element).
+fn legacy_matmul_bt(a: &Mat, b: &Mat) -> Mat {
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            crow[j] = legacy_dot(arow, &b.data[j * k..(j + 1) * k]);
+        }
+    }
+    c
+}
+
+/// One kernel-sweep measurement: table row + BENCH_5.json entry.
+fn record(t: &mut Table, out: &mut Vec<Json>, kernel: &str, shape: &str,
+          backend: &str, flops: f64, s: &Summary) {
+    let gflops = flops / s.median.max(1e-12) / 1e9;
+    t.row(vec![format!("{kernel}/{backend} ({gflops:.2} GF/s)"),
+               shape.to_string(), f2(s.median * 1e3), f2(s.p95 * 1e3)]);
+    out.push(Json::obj(vec![
+        ("kernel", Json::str(kernel)),
+        ("shape", Json::str(shape)),
+        ("backend", Json::str(backend)),
+        ("median_ms", Json::num(s.median * 1e3)),
+        ("p95_ms", Json::num(s.p95 * 1e3)),
+        ("gflops", Json::num(gflops)),
+    ]));
+}
 
 fn main() {
     let mut rng = Rng::new(42);
@@ -70,6 +161,113 @@ fn main() {
                    format!("{m}x{k}x{n}"),
                    f2(s.median * 1e3), f2(s.p95 * 1e3)]);
     }
+
+    // ---------------------------------------------------------------
+    // SIMD kernel layer: GFLOP/s per backend vs the frozen pre-SIMD
+    // scalar kernels, at decode-single-row through prefill-chunk shapes.
+    // Serial on purpose (exec::set_threads(1) above): this measures the
+    // micro-kernels, not the pool.  BENCH_5.json is regenerated from this
+    // section on every run.
+    // ---------------------------------------------------------------
+    let mut kernel_json: Vec<Json> = Vec::new();
+    let mut backends: Vec<(&str, Backend)> =
+        vec![("portable", Backend::Portable)];
+    if kernels::simd_available() {
+        backends.push(("avx2", Backend::Avx2));
+    } else {
+        eprintln!("note: no AVX2 on this host — kernel sweep records the \
+                   portable backend only");
+    }
+
+    // dot products at row-reduction lengths (decode q·k, projections)
+    let dot_reps = 512usize;
+    for &len in &[128usize, 512, 4096] {
+        let xa = Mat::randn(&mut rng, 1, len, 1.0);
+        let xb = Mat::randn(&mut rng, 1, len, 1.0);
+        let (va, vb) = (&xa.data, &xb.data);
+        let flops = 2.0 * (len * dot_reps) as f64;
+        let shape = format!("len {len}");
+        let s = b.run(|| {
+            let mut acc = 0.0f32;
+            for _ in 0..dot_reps {
+                acc += legacy_dot(std::hint::black_box(va),
+                                  std::hint::black_box(vb));
+            }
+            std::hint::black_box(acc);
+        });
+        record(&mut t, &mut kernel_json, "dot", &shape, "legacy-scalar",
+               flops, &s);
+        for &(bname, bk) in &backends {
+            kernels::force_backend(Some(bk));
+            let s = b.run(|| {
+                let mut acc = 0.0f32;
+                for _ in 0..dot_reps {
+                    acc += dot_f32(std::hint::black_box(va),
+                                   std::hint::black_box(vb));
+                }
+                std::hint::black_box(acc);
+            });
+            record(&mut t, &mut kernel_json, "dot", &shape, bname, flops, &s);
+            kernels::force_backend(None);
+        }
+    }
+
+    // GEMMs: decode single-row, prefill chunks, compression shapes
+    let gemm_shapes: &[(usize, usize, usize)] = if fast_mode() {
+        &[(1, 128, 512), (16, 128, 512), (128, 352, 128)]
+    } else {
+        &[(1, 128, 512), (16, 128, 512), (32, 352, 352), (128, 352, 128),
+          (512, 192, 512)]
+    };
+    for &(m, k, n) in gemm_shapes {
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let bb = Mat::randn(&mut rng, k, n, 1.0);
+        let btm = Mat::randn(&mut rng, n, k, 1.0);
+        let flops = 2.0 * (m * k * n) as f64;
+        let shape = format!("{m}x{k}x{n}");
+
+        let s = b.run(|| {
+            std::hint::black_box(legacy_matmul(&a, &bb));
+        });
+        record(&mut t, &mut kernel_json, "mm", &shape, "legacy-scalar",
+               flops, &s);
+        let s = b.run(|| {
+            std::hint::black_box(legacy_matmul_bt(&a, &btm));
+        });
+        record(&mut t, &mut kernel_json, "mm_bt", &shape, "legacy-scalar",
+               flops, &s);
+
+        for &(bname, bk) in &backends {
+            kernels::force_backend(Some(bk));
+            let s = b.run(|| {
+                std::hint::black_box(matmul(&a, &bb));
+            });
+            record(&mut t, &mut kernel_json, "mm", &shape, bname, flops, &s);
+            let s = b.run(|| {
+                std::hint::black_box(matmul_bt(&a, &btm));
+            });
+            record(&mut t, &mut kernel_json, "mm_bt", &shape, bname, flops,
+                   &s);
+            kernels::force_backend(None);
+        }
+    }
+
+    let bench5 = Json::obj(vec![
+        ("bench", Json::str("microbench_linalg/kernels")),
+        ("generated_by",
+         Json::str("cargo bench --bench microbench_linalg (also run by ci.sh)")),
+        ("fast_mode", Json::Bool(fast_mode())),
+        ("simd_available", Json::Bool(kernels::simd_available())),
+        ("threads", Json::num(1.0)),
+        ("units", Json::str("median_ms/p95_ms wall clock, gflops = 2·m·k·n \
+                             / median; dot entries amortize 512 calls")),
+        ("results", Json::Arr(kernel_json)),
+    ]);
+    let bench5_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("BENCH_5.json");
+    std::fs::write(&bench5_path, bench5.to_string_pretty() + "\n")
+        .expect("write BENCH_5.json");
+    println!("[saved {}]", bench5_path.display());
 
     // ---------------------------------------------------------------
     // thread scaling: parallel matmul (row-partitioned kernel)

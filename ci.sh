@@ -37,6 +37,13 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== cargo test -q (PALLAS_NO_SIMD=1: portable kernel backend) =="
+# both kernel backends must stay green: the whole suite re-runs with the
+# SIMD layer forced onto the portable lane-strided fallback.  The backends
+# are bit-identical by contract (rust/tests/kernel_equiv.rs is the direct
+# gate), so every parity test proves its invariant on both.
+PALLAS_NO_SIMD=1 cargo test -q
+
 echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
 # the doc gate is fatal: rustdoc ships with the toolchain (unlike the
 # rustfmt/clippy components), and the crate enforces #![warn(missing_docs)]

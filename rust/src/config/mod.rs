@@ -31,6 +31,13 @@ pub struct ExperimentConfig {
     /// worker threads for the `exec` pool (0 = auto: `PALLAS_THREADS` env
     /// var, else available parallelism)
     pub threads: usize,
+    /// force the portable (non-SIMD) kernel backend — the config-file twin
+    /// of the `PALLAS_NO_SIMD` environment variable and the `--no-simd`
+    /// CLI flag.  The SIMD and portable backends are bit-identical
+    /// (`rust/tests/kernel_equiv.rs`), so this knob can change throughput
+    /// but never results; it exists for debugging and CI's dual-backend
+    /// lanes.
+    pub no_simd: bool,
     /// continuous-batching slots for the decode serving path
     pub decode_slots: usize,
     /// per-request generation budget for the decode serving path
@@ -65,6 +72,7 @@ impl Default for ExperimentConfig {
             ratios: vec![0.8, 0.6, 0.4],
             seed: 7,
             threads: 0,
+            no_simd: false,
             decode_slots: 4,
             max_new_tokens: 32,
             queue_depth: 64,
@@ -95,6 +103,7 @@ impl ExperimentConfig {
                 .unwrap_or(d.ratios),
             seed: j.f64_or("seed", d.seed as f64) as u64,
             threads: j.usize_or("threads", d.threads),
+            no_simd: j.bool_or("no_simd", d.no_simd),
             decode_slots: j.usize_or("decode_slots", d.decode_slots),
             max_new_tokens: j.usize_or("max_new_tokens", d.max_new_tokens),
             queue_depth: j.usize_or("queue_depth", d.queue_depth),
@@ -132,6 +141,7 @@ impl ExperimentConfig {
             ("ratios", Json::arr(self.ratios.iter().map(|&r| Json::num(r)))),
             ("seed", Json::num(self.seed as f64)),
             ("threads", Json::num(self.threads as f64)),
+            ("no_simd", Json::Bool(self.no_simd)),
             ("decode_slots", Json::num(self.decode_slots as f64)),
             ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
@@ -169,6 +179,12 @@ mod tests {
         assert_eq!(back.max_new_tokens, c.max_new_tokens);
         assert_eq!(back.queue_depth, c.queue_depth);
         assert_eq!(back.prefill_chunk, c.prefill_chunk);
+        assert_eq!(back.no_simd, c.no_simd);
+
+        let forced =
+            ExperimentConfig { no_simd: true, ..ExperimentConfig::default() };
+        let back = ExperimentConfig::from_json(&forced.to_json());
+        assert!(back.no_simd, "no_simd must survive the roundtrip");
     }
 
     #[test]

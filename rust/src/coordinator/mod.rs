@@ -121,6 +121,13 @@ pub fn prepare<'rt>(rt: &'rt Runtime, cfg: &ExperimentConfig) -> Result<Prepared
     if cfg.threads > 0 {
         crate::exec::set_threads(cfg.threads);
     }
+    if cfg.no_simd {
+        // bit-identical to the SIMD backend by contract (kernel_equiv.rs);
+        // one-directional like the threads knob — unset leaves the
+        // process-level resolution (PALLAS_NO_SIMD env / CPU detection)
+        crate::linalg::kernels::force_backend(
+            Some(crate::linalg::kernels::Backend::Portable));
+    }
     let session = Session::new(rt, &cfg.model);
     let world = data::default_world();
     let train_corpus = data::training_corpus(&cfg.family, &world);

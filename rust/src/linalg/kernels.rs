@@ -1,0 +1,953 @@
+//! SIMD micro-kernel layer: the innermost MAC loops of every GEMM / dot /
+//! row-reduction hot path, with two interchangeable backends that are
+//! **bit-identical to each other** — explicit AVX2 intrinsics behind runtime
+//! feature detection, and a portable scalar fallback that executes the very
+//! same lane-strided accumulation order.
+//!
+//! # The canonical reduction orders
+//!
+//! Floating-point addition is not associative, so "what order do partial
+//! products combine in" is part of this repo's determinism contract (see the
+//! README's determinism section).  This module pins ONE canonical order per
+//! reduction and every backend implements it exactly:
+//!
+//! * **f32 dot product** ([`dot_f32`], [`LANES`] = 8): lane `l` accumulates
+//!   the products at indices `i ≡ l (mod 8)` in ascending order, one f32
+//!   rounding per step.  The eight lane sums combine as
+//!   `((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))` — exactly the
+//!   low/high-half, move-high, scalar-add horizontal reduction an AVX2
+//!   register performs — and the `len % 8` tail elements are then added one
+//!   by one in ascending index order.
+//! * **f64 row reductions** ([`sum_f64`], [`sum_sq_f64`],
+//!   [`sum_sq_centered_f64`], [`F64_LANES`] = 4): lane `l` accumulates the
+//!   terms at indices `i ≡ l (mod 4)`; lanes combine as
+//!   `(l0+l2) + (l1+l3)`; the tail is appended in ascending order.  These
+//!   carry the norm-layer reductions (RMSNorm mean-square, LayerNorm
+//!   mean/variance) that the runtime accumulates in f64.
+//! * **GEMM output elements** ([`mm_rows`], A·B): each `c[i][j]` is a single
+//!   f32 accumulator over `k` in ascending order.  Register tiling and
+//!   B-panel packing reorder work *across* output elements, never within
+//!   one, so the tile shape cannot change bits.
+//! * **A·Bᵀ output elements** ([`mm_bt_rows`]): each `c[i][j]` is one
+//!   [`dot_f32`] in the canonical order above.
+//! * **[`axpy_f32`]**: element-wise (`y[j] += a·x[j]`, one multiply and one
+//!   add per element) — there is no reduction, so any vector width computes
+//!   identical bits by construction.
+//!
+//! Because both backends implement the same orders, results are
+//! bit-identical across backends — and therefore across ISAs whose SIMD
+//! units perform IEEE-754 single-rounding mul/add, which is every target
+//! this crate supports.  `rust/tests/kernel_equiv.rs` enforces the contract
+//! on adversarial shapes (every remainder lane, unaligned offsets,
+//! denormals, signed zeros), and ci.sh runs the whole test suite under both
+//! backends.
+//!
+//! # Why no FMA
+//!
+//! A fused multiply-add rounds once where mul+add rounds twice, so an FMA
+//! backend could only be bit-identical to a portable fallback that routes
+//! every scalar MAC through `f32::mul_add` — a libm call on targets without
+//! hardware FMA, which would make the portable lane (and the
+//! `PALLAS_NO_SIMD=1` CI lane) pathologically slow.  The speedup here comes
+//! from lane width and register tiling, not fusion; the AVX2 backend
+//! deliberately uses `vmulps`/`vaddps` only.
+//!
+//! # Backend selection
+//!
+//! [`active_backend`] resolves, in priority order:
+//!
+//! 1. a [`force_backend`] override (the test hook, also wired from
+//!    `ExperimentConfig::no_simd` / `--no-simd` by the coordinator);
+//! 2. the `PALLAS_NO_SIMD` environment variable (any non-empty value other
+//!    than `0` forces [`Backend::Portable`]);
+//! 3. runtime CPU detection: AVX2 if the host reports it, else portable.
+//!
+//! Selection is process-global and costs one relaxed atomic load per kernel
+//! call.  Forcing [`Backend::Avx2`] on a host without AVX2 resolves to
+//! portable — the knob can never make the process execute illegal
+//! instructions.
+//!
+//! # Zero-skip branches are gone
+//!
+//! The pre-SIMD blocked kernel skipped `a[i][k] == 0.0` rows of B.  The
+//! skip is dropped from **every** backend, not just the tiled one: besides
+//! defeating vectorization, a skip kept in one backend but not the other
+//! would be observable — adding a `+0.0` term flips a `-0.0` accumulator to
+//! `+0.0`, and `0·inf` is NaN — so it would break the exact bit-identity
+//! this layer exists to provide.  The sparse-ish whitening inputs that made
+//! the branch pay are now served by raw 8-wide throughput instead.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// f32 accumulator lanes in the canonical dot-product order.
+pub const LANES: usize = 8;
+
+/// f64 accumulator lanes in the canonical row-reduction order.
+pub const F64_LANES: usize = 4;
+
+// ---------------------------------------------------------------------------
+// backend selection
+// ---------------------------------------------------------------------------
+
+/// One of the two interchangeable (bit-identical) kernel implementations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Lane-strided scalar code — runs everywhere, and doubles as the
+    /// executable specification of the canonical accumulation orders.
+    Portable,
+    /// `core::arch::x86_64` AVX2 intrinsics (256-bit `vmulps`/`vaddps`),
+    /// selected only when the running CPU reports AVX2 support.
+    Avx2,
+}
+
+const MODE_UNSET: u8 = 0;
+const MODE_PORTABLE: u8 = 1;
+const MODE_AVX2: u8 = 2;
+
+/// Resolved backend, cached after first use.  `MODE_UNSET` until then;
+/// [`force_backend`] stores directly.
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+#[cfg(target_arch = "x86_64")]
+fn detect_avx2() -> bool {
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_avx2() -> bool {
+    false
+}
+
+/// True when the running CPU supports the SIMD backend (AVX2).  Purely
+/// informational — dispatch happens through [`active_backend`].
+pub fn simd_available() -> bool {
+    detect_avx2()
+}
+
+/// `PALLAS_NO_SIMD` semantics: set to anything non-empty except `0` to
+/// force the portable backend.  Factored out so the parse is unit-testable
+/// (the env read itself is cached once per process).
+fn parse_no_simd(v: Option<&str>) -> bool {
+    match v {
+        Some(s) => {
+            let t = s.trim();
+            !t.is_empty() && t != "0"
+        }
+        None => false,
+    }
+}
+
+fn env_no_simd() -> bool {
+    static NO_SIMD: OnceLock<bool> = OnceLock::new();
+    *NO_SIMD
+        .get_or_init(|| parse_no_simd(std::env::var("PALLAS_NO_SIMD").ok().as_deref()))
+}
+
+fn resolve_auto() -> u8 {
+    if !env_no_simd() && detect_avx2() {
+        MODE_AVX2
+    } else {
+        MODE_PORTABLE
+    }
+}
+
+#[inline]
+fn mode() -> u8 {
+    let m = MODE.load(Ordering::Relaxed);
+    if m != MODE_UNSET {
+        return m;
+    }
+    let r = resolve_auto();
+    MODE.store(r, Ordering::Relaxed);
+    r
+}
+
+/// The backend every kernel in this module currently dispatches to.
+pub fn active_backend() -> Backend {
+    if mode() == MODE_AVX2 {
+        Backend::Avx2
+    } else {
+        Backend::Portable
+    }
+}
+
+/// Override backend selection for this process (the `kernel_equiv` test
+/// hook, and how `ExperimentConfig::no_simd` forces the portable lane).
+/// `None` restores automatic resolution (`PALLAS_NO_SIMD` env, then CPU
+/// detection).  Forcing [`Backend::Avx2`] on a host without AVX2 resolves
+/// to [`Backend::Portable`] — results are bit-identical either way, so the
+/// demotion is observable only through [`active_backend`].
+pub fn force_backend(b: Option<Backend>) {
+    let m = match b {
+        Some(Backend::Portable) => MODE_PORTABLE,
+        Some(Backend::Avx2) => {
+            if detect_avx2() {
+                MODE_AVX2
+            } else {
+                MODE_PORTABLE
+            }
+        }
+        None => resolve_auto(),
+    };
+    MODE.store(m, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// public kernels (dispatchers)
+// ---------------------------------------------------------------------------
+
+/// Canonical fixed-order f32 dot product — THE accumulation every
+/// projection kernel builds on, hence the unit of bit-reproducibility
+/// (8-lane-strided; see the module docs for the exact combine order).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len(), "dot_f32: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 is only ever stored after runtime AVX2
+            // detection succeeded (see `resolve_auto` / `force_backend`).
+            return unsafe { avx2::dot(a, b) };
+        }
+    }
+    portable::dot(a, b)
+}
+
+/// `y[j] += a · x[j]` over `y.len()` elements (`x` must be at least as
+/// long).  Element-wise — no reduction — so backends agree by construction;
+/// carries the attention value merges and the Gram row updates.
+#[inline]
+pub fn axpy_f32(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert!(x.len() >= y.len(), "axpy_f32: x shorter than y");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 implies runtime AVX2 detection succeeded.
+            unsafe { avx2::axpy(y, a, x) };
+            return;
+        }
+    }
+    portable::axpy(y, a, x);
+}
+
+/// Fixed-order f64 sum of an f32 slice (4-lane-strided) — the LayerNorm
+/// mean reduction.
+#[inline]
+pub fn sum_f64(x: &[f32]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 implies runtime AVX2 detection succeeded.
+            return unsafe { avx2::sum(x) };
+        }
+    }
+    portable::sum(x)
+}
+
+/// Fixed-order f64 sum of squares of an f32 slice (4-lane-strided) — the
+/// RMSNorm mean-square reduction.
+#[inline]
+pub fn sum_sq_f64(x: &[f32]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 implies runtime AVX2 detection succeeded.
+            return unsafe { avx2::sum_sq(x) };
+        }
+    }
+    portable::sum_sq(x)
+}
+
+/// Fixed-order f64 sum of squared f32 deviations from `mu` (the deviation
+/// is rounded in f32 first, exactly as the scalar LayerNorm variance loop
+/// always did; 4-lane-strided).
+#[inline]
+pub fn sum_sq_centered_f64(x: &[f32], mu: f32) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 implies runtime AVX2 detection succeeded.
+            return unsafe { avx2::sum_sq_centered(x, mu) };
+        }
+    }
+    portable::sum_sq_centered(x, mu)
+}
+
+/// C = A·B over the output-row band `[row0, row0 + rows)`.
+///
+/// `a_data` is row-major with row length `k`, `b_data` row-major
+/// `k × n`, and `c_rows` the **zero-initialized** destination band
+/// (`rows · n` values) — the AVX2 tile kernel overwrites it while the
+/// portable path accumulates in place, which only coincide from zero.
+/// Per output element the k-loop order is fixed (ascending, one f32
+/// rounding per step), so any row partition of the output — and either
+/// backend — accumulates identical bits.
+pub fn mm_rows(a_data: &[f32], k: usize, row0: usize, rows: usize,
+               b_data: &[f32], n: usize, c_rows: &mut [f32]) {
+    debug_assert!(a_data.len() >= (row0 + rows) * k, "mm_rows: A too short");
+    debug_assert_eq!(b_data.len(), k * n, "mm_rows: ragged B");
+    debug_assert!(c_rows.len() >= rows * n, "mm_rows: C band too short");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 implies runtime AVX2 detection succeeded.
+            unsafe { avx2::mm_rows(a_data, k, row0, rows, b_data, n, c_rows) };
+            return;
+        }
+    }
+    portable::mm_rows(a_data, k, row0, rows, b_data, n, c_rows);
+}
+
+/// C = A·Bᵀ over the output-row band `[row0, row0 + rows)` — B stays
+/// row-major `n × k` (rows contiguous), every output element is one
+/// [`dot_f32`] in the canonical order, written (not accumulated) into
+/// `c_rows`.
+pub fn mm_bt_rows(a_data: &[f32], k: usize, row0: usize, rows: usize,
+                  b_data: &[f32], n: usize, c_rows: &mut [f32]) {
+    debug_assert!(a_data.len() >= (row0 + rows) * k, "mm_bt_rows: A too short");
+    debug_assert_eq!(b_data.len(), n * k, "mm_bt_rows: ragged B");
+    debug_assert!(c_rows.len() >= rows * n, "mm_bt_rows: C band too short");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 implies runtime AVX2 detection succeeded.
+            unsafe {
+                avx2::mm_bt_rows(a_data, k, row0, rows, b_data, n, c_rows)
+            };
+            return;
+        }
+    }
+    portable::mm_bt_rows(a_data, k, row0, rows, b_data, n, c_rows);
+}
+
+// ---------------------------------------------------------------------------
+// portable backend — the executable spec of the canonical orders
+// ---------------------------------------------------------------------------
+
+mod portable {
+    /// The canonical 8-lane horizontal combine: low/high halves pair up,
+    /// the pairs pair up, the final two add — exactly what the AVX2 hsum
+    /// sequence (extract+add, movehl+add, scalar add) computes.
+    #[inline]
+    pub(super) fn combine8(acc: &[f32; 8]) -> f32 {
+        let t0 = acc[0] + acc[4];
+        let t1 = acc[1] + acc[5];
+        let t2 = acc[2] + acc[6];
+        let t3 = acc[3] + acc[7];
+        (t0 + t2) + (t1 + t3)
+    }
+
+    #[inline]
+    pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+        // clamp like the AVX2 path, so a length-contract violation degrades
+        // identically on both backends instead of indexing past the shorter
+        let n = a.len().min(b.len());
+        let mut acc = [0.0f32; 8];
+        for (ca, cb) in a.chunks_exact(8).zip(b.chunks_exact(8)) {
+            acc[0] += ca[0] * cb[0];
+            acc[1] += ca[1] * cb[1];
+            acc[2] += ca[2] * cb[2];
+            acc[3] += ca[3] * cb[3];
+            acc[4] += ca[4] * cb[4];
+            acc[5] += ca[5] * cb[5];
+            acc[6] += ca[6] * cb[6];
+            acc[7] += ca[7] * cb[7];
+        }
+        let mut s = combine8(&acc);
+        for i in n / 8 * 8..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    #[inline]
+    pub(super) fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        for (yv, &xv) in y.iter_mut().zip(x) {
+            *yv += a * xv;
+        }
+    }
+
+    #[inline]
+    pub(super) fn sum(x: &[f32]) -> f64 {
+        let mut acc = [0.0f64; 4];
+        for c in x.chunks_exact(4) {
+            acc[0] += c[0] as f64;
+            acc[1] += c[1] as f64;
+            acc[2] += c[2] as f64;
+            acc[3] += c[3] as f64;
+        }
+        let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+        let tail = x.len() / 4 * 4;
+        for &v in &x[tail..] {
+            s += v as f64;
+        }
+        s
+    }
+
+    #[inline]
+    pub(super) fn sum_sq(x: &[f32]) -> f64 {
+        let mut acc = [0.0f64; 4];
+        for c in x.chunks_exact(4) {
+            let (v0, v1, v2, v3) =
+                (c[0] as f64, c[1] as f64, c[2] as f64, c[3] as f64);
+            acc[0] += v0 * v0;
+            acc[1] += v1 * v1;
+            acc[2] += v2 * v2;
+            acc[3] += v3 * v3;
+        }
+        let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+        let tail = x.len() / 4 * 4;
+        for &v in &x[tail..] {
+            let v = v as f64;
+            s += v * v;
+        }
+        s
+    }
+
+    #[inline]
+    pub(super) fn sum_sq_centered(x: &[f32], mu: f32) -> f64 {
+        let mut acc = [0.0f64; 4];
+        for c in x.chunks_exact(4) {
+            // the deviation rounds in f32 BEFORE widening — the canonical
+            // order matches the original scalar LayerNorm variance loop
+            let (v0, v1, v2, v3) = ((c[0] - mu) as f64, (c[1] - mu) as f64,
+                                    (c[2] - mu) as f64, (c[3] - mu) as f64);
+            acc[0] += v0 * v0;
+            acc[1] += v1 * v1;
+            acc[2] += v2 * v2;
+            acc[3] += v3 * v3;
+        }
+        let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+        let tail = x.len() / 4 * 4;
+        for &v in &x[tail..] {
+            let v = (v - mu) as f64;
+            s += v * v;
+        }
+        s
+    }
+
+    /// Blocked i-k-j GEMM band (cache blocking only — per output element
+    /// the k order stays plainly ascending, so blocks cannot change bits).
+    pub(super) fn mm_rows(a_data: &[f32], k: usize, row0: usize, rows: usize,
+                          b_data: &[f32], n: usize, c_rows: &mut [f32]) {
+        const BK: usize = 64;
+        const BJ: usize = 256;
+        for kb in (0..k).step_by(BK) {
+            let kend = (kb + BK).min(k);
+            for jb in (0..n).step_by(BJ) {
+                let jend = (jb + BJ).min(n);
+                for i in 0..rows {
+                    let arow = &a_data[(row0 + i) * k..(row0 + i + 1) * k];
+                    let crow = &mut c_rows[i * n..(i + 1) * n];
+                    for kk in kb..kend {
+                        let aik = arow[kk];
+                        let brow = &b_data[kk * n..(kk + 1) * n];
+                        for j in jb..jend {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    pub(super) fn mm_bt_rows(a_data: &[f32], k: usize, row0: usize,
+                             rows: usize, b_data: &[f32], n: usize,
+                             c_rows: &mut [f32]) {
+        for i in 0..rows {
+            let arow = &a_data[(row0 + i) * k..(row0 + i + 1) * k];
+            let crow = &mut c_rows[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] = dot(arow, &b_data[j * k..(j + 1) * k]);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 backend
+// ---------------------------------------------------------------------------
+
+/// AVX2 implementations.  Every `unsafe fn` here requires the caller to
+/// have verified AVX2 support at runtime (the dispatchers above do).  The
+/// horizontal-reduction sequences are the bit-level definition the portable
+/// backend mirrors — change one, change both, and re-baseline the parity
+/// gates.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// `((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))` — the canonical 8-lane
+    /// combine.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum8(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let t = _mm_add_ps(lo, hi); // [l0+l4, l1+l5, l2+l6, l3+l7]
+        let u = _mm_add_ps(t, _mm_movehl_ps(t, t)); // [t0+t2, t1+t3, ..]
+        _mm_cvtss_f32(_mm_add_ss(u, _mm_movehdup_ps(u))) // (t0+t2)+(t1+t3)
+    }
+
+    /// `(l0+l2) + (l1+l3)` — the canonical 4-lane f64 combine.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum4d(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let t = _mm_add_pd(lo, hi); // [l0+l2, l1+l3]
+        _mm_cvtsd_f64(_mm_add_sd(t, _mm_unpackhi_pd(t, t)))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let chunks = n / 8;
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let va = _mm256_loadu_ps(ap.add(c * 8));
+            let vb = _mm256_loadu_ps(bp.add(c * 8));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut s = hsum8(acc);
+        for i in chunks * 8..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        // clamp like the portable zip does, so a length-contract violation
+        // degrades identically on both backends instead of reading past x
+        let n = y.len().min(x.len());
+        let chunks = n / 8;
+        let va = _mm256_set1_ps(a);
+        for c in 0..chunks {
+            let i = c * 8;
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i),
+                             _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+        }
+        for i in chunks * 8..n {
+            y[i] += a * x[i];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sum(x: &[f32]) -> f64 {
+        let chunks = x.len() / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let v = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(c * 4)));
+            acc = _mm256_add_pd(acc, v);
+        }
+        let mut s = hsum4d(acc);
+        for &v in &x[chunks * 4..] {
+            s += v as f64;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sum_sq(x: &[f32]) -> f64 {
+        let chunks = x.len() / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let v = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(c * 4)));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(v, v));
+        }
+        let mut s = hsum4d(acc);
+        for &v in &x[chunks * 4..] {
+            let v = v as f64;
+            s += v * v;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sum_sq_centered(x: &[f32], mu: f32) -> f64 {
+        let chunks = x.len() / 4;
+        let vmu = _mm_set1_ps(mu);
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            // f32 subtraction first, then widen — mirrors the portable lane
+            let d = _mm_sub_ps(_mm_loadu_ps(x.as_ptr().add(c * 4)), vmu);
+            let v = _mm256_cvtps_pd(d);
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(v, v));
+        }
+        let mut s = hsum4d(acc);
+        for &v in &x[chunks * 4..] {
+            let v = (v - mu) as f64;
+            s += v * v;
+        }
+        s
+    }
+
+    /// Output rows per register tile.
+    const MR: usize = 4;
+    /// Output columns per packed B panel (two 8-lane registers).
+    const NR: usize = 16;
+
+    /// Register-tiled A·B band: B is packed into contiguous `k × NR`
+    /// column panels, each reused by every `MR × NR` output tile of the
+    /// band.  Accumulators live in registers for the whole k loop — per
+    /// output element that is the same "one f32 rounding per ascending k"
+    /// the portable blocked kernel performs in memory.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mm_rows(a_data: &[f32], k: usize, row0: usize,
+                                 rows: usize, b_data: &[f32], n: usize,
+                                 c_rows: &mut [f32]) {
+        let j_main = n / NR * NR; // columns covered by full-width panels
+        let mut panel = vec![0.0f32; if j_main > 0 { k * NR } else { 0 }];
+        let mut j0 = 0usize;
+        while j0 + NR <= n {
+            for kk in 0..k {
+                panel[kk * NR..(kk + 1) * NR]
+                    .copy_from_slice(&b_data[kk * n + j0..kk * n + j0 + NR]);
+            }
+            let pp = panel.as_ptr();
+            let mut i = 0usize;
+            while i + MR <= rows {
+                let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+                for kk in 0..k {
+                    let b0 = _mm256_loadu_ps(pp.add(kk * NR));
+                    let b1 = _mm256_loadu_ps(pp.add(kk * NR + 8));
+                    for (r, a2) in acc.iter_mut().enumerate() {
+                        let aik =
+                            _mm256_set1_ps(a_data[(row0 + i + r) * k + kk]);
+                        a2[0] = _mm256_add_ps(a2[0], _mm256_mul_ps(aik, b0));
+                        a2[1] = _mm256_add_ps(a2[1], _mm256_mul_ps(aik, b1));
+                    }
+                }
+                for (r, a2) in acc.iter().enumerate() {
+                    let dst = c_rows[(i + r) * n + j0..].as_mut_ptr();
+                    _mm256_storeu_ps(dst, a2[0]);
+                    _mm256_storeu_ps(dst.add(8), a2[1]);
+                }
+                i += MR;
+            }
+            while i < rows {
+                let mut a0 = _mm256_setzero_ps();
+                let mut a1 = _mm256_setzero_ps();
+                for kk in 0..k {
+                    let aik = _mm256_set1_ps(a_data[(row0 + i) * k + kk]);
+                    a0 = _mm256_add_ps(a0,
+                        _mm256_mul_ps(aik, _mm256_loadu_ps(pp.add(kk * NR))));
+                    a1 = _mm256_add_ps(a1,
+                        _mm256_mul_ps(aik,
+                                      _mm256_loadu_ps(pp.add(kk * NR + 8))));
+                }
+                let dst = c_rows[i * n + j0..].as_mut_ptr();
+                _mm256_storeu_ps(dst, a0);
+                _mm256_storeu_ps(dst.add(8), a1);
+                i += 1;
+            }
+            j0 += NR;
+        }
+        // column remainder (n % NR): scalar single-accumulator k-ascending
+        // per element — same canonical order, at most NR-1 columns of work
+        if j0 < n {
+            for i in 0..rows {
+                let arow = &a_data[(row0 + i) * k..(row0 + i + 1) * k];
+                for j in j0..n {
+                    let mut s = 0.0f32;
+                    for (kk, &aik) in arow.iter().enumerate() {
+                        s += aik * b_data[kk * n + j];
+                    }
+                    c_rows[i * n + j] = s;
+                }
+            }
+        }
+    }
+
+    /// A·Bᵀ band: four output columns share each pass over the A row, as
+    /// four *independent* canonical dot accumulations — inter-output tiling
+    /// buys ILP without touching any per-output order.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mm_bt_rows(a_data: &[f32], k: usize, row0: usize,
+                                    rows: usize, b_data: &[f32], n: usize,
+                                    c_rows: &mut [f32]) {
+        let chunks = k / 8;
+        let tail = chunks * 8;
+        for i in 0..rows {
+            let arow = &a_data[(row0 + i) * k..(row0 + i + 1) * k];
+            let ap = arow.as_ptr();
+            let crow = &mut c_rows[i * n..(i + 1) * n];
+            let mut j = 0usize;
+            while j + 4 <= n {
+                let b0 = &b_data[j * k..(j + 1) * k];
+                let b1 = &b_data[(j + 1) * k..(j + 2) * k];
+                let b2 = &b_data[(j + 2) * k..(j + 3) * k];
+                let b3 = &b_data[(j + 3) * k..(j + 4) * k];
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                let mut acc2 = _mm256_setzero_ps();
+                let mut acc3 = _mm256_setzero_ps();
+                for c in 0..chunks {
+                    let o = c * 8;
+                    let va = _mm256_loadu_ps(ap.add(o));
+                    acc0 = _mm256_add_ps(acc0,
+                        _mm256_mul_ps(va, _mm256_loadu_ps(b0.as_ptr().add(o))));
+                    acc1 = _mm256_add_ps(acc1,
+                        _mm256_mul_ps(va, _mm256_loadu_ps(b1.as_ptr().add(o))));
+                    acc2 = _mm256_add_ps(acc2,
+                        _mm256_mul_ps(va, _mm256_loadu_ps(b2.as_ptr().add(o))));
+                    acc3 = _mm256_add_ps(acc3,
+                        _mm256_mul_ps(va, _mm256_loadu_ps(b3.as_ptr().add(o))));
+                }
+                let mut s0 = hsum8(acc0);
+                let mut s1 = hsum8(acc1);
+                let mut s2 = hsum8(acc2);
+                let mut s3 = hsum8(acc3);
+                for t in tail..k {
+                    let av = arow[t];
+                    s0 += av * b0[t];
+                    s1 += av * b1[t];
+                    s2 += av * b2[t];
+                    s3 += av * b3[t];
+                }
+                crow[j] = s0;
+                crow[j + 1] = s1;
+                crow[j + 2] = s2;
+                crow[j + 3] = s3;
+                j += 4;
+            }
+            while j < n {
+                crow[j] = dot(arow, &b_data[j * k..(j + 1) * k]);
+                j += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    // NOTE: no `force_backend` calls in lib unit tests — dispatch state is
+    // process-global and other unit tests compute through it concurrently.
+    // Cross-backend checks below call the backend functions DIRECTLY, which
+    // touches no shared state; the dispatch-level sweeps live in the
+    // dedicated `rust/tests/kernel_equiv.rs` binary.
+
+    /// Adversarial f32 payload: normals across magnitudes, exact and signed
+    /// zeros, and denormals — everything the bit-identity contract must
+    /// survive.
+    fn adversarial(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| match i % 7 {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f32::from_bits(1 + (i as u32 % 9)), // denormals
+                3 => -f32::from_bits(3 + (i as u32 % 5)),
+                4 => (rng.uniform() as f32 - 0.5) * 1e-20,
+                5 => (rng.uniform() as f32 - 0.5) * 1e20,
+                _ => rng.uniform() as f32 - 0.5,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn portable_dot_matches_f64_reference() {
+        let mut rng = Rng::new(1);
+        for len in [0usize, 1, 3, 8, 13, 64, 130] {
+            let a: Vec<f32> =
+                (0..len).map(|_| rng.uniform() as f32 - 0.5).collect();
+            let b: Vec<f32> =
+                (0..len).map(|_| rng.uniform() as f32 - 0.5).collect();
+            let exact: f64 = a.iter().zip(&b)
+                .map(|(&x, &y)| x as f64 * y as f64)
+                .sum();
+            let got = portable::dot(&a, &b) as f64;
+            assert!((got - exact).abs() <= 1e-5 * (1.0 + exact.abs()),
+                    "len {len}: {got} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn portable_dot_is_the_documented_lane_order() {
+        // independent re-derivation of the canonical order straight from
+        // the module docs, to pin the spec against refactor drift
+        let mut rng = Rng::new(2);
+        for len in [5usize, 8, 9, 16, 23, 65] {
+            let a = adversarial(&mut rng, len);
+            let b = adversarial(&mut rng, len);
+            let mut acc = [0.0f32; 8];
+            let main = len / 8 * 8;
+            for i in 0..main {
+                acc[i % 8] += a[i] * b[i];
+            }
+            let mut want = ((acc[0] + acc[4]) + (acc[2] + acc[6]))
+                + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+            for i in main..len {
+                want += a[i] * b[i];
+            }
+            assert_eq!(portable::dot(&a, &b).to_bits(), want.to_bits(),
+                       "len {len}");
+        }
+    }
+
+    #[test]
+    fn portable_sums_match_f64_reference() {
+        let mut rng = Rng::new(3);
+        for len in [0usize, 1, 4, 6, 128, 131] {
+            let x: Vec<f32> =
+                (0..len).map(|_| rng.uniform() as f32 - 0.5).collect();
+            let s: f64 = x.iter().map(|&v| v as f64).sum();
+            assert!((portable::sum(&x) - s).abs() <= 1e-9 * (1.0 + s.abs()));
+            let sq: f64 = x.iter().map(|&v| v as f64 * v as f64).sum();
+            assert!((portable::sum_sq(&x) - sq).abs()
+                        <= 1e-9 * (1.0 + sq.abs()));
+            let mu = 0.25f32;
+            let c: f64 = x.iter()
+                .map(|&v| {
+                    let d = (v - mu) as f64;
+                    d * d
+                })
+                .sum();
+            assert!((portable::sum_sq_centered(&x, mu) - c).abs()
+                        <= 1e-9 * (1.0 + c.abs()));
+        }
+    }
+
+    #[test]
+    fn portable_mm_kernels_match_naive() {
+        let mut rng = Rng::new(4);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 2), (4, 16, 16),
+                            (7, 33, 19), (2, 0, 4)] {
+            let a: Vec<f32> =
+                (0..m * k).map(|_| rng.uniform() as f32 - 0.5).collect();
+            let b: Vec<f32> =
+                (0..k * n).map(|_| rng.uniform() as f32 - 0.5).collect();
+            let mut c = vec![0.0f32; m * n];
+            portable::mm_rows(&a, k, 0, m, &b, n, &mut c);
+            let bt: Vec<f32> = {
+                // n × k transpose of b for the bt kernel
+                let mut t = vec![0.0f32; n * k];
+                for kk in 0..k {
+                    for j in 0..n {
+                        t[j * k + kk] = b[kk * n + j];
+                    }
+                }
+                t
+            };
+            let mut cbt = vec![0.0f32; m * n];
+            portable::mm_bt_rows(&a, k, 0, m, &bt, n, &mut cbt);
+            for i in 0..m {
+                for j in 0..n {
+                    let exact: f64 = (0..k)
+                        .map(|kk| a[i * k + kk] as f64 * b[kk * n + j] as f64)
+                        .sum();
+                    let got = c[i * n + j] as f64;
+                    assert!((got - exact).abs() <= 1e-5 * (1.0 + exact.abs()),
+                            "mm ({m},{k},{n}) at ({i},{j})");
+                    let gbt = cbt[i * n + j] as f64;
+                    assert!((gbt - exact).abs() <= 1e-5 * (1.0 + exact.abs()),
+                            "mm_bt ({m},{k},{n}) at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_backend_bit_matches_portable_directly() {
+        if !detect_avx2() {
+            eprintln!("avx2 unavailable on this host; direct backend \
+                       comparison skipped");
+            return;
+        }
+        let mut rng = Rng::new(5);
+        // every remainder lane + unaligned starts, on adversarial payloads
+        for len in 0..=65usize {
+            for off in [0usize, 1, 3] {
+                let a = adversarial(&mut rng, len + off);
+                let b = adversarial(&mut rng, len + off);
+                let (sa, sb) = (&a[off..], &b[off..]);
+                let p = portable::dot(sa, sb);
+                // SAFETY: detect_avx2() checked above.
+                let v = unsafe { avx2::dot(sa, sb) };
+                assert_eq!(p.to_bits(), v.to_bits(),
+                           "dot len {len} off {off}: {p} vs {v}");
+
+                let ps = portable::sum(sa);
+                // SAFETY: detect_avx2() checked above.
+                let vs = unsafe { avx2::sum(sa) };
+                assert_eq!(ps.to_bits(), vs.to_bits(), "sum len {len}");
+                let pq = portable::sum_sq(sa);
+                // SAFETY: detect_avx2() checked above.
+                let vq = unsafe { avx2::sum_sq(sa) };
+                assert_eq!(pq.to_bits(), vq.to_bits(), "sum_sq len {len}");
+                let pc = portable::sum_sq_centered(sa, 0.125);
+                // SAFETY: detect_avx2() checked above.
+                let vc = unsafe { avx2::sum_sq_centered(sa, 0.125) };
+                assert_eq!(pc.to_bits(), vc.to_bits(), "centered len {len}");
+
+                let mut yp = adversarial(&mut rng, len);
+                let mut yv = yp.clone();
+                portable::axpy(&mut yp, 0.37, &sa[..len.min(sa.len())]);
+                // SAFETY: detect_avx2() checked above.
+                unsafe { avx2::axpy(&mut yv, 0.37, &sa[..len.min(sa.len())]) };
+                assert_eq!(
+                    yp.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                    yv.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                    "axpy len {len}"
+                );
+            }
+        }
+        // GEMM bands across tile remainders (rows % 4, cols % 16, k % 8)
+        for &(m, k, n) in &[(1usize, 7usize, 15usize), (4, 8, 16), (5, 9, 17),
+                            (8, 64, 48), (3, 65, 33), (6, 0, 5)] {
+            let a = adversarial(&mut rng, m * k);
+            let b = adversarial(&mut rng, k * n);
+            let bt = adversarial(&mut rng, n * k);
+            let mut cp = vec![0.0f32; m * n];
+            let mut cv = vec![0.0f32; m * n];
+            portable::mm_rows(&a, k, 0, m, &b, n, &mut cp);
+            // SAFETY: detect_avx2() checked above.
+            unsafe { avx2::mm_rows(&a, k, 0, m, &b, n, &mut cv) };
+            assert_eq!(cp.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                       cv.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                       "mm_rows ({m},{k},{n})");
+            let mut dp = vec![0.0f32; m * n];
+            let mut dv = vec![0.0f32; m * n];
+            portable::mm_bt_rows(&a, k, 0, m, &bt, n, &mut dp);
+            // SAFETY: detect_avx2() checked above.
+            unsafe { avx2::mm_bt_rows(&a, k, 0, m, &bt, n, &mut dv) };
+            assert_eq!(dp.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                       dv.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                       "mm_bt_rows ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn no_simd_env_parse() {
+        assert!(!parse_no_simd(None));
+        assert!(!parse_no_simd(Some("")));
+        assert!(!parse_no_simd(Some("  ")));
+        assert!(!parse_no_simd(Some("0")));
+        assert!(parse_no_simd(Some("1")));
+        assert!(parse_no_simd(Some("true")));
+        assert!(parse_no_simd(Some(" yes ")));
+    }
+
+    #[test]
+    fn backend_resolution_is_consistent() {
+        // read-only: forcing would race other unit tests in this binary
+        let b = active_backend();
+        assert_eq!(b, active_backend(), "resolution must be stable");
+        if b == Backend::Avx2 {
+            assert!(simd_available());
+        }
+    }
+}

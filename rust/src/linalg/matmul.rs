@@ -1,29 +1,74 @@
-//! Blocked dense matmul + small GEMM helpers, with row-partitioned parallel
-//! kernels (see `crate::exec`).
+//! Dense matmul + small GEMM helpers: row-partitioned parallel dispatch
+//! (see `crate::exec`) over the SIMD micro-kernel layer
+//! (`crate::linalg::kernels`).
 //!
 //! This is the workhorse on both sides of the system: compression-time
 //! (whitening A = W·S, recomposition W' = Wu·Wv, Jacobi column updates) and
 //! request-time (the native runtime's projections run through `matmul_bt`).
+//! The innermost MAC loops live in `kernels` — explicit AVX2 where the CPU
+//! has it, a bit-identical portable fallback everywhere else — and this
+//! module owns shape checks, the output-row banding, and the
+//! parallel-dispatch policy.
 //!
 //! # Parallel determinism
 //!
 //! `matmul` and `matmul_bt` split the **output rows** into disjoint bands,
 //! one band per worker.  Every output element is accumulated by exactly one
-//! worker using exactly the serial kernel's loop structure, so the
-//! floating-point addition order per element — and therefore the result,
-//! bit for bit — is independent of the thread count.  Small products stay
-//! on the serial path (spawn overhead would dominate); the cutover cannot
-//! change results for the same reason.
+//! worker using exactly the serial kernel's canonical order (ascending-k
+//! single accumulator for A·B, the 8-lane-strided `dot_f32` for A·Bᵀ — see
+//! `kernels`), so the floating-point addition order per element — and
+//! therefore the result, bit for bit — is independent of the thread count
+//! AND of the kernel backend.  Small products stay on the serial path
+//! (dispatch overhead would dominate); the cutover cannot change results
+//! for the same reason.
+//!
+//! `gram` fans out over **fixed-size row bands** whose partial Gram
+//! matrices combine through `exec::tree_reduce` — the band size is a
+//! constant, so the combination tree depends only on the row count, never
+//! the thread count, and the result is bit-stable for any pool
+//! configuration.
 
 use crate::exec;
 use crate::tensor::Mat;
 
-/// Below this many multiply-adds a product is not worth fanning out.
-const PAR_MIN_MACS: usize = 1 << 22;
+use super::kernels;
+pub use super::kernels::{axpy_f32, dot_f32};
 
-/// C = A · B (blocked i-k-j loop order, row-major friendly).  Parallel over
-/// output-row bands; bit-identical to [`matmul_serial`] for any thread
-/// count.
+/// Below this many multiply-adds a product is not worth fanning out to the
+/// worker pool.
+///
+/// Calibrated against the kernel-level GFLOP/s sweep in
+/// `benches/microbench_linalg.rs` (recorded in `BENCH_5.json`): one
+/// `par_chunks_mut` dispatch costs a queue lock + condvar wake — tens of
+/// microseconds — while the AVX2 kernels retire a MAC in well under a
+/// nanosecond, so `2^21` MACs (~a few hundred microseconds serial) is the
+/// smallest product where splitting reliably wins on the 2-core CI box.
+/// The pre-SIMD threshold was `2^22`; faster kernels mean *larger* products
+/// are needed to amortize the same dispatch cost per unit of saved time,
+/// but the old value also left real wins on the table for mid-size
+/// compression GEMMs, hence the recalibration rather than a doubling.
+/// Changing this constant can never change results — only where the
+/// serial/parallel cutover sits.
+pub const PAR_MIN_MACS: usize = 1 << 21;
+
+/// One shared dispatch policy for [`matmul_flat`] and [`matmul_bt_flat`]:
+/// fan out only when the pool is usable, the product clears
+/// [`PAR_MIN_MACS`], and there are at least two output rows.  The row
+/// minimum is *structural*, not a tuning knob — the partition unit is an
+/// output row, so a single-row product (the steady-state decode shape)
+/// cannot be split however many MACs it carries.  Batched-across-slots
+/// decode GEMMs exist precisely to lift serving work over this guard; a
+/// future column-partitioned kernel could remove it entirely.
+#[inline]
+fn par_worthwhile(m: usize, k: usize, n: usize) -> bool {
+    m >= 2
+        && m * k * n >= PAR_MIN_MACS
+        && exec::threads() > 1
+        && !exec::in_worker()
+}
+
+/// C = A · B.  Parallel over output-row bands; bit-identical to
+/// [`matmul_serial`] for any thread count and kernel backend.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
     matmul_flat(a, &b.data, b.rows, b.cols)
@@ -41,14 +86,14 @@ pub fn matmul_flat(a: &Mat, b_data: &[f32], b_rows: usize, b_cols: usize) -> Mat
     if n == 0 {
         return c;
     }
-    let nt = exec::threads();
-    if nt <= 1 || exec::in_worker() || m * k * n < PAR_MIN_MACS || m < 2 {
-        mm_rows(a, b_data, n, &mut c.data, 0, m);
+    if !par_worthwhile(m, k, n) {
+        kernels::mm_rows(&a.data, k, 0, m, b_data, n, &mut c.data);
         return c;
     }
-    let rows_per = m.div_ceil(nt);
+    let rows_per = m.div_ceil(exec::threads());
     exec::par_chunks_mut(&mut c.data, rows_per * n, |ci, chunk| {
-        mm_rows(a, b_data, n, chunk, ci * rows_per, chunk.len() / n);
+        kernels::mm_rows(&a.data, k, ci * rows_per, chunk.len() / n, b_data,
+                         n, chunk);
     });
     c
 }
@@ -59,46 +104,15 @@ pub fn matmul_serial(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
     let mut c = Mat::zeros(a.rows, b.cols);
     if b.cols > 0 {
-        mm_rows(a, &b.data, b.cols, &mut c.data, 0, a.rows);
+        kernels::mm_rows(&a.data, a.cols, 0, a.rows, &b.data, b.cols,
+                         &mut c.data);
     }
     c
 }
 
-/// The blocked kernel over output rows `[row0, row0 + rows)`.  `c_rows` is
-/// the destination band (rows·n values), `b_data` the row-major B buffer
-/// with row length `n`.  Per output element the k-loop order is fixed (kb
-/// ascending, kk ascending within the block), so any row partition of the
-/// output accumulates identically to the serial pass.
-fn mm_rows(a: &Mat, b_data: &[f32], n: usize, c_rows: &mut [f32], row0: usize,
-           rows: usize) {
-    let k = a.cols;
-    const BK: usize = 64;
-    const BJ: usize = 256;
-    for kb in (0..k).step_by(BK) {
-        let kend = (kb + BK).min(k);
-        for jb in (0..n).step_by(BJ) {
-            let jend = (jb + BJ).min(n);
-            for i in 0..rows {
-                let arow = &a.data[(row0 + i) * k..(row0 + i + 1) * k];
-                let crow = &mut c_rows[i * n..(i + 1) * n];
-                for kk in kb..kend {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &b_data[kk * n..(kk + 1) * n];
-                    for j in jb..jend {
-                        crow[j] += aik * brow[j];
-                    }
-                }
-            }
-        }
-    }
-}
-
 /// C = A · Bᵀ without materializing the transpose (rows of B are
 /// contiguous).  Parallel over output-row bands; each element is one
-/// `dot_f32`, so partitioning cannot change results.
+/// canonical [`dot_f32`], so partitioning cannot change results.
 pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_bt: {}x{} · ({}x{})ᵀ", a.rows, a.cols, b.rows, b.cols);
     matmul_bt_flat(a, &b.data, b.rows, b.cols)
@@ -116,49 +130,63 @@ pub fn matmul_bt_flat(a: &Mat, b_data: &[f32], b_rows: usize, b_cols: usize)
     if n == 0 {
         return c;
     }
-    let nt = exec::threads();
-    if nt <= 1 || exec::in_worker() || m * k * n < PAR_MIN_MACS || m < 2 {
-        mm_bt_rows(a, b_data, n, &mut c.data, 0, m);
+    if !par_worthwhile(m, k, n) {
+        kernels::mm_bt_rows(&a.data, k, 0, m, b_data, n, &mut c.data);
         return c;
     }
-    let rows_per = m.div_ceil(nt);
+    let rows_per = m.div_ceil(exec::threads());
     exec::par_chunks_mut(&mut c.data, rows_per * n, |ci, chunk| {
-        mm_bt_rows(a, b_data, n, chunk, ci * rows_per, chunk.len() / n);
+        kernels::mm_bt_rows(&a.data, k, ci * rows_per, chunk.len() / n,
+                            b_data, n, chunk);
     });
     c
 }
 
-fn mm_bt_rows(a: &Mat, b_data: &[f32], n: usize, c_rows: &mut [f32],
-              row0: usize, rows: usize) {
-    let k = a.cols;
-    for i in 0..rows {
-        let arow = &a.data[(row0 + i) * k..(row0 + i + 1) * k];
-        let crow = &mut c_rows[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b_data[j * k..(j + 1) * k];
-            crow[j] = dot_f32(arow, brow);
-        }
-    }
-}
+/// Row count of one `gram` band.  A *constant* on purpose: the band
+/// partition — and with it the `tree_reduce` combination tree — must
+/// depend only on the input's row count, so the result is bit-identical
+/// for every thread count (enforced by `rust/tests/parallel_equiv.rs`).
+const GRAM_BAND_ROWS: usize = 128;
 
-/// C = Aᵀ · A (Gram matrix, symmetric — only upper computed then mirrored).
-/// Kept serial: it feeds the whitening path where exact symmetry by
-/// construction matters more than the last factor of parallelism.
+/// C = Aᵀ · A (Gram matrix, symmetric — only the upper triangle is
+/// computed, then mirrored, so exact symmetry holds by construction).
+///
+/// Rows are processed in fixed bands of [`GRAM_BAND_ROWS`]: each band
+/// accumulates a partial upper-triangular Gram (rows ascending, the
+/// canonical element-wise `axpy_f32` per row), the partials fan out across
+/// the worker pool, and `exec::tree_reduce` combines them in a fixed
+/// pairwise tree.  Small inputs run the same banded algorithm inline —
+/// identical bits, no dispatch overhead.
 pub fn gram(a: &Mat) -> Mat {
     let (m, n) = (a.rows, a.cols);
     let mut c = Mat::zeros(n, n);
-    for r in 0..m {
-        let row = &a.data[r * n..(r + 1) * n];
-        for i in 0..n {
-            let ri = row[i];
-            if ri == 0.0 {
-                continue;
-            }
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for j in i..n {
-                crow[j] += ri * row[j];
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let band = |rows: &[f32]| -> Vec<f32> {
+        let mut p = vec![0.0f32; n * n];
+        for row in rows.chunks_exact(n) {
+            for i in 0..n {
+                axpy_f32(&mut p[i * n + i..(i + 1) * n], row[i], &row[i..]);
             }
         }
+        p
+    };
+    let bands: Vec<&[f32]> = a.data.chunks(GRAM_BAND_ROWS * n).collect();
+    // upper-triangle MACs ≈ m·n²/2; below the dispatch threshold the same
+    // banded pass runs inline on the caller (same bands, same tree, same
+    // bits)
+    let partials: Vec<Vec<f32>> = if m * n * n / 2 < PAR_MIN_MACS {
+        bands.iter().map(|rows| band(rows)).collect()
+    } else {
+        exec::par_map(&bands, |_, rows| band(rows))
+    };
+    if let Some(sum) = exec::tree_reduce(partials, |x, y| {
+        for (xe, ye) in x.iter_mut().zip(y) {
+            *xe += ye;
+        }
+    }) {
+        c.data = sum;
     }
     for i in 0..n {
         for j in 0..i {
@@ -166,28 +194,6 @@ pub fn gram(a: &Mat) -> Mat {
         }
     }
     c
-}
-
-/// Fixed-order f32 dot product (4-lane unrolled) — the one accumulation
-/// the projection kernels build on, hence the unit of bit-reproducibility.
-#[inline]
-pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-lane unrolled accumulation — the autovectorizer picks this up.
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..a.len() {
-        s += a[i] * b[i];
-    }
-    s
 }
 
 #[cfg(test)]
@@ -244,6 +250,21 @@ mod tests {
         // symmetry exact by construction
         for i in 0..17 {
             for j in 0..17 {
+                assert_eq!(g.at(i, j), g.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn gram_banding_is_row_count_only() {
+        // spanning multiple 128-row bands must agree with the naive
+        // product within tolerance AND stay exactly symmetric
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(&mut rng, 400, 24, 1.0);
+        let g = gram(&a);
+        assert_close(&g, &matmul(&a.transpose(), &a), 1e-3);
+        for i in 0..24 {
+            for j in 0..24 {
                 assert_eq!(g.at(i, j), g.at(j, i));
             }
         }

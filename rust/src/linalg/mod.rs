@@ -4,14 +4,23 @@
 //! whitening + triangular solves, one-sided Jacobi SVD, Householder QR,
 //! effective-rank utilities.  No BLAS, no external crates; f64 accumulation
 //! where conditioning demands it.
+//!
+//! The innermost MAC loops live in [`kernels`] — a SIMD micro-kernel layer
+//! with an AVX2 backend behind runtime feature detection and a portable
+//! fallback that executes the *same* canonical lane-strided accumulation
+//! orders, so results are bit-identical across backends, ISAs, and thread
+//! counts (`PALLAS_NO_SIMD` / `ExperimentConfig::no_simd` forces the
+//! portable lane; `rust/tests/kernel_equiv.rs` is the gate).
 
 pub mod cholesky;
+pub mod kernels;
 pub mod matmul;
 pub mod qr;
 pub mod svd;
 
 pub use cholesky::{cholesky, cholesky_ridge, right_solve_lower, right_solve_lower_t,
                    solve_lower, solve_lower_t};
-pub use matmul::{gram, matmul, matmul_bt, matmul_bt_flat, matmul_flat,
-                 matmul_serial};
+pub use kernels::{active_backend, force_backend, simd_available, Backend};
+pub use matmul::{axpy_f32, dot_f32, gram, matmul, matmul_bt, matmul_bt_flat,
+                 matmul_flat, matmul_serial, PAR_MIN_MACS};
 pub use svd::{effective_rank, factor, reconstruct, svd, tail_energy, Svd};

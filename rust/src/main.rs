@@ -21,6 +21,11 @@
 //!                            (`--connect <addr>`, `--requests`,
 //!                            `--prompt-len`, `--max-new-tokens`,
 //!                            `--shutdown` to drain the server afterwards)
+//!
+//! Flags shared by every experiment subcommand: `--threads N` sizes the
+//! `exec` worker pool, and `--no-simd` forces the portable kernel backend
+//! (bit-identical to the SIMD one — a debugging/CI knob, never a results
+//! knob; see `linalg::kernels`).
 
 use anyhow::Result;
 
@@ -74,6 +79,7 @@ fn exp_config(args: &Args) -> ExperimentConfig {
     cfg.calib_batches = args.usize_or("calib-batches", cfg.calib_batches);
     cfg.seed = args.u64_or("seed", cfg.seed);
     cfg.threads = args.usize_or("threads", cfg.threads);
+    cfg.no_simd = cfg.no_simd || args.flag("no-simd");
     if args.flag("fast") {
         cfg = cfg.shrunk();
     }

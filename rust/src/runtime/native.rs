@@ -10,10 +10,15 @@
 //! * `llama` — RMSNorm, RoPE, causal MHA, SwiGLU MLP, tied embedding head.
 //! * `opt`   — learned positions, scale-only LayerNorm, GELU MLP, tied head.
 //!
-//! All heavy projections route through `linalg::{matmul, matmul_bt}`, so
-//! the row-partitioned parallel kernels (see `crate::exec`) accelerate the
-//! serving and calibration paths while keeping results bit-identical across
-//! thread counts (every remaining loop here is serial and fixed-order).
+//! All heavy projections route through `linalg::{matmul, matmul_bt}`, and
+//! the per-row reductions (RMSNorm/LayerNorm moments, attention score dots
+//! and value merges) through the same `linalg::kernels` micro-kernel layer
+//! those are built on — so the row-partitioned parallel kernels (see
+//! `crate::exec`) and the SIMD backends accelerate the serving and
+//! calibration paths while keeping results bit-identical across thread
+//! counts and kernel backends (every remaining loop here is serial and
+//! fixed-order, and every kernel executes one canonical lane-strided
+//! accumulation order — see `linalg::kernels`).
 //!
 //! [`decode_step`] is the incremental sibling of [`forward`]: one token
 //! against a per-sequence KV cache (`crate::decode::kv`), sharing the
@@ -32,6 +37,7 @@ use anyhow::{ensure, Result};
 
 use crate::decode::kv::KvCache;
 use crate::exec;
+use crate::linalg::kernels;
 use crate::linalg::matmul::{dot_f32, matmul, matmul_bt, matmul_bt_flat,
                             matmul_flat};
 use crate::model::{ConfigMeta, ParamStore};
@@ -884,7 +890,11 @@ fn gelu_grad(x: f32) -> f32 {
     0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * 0.044715 * x * x)
 }
 
-/// RMSNorm (llama) or scale-only LayerNorm (opt) forward over rows.
+/// RMSNorm (llama) or scale-only LayerNorm (opt) forward over rows.  The
+/// per-row moments accumulate through the canonical 4-lane-strided f64
+/// reductions in `linalg::kernels`, shared by the full forward and the
+/// decode paths — which is one of the three legs the decode-parity
+/// bit-match stands on.
 fn norm_fwd(x: &Mat, scale: &[f32], eps: f32, rms: bool) -> NormTrace {
     let (rows, d) = (x.rows, x.cols);
     let mut y = Mat::zeros(rows, d);
@@ -893,8 +903,7 @@ fn norm_fwd(x: &Mat, scale: &[f32], eps: f32, rms: bool) -> NormTrace {
     for r in 0..rows {
         let xr = x.row(r);
         if rms {
-            let ms: f64 = xr.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
-                / d as f64;
+            let ms: f64 = kernels::sum_sq_f64(xr) / d as f64;
             let rs = (1.0 / (ms + eps as f64).sqrt()) as f32;
             rstd[r] = rs;
             let yr = y.row_mut(r);
@@ -902,14 +911,8 @@ fn norm_fwd(x: &Mat, scale: &[f32], eps: f32, rms: bool) -> NormTrace {
                 yr[j] = xr[j] * rs * scale[j];
             }
         } else {
-            let mu = (xr.iter().map(|&v| v as f64).sum::<f64>() / d as f64) as f32;
-            let var: f64 = xr.iter()
-                .map(|&v| {
-                    let c = (v - mu) as f64;
-                    c * c
-                })
-                .sum::<f64>()
-                / d as f64;
+            let mu = (kernels::sum_f64(xr) / d as f64) as f32;
+            let var: f64 = kernels::sum_sq_centered_f64(xr, mu) / d as f64;
             let rs = (1.0 / (var + eps as f64).sqrt()) as f32;
             mean[r] = mu;
             rstd[r] = rs;
@@ -1060,19 +1063,18 @@ fn attention_fwd(q: &Mat, k: &Mat, v: &Mat, b: usize, t_len: usize, h: usize,
                         prow[u] *= isum;
                     }
                 }
-                // out_t = Σ_u p[u] · v_u
+                // out_t = Σ_u p[u] · v_u — one canonical axpy per position,
+                // ascending u, exactly as `attention_step_row` merges (the
+                // old `pu == 0.0` skip is gone: a skipped `+0.0` term is
+                // observable against a `-0.0` accumulator, so it would
+                // break the step/batched bit-match the kernels guarantee)
                 let prow = probs.row(prow_idx);
                 let orow = &mut attn.data[(base + t) * d + off
                     ..(base + t) * d + off + dh];
                 for (u, &pu) in prow.iter().enumerate().take(t + 1) {
-                    if pu == 0.0 {
-                        continue;
-                    }
                     let vrow = &v.data[(base + u) * d + off
                         ..(base + u) * d + off + dh];
-                    for (o, &vv) in orow.iter_mut().zip(vrow) {
-                        *o += pu * vv;
-                    }
+                    kernels::axpy_f32(orow, pu, vrow);
                 }
             }
         }
@@ -1123,13 +1125,8 @@ fn attention_step_row(qr: &[f32], kc: &Mat, vc: &Mat, t: usize, h: usize,
         }
         let orow = &mut out[off..off + dh];
         for (u, &pu) in prow.iter().enumerate().take(t + 1) {
-            if pu == 0.0 {
-                continue;
-            }
             let vrow = &vc.data[u * d + off..u * d + off + dh];
-            for (o, &vv) in orow.iter_mut().zip(vrow) {
-                *o += pu * vv;
-            }
+            kernels::axpy_f32(orow, pu, vrow);
         }
     }
 }

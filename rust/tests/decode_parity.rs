@@ -14,6 +14,14 @@
 //! (`exec::set_threads` is process-wide, same pattern as
 //! `parallel_equiv.rs`); the scheduler tests rely only on results that are
 //! thread-count independent by construction.
+//!
+//! Kernel backends: ci.sh re-runs this whole gate under `PALLAS_NO_SIMD=1`,
+//! so every parity invariant is proven on BOTH the SIMD and the portable
+//! backend (the backends themselves are bit-identical — see
+//! `rust/tests/kernel_equiv.rs`, which also cross-checks decode logits
+//! across backends directly).  `force_backend` is deliberately not flipped
+//! here: it is process-global, and the tests in this binary run
+//! concurrently.
 
 use std::collections::BTreeMap;
 

@@ -1,0 +1,213 @@
+//! Kernel-backend equivalence gate: the AVX2 and portable SIMD backends
+//! (`linalg::kernels`) must be **bit-identical** on every shape — that is
+//! the whole contract of the micro-kernel layer, and what makes results
+//! reproducible across ISAs.
+//!
+//! Sections:
+//!
+//! 1. primitive kernels (`dot_f32`, `axpy_f32`, the f64 row reductions) on
+//!    adversarial payloads — every remainder lane (lengths 0..=65),
+//!    unaligned slice starts, zero rows, signed zeros, denormals;
+//! 2. the GEMM kernels through `matmul` / `matmul_bt` / `gram` across tile
+//!    remainders, plus proptest-style random shapes (`util::prop::forall`);
+//! 3. end-to-end: full-forward and KV-cached decode logits (dense and
+//!    low-rank), at threads {1, 4}, bit-identical across backends.
+//!
+//! Everything lives in ONE test function: `force_backend` (and
+//! `exec::set_threads`) are process-global, and this harness would
+//! otherwise race against itself.  On hosts without AVX2 the forced-AVX2
+//! runs resolve to the portable backend and the comparisons hold
+//! trivially; the ci.sh `PALLAS_NO_SIMD=1` lane separately re-runs the
+//! whole suite on the portable backend.
+
+use std::collections::BTreeMap;
+
+use zs_svd::exec;
+use zs_svd::linalg::kernels::{self, Backend};
+use zs_svd::linalg::{axpy_f32, dot_f32, gram, matmul, matmul_bt};
+use zs_svd::model::init::init_params;
+use zs_svd::runtime::session::Session;
+use zs_svd::runtime::Runtime;
+use zs_svd::tensor::{IntTensor, Mat};
+use zs_svd::util::prop::forall;
+use zs_svd::util::rng::Rng;
+
+/// Run `f` under a forced backend, restoring automatic resolution after.
+fn with_backend<T>(b: Backend, f: impl FnOnce() -> T) -> T {
+    kernels::force_backend(Some(b));
+    let out = f();
+    kernels::force_backend(None);
+    out
+}
+
+/// Adversarial f32 payload: normals across magnitudes, exact and signed
+/// zeros, denormals — everything the bit-identity contract must survive.
+fn adversarial(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|i| match i % 7 {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::from_bits(1 + (i as u32 % 9)), // denormals
+            3 => -f32::from_bits(3 + (i as u32 % 5)),
+            4 => (rng.uniform() as f32 - 0.5) * 1e-20,
+            5 => (rng.uniform() as f32 - 0.5) * 1e20,
+            _ => rng.uniform() as f32 - 0.5,
+        })
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+fn assert_mat_bits_eq(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+    assert_eq!(bits(&a.data), bits(&b.data), "{what}: bits differ");
+}
+
+/// Uniform-rank random factors matching the artifact ranks of `tag`
+/// (the `decode_parity.rs` helper).
+fn synthetic_factors(sess: &Session, tag: &str, rng: &mut Rng)
+                     -> BTreeMap<String, (Mat, Mat)> {
+    let lm = sess.cfg.lowrank.get(tag).expect("artifact tag");
+    sess.cfg
+        .targets
+        .iter()
+        .map(|t| {
+            let (m, n) = t.shape;
+            let k = lm.ranks[&t.name];
+            (t.name.clone(),
+             (Mat::randn(rng, m, k, 0.05), Mat::randn(rng, k, n, 0.05)))
+        })
+        .collect()
+}
+
+#[test]
+fn simd_and_portable_backends_are_bit_identical() {
+    if !kernels::simd_available() {
+        eprintln!("note: no AVX2 on this host — forced-AVX2 runs resolve to \
+                   portable and this gate only checks self-consistency");
+    }
+
+    // ---- primitives: every remainder lane × unaligned starts ----
+    let mut rng = Rng::new(0x51D);
+    for len in 0..=65usize {
+        for off in [0usize, 1, 3, 5] {
+            let a = adversarial(&mut rng, len + off);
+            let b = adversarial(&mut rng, len + off);
+            let (sa, sb) = (&a[off..], &b[off..]);
+
+            let dp = with_backend(Backend::Portable, || dot_f32(sa, sb));
+            let dv = with_backend(Backend::Avx2, || dot_f32(sa, sb));
+            assert_eq!(dp.to_bits(), dv.to_bits(),
+                       "dot len {len} off {off}: {dp} vs {dv}");
+
+            let sp = with_backend(Backend::Portable,
+                                  || (kernels::sum_f64(sa),
+                                      kernels::sum_sq_f64(sa),
+                                      kernels::sum_sq_centered_f64(sa, 0.31)));
+            let sv = with_backend(Backend::Avx2,
+                                  || (kernels::sum_f64(sa),
+                                      kernels::sum_sq_f64(sa),
+                                      kernels::sum_sq_centered_f64(sa, 0.31)));
+            assert_eq!(sp.0.to_bits(), sv.0.to_bits(), "sum len {len}");
+            assert_eq!(sp.1.to_bits(), sv.1.to_bits(), "sum_sq len {len}");
+            assert_eq!(sp.2.to_bits(), sv.2.to_bits(), "centered len {len}");
+
+            let y0 = adversarial(&mut rng, len);
+            let mut yp = y0.clone();
+            let mut yv = y0;
+            with_backend(Backend::Portable, || axpy_f32(&mut yp, 0.37, sa));
+            with_backend(Backend::Avx2, || axpy_f32(&mut yv, 0.37, sa));
+            assert_eq!(bits(&yp), bits(&yv), "axpy len {len} off {off}");
+        }
+    }
+
+    // ---- GEMM kernels across tile remainders (rows % 4, cols % 16,
+    // k % 8), zero rows included via the adversarial payload ----
+    for &(m, k, n) in &[(1usize, 7usize, 15usize), (1, 128, 512), (2, 0, 4),
+                        (4, 8, 16), (5, 9, 17), (8, 64, 48), (3, 65, 33),
+                        (16, 129, 31), (33, 64, 65)] {
+        let a = Mat::from_vec(m, k, adversarial(&mut rng, m * k));
+        let b = Mat::from_vec(k, n, adversarial(&mut rng, k * n));
+        let bt = Mat::from_vec(n, k, adversarial(&mut rng, n * k));
+        let p = with_backend(Backend::Portable,
+                             || (matmul(&a, &b), matmul_bt(&a, &bt), gram(&a)));
+        let v = with_backend(Backend::Avx2,
+                             || (matmul(&a, &b), matmul_bt(&a, &bt), gram(&a)));
+        assert_mat_bits_eq(&p.0, &v.0, &format!("matmul {m}x{k}x{n}"));
+        assert_mat_bits_eq(&p.1, &v.1, &format!("matmul_bt {m}x{k}x{n}"));
+        assert_mat_bits_eq(&p.2, &v.2, &format!("gram {m}x{k}"));
+    }
+
+    // ---- proptest-style random shapes ----
+    forall("kernel-backend-bitmatch", 32, |rng| {
+        let m = rng.range(1, 40);
+        let k = rng.range(1, 70);
+        let n = rng.range(1, 70);
+        let a = Mat::randn(rng, m, k, 1.0);
+        let b = Mat::randn(rng, k, n, 1.0);
+        let bt = Mat::randn(rng, n, k, 1.0);
+        (a, b, bt)
+    }, |(a, b, bt)| {
+        let p = with_backend(Backend::Portable,
+                             || (matmul(a, b), matmul_bt(a, bt), gram(a)));
+        let v = with_backend(Backend::Avx2,
+                             || (matmul(a, b), matmul_bt(a, bt), gram(a)));
+        if bits(&p.0.data) != bits(&v.0.data) {
+            return Err(format!("matmul {}x{}x{}", a.rows, a.cols, b.cols));
+        }
+        if bits(&p.1.data) != bits(&v.1.data) {
+            return Err(format!("matmul_bt {}x{}x{}", a.rows, a.cols, bt.rows));
+        }
+        if bits(&p.2.data) != bits(&v.2.data) {
+            return Err(format!("gram {}x{}", a.rows, a.cols));
+        }
+        Ok(())
+    });
+
+    // ---- end-to-end: forward + KV-cached decode, dense and low-rank,
+    // threads {1, 4} — the whole runtime stack must be backend-invariant ----
+    let rt = Runtime::load_default().unwrap();
+    let sess = Session::new(&rt, "tiny");
+    let mut prng = Rng::new(0xE2E);
+    let params = init_params(&sess.cfg, &mut prng);
+    let tag = "60";
+    let factors = synthetic_factors(&sess, tag, &mut prng);
+    let seq = sess.cfg.seq_len;
+    let tokens: Vec<i32> = (0..seq + 1)
+        .map(|_| prng.range(1, sess.cfg.vocab) as i32)
+        .collect();
+    let full = IntTensor::from_vec(&[1, seq + 1], tokens.clone());
+
+    for threads in [1usize, 4] {
+        exec::set_threads(threads);
+        let run = || {
+            let (loss, logits) = sess.fwd(&params, &full).unwrap();
+            let (_, lr_logits) =
+                sess.lowrank_fwd(tag, &params, &factors, &full).unwrap();
+            let mut cache = sess.new_kv_cache();
+            let steps: Vec<Vec<f32>> = tokens[..seq]
+                .iter()
+                .map(|&t| {
+                    sess.decode_step(&params, &mut cache, t).unwrap().data
+                })
+                .collect();
+            (loss, logits.data, lr_logits.data, steps)
+        };
+        let p = with_backend(Backend::Portable, &run);
+        let v = with_backend(Backend::Avx2, &run);
+        assert_eq!(p.0.to_bits(), v.0.to_bits(),
+                   "loss differs across backends @ {threads} threads");
+        assert_eq!(bits(&p.1), bits(&v.1),
+                   "forward logits differ across backends @ {threads} threads");
+        assert_eq!(bits(&p.2), bits(&v.2),
+                   "lowrank logits differ across backends @ {threads} threads");
+        for (pos, (sp, sv)) in p.3.iter().zip(&v.3).enumerate() {
+            assert_eq!(bits(sp), bits(sv),
+                       "decode step {pos} differs across backends \
+                        @ {threads} threads");
+        }
+    }
+    exec::set_threads(0);
+}

@@ -1,9 +1,12 @@
 //! Serial-vs-parallel equivalence harness: the `exec` worker pool must be
 //! invisible in the numbers.  For thread counts {1, 2, 4} the parallel
-//! matmul kernel, `decompose_all`, and a full `compress_zs` run (including
-//! one correction iteration, which exercises the native backward pass and
-//! its parallel projections) must produce BIT-IDENTICAL results — ranks,
-//! `stored_params`, replacement matrices, factors.
+//! matmul kernel, the band-partitioned `gram`, `decompose_all`, and a full
+//! `compress_zs` run (including one correction iteration, which exercises
+//! the native backward pass and its parallel projections) must produce
+//! BIT-IDENTICAL results — ranks, `stored_params`, replacement matrices,
+//! factors.  The whole harness re-runs on the portable kernel backend in
+//! ci.sh's `PALLAS_NO_SIMD=1` lane (backend bit-identity itself is gated
+//! by `rust/tests/kernel_equiv.rs`).
 //!
 //! Everything lives in ONE test function: `exec::set_threads` is process
 //! global, and the harness would otherwise race against itself.
@@ -12,7 +15,7 @@ use zs_svd::compress::pipeline::decompose_all;
 use zs_svd::compress::{compress_zs, Calibration, ZsOpts};
 use zs_svd::data;
 use zs_svd::exec;
-use zs_svd::linalg::{matmul, matmul_serial};
+use zs_svd::linalg::{gram, matmul, matmul_serial};
 use zs_svd::model::init::init_params;
 use zs_svd::runtime::session::Session;
 use zs_svd::runtime::Runtime;
@@ -40,6 +43,17 @@ fn serial_and_parallel_paths_are_bit_identical() {
     for t in [1usize, 2, 4] {
         exec::set_threads(t);
         assert_eq!(matmul(&a, &b), reference, "matmul at {t} threads");
+    }
+
+    // ---- gram: fixed row-band fan-out + pairwise tree reduction.  The
+    // band size is a constant, so the combination tree — and the bits —
+    // depend only on the row count, never the thread count ----
+    let gx = Mat::randn(&mut rng, 700, 96, 1.0); // spans several 128-row bands
+    exec::set_threads(1);
+    let gram_ref = gram(&gx);
+    for t in [1usize, 2, 4] {
+        exec::set_threads(t);
+        assert_eq!(gram(&gx), gram_ref, "gram at {t} threads");
     }
 
     // ---- decompose_all ----

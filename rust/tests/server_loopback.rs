@@ -8,7 +8,10 @@
 //!    so the sweep also proves chunk-size invariance over the wire).
 //!    Everything thread-global lives in one test function
 //!    (`exec::set_threads` is process-wide, the `parallel_equiv.rs`
-//!    pattern).
+//!    pattern).  ci.sh re-runs this gate under `PALLAS_NO_SIMD=1`, so the
+//!    wire bit-match holds on both kernel backends (backend bit-identity
+//!    itself is `rust/tests/kernel_equiv.rs`'s job; `force_backend` is
+//!    process-global and never flipped here).
 //! 2. **Backpressure** — with one slot busy and the admission queue full,
 //!    further requests get a structured `overloaded` reply (never a silent
 //!    drop), every admitted request completes exactly once, and the server
