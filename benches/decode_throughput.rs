@@ -10,14 +10,23 @@
 //! separate token rates (`common::PHASE_HEADERS`): prefill runs through
 //! the chunked batched-GEMM ingest, decode through the across-slot batched
 //! step, and folding them into one number would hide both effects.
+//!
+//! The second half sweeps **speculative self-decode**: the dense target
+//! speculating through a high-compression ZS-SVD drafter at K ∈ {2, 4}
+//! against the K = 0 baseline.  Greedy tokens are bit-identical at every K
+//! (`rust/tests/decode_parity.rs` gates that), so the sweep isolates the
+//! rate effect — acceptance rate and the decode tok/s ratio vs K = 0 — and
+//! records it machine-readably in `BENCH_6.json` at the repo root.
 
 mod common;
 
 use zs_svd::coordinator::{self, Method};
-use zs_svd::decode::{run_decode, synth_requests, DecodeConfig};
+use zs_svd::decode::{run_decode, run_decode_speculative, synth_requests,
+                     DecodeConfig};
 use zs_svd::report::{f2, latency_cells, mb, Table, LATENCY_HEADERS};
 use zs_svd::serve::Engine;
 use zs_svd::util::benchkit::fast_mode;
+use zs_svd::util::json::Json;
 
 fn main() {
     let rt = common::runtime();
@@ -32,6 +41,7 @@ fn main() {
         seed: 1,
         arrival_steps: 0.0, // saturating queue
         prefill_chunk: 0,   // whole-prompt chunks: peak prefill batching
+        speculate_k: 0,
     };
     let reqs = synth_requests(&p.session.cfg, n_requests, prompt_len, max_new,
                               0xD0);
@@ -77,6 +87,85 @@ fn main() {
         row.extend([f2(s.ttft.p50), mb(s.kv_bytes_per_slot as f64)]);
         t.row(row);
     }
+
+    // ---------------------------------------------------------------
+    // speculative self-decode: dense target + ZS-SVD drafter (ratio 0.4,
+    // the same 60%-compression artifact the serve CLI's default
+    // `--draft-ratio 0.4` selects).  K = 0 is the dense baseline already
+    // measured above; tokens are bit-identical at every K, so the only
+    // things that move are the acceptance rate and the decode tok/s.
+    // ---------------------------------------------------------------
+    let dratio = 0.4;
+    let dtag = format!("{}", (dratio * 100.0) as usize);
+    let dplan = coordinator::run_method(&p, &Method::zs(dratio), dratio)
+        .expect("compress drafter");
+    let dlm = p.session.cfg.lowrank.get(&dtag).expect("artifact tag");
+    let drafter = Engine::from_plan_capped(&dtag, &dplan, &dlm.ranks);
+
+    let base_decode = d.decode_tok_per_sec;
+    let mut spec_results = vec![Json::obj(vec![
+        ("speculate_k", Json::num(0.0)),
+        ("engine", Json::str(&d.engine)),
+        ("decode_tok_per_sec", Json::num(d.decode_tok_per_sec)),
+        ("prefill_tok_per_sec", Json::num(d.prefill_tok_per_sec)),
+        ("decode_speedup_vs_k0", Json::num(1.0)),
+        ("drafted_tokens", Json::num(0.0)),
+        ("accepted_draft_tokens", Json::num(0.0)),
+        ("acceptance_rate", Json::num(0.0)),
+    ])];
+    for k in [2usize, 4] {
+        let dc_k = DecodeConfig { speculate_k: k, ..dc.clone() };
+        let (s, _) = run_decode_speculative(&p.session, &p.params,
+                                            &Engine::Dense, &drafter, &reqs,
+                                            &dc_k)
+            .expect("speculative decode");
+        let speedup = if base_decode > 0.0 {
+            s.decode_tok_per_sec / base_decode
+        } else {
+            0.0
+        };
+        eprintln!("  {}: {:.0} decode tok/s ({speedup:.2}x vs K=0), \
+                   acceptance {:.2} ({}/{} drafted)",
+                  s.engine, s.decode_tok_per_sec, s.draft_acceptance,
+                  s.accepted_draft_tokens, s.drafted_tokens);
+        let mut row = vec![s.engine.clone(), "0%".into()];
+        row.extend(common::phase_cells(s.prefill_tok_per_sec,
+                                       s.decode_tok_per_sec));
+        row.push(f2(s.total_tok_per_sec));
+        row.extend(latency_cells(&s.latency));
+        row.extend([f2(s.ttft.p50), mb(s.kv_bytes_per_slot as f64)]);
+        t.row(row);
+        spec_results.push(Json::obj(vec![
+            ("speculate_k", Json::num(k as f64)),
+            ("engine", Json::str(&s.engine)),
+            ("decode_tok_per_sec", Json::num(s.decode_tok_per_sec)),
+            ("prefill_tok_per_sec", Json::num(s.prefill_tok_per_sec)),
+            ("decode_speedup_vs_k0", Json::num(speedup)),
+            ("drafted_tokens", Json::num(s.drafted_tokens as f64)),
+            ("accepted_draft_tokens",
+             Json::num(s.accepted_draft_tokens as f64)),
+            ("acceptance_rate", Json::num(s.draft_acceptance)),
+        ]));
+    }
+
+    let bench6 = Json::obj(vec![
+        ("bench", Json::str("decode_throughput/speculative")),
+        ("generated_by",
+         Json::str("cargo bench --bench decode_throughput (also run by ci.sh)")),
+        ("fast_mode", Json::Bool(fast_mode())),
+        ("target", Json::str(&d.engine)),
+        ("drafter", Json::str(&format!("lowrank-r{dtag} (ratio {dratio})"))),
+        ("units", Json::str("decode_tok_per_sec over batched decode-step \
+                             wall time; speedup is the ratio to the K=0 \
+                             dense baseline; greedy tokens bit-identical \
+                             at every K")),
+        ("results", Json::Arr(spec_results)),
+    ]);
+    let bench6_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("BENCH_6.json");
+    std::fs::write(&bench6_path, bench6.to_string_pretty() + "\n")
+        .expect("write BENCH_6.json");
+    println!("[saved {}]", bench6_path.display());
 
     common::emit("decode_throughput", &t);
 }

@@ -42,7 +42,7 @@ fn drive(p: &Prepared, params: &zs_svd::model::ParamStore, engine: &Engine,
         queue_depth: 128,
         decode: DecodeConfig { max_slots: 4, max_new_tokens: load.max_new,
                                temperature: 0.0, seed: 1, arrival_steps: 0.0,
-                               prefill_chunk },
+                               prefill_chunk, speculate_k: 0 },
     };
     let vocab = p.session.cfg.vocab;
     let (tx, rx) = mpsc::channel::<SocketAddr>();
@@ -51,7 +51,7 @@ fn drive(p: &Prepared, params: &zs_svd::model::ParamStore, engine: &Engine,
     std::thread::scope(|s| {
         let cfg = &cfg;
         let srv = s.spawn(move || {
-            server::run(sess, params, engine, cfg, move |a| {
+            server::run(sess, params, engine, None, cfg, move |a| {
                 tx.send(a).expect("report addr");
             })
         });

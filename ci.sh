@@ -62,36 +62,49 @@ echo "== server smoke: server_throughput (ZS_BENCH_FAST=1) =="
 # dense + low-rank engines behind the TCP front-end, loopback client fleet
 ZS_BENCH_FAST=1 cargo bench --bench server_throughput
 
-echo "== server loopback smoke: serve --listen + scripted client =="
-# start the network server on an OS-assigned port, run a short scripted
-# client session (streamed completions + metrics), then drain it via the
-# protocol shutdown and require a clean exit
-PORT_FILE="$(mktemp)"
-rm -f "$PORT_FILE"
-./target/release/zs-svd serve --listen 127.0.0.1:0 \
-    --port-file "$PORT_FILE" --max-new-tokens 4 --fast &
-SRV_PID=$!
-# never leave the background server orphaned: if the client (or anything
-# below) fails under `set -e`, kill it on the way out
-trap 'kill "$SRV_PID" 2>/dev/null || true' EXIT
-for _ in $(seq 1 600); do
-    [ -s "$PORT_FILE" ] && break
-    if ! kill -0 "$SRV_PID" 2>/dev/null; then
-        echo "FATAL: server exited before binding"
+serve_smoke() {
+    # start the network server on an OS-assigned port (extra server flags in
+    # "$@"), run a short scripted client session (streamed completions +
+    # metrics), then drain it via the protocol shutdown and require a clean
+    # exit
+    PORT_FILE="$(mktemp)"
+    rm -f "$PORT_FILE"
+    ./target/release/zs-svd serve --listen 127.0.0.1:0 \
+        --port-file "$PORT_FILE" --max-new-tokens 4 --fast "$@" &
+    SRV_PID=$!
+    # never leave the background server orphaned: if the client (or anything
+    # below) fails under `set -e`, kill it on the way out
+    trap 'kill "$SRV_PID" 2>/dev/null || true' EXIT
+    for _ in $(seq 1 600); do
+        [ -s "$PORT_FILE" ] && break
+        if ! kill -0 "$SRV_PID" 2>/dev/null; then
+            echo "FATAL: server exited before binding"
+            exit 1
+        fi
+        sleep 0.5
+    done
+    if [ ! -s "$PORT_FILE" ]; then
+        echo "FATAL: server never wrote its port file"
+        kill "$SRV_PID" 2>/dev/null || true
         exit 1
     fi
-    sleep 0.5
-done
-if [ ! -s "$PORT_FILE" ]; then
-    echo "FATAL: server never wrote its port file"
-    kill "$SRV_PID" 2>/dev/null || true
-    exit 1
-fi
-./target/release/zs-svd client --connect "$(cat "$PORT_FILE")" \
-    --requests 2 --prompt-len 8 --max-new-tokens 4 --shutdown
-wait "$SRV_PID"
-trap - EXIT
-rm -f "$PORT_FILE"
+    ./target/release/zs-svd client --connect "$(cat "$PORT_FILE")" \
+        --requests 2 --prompt-len 8 --max-new-tokens 4 --shutdown
+    wait "$SRV_PID"
+    trap - EXIT
+    rm -f "$PORT_FILE"
+}
+
+echo "== server loopback smoke: serve --listen + scripted client =="
+serve_smoke
 echo "server smoke OK (clean streamed completion + shutdown)"
+
+echo "== speculative serve smoke: serve --listen --speculate-k 2 =="
+# same round-trip with the dense target speculating through the ZS-SVD
+# drafter (--draft-ratio default 0.4): streamed tokens are bit-identical
+# by construction (rust/tests/server_loopback.rs gates that); this smoke
+# proves the CLI drafter wiring end-to-end
+serve_smoke --speculate-k 2
+echo "speculative serve smoke OK (drafter round-trip + shutdown)"
 
 echo "CI OK"

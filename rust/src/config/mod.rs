@@ -52,6 +52,11 @@ pub struct ExperimentConfig {
     /// against peak prefill throughput (larger chunks batch more rows per
     /// GEMM).
     pub prefill_chunk: usize,
+    /// draft tokens per slot per iteration for speculative self-decode
+    /// (`serve --speculate-k`); 0 disables speculation.  Greedy output is
+    /// bit-identical for every value — the knob only changes how many
+    /// tokens commit per target verification call.
+    pub speculate_k: usize,
     /// where checkpoints live
     pub ckpt_dir: PathBuf,
     /// where result tables are appended
@@ -77,6 +82,7 @@ impl Default for ExperimentConfig {
             max_new_tokens: 32,
             queue_depth: 64,
             prefill_chunk: 16,
+            speculate_k: 0,
             ckpt_dir: root.join("artifacts").join("ckpts"),
             out_dir: root.join("results"),
         }
@@ -108,6 +114,7 @@ impl ExperimentConfig {
             max_new_tokens: j.usize_or("max_new_tokens", d.max_new_tokens),
             queue_depth: j.usize_or("queue_depth", d.queue_depth),
             prefill_chunk: j.usize_or("prefill_chunk", d.prefill_chunk),
+            speculate_k: j.usize_or("speculate_k", d.speculate_k),
             ckpt_dir: j
                 .get("ckpt_dir")
                 .and_then(Json::as_str)
@@ -146,6 +153,7 @@ impl ExperimentConfig {
             ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
             ("prefill_chunk", Json::num(self.prefill_chunk as f64)),
+            ("speculate_k", Json::num(self.speculate_k as f64)),
             ("ckpt_dir", Json::str(self.ckpt_dir.to_str().unwrap_or("."))),
             ("out_dir", Json::str(self.out_dir.to_str().unwrap_or("."))),
         ])
@@ -179,12 +187,14 @@ mod tests {
         assert_eq!(back.max_new_tokens, c.max_new_tokens);
         assert_eq!(back.queue_depth, c.queue_depth);
         assert_eq!(back.prefill_chunk, c.prefill_chunk);
+        assert_eq!(back.speculate_k, c.speculate_k);
         assert_eq!(back.no_simd, c.no_simd);
 
-        let forced =
-            ExperimentConfig { no_simd: true, ..ExperimentConfig::default() };
+        let forced = ExperimentConfig { no_simd: true, speculate_k: 3,
+                                        ..ExperimentConfig::default() };
         let back = ExperimentConfig::from_json(&forced.to_json());
         assert!(back.no_simd, "no_simd must survive the roundtrip");
+        assert_eq!(back.speculate_k, 3);
     }
 
     #[test]

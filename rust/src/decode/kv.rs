@@ -71,6 +71,22 @@ impl KvCache {
         self.len = 0;
     }
 
+    /// Partial rewind — the dual of [`KvCache::reset`].  Speculative decode
+    /// rolls the cursor back past rejected draft positions with this; like
+    /// `reset`, it only moves the cursor.  Rows `>= len` become unreachable
+    /// again and are overwritten in place by the next append at those
+    /// positions.  A rewind can never extend the cache, so `len` must not
+    /// exceed the current cursor.
+    pub fn truncate(&mut self, len: usize) {
+        assert!(
+            len <= self.len,
+            "KvCache::truncate to {} beyond cursor {}",
+            len,
+            self.len
+        );
+        self.len = len;
+    }
+
     /// Remaining positions before the arena is full.
     pub fn remaining(&self) -> usize {
         self.max_len - self.len
@@ -124,5 +140,28 @@ mod tests {
         assert_eq!(c.len, 0);
         assert_eq!(c.remaining(), c.max_len);
         assert_eq!(c.k[0].row(0)[0], 7.0); // arena survives
+    }
+
+    #[test]
+    fn truncate_rewinds_cursor_only() {
+        let cfg = tiny();
+        let mut c = KvCache::new(&cfg);
+        c.len = 5;
+        c.k[0].row_mut(4)[0] = 3.0;
+        c.truncate(5); // no-op at the cursor
+        assert_eq!(c.len, 5);
+        c.truncate(2);
+        assert_eq!(c.len, 2);
+        assert_eq!(c.remaining(), c.max_len - 2);
+        assert_eq!(c.k[0].row(4)[0], 3.0); // stale row survives, unreachable
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond cursor")]
+    fn truncate_cannot_extend() {
+        let cfg = tiny();
+        let mut c = KvCache::new(&cfg);
+        c.len = 2;
+        c.truncate(3);
     }
 }

@@ -22,12 +22,15 @@
 //!   scheduling order, and thread count.
 //! * [`scheduler`] — the continuous-batching loop: [`run_engine`] pulls
 //!   work from a [`RequestSource`] (a fixed benchmark workload or the
-//!   network server's admission queue), advances the batch through at most
-//!   two batched kernel calls per iteration (one across-slot decode step,
-//!   one chunk of every prefilling prompt — see
+//!   network server's admission queue), advances the batch through a
+//!   bounded number of batched kernel calls per iteration (the across-slot
+//!   decode advance, one chunk of every prefilling prompt — see
 //!   [`DecodeConfig::prefill_chunk`]), and streams every generated token
 //!   through a [`DecodeEvent`] sink; [`run_decode`] is the classic
-//!   run-to-completion wrapper over a [`WorkloadSource`].
+//!   run-to-completion wrapper over a [`WorkloadSource`], and
+//!   [`run_decode_speculative`] the same wrapper with a drafter engine
+//!   proposing [`DecodeConfig::speculate_k`] tokens per slot per iteration
+//!   for the target to verify in one batched call.
 //!
 //! # Determinism
 //!
@@ -37,12 +40,18 @@
 //! kernel's projections are row-independent (each output row is one
 //! fixed-order accumulation; see `linalg::matmul`), so its logits also
 //! bit-match the token-at-a-time reference for every chunk size and batch
-//! composition.  The parity gate in `rust/tests/decode_parity.rs` enforces
-//! both halves for the dense and the low-rank engines.  Scheduling only
-//! chooses *when* a sequence advances, never *what* it computes, so
-//! generated tokens are reproducible under any slot count / thread count /
-//! prefill chunk size / arrival pattern — including tokens streamed over
-//! TCP by `crate::server`, which bit-match the offline path
+//! composition.  The verify-mode contract extends this per position:
+//! `runtime::native::decode_batch_modes` with `LogitsMode::All` returns,
+//! for run position `j`, the bit-exact row a last-position call ending at
+//! `j` would return — which is why speculative verification (accept a
+//! draft only where it equals the target's own greedy sample) cannot
+//! change generated output, only how many tokens commit per iteration.
+//! The parity gate in `rust/tests/decode_parity.rs` enforces all of it
+//! for the dense and the low-rank engines.  Scheduling only chooses
+//! *when* a sequence advances, never *what* it computes, so generated
+//! tokens are reproducible under any slot count / thread count / prefill
+//! chunk size / arrival pattern / speculation depth — including tokens
+//! streamed over TCP by `crate::server`, which bit-match the offline path
 //! (`rust/tests/server_loopback.rs`).
 
 pub mod kv;
@@ -51,7 +60,8 @@ pub mod scheduler;
 
 pub use kv::KvCache;
 pub use sampler::{argmax, Sampler};
-pub use scheduler::{run_decode, run_engine, sampler_seed, synth_requests,
-                    CompletedRequest, DecodeConfig, DecodeEvent,
-                    DecodeRequest, DecodeStats, EngineCounters,
-                    RequestSource, SourcePoll, WorkloadSource};
+pub use scheduler::{run_decode, run_decode_speculative, run_engine,
+                    sampler_seed, synth_requests, CompletedRequest,
+                    DecodeConfig, DecodeEvent, DecodeRequest, DecodeStats,
+                    EngineCounters, RequestSource, SourcePoll,
+                    WorkloadSource};

@@ -58,6 +58,15 @@ impl Sampler {
         }
     }
 
+    /// Whether this sampler is the greedy argmax policy.  Greedy sampling
+    /// consumes no rng state, so speculative decode can verify draft tokens
+    /// through `sample` without perturbing the random stream — which is why
+    /// speculation is gated on this predicate (temperature slots fall back
+    /// to plain one-token decode).
+    pub fn is_greedy(&self) -> bool {
+        matches!(self, Sampler::Greedy)
+    }
+
     /// Draw the next token id from a logits row.
     pub fn sample(&mut self, logits: &[f32]) -> usize {
         match self {

@@ -28,27 +28,64 @@
 //!
 //! # Batched execution
 //!
-//! Each iteration issues at most two batched kernel calls: one advancing
-//! every decoding slot by one token (the slots' hidden states share a
-//! single activation matrix per layer — one GEMM across the batch instead
-//! of per-slot single-row products), and one ingesting the current prompt
-//! chunk of every prefilling slot.  Chunked prefill bounds the work any
-//! single iteration performs, so a long prompt no longer stalls the whole
-//! batch for its entire prefill: ongoing decode steps interleave with its
-//! chunks, one per iteration.  Row-level parallelism inside the GEMMs comes
-//! from the persistent `exec` pool.
+//! Each iteration issues a bounded number of batched kernel calls: the
+//! decode advance across every decoding slot (the slots' hidden states
+//! share a single activation matrix per layer — one GEMM across the batch
+//! instead of per-slot single-row products), and one ingest of the current
+//! prompt chunk of every prefilling slot.  Chunked prefill bounds the work
+//! any single iteration performs, so a long prompt no longer stalls the
+//! whole batch for its entire prefill: ongoing decode steps interleave with
+//! its chunks, one per iteration.  Row-level parallelism inside the GEMMs
+//! comes from the persistent `exec` pool.
+//!
+//! # Speculative self-decode
+//!
+//! With [`DecodeConfig::speculate_k`] > 0 and a drafter engine (built from
+//! the *same* plan artifact — typically the high-compression low-rank
+//! factors, while the target stays dense), each decoding slot proposes up
+//! to K tokens per iteration instead of one: the drafter catches up on any
+//! tokens it has not yet ingested and emits K greedy draft tokens (one
+//! batched drafter call for the catch-up + first draft, then K−1 batched
+//! single-token drafter calls), and the target then scores the whole
+//! `[pending, draft_1 .. draft_K]` run in ONE batched verify call that
+//! returns logits at **all** K+1 positions
+//! (`Session::decode_batch_modes`, `LogitsMode::All`).  The slot accepts
+//! the longest prefix of drafts that match the target's own greedy
+//! samples, plus the target's token at the first mismatch (or the free
+//! bonus token when everything matched) — so every verify round commits
+//! between 1 and K+1 tokens.  Rejected positions are rolled back with
+//! [`KvCache::truncate`], the dual of `reset()`: both the target's and
+//! the drafter's cursors rewind past them, and the stale rows are simply
+//! overwritten by the next run.
+//!
+//! Speculation is gated per slot on greedy sampling
+//! (`Sampler::is_greedy`): greedy consumes no rng, so verification through
+//! the slot's own sampler is bit-identical to plain decode, while a
+//! temperature slot would consume a *different number* of rng draws under
+//! speculation.  Temperature slots (and slots out of budget or KV
+//! headroom) simply run with K = 0, which degenerates to the plain
+//! one-token batched step — same code path, run length 1.  During prefill,
+//! each prompt chunk is mirrored into the drafter's cache in the same
+//! iteration (one extra batched drafter call, no logits), so the drafter
+//! is warm the moment decoding starts; the first generated token is still
+//! sampled from the TARGET's prompt logits.
 //!
 //! # Determinism
 //!
 //! Generated tokens are bit-reproducible for any slot count / thread count
-//! / chunk size / arrival pattern: the batched kernel is row-independent
-//! (a sequence's logits cannot depend on which other sequences share the
-//! GEMM — see `decode_batch`'s bit-identity contract), and every sequence
-//! samples from its own seeded `Sampler` — explicitly via
-//! `DecodeRequest::seed`, or derived from the scheduler seed and request id
-//! by [`sampler_seed`].  Scheduling chooses *when* a sequence advances,
-//! never *what* it computes, which is what lets network generations
-//! bit-match the offline path (`rust/tests/server_loopback.rs`).
+//! / chunk size / arrival pattern / speculation depth K: the batched
+//! kernel is row-independent (a sequence's logits cannot depend on which
+//! other sequences share the GEMM — see `decode_batch`'s bit-identity
+//! contract), and every sequence samples from its own seeded `Sampler` —
+//! explicitly via `DecodeRequest::seed`, or derived from the scheduler
+//! seed and request id by [`sampler_seed`].  Scheduling chooses *when* a
+//! sequence advances, never *what* it computes; speculative verification
+//! accepts a token only when it equals what the target itself would have
+//! sampled at that position, so speculation changes only how many
+//! positions commit per iteration, which is what lets network generations
+//! bit-match the offline path (`rust/tests/server_loopback.rs`) and
+//! speculative runs bit-match plain decode
+//! (`rust/tests/decode_parity.rs`).
 //!
 //! Latency accounting: a request's latency spans eligibility → completion
 //! (queue wait included, so admission pressure is visible in p95/p99);
@@ -64,11 +101,12 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::kv::KvCache;
-use super::sampler::Sampler;
+use super::sampler::{argmax, Sampler};
 use crate::model::{ConfigMeta, ParamStore};
+use crate::runtime::native::LogitsMode;
 use crate::runtime::session::Session;
 use crate::serve::{peak_rss_bytes, Engine};
-use crate::tensor::Tensor;
+use crate::tensor::{Mat, Tensor};
 use crate::util::rng::Rng;
 use crate::util::stats::LatencySummary;
 
@@ -143,12 +181,19 @@ pub struct DecodeConfig {
     /// work so ongoing decode steps interleave with a long prompt's
     /// prefill; generated tokens are identical for every chunk size.
     pub prefill_chunk: usize,
+    /// speculative draft depth K: tokens the drafter engine proposes per
+    /// slot per iteration, all verified in one batched target call; 0
+    /// disables speculation.  Takes effect only when the engine run is
+    /// given a drafter, and only on greedy slots (see the module docs —
+    /// generated tokens are bit-identical to plain decode for every K).
+    pub speculate_k: usize,
 }
 
 impl Default for DecodeConfig {
     fn default() -> Self {
         DecodeConfig { max_slots: 4, max_new_tokens: 32, temperature: 0.0,
-                       seed: 1, arrival_steps: 0.0, prefill_chunk: 0 }
+                       seed: 1, arrival_steps: 0.0, prefill_chunk: 0,
+                       speculate_k: 0 }
     }
 }
 
@@ -167,6 +212,11 @@ pub struct CompletedRequest {
     pub ttft_ms: f64,
     /// eligibility → slot admission, ms (pure queue wait)
     pub queue_ms: f64,
+    /// the KV arena filled before the generation budget was reached — the
+    /// request got fewer tokens than it asked for because the prompt left
+    /// less headroom than `max_new_tokens` (previously this truncation was
+    /// silent)
+    pub truncated: bool,
 }
 
 /// Per-token / per-completion emissions from [`run_engine`], delivered on
@@ -188,6 +238,18 @@ pub enum DecodeEvent {
     },
     /// request finished (budget reached or KV arena full)
     Done(CompletedRequest),
+    /// one iteration's speculative verify summary: `proposed` drafter
+    /// tokens entered verification, `accepted` of them matched the
+    /// target's own greedy samples.  Emitted only on iterations that
+    /// drafted (the server's metrics registry aggregates these into the
+    /// wire acceptance rate); sinks that only care about tokens can
+    /// ignore it.
+    Draft {
+        /// drafter tokens verified this iteration
+        proposed: usize,
+        /// drafter tokens the target accepted
+        accepted: usize,
+    },
 }
 
 /// What a [`RequestSource`] hands the scheduler when asked for work.
@@ -224,6 +286,11 @@ pub struct WorkloadSource<'a> {
     arrival_steps: f64,
     next: usize,
     arrivals: Vec<Option<Instant>>,
+    /// lowest index whose arrival is still unstamped — arrivals are
+    /// monotone in the request index, so each `tick` resumes here instead
+    /// of rescanning every request (the old loop was
+    /// O(requests × iterations) over a run)
+    first_unstamped: usize,
 }
 
 impl<'a> WorkloadSource<'a> {
@@ -235,17 +302,26 @@ impl<'a> WorkloadSource<'a> {
             arrival_steps,
             next: 0,
             arrivals: vec![None; requests.len()],
+            first_unstamped: 0,
         }
     }
 }
 
 impl RequestSource for WorkloadSource<'_> {
     fn tick(&mut self, iter: usize) {
+        // request `i` is due at iteration `i * arrival_steps` — monotone
+        // in `i`, so the first not-yet-due index ends the scan and the
+        // next tick resumes from it
+        if self.first_unstamped >= self.arrivals.len() {
+            return;
+        }
         let now = Instant::now();
-        for (i, a) in self.arrivals.iter_mut().enumerate() {
-            if a.is_none() && (i as f64) * self.arrival_steps <= iter as f64 {
-                *a = Some(now);
-            }
+        while self.first_unstamped < self.arrivals.len()
+            && (self.first_unstamped as f64) * self.arrival_steps
+                <= iter as f64
+        {
+            self.arrivals[self.first_unstamped] = Some(now);
+            self.first_unstamped += 1;
         }
     }
 
@@ -295,6 +371,12 @@ pub struct EngineCounters {
     /// wall time spent inside the batched prefill-chunk kernel calls
     /// (the denominator of [`EngineCounters::prefill_tok_per_sec`])
     pub prefill_secs: f64,
+    /// drafter tokens proposed into speculative verification (0 when
+    /// speculation is disabled)
+    pub drafted_tokens: usize,
+    /// drafted tokens the target accepted — matched the target's own
+    /// greedy sample at that position (rejected = drafted − accepted)
+    pub accepted_draft_tokens: usize,
 }
 
 impl EngineCounters {
@@ -305,13 +387,27 @@ impl EngineCounters {
     /// Prefill runs as its own kernel call per iteration, so this stays
     /// meaningful for any chunk size — mixed iterations charge only their
     /// decode section here (the pre-PR-4 definition counted whole
-    /// prefill-free iterations, which chunked prefill can starve).  Falls
-    /// back to the whole-run average when no decode section ever ran.
+    /// prefill-free iterations, which chunked prefill can starve).
+    /// Returns 0.0 when no decode section ever ran: the old fallback
+    /// divided `decode_tokens` by whole-run wall time, which includes
+    /// queue idling, so a prefill-only run with long idle gaps reported a
+    /// misleading near-zero rate instead of an unambiguous zero (read it
+    /// together with [`EngineCounters::requests_completed`]).
     pub fn decode_tok_per_sec(&self) -> f64 {
         if self.decode_only_secs > 0.0 {
             self.decode_only_tokens as f64 / self.decode_only_secs
-        } else if self.wall_seconds > 0.0 {
-            self.decode_tokens as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of drafted tokens the target accepted (0.0 when nothing
+    /// was drafted).  High acceptance is the paper's fidelity claim made
+    /// operational: the closer the ZS-SVD drafter tracks the dense
+    /// target's greedy choices, the more tokens each verify call commits.
+    pub fn draft_acceptance_rate(&self) -> f64 {
+        if self.drafted_tokens > 0 {
+            self.accepted_draft_tokens as f64 / self.drafted_tokens as f64
         } else {
             0.0
         }
@@ -363,6 +459,13 @@ pub struct DecodeStats {
     pub kv_bytes_per_slot: usize,
     /// peak RSS of the process (VmHWM), bytes
     pub peak_mem_bytes: usize,
+    /// drafter tokens proposed into speculative verification (0 when
+    /// speculation was off)
+    pub drafted_tokens: usize,
+    /// drafted tokens the target accepted
+    pub accepted_draft_tokens: usize,
+    /// accepted / drafted ([`EngineCounters::draft_acceptance_rate`])
+    pub draft_acceptance: f64,
 }
 
 /// Per-slot in-flight sequence state.
@@ -370,6 +473,12 @@ struct Active {
     req: DecodeRequest,
     cache: KvCache,
     sampler: Sampler,
+    /// drafter KV arena — present only when this slot speculates (drafter
+    /// configured + greedy sampling).  Mirrors the prompt during prefill
+    /// and afterwards holds a prefix of the generated tokens; its cursor
+    /// may lag the target's by up to one committed token after an
+    /// all-accepted verify round (the next catch-up run replays it)
+    draft_cache: Option<KvCache>,
     /// prompt tokens already ingested; prefill is complete once this
     /// reaches the prompt length
     prefill_pos: usize,
@@ -387,6 +496,8 @@ struct Active {
     /// previous emission instant (token-gap baseline; starts at arrival)
     last_emit: Instant,
     done: bool,
+    /// the KV arena filled before `limit` tokens were generated
+    truncated: bool,
 }
 
 impl Active {
@@ -396,15 +507,20 @@ impl Active {
     }
 
     /// Bookkeeping after a sampled token: record it, stamp TTFT, and
-    /// retire the slot once the budget or the KV arena is exhausted.
+    /// retire the slot once the budget or the KV arena is exhausted —
+    /// flagging the latter as a truncation (the request got fewer tokens
+    /// than it asked for).
     fn push_token(&mut self, tok: i32) {
         self.tokens.push(tok);
         self.last_token = tok;
         if self.first_token_at.is_none() {
             self.first_token_at = Some(Instant::now());
         }
-        if self.tokens.len() >= self.limit || self.cache.len >= self.cache.max_len {
+        if self.tokens.len() >= self.limit {
             self.done = true;
+        } else if self.cache.len >= self.cache.max_len {
+            self.done = true;
+            self.truncated = true;
         }
     }
 }
@@ -425,20 +541,48 @@ fn step_engine_batch(sess: &Session, params: &ParamStore, engine: &Engine,
     }
 }
 
+/// [`step_engine_batch`] with per-sequence [`LogitsMode`] — the verify
+/// half of speculation asks for all run positions' logits, the drafter
+/// calls for last-row logits (or none, for prefill mirroring).
+fn step_engine_batch_modes(sess: &Session, params: &ParamStore,
+                           engine: &Engine,
+                           seqs: &mut [(&mut KvCache, &[i32])],
+                           modes: &[LogitsMode])
+                           -> Result<Vec<Option<Mat>>> {
+    match engine {
+        Engine::Dense => sess.decode_batch_modes(params, seqs, modes),
+        Engine::Lowrank { tag, factors } => {
+            sess.lowrank_decode_batch_modes(tag, params, factors, seqs, modes)
+        }
+    }
+}
+
 /// Run the long-lived continuous-batching scheduler until `source` drains:
 /// admit from `source` into free slots, advance occupied slots through the
 /// batched step/prefill kernels (one GEMM set across the batch per
 /// iteration, row-parallel on the persistent `exec` pool), and deliver
 /// every generated token and completion to `sink` in slot order.
 ///
+/// `drafter` enables speculative self-decode when paired with
+/// [`DecodeConfig::speculate_k`] > 0: greedy slots propose up to K tokens
+/// per iteration through the drafter engine and `engine` (the target)
+/// verifies them in one batched all-positions call — generated tokens are
+/// bit-identical to running without a drafter (see the module docs).
+/// `None` runs plain decode regardless of `speculate_k`.
+///
 /// Engine errors (a failing step kernel) abort the run; request validation
 /// belongs to the caller — the offline wrapper checks its whole workload up
-/// front and the network front-end screens at admission.
+/// front and the network front-end screens at admission.  A request with
+/// `max_new_tokens == 0` is a validation error here too (callers reject it
+/// before it reaches a slot; the old behavior silently coerced it to 1).
 pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
-                  cfg: &DecodeConfig, source: &mut dyn RequestSource,
+                  drafter: Option<&Engine>, cfg: &DecodeConfig,
+                  source: &mut dyn RequestSource,
                   sink: &mut dyn FnMut(DecodeEvent))
                   -> Result<EngineCounters> {
     anyhow::ensure!(cfg.max_slots >= 1, "decode needs at least one slot");
+    // speculation needs both the knob and a drafter engine
+    let spec_k = if drafter.is_some() { cfg.speculate_k } else { 0 };
 
     let start = Instant::now();
     let mut slots: Vec<Option<Active>> = Vec::new();
@@ -447,6 +591,8 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
     }
     // rewound arenas from retired slots, reused by later admissions
     let mut arena_pool: Vec<KvCache> = Vec::new();
+    // same, for the drafter arenas of speculating slots
+    let mut draft_pool: Vec<KvCache> = Vec::new();
     let mut c = EngineCounters::default();
     let mut iter = 0usize;
     let mut drained = false;
@@ -468,6 +614,10 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                             req.prompt.len() <= sess.cfg.seq_len,
                             "request {}: prompt {} exceeds seq_len {}",
                             req.id, req.prompt.len(), sess.cfg.seq_len);
+                        anyhow::ensure!(
+                            req.max_new_tokens >= 1,
+                            "request {}: max_new_tokens must be >= 1",
+                            req.id);
                         let cache = match arena_pool.pop() {
                             Some(mut cached) => {
                                 cached.reset();
@@ -480,8 +630,19 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                             req.seed
                                 .unwrap_or_else(|| sampler_seed(cfg.seed, req.id)),
                         );
+                        // only greedy slots speculate: temperature sampling
+                        // consumes rng per draw, so verifying K positions
+                        // would change the random stream (module docs)
+                        let draft_cache = (spec_k > 0 && sampler.is_greedy())
+                            .then(|| match draft_pool.pop() {
+                                Some(mut cached) => {
+                                    cached.reset();
+                                    cached
+                                }
+                                None => KvCache::new(&sess.cfg),
+                            });
                         let now = Instant::now();
-                        let limit = req.max_new_tokens.max(1);
+                        let limit = req.max_new_tokens;
                         // generation can never exceed the KV capacity, so a
                         // huge client-supplied budget must not drive a huge
                         // pre-allocation
@@ -489,6 +650,7 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                         *slot = Some(Active {
                             cache,
                             sampler,
+                            draft_cache,
                             prefill_pos: 0,
                             last_token: 0,
                             tokens: Vec::with_capacity(cap),
@@ -499,6 +661,7 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                             first_token_at: None,
                             last_emit: arrival,
                             done: false,
+                            truncated: false,
                             req,
                         });
                     }
@@ -519,63 +682,221 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
             continue;
         }
 
-        // advance the batch with at most two batched kernel calls: one
-        // single-token step across every decoding slot (their hidden states
-        // share one activation matrix per layer), then one prompt-chunk
-        // ingest across every prefilling slot.  Decoding slots therefore
-        // emit exactly one token per iteration while long prompts make
-        // bounded, chunk-sized progress alongside them.
+        // advance the batch with a bounded number of batched kernel calls:
+        // the decode advance across every decoding slot (draft + verify
+        // when speculating, a single one-token step otherwise — the slots'
+        // hidden states share one activation matrix per layer either way),
+        // then one prompt-chunk ingest across every prefilling slot.  Long
+        // prompts make bounded, chunk-sized progress alongside the
+        // decoding slots.
         let had_prefill = slots
             .iter()
             .any(|s| s.as_ref().is_some_and(Active::prefilling));
 
-        // --- batched decode step across decoding slots ---
-        let step_toks: Vec<i32> = slots
-            .iter()
-            .filter_map(|s| s.as_ref())
-            .filter(|a| !a.prefilling())
-            .map(|a| a.last_token)
-            .collect();
-        if !step_toks.is_empty() {
-            let t_step = Instant::now();
-            let logits = {
-                let mut seqs: Vec<(&mut KvCache, &[i32])> =
-                    Vec::with_capacity(step_toks.len());
-                let mut k = 0usize;
-                for s in slots.iter_mut() {
-                    let Some(a) = s else { continue };
-                    if a.prefilling() {
-                        continue;
+        // --- batched decode advance across decoding slots ---
+        {
+            // collect the decoding slots once; every phase below (draft,
+            // verify, accept) walks this in slot order
+            let mut act: Vec<&mut Active> = slots
+                .iter_mut()
+                .filter_map(Option::as_mut)
+                .filter(|a| !a.prefilling())
+                .collect();
+            if !act.is_empty() {
+                let t_step = Instant::now();
+                // per-slot draft depth: the configured K, capped by the
+                // remaining budget (a round commits up to k+1 tokens, all
+                // of which must fit) and by the KV headroom the k+1-token
+                // verify run needs.  0 = the plain one-token step.
+                let keff: Vec<usize> = act
+                    .iter()
+                    .map(|a| {
+                        if a.draft_cache.is_none() {
+                            return 0;
+                        }
+                        let budget = a.limit - a.tokens.len();
+                        let headroom = a.cache.max_len - a.cache.len;
+                        spec_k.min(budget - 1).min(headroom - 1)
+                    })
+                    .collect();
+
+                // drafter proposals per slot (empty when keff == 0)
+                let mut drafts: Vec<Vec<i32>> =
+                    act.iter().map(|_| Vec::new()).collect();
+                let max_k = keff.iter().copied().max().unwrap_or(0);
+                if max_k > 0 {
+                    let draft_engine = drafter.expect("spec_k > 0");
+                    // catch-up + first draft: one ragged batched call
+                    // feeding each drafting slot the generated tokens its
+                    // drafter has not ingested yet (always at least the
+                    // pending one); the last row's argmax is draft 1
+                    let logits = {
+                        let mut seqs: Vec<(&mut KvCache, &[i32])> =
+                            Vec::new();
+                        for (di, a) in act.iter_mut().enumerate() {
+                            if keff[di] == 0 {
+                                continue;
+                            }
+                            let Active { draft_cache, tokens, req, .. } =
+                                &mut **a;
+                            let draft = draft_cache
+                                .as_mut()
+                                .expect("keff > 0 implies a draft cache");
+                            let seen = draft.len - req.prompt.len();
+                            seqs.push((draft, &tokens[seen..]));
+                        }
+                        let modes = vec![LogitsMode::Last; seqs.len()];
+                        step_engine_batch_modes(sess, params, draft_engine,
+                                                &mut seqs, &modes)?
+                    };
+                    let mut w = 0usize;
+                    for di in 0..act.len() {
+                        if keff[di] == 0 {
+                            continue;
+                        }
+                        let l = logits[w].as_ref()
+                            .expect("draft logits requested");
+                        // the drafter proposes greedily (speculating slots
+                        // are greedy, and argmax consumes no rng)
+                        drafts[di].push(argmax(l.row(0)) as i32);
+                        w += 1;
                     }
-                    seqs.push((&mut a.cache,
-                               std::slice::from_ref(&step_toks[k])));
-                    k += 1;
+                    // drafts 2..K: single-token drafter steps, batched
+                    // across the slots still drafting
+                    for step in 1..max_k {
+                        let feed: Vec<i32> = (0..act.len())
+                            .filter(|&di| keff[di] > step)
+                            .map(|di| drafts[di][step - 1])
+                            .collect();
+                        if feed.is_empty() {
+                            break;
+                        }
+                        let logits = {
+                            let mut seqs: Vec<(&mut KvCache, &[i32])> =
+                                Vec::new();
+                            let mut f = 0usize;
+                            for (di, a) in act.iter_mut().enumerate() {
+                                if keff[di] <= step {
+                                    continue;
+                                }
+                                let draft =
+                                    a.draft_cache.as_mut().expect("drafting");
+                                seqs.push((draft,
+                                           std::slice::from_ref(&feed[f])));
+                                f += 1;
+                            }
+                            let modes = vec![LogitsMode::Last; seqs.len()];
+                            step_engine_batch_modes(sess, params,
+                                                    draft_engine, &mut seqs,
+                                                    &modes)?
+                        };
+                        let mut f = 0usize;
+                        for di in 0..act.len() {
+                            if keff[di] <= step {
+                                continue;
+                            }
+                            let l = logits[f].as_ref()
+                                .expect("draft logits requested");
+                            drafts[di].push(argmax(l.row(0)) as i32);
+                            f += 1;
+                        }
+                    }
                 }
-                // every decode step feeds its slot's sampler
-                let want = vec![true; seqs.len()];
-                step_engine_batch(sess, params, engine, &mut seqs, &want)?
-            };
-            let stepped = step_toks.len();
-            // sampling stays on the driver thread, in slot order — cheap
-            // next to the GEMMs, and per-sequence seeding keeps it
-            // independent of batch composition anyway
-            let mut k = 0usize;
-            for s in slots.iter_mut() {
-                let Some(a) = s else { continue };
-                if a.prefilling() {
-                    continue;
+
+                // verify: ONE batched target call scores every slot's
+                // [pending, drafts..] run with logits at ALL positions.  A
+                // draft-free run has length 1 — exactly the plain batched
+                // one-token decode step
+                let runs: Vec<Vec<i32>> = act
+                    .iter()
+                    .enumerate()
+                    .map(|(di, a)| {
+                        let mut r = Vec::with_capacity(1 + drafts[di].len());
+                        r.push(a.last_token);
+                        r.extend_from_slice(&drafts[di]);
+                        r
+                    })
+                    .collect();
+                let logits = {
+                    let mut seqs: Vec<(&mut KvCache, &[i32])> =
+                        Vec::with_capacity(act.len());
+                    for (di, a) in act.iter_mut().enumerate() {
+                        seqs.push((&mut a.cache, &runs[di][..]));
+                    }
+                    let modes = vec![LogitsMode::All; seqs.len()];
+                    step_engine_batch_modes(sess, params, engine, &mut seqs,
+                                            &modes)?
+                };
+
+                // accept, on the driver thread in slot order: verify row i
+                // is the target's distribution after run position i, so
+                // the slot's own sampler replays exactly the tokens plain
+                // decode would produce — accept drafts while they match,
+                // commit the target's token at the first mismatch, and
+                // take the free bonus token when every draft matched
+                let (mut proposed, mut accepted_drafts) = (0usize, 0usize);
+                let mut committed = 0usize;
+                for (di, a) in act.iter_mut().enumerate() {
+                    let lm = logits[di].as_ref()
+                        .expect("verify logits requested");
+                    let k = drafts[di].len();
+                    let len_before = a.cache.len - runs[di].len();
+                    let m_before = a.tokens.len();
+                    let mut acc: Vec<i32> = Vec::with_capacity(k + 1);
+                    let mut matched = 0usize;
+                    for i in 0..k {
+                        let x = a.sampler.sample(lm.row(i)) as i32;
+                        acc.push(x);
+                        if x != drafts[di][i] {
+                            break;
+                        }
+                        matched += 1;
+                    }
+                    if matched == k {
+                        // all drafts matched (or none were made): the
+                        // final row's sample rides along for free
+                        acc.push(a.sampler.sample(lm.row(k)) as i32);
+                    }
+                    // rewind the target past rejected draft positions
+                    // BEFORE recording tokens, so push_token's capacity
+                    // check sees the real cursor
+                    a.cache.truncate(len_before + acc.len());
+                    if k > 0 {
+                        // the drafter ingested the catch-up run plus
+                        // drafts 1..K-1; keep the prefix consistent with
+                        // the committed stream (a full accept rewinds
+                        // nothing — the drafter just lags one token, which
+                        // the next catch-up run replays)
+                        let keep = a.req.prompt.len() + m_before
+                            + (acc.len() - 1).min(k - 1);
+                        if let Some(draft) = a.draft_cache.as_mut() {
+                            draft.truncate(keep);
+                        }
+                    }
+                    proposed += k;
+                    accepted_drafts += matched;
+                    committed += acc.len();
+                    for x in acc {
+                        a.push_token(x);
+                    }
                 }
-                let l = logits[k].as_ref().expect("decode logits requested");
-                let tok = a.sampler.sample(&l.data) as i32;
-                k += 1;
-                a.push_token(tok);
+                // the decode section is its own set of kernel calls, so
+                // its clock is clean even when the same iteration also
+                // prefills a chunk — charge it always (a prefill-free-
+                // iterations-only clock would starve under small chunk
+                // sizes and steady admissions).  Drafter calls are decode
+                // work and are charged here too.
+                c.decode_only_secs += t_step.elapsed().as_secs_f64();
+                c.decode_only_tokens += committed;
+                c.drafted_tokens += proposed;
+                c.accepted_draft_tokens += accepted_drafts;
+                if proposed > 0 {
+                    sink(DecodeEvent::Draft {
+                        proposed,
+                        accepted: accepted_drafts,
+                    });
+                }
             }
-            // the decode section is its own kernel call, so its clock is
-            // clean even when the same iteration also prefills a chunk —
-            // charge it always (a prefill-free-iterations-only clock would
-            // starve under small chunk sizes and steady admissions)
-            c.decode_only_secs += t_step.elapsed().as_secs_f64();
-            c.decode_only_tokens += stepped;
         }
 
         // --- chunked prefill across prefilling slots ---
@@ -607,6 +928,35 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                 (step_engine_batch(sess, params, engine, &mut seqs, &want)?,
                  takes)
             };
+            // mirror the same chunks into the drafter caches of the
+            // speculating slots — one extra batched drafter call, no
+            // logits requested (so no vocab GEMM).  The drafter is warm
+            // the moment the prompt completes, while the FIRST generated
+            // token is still sampled from the target's prompt logits
+            // below, preserving bit-identity.
+            if let Some(draft_engine) = drafter {
+                let mut seqs: Vec<(&mut KvCache, &[i32])> = Vec::new();
+                for s in slots.iter_mut() {
+                    let Some(a) = s else { continue };
+                    if !a.prefilling() {
+                        continue;
+                    }
+                    let Active { draft_cache, req, prefill_pos, .. } = a;
+                    let Some(draft) = draft_cache.as_mut() else { continue };
+                    let rem = req.prompt.len() - *prefill_pos;
+                    let take = match cfg.prefill_chunk {
+                        0 => rem,
+                        chunk => rem.min(chunk),
+                    };
+                    seqs.push((draft,
+                               &req.prompt[*prefill_pos..*prefill_pos + take]));
+                }
+                if !seqs.is_empty() {
+                    let modes = vec![LogitsMode::None; seqs.len()];
+                    step_engine_batch_modes(sess, params, draft_engine,
+                                            &mut seqs, &modes)?;
+                }
+            }
             c.prefill_secs += t_pre.elapsed().as_secs_f64();
             let mut k = 0usize;
             for s in slots.iter_mut() {
@@ -663,7 +1013,11 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                     .unwrap_or(0.0),
                 queue_ms: a.admitted.duration_since(a.arrival).as_secs_f64()
                     * 1e3,
+                truncated: a.truncated,
             }));
+            if let Some(d) = a.draft_cache.take() {
+                draft_pool.push(d);
+            }
             arena_pool.push(a.cache);
         }
         iter += 1;
@@ -681,12 +1035,36 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
 pub fn run_decode(sess: &Session, params: &ParamStore, engine: &Engine,
                   requests: &[DecodeRequest], cfg: &DecodeConfig)
                   -> Result<(DecodeStats, Vec<CompletedRequest>)> {
+    run_decode_inner(sess, params, engine, None, requests, cfg)
+}
+
+/// [`run_decode`] with speculative self-decode: `drafter` proposes
+/// [`DecodeConfig::speculate_k`] tokens per slot per iteration and
+/// `engine` (the target) verifies them in one batched call.  Generated
+/// tokens are bit-identical to [`run_decode`] on the target alone — only
+/// throughput and the draft counters change.  The stats row is labeled
+/// `<target>+spec-k<K>` so bench tables keep one row per configuration.
+pub fn run_decode_speculative(sess: &Session, params: &ParamStore,
+                              engine: &Engine, drafter: &Engine,
+                              requests: &[DecodeRequest], cfg: &DecodeConfig)
+                              -> Result<(DecodeStats, Vec<CompletedRequest>)> {
+    run_decode_inner(sess, params, engine, Some(drafter), requests, cfg)
+}
+
+fn run_decode_inner(sess: &Session, params: &ParamStore, engine: &Engine,
+                    drafter: Option<&Engine>, requests: &[DecodeRequest],
+                    cfg: &DecodeConfig)
+                    -> Result<(DecodeStats, Vec<CompletedRequest>)> {
     anyhow::ensure!(!requests.is_empty(), "no decode requests");
     for r in requests {
         anyhow::ensure!(!r.prompt.is_empty(), "request {}: empty prompt", r.id);
         anyhow::ensure!(r.prompt.len() <= sess.cfg.seq_len,
                         "request {}: prompt {} exceeds seq_len {}",
                         r.id, r.prompt.len(), sess.cfg.seq_len);
+        anyhow::ensure!(r.max_new_tokens >= 1,
+                        "request {}: max_new_tokens must be >= 1 \
+                         (a zero-token generation is a caller error)",
+                        r.id);
     }
 
     let mut source = WorkloadSource::new(requests, cfg.arrival_steps);
@@ -697,14 +1075,20 @@ pub fn run_decode(sess: &Session, params: &ParamStore, engine: &Engine,
                 done.push(c);
             }
         };
-        run_engine(sess, params, engine, cfg, &mut source, &mut sink)?
+        run_engine(sess, params, engine, drafter, cfg, &mut source,
+                   &mut sink)?
     };
 
     done.sort_by_key(|c| c.id);
     let lats: Vec<f64> = done.iter().map(|c| c.latency_ms).collect();
     let ttfts: Vec<f64> = done.iter().map(|c| c.ttft_ms).collect();
+    let label = if drafter.is_some() && cfg.speculate_k > 0 {
+        format!("{}+spec-k{}", engine.label(), cfg.speculate_k)
+    } else {
+        engine.label()
+    };
     let stats = DecodeStats {
-        engine: engine.label(),
+        engine: label,
         requests: done.len(),
         prefill_tokens: counters.prefill_tokens,
         decode_tokens: counters.decode_tokens,
@@ -718,6 +1102,9 @@ pub fn run_decode(sess: &Session, params: &ParamStore, engine: &Engine,
         ttft: LatencySummary::from_samples(&ttfts),
         kv_bytes_per_slot: KvCache::arena_bytes_for(&sess.cfg),
         peak_mem_bytes: peak_rss_bytes(),
+        drafted_tokens: counters.drafted_tokens,
+        accepted_draft_tokens: counters.accepted_draft_tokens,
+        draft_acceptance: counters.draft_acceptance_rate(),
     };
     Ok((stats, done))
 }
@@ -771,5 +1158,43 @@ mod tests {
     fn sampler_seed_mixes_ids() {
         assert_ne!(sampler_seed(1, 0), sampler_seed(1, 1));
         assert_eq!(sampler_seed(7, 3), sampler_seed(7, 3));
+    }
+
+    #[test]
+    fn workload_tick_matches_full_rescan_for_fractional_gaps() {
+        // the incremental (first-unstamped-index) scan must stamp exactly
+        // the set the old every-request rescan did: request `i` is stamped
+        // iff `i * arrival_steps <= iter`, for every arrival gap including
+        // fractional ones (where consecutive requests share an iteration)
+        let reqs: Vec<DecodeRequest> =
+            (0..7).map(|i| DecodeRequest::new(i, vec![1], 1)).collect();
+        for steps in [0.0, 0.4, 1.0, 1.5, 2.0, 3.7] {
+            let mut src = WorkloadSource::new(&reqs, steps);
+            for iter in 0..30usize {
+                src.tick(iter);
+                for i in 0..reqs.len() {
+                    let due = (i as f64) * steps <= iter as f64;
+                    assert_eq!(src.arrivals[i].is_some(), due,
+                               "steps {steps} iter {iter} req {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workload_tick_survives_fast_forwarded_iterations() {
+        // idle_wait can skip the virtual clock several iterations ahead;
+        // a single tick at the landing iteration must stamp every request
+        // that became due in the skipped range
+        let reqs: Vec<DecodeRequest> =
+            (0..5).map(|i| DecodeRequest::new(i, vec![1], 1)).collect();
+        let mut src = WorkloadSource::new(&reqs, 2.0);
+        src.tick(7); // requests 0..=3 due (0, 2, 4, 6)
+        for i in 0..4 {
+            assert!(src.arrivals[i].is_some(), "req {i}");
+        }
+        assert!(src.arrivals[4].is_none());
+        src.tick(8);
+        assert!(src.arrivals[4].is_some());
     }
 }

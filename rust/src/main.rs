@@ -16,7 +16,13 @@
 //!                            (streaming TCP front-end; `--plan` serves the
 //!                            ZS-SVD low-rank engine, `--queue-depth` bounds
 //!                            admission, `--port-file` writes the bound
-//!                            address for scripts)
+//!                            address for scripts); `--speculate-k K`
+//!                            enables speculative self-decode — a
+//!                            high-compression ZS-SVD drafter (ratio
+//!                            `--draft-ratio`, default 0.4) proposes up to
+//!                            K tokens per slot which the serving engine
+//!                            verifies in one batched call; greedy output
+//!                            is bit-identical for every K
 //!   client                   drive a running server over TCP
 //!                            (`--connect <addr>`, `--requests`,
 //!                            `--prompt-len`, `--max-new-tokens`,
@@ -32,7 +38,8 @@ use anyhow::Result;
 use zs_svd::compress::baselines::PruneScore;
 use zs_svd::config::ExperimentConfig;
 use zs_svd::coordinator::{self, Method};
-use zs_svd::decode::{run_decode, synth_requests, DecodeConfig};
+use zs_svd::decode::{run_decode, run_decode_speculative, synth_requests,
+                     DecodeConfig};
 use zs_svd::eval::EvalSpec;
 use zs_svd::report::{acc2, f2, latency_cells, mb, pct, Table,
                      LATENCY_HEADERS};
@@ -115,6 +122,23 @@ fn serve_listen(rt: &Runtime, args: &Args, cfg: &ExperimentConfig,
         (&p.params, Engine::Dense)
     };
 
+    let spec_k = args.usize_or("speculate-k", cfg.speculate_k);
+    // the drafter is a high-compression ZS-SVD engine over the SAME param
+    // store the target serves from: the low-rank engine reads only the
+    // embed/norm/untargeted weights out of `params`, so the pairing is
+    // valid for both the dense and the `--plan` target
+    let drafter = if spec_k > 0 {
+        let dratio = args.f64_or("draft-ratio", 0.4);
+        let dtag = format!("{}", (dratio * 100.0) as usize);
+        anyhow::ensure!(p.session.cfg.lowrank.contains_key(&dtag),
+                        "no lowrank artifact `{dtag}` for the drafter");
+        let dplan = coordinator::run_method(&p, &Method::zs(dratio), dratio)?;
+        let dlm = p.session.cfg.lowrank.get(&dtag).expect("checked above");
+        Some(Engine::from_plan_capped(&dtag, &dplan, &dlm.ranks))
+    } else {
+        None
+    };
+
     let scfg = server::ServerConfig {
         addr: listen.to_string(),
         queue_depth: args.usize_or("queue-depth", cfg.queue_depth),
@@ -125,13 +149,19 @@ fn serve_listen(rt: &Runtime, args: &Args, cfg: &ExperimentConfig,
             seed: cfg.seed,
             arrival_steps: 0.0,
             prefill_chunk: args.usize_or("prefill-chunk", cfg.prefill_chunk),
+            speculate_k: spec_k,
         },
     };
     let port_file = args.get("port-file").map(|s| s.to_string());
-    println!("serving {} engine on {listen} (slots {}, queue depth {})",
-             engine.label(), scfg.decode.max_slots, scfg.queue_depth);
+    println!("serving {} engine on {listen} (slots {}, queue depth {}{})",
+             engine.label(), scfg.decode.max_slots, scfg.queue_depth,
+             match &drafter {
+                 Some(d) => format!(", drafter {} k={spec_k}", d.label()),
+                 None => String::new(),
+             });
 
-    let stats = server::run(&p.session, params, &engine, &scfg, |addr| {
+    let stats = server::run(&p.session, params, &engine, drafter.as_ref(),
+                            &scfg, |addr| {
         println!("listening on {addr}");
         if let Some(pf) = &port_file {
             if let Err(e) = std::fs::write(pf, addr.to_string()) {
@@ -155,6 +185,13 @@ fn serve_listen(rt: &Runtime, args: &Args, cfg: &ExperimentConfig,
                f2(stats.counters.prefill_tok_per_sec())]);
     t.row(vec!["decode tok/s".into(),
                f2(stats.counters.decode_tok_per_sec())]);
+    if stats.counters.drafted_tokens > 0 {
+        t.row(vec!["drafted tokens".into(),
+                   format!("{}", stats.counters.drafted_tokens)]);
+        t.row(vec!["draft acceptance".into(),
+                   format!("{:.1}%",
+                           stats.counters.draft_acceptance_rate() * 100.0)]);
+    }
     for (h, v) in LATENCY_HEADERS.iter().zip(latency_cells(&stats.e2e)) {
         t.row(vec![format!("e2e {h}"), v]);
     }
@@ -190,8 +227,10 @@ fn client_session(args: &Args, rt: &Runtime) -> Result<()> {
             GenerateOutcome::Done(r) => {
                 println!(
                     "request {i}: {} tokens streamed, queue {:.1} ms, \
-                     ttft {:.1} ms, e2e {:.1} ms",
-                    r.tokens.len(), r.queue_ms, r.ttft_ms, r.latency_ms);
+                     ttft {:.1} ms, e2e {:.1} ms{}",
+                    r.tokens.len(), r.queue_ms, r.ttft_ms, r.latency_ms,
+                    if r.truncated { " (truncated at KV capacity)" }
+                    else { "" });
             }
             GenerateOutcome::Rejected { code, message } => {
                 anyhow::bail!("request {i} rejected: {code} ({message})");
@@ -348,6 +387,8 @@ fn main() -> Result<()> {
                     arrival_steps: args.f64_or("arrival-steps", 0.0),
                     prefill_chunk: args.usize_or("prefill-chunk",
                                                  cfg.prefill_chunk),
+                    speculate_k: args.usize_or("speculate-k",
+                                               cfg.speculate_k),
                 };
                 let prompt_len = args.usize_or("prompt-len",
                                                p.session.cfg.seq_len / 4);
@@ -361,13 +402,39 @@ fn main() -> Result<()> {
                 let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
                 let (l, _) = run_decode(&p.session, &plan.apply(&p.params),
                                         &engine, &reqs, &dc)?;
+                // optional third row: the dense target re-run with a
+                // high-compression drafter proposing `--speculate-k` tokens
+                // per slot (greedy output bit-matches the dense row)
+                let spec = if dc.speculate_k > 0 {
+                    let dratio = args.f64_or("draft-ratio", 0.4);
+                    let dtag = format!("{}", (dratio * 100.0) as usize);
+                    anyhow::ensure!(
+                        p.session.cfg.lowrank.contains_key(&dtag),
+                        "no lowrank artifact `{dtag}` for the drafter");
+                    let dplan = coordinator::run_method(
+                        &p, &Method::zs(dratio), dratio)?;
+                    let dlm = p.session.cfg.lowrank.get(&dtag)
+                        .expect("checked above");
+                    let drafter = Engine::from_plan_capped(&dtag, &dplan,
+                                                           &dlm.ranks);
+                    let (s, _) = run_decode_speculative(
+                        &p.session, &p.params, &Engine::Dense, &drafter,
+                        &reqs, &dc)?;
+                    Some(s)
+                } else {
+                    None
+                };
                 let mut headers = vec!["engine", "prefill tok/s",
                                        "decode tok/s", "total tok/s"];
                 headers.extend(LATENCY_HEADERS);
                 headers.extend(["ttft p50 ms", "KV MB/slot", "peak RSS MB"]);
                 let mut t = Table::new(
                     "decode serving (continuous batching)", &headers);
-                for s in [&d, &l] {
+                let mut rows = vec![&d, &l];
+                if let Some(s) = &spec {
+                    rows.push(s);
+                }
+                for s in rows {
                     let mut row = vec![s.engine.clone(),
                                        f2(s.prefill_tok_per_sec),
                                        f2(s.decode_tok_per_sec),
@@ -379,6 +446,12 @@ fn main() -> Result<()> {
                     t.row(row);
                 }
                 print!("{}", t.to_ascii());
+                if let Some(s) = &spec {
+                    println!("speculation: {} drafted, {} accepted \
+                              ({:.1}% acceptance)",
+                             s.drafted_tokens, s.accepted_draft_tokens,
+                             s.draft_acceptance * 100.0);
+                }
             } else {
                 let sc = ServeConfig {
                     n_requests: requests,

@@ -19,6 +19,15 @@
 //! the same prefix — for every prompt chunking and across-slot batch
 //! composition — which is the contract the decode/serving tiers build on
 //! (`rust/tests/decode_parity.rs`, `rust/tests/server_loopback.rs`).
+//!
+//! The verify-mode entry point (`native::decode_batch_modes`, with a
+//! per-sequence [`native::LogitsMode`]) extends that contract to *every*
+//! position of a run: the logits row returned for run position `j` is
+//! bit-identical to the single row a last-position call ending at `j`
+//! would return.  Speculative decode rests on exactly this — the target
+//! engine scores a `[pending, draft_1 .. draft_K]` run once, and each
+//! accepted row matches what plain one-token-at-a-time decode would have
+//! produced.
 
 pub mod native;
 pub mod session;

@@ -243,6 +243,24 @@ pub fn decode_step(cfg: &ConfigMeta, params: &ParamStore,
     Ok(logits.data)
 }
 
+/// Which logits a sequence's run requests from [`decode_batch_modes`].
+///
+/// `Last` is the classic decode shape (one next-token row after the run's
+/// final token); `All` is the speculative-verify shape — the target engine
+/// scores every position of a `[pending, draft_1 .. draft_K]` run in one
+/// pass, because row `i`'s logits predict the token *after* run position
+/// `i`, which is exactly what greedy verification compares against draft
+/// `i+1`.  `None` skips the head GEMM entirely (interior prefill chunks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LogitsMode {
+    /// no logits for this sequence
+    None,
+    /// next-token logits after the run's last token (1 row)
+    Last,
+    /// logits at every run position, in run order (`run_len` rows)
+    All,
+}
+
 /// Batched KV-cached advance: run every sequence's token run through ONE
 /// set of per-layer GEMMs and return, per requested sequence, the
 /// next-token logits after its last token.
@@ -288,10 +306,39 @@ pub fn decode_batch(cfg: &ConfigMeta, params: &ParamStore,
                     seqs: &mut [(&mut KvCache, &[i32])],
                     want_logits: &[bool])
                     -> Result<Vec<Option<Vec<f32>>>> {
-    ensure!(!seqs.is_empty(), "decode_batch: no sequences");
     ensure!(want_logits.len() == seqs.len(),
             "decode_batch: want_logits length {} != {} sequences",
             want_logits.len(), seqs.len());
+    let modes: Vec<LogitsMode> = want_logits
+        .iter()
+        .map(|&w| if w { LogitsMode::Last } else { LogitsMode::None })
+        .collect();
+    let out = decode_batch_modes(cfg, params, lowrank, seqs, &modes)?;
+    // a Last-mode result is a single-row matrix; its backing vec IS the row
+    Ok(out.into_iter().map(|m| m.map(|m| m.data)).collect())
+}
+
+/// [`decode_batch`] with a per-sequence [`LogitsMode`] instead of a bool:
+/// the verify half of speculative decoding needs logits at **all** K+1 run
+/// positions (`LogitsMode::All`), not just the last.  The returned matrix
+/// for sequence `s` has one row per requested position, in run order.
+///
+/// The bit-identity contract extends unchanged: the final norm is row-local
+/// and every projection row is an independent fixed-order dot, so the row
+/// computed for run position `j` is bit-identical to the single row a
+/// `Last`-mode call (or token-at-a-time [`decode_step`]) would produce
+/// after that position — regardless of which other rows share the head
+/// GEMM.  That is what lets greedy verification reproduce plain decode
+/// exactly (`rust/tests/decode_parity.rs`).
+pub fn decode_batch_modes(cfg: &ConfigMeta, params: &ParamStore,
+                          lowrank: Option<&BTreeMap<String, (Mat, Mat)>>,
+                          seqs: &mut [(&mut KvCache, &[i32])],
+                          modes: &[LogitsMode])
+                          -> Result<Vec<Option<Mat>>> {
+    ensure!(!seqs.is_empty(), "decode_batch: no sequences");
+    ensure!(modes.len() == seqs.len(),
+            "decode_batch: modes length {} != {} sequences",
+            modes.len(), seqs.len());
     let (d, h, ff, vocab) = (cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.vocab);
     let dh = d / h;
     let llama = cfg.arch == "llama";
@@ -423,24 +470,46 @@ pub fn decode_batch(cfg: &ConfigMeta, params: &ParamStore,
         x.add_assign(&down);
     }
 
-    // only each run's LAST position can feed sampling, and only the
-    // requested sequences pay for it: gather those rows and push them
-    // through one batched final-norm + tied-head projection.  Interior
-    // prefill chunks request nothing and skip the vocab GEMM entirely.
-    let wanted: Vec<usize> =
-        (0..seqs.len()).filter(|&s| want_logits[s]).collect();
-    let mut out: Vec<Option<Vec<f32>>> =
-        (0..seqs.len()).map(|_| None).collect();
+    // only the requested rows pay for the head: gather them and push them
+    // through one batched final-norm + tied-head projection.  `Last` runs
+    // contribute their final row, `All` runs (speculative verify) every row,
+    // interior prefill chunks nothing — those skip the vocab GEMM entirely.
+    // Norm + projection are row-local, so batching rows from several
+    // sequences cannot change any row's bits.
+    let mut wanted: Vec<(usize, usize)> = Vec::new(); // (seq, run-local row)
+    for (s, (_, toks)) in seqs.iter().enumerate() {
+        match modes[s] {
+            LogitsMode::None => {}
+            LogitsMode::Last => wanted.push((s, toks.len() - 1)),
+            LogitsMode::All => wanted.extend((0..toks.len()).map(|j| (s, j))),
+        }
+    }
+    let mut out: Vec<Option<Mat>> = (0..seqs.len()).map(|_| None).collect();
     if !wanted.is_empty() {
         let mut xl = Mat::zeros(wanted.len(), d);
-        for (w, &s) in wanted.iter().enumerate() {
-            let toks = seqs[s].1;
-            xl.row_mut(w).copy_from_slice(x.row(base[s] + toks.len() - 1));
+        for (w, &(s, j)) in wanted.iter().enumerate() {
+            xl.row_mut(w).copy_from_slice(x.row(base[s] + j));
         }
         let fin = norm_fwd(&xl, param_1d(params, "final_ln"), eps, llama);
         let logits = project(&fin.y, embed); // tied head: (W, V)
-        for (w, &s) in wanted.iter().enumerate() {
-            out[s] = Some(logits.row(w).to_vec());
+        // rows were gathered in (seq, run-position) order, so each
+        // sequence's rows are contiguous in `logits`
+        let mut w = 0usize;
+        for (s, (_, toks)) in seqs.iter().enumerate() {
+            let n = match modes[s] {
+                LogitsMode::None => 0,
+                LogitsMode::Last => 1,
+                LogitsMode::All => toks.len(),
+            };
+            if n == 0 {
+                continue;
+            }
+            let mut m = Mat::zeros(n, vocab);
+            for r in 0..n {
+                m.set_row(r, logits.row(w + r));
+            }
+            out[s] = Some(m);
+            w += n;
         }
     }
 

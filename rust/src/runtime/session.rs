@@ -18,6 +18,7 @@ use anyhow::{ensure, Result};
 
 use super::{native, Runtime};
 use crate::decode::kv::KvCache;
+use crate::runtime::native::LogitsMode;
 use crate::model::{ConfigMeta, ParamStore};
 use crate::tensor::{IntTensor, Mat, Tensor};
 
@@ -284,17 +285,50 @@ impl<'rt> Session<'rt> {
     pub fn decode_step(&self, params: &ParamStore, cache: &mut KvCache,
                        token: i32) -> Result<Tensor> {
         if cache.len == 0 {
-            let file = self
-                .cfg
-                .fwd_b1
-                .as_ref()
-                .map(|a| a.file.as_str())
-                .unwrap_or(&self.cfg.fwd.file);
-            self.rt.mark_compiled(file);
-            params.check_matches(&self.cfg)?;
+            self.dense_decode_abi(params)?;
         }
         let logits = native::decode_step(&self.cfg, params, None, cache, token)?;
         Ok(Tensor::from_vec(&[self.cfg.vocab], logits))
+    }
+
+    /// Dense decode ABI gate: mark the single-position forward artifact
+    /// compiled and shape-check the param store.  Shared by the per-token
+    /// step and every batched decode entry point (they all execute the same
+    /// kernel).
+    fn dense_decode_abi(&self, params: &ParamStore) -> Result<()> {
+        let file = self
+            .cfg
+            .fwd_b1
+            .as_ref()
+            .map(|a| a.file.as_str())
+            .unwrap_or(&self.cfg.fwd.file);
+        self.rt.mark_compiled(file);
+        params.check_matches(&self.cfg)
+    }
+
+    /// Low-rank decode ABI gate: every compression target needs factors
+    /// with matching inner rank, ≤ the artifact's baked-in rank.  Shared by
+    /// the per-token step and the batched decode entry points.
+    fn lowrank_decode_abi(&self, tag: &str,
+                          factors: &BTreeMap<String, (Mat, Mat)>)
+                          -> Result<()> {
+        let lm = self
+            .cfg
+            .lowrank
+            .get(tag)
+            .ok_or_else(|| anyhow::anyhow!("no lowrank artifact `{tag}`"))?;
+        self.rt.mark_compiled(&lm.art.file);
+        for t in &self.cfg.targets {
+            let k_art = lm.ranks[&t.name];
+            let (wu, wv) = factors.get(&t.name).ok_or_else(|| {
+                anyhow::anyhow!("missing factors for {}", t.name)
+            })?;
+            ensure!(wu.cols == wv.rows, "factor rank mismatch for {}", t.name);
+            ensure!(wu.cols <= k_art,
+                    "{}: rank {} exceeds artifact rank {k_art}",
+                    t.name, wu.cols);
+        }
+        Ok(())
     }
 
     /// One low-rank (fused-path) KV-cached decode step at ratio tag `tag`.
@@ -306,22 +340,7 @@ impl<'rt> Session<'rt> {
                                cache: &mut KvCache, token: i32)
                                -> Result<Tensor> {
         if cache.len == 0 {
-            let lm = self
-                .cfg
-                .lowrank
-                .get(tag)
-                .ok_or_else(|| anyhow::anyhow!("no lowrank artifact `{tag}`"))?;
-            self.rt.mark_compiled(&lm.art.file);
-            for t in &self.cfg.targets {
-                let k_art = lm.ranks[&t.name];
-                let (wu, wv) = factors.get(&t.name).ok_or_else(|| {
-                    anyhow::anyhow!("missing factors for {}", t.name)
-                })?;
-                ensure!(wu.cols == wv.rows, "factor rank mismatch for {}", t.name);
-                ensure!(wu.cols <= k_art,
-                        "{}: rank {} exceeds artifact rank {k_art}",
-                        t.name, wu.cols);
-            }
+            self.lowrank_decode_abi(tag, factors)?;
         }
         let logits =
             native::decode_step(&self.cfg, params, Some(factors), cache, token)?;
@@ -345,14 +364,7 @@ impl<'rt> Session<'rt> {
                         want_logits: &[bool])
                         -> Result<Vec<Option<Tensor>>> {
         if seqs.iter().any(|(c, _)| c.len == 0) {
-            let file = self
-                .cfg
-                .fwd_b1
-                .as_ref()
-                .map(|a| a.file.as_str())
-                .unwrap_or(&self.cfg.fwd.file);
-            self.rt.mark_compiled(file);
-            params.check_matches(&self.cfg)?;
+            self.dense_decode_abi(params)?;
         }
         let logits =
             native::decode_batch(&self.cfg, params, None, seqs, want_logits)?;
@@ -360,6 +372,23 @@ impl<'rt> Session<'rt> {
             .into_iter()
             .map(|l| l.map(|l| Tensor::from_vec(&[self.cfg.vocab], l)))
             .collect())
+    }
+
+    /// Batched dense advance with a per-sequence [`LogitsMode`]: the
+    /// speculative-verify entry point.  `LogitsMode::All` sequences get a
+    /// `(run_len × V)` matrix — row `j` holds the next-token logits after
+    /// run position `j`, each row bit-identical to what a `Last`-mode call
+    /// ending at that position would return (see
+    /// `native::decode_batch_modes`).  ABI validation follows the same
+    /// first-position policy as [`Session::decode_batch`].
+    pub fn decode_batch_modes(&self, params: &ParamStore,
+                              seqs: &mut [(&mut KvCache, &[i32])],
+                              modes: &[LogitsMode])
+                              -> Result<Vec<Option<Mat>>> {
+        if seqs.iter().any(|(c, _)| c.len == 0) {
+            self.dense_decode_abi(params)?;
+        }
+        native::decode_batch_modes(&self.cfg, params, None, seqs, modes)
     }
 
     /// Batched low-rank (fused-path) KV-cached advance at ratio tag `tag` —
@@ -372,22 +401,7 @@ impl<'rt> Session<'rt> {
                                 want_logits: &[bool])
                                 -> Result<Vec<Option<Tensor>>> {
         if seqs.iter().any(|(c, _)| c.len == 0) {
-            let lm = self
-                .cfg
-                .lowrank
-                .get(tag)
-                .ok_or_else(|| anyhow::anyhow!("no lowrank artifact `{tag}`"))?;
-            self.rt.mark_compiled(&lm.art.file);
-            for t in &self.cfg.targets {
-                let k_art = lm.ranks[&t.name];
-                let (wu, wv) = factors.get(&t.name).ok_or_else(|| {
-                    anyhow::anyhow!("missing factors for {}", t.name)
-                })?;
-                ensure!(wu.cols == wv.rows, "factor rank mismatch for {}", t.name);
-                ensure!(wu.cols <= k_art,
-                        "{}: rank {} exceeds artifact rank {k_art}",
-                        t.name, wu.cols);
-            }
+            self.lowrank_decode_abi(tag, factors)?;
         }
         let logits = native::decode_batch(&self.cfg, params, Some(factors),
                                           seqs, want_logits)?;
@@ -395,5 +409,21 @@ impl<'rt> Session<'rt> {
             .into_iter()
             .map(|l| l.map(|l| Tensor::from_vec(&[self.cfg.vocab], l)))
             .collect())
+    }
+
+    /// Low-rank sibling of [`Session::decode_batch_modes`] — the drafter
+    /// runs through this when speculation needs anything beyond last-row
+    /// logits (and the scheduler uses it uniformly for drafter calls so
+    /// both engines share one entry-point shape).
+    pub fn lowrank_decode_batch_modes(&self, tag: &str, params: &ParamStore,
+                                      factors: &BTreeMap<String, (Mat, Mat)>,
+                                      seqs: &mut [(&mut KvCache, &[i32])],
+                                      modes: &[LogitsMode])
+                                      -> Result<Vec<Option<Mat>>> {
+        if seqs.iter().any(|(c, _)| c.len == 0) {
+            self.lowrank_decode_abi(tag, factors)?;
+        }
+        native::decode_batch_modes(&self.cfg, params, Some(factors), seqs,
+                                   modes)
     }
 }

@@ -52,6 +52,9 @@ pub struct GenerationResult {
     pub ttft_ms: f64,
     /// end-to-end latency, ms
     pub latency_ms: f64,
+    /// generation stopped early at the KV-capacity wall (fewer tokens than
+    /// the requested budget)
+    pub truncated: bool,
 }
 
 fn bad_data(msg: String) -> io::Error {
@@ -116,7 +119,7 @@ impl Client {
                     streamed.push(token);
                 }
                 Event::Done { id, tokens, prompt_len, queue_ms, ttft_ms,
-                              latency_ms } => {
+                              latency_ms, truncated } => {
                     if id != g.id {
                         return Err(bad_data(format!(
                             "done for unexpected id {id} (want {})", g.id)));
@@ -134,6 +137,7 @@ impl Client {
                         queue_ms,
                         ttft_ms,
                         latency_ms,
+                        truncated,
                     }));
                 }
                 Event::Error { id, code, message } => {

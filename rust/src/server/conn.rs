@@ -320,16 +320,29 @@ fn reader_loop(shared: &Shared, conn: &Arc<ConnState>, stream: TcpStream,
                     });
                     continue;
                 }
-                let gid = next_id.fetch_add(1, Ordering::SeqCst);
                 // clamp the budget to the KV capacity: generation stops at a
                 // full arena anyway, and an absurd client-supplied budget
-                // must never size an allocation
+                // must never size an allocation.  A wire value of 0 means
+                // "use the server's default"; a budget that *resolves* to 0
+                // (a server configured with no default) is a caller error —
+                // the engine refuses zero-token generations.
                 let budget = if g.max_new_tokens == 0 {
                     scfg.decode.max_new_tokens
                 } else {
                     g.max_new_tokens
                 }
                 .min(seq_len);
+                if budget == 0 {
+                    conn.send(&Event::Error {
+                        id: Some(g.id),
+                        code: ERR_BAD_REQUEST.into(),
+                        message: "resolved max_new_tokens is 0 (no \
+                                  client budget and no server default)"
+                            .into(),
+                    });
+                    continue;
+                }
+                let gid = next_id.fetch_add(1, Ordering::SeqCst);
                 let req = DecodeRequest {
                     id: gid,
                     prompt: g.prompt,
@@ -398,8 +411,15 @@ fn validate_prompt(prompt: &[i32], seq_len: usize, vocab: usize)
 /// until a `shutdown` request drains the engine.  Blocking: returns only
 /// after every connection and the engine have unwound, with the session's
 /// final accounting.
+///
+/// When `drafter` is `Some` and `cfg.decode.speculate_k > 0`, the engine
+/// thread runs speculative self-decode: the drafter proposes up to
+/// `speculate_k` tokens per greedy slot per iteration and `engine` (the
+/// target) verifies them in one batched call.  Streamed tokens are
+/// bit-identical to the non-speculative path.
 pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
-           cfg: &ServerConfig, ready: impl FnOnce(SocketAddr))
+           drafter: Option<&Engine>, cfg: &ServerConfig,
+           ready: impl FnOnce(SocketAddr))
            -> Result<ServerStats> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let local = listener.local_addr()?;
@@ -450,6 +470,12 @@ pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
                         });
                     }
                 }
+                DecodeEvent::Draft { proposed, accepted } => {
+                    shared.metrics.inc("draft_proposed_tokens",
+                                       proposed as u64);
+                    shared.metrics.inc("draft_accepted_tokens",
+                                       accepted as u64);
+                }
                 DecodeEvent::Done(c) => {
                     shared.metrics.inc("requests_completed", 1);
                     shared.metrics.inc("prefill_tokens", c.prompt_len as u64);
@@ -469,14 +495,15 @@ pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
                             queue_ms: c.queue_ms,
                             ttft_ms: c.ttft_ms,
                             latency_ms: c.latency_ms,
+                            truncated: c.truncated,
                         });
                         r.conn.inflight.fetch_sub(1, Ordering::SeqCst);
                         r.conn.maybe_close();
                     }
                 }
             };
-            decode::run_engine(sess, params, engine, &cfg.decode, &mut source,
-                               &mut sink)
+            decode::run_engine(sess, params, engine, drafter, &cfg.decode,
+                               &mut source, &mut sink)
         });
 
         // accept loop on the calling thread.  Non-blocking + bounded nap:
@@ -544,8 +571,13 @@ pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
 
     let counters = counters?;
     let m = &shared.metrics;
+    let label = if drafter.is_some() && cfg.decode.speculate_k > 0 {
+        format!("{}+spec-k{}", engine.label(), cfg.decode.speculate_k)
+    } else {
+        engine.label()
+    };
     Ok(ServerStats {
-        engine: engine.label(),
+        engine: label,
         counters,
         connections: m.counter("connections"),
         requests_admitted: m.counter("requests_admitted"),

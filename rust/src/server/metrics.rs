@@ -124,6 +124,17 @@ impl Metrics {
             // from `EngineCounters::decode_tok_per_sec`
             ("uptime_tok_per_sec",
              Json::num(self.counter("decode_tokens") as f64 / uptime)),
+            // accepted / proposed drafter tokens; 0.0 when the server runs
+            // without speculation (both counters absent)
+            ("draft_acceptance_rate", Json::num({
+                let proposed = self.counter("draft_proposed_tokens");
+                if proposed == 0 {
+                    0.0
+                } else {
+                    self.counter("draft_accepted_tokens") as f64
+                        / proposed as f64
+                }
+            })),
             ("counters", counters),
             ("latency_ms", latency),
         ])
@@ -181,6 +192,8 @@ mod tests {
         assert_eq!(j.usize_or("queue_depth", 99), 3);
         assert!(j.f64_or("uptime_secs", 0.0) > 0.0);
         assert!(j.f64_or("uptime_tok_per_sec", 0.0) > 0.0);
+        // no speculation ran: rate reports 0, not NaN
+        assert_eq!(j.f64_or("draft_acceptance_rate", -1.0), 0.0);
         let c = j.get("counters").expect("counters");
         assert_eq!(c.usize_or("decode_tokens", 0), 10);
         let l = j.get("latency_ms").and_then(Json::as_obj).expect("latency");
@@ -188,5 +201,15 @@ mod tests {
         // snapshot parses back as a wire event
         let line = j.to_string();
         assert!(super::super::protocol::parse_event(&line).is_ok());
+    }
+
+    #[test]
+    fn snapshot_derives_draft_acceptance() {
+        let m = Metrics::new();
+        m.inc("draft_proposed_tokens", 8);
+        m.inc("draft_accepted_tokens", 6);
+        let j = m.snapshot(0);
+        assert!((j.f64_or("draft_acceptance_rate", 0.0) - 0.75).abs()
+                < 1e-12);
     }
 }

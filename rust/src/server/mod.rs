@@ -40,9 +40,9 @@
 //! | type            | fields                                                         |
 //! |-----------------|----------------------------------------------------------------|
 //! | `token`         | `id`, `index` (0-based, strictly sequential), `token` — one per sampled token, streamed as produced |
-//! | `done`          | `id`, `tokens` (the full generation), `prompt_len`, latency breakdown `queue_ms` / `ttft_ms` / `latency_ms` |
+//! | `done`          | `id`, `tokens` (the full generation), `prompt_len`, latency breakdown `queue_ms` / `ttft_ms` / `latency_ms`, `truncated` (true when generation stopped early at the KV-capacity wall; absent = false for older peers) |
 //! | `error`         | `code` (`overloaded` \| `bad_request` \| `shutting_down`), `message`, `id` when attributable to one request |
-//! | `metrics`       | `uptime_secs`, `queue_depth`, `uptime_tok_per_sec` (whole-uptime average), `counters{..}`, `latency_ms{series → {n,mean,p50,p95,p99,max}}` |
+//! | `metrics`       | `uptime_secs`, `queue_depth`, `uptime_tok_per_sec` (whole-uptime average), `draft_acceptance_rate` (accepted/proposed drafter tokens; 0 without speculation), `counters{..}`, `latency_ms{series → {n,mean,p50,p95,p99,max}}` |
 //! | `shutting_down` | — (the connection closes after in-flight work completes)        |
 //!
 //! Requests from one connection may interleave; every reply carries the
@@ -58,7 +58,7 @@
 //! S: {"type":"token","id":1,"index":1,"token":9}
 //! S: {"type":"token","id":1,"index":2,"token":41}
 //! S: {"type":"done","id":1,"tokens":[137,9,41],"prompt_len":3,
-//!     "queue_ms":0.2,"ttft_ms":14.8,"latency_ms":31.5}
+//!     "queue_ms":0.2,"ttft_ms":14.8,"latency_ms":31.5,"truncated":false}
 //! C: {"type":"metrics"}
 //! S: {"type":"metrics","uptime_secs":2.1,"queue_depth":0,"uptime_tok_per_sec":95.1,
 //!     "counters":{"connections":1,"decode_tokens":3,...},
@@ -80,7 +80,12 @@
 //!
 //! Start a server from the CLI with `zs-svd serve --listen 127.0.0.1:0`
 //! (dense) or `--plan --ratio 0.6` (ZS-SVD low-rank engine), and drive it
-//! with `zs-svd client --connect <addr>`.
+//! with `zs-svd client --connect <addr>`.  Adding `--speculate-k K` to the
+//! server turns on speculative self-decode: a high-compression ZS-SVD
+//! drafter proposes up to K tokens per greedy slot per iteration and the
+//! serving engine verifies them in one batched call — streamed tokens are
+//! bit-identical to the non-speculative server, only latency and the
+//! `draft_*` metrics change.
 
 pub mod admission;
 pub mod client;

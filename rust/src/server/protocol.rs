@@ -145,6 +145,9 @@ pub enum Event {
         ttft_ms: f64,
         /// end-to-end latency, ms
         latency_ms: f64,
+        /// generation stopped early because the KV arena filled (the
+        /// requested budget was not reached)
+        truncated: bool,
     },
     /// structured rejection or protocol error; `id` present when the error
     /// is attributable to one request
@@ -172,7 +175,8 @@ pub fn event_line(e: &Event) -> String {
             ("token", Json::num(*token as f64)),
         ])
         .to_string(),
-        Event::Done { id, tokens, prompt_len, queue_ms, ttft_ms, latency_ms } => {
+        Event::Done { id, tokens, prompt_len, queue_ms, ttft_ms, latency_ms,
+                      truncated } => {
             Json::obj(vec![
                 ("type", Json::str("done")),
                 ("id", Json::num(*id as f64)),
@@ -182,6 +186,7 @@ pub fn event_line(e: &Event) -> String {
                 ("queue_ms", Json::num(*queue_ms)),
                 ("ttft_ms", Json::num(*ttft_ms)),
                 ("latency_ms", Json::num(*latency_ms)),
+                ("truncated", Json::Bool(*truncated)),
             ])
             .to_string()
         }
@@ -232,6 +237,8 @@ pub fn parse_event(line: &str) -> Result<Event, String> {
                 queue_ms: j.f64_or("queue_ms", 0.0),
                 ttft_ms: j.f64_or("ttft_ms", 0.0),
                 latency_ms: j.f64_or("latency_ms", 0.0),
+                // older peers never emit the field: absent means complete
+                truncated: j.bool_or("truncated", false),
             })
         }
         Some("error") => Ok(Event::Error {
@@ -303,7 +310,11 @@ mod tests {
         let events = vec![
             Event::Token { id: 3, index: 12, token: 199 },
             Event::Done { id: 3, tokens: vec![4, 5, 6], prompt_len: 8,
-                          queue_ms: 1.5, ttft_ms: 10.25, latency_ms: 30.5 },
+                          queue_ms: 1.5, ttft_ms: 10.25, latency_ms: 30.5,
+                          truncated: false },
+            Event::Done { id: 4, tokens: vec![7], prompt_len: 2,
+                          queue_ms: 0.0, ttft_ms: 1.0, latency_ms: 2.0,
+                          truncated: true },
             Event::Error { id: Some(9), code: ERR_OVERLOADED.into(),
                            message: "queue full".into() },
             Event::Error { id: None, code: ERR_BAD_REQUEST.into(),
@@ -314,6 +325,18 @@ mod tests {
             let line = event_line(&e);
             assert!(!line.contains('\n'));
             assert_eq!(parse_event(&line).unwrap(), e, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn done_without_truncated_field_parses_as_complete() {
+        // lines from an older server omit the field entirely
+        let line = "{\"type\":\"done\",\"id\":1,\"tokens\":[2],\
+                    \"prompt_len\":1,\"queue_ms\":0,\"ttft_ms\":0,\
+                    \"latency_ms\":0}";
+        match parse_event(line).unwrap() {
+            Event::Done { truncated, .. } => assert!(!truncated),
+            other => panic!("wrong variant: {other:?}"),
         }
     }
 

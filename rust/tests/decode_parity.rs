@@ -8,7 +8,13 @@
 //! * the batched `decode_batch` kernel reproduces the token-at-a-time
 //!   `decode_step` reference BIT-EXACTLY for every prefill chunking
 //!   (chunk sizes {1, 3, full} leave identical KV contents and logits) and
-//!   for every across-slot batch composition, at threads {1, 4}.
+//!   for every across-slot batch composition, at threads {1, 4};
+//! * the verify-mode path (`decode_batch_modes`, `LogitsMode::All`)
+//!   returns the stepwise reference row at EVERY run position, and
+//!   speculative self-decode (low-rank drafter, dense target) generates
+//!   bit-identical tokens to plain greedy decode for K ∈ {1, 2, 4} at
+//!   threads {1, 4} — including at the KV-capacity boundary, where the
+//!   rollback arithmetic is tightest.
 //!
 //! Everything thread-global lives in ONE test function per sweep
 //! (`exec::set_threads` is process-wide, same pattern as
@@ -25,10 +31,11 @@
 
 use std::collections::BTreeMap;
 
-use zs_svd::decode::{run_decode, synth_requests, DecodeConfig, DecodeRequest,
-                     KvCache};
+use zs_svd::decode::{run_decode, run_decode_speculative, synth_requests,
+                     DecodeConfig, DecodeRequest, KvCache};
 use zs_svd::exec;
 use zs_svd::model::init::init_params;
+use zs_svd::runtime::native::LogitsMode;
 use zs_svd::runtime::session::Session;
 use zs_svd::runtime::Runtime;
 use zs_svd::serve::Engine;
@@ -293,7 +300,8 @@ fn continuous_batching_serves_every_request_exactly_once() {
     // 12-token prompts over a 5-token prefill chunk exercise the ragged
     // chunked-prefill path (5 + 5 + 2) under continuous batching
     let cfg = DecodeConfig { max_slots: 3, max_new_tokens: 4, temperature: 0.0,
-                             seed: 5, arrival_steps: 0.0, prefill_chunk: 5 };
+                             seed: 5, arrival_steps: 0.0, prefill_chunk: 5,
+                             speculate_k: 0 };
     let reqs = synth_requests(&sess.cfg, 9, 12, 4, 0xFEED);
     let (stats, done) = run_decode(&sess, &params, &Engine::Dense, &reqs, &cfg)
         .unwrap();
@@ -327,7 +335,7 @@ fn generation_is_reproducible_and_slot_count_invariant() {
     let run = |slots: usize, temperature: f32, prefill_chunk: usize| {
         let cfg = DecodeConfig { max_slots: slots, max_new_tokens: 6,
                                  temperature, seed: 11, arrival_steps: 0.0,
-                                 prefill_chunk };
+                                 prefill_chunk, speculate_k: 0 };
         let (_, done) = run_decode(&sess, &params, &Engine::Dense, &reqs, &cfg)
             .unwrap();
         done.into_iter().map(|c| c.tokens).collect::<Vec<_>>()
@@ -359,11 +367,236 @@ fn generation_respects_kv_capacity() {
     let reqs = vec![DecodeRequest::new(0, vec![1i32; seq - 2], 10)];
     let cfg = DecodeConfig { max_slots: 1, max_new_tokens: 10,
                              temperature: 0.0, seed: 1, arrival_steps: 0.0,
-                             prefill_chunk: 0 };
+                             prefill_chunk: 0, speculate_k: 0 };
     let (stats, done) = run_decode(&sess, &params, &Engine::Dense, &reqs, &cfg)
         .unwrap();
     // prefill leaves 2 free positions; each decode step consumes one, and
     // the token sampled from the arena-filling step still counts
     assert_eq!(done[0].tokens.len(), 3);
     assert_eq!(stats.decode_tokens, 3);
+    // the cut-short budget is no longer silent
+    assert!(done[0].truncated, "capacity cut must be flagged");
+}
+
+#[test]
+fn zero_token_budget_is_rejected() {
+    // the old scheduler silently coerced max_new_tokens == 0 to 1; it is
+    // now a validation error before any slot is touched
+    let rt = Runtime::load_default().unwrap();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(0x0B0);
+    let params = init_params(&sess.cfg, &mut rng);
+    let reqs = vec![DecodeRequest::new(0, vec![1, 2, 3], 0)];
+    let cfg = DecodeConfig::default();
+    let err = run_decode(&sess, &params, &Engine::Dense, &reqs, &cfg)
+        .unwrap_err();
+    assert!(err.to_string().contains("max_new_tokens"), "{err}");
+}
+
+#[test]
+fn verify_mode_logits_bitmatch_stepwise_reference() {
+    // the speculative contract at the kernel level: an All-mode batched run
+    // returns, at every run position j, the bit-exact logits row the
+    // token-at-a-time step path produces at that position — dense and
+    // low-rank engines both
+    let rt = Runtime::load_default().unwrap();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(0xA11);
+    let params = init_params(&sess.cfg, &mut rng);
+    let tag = "60";
+    let factors = synthetic_factors(&sess, tag, &mut rng);
+    let v = sess.cfg.vocab;
+
+    let toks: Vec<i32> = (0..9)
+        .map(|_| rng.range(1, sess.cfg.vocab) as i32)
+        .collect();
+    let split = 4usize;
+
+    // token-at-a-time reference rows over the whole stream
+    let mut ref_dense = sess.new_kv_cache();
+    let mut ref_lr = sess.new_kv_cache();
+    let dense_ref: Vec<Vec<f32>> = toks.iter()
+        .map(|&t| sess.decode_step(&params, &mut ref_dense, t).unwrap().data)
+        .collect();
+    let lr_ref: Vec<Vec<f32>> = toks.iter()
+        .map(|&t| sess
+            .lowrank_decode_step(tag, &params, &factors, &mut ref_lr, t)
+            .unwrap()
+            .data)
+        .collect();
+
+    // dense: ingest a prefix without logits, then score the rest All-mode
+    let mut cache = sess.new_kv_cache();
+    {
+        let mut seqs = vec![(&mut cache, &toks[..split])];
+        sess.decode_batch(&params, &mut seqs, &[false]).unwrap();
+    }
+    let all = {
+        let mut seqs = vec![(&mut cache, &toks[split..])];
+        sess.decode_batch_modes(&params, &mut seqs, &[LogitsMode::All])
+            .unwrap()
+            .remove(0)
+            .expect("All mode returns a matrix")
+    };
+    assert_eq!(all.rows, toks.len() - split);
+    assert_eq!(all.cols, v);
+    for j in 0..all.rows {
+        assert_eq!(all.row(j), &dense_ref[split + j][..],
+                   "dense All-mode row {j}");
+    }
+
+    // low-rank: same contract, plus Last/None on a fresh run
+    let mut lr_cache = sess.new_kv_cache();
+    {
+        let mut seqs = vec![(&mut lr_cache, &toks[..split])];
+        sess.lowrank_decode_batch(tag, &params, &factors, &mut seqs, &[false])
+            .unwrap();
+    }
+    let all = {
+        let mut seqs = vec![(&mut lr_cache, &toks[split..])];
+        sess.lowrank_decode_batch_modes(tag, &params, &factors, &mut seqs,
+                                        &[LogitsMode::All])
+            .unwrap()
+            .remove(0)
+            .expect("All mode returns a matrix")
+    };
+    for j in 0..all.rows {
+        assert_eq!(all.row(j), &lr_ref[split + j][..],
+                   "lowrank All-mode row {j}");
+    }
+
+    // Last returns exactly the final row; None returns nothing (and both
+    // advance the cursor just the same)
+    let mut c_last = sess.new_kv_cache();
+    let mut c_none = sess.new_kv_cache();
+    let last = {
+        let mut seqs = vec![(&mut c_last, &toks[..])];
+        sess.decode_batch_modes(&params, &mut seqs, &[LogitsMode::Last])
+            .unwrap()
+            .remove(0)
+            .expect("Last mode returns one row")
+    };
+    assert_eq!(last.rows, 1);
+    assert_eq!(last.row(0), &dense_ref[toks.len() - 1][..]);
+    let none = {
+        let mut seqs = vec![(&mut c_none, &toks[..])];
+        sess.decode_batch_modes(&params, &mut seqs, &[LogitsMode::None])
+            .unwrap()
+            .remove(0)
+    };
+    assert!(none.is_none());
+    assert_eq!(c_last.len, toks.len());
+    assert_eq!(c_none.len, toks.len());
+}
+
+#[test]
+fn speculative_decode_bitmatches_plain_greedy() {
+    // the tentpole invariant: a dense target verifying a low-rank drafter's
+    // proposals generates EXACTLY the tokens plain dense decode does, for
+    // every draft depth K and thread count — speculation may only change
+    // how many tokens commit per iteration.  One test fn for the whole
+    // sweep: exec::set_threads is process-global.
+    let rt = Runtime::load_default().unwrap();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(0x5BEC);
+    let params = init_params(&sess.cfg, &mut rng);
+    let drafter = Engine::Lowrank {
+        tag: "60".into(),
+        factors: synthetic_factors(&sess, "60", &mut rng),
+    };
+
+    // 7 requests into 3 slots, ragged chunked prefill, one slot running at
+    // temperature (speculation must skip it and still bit-match)
+    let mut reqs = synth_requests(&sess.cfg, 7, 10, 6, 0xF00D);
+    reqs[2].temperature = Some(0.8);
+    reqs[2].seed = Some(99);
+    let cfg_for = |k: usize| DecodeConfig {
+        max_slots: 3, max_new_tokens: 6, temperature: 0.0, seed: 11,
+        arrival_steps: 0.0, prefill_chunk: 4, speculate_k: k,
+    };
+
+    for threads in [1usize, 4] {
+        exec::set_threads(threads);
+        let (_, plain) = run_decode(&sess, &params, &Engine::Dense, &reqs,
+                                    &cfg_for(0)).unwrap();
+        let plain_tokens: Vec<Vec<i32>> =
+            plain.iter().map(|c| c.tokens.clone()).collect();
+        for k in [1usize, 2, 4] {
+            let (stats, done) = run_decode_speculative(
+                &sess, &params, &Engine::Dense, &drafter, &reqs,
+                &cfg_for(k)).unwrap();
+            let got: Vec<Vec<i32>> =
+                done.iter().map(|c| c.tokens.clone()).collect();
+            assert_eq!(got, plain_tokens,
+                       "speculative K={k} @ {threads} threads must \
+                        bit-match plain greedy decode");
+            assert_eq!(stats.engine, format!("dense+spec-k{k}"));
+            assert!(stats.drafted_tokens > 0,
+                    "K={k}: the greedy slots must actually draft");
+            assert!(stats.accepted_draft_tokens <= stats.drafted_tokens);
+            assert!((0.0..=1.0).contains(&stats.draft_acceptance));
+        }
+    }
+    exec::set_threads(0);
+}
+
+#[test]
+fn speculative_decode_respects_kv_capacity() {
+    // the drafter/verify rollback arithmetic at the arena boundary: a
+    // prompt leaving only 2 free positions must yield exactly the plain
+    // path's 3 tokens (flagged truncated) for any K, and a prompt that
+    // FILLS the arena yields exactly one token without ever running a
+    // verify round
+    let rt = Runtime::load_default().unwrap();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(0xED6E);
+    let params = init_params(&sess.cfg, &mut rng);
+    let seq = sess.cfg.seq_len;
+    let drafter = Engine::Lowrank {
+        tag: "60".into(),
+        factors: synthetic_factors(&sess, "60", &mut rng),
+    };
+    let cfg_for = |k: usize| DecodeConfig {
+        max_slots: 1, max_new_tokens: 10, temperature: 0.0, seed: 1,
+        arrival_steps: 0.0, prefill_chunk: 0, speculate_k: k,
+    };
+
+    let near = vec![DecodeRequest::new(0, vec![1i32; seq - 2], 10)];
+    let (_, plain) = run_decode(&sess, &params, &Engine::Dense, &near,
+                                &cfg_for(0)).unwrap();
+    assert_eq!(plain[0].tokens.len(), 3);
+    assert!(plain[0].truncated);
+    for k in [1usize, 4] {
+        let (_, done) = run_decode_speculative(
+            &sess, &params, &Engine::Dense, &drafter, &near, &cfg_for(k))
+            .unwrap();
+        assert_eq!(done[0].tokens, plain[0].tokens, "K={k} at the boundary");
+        assert!(done[0].truncated, "K={k}: the cut must still be flagged");
+    }
+
+    // prompt == seq_len: the arena is full the moment prefill ends — one
+    // token comes from the prompt logits, then the slot retires truncated
+    let full = vec![DecodeRequest::new(0, vec![1i32; seq], 10)];
+    for k in [0usize, 2] {
+        let run = |k: usize| {
+            if k == 0 {
+                run_decode(&sess, &params, &Engine::Dense, &full, &cfg_for(0))
+            } else {
+                run_decode_speculative(&sess, &params, &Engine::Dense,
+                                       &drafter, &full, &cfg_for(k))
+            }
+        };
+        let (_, done) = run(k).unwrap();
+        assert_eq!(done[0].tokens.len(), 1, "K={k}");
+        assert!(done[0].truncated, "K={k}");
+    }
+
+    // same full-arena prompt with a budget of exactly 1: the request got
+    // everything it asked for, so it is NOT truncated
+    let one = vec![DecodeRequest::new(0, vec![1i32; seq], 1)];
+    let cfg1 = DecodeConfig { max_new_tokens: 1, ..cfg_for(2) };
+    let (_, done) = run_decode_speculative(&sess, &params, &Engine::Dense,
+                                           &drafter, &one, &cfg1).unwrap();
+    assert_eq!(done[0].tokens.len(), 1);
+    assert!(!done[0].truncated, "budget-done beats capacity-done");
 }

@@ -28,7 +28,7 @@ use zs_svd::model::ParamStore;
 use zs_svd::runtime::session::Session;
 use zs_svd::runtime::Runtime;
 use zs_svd::serve::Engine;
-use zs_svd::server::protocol::{Event, ERR_OVERLOADED};
+use zs_svd::server::protocol::{Event, ERR_BAD_REQUEST, ERR_OVERLOADED};
 use zs_svd::server::{self, Client, GenerateOutcome, GenerateReq, Request,
                      ServerConfig};
 use zs_svd::tensor::Mat;
@@ -74,9 +74,11 @@ fn sampling_for(k: usize) -> (Option<f32>, Option<u64>) {
 }
 
 /// One loopback round: serve `engine` over TCP at the given prefill chunk
-/// size, drive it with concurrent clients, and return the tokens each
-/// logical request streamed.
+/// size (optionally speculating through `drafter` at depth `speculate_k`),
+/// drive it with concurrent clients, and return the tokens each logical
+/// request streamed.
 fn serve_and_collect(sess: &Session, params: &ParamStore, engine: &Engine,
+                     drafter: Option<&Engine>, speculate_k: usize,
                      prefill_chunk: usize) -> Vec<(usize, Vec<i32>)> {
     let vocab = sess.cfg.vocab;
     let cfg = ServerConfig {
@@ -84,7 +86,7 @@ fn serve_and_collect(sess: &Session, params: &ParamStore, engine: &Engine,
         queue_depth: 64,
         decode: DecodeConfig { max_slots: 3, max_new_tokens: MAX_NEW,
                                temperature: 0.0, seed: 9, arrival_steps: 0.0,
-                               prefill_chunk },
+                               prefill_chunk, speculate_k },
     };
     let (tx, rx) = mpsc::channel::<SocketAddr>();
     let mut collected: Vec<(usize, Vec<i32>)> = Vec::new();
@@ -92,7 +94,7 @@ fn serve_and_collect(sess: &Session, params: &ParamStore, engine: &Engine,
     std::thread::scope(|s| {
         let cfg = &cfg;
         let srv = s.spawn(move || {
-            server::run(sess, params, engine, cfg, move |a| {
+            server::run(sess, params, engine, drafter, cfg, move |a| {
                 tx.send(a).expect("report addr");
             })
         });
@@ -169,7 +171,7 @@ fn offline_reference(sess: &Session, params: &ParamStore, engine: &Engine)
     // must reproduce
     let dc = DecodeConfig { max_slots: 3, max_new_tokens: MAX_NEW,
                             temperature: 0.0, seed: 9, arrival_steps: 0.0,
-                            prefill_chunk: 0 };
+                            prefill_chunk: 0, speculate_k: 0 };
     let (_, done) = run_decode(sess, params, engine, &reqs, &dc)
         .expect("offline decode");
     done.into_iter().map(|c| c.tokens).collect()
@@ -192,8 +194,8 @@ fn streamed_tokens_bitmatch_offline_for_both_engines() {
         for engine in [&Engine::Dense, &lowrank] {
             let offline = offline_reference(&sess, &params, engine);
             for prefill_chunk in [1usize, 3, 0] {
-                let served =
-                    serve_and_collect(&sess, &params, engine, prefill_chunk);
+                let served = serve_and_collect(&sess, &params, engine, None,
+                                               0, prefill_chunk);
                 assert_eq!(served.len(), CLIENTS * PER_CLIENT);
                 for (k, tokens) in &served {
                     assert_eq!(tokens, &offline[*k],
@@ -206,6 +208,146 @@ fn streamed_tokens_bitmatch_offline_for_both_engines() {
         }
     }
     exec::set_threads(0);
+}
+
+#[test]
+fn speculative_server_bitmatches_offline_and_reports_acceptance() {
+    // a dense server speculating through a low-rank drafter must stream
+    // tokens bit-identical to the plain offline dense reference (mixed
+    // greedy/temperature clients — temperature slots fall back to plain
+    // decode), and the drafter counters must surface in the wire metrics
+    let rt = Runtime::load_default().unwrap();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(0x5BEC2);
+    let params = init_params(&sess.cfg, &mut rng);
+    let drafter = Engine::Lowrank {
+        tag: "60".into(),
+        factors: synthetic_factors(&sess, "60", &mut rng),
+    };
+
+    let offline = offline_reference(&sess, &params, &Engine::Dense);
+    let served = serve_and_collect(&sess, &params, &Engine::Dense,
+                                   Some(&drafter), 2, 3);
+    assert_eq!(served.len(), CLIENTS * PER_CLIENT);
+    for (k, tokens) in &served {
+        assert_eq!(tokens, &offline[*k],
+                   "request {k}: speculative server must bit-match the \
+                    plain offline dense path");
+    }
+
+    // one more round just for the metrics surface
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        queue_depth: 8,
+        decode: DecodeConfig { max_slots: 2, max_new_tokens: MAX_NEW,
+                               temperature: 0.0, seed: 9, arrival_steps: 0.0,
+                               prefill_chunk: 0, speculate_k: 2 },
+    };
+    let (tx, rx) = mpsc::channel::<SocketAddr>();
+    std::thread::scope(|s| {
+        let cfg = &cfg;
+        let sess = &sess;
+        let params = &params;
+        let drafter = &drafter;
+        let srv = s.spawn(move || {
+            server::run(sess, params, &Engine::Dense, Some(drafter), cfg,
+                        move |a| { tx.send(a).expect("report addr"); })
+        });
+        let addr = rx.recv().expect("server bound");
+        let mut cl = Client::connect(addr).expect("connect");
+        let g = GenerateReq { id: 0, prompt: prompt_for(0, sess.cfg.vocab),
+                              max_new_tokens: MAX_NEW,
+                              temperature: Some(0.0), seed: None };
+        match cl.run_generate(&g).expect("generate") {
+            GenerateOutcome::Done(r) => {
+                assert_eq!(r.tokens, offline[0]);
+                assert!(!r.truncated, "nothing was cut short");
+            }
+            GenerateOutcome::Rejected { code, message } => {
+                panic!("rejected: {code} ({message})");
+            }
+        }
+        let snap = cl.metrics().expect("metrics");
+        let counters = snap.get("counters").expect("counters object");
+        assert!(counters.usize_or("draft_proposed_tokens", 0) >= 1,
+                "a greedy generation under speculation must draft");
+        let rate = snap.f64_or("draft_acceptance_rate", -1.0);
+        assert!((0.0..=1.0).contains(&rate), "rate {rate}");
+        cl.shutdown_server().expect("shutdown");
+        let stats = srv.join().expect("server thread").expect("server run");
+        assert!(stats.counters.drafted_tokens >= 1);
+        assert_eq!(stats.engine, "dense+spec-k2");
+    });
+}
+
+#[test]
+fn capacity_truncation_and_zero_budget_over_the_wire() {
+    // the two admission/retirement edges the wire must surface: a prompt
+    // that fills the KV arena completes with exactly one token and
+    // `truncated: true`, and a request whose budget RESOLVES to zero (no
+    // client budget, no server default) gets a structured bad_request
+    let rt = Runtime::load_default().unwrap();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(0xEDF);
+    let params = init_params(&sess.cfg, &mut rng);
+    let seq = sess.cfg.seq_len;
+
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        queue_depth: 8,
+        // a server deliberately configured with NO default budget
+        decode: DecodeConfig { max_slots: 1, max_new_tokens: 0,
+                               temperature: 0.0, seed: 3, arrival_steps: 0.0,
+                               prefill_chunk: 0, speculate_k: 0 },
+    };
+    let (tx, rx) = mpsc::channel::<SocketAddr>();
+    std::thread::scope(|s| {
+        let cfg = &cfg;
+        let sess = &sess;
+        let params = &params;
+        let srv = s.spawn(move || {
+            server::run(sess, params, &Engine::Dense, None, cfg, move |a| {
+                tx.send(a).expect("report addr");
+            })
+        });
+        let addr = rx.recv().expect("server bound");
+        let mut cl = Client::connect(addr).expect("connect");
+
+        // arena-filling prompt: one token, flagged truncated
+        let g = GenerateReq { id: 0, prompt: vec![1i32; seq],
+                              max_new_tokens: 10, temperature: Some(0.0),
+                              seed: None };
+        match cl.run_generate(&g).expect("generate") {
+            GenerateOutcome::Done(r) => {
+                assert_eq!(r.tokens.len(), 1,
+                           "a full arena leaves room for exactly the \
+                            prompt-logits token");
+                assert!(r.truncated, "the capacity cut must cross the wire");
+            }
+            GenerateOutcome::Rejected { code, message } => {
+                panic!("rejected: {code} ({message})");
+            }
+        }
+
+        // zero resolved budget: structured rejection, not a silent 1-token
+        // generation (the old scheduler coerced 0 to 1)
+        let g = GenerateReq { id: 1, prompt: prompt_for(1, sess.cfg.vocab),
+                              max_new_tokens: 0, temperature: Some(0.0),
+                              seed: None };
+        match cl.run_generate(&g).expect("generate") {
+            GenerateOutcome::Rejected { code, .. } => {
+                assert_eq!(code, ERR_BAD_REQUEST);
+            }
+            GenerateOutcome::Done(r) => {
+                panic!("zero budget must be rejected, got {} tokens",
+                       r.tokens.len());
+            }
+        }
+
+        cl.shutdown_server().expect("shutdown");
+        let stats = srv.join().expect("server thread").expect("server run");
+        assert_eq!(stats.counters.requests_completed, 1);
+    });
 }
 
 #[test]
@@ -224,7 +366,7 @@ fn queue_full_gets_overloaded_and_server_stays_live() {
         queue_depth: 1,
         decode: DecodeConfig { max_slots: 1, max_new_tokens: 24,
                                temperature: 0.0, seed: 3, arrival_steps: 0.0,
-                               prefill_chunk: 0 },
+                               prefill_chunk: 0, speculate_k: 0 },
     };
     let (tx, rx) = mpsc::channel::<SocketAddr>();
 
@@ -233,7 +375,7 @@ fn queue_full_gets_overloaded_and_server_stays_live() {
         let sess = &sess;
         let params = &params;
         let srv = s.spawn(move || {
-            server::run(sess, params, &Engine::Dense, cfg, move |a| {
+            server::run(sess, params, &Engine::Dense, None, cfg, move |a| {
                 tx.send(a).expect("report addr");
             })
         });
