@@ -73,6 +73,30 @@ pub fn phase_cells(prefill_tok_per_sec: f64, decode_tok_per_sec: f64)
          zs_svd::report::f2(decode_tok_per_sec)]
 }
 
+/// One phase counter (`phase.prefill_ns` etc.) accumulated since the last
+/// `obs::reset()`, in milliseconds.  The scheduler ticks these on every
+/// traced run; tracing is observe-only (`rust/tests/trace_equiv.rs`), so a
+/// bench can leave it on without perturbing what it measures.
+pub fn phase_ms(counter: &str) -> f64 {
+    zs_svd::obs::counter(counter) as f64 / 1e6
+}
+
+/// Phase-breakdown JSON row for one traced engine run: wall milliseconds
+/// the scheduler spent in each phase, read from the obs counters.
+pub fn phase_row(engine: &str, speculate_k: usize,
+                 decode_tok_per_sec: f64) -> zs_svd::util::json::Json {
+    use zs_svd::util::json::Json;
+    Json::obj(vec![
+        ("engine", Json::str(engine)),
+        ("speculate_k", Json::num(speculate_k as f64)),
+        ("prefill_ms", Json::num(phase_ms("phase.prefill_ns"))),
+        ("decode_ms", Json::num(phase_ms("phase.decode_ns"))),
+        ("draft_ms", Json::num(phase_ms("phase.draft_ns"))),
+        ("verify_ms", Json::num(phase_ms("phase.verify_ns"))),
+        ("decode_tok_per_sec", Json::num(decode_tok_per_sec)),
+    ])
+}
+
 /// Print + persist one table.
 pub fn emit(name: &str, t: &Table) {
     print!("{}", t.to_ascii());

@@ -17,6 +17,12 @@
 //! (`rust/tests/decode_parity.rs` gates that), so the sweep isolates the
 //! rate effect — acceptance rate and the decode tok/s ratio vs K = 0 — and
 //! records it machine-readably in `BENCH_6.json` at the repo root.
+//!
+//! The whole harness runs with the observability layer on
+//! (`zs_svd::obs`): tracing is observe-only (`rust/tests/trace_equiv.rs`
+//! gates bit-identity), so the scheduler's per-phase counters can be read
+//! after every run for free.  The resulting prefill / decode / draft /
+//! verify wall-time breakdown per engine lands in `BENCH_7.json`.
 
 mod common;
 
@@ -31,6 +37,10 @@ use zs_svd::util::json::Json;
 fn main() {
     let rt = common::runtime();
     let p = common::prepare(rt, "tiny", "llama", 7);
+    // per-phase wall-time attribution via the observe-only tracing layer;
+    // reset before each measured run so every counter read is one run's
+    zs_svd::obs::set_enabled(true);
+    let mut phase_rows: Vec<Json> = Vec::new();
     let (n_requests, max_new) = if fast_mode() { (6, 8) } else { (24, 32) };
     let prompt_len = p.session.cfg.seq_len / 4;
 
@@ -56,8 +66,10 @@ fn main() {
         &headers,
     );
 
+    zs_svd::obs::reset();
     let (d, _) = run_decode(&p.session, &p.params, &Engine::Dense, &reqs, &dc)
         .expect("dense decode");
+    phase_rows.push(common::phase_row(&d.engine, 0, d.decode_tok_per_sec));
     eprintln!("  dense: {:.0} prefill tok/s, {:.0} decode tok/s",
               d.prefill_tok_per_sec, d.decode_tok_per_sec);
     let mut row = vec!["original".into(), "0%".into()];
@@ -75,8 +87,11 @@ fn main() {
         let lm = p.session.cfg.lowrank.get(&tag).expect("artifact tag");
         let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
         let params = plan.apply(&p.params);
+        zs_svd::obs::reset();
         let (s, _) = run_decode(&p.session, &params, &engine, &reqs, &dc)
             .expect("lowrank decode");
+        phase_rows.push(common::phase_row(&s.engine, 0,
+                                          s.decode_tok_per_sec));
         eprintln!("  {}@{comp}: {:.0} prefill tok/s, {:.0} decode tok/s",
                   plan.method, s.prefill_tok_per_sec, s.decode_tok_per_sec);
         let mut row = vec![plan.method.clone(), comp.into()];
@@ -115,10 +130,13 @@ fn main() {
     ])];
     for k in [2usize, 4] {
         let dc_k = DecodeConfig { speculate_k: k, ..dc.clone() };
+        zs_svd::obs::reset();
         let (s, _) = run_decode_speculative(&p.session, &p.params,
                                             &Engine::Dense, &drafter, &reqs,
                                             &dc_k)
             .expect("speculative decode");
+        phase_rows.push(common::phase_row(&s.engine, k,
+                                          s.decode_tok_per_sec));
         let speedup = if base_decode > 0.0 {
             s.decode_tok_per_sec / base_decode
         } else {
@@ -166,6 +184,47 @@ fn main() {
     std::fs::write(&bench6_path, bench6.to_string_pretty() + "\n")
         .expect("write BENCH_6.json");
     println!("[saved {}]", bench6_path.display());
+
+    // ---------------------------------------------------------------
+    // per-phase wall-time breakdown (BENCH_7): what each engine's
+    // scheduler time went to — prefill ingest, decode steps, and (for the
+    // speculative rows) draft proposal vs batched verification.  Read
+    // straight from the obs phase counters the traced runs accumulated.
+    // ---------------------------------------------------------------
+    let mut pt = Table::new(
+        "scheduler phase breakdown (wall ms, from obs counters)",
+        &["engine", "K", "prefill ms", "decode ms", "draft ms",
+          "verify ms"],
+    );
+    for r in &phase_rows {
+        pt.row(vec![
+            r.str_or("engine", "?"),
+            format!("{}", r.usize_or("speculate_k", 0)),
+            f2(r.f64_or("prefill_ms", 0.0)),
+            f2(r.f64_or("decode_ms", 0.0)),
+            f2(r.f64_or("draft_ms", 0.0)),
+            f2(r.f64_or("verify_ms", 0.0)),
+        ]);
+    }
+    common::emit("decode_phase_breakdown", &pt);
+
+    let bench7 = Json::obj(vec![
+        ("bench", Json::str("decode_throughput/phase_breakdown")),
+        ("generated_by",
+         Json::str("cargo bench --bench decode_throughput (also run by ci.sh)")),
+        ("fast_mode", Json::Bool(fast_mode())),
+        ("units", Json::str("wall milliseconds per scheduler phase, summed \
+                             over one run's iterations, read from the \
+                             observability layer's phase.* counters; \
+                             tracing is observe-only, so the measured runs \
+                             are bit-identical to untraced ones")),
+        ("results", Json::Arr(phase_rows)),
+    ]);
+    let bench7_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("BENCH_7.json");
+    std::fs::write(&bench7_path, bench7.to_string_pretty() + "\n")
+        .expect("write BENCH_7.json");
+    println!("[saved {}]", bench7_path.display());
 
     common::emit("decode_throughput", &t);
 }

@@ -14,6 +14,10 @@
 //! put more rows into each prefill GEMM and the prefill tok/s column rises
 //! with them (tokens streamed to clients are identical for every chunk
 //! size; `rust/tests/server_loopback.rs` gates that bit-exactly).
+//!
+//! The harness runs with tracing on (observe-only — the streamed tokens
+//! cannot change) and pulls one wire `trace` snapshot per server run, so
+//! the protocol-side observability path is exercised under real load.
 
 mod common;
 
@@ -86,6 +90,14 @@ fn drive(p: &Prepared, params: &zs_svd::model::ParamStore, engine: &Engine,
         }
 
         let mut cl = Client::connect(addr).expect("connect for shutdown");
+        // one wire trace snapshot per run: tracing is on (see main), so
+        // the served load must have left events and gauges behind
+        let snap = cl.trace().expect("trace snapshot");
+        assert_eq!(snap.str_or("type", ""), "trace");
+        assert!(snap.bool_or("enabled", false), "bench enables tracing");
+        assert!(snap.get("events").and_then(|e| e.as_arr())
+                    .map(|a| !a.is_empty()).unwrap_or(false),
+                "traced serving left no events in the ring");
         cl.shutdown_server().expect("shutdown");
         srv.join().expect("server thread").expect("server run")
     })
@@ -104,6 +116,9 @@ fn chunk_label(prefill_chunk: usize) -> String {
 fn main() {
     let rt = common::runtime();
     let p = common::prepare(rt, "tiny", "llama", 7);
+    // observe-only (rust/tests/trace_equiv.rs): on for the whole bench so
+    // every drive() can pull a populated wire trace snapshot
+    zs_svd::obs::set_enabled(true);
     let load = if fast_mode() {
         Load { clients: 2, per_client: 2, prompt_len: 8, max_new: 6 }
     } else {

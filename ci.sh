@@ -1,10 +1,10 @@
 #!/usr/bin/env bash
 # CI entry point: lint → build → tier-1 tests → bench smoke.
 #
-# fmt/clippy default to advisory (warn, don't fail) because the build box
-# may lack the rustfmt/clippy components and the seed code predates the
-# lint gate; set ZS_CI_STRICT=1 to make them fatal once the tree is known
-# clean.  The correctness gate is always fatal:
+# fmt defaults to advisory (warn, don't fail) because the build box may
+# lack the rustfmt component; set ZS_CI_STRICT=1 to make it fatal.  clippy
+# is FATAL whenever the component is installed (`-D warnings`); only its
+# absence is advisory.  The correctness gate is always fatal:
 # `cargo build --release && cargo test -q` plus the microbench smoke run.
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -24,9 +24,10 @@ else
     lint_fail "rustfmt unavailable"
 fi
 
-echo "== cargo clippy -D warnings =="
+echo "== cargo clippy --all-targets -D warnings (fatal) =="
 if cargo clippy --version >/dev/null 2>&1; then
-    cargo clippy --all-targets -- -D warnings || lint_fail "clippy findings"
+    # fatal, not advisory: the tree is clippy-clean, keep it that way
+    cargo clippy --all-targets -- -D warnings
 else
     lint_fail "clippy unavailable"
 fi
@@ -106,5 +107,25 @@ echo "== speculative serve smoke: serve --listen --speculate-k 2 =="
 # proves the CLI drafter wiring end-to-end
 serve_smoke --speculate-k 2
 echo "speculative serve smoke OK (drafter round-trip + shutdown)"
+
+echo "== trace smoke: serve --trace-out + chrome-trace validation =="
+# the same serve round-trip with the observability layer on: the server
+# writes a chrome://tracing JSON on shutdown, and the binary's own `trace`
+# subcommand re-parses it with the in-repo util::json — queue/prefill/decode
+# request spans and engine spans must come out structurally well-formed
+TRACE_FILE="$(mktemp)"
+serve_smoke --trace-out "$TRACE_FILE"
+./target/release/zs-svd trace "$TRACE_FILE"
+rm -f "$TRACE_FILE"
+echo "trace smoke OK (chrome trace written + validated)"
+
+echo "== compress report smoke: compress --report + validation =="
+# per-matrix selection report (rank, predicted ΔL, zero-sum trajectory)
+# through the same validator; reuses the --fast checkpoint trained above
+REPORT_FILE="$(mktemp)"
+./target/release/zs-svd compress --fast --ratio 0.5 --report "$REPORT_FILE"
+./target/release/zs-svd trace "$REPORT_FILE"
+rm -f "$REPORT_FILE"
+echo "compress report smoke OK (report written + validated)"
 
 echo "CI OK"

@@ -9,14 +9,16 @@ use anyhow::Result;
 
 use super::correction::{correct, CorrectionKind};
 use super::plan::{factored_params, remap_params, CompressionPlan, TargetPlan};
-use super::selection::{select, Costing, Strategy};
+use super::selection::{select, Costing, SelectionResult, Strategy};
 use super::whiten::{decompose_target, factorize, truncate_with_s,
                     TargetDecomp};
 use crate::data::Corpus;
 use crate::linalg::{gram, matmul};
 use crate::model::quant::quant_dequant_int8;
 use crate::model::{ConfigMeta, ParamStore};
+use crate::obs;
 use crate::runtime::session::Session;
+use crate::util::json::Json;
 use crate::tensor::{IntTensor, Mat};
 use crate::util::rng::Rng;
 
@@ -185,16 +187,29 @@ pub fn compress_zs(sess: &Session, params: &ParamStore, calib: &Calibration,
     let sel_ratio = if opts.hq { (2.0 * opts.ratio).min(1.0) } else { opts.ratio };
     let quantize = opts.hq;
 
+    // phase timing is always measured (one Instant pair per phase) so the
+    // compress report works without tracing; the chrome-trace spans for the
+    // same phases are emitted only when tracing is on
+    let t_dec = Instant::now();
     let decomps = decompose_all(sess, params, calib);
+    let decompose_s = t_dec.elapsed().as_secs_f64();
+    phase_span("compress.decompose", t_dec, decompose_s, decomps.len());
+
+    let t_sel = Instant::now();
     let selection = select(&decomps, sel_ratio, opts.costing, opts.strategy);
+    let select_s = t_sel.elapsed().as_secs_f64();
+    phase_span("compress.select", t_sel, select_s, selection.removed);
 
     // materialization (factorize + recomposition matmuls) is per-target
     // independent — fan out, order-preserving
+    let t_build = Instant::now();
     let targets = crate::exec::par_map(&decomps, |_, d| {
         let kept = selection.kept[&d.name].clone();
         let dense = selection.keep_dense[&d.name];
         build_target(d, &kept, dense, opts.costing, quantize, params)
     });
+    let build_s = t_build.elapsed().as_secs_f64();
+    phase_span("compress.build", t_build, build_s, targets.len());
 
     let mut plan = CompressionPlan {
         method: opts.label(),
@@ -203,13 +218,84 @@ pub fn compress_zs(sess: &Session, params: &ParamStore, calib: &Calibration,
         seconds: 0.0,
     };
 
+    let t_corr = Instant::now();
     for _ in 0..opts.correction_iters {
         apply_correction_iter(sess, params, calib, &mut plan, &decomps,
                               opts.correction_kind, quantize)?;
     }
+    let correct_s = t_corr.elapsed().as_secs_f64();
+    if opts.correction_iters > 0 {
+        phase_span("compress.correct", t_corr, correct_s,
+                   opts.correction_iters);
+    }
 
     plan.seconds = t0.elapsed().as_secs_f64();
+    stash_report(opts, &selection, calib,
+                 [decompose_s, select_s, build_s, correct_s, plan.seconds]);
     Ok(plan)
+}
+
+/// Emit one compress-phase span onto the engine track (no-op when tracing
+/// is off; the always-on report carries the same timing either way).
+fn phase_span(name: &'static str, start: Instant, secs: f64, items: usize) {
+    obs::emit_span(name, "compress", obs::us_of(start), (secs * 1e6) as u64,
+                   obs::PID_ENGINE, obs::tid(),
+                   vec![("items", Json::num(items as f64))]);
+}
+
+/// Assemble the per-matrix compress report and stash it in the obs layer.
+/// Always on: `compress --report FILE` fetches it via `obs::report`, and
+/// the cost is one small JSON tree per compression run.
+fn stash_report(opts: &ZsOpts, sel: &SelectionResult, calib: &Calibration,
+                [decompose_s, select_s, build_s, correct_s, total_s]: [f64; 5]) {
+    let targets: Vec<Json> = sel.per_target.iter().map(|t| {
+        Json::obj(vec![
+            ("name", Json::str(&t.name)),
+            ("m", Json::num(t.m as f64)),
+            ("n", Json::num(t.n as f64)),
+            ("rank", Json::num(t.rank as f64)),
+            ("removed", Json::num(t.removed as f64)),
+            ("dl_removed", Json::num(t.dl_removed)),
+            ("keep_dense", Json::Bool(t.keep_dense)),
+        ])
+    }).collect();
+    // the removal trajectory names targets via the per_target records,
+    // which are in decomps order — same order the trajectory indexes
+    let trajectory: Vec<Json> = sel.trajectory.iter().map(|p| {
+        Json::obj(vec![
+            ("target", Json::str(&sel.per_target[p.layer].name)),
+            ("comp", Json::num(p.comp as f64)),
+            ("dl", Json::num(p.dl as f64)),
+            ("s", Json::num(p.s)),
+        ])
+    }).collect();
+    let report = Json::obj(vec![
+        ("type", Json::str("compress_report")),
+        ("method", Json::str(&opts.label())),
+        ("ratio", Json::num(opts.ratio)),
+        ("selection", Json::obj(vec![
+            ("final_s", Json::num(sel.final_s)),
+            ("max_abs_s", Json::num(sel.max_abs_s)),
+            ("saved_params", Json::num(sel.saved_params)),
+            ("removed", Json::num(sel.removed as f64)),
+            ("forced_pops", Json::num(sel.forced_pops as f64)),
+        ])),
+        ("timing_s", Json::obj(vec![
+            // calibration passes are shared across methods and timed by the
+            // caller; reported here so one file tells the whole cost story
+            ("whitening_moments", Json::num(calib.moments_seconds)),
+            ("calibration_grads", Json::num(calib.grads_seconds)),
+            ("decompose", Json::num(decompose_s)),
+            ("select", Json::num(select_s)),
+            ("build", Json::num(build_s)),
+            ("correct", Json::num(correct_s)),
+            ("total", Json::num(total_s)),
+        ])),
+        ("targets", Json::Arr(targets)),
+        ("trajectory", Json::Arr(trajectory)),
+        ("trajectory_dropped", Json::num(sel.trajectory_dropped as f64)),
+    ]);
+    obs::set_report("compress", report);
 }
 
 fn build_target(d: &TargetDecomp, kept: &[usize], dense: bool,

@@ -42,6 +42,46 @@ pub enum Strategy {
     SigmaSmallest,
 }
 
+/// Longest removal trajectory kept in a [`SelectionResult`].  Removals past
+/// the cap still happen — only their per-step record is dropped (counted in
+/// `trajectory_dropped`), so the result stays bounded on huge sweeps.
+pub const TRAJECTORY_CAP: usize = 4096;
+
+/// Per-target outcome of one selection run — the rows of the compress
+/// report (`zs-svd compress --report`).  Always collected: one small
+/// struct per target, independent of whether tracing is enabled.
+#[derive(Clone, Debug)]
+pub struct TargetRecord {
+    /// target matrix name
+    pub name: String,
+    /// rows
+    pub m: usize,
+    /// cols
+    pub n: usize,
+    /// components kept
+    pub rank: usize,
+    /// components removed from this target
+    pub removed: usize,
+    /// sum of predicted ΔL over this target's removed components
+    pub dl_removed: f64,
+    /// target ended above k_thr and stays dense (Standard costing only)
+    pub keep_dense: bool,
+}
+
+/// One removal step of the global selection loop: which component was
+/// popped and where the running zero-sum budget stood afterwards.
+#[derive(Clone, Copy, Debug)]
+pub struct TrajectoryPoint {
+    /// index into the `decomps` slice passed to [`select`]
+    pub layer: usize,
+    /// component index within that target
+    pub comp: usize,
+    /// the component's predicted loss change
+    pub dl: f32,
+    /// running sum s after this pop (the zero-sum budget, Eq. 11)
+    pub s: f64,
+}
+
 /// Outcome of one global budgeted selection run.
 #[derive(Clone, Debug)]
 pub struct SelectionResult {
@@ -60,6 +100,12 @@ pub struct SelectionResult {
     /// pops where the sign-preferred heap was empty (drift can grow by one
     /// |ΔL| per forced pop; the zero-sum bound is conditional on balance)
     pub forced_pops: usize,
+    /// per-target records in `decomps` order (compress-report rows)
+    pub per_target: Vec<TargetRecord>,
+    /// the first [`TRAJECTORY_CAP`] removal steps with the running budget
+    pub trajectory: Vec<TrajectoryPoint>,
+    /// removal steps past the cap whose records were not kept
+    pub trajectory_dropped: usize,
 }
 
 /// Rank above which factored storage stops paying for an m-by-n matrix.
@@ -189,6 +235,9 @@ pub fn select(decomps: &[TargetDecomp], ratio: f64, costing: Costing,
     let mut saved = 0.0f64;
     let mut removed = 0usize;
     let mut forced_pops = 0usize;
+    let mut dl_removed = vec![0.0f64; decomps.len()];
+    let mut trajectory: Vec<TrajectoryPoint> = Vec::new();
+    let mut trajectory_dropped = 0usize;
 
     while saved < budget && (!q_plus.is_empty() || !q_minus.is_empty()) {
         let e = if zero_sum {
@@ -219,6 +268,13 @@ pub fn select(decomps: &[TargetDecomp], ratio: f64, costing: Costing,
         removed += 1;
         s += e.dl as f64;
         max_abs_s = max_abs_s.max(s.abs());
+        dl_removed[e.layer] += e.dl as f64;
+        if trajectory.len() < TRAJECTORY_CAP {
+            trajectory.push(TrajectoryPoint { layer: e.layer, comp: e.comp,
+                                              dl: e.dl, s });
+        } else {
+            trajectory_dropped += 1;
+        }
 
         // budget accounting
         let cost = match costing {
@@ -239,7 +295,8 @@ pub fn select(decomps: &[TargetDecomp], ratio: f64, costing: Costing,
 
     let mut kept = BTreeMap::new();
     let mut keep_dense = BTreeMap::new();
-    for (d, st) in decomps.iter().zip(&layers) {
+    let mut per_target = Vec::with_capacity(decomps.len());
+    for (li, (d, st)) in decomps.iter().zip(&layers).enumerate() {
         let kept_idx: Vec<usize> = (0..st.removed.len())
             .filter(|&i| !st.removed[i])
             .collect();
@@ -247,12 +304,22 @@ pub fn select(decomps: &[TargetDecomp], ratio: f64, costing: Costing,
             Costing::Standard => kept_idx.len() > st.kthr,
             Costing::Remap => false,
         };
+        per_target.push(TargetRecord {
+            name: d.name.clone(),
+            m: st.m,
+            n: st.n,
+            rank: kept_idx.len(),
+            removed: st.removed.len() - kept_idx.len(),
+            dl_removed: dl_removed[li],
+            keep_dense: dense,
+        });
         keep_dense.insert(d.name.clone(), dense);
         kept.insert(d.name.clone(), kept_idx);
     }
 
     SelectionResult { kept, keep_dense, final_s: s, max_abs_s,
-                      saved_params: saved, removed, forced_pops }
+                      saved_params: saved, removed, forced_pops,
+                      per_target, trajectory, trajectory_dropped }
 }
 
 #[cfg(test)]
@@ -379,6 +446,38 @@ mod tests {
         let r = select(&ds, 1.0, Costing::Standard, Strategy::ZeroSum);
         assert_eq!(r.saved_params, 0.0);
         assert!(r.keep_dense["t0"]);
+    }
+
+    #[test]
+    fn per_target_records_and_trajectory_are_consistent() {
+        let ds = decomps(11, &[(24, 24), (32, 16), (16, 32)]);
+        let r = select(&ds, 0.4, Costing::Standard, Strategy::ZeroSum);
+        // records mirror the kept/keep_dense maps in decomps order
+        assert_eq!(r.per_target.len(), ds.len());
+        for (d, rec) in ds.iter().zip(&r.per_target) {
+            assert_eq!(rec.name, d.name);
+            assert_eq!(rec.rank, r.kept[&d.name].len());
+            assert_eq!(rec.rank + rec.removed, d.svd.sigma.len());
+            assert_eq!(rec.keep_dense, r.keep_dense[&d.name]);
+        }
+        assert_eq!(r.per_target.iter().map(|t| t.removed).sum::<usize>(),
+                   r.removed);
+        // trajectory: bounded, one point per recorded removal, running sum
+        // matches the final s, per-layer ΔL totals match the records
+        assert!(r.trajectory.len() <= TRAJECTORY_CAP);
+        assert_eq!(r.trajectory.len() + r.trajectory_dropped, r.removed);
+        if r.trajectory_dropped == 0 {
+            let last_s = r.trajectory.last().map(|p| p.s).unwrap_or(0.0);
+            assert!((last_s - r.final_s).abs() < 1e-9);
+            for (li, rec) in r.per_target.iter().enumerate() {
+                let sum: f64 = r.trajectory.iter()
+                    .filter(|p| p.layer == li)
+                    .map(|p| p.dl as f64)
+                    .sum();
+                assert!((sum - rec.dl_removed).abs() < 1e-9,
+                        "layer {li}: {} vs {}", sum, rec.dl_removed);
+            }
+        }
     }
 
     #[test]

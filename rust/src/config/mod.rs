@@ -57,6 +57,13 @@ pub struct ExperimentConfig {
     /// bit-identical for every value — the knob only changes how many
     /// tokens commit per target verification call.
     pub speculate_k: usize,
+    /// enable the observability layer (`rust/src/obs/`) — the config-file
+    /// twin of the `PALLAS_TRACE` environment variable and the `--trace` /
+    /// `--trace-out` CLI flags.  Tracing is observe-only: plans, logits,
+    /// and generated tokens are bit-identical with it on or off
+    /// (`rust/tests/trace_equiv.rs`), so this is a diagnostics knob, never
+    /// a results knob.
+    pub trace: bool,
     /// where checkpoints live
     pub ckpt_dir: PathBuf,
     /// where result tables are appended
@@ -83,6 +90,7 @@ impl Default for ExperimentConfig {
             queue_depth: 64,
             prefill_chunk: 16,
             speculate_k: 0,
+            trace: false,
             ckpt_dir: root.join("artifacts").join("ckpts"),
             out_dir: root.join("results"),
         }
@@ -115,6 +123,7 @@ impl ExperimentConfig {
             queue_depth: j.usize_or("queue_depth", d.queue_depth),
             prefill_chunk: j.usize_or("prefill_chunk", d.prefill_chunk),
             speculate_k: j.usize_or("speculate_k", d.speculate_k),
+            trace: j.bool_or("trace", d.trace),
             ckpt_dir: j
                 .get("ckpt_dir")
                 .and_then(Json::as_str)
@@ -154,6 +163,7 @@ impl ExperimentConfig {
             ("queue_depth", Json::num(self.queue_depth as f64)),
             ("prefill_chunk", Json::num(self.prefill_chunk as f64)),
             ("speculate_k", Json::num(self.speculate_k as f64)),
+            ("trace", Json::Bool(self.trace)),
             ("ckpt_dir", Json::str(self.ckpt_dir.to_str().unwrap_or("."))),
             ("out_dir", Json::str(self.out_dir.to_str().unwrap_or("."))),
         ])
@@ -189,12 +199,15 @@ mod tests {
         assert_eq!(back.prefill_chunk, c.prefill_chunk);
         assert_eq!(back.speculate_k, c.speculate_k);
         assert_eq!(back.no_simd, c.no_simd);
+        assert_eq!(back.trace, c.trace);
 
         let forced = ExperimentConfig { no_simd: true, speculate_k: 3,
+                                        trace: true,
                                         ..ExperimentConfig::default() };
         let back = ExperimentConfig::from_json(&forced.to_json());
         assert!(back.no_simd, "no_simd must survive the roundtrip");
         assert_eq!(back.speculate_k, 3);
+        assert!(back.trace, "trace must survive the roundtrip");
     }
 
     #[test]

@@ -128,6 +128,13 @@ pub fn prepare<'rt>(rt: &'rt Runtime, cfg: &ExperimentConfig) -> Result<Prepared
         crate::linalg::kernels::force_backend(
             Some(crate::linalg::kernels::Backend::Portable));
     }
+    if cfg.trace {
+        // one-directional like the other knobs: config can turn tracing on
+        // but never off, so a PALLAS_TRACE=1 environment survives a default
+        // config.  Observe-only by contract (rust/tests/trace_equiv.rs) —
+        // this cannot change any result bits.
+        crate::obs::set_enabled(true);
+    }
     let session = Session::new(rt, &cfg.model);
     let world = data::default_world();
     let train_corpus = data::training_corpus(&cfg.family, &world);

@@ -107,6 +107,7 @@ use crate::runtime::native::LogitsMode;
 use crate::runtime::session::Session;
 use crate::serve::{peak_rss_bytes, Engine};
 use crate::tensor::{Mat, Tensor};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::LatencySummary;
 
@@ -212,6 +213,12 @@ pub struct CompletedRequest {
     pub ttft_ms: f64,
     /// eligibility → slot admission, ms (pure queue wait)
     pub queue_ms: f64,
+    /// slot admission → prompt fully ingested, ms (the prefill phase of
+    /// this request's lifecycle; chunked prefill spreads it over several
+    /// scheduler iterations)
+    pub prefill_ms: f64,
+    /// prompt ingested → completion, ms (the decode phase)
+    pub decode_ms: f64,
     /// the KV arena filled before the generation budget was reached — the
     /// request got fewer tokens than it asked for because the prompt left
     /// less headroom than `max_new_tokens` (previously this truncation was
@@ -492,6 +499,9 @@ struct Active {
     arrival: Instant,
     /// slot-admission instant (arrival → admitted = queue wait)
     admitted: Instant,
+    /// prompt-fully-ingested instant (admitted → this = prefill phase;
+    /// this → completion = decode phase)
+    prefill_done_at: Option<Instant>,
     first_token_at: Option<Instant>,
     /// previous emission instant (token-gap baseline; starts at arrival)
     last_emit: Instant,
@@ -658,6 +668,7 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                             limit,
                             arrival,
                             admitted: now,
+                            prefill_done_at: None,
                             first_token_at: None,
                             last_emit: arrival,
                             done: false,
@@ -724,6 +735,7 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                 let mut drafts: Vec<Vec<i32>> =
                     act.iter().map(|_| Vec::new()).collect();
                 let max_k = keff.iter().copied().max().unwrap_or(0);
+                let t_draft = Instant::now();
                 if max_k > 0 {
                     let draft_engine = drafter.expect("spec_k > 0");
                     // catch-up + first draft: one ragged batched call
@@ -803,6 +815,12 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                     }
                 }
 
+                if max_k > 0 {
+                    crate::obs::counter_add("phase.draft_ns",
+                                            t_draft.elapsed().as_nanos()
+                                                as u64);
+                }
+
                 // verify: ONE batched target call scores every slot's
                 // [pending, drafts..] run with logits at ALL positions.  A
                 // draft-free run has length 1 — exactly the plain batched
@@ -817,6 +835,7 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                         r
                     })
                     .collect();
+                let t_verify = Instant::now();
                 let logits = {
                     let mut seqs: Vec<(&mut KvCache, &[i32])> =
                         Vec::with_capacity(act.len());
@@ -827,6 +846,8 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                     step_engine_batch_modes(sess, params, engine, &mut seqs,
                                             &modes)?
                 };
+                crate::obs::counter_add("phase.verify_ns",
+                                        t_verify.elapsed().as_nanos() as u64);
 
                 // accept, on the driver thread in slot order: verify row i
                 // is the target's distribution after run position i, so
@@ -886,10 +907,24 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                 // iterations-only clock would starve under small chunk
                 // sizes and steady admissions).  Drafter calls are decode
                 // work and are charged here too.
-                c.decode_only_secs += t_step.elapsed().as_secs_f64();
+                let step_el = t_step.elapsed();
+                c.decode_only_secs += step_el.as_secs_f64();
                 c.decode_only_tokens += committed;
                 c.drafted_tokens += proposed;
                 c.accepted_draft_tokens += accepted_drafts;
+                crate::obs::counter_add("phase.decode_ns",
+                                        step_el.as_nanos() as u64);
+                if crate::obs::enabled() {
+                    // gated here (not just inside emit_span) so the args
+                    // vec is never built on the disabled path
+                    crate::obs::emit_span(
+                        "decode_step", "sched", crate::obs::us_of(t_step),
+                        step_el.as_micros() as u64, crate::obs::PID_ENGINE,
+                        crate::obs::tid(),
+                        vec![("slots", Json::num(act.len() as f64)),
+                             ("committed", Json::num(committed as f64)),
+                             ("drafted", Json::num(proposed as f64))]);
+                }
                 if proposed > 0 {
                     sink(DecodeEvent::Draft {
                         proposed,
@@ -957,7 +992,19 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                                             &mut seqs, &modes)?;
                 }
             }
-            c.prefill_secs += t_pre.elapsed().as_secs_f64();
+            let pre_el = t_pre.elapsed();
+            c.prefill_secs += pre_el.as_secs_f64();
+            crate::obs::counter_add("phase.prefill_ns",
+                                    pre_el.as_nanos() as u64);
+            if crate::obs::enabled() {
+                let toks: usize = takes.iter().sum();
+                crate::obs::emit_span(
+                    "prefill_chunk", "sched", crate::obs::us_of(t_pre),
+                    pre_el.as_micros() as u64, crate::obs::PID_ENGINE,
+                    crate::obs::tid(),
+                    vec![("slots", Json::num(takes.len() as f64)),
+                         ("tokens", Json::num(toks as f64))]);
+            }
             let mut k = 0usize;
             for s in slots.iter_mut() {
                 let Some(a) = s else { continue };
@@ -970,6 +1017,7 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                 if !a.prefilling() {
                     // prompt fully ingested: the final chunk's logits are
                     // the last prompt position's — sample the first token
+                    a.prefill_done_at = Some(Instant::now());
                     let l = logits[k].as_ref()
                         .expect("final-chunk logits requested");
                     let tok = a.sampler.sample(&l.data) as i32;
@@ -1002,6 +1050,37 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
             let now = Instant::now();
             c.requests_completed += 1;
             c.decode_tokens += a.tokens.len();
+            // phase split: admitted → prompt ingested → completion (a
+            // completed request always generated at least one token, so
+            // prefill_done_at is stamped; `now` is a defensive fallback)
+            let prefill_done = a.prefill_done_at.unwrap_or(now);
+            let queue_ms =
+                a.admitted.duration_since(a.arrival).as_secs_f64() * 1e3;
+            let prefill_ms =
+                prefill_done.duration_since(a.admitted).as_secs_f64() * 1e3;
+            let decode_ms =
+                now.duration_since(prefill_done).as_secs_f64() * 1e3;
+            if crate::obs::enabled() {
+                // request-lifecycle track: tid = request id, so a trace
+                // viewer renders one queue→prefill→decode row per request
+                let id = a.req.id as u64;
+                let us = crate::obs::us_of;
+                crate::obs::emit_span(
+                    "queue", "request", us(a.arrival),
+                    (queue_ms * 1e3) as u64, crate::obs::PID_REQUESTS, id,
+                    vec![]);
+                crate::obs::emit_span(
+                    "prefill", "request", us(a.admitted),
+                    (prefill_ms * 1e3) as u64, crate::obs::PID_REQUESTS, id,
+                    vec![("prompt_len",
+                          Json::num(a.req.prompt.len() as f64))]);
+                crate::obs::emit_span(
+                    "decode", "request", us(prefill_done),
+                    (decode_ms * 1e3) as u64, crate::obs::PID_REQUESTS, id,
+                    vec![("tokens", Json::num(a.tokens.len() as f64)),
+                         ("truncated", Json::Bool(a.truncated))]);
+                crate::obs::counter_add("sched.requests_done", 1);
+            }
             sink(DecodeEvent::Done(CompletedRequest {
                 id: a.req.id,
                 prompt_len: a.req.prompt.len(),
@@ -1011,8 +1090,9 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                     .first_token_at
                     .map(|t| t.duration_since(a.arrival).as_secs_f64() * 1e3)
                     .unwrap_or(0.0),
-                queue_ms: a.admitted.duration_since(a.arrival).as_secs_f64()
-                    * 1e3,
+                queue_ms,
+                prefill_ms,
+                decode_ms,
                 truncated: a.truncated,
             }));
             if let Some(d) = a.draft_cache.take() {
@@ -1020,6 +1100,22 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
             }
             arena_pool.push(a.cache);
         }
+
+        // always-on occupancy gauges: the server's `metrics` wire snapshot
+        // reads these whether or not tracing is enabled, so they bypass the
+        // gated hooks (a handful of map writes per ~ms-scale iteration)
+        let active = slots.iter().flatten().count();
+        let kv_tokens: usize =
+            slots.iter().flatten().map(|a| a.cache.len).sum();
+        let kv_capacity: usize =
+            slots.iter().flatten().map(|a| a.cache.max_len).sum();
+        crate::obs::gauge_set("sched.slots_active", active as f64);
+        crate::obs::gauge_set("sched.slots_max", cfg.max_slots as f64);
+        crate::obs::gauge_set("sched.arena_pool", arena_pool.len() as f64);
+        crate::obs::gauge_set("sched.draft_pool", draft_pool.len() as f64);
+        crate::obs::gauge_set("sched.kv_tokens", kv_tokens as f64);
+        crate::obs::gauge_set("sched.kv_capacity", kv_capacity as f64);
+
         iter += 1;
     }
 

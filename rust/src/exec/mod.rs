@@ -226,12 +226,25 @@ fn run_jobs<'a>(jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
         }
         return;
     }
+    // observability: record the fan-out shape (batch count + size
+    // distribution) and span the submit→drain window.  Observe-only — the
+    // hooks read clocks and counters, never the queue — and one relaxed
+    // atomic load each when tracing is off.
+    crate::obs::counter_add("exec.job_batches", 1);
+    crate::obs::counter_add("exec.jobs", n as u64);
+    crate::obs::histo_record("exec.batch_jobs", n as u64);
+    let _sp = crate::obs::span("run_jobs", "exec")
+        .arg("jobs", crate::util::json::Json::num(n as f64))
+        .arg("pool", crate::util::json::Json::num(pool_size() as f64));
     let p = pool();
     let done = Arc::new((Mutex::new(0usize), Condvar::new()));
     type Panic = Box<dyn std::any::Any + Send + 'static>;
     let panic: Arc<Mutex<Option<Panic>>> = Arc::new(Mutex::new(None));
     {
         let mut q = p.q.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        // backlog already queued ahead of this batch — nonzero means the
+        // pool is saturated and fan-outs are stacking up
+        crate::obs::histo_record("exec.queue_backlog", q.len() as u64);
         for job in jobs {
             // SAFETY: see function docs — we block on `done` below until
             // every job has executed, so the 'a borrows stay valid for the

@@ -23,6 +23,7 @@
 #![warn(missing_docs)]
 
 pub mod util;
+pub mod obs;
 pub mod exec;
 pub mod tensor;
 pub mod linalg;

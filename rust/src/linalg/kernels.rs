@@ -173,6 +173,15 @@ pub fn active_backend() -> Backend {
     }
 }
 
+/// Lower-case label of the active backend, for observability records
+/// (`obs::kernel_record` keys timing aggregates by it).
+pub fn backend_label() -> &'static str {
+    match active_backend() {
+        Backend::Avx2 => "avx2",
+        Backend::Portable => "portable",
+    }
+}
+
 /// Override backend selection for this process (the `kernel_equiv` test
 /// hook, and how `ExperimentConfig::no_simd` forces the portable lane).
 /// `None` restores automatic resolution (`PALLAS_NO_SIMD` env, then CPU

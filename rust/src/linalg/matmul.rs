@@ -29,10 +29,30 @@
 //! configuration.
 
 use crate::exec;
+use crate::obs;
 use crate::tensor::Mat;
 
 use super::kernels;
 pub use super::kernels::{axpy_f32, dot_f32};
+
+/// Observability shim around one GEMM-shaped entry point: when tracing is
+/// on, time the call and fold (backend, shape, ns) into the per-kernel
+/// aggregates (`obs::kernel_record` — aggregated, never one ring event per
+/// call).  When tracing is off this is one relaxed atomic load and a direct
+/// call; the clock is read only around the computation, never inside it, so
+/// the observe-only contract holds trivially.
+#[inline]
+fn timed<T>(kernel: &'static str, m: usize, k: usize, n: usize,
+            f: impl FnOnce() -> T) -> T {
+    if !obs::enabled() {
+        return f();
+    }
+    let t0 = std::time::Instant::now();
+    let out = f();
+    obs::kernel_record(kernel, kernels::backend_label(), m, k, n,
+                       t0.elapsed().as_nanos() as u64);
+    out
+}
 
 /// Below this many multiply-adds a product is not worth fanning out to the
 /// worker pool.
@@ -82,20 +102,22 @@ pub fn matmul_flat(a: &Mat, b_data: &[f32], b_rows: usize, b_cols: usize) -> Mat
                a.rows, a.cols);
     assert_eq!(b_data.len(), b_rows * b_cols, "matmul_flat: ragged B buffer");
     let (m, k, n) = (a.rows, a.cols, b_cols);
-    let mut c = Mat::zeros(m, n);
-    if n == 0 {
-        return c;
-    }
-    if !par_worthwhile(m, k, n) {
-        kernels::mm_rows(&a.data, k, 0, m, b_data, n, &mut c.data);
-        return c;
-    }
-    let rows_per = m.div_ceil(exec::threads());
-    exec::par_chunks_mut(&mut c.data, rows_per * n, |ci, chunk| {
-        kernels::mm_rows(&a.data, k, ci * rows_per, chunk.len() / n, b_data,
-                         n, chunk);
-    });
-    c
+    timed("matmul", m, k, n, || {
+        let mut c = Mat::zeros(m, n);
+        if n == 0 {
+            return c;
+        }
+        if !par_worthwhile(m, k, n) {
+            kernels::mm_rows(&a.data, k, 0, m, b_data, n, &mut c.data);
+            return c;
+        }
+        let rows_per = m.div_ceil(exec::threads());
+        exec::par_chunks_mut(&mut c.data, rows_per * n, |ci, chunk| {
+            kernels::mm_rows(&a.data, k, ci * rows_per, chunk.len() / n,
+                             b_data, n, chunk);
+        });
+        c
+    })
 }
 
 /// Fully serial reference kernel (the bit-exact baseline for the
@@ -126,20 +148,22 @@ pub fn matmul_bt_flat(a: &Mat, b_data: &[f32], b_rows: usize, b_cols: usize)
                a.rows, a.cols);
     assert_eq!(b_data.len(), b_rows * b_cols, "matmul_bt_flat: ragged B buffer");
     let (m, k, n) = (a.rows, a.cols, b_rows);
-    let mut c = Mat::zeros(m, n);
-    if n == 0 {
-        return c;
-    }
-    if !par_worthwhile(m, k, n) {
-        kernels::mm_bt_rows(&a.data, k, 0, m, b_data, n, &mut c.data);
-        return c;
-    }
-    let rows_per = m.div_ceil(exec::threads());
-    exec::par_chunks_mut(&mut c.data, rows_per * n, |ci, chunk| {
-        kernels::mm_bt_rows(&a.data, k, ci * rows_per, chunk.len() / n,
-                            b_data, n, chunk);
-    });
-    c
+    timed("matmul_bt", m, k, n, || {
+        let mut c = Mat::zeros(m, n);
+        if n == 0 {
+            return c;
+        }
+        if !par_worthwhile(m, k, n) {
+            kernels::mm_bt_rows(&a.data, k, 0, m, b_data, n, &mut c.data);
+            return c;
+        }
+        let rows_per = m.div_ceil(exec::threads());
+        exec::par_chunks_mut(&mut c.data, rows_per * n, |ci, chunk| {
+            kernels::mm_bt_rows(&a.data, k, ci * rows_per, chunk.len() / n,
+                                b_data, n, chunk);
+        });
+        c
+    })
 }
 
 /// Row count of one `gram` band.  A *constant* on purpose: the band
@@ -159,41 +183,46 @@ const GRAM_BAND_ROWS: usize = 128;
 /// identical bits, no dispatch overhead.
 pub fn gram(a: &Mat) -> Mat {
     let (m, n) = (a.rows, a.cols);
-    let mut c = Mat::zeros(n, n);
-    if m == 0 || n == 0 {
-        return c;
-    }
-    let band = |rows: &[f32]| -> Vec<f32> {
-        let mut p = vec![0.0f32; n * n];
-        for row in rows.chunks_exact(n) {
-            for i in 0..n {
-                axpy_f32(&mut p[i * n + i..(i + 1) * n], row[i], &row[i..]);
+    // recorded MACs use the full m·n² product shape; the computed half
+    // (upper triangle, then mirrored) makes the reported GFLOP/s read as
+    // effective-output throughput, consistent with the other GEMMs
+    timed("gram", m, n, n, || {
+        let mut c = Mat::zeros(n, n);
+        if m == 0 || n == 0 {
+            return c;
+        }
+        let band = |rows: &[f32]| -> Vec<f32> {
+            let mut p = vec![0.0f32; n * n];
+            for row in rows.chunks_exact(n) {
+                for i in 0..n {
+                    axpy_f32(&mut p[i * n + i..(i + 1) * n], row[i], &row[i..]);
+                }
+            }
+            p
+        };
+        let bands: Vec<&[f32]> = a.data.chunks(GRAM_BAND_ROWS * n).collect();
+        // upper-triangle MACs ≈ m·n²/2; below the dispatch threshold the
+        // same banded pass runs inline on the caller (same bands, same
+        // tree, same bits)
+        let partials: Vec<Vec<f32>> = if m * n * n / 2 < PAR_MIN_MACS {
+            bands.iter().map(|rows| band(rows)).collect()
+        } else {
+            exec::par_map(&bands, |_, rows| band(rows))
+        };
+        if let Some(sum) = exec::tree_reduce(partials, |x, y| {
+            for (xe, ye) in x.iter_mut().zip(y) {
+                *xe += ye;
+            }
+        }) {
+            c.data = sum;
+        }
+        for i in 0..n {
+            for j in 0..i {
+                c.data[i * n + j] = c.data[j * n + i];
             }
         }
-        p
-    };
-    let bands: Vec<&[f32]> = a.data.chunks(GRAM_BAND_ROWS * n).collect();
-    // upper-triangle MACs ≈ m·n²/2; below the dispatch threshold the same
-    // banded pass runs inline on the caller (same bands, same tree, same
-    // bits)
-    let partials: Vec<Vec<f32>> = if m * n * n / 2 < PAR_MIN_MACS {
-        bands.iter().map(|rows| band(rows)).collect()
-    } else {
-        exec::par_map(&bands, |_, rows| band(rows))
-    };
-    if let Some(sum) = exec::tree_reduce(partials, |x, y| {
-        for (xe, ye) in x.iter_mut().zip(y) {
-            *xe += ye;
-        }
-    }) {
-        c.data = sum;
-    }
-    for i in 0..n {
-        for j in 0..i {
-            c.data[i * n + j] = c.data[j * n + i];
-        }
-    }
-    c
+        c
+    })
 }
 
 #[cfg(test)]

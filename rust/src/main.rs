@@ -27,11 +27,19 @@
 //!                            (`--connect <addr>`, `--requests`,
 //!                            `--prompt-len`, `--max-new-tokens`,
 //!                            `--shutdown` to drain the server afterwards)
+//!   trace                    validate a trace/report file produced by
+//!                            `--trace-out` or `compress --report`
+//!                            (positional: the file path)
 //!
 //! Flags shared by every experiment subcommand: `--threads N` sizes the
 //! `exec` worker pool, and `--no-simd` forces the portable kernel backend
 //! (bit-identical to the SIMD one — a debugging/CI knob, never a results
-//! knob; see `linalg::kernels`).
+//! knob; see `linalg::kernels`).  `--trace` (or the `PALLAS_TRACE` env
+//! var) turns on the observability layer (`zs_svd::obs`), and
+//! `--trace-out FILE` additionally writes a chrome://tracing JSON on exit
+//! — open it in Perfetto.  `compress --report FILE` writes the per-matrix
+//! ZS-SVD selection report (rank, predicted ΔL, zero-sum trajectory).
+//! Tracing is observe-only: outputs are bit-identical with it on or off.
 
 use anyhow::Result;
 
@@ -87,10 +95,25 @@ fn exp_config(args: &Args) -> ExperimentConfig {
     cfg.seed = args.u64_or("seed", cfg.seed);
     cfg.threads = args.usize_or("threads", cfg.threads);
     cfg.no_simd = cfg.no_simd || args.flag("no-simd");
+    // `--trace-out FILE` implies tracing: a chrome-trace with no events
+    // would only mislead
+    cfg.trace = cfg.trace || args.flag("trace")
+        || args.get("trace-out").is_some();
     if args.flag("fast") {
         cfg = cfg.shrunk();
     }
     cfg
+}
+
+/// Write the chrome://tracing JSON when `--trace-out FILE` was given.
+/// Runs after the subcommand's work, so the event ring holds the run.
+fn write_trace_out(args: &Args) -> Result<()> {
+    if let Some(out) = args.get("trace-out") {
+        zs_svd::obs::write_chrome_trace(std::path::Path::new(out))?;
+        println!("wrote chrome trace to {out} (open in Perfetto / \
+                  chrome://tracing)");
+    }
+    Ok(())
 }
 
 fn eval_spec(args: &Args, cfg: &ExperimentConfig) -> EvalSpec {
@@ -199,6 +222,7 @@ fn serve_listen(rt: &Runtime, args: &Args, cfg: &ExperimentConfig,
         t.row(vec![format!("token {h}"), v]);
     }
     print!("{}", t.to_ascii());
+    write_trace_out(args)?;
     Ok(())
 }
 
@@ -227,8 +251,10 @@ fn client_session(args: &Args, rt: &Runtime) -> Result<()> {
             GenerateOutcome::Done(r) => {
                 println!(
                     "request {i}: {} tokens streamed, queue {:.1} ms, \
-                     ttft {:.1} ms, e2e {:.1} ms{}",
-                    r.tokens.len(), r.queue_ms, r.ttft_ms, r.latency_ms,
+                     prefill {:.1} ms, decode {:.1} ms, ttft {:.1} ms, \
+                     e2e {:.1} ms{}",
+                    r.tokens.len(), r.queue_ms, r.prefill_ms, r.decode_ms,
+                    r.ttft_ms, r.latency_ms,
                     if r.truncated { " (truncated at KV capacity)" }
                     else { "" });
             }
@@ -328,6 +354,21 @@ fn main() -> Result<()> {
                 let compressed = plan.apply(&p.params);
                 compressed.save(std::path::Path::new(out))?;
                 println!("saved compressed weights to {out}");
+            }
+            if let Some(out) = args.get("report") {
+                // the ZS pipeline stashes the selection report in the
+                // always-on obs layer; baselines don't produce one
+                match zs_svd::obs::report("compress") {
+                    Some(rep) => {
+                        let mut body = rep.to_string_pretty();
+                        body.push('\n');
+                        std::fs::write(out, body)?;
+                        println!("wrote compress report to {out}");
+                    }
+                    None => anyhow::bail!(
+                        "no compress report recorded (method `{}` is not a \
+                         zero-sum pipeline)", plan.method),
+                }
             }
         }
 
@@ -489,10 +530,76 @@ fn main() -> Result<()> {
             return client_session(&args, &rt);
         }
 
+        "trace" => {
+            // validate a file produced by `--trace-out` (chrome trace) or
+            // `compress --report` (selection report): parse it with the
+            // repo's own `util::json`, auto-detect which of the two it is,
+            // and check the keys a consumer relies on — CI runs this
+            // against the serve-smoke trace so a malformed export fails
+            // loudly instead of silently confusing Perfetto
+            let path = args.positional.first().cloned().ok_or_else(|| {
+                anyhow::anyhow!("usage: zs-svd trace <file>  (a chrome \
+                                 trace or a compress report)")
+            })?;
+            let j = zs_svd::util::json::parse_file(std::path::Path::new(&path))
+                .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            if let Some(events) = j.get("traceEvents") {
+                let evs = events.as_arr().ok_or_else(|| anyhow::anyhow!(
+                    "{path}: `traceEvents` is not an array"))?;
+                for (i, e) in evs.iter().enumerate() {
+                    for key in ["name", "ph", "pid", "tid"] {
+                        anyhow::ensure!(
+                            e.get(key).is_some(),
+                            "{path}: traceEvents[{i}] missing `{key}`");
+                    }
+                    // metadata events (`ph:"M"`, e.g. process names) carry
+                    // no timestamp; every span event must
+                    if e.str_or("ph", "") != "M" {
+                        anyhow::ensure!(
+                            e.get("ts").is_some() && e.get("dur").is_some(),
+                            "{path}: traceEvents[{i}] span missing ts/dur");
+                    }
+                }
+                println!("{path}: valid chrome trace ({} events)", evs.len());
+            } else if j.str_or("type", "") == "compress_report" {
+                let targets = j.get("targets")
+                    .and_then(|t| t.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "{path}: compress report missing `targets` array"))?;
+                for (i, t) in targets.iter().enumerate() {
+                    for key in ["name", "m", "n", "rank", "removed",
+                                "dl_removed", "keep_dense"] {
+                        anyhow::ensure!(
+                            t.get(key).is_some(),
+                            "{path}: targets[{i}] missing `{key}`");
+                    }
+                }
+                for key in ["method", "ratio", "selection", "timing_s",
+                            "trajectory"] {
+                    anyhow::ensure!(j.get(key).is_some(),
+                                    "{path}: compress report missing `{key}`");
+                }
+                println!("{path}: valid compress report ({} targets, \
+                          {} trajectory points)",
+                         targets.len(),
+                         j.get("trajectory")
+                             .and_then(|t| t.as_arr())
+                             .map(|a| a.len())
+                             .unwrap_or(0));
+            } else {
+                anyhow::bail!("{path}: neither a chrome trace \
+                               (no `traceEvents`) nor a compress report \
+                               (no `\"type\":\"compress_report\"`)");
+            }
+            return Ok(());
+        }
+
         other => {
             anyhow::bail!("unknown subcommand `{other}` \
-                           (info|train|eval|compress|sweep|serve|client)");
+                           (info|train|eval|compress|sweep|serve|client|\
+                            trace)");
         }
     }
+    write_trace_out(&args)?;
     Ok(())
 }

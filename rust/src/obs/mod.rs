@@ -1,0 +1,764 @@
+//! Observability substrate: thread-aware spans, monotonic counters, bounded
+//! histograms, point-in-time gauges, per-kernel timing aggregates, and a
+//! bounded trace-event ring exportable as chrome://tracing JSON — all
+//! dependency-free, built on `util::json` like the rest of the crate.
+//!
+//! # The observe-only contract
+//!
+//! Nothing recorded here may ever feed back into computation.  Hooks read
+//! clocks and copy values *out* of the hot paths; they never influence
+//! scheduling decisions, kernel dispatch, sampling, or any other value the
+//! engine produces.  Tracing on vs. off — at any thread count and any
+//! kernel backend — therefore leaves all logits, generated tokens, and
+//! compression plans **bit-identical** (`rust/tests/trace_equiv.rs` is the
+//! gate).  If you add a hook, keep it on the observe side of that line.
+//!
+//! # Near-zero cost when disabled
+//!
+//! Every gated hook ([`span`], [`emit`], [`counter_add`], [`histo_record`],
+//! [`kernel_record`]) starts with one relaxed atomic load ([`enabled`]) and
+//! returns immediately when tracing is off — the same discipline
+//! `linalg::kernels` uses for backend dispatch.  [Gauges](gauge_set) and
+//! [reports](set_report) are *not* gated: they belong to the always-on
+//! metrics surface (the wire `metrics` snapshot), are written at
+//! per-scheduler-iteration / per-compression-run granularity, and cost one
+//! short mutex hold each — far off any per-token or per-GEMM path.
+//!
+//! # Bounded memory
+//!
+//! All storage is bounded: the event ring holds at most [`RING_CAP`]
+//! events (oldest overwritten first, overwrites counted in `dropped`),
+//! histograms are fixed at [`HISTO_BINS`] power-of-two bins, and counters /
+//! gauges / kernel aggregates are one map entry per distinct name.  A
+//! serving run can trace forever without growing without bound.
+//!
+//! # Enabling
+//!
+//! Three equivalent knobs, mirroring `threads` / `no_simd`:
+//!
+//! * `PALLAS_TRACE=1` environment variable (read once per process);
+//! * `ExperimentConfig::trace` (applied by `coordinator::prepare`);
+//! * `--trace` / `--trace-out FILE` on the CLI (`--trace-out` also writes
+//!   the chrome-trace JSON on exit — open it at `ui.perfetto.dev`).
+//!
+//! # Trace model
+//!
+//! Events are chrome://tracing "complete" (`ph:"X"`) spans.  Engine-side
+//! work (decode steps, prefill chunks, draft/verify, kernel batches) is
+//! recorded on the real thread that ran it under [`PID_ENGINE`];
+//! per-request lifecycle spans (queue → prefill → decode) are emitted on a
+//! synthetic request track ([`PID_REQUESTS`], `tid` = request id) so
+//! Perfetto shows one swim-lane per request.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Maximum events held by the global trace ring; older events are
+/// overwritten (and counted as dropped) once a run exceeds this.
+pub const RING_CAP: usize = 65_536;
+
+/// Fixed number of power-of-two histogram bins: bin `k` counts values `v`
+/// with `v.max(1)` in `[2^k, 2^(k+1))`, so 32 bins cover any u64 duration
+/// in microseconds a run can realistically produce.
+pub const HISTO_BINS: usize = 32;
+
+/// `pid` of the engine track: events carry the real worker thread id.
+pub const PID_ENGINE: u32 = 1;
+
+/// `pid` of the synthetic per-request track: `tid` is the request id, so
+/// each request renders as its own row (queue → prefill → decode spans).
+pub const PID_REQUESTS: u32 = 2;
+
+// ---------------------------------------------------------------------------
+// enablement — the relaxed-atomic gate every hook starts with
+// ---------------------------------------------------------------------------
+
+const OBS_UNSET: u8 = 0;
+const OBS_OFF: u8 = 1;
+const OBS_ON: u8 = 2;
+
+/// Tri-state so the `PALLAS_TRACE` env read happens at most once, exactly
+/// like `linalg::kernels::MODE`; [`set_enabled`] stores directly.
+static STATE: AtomicU8 = AtomicU8::new(OBS_UNSET);
+
+/// `PALLAS_TRACE` semantics: any non-empty value other than `0` enables
+/// tracing.  Factored out so the parse is unit-testable.
+fn parse_trace_env(v: Option<&str>) -> bool {
+    match v {
+        Some(s) => {
+            let t = s.trim();
+            !t.is_empty() && t != "0"
+        }
+        None => false,
+    }
+}
+
+fn env_trace() -> bool {
+    static TRACE: OnceLock<bool> = OnceLock::new();
+    *TRACE
+        .get_or_init(|| parse_trace_env(std::env::var("PALLAS_TRACE").ok().as_deref()))
+}
+
+#[inline]
+fn state() -> u8 {
+    let s = STATE.load(Ordering::Relaxed);
+    if s != OBS_UNSET {
+        return s;
+    }
+    let r = if env_trace() { OBS_ON } else { OBS_OFF };
+    STATE.store(r, Ordering::Relaxed);
+    r
+}
+
+/// Whether tracing hooks record anything right now — one relaxed atomic
+/// load, the entire cost of a disabled hook.
+#[inline]
+pub fn enabled() -> bool {
+    state() == OBS_ON
+}
+
+/// Programmatic override (`ExperimentConfig::trace`, the CLI, tests).
+/// Process-global, like `exec::set_threads` / `kernels::force_backend`.
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { OBS_ON } else { OBS_OFF }, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// clock + thread ids
+// ---------------------------------------------------------------------------
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch (first clock use).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Microseconds-since-epoch of an [`Instant`] stamped elsewhere (request
+/// arrival/admission times); saturates to 0 for stamps before the epoch.
+pub fn us_of(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+/// Small dense per-thread id for the engine track (`std::thread::ThreadId`
+/// is opaque; chrome-trace wants small integers).  Assigned on first use,
+/// stable for the thread's lifetime.
+pub fn tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+// ---------------------------------------------------------------------------
+// the bounded event ring
+// ---------------------------------------------------------------------------
+
+/// One chrome-trace "complete" span (`ph:"X"`).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Span name (the Perfetto slice label).
+    pub name: String,
+    /// Category, e.g. `"engine"`, `"request"`, `"compress"`, `"exec"`.
+    pub cat: &'static str,
+    /// Start, microseconds since the trace epoch.
+    pub ts_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// Track: [`PID_ENGINE`] or [`PID_REQUESTS`].
+    pub pid: u32,
+    /// Thread id ([`tid`]) or, on the request track, the request id.
+    pub tid: u64,
+    /// Extra key/value payload rendered in the Perfetto args pane.
+    pub args: Vec<(&'static str, Json)>,
+}
+
+impl TraceEvent {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(&self.name)),
+            ("cat", Json::str(self.cat)),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(self.ts_us as f64)),
+            ("dur", Json::num(self.dur_us as f64)),
+            ("pid", Json::num(self.pid as f64)),
+            ("tid", Json::num(self.tid as f64)),
+        ];
+        if !self.args.is_empty() {
+            pairs.push((
+                "args",
+                Json::Obj(self.args.iter()
+                    .map(|(k, v)| (k.to_string(), v.clone()))
+                    .collect()),
+            ));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Fixed-capacity circular buffer: once full, each push overwrites the
+/// oldest event and increments `dropped`.
+struct EventRing {
+    cap: usize,
+    buf: Vec<TraceEvent>,
+    /// Next write position once `buf` has reached `cap`.
+    next: usize,
+    dropped: u64,
+}
+
+impl EventRing {
+    fn new(cap: usize) -> Self {
+        EventRing { cap, buf: Vec::new(), next: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+            self.next = (self.next + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events oldest-first (the ring rotation is undone).
+    fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.next..]);
+        out.extend_from_slice(&self.buf[..self.next]);
+        out
+    }
+
+    fn clear(&mut self) {
+        self.buf.clear();
+        self.next = 0;
+        self.dropped = 0;
+    }
+}
+
+fn ring() -> &'static Mutex<EventRing> {
+    static RING: OnceLock<Mutex<EventRing>> = OnceLock::new();
+    RING.get_or_init(|| Mutex::new(EventRing::new(RING_CAP)))
+}
+
+/// Record one pre-built event into the ring.  No-op when tracing is off.
+pub fn emit(ev: TraceEvent) {
+    if !enabled() {
+        return;
+    }
+    ring().lock().expect("obs ring poisoned").push(ev);
+}
+
+/// Record a complete span whose endpoints were stamped elsewhere — how the
+/// scheduler emits per-request queue/prefill/decode lifecycle spans after
+/// the fact, on the request track.  No-op when tracing is off.
+#[allow(clippy::too_many_arguments)]
+pub fn emit_span(name: &str, cat: &'static str, ts_us: u64, dur_us: u64,
+                 pid: u32, tid: u64, args: Vec<(&'static str, Json)>) {
+    if !enabled() {
+        return;
+    }
+    emit(TraceEvent { name: name.to_string(), cat, ts_us, dur_us, pid, tid,
+                      args });
+}
+
+// ---------------------------------------------------------------------------
+// span guard
+// ---------------------------------------------------------------------------
+
+/// RAII span: created by [`span`], records a complete event over its
+/// lifetime on drop.  When tracing is off it is inert (one atomic load at
+/// creation, nothing at drop).
+pub struct Span {
+    name: &'static str,
+    cat: &'static str,
+    start_us: u64,
+    args: Vec<(&'static str, Json)>,
+    active: bool,
+}
+
+/// Open a span covering the enclosing scope on the current thread's engine
+/// track.  `let _sp = obs::span("decode_step", "engine");`
+pub fn span(name: &'static str, cat: &'static str) -> Span {
+    let active = enabled();
+    Span {
+        name,
+        cat,
+        start_us: if active { now_us() } else { 0 },
+        args: Vec::new(),
+        active,
+    }
+}
+
+impl Span {
+    /// Attach an arg (shown in the Perfetto args pane).  Builder-style:
+    /// `obs::span("verify", "engine").arg("slots", Json::num(n as f64))`.
+    pub fn arg(mut self, key: &'static str, value: Json) -> Self {
+        if self.active {
+            self.args.push((key, value));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end = now_us();
+        emit(TraceEvent {
+            name: self.name.to_string(),
+            cat: self.cat,
+            ts_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            pid: PID_ENGINE,
+            tid: tid(),
+            args: std::mem::take(&mut self.args),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// counters + histograms (gated) and gauges (always-on)
+// ---------------------------------------------------------------------------
+
+fn counters() -> &'static Mutex<BTreeMap<&'static str, u64>> {
+    static C: OnceLock<Mutex<BTreeMap<&'static str, u64>>> = OnceLock::new();
+    C.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Add to a monotonic counter.  No-op when tracing is off.
+pub fn counter_add(name: &'static str, n: u64) {
+    if !enabled() {
+        return;
+    }
+    *counters().lock().expect("obs counters poisoned").entry(name)
+        .or_insert(0) += n;
+}
+
+/// Current value of a counter (0 if never written).
+pub fn counter(name: &str) -> u64 {
+    counters().lock().expect("obs counters poisoned").get(name).copied()
+        .unwrap_or(0)
+}
+
+/// Fixed-bin power-of-two histogram: bounded memory whatever the value
+/// distribution.  Tracks count / sum / max alongside the bins.
+#[derive(Clone, Debug, Default)]
+pub struct Histo {
+    /// `bins[k]` counts recorded values `v` with `v.max(1)` in
+    /// `[2^k, 2^(k+1))`.
+    pub bins: [u64; HISTO_BINS],
+    /// Number of recorded values.
+    pub count: u64,
+    /// Sum of recorded values.
+    pub sum: u64,
+    /// Largest recorded value.
+    pub max: u64,
+}
+
+impl Histo {
+    fn record(&mut self, v: u64) {
+        let bin = (63 - v.max(1).leading_zeros() as usize).min(HISTO_BINS - 1);
+        self.bins[bin] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+    }
+
+    fn to_json(&self) -> Json {
+        // trim trailing empty bins: deterministic and compact on the wire
+        let hi = self.bins.iter().rposition(|&b| b > 0).map_or(0, |i| i + 1);
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum as f64)),
+            ("max", Json::num(self.max as f64)),
+            ("bins_pow2",
+             Json::arr(self.bins[..hi].iter().map(|&b| Json::num(b as f64)))),
+        ])
+    }
+}
+
+fn histos() -> &'static Mutex<BTreeMap<&'static str, Histo>> {
+    static H: OnceLock<Mutex<BTreeMap<&'static str, Histo>>> = OnceLock::new();
+    H.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Record a value into a named histogram.  No-op when tracing is off.
+pub fn histo_record(name: &'static str, v: u64) {
+    if !enabled() {
+        return;
+    }
+    histos().lock().expect("obs histos poisoned").entry(name)
+        .or_default().record(v);
+}
+
+/// A copy of a named histogram, if it has ever been written.
+pub fn histo(name: &str) -> Option<Histo> {
+    histos().lock().expect("obs histos poisoned").get(name).cloned()
+}
+
+fn gauges() -> &'static Mutex<BTreeMap<String, f64>> {
+    static G: OnceLock<Mutex<BTreeMap<String, f64>>> = OnceLock::new();
+    G.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Set a point-in-time gauge (active slots, KV occupancy, pool sizes).
+/// Always on — gauges feed the wire `metrics` snapshot, which must work
+/// without tracing; writers publish at scheduler-iteration granularity.
+pub fn gauge_set(name: &str, v: f64) {
+    let mut g = gauges().lock().expect("obs gauges poisoned");
+    match g.get_mut(name) {
+        Some(slot) => *slot = v,
+        None => {
+            g.insert(name.to_string(), v);
+        }
+    }
+}
+
+/// All gauges as one JSON object (the `gauges` block of the `metrics`
+/// wire snapshot).
+pub fn gauges_json() -> Json {
+    Json::Obj(gauges().lock().expect("obs gauges poisoned").iter()
+        .map(|(k, &v)| (k.clone(), Json::num(v)))
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// kernel timing aggregates
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, Default)]
+struct KernelStat {
+    calls: u64,
+    ns: u64,
+    macs: u64,
+}
+
+type KernelKey = (&'static str, &'static str);
+
+fn kernel_stats() -> &'static Mutex<BTreeMap<KernelKey, KernelStat>> {
+    static K: OnceLock<Mutex<BTreeMap<KernelKey, KernelStat>>> =
+        OnceLock::new();
+    K.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Record one GEMM-shaped kernel call: `(m, k, n)` gives `m·k·n` MACs, so
+/// per-(kernel, backend) GFLOP/s falls out as `2·macs / ns`.  Aggregated —
+/// not one ring event per call — because decode issues thousands of small
+/// GEMMs per second and per-call events would only churn the ring.  No-op
+/// when tracing is off.
+pub fn kernel_record(kernel: &'static str, backend: &'static str, m: usize,
+                     k: usize, n: usize, ns: u64) {
+    if !enabled() {
+        return;
+    }
+    let st_macs = (m as u64) * (k as u64) * (n as u64);
+    let mut map = kernel_stats().lock().expect("obs kernels poisoned");
+    let st = map.entry((kernel, backend)).or_default();
+    st.calls += 1;
+    st.ns += ns;
+    st.macs += st_macs;
+}
+
+/// Kernel aggregates as JSON: `{"matmul/avx2": {calls, ns, macs, gflops}}`.
+pub fn kernel_stats_json() -> Json {
+    Json::Obj(kernel_stats().lock().expect("obs kernels poisoned").iter()
+        .map(|((kernel, backend), st)| {
+            let gflops = if st.ns > 0 {
+                2.0 * st.macs as f64 / st.ns as f64
+            } else {
+                0.0
+            };
+            (format!("{kernel}/{backend}"),
+             Json::obj(vec![
+                 ("calls", Json::num(st.calls as f64)),
+                 ("ns", Json::num(st.ns as f64)),
+                 ("macs", Json::num(st.macs as f64)),
+                 ("gflops", Json::num(gflops)),
+             ]))
+        })
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// named reports (compress_report.json et al.)
+// ---------------------------------------------------------------------------
+
+fn reports() -> &'static Mutex<BTreeMap<String, Json>> {
+    static R: OnceLock<Mutex<BTreeMap<String, Json>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Stash a named report document (e.g. the compression pipeline's
+/// per-matrix selection record) for a CLI flag to export later.  Always on:
+/// report assembly happens once per offline run, never on a serving path.
+pub fn set_report(name: &str, doc: Json) {
+    reports().lock().expect("obs reports poisoned")
+        .insert(name.to_string(), doc);
+}
+
+/// Fetch a stashed report by name.
+pub fn report(name: &str) -> Option<Json> {
+    reports().lock().expect("obs reports poisoned").get(name).cloned()
+}
+
+// ---------------------------------------------------------------------------
+// export
+// ---------------------------------------------------------------------------
+
+fn process_name_meta(pid: u32, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(0.0)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+/// The whole ring as a chrome://tracing Trace Event Format document —
+/// `{"traceEvents": [...]}` — loadable at `ui.perfetto.dev` or
+/// `chrome://tracing`.  Includes process-name metadata so the engine and
+/// request tracks are labeled.
+pub fn chrome_trace_json() -> Json {
+    let (events, dropped) = {
+        let r = ring().lock().expect("obs ring poisoned");
+        (r.snapshot(), r.dropped)
+    };
+    let mut arr = vec![
+        process_name_meta(PID_ENGINE, "engine"),
+        process_name_meta(PID_REQUESTS, "requests"),
+    ];
+    arr.extend(events.iter().map(TraceEvent::to_json));
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(arr)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("otherData", Json::obj(vec![
+            ("dropped_events", Json::num(dropped as f64)),
+        ])),
+    ])
+}
+
+/// Write [`chrome_trace_json`] to a file (the `--trace-out` flag).
+pub fn write_chrome_trace(path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace_json().to_string_pretty() + "\n")
+}
+
+/// The wire `trace` snapshot: the most recent `max_events` ring events plus
+/// counters, histograms, and kernel aggregates — the protocol-side
+/// companion of the `metrics` snapshot.
+pub fn snapshot_json(max_events: usize) -> Json {
+    let (events, dropped, total) = {
+        let r = ring().lock().expect("obs ring poisoned");
+        let snap = r.snapshot();
+        let total = snap.len();
+        let tail = snap.len().saturating_sub(max_events);
+        (snap[tail..].to_vec(), r.dropped, total)
+    };
+    Json::obj(vec![
+        ("type", Json::str("trace")),
+        ("enabled", Json::Bool(enabled())),
+        ("events_total", Json::num(total as f64)),
+        ("events_dropped", Json::num(dropped as f64)),
+        ("events",
+         Json::arr(events.iter().map(TraceEvent::to_json))),
+        ("counters",
+         Json::Obj(counters().lock().expect("obs counters poisoned").iter()
+             .map(|(k, &v)| (k.to_string(), Json::num(v as f64)))
+             .collect())),
+        ("histograms",
+         Json::Obj(histos().lock().expect("obs histos poisoned").iter()
+             .map(|(k, h)| (k.to_string(), h.to_json()))
+             .collect())),
+        ("kernels", kernel_stats_json()),
+        ("gauges", gauges_json()),
+    ])
+}
+
+/// Clear the ring, counters, histograms, kernel aggregates, and gauges —
+/// for bench harnesses attributing one run at a time, and for tests.
+/// Stashed reports survive (they describe a completed offline run).
+pub fn reset() {
+    ring().lock().expect("obs ring poisoned").clear();
+    counters().lock().expect("obs counters poisoned").clear();
+    histos().lock().expect("obs histos poisoned").clear();
+    kernel_stats().lock().expect("obs kernels poisoned").clear();
+    gauges().lock().expect("obs gauges poisoned").clear();
+}
+
+// ---------------------------------------------------------------------------
+// tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes the unit tests that flip the process-global enable flag.
+    /// (Flipping it mid-run is harmless to every other test by the
+    /// observe-only contract, but these tests also assert on shared
+    /// storage, so they take turns.)
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static L: OnceLock<Mutex<()>> = OnceLock::new();
+        L.get_or_init(|| Mutex::new(()))
+            .lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn trace_env_parse() {
+        assert!(!parse_trace_env(None));
+        assert!(!parse_trace_env(Some("")));
+        assert!(!parse_trace_env(Some(" ")));
+        assert!(!parse_trace_env(Some("0")));
+        assert!(parse_trace_env(Some("1")));
+        assert!(parse_trace_env(Some("chrome")));
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        // a local ring, not the global one: exact assertions without
+        // cross-test interference
+        let mut r = EventRing::new(4);
+        let ev = |i: u64| TraceEvent {
+            name: format!("e{i}"),
+            cat: "test",
+            ts_us: i,
+            dur_us: 1,
+            pid: PID_ENGINE,
+            tid: 1,
+            args: Vec::new(),
+        };
+        for i in 0..10 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.buf.len(), 4);
+        assert_eq!(r.dropped, 6);
+        let snap = r.snapshot();
+        // oldest-first, holding exactly the newest four
+        let ts: Vec<u64> = snap.iter().map(|e| e.ts_us).collect();
+        assert_eq!(ts, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn histogram_bins_are_bounded_and_correct() {
+        let mut h = Histo::default();
+        h.record(0); // clamps into bin 0
+        h.record(1);
+        h.record(2);
+        h.record(3);
+        h.record(1024);
+        h.record(u64::MAX); // clamps into the last bin
+        assert_eq!(h.count, 6);
+        assert_eq!(h.max, u64::MAX);
+        assert_eq!(h.bins[0], 2); // 0 (clamped) and 1
+        assert_eq!(h.bins[1], 2); // 2 and 3
+        assert_eq!(h.bins[10], 1); // 1024
+        assert_eq!(h.bins[HISTO_BINS - 1], 1);
+        let j = h.to_json();
+        assert_eq!(j.usize_or("count", 0), 6);
+        // serialized bins reparse through the repo's own JSON layer
+        let text = j.to_string();
+        let back = crate::util::json::parse(&text).expect("histo json");
+        assert_eq!(back.usize_or("count", 0), 6);
+    }
+
+    #[test]
+    fn disabled_hooks_record_nothing() {
+        let _g = test_lock();
+        set_enabled(false);
+        counter_add("obs.test.disabled", 5);
+        histo_record("obs.test.disabled_h", 5);
+        emit_span("nothing", "test", 0, 1, PID_ENGINE, 1, Vec::new());
+        {
+            let _sp = span("nothing_span", "test");
+        }
+        assert_eq!(counter("obs.test.disabled"), 0);
+        assert!(histo("obs.test.disabled_h").is_none());
+    }
+
+    #[test]
+    fn enabled_hooks_record_and_export_well_formed_json() {
+        let _g = test_lock();
+        set_enabled(true);
+        counter_add("obs.test.enabled", 2);
+        counter_add("obs.test.enabled", 3);
+        histo_record("obs.test.enabled_h", 100);
+        kernel_record("testmm", "portable", 4, 8, 16, 1000);
+        {
+            let _sp = span("unit_span", "test").arg("x", Json::num(7.0));
+        }
+        emit_span("req_span", "request", 10, 20, PID_REQUESTS, 42,
+                  vec![("id", Json::num(42.0))]);
+        set_enabled(false);
+
+        assert_eq!(counter("obs.test.enabled"), 5);
+        assert_eq!(histo("obs.test.enabled_h").expect("histo").count, 1);
+
+        // chrome export: reparses via util::json and carries the required
+        // Trace Event Format keys on every event
+        let doc = chrome_trace_json();
+        let text = doc.to_string_pretty();
+        let back = crate::util::json::parse(&text).expect("chrome json");
+        let events = back.get("traceEvents").and_then(Json::as_arr)
+            .expect("traceEvents array");
+        assert!(!events.is_empty());
+        for ev in events {
+            assert!(ev.get("name").is_some(), "event missing name: {ev:?}");
+            assert!(ev.get("ph").is_some(), "event missing ph: {ev:?}");
+            assert!(ev.get("pid").is_some(), "event missing pid: {ev:?}");
+            assert!(ev.get("tid").is_some(), "event missing tid: {ev:?}");
+        }
+        let names: Vec<String> = events.iter()
+            .map(|e| e.str_or("name", "")).collect();
+        assert!(names.iter().any(|n| n == "unit_span"));
+        assert!(names.iter().any(|n| n == "req_span"));
+
+        // the wire snapshot caps its event list but reports totals
+        let snap = snapshot_json(1);
+        assert_eq!(snap.get("events").and_then(Json::as_arr).expect("events")
+                       .len(), 1);
+        assert!(snap.usize_or("events_total", 0) >= 2);
+        let kj = snap.get("kernels").expect("kernels");
+        assert!(kj.get("testmm/portable").is_some());
+    }
+
+    #[test]
+    fn gauges_are_always_on() {
+        let _g = test_lock();
+        set_enabled(false);
+        gauge_set("obs.test.gauge", 3.5);
+        let j = gauges_json();
+        assert_eq!(j.f64_or("obs.test.gauge", 0.0), 3.5);
+        gauge_set("obs.test.gauge", 4.5);
+        assert_eq!(gauges_json().f64_or("obs.test.gauge", 0.0), 4.5);
+    }
+
+    #[test]
+    fn reports_roundtrip() {
+        let _g = test_lock();
+        set_report("obs.test.report",
+                   Json::obj(vec![("k", Json::num(1.0))]));
+        assert_eq!(report("obs.test.report").expect("report")
+                       .f64_or("k", 0.0), 1.0);
+        assert!(report("obs.test.missing").is_none());
+    }
+
+    #[test]
+    fn tid_is_stable_per_thread() {
+        let a = tid();
+        let b = tid();
+        assert_eq!(a, b);
+        let other = std::thread::spawn(tid).join().expect("tid thread");
+        assert_ne!(a, other);
+    }
+}

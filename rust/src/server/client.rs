@@ -48,6 +48,11 @@ pub struct GenerationResult {
     pub prompt_len: usize,
     /// admission-queue wait, ms
     pub queue_ms: f64,
+    /// slot admission → prompt fully ingested, ms (0.0 when the server
+    /// predates the phase breakdown — the parse is lenient)
+    pub prefill_ms: f64,
+    /// prompt ingested → completion, ms (0.0 from older servers)
+    pub decode_ms: f64,
     /// time to first token, ms
     pub ttft_ms: f64,
     /// end-to-end latency, ms
@@ -118,8 +123,8 @@ impl Client {
                     }
                     streamed.push(token);
                 }
-                Event::Done { id, tokens, prompt_len, queue_ms, ttft_ms,
-                              latency_ms, truncated } => {
+                Event::Done { id, tokens, prompt_len, queue_ms, prefill_ms,
+                              decode_ms, ttft_ms, latency_ms, truncated } => {
                     if id != g.id {
                         return Err(bad_data(format!(
                             "done for unexpected id {id} (want {})", g.id)));
@@ -135,6 +140,8 @@ impl Client {
                         streamed,
                         prompt_len,
                         queue_ms,
+                        prefill_ms,
+                        decode_ms,
                         ttft_ms,
                         latency_ms,
                         truncated,
@@ -149,6 +156,9 @@ impl Client {
                 }
                 Event::Metrics(_) => {
                     return Err(bad_data("unexpected metrics event".into()));
+                }
+                Event::Trace(_) => {
+                    return Err(bad_data("unexpected trace event".into()));
                 }
                 Event::ShuttingDown => {
                     return Ok(GenerateOutcome::Rejected {
@@ -172,6 +182,25 @@ impl Client {
                         "unexpected event awaiting metrics: {other:?}")));
                 }
                 None => return Err(bad_data("eof awaiting metrics".into())),
+            }
+        }
+    }
+
+    /// Request an observability snapshot (recent trace events + counters /
+    /// histograms / kernel stats) and block for the reply.  Only safe with
+    /// no generation in flight on this connection.  Always answered; when
+    /// the server runs without tracing the event ring is empty and the
+    /// reply says `"enabled": false`.
+    pub fn trace(&mut self) -> io::Result<crate::util::json::Json> {
+        self.send(&Request::Trace)?;
+        loop {
+            match self.next_event()? {
+                Some(Event::Trace(j)) => return Ok(j),
+                Some(other) => {
+                    return Err(bad_data(format!(
+                        "unexpected event awaiting trace: {other:?}")));
+                }
+                None => return Err(bad_data("eof awaiting trace".into())),
             }
         }
     }

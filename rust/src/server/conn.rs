@@ -307,6 +307,11 @@ fn reader_loop(shared: &Shared, conn: &Arc<ConnState>, stream: TcpStream,
                 conn.send(&Event::Metrics(
                     shared.metrics.snapshot(shared.queue.len())));
             }
+            Ok(Request::Trace) => {
+                // recent-events tail only: the full ring can hold 64k
+                // events, which is more than a wire reply should carry
+                conn.send(&Event::Trace(crate::obs::snapshot_json(2048)));
+            }
             Ok(Request::Shutdown) => {
                 conn.send(&Event::ShuttingDown);
                 initiate_shutdown(shared, local);
@@ -482,6 +487,8 @@ pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
                     shared.metrics.record_ms("e2e_ms", c.latency_ms);
                     shared.metrics.record_ms("ttft_ms", c.ttft_ms);
                     shared.metrics.record_ms("queue_ms", c.queue_ms);
+                    shared.metrics.record_ms("prefill_ms", c.prefill_ms);
+                    shared.metrics.record_ms("decode_ms", c.decode_ms);
                     let route = shared
                         .routes
                         .lock()
@@ -493,6 +500,8 @@ pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
                             tokens: c.tokens,
                             prompt_len: c.prompt_len,
                             queue_ms: c.queue_ms,
+                            prefill_ms: c.prefill_ms,
+                            decode_ms: c.decode_ms,
                             ttft_ms: c.ttft_ms,
                             latency_ms: c.latency_ms,
                             truncated: c.truncated,

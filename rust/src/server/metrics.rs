@@ -114,10 +114,24 @@ impl Metrics {
                 })
                 .collect())
         };
+        // scheduler occupancy gauges (active slots, KV occupancy, arena /
+        // draft pool sizes) live in the always-on obs layer — the engine
+        // thread writes them every iteration whether or not tracing is
+        // enabled.  The admission-queue depth is sampled by the caller, so
+        // it joins the same object here.
+        let gauges = {
+            let mut g = match crate::obs::gauges_json() {
+                Json::Obj(m) => m,
+                _ => BTreeMap::new(),
+            };
+            g.insert("queue_depth".to_string(), Json::num(queue_depth as f64));
+            Json::Obj(g)
+        };
         Json::obj(vec![
             ("type", Json::str("metrics")),
             ("uptime_secs", Json::num(uptime)),
             ("queue_depth", Json::num(queue_depth as f64)),
+            ("gauges", gauges),
             // whole-uptime average (an activity gauge — near zero on a
             // mostly-idle server); deliberately NOT named like the
             // steady-state `decode tok/s` the tables report, which comes
@@ -190,6 +204,9 @@ mod tests {
         let j = m.snapshot(3);
         assert_eq!(j.str_or("type", ""), "metrics");
         assert_eq!(j.usize_or("queue_depth", 99), 3);
+        // the gauges object always rides along and echoes the queue depth
+        let g = j.get("gauges").expect("gauges object");
+        assert_eq!(g.usize_or("queue_depth", 99), 3);
         assert!(j.f64_or("uptime_secs", 0.0) > 0.0);
         assert!(j.f64_or("uptime_tok_per_sec", 0.0) > 0.0);
         // no speculation ran: rate reports 0, not NaN

@@ -33,6 +33,7 @@
 //! |------------|---------------------------------------------------------------------|
 //! | `generate` | `id` (echoed on every reply), `prompt` (token array), optional `max_new_tokens` (0/absent = server default), `temperature`, `seed` |
 //! | `metrics`  | — (replies with one `metrics` snapshot)                             |
+//! | `trace`    | — (replies with one `trace` observability snapshot)                 |
 //! | `shutdown` | — (ack `shutting_down`, then drain + close)                         |
 //!
 //! Server messages:
@@ -40,9 +41,10 @@
 //! | type            | fields                                                         |
 //! |-----------------|----------------------------------------------------------------|
 //! | `token`         | `id`, `index` (0-based, strictly sequential), `token` — one per sampled token, streamed as produced |
-//! | `done`          | `id`, `tokens` (the full generation), `prompt_len`, latency breakdown `queue_ms` / `ttft_ms` / `latency_ms`, `truncated` (true when generation stopped early at the KV-capacity wall; absent = false for older peers) |
+//! | `done`          | `id`, `tokens` (the full generation), `prompt_len`, latency breakdown `queue_ms` / `prefill_ms` / `decode_ms` / `ttft_ms` / `latency_ms`, `truncated` (true when generation stopped early at the KV-capacity wall).  `truncated`, `prefill_ms` and `decode_ms` are absent from older peers; clients parse them leniently (false / 0.0) |
 //! | `error`         | `code` (`overloaded` \| `bad_request` \| `shutting_down`), `message`, `id` when attributable to one request |
-//! | `metrics`       | `uptime_secs`, `queue_depth`, `uptime_tok_per_sec` (whole-uptime average), `draft_acceptance_rate` (accepted/proposed drafter tokens; 0 without speculation), `counters{..}`, `latency_ms{series → {n,mean,p50,p95,p99,max}}` |
+//! | `metrics`       | `uptime_secs`, `queue_depth`, `uptime_tok_per_sec` (whole-uptime average), `draft_acceptance_rate` (accepted/proposed drafter tokens; 0 without speculation), `gauges{..}` (scheduler occupancy: active slots, KV tokens/capacity, arena/draft pool sizes, queue depth), `counters{..}`, `latency_ms{series → {n,mean,p50,p95,p99,max}}` |
+//! | `trace`         | observability snapshot from `crate::obs`: `enabled`, `events` (recent trace-event ring, capped), `events_total` / `events_dropped`, `counters{..}`, `histograms{..}`, `kernels{..}`, `gauges{..}`.  Always answered; with tracing off the ring is empty |
 //! | `shutting_down` | — (the connection closes after in-flight work completes)        |
 //!
 //! Requests from one connection may interleave; every reply carries the

@@ -64,6 +64,11 @@ pub enum Request {
     Generate(GenerateReq),
     /// ask for a metrics snapshot ([`Event::Metrics`] reply)
     Metrics,
+    /// ask for an observability snapshot: the recent trace-event ring plus
+    /// counters/histograms/kernel stats ([`Event::Trace`] reply).  Always
+    /// answered; with tracing disabled the event ring is simply empty
+    /// (`enabled: false` in the reply says why)
+    Trace,
     /// stop accepting work, drain in-flight requests, exit
     Shutdown,
 }
@@ -73,6 +78,8 @@ pub fn request_line(r: &Request) -> String {
     match r {
         Request::Generate(g) => g.to_json().to_string(),
         Request::Metrics => Json::obj(vec![("type", Json::str("metrics"))])
+            .to_string(),
+        Request::Trace => Json::obj(vec![("type", Json::str("trace"))])
             .to_string(),
         Request::Shutdown => Json::obj(vec![("type", Json::str("shutdown"))])
             .to_string(),
@@ -113,6 +120,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             }))
         }
         Some("metrics") => Ok(Request::Metrics),
+        Some("trace") => Ok(Request::Trace),
         Some("shutdown") => Ok(Request::Shutdown),
         Some(other) => Err(format!("unknown request type `{other}`")),
         None => Err("missing `type`".to_string()),
@@ -141,6 +149,11 @@ pub enum Event {
         prompt_len: usize,
         /// admission-queue wait, ms
         queue_ms: f64,
+        /// slot admission → prompt fully ingested, ms (0.0 when the peer
+        /// is an older server that does not emit the field)
+        prefill_ms: f64,
+        /// prompt ingested → completion, ms (0.0 from older peers)
+        decode_ms: f64,
         /// time to first token, ms
         ttft_ms: f64,
         /// end-to-end latency, ms
@@ -161,6 +174,9 @@ pub enum Event {
     },
     /// metrics snapshot (the whole registry object)
     Metrics(Json),
+    /// observability snapshot: the recent trace-event ring + counters /
+    /// histograms / kernel stats, shaped by `crate::obs::snapshot_json`
+    Trace(Json),
     /// the server acknowledged shutdown / is closing this connection
     ShuttingDown,
 }
@@ -175,8 +191,8 @@ pub fn event_line(e: &Event) -> String {
             ("token", Json::num(*token as f64)),
         ])
         .to_string(),
-        Event::Done { id, tokens, prompt_len, queue_ms, ttft_ms, latency_ms,
-                      truncated } => {
+        Event::Done { id, tokens, prompt_len, queue_ms, prefill_ms,
+                      decode_ms, ttft_ms, latency_ms, truncated } => {
             Json::obj(vec![
                 ("type", Json::str("done")),
                 ("id", Json::num(*id as f64)),
@@ -184,6 +200,8 @@ pub fn event_line(e: &Event) -> String {
                                          .map(|&t| Json::num(t as f64)))),
                 ("prompt_len", Json::num(*prompt_len as f64)),
                 ("queue_ms", Json::num(*queue_ms)),
+                ("prefill_ms", Json::num(*prefill_ms)),
+                ("decode_ms", Json::num(*decode_ms)),
                 ("ttft_ms", Json::num(*ttft_ms)),
                 ("latency_ms", Json::num(*latency_ms)),
                 ("truncated", Json::Bool(*truncated)),
@@ -202,6 +220,7 @@ pub fn event_line(e: &Event) -> String {
             Json::obj(pairs).to_string()
         }
         Event::Metrics(snapshot) => snapshot.to_string(),
+        Event::Trace(snapshot) => snapshot.to_string(),
         Event::ShuttingDown => Json::obj(vec![
             ("type", Json::str("shutting_down")),
         ])
@@ -235,6 +254,9 @@ pub fn parse_event(line: &str) -> Result<Event, String> {
                 tokens,
                 prompt_len: j.usize_or("prompt_len", 0),
                 queue_ms: j.f64_or("queue_ms", 0.0),
+                // phase breakdown: absent from older servers → 0.0
+                prefill_ms: j.f64_or("prefill_ms", 0.0),
+                decode_ms: j.f64_or("decode_ms", 0.0),
                 ttft_ms: j.f64_or("ttft_ms", 0.0),
                 latency_ms: j.f64_or("latency_ms", 0.0),
                 // older peers never emit the field: absent means complete
@@ -247,6 +269,7 @@ pub fn parse_event(line: &str) -> Result<Event, String> {
             message: j.str_or("message", ""),
         }),
         Some("metrics") => Ok(Event::Metrics(j)),
+        Some("trace") => Ok(Event::Trace(j)),
         Some("shutting_down") => Ok(Event::ShuttingDown),
         Some(other) => Err(format!("unknown event type `{other}`")),
         None => Err("missing `type`".to_string()),
@@ -299,7 +322,7 @@ mod tests {
 
     #[test]
     fn control_requests_roundtrip() {
-        for r in [Request::Metrics, Request::Shutdown] {
+        for r in [Request::Metrics, Request::Trace, Request::Shutdown] {
             let line = request_line(&r);
             assert_eq!(parse_request(&line).unwrap(), r);
         }
@@ -310,10 +333,12 @@ mod tests {
         let events = vec![
             Event::Token { id: 3, index: 12, token: 199 },
             Event::Done { id: 3, tokens: vec![4, 5, 6], prompt_len: 8,
-                          queue_ms: 1.5, ttft_ms: 10.25, latency_ms: 30.5,
+                          queue_ms: 1.5, prefill_ms: 4.0, decode_ms: 25.0,
+                          ttft_ms: 10.25, latency_ms: 30.5,
                           truncated: false },
             Event::Done { id: 4, tokens: vec![7], prompt_len: 2,
-                          queue_ms: 0.0, ttft_ms: 1.0, latency_ms: 2.0,
+                          queue_ms: 0.0, prefill_ms: 0.5, decode_ms: 1.5,
+                          ttft_ms: 1.0, latency_ms: 2.0,
                           truncated: true },
             Event::Error { id: Some(9), code: ERR_OVERLOADED.into(),
                            message: "queue full".into() },
@@ -330,12 +355,34 @@ mod tests {
 
     #[test]
     fn done_without_truncated_field_parses_as_complete() {
-        // lines from an older server omit the field entirely
+        // lines from an older server omit the newer fields entirely:
+        // `truncated` parses as false, the phase breakdown as 0.0
         let line = "{\"type\":\"done\",\"id\":1,\"tokens\":[2],\
                     \"prompt_len\":1,\"queue_ms\":0,\"ttft_ms\":0,\
                     \"latency_ms\":0}";
         match parse_event(line).unwrap() {
-            Event::Done { truncated, .. } => assert!(!truncated),
+            Event::Done { truncated, prefill_ms, decode_ms, .. } => {
+                assert!(!truncated);
+                assert_eq!(prefill_ms, 0.0);
+                assert_eq!(decode_ms, 0.0);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_event_carries_snapshot() {
+        let snap = Json::obj(vec![
+            ("type", Json::str("trace")),
+            ("enabled", Json::Bool(false)),
+            ("events", Json::Arr(Vec::new())),
+        ]);
+        let line = event_line(&Event::Trace(snap));
+        match parse_event(&line).unwrap() {
+            Event::Trace(j) => {
+                assert_eq!(j.str_or("type", ""), "trace");
+                assert!(j.get("events").is_some());
+            }
             other => panic!("wrong variant: {other:?}"),
         }
     }

@@ -1,0 +1,249 @@
+//! Observe-only gate for the tracing layer (`zs_svd::obs`).
+//!
+//! The observability subsystem may record anything it likes, but it must
+//! never *change* anything: compression plans, decode tokens, and
+//! speculative generations have to be BIT-IDENTICAL with tracing on or
+//! off, at every thread count.  This binary proves that, and also checks
+//! the exports are well-formed:
+//!
+//! * ZS-SVD compression produces the same plan (ranks, dense-keep
+//!   decisions, replacement matrices bit-for-bit) traced and untraced, and
+//!   the traced run additionally leaves phase spans in the ring while the
+//!   always-on compress report is produced either way;
+//! * continuous-batching decode and speculative self-decode generate the
+//!   same tokens traced and untraced at threads {1, 4}, while the traced
+//!   runs accumulate the per-phase counters the bench harnesses consume;
+//! * `CompletedRequest.prefill_ms` / `decode_ms` partition the end-to-end
+//!   latency exactly (queue + prefill + decode == e2e), tracing or not;
+//! * the chrome-trace export parses with the repo's own `util::json`,
+//!   every span event carries the Trace Event Format keys, and the wire
+//!   `snapshot_json` respects its `max_events` cap;
+//! * with tracing off the ring stays empty and gated counters stay zero.
+//!
+//! Everything lives in ONE test function: `obs::set_enabled`,
+//! `obs::reset`, and `exec::set_threads` are process-global (same pattern
+//! as the sweeps in `decode_parity.rs`).  Kernel backends: ci.sh re-runs
+//! this gate under `PALLAS_NO_SIMD=1`, so the observe-only contract is
+//! proven on both the SIMD and the portable backend.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use zs_svd::compress::{calibrate, compress_zs, CompressionPlan, ZsOpts};
+use zs_svd::data;
+use zs_svd::decode::{run_decode, run_decode_speculative, synth_requests,
+                     DecodeConfig};
+use zs_svd::exec;
+use zs_svd::model::init::init_params;
+use zs_svd::obs;
+use zs_svd::runtime::session::Session;
+use zs_svd::runtime::Runtime;
+use zs_svd::serve::Engine;
+use zs_svd::tensor::Mat;
+use zs_svd::util::json;
+use zs_svd::util::rng::Rng;
+
+/// Uniform-rank random factors matching the artifact ranks of `tag` — the
+/// same helper `decode_parity.rs` uses for its drafter engine.
+fn synthetic_factors(sess: &Session, tag: &str, rng: &mut Rng)
+                     -> BTreeMap<String, (Mat, Mat)> {
+    let lm = sess.cfg.lowrank.get(tag).expect("artifact tag");
+    sess.cfg
+        .targets
+        .iter()
+        .map(|t| {
+            let (m, n) = t.shape;
+            let k = lm.ranks[&t.name];
+            (t.name.clone(),
+             (Mat::randn(rng, m, k, 0.05), Mat::randn(rng, k, n, 0.05)))
+        })
+        .collect()
+}
+
+/// Everything decision-relevant in a plan, with replacement weights as raw
+/// f32 bit patterns so "identical" means identical, not approximately so.
+fn plan_key(p: &CompressionPlan)
+            -> Vec<(String, usize, bool, Vec<u32>)> {
+    p.targets
+        .iter()
+        .map(|t| (t.name.clone(), t.rank, t.dense,
+                  t.replacement.data.iter().map(|v| v.to_bits()).collect()))
+        .collect()
+}
+
+#[test]
+fn tracing_is_observe_only_and_exports_are_wellformed() {
+    let rt = Runtime::load_default().unwrap();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(0x7ACE);
+    let params = init_params(&sess.cfg, &mut rng);
+
+    // ---- compression: traced == untraced, bit for bit -------------------
+    let world = data::default_world();
+    let corpus = data::training_corpus("llama", &world);
+    let calib = calibrate(&sess, &params, &corpus, 2, 0xCA11B).unwrap();
+
+    obs::set_enabled(false);
+    obs::reset();
+    let plain = compress_zs(&sess, &params, &calib, &ZsOpts::new(0.4))
+        .unwrap();
+    // the compress report is always-on: it exists even with tracing off...
+    let rep_off = obs::report("compress").expect("report without tracing");
+    // ...but the gated phase spans do not
+    assert_eq!(obs::snapshot_json(8).usize_or("events_total", 99), 0,
+               "tracing off must leave the event ring empty");
+
+    obs::set_enabled(true);
+    obs::reset();
+    let traced = compress_zs(&sess, &params, &calib, &ZsOpts::new(0.4))
+        .unwrap();
+    assert_eq!(plan_key(&plain), plan_key(&traced),
+               "tracing changed the compression plan");
+
+    // the traced run leaves the compress.* phase spans in the ring
+    let snap = obs::snapshot_json(256);
+    let names: Vec<String> = snap.get("events").and_then(|e| e.as_arr())
+        .expect("events array")
+        .iter()
+        .map(|e| e.str_or("name", ""))
+        .collect();
+    for want in ["compress.decompose", "compress.select", "compress.build"] {
+        assert!(names.iter().any(|n| n == want),
+                "missing phase span `{want}` in {names:?}");
+    }
+
+    // the report mirrors the plan: one record per target, with the
+    // per-matrix fields the paper's selection story is told in
+    let rep = obs::report("compress").expect("report with tracing");
+    assert_eq!(rep.str_or("type", ""), "compress_report");
+    let targets = rep.get("targets").and_then(|t| t.as_arr())
+        .expect("targets array");
+    assert_eq!(targets.len(), traced.targets.len());
+    for t in targets {
+        for key in ["name", "m", "n", "rank", "removed", "dl_removed",
+                    "keep_dense"] {
+            assert!(t.get(key).is_some(), "target record missing `{key}`");
+        }
+    }
+    let traj = rep.get("trajectory").and_then(|t| t.as_arr())
+        .expect("trajectory array");
+    assert!(!traj.is_empty(), "a 0.4-ratio run removes components");
+    assert!(traj.len() <= zs_svd::compress::selection::TRAJECTORY_CAP);
+    // both runs stashed the same selection outcome
+    assert_eq!(rep_off.get("selection").map(|s| s.to_string()),
+               rep.get("selection").map(|s| s.to_string()));
+
+    // ---- decode + speculation: same tokens, threads {1, 4} --------------
+    let drafter = Engine::Lowrank {
+        tag: "60".into(),
+        factors: synthetic_factors(&sess, "60", &mut rng),
+    };
+    let reqs = synth_requests(&sess.cfg, 6, 10, 5, 0xF00D);
+    let cfg_for = |k: usize| DecodeConfig {
+        max_slots: 3, max_new_tokens: 5, temperature: 0.0, seed: 11,
+        arrival_steps: 0.0, prefill_chunk: 4, speculate_k: k,
+    };
+    let tokens_of = |done: &[zs_svd::decode::CompletedRequest]|
+                     -> Vec<Vec<i32>> {
+        done.iter().map(|c| c.tokens.clone()).collect()
+    };
+
+    for threads in [1usize, 4] {
+        exec::set_threads(threads);
+
+        obs::set_enabled(false);
+        obs::reset();
+        let (_, off) = run_decode(&sess, &params, &Engine::Dense, &reqs,
+                                  &cfg_for(0)).unwrap();
+        assert_eq!(obs::counter("phase.decode_ns"), 0,
+                   "gated counters must not tick with tracing off");
+
+        obs::set_enabled(true);
+        obs::reset();
+        let (_, on) = run_decode(&sess, &params, &Engine::Dense, &reqs,
+                                 &cfg_for(0)).unwrap();
+        assert_eq!(tokens_of(&off), tokens_of(&on),
+                   "tracing changed decode tokens @ {threads} threads");
+        // the per-phase counters the bench breakdowns consume ticked
+        assert!(obs::counter("phase.prefill_ns") > 0);
+        assert!(obs::counter("phase.decode_ns") > 0);
+        assert_eq!(obs::counter("sched.requests_done"), reqs.len() as u64);
+
+        // the latency breakdown partitions e2e exactly, traced or not
+        for done in [&off, &on] {
+            for c in done.iter() {
+                assert!(c.prefill_ms >= 0.0 && c.decode_ms >= 0.0);
+                let sum = c.queue_ms + c.prefill_ms + c.decode_ms;
+                assert!((sum - c.latency_ms).abs() < 1e-6,
+                        "queue {} + prefill {} + decode {} != e2e {}",
+                        c.queue_ms, c.prefill_ms, c.decode_ms, c.latency_ms);
+            }
+        }
+
+        // speculative self-decode: drafter + verify under tracing still
+        // bit-matches both its own untraced run and plain greedy
+        obs::set_enabled(false);
+        obs::reset();
+        let (_, s_off) = run_decode_speculative(
+            &sess, &params, &Engine::Dense, &drafter, &reqs, &cfg_for(2))
+            .unwrap();
+        obs::set_enabled(true);
+        obs::reset();
+        let (_, s_on) = run_decode_speculative(
+            &sess, &params, &Engine::Dense, &drafter, &reqs, &cfg_for(2))
+            .unwrap();
+        assert_eq!(tokens_of(&s_off), tokens_of(&s_on),
+                   "tracing changed speculative tokens @ {threads} threads");
+        assert_eq!(tokens_of(&s_on), tokens_of(&off),
+                   "speculation must still bit-match plain greedy");
+        assert!(obs::counter("phase.draft_ns") > 0);
+        assert!(obs::counter("phase.verify_ns") > 0);
+    }
+
+    // ---- export well-formedness (ring still holds the traced run) -------
+    let snap = obs::snapshot_json(4);
+    assert_eq!(snap.str_or("type", ""), "trace");
+    assert!(snap.bool_or("enabled", false));
+    let evs = snap.get("events").and_then(|e| e.as_arr()).expect("events");
+    assert!(evs.len() <= 4, "snapshot_json must honor max_events");
+    assert!(snap.usize_or("events_total", 0) >= evs.len());
+    assert!(snap.get("counters").is_some());
+    assert!(snap.get("histograms").is_some());
+    assert!(snap.get("gauges").is_some());
+
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target").join("trace_equiv_chrome.json");
+    obs::write_chrome_trace(&out).unwrap();
+    let doc = json::parse_file(&out).expect("chrome trace parses");
+    let evs = doc.get("traceEvents").and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    assert!(evs.len() > 2, "metadata + at least one span");
+    let mut spans = 0usize;
+    for e in evs {
+        assert!(e.get("name").is_some() && e.get("pid").is_some()
+                    && e.get("tid").is_some());
+        match e.str_or("ph", "").as_str() {
+            "M" => {}
+            "X" => {
+                assert!(e.get("ts").is_some() && e.get("dur").is_some());
+                spans += 1;
+            }
+            other => panic!("unexpected event phase `{other}`"),
+        }
+    }
+    assert!(spans > 0, "the traced runs must have produced span events");
+    // lifecycle spans land on the request track with per-request tids
+    let req_spans: Vec<&json::Json> = evs.iter()
+        .filter(|e| e.usize_or("pid", 0) as u32 == obs::PID_REQUESTS)
+        .collect();
+    for want in ["queue", "prefill", "decode"] {
+        assert!(req_spans.iter().any(|e| e.str_or("name", "") == want),
+                "missing request-track span `{want}`");
+    }
+    std::fs::remove_file(&out).ok();
+
+    // leave the process the way the other gates expect it
+    obs::set_enabled(false);
+    obs::reset();
+    exec::set_threads(0);
+}
