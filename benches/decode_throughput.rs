@@ -52,6 +52,7 @@ fn main() {
         arrival_steps: 0.0, // saturating queue
         prefill_chunk: 0,   // whole-prompt chunks: peak prefill batching
         speculate_k: 0,
+        ..DecodeConfig::default()
     };
     let reqs = synth_requests(&p.session.cfg, n_requests, prompt_len, max_new,
                               0xD0);

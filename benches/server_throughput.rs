@@ -18,6 +18,14 @@
 //! The harness runs with tracing on (observe-only — the streamed tokens
 //! cannot change) and pulls one wire `trace` snapshot per server run, so
 //! the protocol-side observability path is exercised under real load.
+//!
+//! The second half replays a **repeated-prefix fleet**: every request
+//! shares one long prompt prefix (the fleet-traffic shape prefix caching
+//! targets), served once with the prefix cache off and once with it on.
+//! Tokens are bit-identical either way (`rust/tests/prefix_cache.rs` gates
+//! that), so the sweep isolates the serving effect — client-observed TTFT
+//! and prefill tok/s — and records it machine-readably in `BENCH_8.json`
+//! at the repo root.
 
 mod common;
 
@@ -25,12 +33,15 @@ use std::net::SocketAddr;
 use std::sync::mpsc;
 
 use zs_svd::coordinator::{self, Method, Prepared};
-use zs_svd::decode::DecodeConfig;
+use zs_svd::decode::{synth_requests_shared_prefix, DecodeConfig,
+                     DEFAULT_KV_BLOCK};
 use zs_svd::report::{f2, latency_cells, Table, LATENCY_HEADERS};
 use zs_svd::serve::Engine;
 use zs_svd::server::{self, Client, GenerateOutcome, GenerateReq,
                      ServerConfig, ServerStats};
 use zs_svd::util::benchkit::fast_mode;
+use zs_svd::util::json::Json;
+use zs_svd::util::stats::LatencySummary;
 
 struct Load {
     clients: usize,
@@ -46,7 +57,8 @@ fn drive(p: &Prepared, params: &zs_svd::model::ParamStore, engine: &Engine,
         queue_depth: 128,
         decode: DecodeConfig { max_slots: 4, max_new_tokens: load.max_new,
                                temperature: 0.0, seed: 1, arrival_steps: 0.0,
-                               prefill_chunk, speculate_k: 0 },
+                               prefill_chunk, speculate_k: 0,
+                               ..DecodeConfig::default() },
     };
     let vocab = p.session.cfg.vocab;
     let (tx, rx) = mpsc::channel::<SocketAddr>();
@@ -100,6 +112,96 @@ fn drive(p: &Prepared, params: &zs_svd::model::ParamStore, engine: &Engine,
                 "traced serving left no events in the ring");
         cl.shutdown_server().expect("shutdown");
         srv.join().expect("server thread").expect("server run")
+    })
+}
+
+/// One request of the shared-prefix fleet, as the client observed it:
+/// time to first token and how many prompt tokens the server reported
+/// serving from its prefix cache.
+fn run_prefix_request(cl: &mut Client, prompts: &[Vec<i32>], k: usize,
+                      max_new: usize) -> (f64, usize) {
+    let g = GenerateReq { id: k as u64, prompt: prompts[k].clone(),
+                          max_new_tokens: max_new,
+                          temperature: None, seed: None };
+    match cl.run_generate(&g).expect("generate") {
+        GenerateOutcome::Done(r) => {
+            assert_eq!(r.tokens.len(), max_new);
+            (r.ttft_ms, r.cached_prompt_tokens)
+        }
+        GenerateOutcome::Rejected { code, message } => {
+            panic!("prefix request {k} rejected: {code} ({message})");
+        }
+    }
+}
+
+/// Shared-prefix fleet driver: request 0 runs alone as the cold warmup
+/// (with caching on it leaves the common prefix in the tree), then the
+/// remaining prompts are round-robined over `clients` concurrent
+/// connections.  Returns the server's own stats plus the fleet's
+/// client-side TTFTs and per-request cached-prompt-token counts
+/// (warmup excluded from both vectors).
+fn drive_prefix(p: &Prepared, params: &zs_svd::model::ParamStore,
+                engine: &Engine, prompts: &[Vec<i32>], clients: usize,
+                max_new: usize, prefix_blocks: usize)
+                -> (ServerStats, Vec<f64>, Vec<usize>) {
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        queue_depth: 128,
+        decode: DecodeConfig { max_slots: 4, max_new_tokens: max_new,
+                               temperature: 0.0, seed: 1, arrival_steps: 0.0,
+                               prefill_chunk: 0, speculate_k: 0,
+                               prefix_cache_blocks: prefix_blocks,
+                               ..DecodeConfig::default() },
+    };
+    let (tx, rx) = mpsc::channel::<SocketAddr>();
+    let sess = &p.session;
+
+    std::thread::scope(|s| {
+        let cfg = &cfg;
+        let srv = s.spawn(move || {
+            server::run(sess, params, engine, None, cfg, move |a| {
+                tx.send(a).expect("report addr");
+            })
+        });
+        let addr = rx.recv().expect("server bound");
+
+        let mut warm = Client::connect(addr).expect("connect warmup");
+        let (_, warm_cached) = run_prefix_request(&mut warm, prompts, 0,
+                                                  max_new);
+        assert_eq!(warm_cached, 0, "cold warmup cannot hit the cache");
+        drop(warm);
+
+        let (rtx, rrx) = mpsc::channel::<(f64, usize)>();
+        let fleet: Vec<_> = (0..clients)
+            .map(|c| {
+                let rtx = rtx.clone();
+                s.spawn(move || {
+                    let mut cl = Client::connect(addr).expect("connect");
+                    for k in 1..prompts.len() {
+                        if (k - 1) % clients != c {
+                            continue;
+                        }
+                        let out = run_prefix_request(&mut cl, prompts, k,
+                                                     max_new);
+                        rtx.send(out).expect("report result");
+                    }
+                })
+            })
+            .collect();
+        drop(rtx);
+        for h in fleet {
+            h.join().expect("fleet client thread");
+        }
+        let (mut ttfts, mut cached) = (Vec::new(), Vec::new());
+        for (t, c) in rrx.iter() {
+            ttfts.push(t);
+            cached.push(c);
+        }
+
+        let mut cl = Client::connect(addr).expect("connect for shutdown");
+        cl.shutdown_server().expect("shutdown");
+        let stats = srv.join().expect("server thread").expect("server run");
+        (stats, ttfts, cached)
     })
 }
 
@@ -177,4 +279,104 @@ fn main() {
     }
 
     common::emit("server_throughput", &t);
+
+    // ---------------------------------------------------------------
+    // repeated-prefix fleet (BENCH_8): every request shares one long
+    // prompt prefix — the traffic shape the paged KV pool's prefix tree
+    // targets.  Served cache-off then cache-on through the SAME dense
+    // engine; streamed tokens are bit-identical either way
+    // (rust/tests/prefix_cache.rs gates that), so the delta is pure
+    // serving effect.  The prefix is block-aligned and capped well below
+    // tiny's seq_len so every prompt + generation budget fits the KV
+    // capacity; `drive_prefix` asserts the server reports exactly the
+    // shared prefix as cached for every warm request.
+    // ---------------------------------------------------------------
+    let scfg = &p.session.cfg;
+    let block = DEFAULT_KV_BLOCK;
+    let prefix_len = (scfg.seq_len * 3 / 4) / block * block;
+    let suffix_len = block / 2;
+    let (fleet_n, fleet_clients, fleet_new) = if fast_mode() {
+        (8usize, 2usize, 4usize)
+    } else {
+        (64, 4, 8)
+    };
+    assert!(prefix_len + suffix_len + fleet_new <= scfg.seq_len);
+    // +1: request 0 is the cold warmup, the fleet is the remaining n
+    let reqs = synth_requests_shared_prefix(scfg, fleet_n + 1, prefix_len,
+                                            suffix_len, fleet_new, 0xCAFE);
+    let prompts: Vec<Vec<i32>> = reqs.into_iter().map(|r| r.prompt).collect();
+
+    let mut pt = Table::new(
+        "repeated-prefix fleet (shared prompt prefix, dense engine)",
+        &["prefix cache", "ttft p50 ms", "ttft mean ms", "prefill tok/s",
+          "cached tok/req", "hit tok", "miss tok"],
+    );
+    let mut bench8_rows: Vec<Json> = Vec::new();
+    for &blocks in &[0usize, 64] {
+        let label = if blocks == 0 { "off" } else { "on" };
+        let (s, ttfts, cached) =
+            drive_prefix(&p, &p.params, &Engine::Dense, &prompts,
+                         fleet_clients, fleet_new, blocks);
+        if blocks == 0 {
+            assert!(cached.iter().all(|&c| c == 0),
+                    "cache off must never report cached prompt tokens");
+        } else {
+            // the warmup inserted the aligned shared prefix, so every
+            // fleet request skips prefill for exactly those tokens
+            assert!(cached.iter().all(|&c| c == prefix_len),
+                    "warm requests must hit the full shared prefix \
+                     ({prefix_len} tokens): {cached:?}");
+        }
+        let ttft = LatencySummary::from_samples(&ttfts);
+        let hit = s.counters.prefix_hit_tokens;
+        let miss = s.counters.prefix_miss_tokens;
+        let cached_per_req = if cached.is_empty() {
+            0.0
+        } else {
+            cached.iter().sum::<usize>() as f64 / cached.len() as f64
+        };
+        let pre = s.counters.prefill_tok_per_sec();
+        eprintln!("  prefix cache {label}: ttft p50 {:.2} ms, \
+                   {pre:.0} prefill tok/s, {hit} hit / {miss} miss tokens",
+                  ttft.p50);
+        pt.row(vec![label.into(), f2(ttft.p50), f2(ttft.mean), f2(pre),
+                    f2(cached_per_req), format!("{hit}"),
+                    format!("{miss}")]);
+        bench8_rows.push(Json::obj(vec![
+            ("prefix_cache", Json::str(label)),
+            ("prefix_cache_blocks", Json::num(blocks as f64)),
+            ("requests", Json::num(fleet_n as f64)),
+            ("clients", Json::num(fleet_clients as f64)),
+            ("prefix_len", Json::num(prefix_len as f64)),
+            ("suffix_len", Json::num(suffix_len as f64)),
+            ("ttft_p50_ms", Json::num(ttft.p50)),
+            ("ttft_mean_ms", Json::num(ttft.mean)),
+            ("prefill_tok_per_sec", Json::num(pre)),
+            ("cached_prompt_tokens_per_request", Json::num(cached_per_req)),
+            ("prefix_hit_tokens", Json::num(hit as f64)),
+            ("prefix_miss_tokens", Json::num(miss as f64)),
+            ("prefix_evictions", Json::num(s.counters.prefix_evictions
+                                               as f64)),
+        ]));
+    }
+    common::emit("server_prefix_cache", &pt);
+
+    let bench8 = Json::obj(vec![
+        ("bench", Json::str("server_throughput/prefix_cache")),
+        ("generated_by",
+         Json::str("cargo bench --bench server_throughput (also run by \
+                    ci.sh)")),
+        ("fast_mode", Json::Bool(fast_mode())),
+        ("units", Json::str("client-observed TTFT over the warm fleet \
+                             (cold warmup request excluded); prefill \
+                             tok/s from the scheduler's prefill-section \
+                             wall time; streamed tokens bit-identical \
+                             cache on or off")),
+        ("results", Json::Arr(bench8_rows)),
+    ]);
+    let bench8_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("BENCH_8.json");
+    std::fs::write(&bench8_path, bench8.to_string_pretty() + "\n")
+        .expect("write BENCH_8.json");
+    println!("[saved {}]", bench8_path.display());
 }

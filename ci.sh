@@ -108,6 +108,47 @@ echo "== speculative serve smoke: serve --listen --speculate-k 2 =="
 serve_smoke --speculate-k 2
 echo "speculative serve smoke OK (drafter round-trip + shutdown)"
 
+echo "== prefix-cache smoke: serve --prefix-cache + repeated prompts =="
+# two scripted client sessions send the IDENTICAL prompt (the scripted
+# prompt is deterministic and per-session ids restart at 0): the first
+# prefills cold and populates the prefix tree, the second must hit it —
+# asserted through the wire metrics counter — while streaming bit-identical
+# tokens (diffed from the printed token ids)
+PORT_FILE="$(mktemp)"
+rm -f "$PORT_FILE"
+./target/release/zs-svd serve --listen 127.0.0.1:0 \
+    --port-file "$PORT_FILE" --max-new-tokens 4 --fast \
+    --prefix-cache 64 --kv-block 8 &
+SRV_PID=$!
+trap 'kill "$SRV_PID" 2>/dev/null || true' EXIT
+for _ in $(seq 1 600); do
+    [ -s "$PORT_FILE" ] && break
+    if ! kill -0 "$SRV_PID" 2>/dev/null; then
+        echo "FATAL: prefix-cache server exited before binding"
+        exit 1
+    fi
+    sleep 0.5
+done
+[ -s "$PORT_FILE" ] || { echo "FATAL: server never wrote its port file"; exit 1; }
+OUT1="$(./target/release/zs-svd client --connect "$(cat "$PORT_FILE")" \
+    --requests 1 --prompt-len 24 --max-new-tokens 4)"
+OUT2="$(./target/release/zs-svd client --connect "$(cat "$PORT_FILE")" \
+    --requests 1 --prompt-len 24 --max-new-tokens 4 --shutdown)"
+wait "$SRV_PID"
+trap - EXIT
+rm -f "$PORT_FILE"
+# the warm session's metrics must show prefix-cache hits...
+echo "$OUT2" | grep -Eq '[1-9][0-9]* prompt tokens served from prefix cache' \
+    || { echo "FATAL: second session reported no prefix-cache hits";
+         echo "$OUT2"; exit 1; }
+# ...and both sessions must have streamed the same token ids
+TOK1="$(echo "$OUT1" | grep -F 'tokens: [')"
+TOK2="$(echo "$OUT2" | grep -F 'tokens: [')"
+[ -n "$TOK1" ] && [ "$TOK1" = "$TOK2" ] \
+    || { echo "FATAL: prefix-cache hit changed streamed tokens";
+         echo "cold: $TOK1"; echo "warm: $TOK2"; exit 1; }
+echo "prefix-cache smoke OK (warm hit via metrics, tokens bit-identical)"
+
 echo "== trace smoke: serve --trace-out + chrome-trace validation =="
 # the same serve round-trip with the observability layer on: the server
 # writes a chrome://tracing JSON on shutdown, and the binary's own `trace`

@@ -57,6 +57,15 @@ pub struct ExperimentConfig {
     /// bit-identical for every value — the knob only changes how many
     /// tokens commit per target verification call.
     pub speculate_k: usize,
+    /// positions per paged KV block (`serve --kv-block`); 0 selects the
+    /// built-in default.  Storage granularity only — generated tokens are
+    /// bit-identical for every block size.
+    pub kv_block: usize,
+    /// prefix-sharing cache capacity in KV blocks (`serve
+    /// --prefix-cache`); 0 disables it.  Repeated prompts skip prefill
+    /// for their cached block-aligned prefix; outputs are bit-identical
+    /// with the cache on or off.
+    pub prefix_cache_blocks: usize,
     /// enable the observability layer (`rust/src/obs/`) — the config-file
     /// twin of the `PALLAS_TRACE` environment variable and the `--trace` /
     /// `--trace-out` CLI flags.  Tracing is observe-only: plans, logits,
@@ -90,6 +99,8 @@ impl Default for ExperimentConfig {
             queue_depth: 64,
             prefill_chunk: 16,
             speculate_k: 0,
+            kv_block: 16,
+            prefix_cache_blocks: 0,
             trace: false,
             ckpt_dir: root.join("artifacts").join("ckpts"),
             out_dir: root.join("results"),
@@ -123,6 +134,9 @@ impl ExperimentConfig {
             queue_depth: j.usize_or("queue_depth", d.queue_depth),
             prefill_chunk: j.usize_or("prefill_chunk", d.prefill_chunk),
             speculate_k: j.usize_or("speculate_k", d.speculate_k),
+            kv_block: j.usize_or("kv_block", d.kv_block),
+            prefix_cache_blocks: j.usize_or("prefix_cache_blocks",
+                                            d.prefix_cache_blocks),
             trace: j.bool_or("trace", d.trace),
             ckpt_dir: j
                 .get("ckpt_dir")
@@ -163,6 +177,9 @@ impl ExperimentConfig {
             ("queue_depth", Json::num(self.queue_depth as f64)),
             ("prefill_chunk", Json::num(self.prefill_chunk as f64)),
             ("speculate_k", Json::num(self.speculate_k as f64)),
+            ("kv_block", Json::num(self.kv_block as f64)),
+            ("prefix_cache_blocks",
+             Json::num(self.prefix_cache_blocks as f64)),
             ("trace", Json::Bool(self.trace)),
             ("ckpt_dir", Json::str(self.ckpt_dir.to_str().unwrap_or("."))),
             ("out_dir", Json::str(self.out_dir.to_str().unwrap_or("."))),
@@ -198,15 +215,21 @@ mod tests {
         assert_eq!(back.queue_depth, c.queue_depth);
         assert_eq!(back.prefill_chunk, c.prefill_chunk);
         assert_eq!(back.speculate_k, c.speculate_k);
+        assert_eq!(back.kv_block, c.kv_block);
+        assert_eq!(back.prefix_cache_blocks, c.prefix_cache_blocks);
         assert_eq!(back.no_simd, c.no_simd);
         assert_eq!(back.trace, c.trace);
 
         let forced = ExperimentConfig { no_simd: true, speculate_k: 3,
+                                        kv_block: 8,
+                                        prefix_cache_blocks: 256,
                                         trace: true,
                                         ..ExperimentConfig::default() };
         let back = ExperimentConfig::from_json(&forced.to_json());
         assert!(back.no_simd, "no_simd must survive the roundtrip");
         assert_eq!(back.speculate_k, 3);
+        assert_eq!(back.kv_block, 8);
+        assert_eq!(back.prefix_cache_blocks, 256);
         assert!(back.trace, "trace must survive the roundtrip");
     }
 

@@ -1,14 +1,23 @@
-//! Per-sequence KV-cache arena for incremental decoding.
+//! Per-sequence KV cache over the paged block pool.
 //!
-//! One `KvCache` holds, per transformer layer, a `(max_len × d_model)` K
-//! matrix and V matrix plus a length cursor.  `decode_step` appends the
-//! current position's post-RoPE key and value rows and attends over rows
-//! `0..=pos`; the batched `decode_batch` kernel appends a whole token run
-//! (a prefill chunk, or one token per scheduled slot) the same way, rows
-//! in ascending position order.  Rows `>= len` are never read, so
-//! `reset()` (slot reuse in the continuous-batching scheduler) only
-//! rewinds the cursor — the arena allocation survives for the life of the
-//! slot.
+//! A `KvCache` is a **block table**: position `pos` of layer `li` lives in
+//! block `pos / block` at in-block row `li * block + pos % block` (see
+//! [`kvpool`](super::kvpool) for the block layout).  `decode_step` appends
+//! the current position's post-RoPE key and value rows and attends over
+//! positions `0..=pos` through a [`KvLayerView`]; the batched
+//! `decode_batch` kernel appends a whole token run (a prefill chunk, or one
+//! token per scheduled slot) the same way, positions in ascending order.
+//! Positions `>= len` are never read, so `reset()` (slot reuse in the
+//! continuous-batching scheduler) releases the blocks back to the pool
+//! without zeroing them.
+//!
+//! Blocks adopted from the prefix tree ([`adopt_prefix`](
+//! KvCache::adopt_prefix)) are shared read-only; a write into a shared
+//! block privatizes it first (copy-on-write), so tree-held K/V bits can
+//! never be mutated by a slot.  With block-aligned prefix matching the COW
+//! path is never actually taken — writes always target positions past the
+//! adopted prefix — but the guard makes immutability structural rather
+//! than conventional.
 //!
 //! The RoPE cos/sin tables (llama models) are precomputed here once per
 //! cache instead of once per token; they are bit-identical to the tables
@@ -16,22 +25,25 @@
 
 use std::sync::Arc;
 
+use super::kvpool::{self, BlockRef, DEFAULT_KV_BLOCK};
 use crate::model::ConfigMeta;
 use crate::runtime::native::{layer_names, rope_tables, LayerNames};
 use crate::tensor::Mat;
 
-/// Per-sequence KV cache: one K/V arena per layer + the position cursor.
+/// Per-sequence KV cache: a ref-counted block table + the position cursor.
 pub struct KvCache {
-    /// arena capacity in positions (== the model's `seq_len`)
+    /// capacity in positions (== the model's `seq_len`)
     pub max_len: usize,
-    /// filled positions; the next `decode_step` writes row `len`
+    /// filled positions; the next `decode_step` writes position `len`
     pub len: usize,
-    /// model width (row length of the arenas)
+    /// model width (row length of every K/V row)
     pub d: usize,
-    /// per-layer keys, post-RoPE, `(max_len × d)`
-    pub k: Vec<Mat>,
-    /// per-layer values, `(max_len × d)`
-    pub v: Vec<Mat>,
+    /// transformer layers each block spans
+    pub n_layers: usize,
+    /// positions per block
+    pub block: usize,
+    /// the block table: block `i` holds positions `i*block .. (i+1)*block`
+    pub(crate) blocks: Vec<BlockRef>,
     /// RoPE tables `(max_len × dh/2)` flattened; empty for non-llama archs
     pub(crate) cos: Vec<f32>,
     pub(crate) sin: Vec<f32>,
@@ -41,8 +53,16 @@ pub struct KvCache {
 }
 
 impl KvCache {
-    /// Fresh arena sized for `cfg` (capacity `seq_len` positions).
+    /// Fresh cache sized for `cfg` (capacity `seq_len` positions) with the
+    /// default block size.  Blocks are acquired lazily as positions fill.
     pub fn new(cfg: &ConfigMeta) -> KvCache {
+        KvCache::with_block(cfg, DEFAULT_KV_BLOCK)
+    }
+
+    /// Fresh cache with an explicit positions-per-block size (0 selects
+    /// [`DEFAULT_KV_BLOCK`]).  Every cache that shares blocks through the
+    /// prefix tree must use the tree's block size.
+    pub fn with_block(cfg: &ConfigMeta, block: usize) -> KvCache {
         let dh = cfg.d_model / cfg.n_heads;
         let (cos, sin) = if cfg.arch == "llama" {
             rope_tables(cfg.seq_len, dh, cfg.rope_theta)
@@ -53,30 +73,124 @@ impl KvCache {
             max_len: cfg.seq_len,
             len: 0,
             d: cfg.d_model,
-            k: (0..cfg.n_layers)
-                .map(|_| Mat::zeros(cfg.seq_len, cfg.d_model))
-                .collect(),
-            v: (0..cfg.n_layers)
-                .map(|_| Mat::zeros(cfg.seq_len, cfg.d_model))
-                .collect(),
+            n_layers: cfg.n_layers,
+            block: if block == 0 { DEFAULT_KV_BLOCK } else { block },
+            blocks: Vec::new(),
             cos,
             sin,
             names: layer_names(cfg),
         }
     }
 
-    /// Rewind for slot reuse.  Stale rows are unreachable (attention reads
-    /// only rows `< len`), so no zeroing is needed.
+    /// Grow the block table so positions `< len` are all backed by storage,
+    /// acquiring blocks from the process-wide pool as needed.
+    pub(crate) fn ensure_len(&mut self, len: usize) {
+        assert!(len <= self.max_len,
+                "KvCache::ensure_len {} beyond capacity {}", len, self.max_len);
+        while self.blocks.len() * self.block < len {
+            self.blocks
+                .push(kvpool::acquire(self.n_layers, self.block, self.d));
+        }
+    }
+
+    #[inline]
+    fn offset(&self, li: usize, pos: usize) -> (usize, usize) {
+        (pos / self.block, (li * self.block + pos % self.block) * self.d)
+    }
+
+    /// Key row (post-RoPE) of layer `li` at position `pos`.
+    #[inline]
+    pub fn k_row(&self, li: usize, pos: usize) -> &[f32] {
+        let (bi, o) = self.offset(li, pos);
+        &self.blocks[bi].k[o..o + self.d]
+    }
+
+    /// Value row of layer `li` at position `pos`.
+    #[inline]
+    pub fn v_row(&self, li: usize, pos: usize) -> &[f32] {
+        let (bi, o) = self.offset(li, pos);
+        &self.blocks[bi].v[o..o + self.d]
+    }
+
+    /// Unique (writable) access to block `bi`, privatizing it first if it
+    /// is shared with the prefix tree or another slot — the copy-on-write
+    /// step.  Shared bits are copied verbatim, so the divergent sequence
+    /// still reads identical prefix values.
+    fn writable_block(&mut self, bi: usize) -> &mut kvpool::KvBlock {
+        if Arc::get_mut(&mut self.blocks[bi]).is_none() {
+            let copy = kvpool::privatize(&self.blocks[bi]);
+            let shared = std::mem::replace(&mut self.blocks[bi], copy);
+            kvpool::release(shared);
+        }
+        Arc::get_mut(&mut self.blocks[bi]).expect("unique after privatize")
+    }
+
+    /// Store the key row of layer `li` at position `pos` (copy-on-write
+    /// when the target block is shared).
+    pub(crate) fn set_k_row(&mut self, li: usize, pos: usize, row: &[f32]) {
+        let (bi, o) = self.offset(li, pos);
+        let d = self.d;
+        self.writable_block(bi).k[o..o + d].copy_from_slice(row);
+    }
+
+    /// Store the value row of layer `li` at position `pos` (copy-on-write
+    /// when the target block is shared).
+    pub(crate) fn set_v_row(&mut self, li: usize, pos: usize, row: &[f32]) {
+        let (bi, o) = self.offset(li, pos);
+        let d = self.d;
+        self.writable_block(bi).v[o..o + d].copy_from_slice(row);
+    }
+
+    /// Read-only attention view of one layer (implements [`KvRows`]).
+    pub(crate) fn layer_view(&self, li: usize) -> KvLayerView<'_> {
+        KvLayerView {
+            blocks: &self.blocks,
+            li_off: li * self.block,
+            block: self.block,
+            d: self.d,
+        }
+    }
+
+    /// Clone of the block handle backing block-table entry `i` (the prefix
+    /// tree ref-bumps completed prompts' blocks through this).
+    pub(crate) fn block_ref(&self, i: usize) -> BlockRef {
+        self.blocks[i].clone()
+    }
+
+    /// Start this (empty) cache from a matched prefix: the block table
+    /// begins with `matched / block` shared read-only blocks and the cursor
+    /// at `matched`, so prefill resumes at the divergence point instead of
+    /// position 0.  `matched` must be block-aligned.
+    pub(crate) fn adopt_prefix(&mut self, shared: &[BlockRef],
+                               matched: usize) {
+        assert!(self.len == 0 && self.blocks.is_empty(),
+                "adopt_prefix on a non-empty cache");
+        assert_eq!(matched % self.block, 0,
+                   "prefix match must be block-aligned");
+        let n = matched / self.block;
+        assert!(shared.len() >= n, "prefix chain shorter than match");
+        self.blocks.extend(shared[..n].iter().cloned());
+        self.len = matched;
+    }
+
+    /// Rewind for slot reuse: the cursor returns to 0 and every block —
+    /// private or shared — is released (private blocks return to the pool;
+    /// shared ones just drop this table's reference).
     pub fn reset(&mut self) {
+        for b in self.blocks.drain(..) {
+            kvpool::release(b);
+        }
         self.len = 0;
     }
 
     /// Partial rewind — the dual of [`KvCache::reset`].  Speculative decode
-    /// rolls the cursor back past rejected draft positions with this; like
-    /// `reset`, it only moves the cursor.  Rows `>= len` become unreachable
-    /// again and are overwritten in place by the next append at those
-    /// positions.  A rewind can never extend the cache, so `len` must not
-    /// exceed the current cursor.
+    /// rolls the cursor back past rejected draft positions with this.
+    /// Whole blocks past the new cursor are released; only **private**
+    /// storage actually returns to the pool (a shared block merely loses
+    /// this table's reference — the prefix tree's copy is untouched).
+    /// Positions `>= len` become unreachable again and are overwritten in
+    /// place (or re-acquired) by the next append.  A rewind can never
+    /// extend the cache, so `len` must not exceed the current cursor.
     pub fn truncate(&mut self, len: usize) {
         assert!(
             len <= self.len,
@@ -85,25 +199,102 @@ impl KvCache {
             self.len
         );
         self.len = len;
+        let keep = len.div_ceil(self.block);
+        for b in self.blocks.drain(keep..) {
+            kvpool::release(b);
+        }
     }
 
-    /// Remaining positions before the arena is full.
+    /// Remaining positions before the cache is full.
     pub fn remaining(&self) -> usize {
         self.max_len - self.len
     }
 
-    /// f32 bytes one arena of this shape holds (K + V, all layers).
+    /// f32 bytes one fully-extended cache of this shape holds (K + V, all
+    /// layers, capacity positions) — the per-slot budget number the serving
+    /// stats report.  Paged slots usually hold less (blocks are acquired
+    /// lazily); see [`KvCache::arena_bytes`] for actual residency.
     pub fn arena_bytes_for(cfg: &ConfigMeta) -> usize {
         2 * cfg.n_layers * cfg.seq_len * cfg.d_model * 4
     }
 
-    /// f32 bytes held by this cache's K/V arenas.
+    /// f32 bytes currently backed by this cache's block table (shared
+    /// blocks count fully here; they are deduplicated process-wide by the
+    /// pool, not per table).
     pub fn arena_bytes(&self) -> usize {
-        self.k
-            .iter()
-            .chain(self.v.iter())
-            .map(|m| m.data.len() * 4)
-            .sum()
+        self.blocks.iter().map(|b| b.bytes()).sum()
+    }
+
+    /// Number of this cache's blocks whose storage is shared (also held by
+    /// the prefix tree or another slot).
+    pub fn shared_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| Arc::strong_count(b) > 1).count()
+    }
+}
+
+impl Drop for KvCache {
+    /// Return every still-held block to the pool (a dropped cache must not
+    /// leak pool accounting).
+    fn drop(&mut self) {
+        self.reset();
+    }
+}
+
+/// Position-indexed K/V row access for attention: one implementation over
+/// the paged block table, one over plain matrices (the full-forward
+/// reference shape).  `attention_step_row` is generic over this, which is
+/// the whole paging abstraction — the kernel reads identical f32 rows
+/// wherever they live, so storage layout cannot change logits.
+pub(crate) trait KvRows {
+    /// Key row (post-RoPE) at position `t`.
+    fn k_row(&self, t: usize) -> &[f32];
+    /// Value row at position `t`.
+    fn v_row(&self, t: usize) -> &[f32];
+}
+
+/// [`KvRows`] over one layer of a paged cache's block table.
+pub(crate) struct KvLayerView<'a> {
+    blocks: &'a [BlockRef],
+    /// `li * block`: row offset of this layer's band inside each block
+    li_off: usize,
+    block: usize,
+    d: usize,
+}
+
+impl KvRows for KvLayerView<'_> {
+    #[inline]
+    fn k_row(&self, t: usize) -> &[f32] {
+        let o = (self.li_off + t % self.block) * self.d;
+        &self.blocks[t / self.block].k[o..o + self.d]
+    }
+
+    #[inline]
+    fn v_row(&self, t: usize) -> &[f32] {
+        let o = (self.li_off + t % self.block) * self.d;
+        &self.blocks[t / self.block].v[o..o + self.d]
+    }
+}
+
+/// [`KvRows`] over contiguous `(len × d)` K and V matrices — the layout
+/// `attention_fwd` produces and the one `attention_step`'s unit tests use.
+pub(crate) struct MatKv<'a> {
+    /// keys, `(len × d)`
+    pub k: &'a Mat,
+    /// values, `(len × d)`
+    pub v: &'a Mat,
+}
+
+impl KvRows for MatKv<'_> {
+    #[inline]
+    fn k_row(&self, t: usize) -> &[f32] {
+        let d = self.k.cols;
+        &self.k.data[t * d..(t + 1) * d]
+    }
+
+    #[inline]
+    fn v_row(&self, t: usize) -> &[f32] {
+        let d = self.v.cols;
+        &self.v.data[t * d..(t + 1) * d]
     }
 }
 
@@ -117,43 +308,133 @@ mod tests {
     }
 
     #[test]
-    fn arena_shapes_match_config() {
+    fn block_table_matches_config() {
         let cfg = tiny();
-        let c = KvCache::new(&cfg);
-        assert_eq!(c.k.len(), cfg.n_layers);
-        assert_eq!(c.v.len(), cfg.n_layers);
-        assert_eq!((c.k[0].rows, c.k[0].cols), (cfg.seq_len, cfg.d_model));
+        let mut c = KvCache::with_block(&cfg, 4);
+        assert_eq!(c.n_layers, cfg.n_layers);
+        assert_eq!(c.d, cfg.d_model);
         assert_eq!(c.max_len, cfg.seq_len);
-        assert_eq!(c.len, 0);
+        assert_eq!((c.len, c.blocks.len()), (0, 0));
+        assert_eq!(c.arena_bytes(), 0); // lazy: nothing acquired yet
+        c.ensure_len(6); // 6 positions at block 4 → 2 blocks
+        assert_eq!(c.blocks.len(), 2);
+        assert_eq!(c.arena_bytes(),
+                   2 * kvpool::KvBlock::bytes_for(cfg.n_layers, 4,
+                                                  cfg.d_model));
+        // a fully-extended table reaches the per-slot budget number
+        c.ensure_len(cfg.seq_len);
         assert_eq!(c.arena_bytes(), KvCache::arena_bytes_for(&cfg));
         // llama arch precomputes RoPE tables for every position
         assert_eq!(c.cos.len(), cfg.seq_len * (cfg.d_model / cfg.n_heads) / 2);
     }
 
     #[test]
-    fn reset_rewinds_cursor_only() {
+    fn rows_round_trip_through_blocks() {
         let cfg = tiny();
-        let mut c = KvCache::new(&cfg);
-        c.len = 5;
-        c.k[0].row_mut(0)[0] = 7.0;
-        c.reset();
-        assert_eq!(c.len, 0);
-        assert_eq!(c.remaining(), c.max_len);
-        assert_eq!(c.k[0].row(0)[0], 7.0); // arena survives
+        let mut c = KvCache::with_block(&cfg, 4);
+        c.ensure_len(7);
+        let row: Vec<f32> = (0..cfg.d_model).map(|i| i as f32 + 0.5).collect();
+        // position 6 lives in block 1; layer 1's band starts at row `block`
+        c.set_k_row(1, 6, &row);
+        c.set_v_row(1, 6, &row);
+        assert_eq!(c.k_row(1, 6), &row[..]);
+        assert_eq!(c.v_row(1, 6), &row[..]);
+        let view = c.layer_view(1);
+        assert_eq!(view.k_row(6), &row[..]);
+        assert_eq!(view.v_row(6), &row[..]);
+        // neighbours are untouched
+        assert_ne!(c.k_row(0, 6), &row[..]);
     }
 
     #[test]
-    fn truncate_rewinds_cursor_only() {
+    fn reset_releases_blocks() {
         let cfg = tiny();
-        let mut c = KvCache::new(&cfg);
+        let mut c = KvCache::with_block(&cfg, 4);
+        c.ensure_len(5);
         c.len = 5;
-        c.k[0].row_mut(4)[0] = 3.0;
-        c.truncate(5); // no-op at the cursor
-        assert_eq!(c.len, 5);
-        c.truncate(2);
-        assert_eq!(c.len, 2);
-        assert_eq!(c.remaining(), c.max_len - 2);
-        assert_eq!(c.k[0].row(4)[0], 3.0); // stale row survives, unreachable
+        c.reset();
+        assert_eq!(c.len, 0);
+        assert_eq!(c.blocks.len(), 0);
+        assert_eq!(c.remaining(), c.max_len);
+    }
+
+    #[test]
+    fn truncate_releases_only_trailing_blocks() {
+        let cfg = tiny();
+        let mut c = KvCache::with_block(&cfg, 4);
+        c.ensure_len(10); // 3 blocks
+        c.len = 10;
+        c.set_k_row(0, 5, &vec![3.0; cfg.d_model]);
+        c.truncate(10); // no-op at the cursor
+        assert_eq!((c.len, c.blocks.len()), (10, 3));
+        c.truncate(6);
+        // positions 0..6 span 2 blocks: the third was released, the block
+        // holding the (now unreachable) tail of block 1 survives in place
+        assert_eq!((c.len, c.blocks.len()), (6, 2));
+        assert_eq!(c.remaining(), c.max_len - 6);
+        assert_eq!(c.k_row(0, 5)[0], 3.0);
+        c.truncate(0);
+        assert_eq!((c.len, c.blocks.len()), (0, 0));
+    }
+
+    #[test]
+    fn truncate_keeps_shared_blocks_alive_elsewhere() {
+        // the PR-6 drafter-rollback contract: truncate must release only
+        // this table's references — storage shared with the prefix tree
+        // stays intact and still readable through the tree's handle
+        let cfg = tiny();
+        let mut c = KvCache::with_block(&cfg, 4);
+        c.ensure_len(8);
+        c.len = 8;
+        let marker = vec![9.25f32; cfg.d_model];
+        c.set_k_row(0, 1, &marker);
+        let tree_ref = c.block_ref(0); // block 0 now shared
+        assert_eq!(c.shared_blocks(), 1);
+        c.truncate(0); // rollback past everything
+        assert_eq!(c.blocks.len(), 0);
+        // the tree's copy still holds the bits
+        assert_eq!(&tree_ref.k[cfg.d_model..2 * cfg.d_model], &marker[..]);
+        kvpool::release(tree_ref);
+    }
+
+    #[test]
+    fn writes_into_shared_blocks_copy_on_write() {
+        let cfg = tiny();
+        let mut c = KvCache::with_block(&cfg, 4);
+        c.ensure_len(4);
+        c.len = 4;
+        let before = vec![1.5f32; cfg.d_model];
+        c.set_k_row(0, 2, &before);
+        let tree_ref = c.block_ref(0);
+        // overwriting a position inside the shared block privatizes it:
+        // the slot sees the new bits, the tree's handle the old ones
+        let after = vec![-2.5f32; cfg.d_model];
+        c.set_k_row(0, 2, &after);
+        assert_eq!(c.k_row(0, 2), &after[..]);
+        assert_eq!(&tree_ref.k[2 * cfg.d_model..3 * cfg.d_model],
+                   &before[..]);
+        assert_eq!(c.shared_blocks(), 0); // divergence made it private
+        kvpool::release(tree_ref);
+    }
+
+    #[test]
+    fn adopt_prefix_starts_cursor_past_shared_blocks() {
+        let cfg = tiny();
+        let mut warm = KvCache::with_block(&cfg, 4);
+        warm.ensure_len(8);
+        warm.len = 8;
+        let row = vec![7.0f32; cfg.d_model];
+        warm.set_k_row(0, 3, &row);
+        let chain = vec![warm.block_ref(0), warm.block_ref(1)];
+        let mut c = KvCache::with_block(&cfg, 4);
+        c.adopt_prefix(&chain, 8);
+        assert_eq!(c.len, 8);
+        assert_eq!(c.blocks.len(), 2);
+        assert_eq!(c.k_row(0, 3), &row[..]); // reads go through shared bits
+        assert_eq!(c.shared_blocks(), 2);
+        for b in chain {
+            kvpool::release(b);
+        }
     }
 
     #[test]
@@ -161,6 +442,7 @@ mod tests {
     fn truncate_cannot_extend() {
         let cfg = tiny();
         let mut c = KvCache::new(&cfg);
+        c.ensure_len(2);
         c.len = 2;
         c.truncate(3);
     }

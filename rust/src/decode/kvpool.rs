@@ -1,0 +1,219 @@
+//! Process-wide paged KV block pool: fixed-size, ref-counted K/V storage
+//! shared by every decode slot (and the speculative drafter's mirrored
+//! caches).
+//!
+//! A [`KvBlock`] holds `block` consecutive sequence positions for **all**
+//! layers of one sequence: layer `li`, in-block position `p` lives at row
+//! `li * block + p` of the block's K (and V) storage, each row `d_model`
+//! floats.  A [`KvCache`](super::KvCache) is a table of [`BlockRef`]s
+//! (`Arc<KvBlock>`) instead of one monolithic per-slot arena, which is what
+//! makes prefix sharing possible: the prefix tree
+//! ([`PrefixTree`](super::prefix::PrefixTree)) and any number of slots can
+//! hold the *same* immutable block, and a slot that needs to write into a
+//! shared block first privatizes it (copy-on-write — see
+//! `KvCache::set_k_row`).
+//!
+//! Blocks are recycled through a process-wide free list keyed by shape
+//! (`n_layers`, `block`, `d`), mirroring the `layer_names` process-wide
+//! table: a retired slot's private blocks go back to the pool and the next
+//! admission reuses them without reallocating.  Recycled blocks are **not**
+//! zeroed — attention only ever reads positions `< cache.len`, and every
+//! such position was written by the current generation before any read, so
+//! stale floats are unreachable by construction (the same argument that
+//! lets `KvCache::reset` skip zeroing).
+//!
+//! # Determinism
+//!
+//! The pool stores bits; it never transforms them.  Whether a position's
+//! K/V row lives in a freshly allocated block, a recycled one, or a block
+//! shared through the prefix tree, attention reads the identical f32
+//! values — so paged storage cannot change any logit bit
+//! (`rust/tests/prefix_cache.rs` and the decode parity gates prove it).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default positions per block (`--kv-block` / `ExperimentConfig::kv_block`
+/// override it).
+pub const DEFAULT_KV_BLOCK: usize = 16;
+
+/// Free blocks retained per shape; beyond this, released blocks are dropped
+/// so an atypical burst cannot pin memory forever.
+const FREE_CAP_PER_SHAPE: usize = 4096;
+
+/// One fixed-size paged unit of KV storage: `block` positions × all layers.
+///
+/// Layer `li`, in-block position `p` is the `d`-float slice starting at
+/// `(li * block + p) * d` of [`KvBlock::k`] (keys, post-RoPE) and
+/// [`KvBlock::v`] (values).
+#[derive(Clone)]
+pub struct KvBlock {
+    /// keys for all layers, `(n_layers · block) × d` row-major
+    pub(crate) k: Vec<f32>,
+    /// values for all layers, same layout as `k`
+    pub(crate) v: Vec<f32>,
+    /// (n_layers, block, d) — the pool's free-list key
+    pub(crate) shape: (usize, usize, usize),
+}
+
+/// Shared handle to one block.  Cloning bumps the ref count; the prefix
+/// tree and any number of slot block tables may hold the same block.
+pub type BlockRef = Arc<KvBlock>;
+
+impl KvBlock {
+    /// Bytes of f32 K+V storage one block of this shape holds.
+    pub fn bytes_for(n_layers: usize, block: usize, d: usize) -> usize {
+        2 * n_layers * block * d * 4
+    }
+
+    /// Bytes of f32 K+V storage this block holds.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+/// Per-shape free list + live count (per-shape so concurrent users of
+/// different shapes — e.g. parallel tests — cannot perturb each other's
+/// accounting).
+#[derive(Default)]
+struct ShapePool {
+    free: Vec<BlockRef>,
+    live: usize,
+}
+
+fn pool() -> &'static Mutex<BTreeMap<(usize, usize, usize), ShapePool>> {
+    static POOL: OnceLock<Mutex<BTreeMap<(usize, usize, usize), ShapePool>>> =
+        OnceLock::new();
+    POOL.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Take a block of the given shape from the free list (or allocate one).
+/// The block is uniquely owned; its contents are unspecified (see the
+/// module docs for why that is safe).
+pub(crate) fn acquire(n_layers: usize, block: usize, d: usize) -> BlockRef {
+    let mut p = pool().lock().unwrap_or_else(|e| e.into_inner());
+    let sp = p.entry((n_layers, block, d)).or_default();
+    sp.live += 1;
+    sp.free.pop().unwrap_or_else(|| {
+        let n = n_layers * block * d;
+        Arc::new(KvBlock {
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            shape: (n_layers, block, d),
+        })
+    })
+}
+
+/// Drop one reference to a block.  If it was the last, the block returns to
+/// the free list (bounded; surplus is freed) and stops counting as live.
+/// Blocks still shared elsewhere (prefix tree, another slot) just lose one
+/// ref and stay live.
+pub(crate) fn release(b: BlockRef) {
+    if let Ok(block) = Arc::try_unwrap(b) {
+        let mut p = pool().lock().unwrap_or_else(|e| e.into_inner());
+        let sp = p.entry(block.shape).or_default();
+        sp.live -= 1;
+        if sp.free.len() < FREE_CAP_PER_SHAPE {
+            sp.free.push(Arc::new(block));
+        }
+    }
+}
+
+/// Pool-accounted private copy of a shared block — the copy-on-write step.
+/// The copy is acquired through the pool (so the gauges stay honest) and
+/// then overwritten with `src`'s bits, bit-for-bit.
+pub(crate) fn privatize(src: &BlockRef) -> BlockRef {
+    let (nl, bl, d) = src.shape;
+    let mut out = acquire(nl, bl, d);
+    let m = Arc::get_mut(&mut out).expect("freshly acquired block is unique");
+    m.k.copy_from_slice(&src.k);
+    m.v.copy_from_slice(&src.v);
+    out
+}
+
+/// Point-in-time pool occupancy, for the always-on serving gauges.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// blocks referenced by at least one cache or the prefix tree
+    pub live_blocks: usize,
+    /// recycled blocks parked on the free lists
+    pub free_blocks: usize,
+}
+
+/// Whole-pool occupancy, summed over every shape this process has used.
+pub fn stats() -> PoolStats {
+    let p = pool().lock().unwrap_or_else(|e| e.into_inner());
+    let mut s = PoolStats::default();
+    for sp in p.values() {
+        s.live_blocks += sp.live;
+        s.free_blocks += sp.free.len();
+    }
+    s
+}
+
+/// Occupancy of one shape's sub-pool (used by tests, which pick shapes no
+/// other code touches so parallel test threads cannot skew the counts).
+#[cfg(test)]
+fn stats_for(n_layers: usize, block: usize, d: usize) -> PoolStats {
+    let p = pool().lock().unwrap_or_else(|e| e.into_inner());
+    p.get(&(n_layers, block, d))
+        .map(|sp| PoolStats { live_blocks: sp.live, free_blocks: sp.free.len() })
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_recycles() {
+        // shape unique to this test: parallel tests can't perturb it
+        let (nl, bl, d) = (7, 3, 5);
+        let a = acquire(nl, bl, d);
+        assert_eq!(a.k.len(), nl * bl * d);
+        assert_eq!(a.v.len(), nl * bl * d);
+        assert_eq!(a.shape, (nl, bl, d));
+        assert_eq!(a.bytes(), KvBlock::bytes_for(nl, bl, d));
+        assert_eq!(stats_for(nl, bl, d),
+                   PoolStats { live_blocks: 1, free_blocks: 0 });
+        release(a);
+        assert_eq!(stats_for(nl, bl, d),
+                   PoolStats { live_blocks: 0, free_blocks: 1 });
+        // the next acquire of the same shape reuses the parked block
+        let b = acquire(nl, bl, d);
+        assert_eq!(stats_for(nl, bl, d),
+                   PoolStats { live_blocks: 1, free_blocks: 0 });
+        release(b);
+    }
+
+    #[test]
+    fn shared_block_stays_live_until_last_release() {
+        let (nl, bl, d) = (7, 3, 6);
+        let a = acquire(nl, bl, d);
+        let shared = a.clone(); // e.g. the prefix tree's reference
+        release(a);
+        // one holder remains: still live, not recycled
+        assert_eq!(stats_for(nl, bl, d),
+                   PoolStats { live_blocks: 1, free_blocks: 0 });
+        release(shared);
+        assert_eq!(stats_for(nl, bl, d),
+                   PoolStats { live_blocks: 0, free_blocks: 1 });
+    }
+
+    #[test]
+    fn privatize_copies_bits_and_accounts() {
+        let (nl, bl, d) = (7, 3, 7);
+        let mut a = acquire(nl, bl, d);
+        Arc::get_mut(&mut a).unwrap().k[5] = 42.5;
+        let tree_ref = a.clone();
+        let copy = privatize(&a);
+        assert_eq!(stats_for(nl, bl, d).live_blocks, 2);
+        assert_eq!(copy.k, a.k);
+        assert_eq!(copy.v, a.v);
+        assert!(!Arc::ptr_eq(&copy, &a));
+        release(copy);
+        release(a);
+        release(tree_ref);
+        assert_eq!(stats_for(nl, bl, d).live_blocks, 0);
+    }
+}

@@ -4,9 +4,19 @@
 //!
 //! # Layout
 //!
-//! * [`kv`] — per-sequence KV-cache arenas (one (max_len × d_model) K and V
-//!   matrix per layer, plus the RoPE tables for llama-style models).  Slots
-//!   reuse arenas across requests; only rows `< len` are ever read.
+//! * [`kvpool`] — the process-wide paged block pool: fixed-size,
+//!   ref-counted K/V blocks (each spanning `block` positions × all layers)
+//!   recycled through per-shape free lists.
+//! * [`kv`] — per-sequence KV caches as **block tables** over the pool
+//!   (plus the RoPE tables for llama-style models).  Slots release blocks
+//!   on reuse; only positions `< len` are ever read.  Blocks adopted from
+//!   the prefix tree are shared read-only with copy-on-write on first
+//!   write.
+//! * [`prefix`] — the prefix-sharing cache: a tree keyed on block-sized
+//!   token runs mapping prompt prefixes to chains of immutable shared
+//!   blocks, with LRU eviction under a block-capacity bound.  Admission
+//!   matches incoming prompts against it and skips prefill for the matched
+//!   prefix entirely.
 //! * `runtime::native::decode_step` — the incremental step kernel: one token
 //!   at position `cache.len` through the llama/opt graph against the cache,
 //!   via either the dense weights or a compression plan's `(Wu, Wv)`
@@ -55,13 +65,18 @@
 //! (`rust/tests/server_loopback.rs`).
 
 pub mod kv;
+pub mod kvpool;
+pub mod prefix;
 pub mod sampler;
 pub mod scheduler;
 
 pub use kv::KvCache;
+pub use kvpool::DEFAULT_KV_BLOCK;
+pub use prefix::PrefixTree;
 pub use sampler::{argmax, Sampler};
 pub use scheduler::{run_decode, run_decode_speculative, run_engine,
-                    sampler_seed, synth_requests, CompletedRequest,
+                    sampler_seed, synth_requests,
+                    synth_requests_shared_prefix, CompletedRequest,
                     DecodeConfig, DecodeEvent, DecodeRequest, DecodeStats,
                     EngineCounters, RequestSource, SourcePoll,
                     WorkloadSource};

@@ -1,0 +1,387 @@
+//! Prefix-sharing cache: a tree keyed on block-sized token-id runs that
+//! maps prompt prefixes to chains of immutable, shared, ref-counted KV
+//! blocks.
+//!
+//! Fleet traffic overwhelmingly repeats prompt prefixes (system prompts,
+//! few-shot preambles).  When a completed prompt's prefill blocks are
+//! [`insert`](PrefixTree::insert)ed here, a later prompt that
+//! [`lookup`](PrefixTree::lookup)s with the same leading tokens adopts the
+//! matching block chain read-only and **skips prefill for the whole
+//! matched prefix** — its KV cache starts at the divergence point.  The
+//! tree holds plain [`BlockRef`]s, so sharing is ref-counting: a chain can
+//! back any number of active slots at once, and eviction only drops the
+//! tree's own reference (slots mid-generation keep their blocks alive).
+//!
+//! # Why a hit is bit-identical to a miss
+//!
+//! Blocks store the exact post-RoPE K and V rows prefill computed, keyed
+//! by the exact token ids that produced them, and RoPE positions are
+//! absolute — so the rows are a pure function of the token prefix.
+//! Attention on a cache hit therefore reads the *same f32 values* a cold
+//! prefill would recompute, and logits/tokens cannot differ by a bit
+//! (`rust/tests/prefix_cache.rs` gates this over threads × chunk sizes ×
+//! speculation depths).
+//!
+//! # Match policy
+//!
+//! Matches advance one full block (`block` tokens) at a time and are
+//! capped at `prompt_len - 1` rounded **down** to a block boundary: the
+//! final prompt position is always recomputed, because its forward pass is
+//! what produces the first generated token's logits.  Partial trailing
+//! blocks are likewise never inserted — a block enters the tree only when
+//! the prompt covered all of its positions, so tree blocks are immutable
+//! by construction (and [`KvCache`](super::KvCache)'s copy-on-write guard
+//! makes that structural).
+//!
+//! # Capacity + LRU eviction
+//!
+//! The tree holds at most `cap_blocks` blocks.  Inserting past the bound
+//! evicts least-recently-used **leaves** first (a chain shrinks from its
+//! tail, so surviving entries always form valid prefixes).  Eviction is
+//! deterministic: nodes live in `BTreeMap`s and ties break on the
+//! first-in-order path.
+
+use std::collections::BTreeMap;
+
+use super::kv::KvCache;
+use super::kvpool::{self, BlockRef};
+
+/// One tree node: the KV block for the token run keyed by the parent map,
+/// plus children for every continuation seen so far.
+struct Node {
+    blk: BlockRef,
+    last_used: u64,
+    children: BTreeMap<Vec<i32>, Node>,
+}
+
+/// Prefix tree over block-sized token runs (see the module docs).
+pub struct PrefixTree {
+    /// positions per block; every participating cache must match
+    block: usize,
+    /// capacity bound, in blocks
+    cap_blocks: usize,
+    /// logical clock driving LRU (bumped once per lookup/insert)
+    clock: u64,
+    /// blocks currently held by the tree
+    held: usize,
+    /// total blocks evicted since construction
+    evictions: u64,
+    children: BTreeMap<Vec<i32>, Node>,
+}
+
+impl PrefixTree {
+    /// Empty tree for `block`-position blocks holding at most `cap_blocks`
+    /// blocks.
+    pub fn new(block: usize, cap_blocks: usize) -> PrefixTree {
+        assert!(block > 0, "prefix tree needs a positive block size");
+        PrefixTree {
+            block,
+            cap_blocks,
+            clock: 0,
+            held: 0,
+            evictions: 0,
+            children: BTreeMap::new(),
+        }
+    }
+
+    /// Positions per block this tree was built for.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Match `prompt` against the cached prefixes: returns the chain of
+    /// shared blocks for the longest cached prefix (block-aligned, capped
+    /// at `prompt_len - 1` so the final prompt position is always
+    /// recomputed) and the matched token count.  Touched nodes are bumped
+    /// to most-recently-used.
+    pub fn lookup(&mut self, prompt: &[i32]) -> (Vec<BlockRef>, usize) {
+        self.clock += 1;
+        let clock = self.clock;
+        let block = self.block;
+        let limit = (prompt.len().saturating_sub(1) / block) * block;
+        let mut refs = Vec::new();
+        let mut matched = 0usize;
+        let mut cur = &mut self.children;
+        while matched < limit {
+            match cur.get_mut(&prompt[matched..matched + block]) {
+                Some(node) => {
+                    node.last_used = clock;
+                    refs.push(node.blk.clone());
+                    matched += block;
+                    cur = &mut node.children;
+                }
+                None => break,
+            }
+        }
+        (refs, matched)
+    }
+
+    /// Record a completed prompt's prefill blocks: every block fully
+    /// covered by the prompt is inserted (new chains) or ref-bumped
+    /// (already cached), then the tree evicts down to its capacity bound.
+    /// Returns the number of newly held blocks.  The partial trailing
+    /// block (if `prompt_len % block != 0`) never enters the tree.
+    pub fn insert(&mut self, prompt: &[i32], cache: &KvCache) -> usize {
+        assert_eq!(cache.block, self.block,
+                   "cache block size {} != tree block size {}", cache.block,
+                   self.block);
+        let n_full = prompt.len() / self.block;
+        assert!(cache.len >= n_full * self.block,
+                "cache holds fewer positions than the prompt's full blocks");
+        self.clock += 1;
+        let clock = self.clock;
+        let block = self.block;
+        let mut added = 0usize;
+        let mut cur = &mut self.children;
+        for i in 0..n_full {
+            let key = &prompt[i * block..(i + 1) * block];
+            if !cur.contains_key(key) {
+                added += 1;
+                cur.insert(key.to_vec(), Node {
+                    blk: cache.block_ref(i),
+                    last_used: 0,
+                    children: BTreeMap::new(),
+                });
+            }
+            let node = cur.get_mut(key).expect("present or just inserted");
+            node.last_used = clock;
+            cur = &mut node.children;
+        }
+        self.held += added;
+        self.evict_to_cap();
+        added
+    }
+
+    /// Evict LRU leaves until the block count is back under the capacity
+    /// bound; returns how many blocks were dropped.  Only the tree's own
+    /// references are released — blocks adopted by active slots stay
+    /// alive through their tables.
+    fn evict_to_cap(&mut self) -> usize {
+        let mut dropped = 0usize;
+        while self.held > self.cap_blocks {
+            let Some(path) = lru_leaf_path(&self.children) else {
+                break; // held > 0 implies a leaf exists; defensive only
+            };
+            let blk = remove_path(&mut self.children, &path);
+            kvpool::release(blk);
+            self.held -= 1;
+            self.evictions += 1;
+            dropped += 1;
+        }
+        dropped
+    }
+
+    /// Blocks currently held by the tree.
+    pub fn held_blocks(&self) -> usize {
+        self.held
+    }
+
+    /// Total blocks evicted since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Number of distinct cached chains (tree leaves).
+    pub fn chains(&self) -> usize {
+        fn leaves(children: &BTreeMap<Vec<i32>, Node>) -> usize {
+            children.values()
+                .map(|n| {
+                    if n.children.is_empty() { 1 } else { leaves(&n.children) }
+                })
+                .sum()
+        }
+        leaves(&self.children)
+    }
+
+    /// f32 bytes of KV storage reachable through the tree (each held block
+    /// counted once; sharing with slots is not double-counted here).
+    pub fn shared_bytes(&self) -> usize {
+        fn bytes(children: &BTreeMap<Vec<i32>, Node>) -> usize {
+            children.values()
+                .map(|n| n.blk.bytes() + bytes(&n.children))
+                .sum()
+        }
+        bytes(&self.children)
+    }
+}
+
+impl Drop for PrefixTree {
+    /// Release every held block back to the pool.
+    fn drop(&mut self) {
+        fn drain(children: &mut BTreeMap<Vec<i32>, Node>) {
+            while let Some((_, mut n)) = children.pop_first() {
+                drain(&mut n.children);
+                kvpool::release(n.blk);
+            }
+        }
+        drain(&mut self.children);
+        self.held = 0;
+    }
+}
+
+/// Path (sequence of map keys) to the least-recently-used leaf, ties
+/// broken on the first path in `BTreeMap` order — deterministic.
+fn lru_leaf_path(children: &BTreeMap<Vec<i32>, Node>)
+                 -> Option<(Vec<Vec<i32>>, u64)> {
+    let mut best: Option<(Vec<Vec<i32>>, u64)> = None;
+    for (key, node) in children {
+        let cand = if node.children.is_empty() {
+            (vec![key.clone()], node.last_used)
+        } else {
+            let (mut path, used) = lru_leaf_path(&node.children)
+                .expect("non-empty children have a leaf");
+            path.insert(0, key.clone());
+            (path, used)
+        };
+        let better = match &best {
+            None => true,
+            Some((_, bu)) => cand.1 < *bu,
+        };
+        if better {
+            best = Some(cand);
+        }
+    }
+    best
+}
+
+/// Remove the leaf at `path` and return its block.
+fn remove_path(children: &mut BTreeMap<Vec<i32>, Node>, path: &[Vec<i32>])
+               -> BlockRef {
+    if path.len() == 1 {
+        let node = children.remove(&path[0]).expect("leaf path valid");
+        debug_assert!(node.children.is_empty(), "evicting a non-leaf");
+        node.blk
+    } else {
+        let node = children.get_mut(&path[0]).expect("interior path valid");
+        remove_path(&mut node.children, &path[1..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ConfigMeta, Manifest};
+
+    fn tiny() -> ConfigMeta {
+        Manifest::builtin().config("tiny").clone()
+    }
+
+    /// A cache with `len` positions "prefilled" (storage acquired and the
+    /// cursor advanced; attention bits don't matter for tree mechanics).
+    fn filled(cfg: &ConfigMeta, block: usize, len: usize) -> KvCache {
+        let mut c = KvCache::with_block(cfg, block);
+        c.ensure_len(len);
+        c.len = len;
+        c
+    }
+
+    #[test]
+    fn lookup_matches_block_aligned_and_caps_last_position() {
+        let cfg = tiny();
+        let mut t = PrefixTree::new(4, 64);
+        let prompt: Vec<i32> = (1..=10).collect();
+        let c = filled(&cfg, 4, 10);
+        // 10 tokens at block 4 → 2 full blocks enter the tree
+        assert_eq!(t.insert(&prompt, &c), 2);
+        assert_eq!(t.held_blocks(), 2);
+        assert_eq!(t.chains(), 1);
+
+        // identical prompt: both full blocks match (8 ≤ 10 - 1)
+        let (refs, m) = t.lookup(&prompt);
+        assert_eq!((refs.len(), m), (2, 8));
+        // block-exact prompt of 8 tokens: the match is capped at 7 → one
+        // block, so the final position is left for recompute
+        let (refs, m) = t.lookup(&prompt[..8]);
+        assert_eq!((refs.len(), m), (1, 4));
+        // divergence inside the second block: only the first matches
+        let mut div = prompt.clone();
+        div[6] = 99;
+        let (refs, m) = t.lookup(&div);
+        assert_eq!((refs.len(), m), (1, 4));
+        // divergence in the first block: no match
+        div[1] = 98;
+        let (refs, m) = t.lookup(&div);
+        assert_eq!((refs.len(), m), (0, 0));
+        // too-short prompts can never match (limit is 0)
+        let (refs, m) = t.lookup(&prompt[..4]);
+        assert_eq!((refs.len(), m), (0, 0));
+    }
+
+    #[test]
+    fn insert_dedupes_shared_prefixes() {
+        let cfg = tiny();
+        let mut t = PrefixTree::new(4, 64);
+        let a: Vec<i32> = (1..=12).collect();
+        let mut b = a.clone();
+        b[9] = 77; // diverges in the third block
+        let ca = filled(&cfg, 4, 12);
+        let cb = filled(&cfg, 4, 12);
+        assert_eq!(t.insert(&a, &ca), 3);
+        // shared first two blocks dedupe; only b's third block is new
+        assert_eq!(t.insert(&b, &cb), 1);
+        assert_eq!(t.held_blocks(), 4);
+        assert_eq!(t.chains(), 2);
+        // a's chain still matches end-to-end through the shared nodes
+        let (_, m) = t.lookup(&a);
+        assert_eq!(m, 8);
+    }
+
+    #[test]
+    fn eviction_is_lru_and_leaf_first() {
+        let cfg = tiny();
+        let mut t = PrefixTree::new(4, 2);
+        let a: Vec<i32> = (1..=9).collect(); // 2 full blocks
+        let b: Vec<i32> = (101..=109).collect();
+        let ca = filled(&cfg, 4, 9);
+        let cb = filled(&cfg, 4, 9);
+        t.insert(&a, &ca);
+        assert_eq!(t.held_blocks(), 2);
+        // touch a so b's insert evicts from a's tail anyway (capacity 2
+        // can't hold both chains); the leaf goes first, then a's root
+        t.lookup(&a);
+        t.insert(&b, &cb);
+        assert_eq!(t.held_blocks(), 2);
+        assert_eq!(t.evictions(), 2);
+        // a was evicted tail-first and is gone; b survives intact
+        let (_, ma) = t.lookup(&a);
+        let (_, mb) = t.lookup(&b);
+        assert_eq!(ma, 0);
+        assert_eq!(mb, 8);
+    }
+
+    #[test]
+    fn eviction_respects_recency() {
+        let cfg = tiny();
+        // capacity 2: two single-block chains + one more forces the LRU out
+        let mut t = PrefixTree::new(4, 2);
+        let a: Vec<i32> = (1..=5).collect(); // 1 full block each
+        let b: Vec<i32> = (11..=15).collect();
+        let c: Vec<i32> = (21..=25).collect();
+        let cache = filled(&cfg, 4, 5);
+        t.insert(&a, &cache);
+        t.insert(&b, &cache);
+        t.lookup(&a); // a is now more recent than b
+        t.insert(&c, &cache);
+        assert_eq!(t.held_blocks(), 2);
+        let (_, ma) = t.lookup(&a);
+        let (_, mb) = t.lookup(&b);
+        let (_, mc) = t.lookup(&c);
+        assert_eq!((ma, mb, mc), (4, 0, 4)); // b was the LRU casualty
+    }
+
+    #[test]
+    fn shared_bytes_counts_held_blocks_once() {
+        let cfg = tiny();
+        let mut t = PrefixTree::new(4, 64);
+        assert_eq!(t.shared_bytes(), 0);
+        let a: Vec<i32> = (1..=9).collect();
+        let c = filled(&cfg, 4, 9);
+        t.insert(&a, &c);
+        let per_block =
+            kvpool::KvBlock::bytes_for(cfg.n_layers, 4, cfg.d_model);
+        assert_eq!(t.shared_bytes(), 2 * per_block);
+        // re-inserting the same prompt adds nothing
+        t.insert(&a, &c);
+        assert_eq!(t.shared_bytes(), 2 * per_block);
+    }
+}

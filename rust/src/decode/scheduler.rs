@@ -13,6 +13,15 @@
 //! rewound into the free pool, and the next pending request is admitted —
 //! the batch never drains to empty while work is queued.
 //!
+//! With [`DecodeConfig::prefix_cache_blocks`] > 0 admission first matches
+//! the prompt against the prefix-sharing cache (`super::prefix`): the
+//! matched block-aligned prefix is adopted into the slot's block table as
+//! shared read-only blocks and prefill starts past it, so repeated prompts
+//! skip most of their prefill — bit-identically, because the adopted
+//! blocks hold the exact f32 rows a cold prefill would recompute.
+//! Completed prefills are published back to the cache; the drafter's
+//! mirrored arenas never share blocks with it.
+//!
 //! The core loop is [`run_engine`]: a **long-lived** scheduler that pulls
 //! work from a [`RequestSource`] and reports progress through a sink
 //! callback ([`DecodeEvent`]: one event per generated token, one per
@@ -101,6 +110,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::kv::KvCache;
+use super::kvpool;
+use super::prefix::PrefixTree;
 use super::sampler::{argmax, Sampler};
 use crate::model::{ConfigMeta, ParamStore};
 use crate::runtime::native::LogitsMode;
@@ -159,6 +170,32 @@ pub fn synth_requests(cfg: &ConfigMeta, n: usize, prompt_len: usize,
         .collect()
 }
 
+/// Synthetic fleet traffic with a REPEATED prompt prefix: every request's
+/// prompt opens with the same `prefix_len` random tokens (a shared system
+/// prompt / few-shot header) followed by `suffix_len` per-request random
+/// tokens — the workload the prefix cache is built for.  The combined
+/// length is clamped to `seq_len` (suffix first, then prefix), and every
+/// prompt keeps at least one token.
+pub fn synth_requests_shared_prefix(cfg: &ConfigMeta, n: usize,
+                                    prefix_len: usize, suffix_len: usize,
+                                    max_new_tokens: usize, seed: u64)
+                                    -> Vec<DecodeRequest> {
+    let mut rng = Rng::new(seed);
+    let plen = (prefix_len + suffix_len).clamp(1, cfg.seq_len);
+    let shared = prefix_len.min(plen);
+    let prefix: Vec<i32> =
+        (0..shared).map(|_| rng.range(1, cfg.vocab) as i32).collect();
+    (0..n)
+        .map(|id| {
+            let mut prompt = prefix.clone();
+            while prompt.len() < plen {
+                prompt.push(rng.range(1, cfg.vocab) as i32);
+            }
+            DecodeRequest::new(id, prompt, max_new_tokens)
+        })
+        .collect()
+}
+
 /// Scheduler shape + per-request defaults for one engine run.
 #[derive(Clone, Debug)]
 pub struct DecodeConfig {
@@ -188,13 +225,26 @@ pub struct DecodeConfig {
     /// given a drafter, and only on greedy slots (see the module docs —
     /// generated tokens are bit-identical to plain decode for every K).
     pub speculate_k: usize,
+    /// positions per paged KV block (every slot's cache and the prefix
+    /// tree share this granularity); 0 selects
+    /// [`super::kvpool::DEFAULT_KV_BLOCK`].  Block size never changes
+    /// what a sequence computes — only how its K/V rows are stored.
+    pub kv_block: usize,
+    /// capacity of the prefix-sharing cache in KV blocks; 0 disables it.
+    /// When enabled, admission matches each prompt against previously
+    /// prefilled prompts and skips prefill for the matched block-aligned
+    /// prefix (the slot's block table starts with shared read-only
+    /// blocks), and completed prefills are inserted back under LRU
+    /// eviction.  Generated tokens are bit-identical either way — a hit
+    /// reuses the exact f32 rows a cold prefill would recompute.
+    pub prefix_cache_blocks: usize,
 }
 
 impl Default for DecodeConfig {
     fn default() -> Self {
         DecodeConfig { max_slots: 4, max_new_tokens: 32, temperature: 0.0,
                        seed: 1, arrival_steps: 0.0, prefill_chunk: 0,
-                       speculate_k: 0 }
+                       speculate_k: 0, kv_block: 0, prefix_cache_blocks: 0 }
     }
 }
 
@@ -224,6 +274,9 @@ pub struct CompletedRequest {
     /// less headroom than `max_new_tokens` (previously this truncation was
     /// silent)
     pub truncated: bool,
+    /// prompt tokens served from the prefix cache (prefill skipped for
+    /// them); 0 when prefix caching is disabled or the prompt missed
+    pub cached_prompt_tokens: usize,
 }
 
 /// Per-token / per-completion emissions from [`run_engine`], delivered on
@@ -256,6 +309,19 @@ pub enum DecodeEvent {
         proposed: usize,
         /// drafter tokens the target accepted
         accepted: usize,
+    },
+    /// a malformed request failed admission validation (empty prompt,
+    /// prompt longer than `seq_len`, zero-token budget).  Only THIS
+    /// request fails — the engine loop keeps serving every other slot
+    /// (previously one bad request tore down the whole run).  The offline
+    /// wrapper still rejects its workload up front with a hard `Err`, and
+    /// the network front-end screens at admission; this is the last line
+    /// of defense for sources that let one through.
+    Rejected {
+        /// the request's caller-assigned id
+        id: usize,
+        /// human-readable validation failure
+        reason: String,
     },
 }
 
@@ -384,6 +450,16 @@ pub struct EngineCounters {
     /// drafted tokens the target accepted — matched the target's own
     /// greedy sample at that position (rejected = drafted − accepted)
     pub accepted_draft_tokens: usize,
+    /// prompt tokens served from the prefix cache across all admissions
+    /// (prefill skipped for them; 0 when prefix caching is disabled)
+    pub prefix_hit_tokens: usize,
+    /// prompt tokens that missed the prefix cache and went through
+    /// prefill (with caching disabled every prompt token counts here)
+    pub prefix_miss_tokens: usize,
+    /// prefix-tree blocks evicted under the capacity bound
+    pub prefix_evictions: usize,
+    /// requests rejected at admission validation ([`DecodeEvent::Rejected`])
+    pub requests_rejected: usize,
 }
 
 impl EngineCounters {
@@ -508,6 +584,9 @@ struct Active {
     done: bool,
     /// the KV arena filled before `limit` tokens were generated
     truncated: bool,
+    /// prompt tokens adopted from the prefix cache at admission (prefill
+    /// started at this position instead of 0)
+    cached_prompt_tokens: usize,
 }
 
 impl Active {
@@ -581,10 +660,12 @@ fn step_engine_batch_modes(sess: &Session, params: &ParamStore,
 /// `None` runs plain decode regardless of `speculate_k`.
 ///
 /// Engine errors (a failing step kernel) abort the run; request validation
-/// belongs to the caller — the offline wrapper checks its whole workload up
-/// front and the network front-end screens at admission.  A request with
-/// `max_new_tokens == 0` is a validation error here too (callers reject it
-/// before it reaches a slot; the old behavior silently coerced it to 1).
+/// is layered — the offline wrapper checks its whole workload up front
+/// (callers get a hard `Err` before any compute) and the network front-end
+/// screens at admission, but a malformed request that still reaches the
+/// scheduler fails ALONE with a [`DecodeEvent::Rejected`] emission instead
+/// of tearing down the engine loop and every other in-flight generation
+/// with it.
 pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                   drafter: Option<&Engine>, cfg: &DecodeConfig,
                   source: &mut dyn RequestSource,
@@ -603,6 +684,14 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
     let mut arena_pool: Vec<KvCache> = Vec::new();
     // same, for the drafter arenas of speculating slots
     let mut draft_pool: Vec<KvCache> = Vec::new();
+    // the prefix-sharing cache: prompts of completed prefills keyed by
+    // block-sized token runs, holding shared refs into the paged pool.
+    // Drops (and releases every held block) when the run returns.
+    let mut tree = (cfg.prefix_cache_blocks > 0).then(|| {
+        let block = if cfg.kv_block == 0 { kvpool::DEFAULT_KV_BLOCK }
+                    else { cfg.kv_block };
+        PrefixTree::new(block, cfg.prefix_cache_blocks)
+    });
     let mut c = EngineCounters::default();
     let mut iter = 0usize;
     let mut drained = false;
@@ -612,74 +701,127 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
 
         // admit pending requests into free slots, in source order
         if !drained {
-            for slot in slots.iter_mut() {
+            'admit: for slot in slots.iter_mut() {
                 if slot.is_some() {
                     continue;
                 }
-                match source.poll(iter) {
-                    SourcePoll::Ready(req, arrival) => {
-                        anyhow::ensure!(!req.prompt.is_empty(),
-                                        "request {}: empty prompt", req.id);
-                        anyhow::ensure!(
-                            req.prompt.len() <= sess.cfg.seq_len,
-                            "request {}: prompt {} exceeds seq_len {}",
-                            req.id, req.prompt.len(), sess.cfg.seq_len);
-                        anyhow::ensure!(
-                            req.max_new_tokens >= 1,
-                            "request {}: max_new_tokens must be >= 1",
-                            req.id);
-                        let cache = match arena_pool.pop() {
-                            Some(mut cached) => {
-                                cached.reset();
-                                cached
+                // a rejected request re-polls for the same slot, so one
+                // bad request can never leave a slot idle while valid
+                // work queues behind it
+                loop {
+                    match source.poll(iter) {
+                        SourcePoll::Ready(req, arrival) => {
+                            let reason = if req.prompt.is_empty() {
+                                Some("empty prompt".to_string())
+                            } else if req.prompt.len() > sess.cfg.seq_len {
+                                Some(format!(
+                                    "prompt {} exceeds seq_len {}",
+                                    req.prompt.len(), sess.cfg.seq_len))
+                            } else if req.max_new_tokens < 1 {
+                                Some("max_new_tokens must be >= 1 \
+                                      (a zero-token generation is a caller \
+                                      error)".to_string())
+                            } else {
+                                None
+                            };
+                            if let Some(reason) = reason {
+                                c.requests_rejected += 1;
+                                sink(DecodeEvent::Rejected {
+                                    id: req.id,
+                                    reason,
+                                });
+                                continue;
                             }
-                            None => KvCache::new(&sess.cfg),
-                        };
-                        let sampler = Sampler::new(
-                            req.temperature.unwrap_or(cfg.temperature),
-                            req.seed
-                                .unwrap_or_else(|| sampler_seed(cfg.seed, req.id)),
-                        );
-                        // only greedy slots speculate: temperature sampling
-                        // consumes rng per draw, so verifying K positions
-                        // would change the random stream (module docs)
-                        let draft_cache = (spec_k > 0 && sampler.is_greedy())
-                            .then(|| match draft_pool.pop() {
+                            let mut cache = match arena_pool.pop() {
                                 Some(mut cached) => {
                                     cached.reset();
                                     cached
                                 }
-                                None => KvCache::new(&sess.cfg),
+                                None => KvCache::with_block(&sess.cfg,
+                                                            cfg.kv_block),
+                            };
+                            // prefix-cache lookup: adopt the matched
+                            // block-aligned prefix (shared read-only
+                            // blocks — prefill skips straight past them)
+                            // and charge the hit/miss split.  The lookup's
+                            // returned refs are released after adoption
+                            // clones its own; the tree still holds the
+                            // blocks either way.
+                            let mut cached_prompt_tokens = 0usize;
+                            if let Some(tree) = tree.as_mut() {
+                                let (blocks, matched) =
+                                    tree.lookup(&req.prompt);
+                                if matched > 0 {
+                                    cache.adopt_prefix(&blocks, matched);
+                                    cached_prompt_tokens = matched;
+                                }
+                                for b in blocks {
+                                    kvpool::release(b);
+                                }
+                            }
+                            c.prefix_hit_tokens += cached_prompt_tokens;
+                            c.prefix_miss_tokens +=
+                                req.prompt.len() - cached_prompt_tokens;
+                            if cached_prompt_tokens > 0 {
+                                crate::obs::counter_add(
+                                    "prefix.hit_tokens",
+                                    cached_prompt_tokens as u64);
+                            }
+                            crate::obs::counter_add(
+                                "prefix.miss_tokens",
+                                (req.prompt.len() - cached_prompt_tokens)
+                                    as u64);
+                            let sampler = Sampler::new(
+                                req.temperature.unwrap_or(cfg.temperature),
+                                req.seed.unwrap_or_else(
+                                    || sampler_seed(cfg.seed, req.id)),
+                            );
+                            // only greedy slots speculate: temperature
+                            // sampling consumes rng per draw, so verifying
+                            // K positions would change the random stream
+                            // (module docs)
+                            let draft_cache = (spec_k > 0
+                                               && sampler.is_greedy())
+                                .then(|| match draft_pool.pop() {
+                                    Some(mut cached) => {
+                                        cached.reset();
+                                        cached
+                                    }
+                                    None => KvCache::with_block(&sess.cfg,
+                                                                cfg.kv_block),
+                                });
+                            let now = Instant::now();
+                            let limit = req.max_new_tokens;
+                            // generation can never exceed the KV capacity,
+                            // so a huge client-supplied budget must not
+                            // drive a huge pre-allocation
+                            let cap = limit.min(sess.cfg.seq_len);
+                            *slot = Some(Active {
+                                cache,
+                                sampler,
+                                draft_cache,
+                                prefill_pos: cached_prompt_tokens,
+                                last_token: 0,
+                                tokens: Vec::with_capacity(cap),
+                                emitted: 0,
+                                limit,
+                                arrival,
+                                admitted: now,
+                                prefill_done_at: None,
+                                first_token_at: None,
+                                last_emit: arrival,
+                                done: false,
+                                truncated: false,
+                                cached_prompt_tokens,
+                                req,
                             });
-                        let now = Instant::now();
-                        let limit = req.max_new_tokens;
-                        // generation can never exceed the KV capacity, so a
-                        // huge client-supplied budget must not drive a huge
-                        // pre-allocation
-                        let cap = limit.min(sess.cfg.seq_len);
-                        *slot = Some(Active {
-                            cache,
-                            sampler,
-                            draft_cache,
-                            prefill_pos: 0,
-                            last_token: 0,
-                            tokens: Vec::with_capacity(cap),
-                            emitted: 0,
-                            limit,
-                            arrival,
-                            admitted: now,
-                            prefill_done_at: None,
-                            first_token_at: None,
-                            last_emit: arrival,
-                            done: false,
-                            truncated: false,
-                            req,
-                        });
-                    }
-                    SourcePoll::Pending => break,
-                    SourcePoll::Drained => {
-                        drained = true;
-                        break;
+                            break;
+                        }
+                        SourcePoll::Pending => break 'admit,
+                        SourcePoll::Drained => {
+                            drained = true;
+                            break 'admit;
+                        }
                     }
                 }
             }
@@ -739,9 +881,34 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                 if max_k > 0 {
                     let draft_engine = drafter.expect("spec_k > 0");
                     // catch-up + first draft: one ragged batched call
-                    // feeding each drafting slot the generated tokens its
-                    // drafter has not ingested yet (always at least the
-                    // pending one); the last row's argmax is draft 1
+                    // feeding each drafting slot whatever its drafter has
+                    // not ingested yet (always at least the pending
+                    // generated token); the last row's argmax is draft 1.
+                    // A prefix-cache hit shortens the TARGET's prefill but
+                    // the drafter's mirrored cache replays the full prompt
+                    // (drafter arenas never share blocks with the tree),
+                    // so the run may start with a prompt remainder — hence
+                    // the owned runs instead of `&tokens[seen..]` slices.
+                    let catchups: Vec<Vec<i32>> = act
+                        .iter()
+                        .enumerate()
+                        .map(|(di, a)| {
+                            if keff[di] == 0 {
+                                return Vec::new();
+                            }
+                            let draft = a.draft_cache.as_ref()
+                                .expect("keff > 0 implies a draft cache");
+                            let plen = a.req.prompt.len();
+                            if draft.len < plen {
+                                let mut run =
+                                    a.req.prompt[draft.len..].to_vec();
+                                run.extend_from_slice(&a.tokens);
+                                run
+                            } else {
+                                a.tokens[draft.len - plen..].to_vec()
+                            }
+                        })
+                        .collect();
                     let logits = {
                         let mut seqs: Vec<(&mut KvCache, &[i32])> =
                             Vec::new();
@@ -749,13 +916,10 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                             if keff[di] == 0 {
                                 continue;
                             }
-                            let Active { draft_cache, tokens, req, .. } =
-                                &mut **a;
-                            let draft = draft_cache
+                            let draft = a.draft_cache
                                 .as_mut()
                                 .expect("keff > 0 implies a draft cache");
-                            let seen = draft.len - req.prompt.len();
-                            seqs.push((draft, &tokens[seen..]));
+                            seqs.push((draft, &catchups[di][..]));
                         }
                         let modes = vec![LogitsMode::Last; seqs.len()];
                         step_engine_batch_modes(sess, params, draft_engine,
@@ -963,12 +1127,16 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                 (step_engine_batch(sess, params, engine, &mut seqs, &want)?,
                  takes)
             };
-            // mirror the same chunks into the drafter caches of the
+            // mirror prompt chunks into the drafter caches of the
             // speculating slots — one extra batched drafter call, no
-            // logits requested (so no vocab GEMM).  The drafter is warm
-            // the moment the prompt completes, while the FIRST generated
-            // token is still sampled from the target's prompt logits
-            // below, preserving bit-identity.
+            // logits requested (so no vocab GEMM).  The drafter walks the
+            // FULL prompt on its own cursor: a prefix-cache hit starts the
+            // target's prefill at the matched position, but drafter arenas
+            // never share blocks with the tree, so the drafter replays
+            // tokens 0.. itself (any remainder left when the target
+            // finishes first is picked up by the decode-phase catch-up
+            // run).  The FIRST generated token is still sampled from the
+            // target's prompt logits below, preserving bit-identity.
             if let Some(draft_engine) = drafter {
                 let mut seqs: Vec<(&mut KvCache, &[i32])> = Vec::new();
                 for s in slots.iter_mut() {
@@ -976,15 +1144,18 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                     if !a.prefilling() {
                         continue;
                     }
-                    let Active { draft_cache, req, prefill_pos, .. } = a;
+                    let Active { draft_cache, req, .. } = a;
                     let Some(draft) = draft_cache.as_mut() else { continue };
-                    let rem = req.prompt.len() - *prefill_pos;
+                    let at = draft.len;
+                    let rem = req.prompt.len() - at;
+                    if rem == 0 {
+                        continue;
+                    }
                     let take = match cfg.prefill_chunk {
                         0 => rem,
                         chunk => rem.min(chunk),
                     };
-                    seqs.push((draft,
-                               &req.prompt[*prefill_pos..*prefill_pos + take]));
+                    seqs.push((draft, &req.prompt[at..at + take]));
                 }
                 if !seqs.is_empty() {
                     let modes = vec![LogitsMode::None; seqs.len()];
@@ -1018,6 +1189,21 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                     // prompt fully ingested: the final chunk's logits are
                     // the last prompt position's — sample the first token
                     a.prefill_done_at = Some(Instant::now());
+                    // publish this prompt's full blocks to the prefix
+                    // cache (ref-bumps blocks already present, shares the
+                    // fresh ones; never the drafter's mirror).  Future
+                    // writes into a now-shared block copy-on-write — the
+                    // slot keeps decoding unperturbed.
+                    if let Some(tree) = tree.as_mut() {
+                        tree.insert(&a.req.prompt, &a.cache);
+                        let ev = tree.evictions() as usize;
+                        if ev > c.prefix_evictions {
+                            crate::obs::counter_add(
+                                "prefix.evictions",
+                                (ev - c.prefix_evictions) as u64);
+                            c.prefix_evictions = ev;
+                        }
+                    }
                     let l = logits[k].as_ref()
                         .expect("final-chunk logits requested");
                     let tok = a.sampler.sample(&l.data) as i32;
@@ -1094,6 +1280,7 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                 prefill_ms,
                 decode_ms,
                 truncated: a.truncated,
+                cached_prompt_tokens: a.cached_prompt_tokens,
             }));
             if let Some(d) = a.draft_cache.take() {
                 draft_pool.push(d);
@@ -1115,6 +1302,22 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
         crate::obs::gauge_set("sched.draft_pool", draft_pool.len() as f64);
         crate::obs::gauge_set("sched.kv_tokens", kv_tokens as f64);
         crate::obs::gauge_set("sched.kv_capacity", kv_capacity as f64);
+        let pool = kvpool::stats();
+        crate::obs::gauge_set("kvpool.blocks_used", pool.live_blocks as f64);
+        crate::obs::gauge_set("kvpool.blocks_free", pool.free_blocks as f64);
+        if let Some(tree) = tree.as_ref() {
+            crate::obs::gauge_set("prefix.chains", tree.chains() as f64);
+            crate::obs::gauge_set("prefix.blocks",
+                                  tree.held_blocks() as f64);
+            crate::obs::gauge_set("prefix.shared_bytes",
+                                  tree.shared_bytes() as f64);
+            crate::obs::gauge_set("prefix.hit_tokens",
+                                  c.prefix_hit_tokens as f64);
+            crate::obs::gauge_set("prefix.miss_tokens",
+                                  c.prefix_miss_tokens as f64);
+            crate::obs::gauge_set("prefix.evictions",
+                                  c.prefix_evictions as f64);
+        }
 
         iter += 1;
     }
@@ -1230,6 +1433,26 @@ mod tests {
         assert_eq!(reqs[0].prompt.len(), cfg.seq_len);
         let reqs = synth_requests(&cfg, 1, 0, 4, 2);
         assert_eq!(reqs[0].prompt.len(), 1);
+    }
+
+    #[test]
+    fn shared_prefix_requests_share_exactly_the_prefix() {
+        let cfg = crate::model::Manifest::builtin().config("tiny").clone();
+        let reqs = synth_requests_shared_prefix(&cfg, 4, 8, 5, 2, 9);
+        assert_eq!(reqs.len(), 4);
+        for r in &reqs {
+            assert_eq!(r.prompt.len(), 13);
+            assert_eq!(r.prompt[..8], reqs[0].prompt[..8]);
+        }
+        // per-request suffixes are independent draws
+        assert_ne!(reqs[0].prompt[8..], reqs[1].prompt[8..]);
+        // combined length clamps to seq_len; degenerate lengths keep one
+        // token (the request stays valid)
+        let long =
+            synth_requests_shared_prefix(&cfg, 1, 10 * cfg.seq_len, 10, 2, 9);
+        assert_eq!(long[0].prompt.len(), cfg.seq_len);
+        let tiny = synth_requests_shared_prefix(&cfg, 1, 0, 0, 2, 9);
+        assert_eq!(tiny[0].prompt.len(), 1);
     }
 
     #[test]

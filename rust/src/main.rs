@@ -22,7 +22,12 @@
 //!                            `--draft-ratio`, default 0.4) proposes up to
 //!                            K tokens per slot which the serving engine
 //!                            verifies in one batched call; greedy output
-//!                            is bit-identical for every K
+//!                            is bit-identical for every K;
+//!                            `--prefix-cache BLOCKS` enables the
+//!                            prefix-sharing KV cache (repeated prompts
+//!                            skip prefill for their cached block-aligned
+//!                            prefix, bit-identically) and `--kv-block N`
+//!                            sets the paged-block granularity
 //!   client                   drive a running server over TCP
 //!                            (`--connect <addr>`, `--requests`,
 //!                            `--prompt-len`, `--max-new-tokens`,
@@ -173,6 +178,9 @@ fn serve_listen(rt: &Runtime, args: &Args, cfg: &ExperimentConfig,
             arrival_steps: 0.0,
             prefill_chunk: args.usize_or("prefill-chunk", cfg.prefill_chunk),
             speculate_k: spec_k,
+            kv_block: args.usize_or("kv-block", cfg.kv_block),
+            prefix_cache_blocks: args.usize_or("prefix-cache",
+                                               cfg.prefix_cache_blocks),
         },
     };
     let port_file = args.get("port-file").map(|s| s.to_string());
@@ -252,11 +260,20 @@ fn client_session(args: &Args, rt: &Runtime) -> Result<()> {
                 println!(
                     "request {i}: {} tokens streamed, queue {:.1} ms, \
                      prefill {:.1} ms, decode {:.1} ms, ttft {:.1} ms, \
-                     e2e {:.1} ms{}",
+                     e2e {:.1} ms{}{}",
                     r.tokens.len(), r.queue_ms, r.prefill_ms, r.decode_ms,
                     r.ttft_ms, r.latency_ms,
+                    if r.cached_prompt_tokens > 0 {
+                        format!(" ({} prompt tokens from prefix cache)",
+                                r.cached_prompt_tokens)
+                    } else {
+                        String::new()
+                    },
                     if r.truncated { " (truncated at KV capacity)" }
                     else { "" });
+                // the generated ids themselves, so scripted sessions (ci.sh)
+                // can diff two runs for bit-identity from the outside
+                println!("request {i} tokens: {:?}", r.tokens);
             }
             GenerateOutcome::Rejected { code, message } => {
                 anyhow::bail!("request {i} rejected: {code} ({message})");
@@ -264,8 +281,12 @@ fn client_session(args: &Args, rt: &Runtime) -> Result<()> {
         }
     }
     let snap = c.metrics()?;
+    let cached = snap.get("counters")
+        .map(|c| c.usize_or("cached_prompt_tokens", 0))
+        .unwrap_or(0);
     println!("server metrics: {} tok/s over uptime, queue depth {}, \
-              uptime {:.1}s",
+              uptime {:.1}s, {cached} prompt tokens served from prefix \
+              cache",
              f2(snap.f64_or("uptime_tok_per_sec", 0.0)),
              snap.usize_or("queue_depth", 0),
              snap.f64_or("uptime_secs", 0.0));
@@ -430,6 +451,9 @@ fn main() -> Result<()> {
                                                  cfg.prefill_chunk),
                     speculate_k: args.usize_or("speculate-k",
                                                cfg.speculate_k),
+                    kv_block: args.usize_or("kv-block", cfg.kv_block),
+                    prefix_cache_blocks: args.usize_or(
+                        "prefix-cache", cfg.prefix_cache_blocks),
                 };
                 let prompt_len = args.usize_or("prompt-len",
                                                p.session.cfg.seq_len / 4);

@@ -35,7 +35,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{ensure, Result};
 
-use crate::decode::kv::KvCache;
+use crate::decode::kv::{KvCache, KvRows};
 use crate::exec;
 use crate::linalg::kernels;
 use crate::linalg::matmul::{dot_f32, matmul, matmul_bt, matmul_bt_flat,
@@ -171,8 +171,9 @@ pub fn decode_step(cfg: &ConfigMeta, params: &ParamStore,
     let eps = cfg.norm_eps;
     ensure!(token >= 0 && (token as usize) < vocab,
             "token {token} out of range [0, {vocab})");
-    ensure!(cache.k.len() == cfg.n_layers && cache.d == d,
+    ensure!(cache.n_layers == cfg.n_layers && cache.d == d,
             "kv cache shaped for a different config");
+    cache.ensure_len(pos + 1);
 
     let embed = params.get("embed");
     let mut x = Mat::zeros(1, d);
@@ -210,9 +211,11 @@ pub fn decode_step(cfg: &ConfigMeta, params: &ParamStore,
             rope_rotate_row(k.row_mut(0), pos * half, h, dh, &cache.cos,
                             &cache.sin, false);
         }
-        cache.k[li].set_row(pos, k.row(0));
-        cache.v[li].set_row(pos, v.row(0));
-        let attn = attention_step(&q, &cache.k[li], &cache.v[li], pos, h, dh);
+        cache.set_k_row(li, pos, k.row(0));
+        cache.set_v_row(li, pos, v.row(0));
+        let mut attn = Mat::zeros(1, d);
+        attention_step_row(q.row(0), &cache.layer_view(li), pos, h, dh,
+                           attn.row_mut(0));
         let attn_o = linear(&ln.wo, &attn);
         x.add_assign(&attn_o);
 
@@ -348,17 +351,20 @@ pub fn decode_batch_modes(cfg: &ConfigMeta, params: &ParamStore,
     // row layout: sequence `s` owns rows `base[s] .. base[s] + len_s`
     let mut base = Vec::with_capacity(seqs.len());
     let mut total = 0usize;
-    for (cache, toks) in seqs.iter() {
+    for (cache, toks) in seqs.iter_mut() {
         ensure!(!toks.is_empty(), "decode_batch: empty token run");
         ensure!(cache.len + toks.len() <= cache.max_len,
                 "kv cache full ({} + {} > {} positions)", cache.len,
                 toks.len(), cache.max_len);
-        ensure!(cache.k.len() == cfg.n_layers && cache.d == d,
+        ensure!(cache.n_layers == cfg.n_layers && cache.d == d,
                 "kv cache shaped for a different config");
         for &t in toks.iter() {
             ensure!(t >= 0 && (t as usize) < vocab,
                     "token {t} out of range [0, {vocab})");
         }
+        // back the whole run with blocks up front so the per-layer loop
+        // never reallocates mid-flight
+        cache.ensure_len(cache.len + toks.len());
         base.push(total);
         total += toks.len();
     }
@@ -415,8 +421,8 @@ pub fn decode_batch_modes(cfg: &ConfigMeta, params: &ParamStore,
                     rope_rotate_row(k.row_mut(r), pos * half, h, dh,
                                     &cache.cos, &cache.sin, false);
                 }
-                cache.k[li].set_row(pos, k.row(r));
-                cache.v[li].set_row(pos, v.row(r));
+                cache.set_k_row(li, pos, k.row(r));
+                cache.set_v_row(li, pos, v.row(r));
             }
         }
         // attention rows are independent (each reads only its own cache and
@@ -434,15 +440,16 @@ pub fn decode_batch_modes(cfg: &ConfigMeta, params: &ParamStore,
                     row_pos.push(cache.len + j);
                 }
             }
-            let kv: Vec<(&Mat, &Mat)> =
-                seqs.iter().map(|(c, _)| (&c.k[li], &c.v[li])).collect();
+            // per-sequence layer views over the (now fully written) block
+            // tables: workers read shared `Arc<KvBlock>` storage only
+            let kv: Vec<_> =
+                seqs.iter().map(|(c, _)| c.layer_view(li)).collect();
             let band = total.div_ceil(exec::threads().min(total));
             exec::par_chunks_mut(&mut attn.data, band * d, |ci, chunk| {
                 for (i, out) in chunk.chunks_mut(d).enumerate() {
                     let r = ci * band + i;
-                    let (kc, vc) = kv[row_seq[r]];
-                    attention_step_row(q.row(r), kc, vc, row_pos[r], h, dh,
-                                       out);
+                    attention_step_row(q.row(r), &kv[row_seq[r]], row_pos[r],
+                                       h, dh, out);
                 }
             });
         }
@@ -1151,25 +1158,31 @@ fn attention_fwd(q: &Mat, k: &Mat, v: &Mat, b: usize, t_len: usize, h: usize,
     (attn, probs)
 }
 
-/// Causal attention for ONE query position `t` against the cached K/V rows
-/// `0..=t` of a single sequence.  The score/softmax/merge loops mirror
-/// [`attention_fwd`]'s per-position body operation for operation (f32 score
-/// + running max, f64 exp-sum, f32 normalizer, value merge in ascending-u
-/// order), so the output row bit-matches the full forward's row `t`.
+/// Causal attention for ONE query position `t` against contiguous K/V
+/// matrices — the unit-test harness for [`attention_step_row`] (the serving
+/// paths read through paged block tables instead; see `decode::kv`).  The
+/// score/softmax/merge loops mirror [`attention_fwd`]'s per-position body
+/// operation for operation (f32 score + running max, f64 exp-sum, f32
+/// normalizer, value merge in ascending-u order), so the output row
+/// bit-matches the full forward's row `t`.
+#[cfg(test)]
 fn attention_step(q: &Mat, kc: &Mat, vc: &Mat, t: usize, h: usize, dh: usize)
                   -> Mat {
     let mut attn = Mat::zeros(1, h * dh);
-    attention_step_row(q.row(0), kc, vc, t, h, dh, attn.row_mut(0));
+    attention_step_row(q.row(0), &crate::decode::kv::MatKv { k: kc, v: vc },
+                       t, h, dh, attn.row_mut(0));
     attn
 }
 
-/// The per-row body of [`attention_step`]: query row `qr` at position `t`
-/// against cached K/V, accumulated into the zeroed output row `out`.
-/// Shared by the single-sequence step and the batched [`decode_batch`]
-/// kernel, so every path produces identical bits per position.
-fn attention_step_row(qr: &[f32], kc: &Mat, vc: &Mat, t: usize, h: usize,
-                      dh: usize, out: &mut [f32]) {
-    let d = h * dh;
+/// Causal attention for one query row `qr` at position `t` against cached
+/// K/V rows `0..=t`, accumulated into the zeroed output row `out`.
+/// Generic over [`KvRows`], so the paged block tables (`decode::kv`) and
+/// plain contiguous matrices feed the identical score/softmax/merge loops
+/// — storage layout cannot change a bit.  Shared by the single-sequence
+/// step and the batched [`decode_batch`] kernel, so every path produces
+/// identical bits per position.
+fn attention_step_row<S: KvRows>(qr: &[f32], kv: &S, t: usize, h: usize,
+                                 dh: usize, out: &mut [f32]) {
     let scale = 1.0 / (dh as f32).sqrt();
     let mut prow = vec![0.0f32; t + 1];
     for hi in 0..h {
@@ -1177,7 +1190,7 @@ fn attention_step_row(qr: &[f32], kc: &Mat, vc: &Mat, t: usize, h: usize,
         let qrow = &qr[off..off + dh];
         let mut maxv = f32::NEG_INFINITY;
         for u in 0..=t {
-            let krow = &kc.data[u * d + off..u * d + off + dh];
+            let krow = &kv.k_row(u)[off..off + dh];
             let s = dot_f32(qrow, krow) * scale;
             prow[u] = s;
             maxv = maxv.max(s);
@@ -1194,7 +1207,7 @@ fn attention_step_row(qr: &[f32], kc: &Mat, vc: &Mat, t: usize, h: usize,
         }
         let orow = &mut out[off..off + dh];
         for (u, &pu) in prow.iter().enumerate().take(t + 1) {
-            let vrow = &vc.data[u * d + off..u * d + off + dh];
+            let vrow = &kv.v_row(u)[off..off + dh];
             kernels::axpy_f32(orow, pu, vrow);
         }
     }

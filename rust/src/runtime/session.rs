@@ -272,6 +272,18 @@ impl<'rt> Session<'rt> {
         KvCache::new(&self.cfg)
     }
 
+    /// [`Session::new_kv_cache`] with an explicit paged-block size (0
+    /// selects the default).  The scheduler sizes every slot's cache to
+    /// its `--kv-block` knob so block tables can share prefix-tree blocks.
+    ///
+    /// Note on the first-position ABI gate: a cache that adopts a cached
+    /// prefix starts past position 0, so the per-sequence ABI validation
+    /// ran when the *prefix* was originally prefilled — same session, same
+    /// artifact, so the check's outcome is unchanged.
+    pub fn new_kv_cache_with_block(&self, block: usize) -> KvCache {
+        KvCache::with_block(&self.cfg, block)
+    }
+
     /// One dense KV-cached decode step: `token` at position `cache.len` →
     /// next-token logits (shape `[V]`).  Uses the b1 artifact when the config
     /// ships one (decode is single-sequence per slot), else the batch

@@ -60,6 +60,9 @@ pub struct GenerationResult {
     /// generation stopped early at the KV-capacity wall (fewer tokens than
     /// the requested budget)
     pub truncated: bool,
+    /// prompt tokens served from the server's prefix cache (prefill
+    /// skipped for them; 0 with caching off or a cold cache)
+    pub cached_prompt_tokens: usize,
 }
 
 fn bad_data(msg: String) -> io::Error {
@@ -124,7 +127,8 @@ impl Client {
                     streamed.push(token);
                 }
                 Event::Done { id, tokens, prompt_len, queue_ms, prefill_ms,
-                              decode_ms, ttft_ms, latency_ms, truncated } => {
+                              decode_ms, ttft_ms, latency_ms, truncated,
+                              cached_prompt_tokens } => {
                     if id != g.id {
                         return Err(bad_data(format!(
                             "done for unexpected id {id} (want {})", g.id)));
@@ -145,6 +149,7 @@ impl Client {
                         ttft_ms,
                         latency_ms,
                         truncated,
+                        cached_prompt_tokens,
                     }));
                 }
                 Event::Error { id, code, message } => {

@@ -481,9 +481,34 @@ pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
                     shared.metrics.inc("draft_accepted_tokens",
                                        accepted as u64);
                 }
+                DecodeEvent::Rejected { id, reason } => {
+                    // scheduler-level validation failure: only this request
+                    // fails (the engine loop keeps serving).  The wire
+                    // reader screens at admission, so this arm fires only
+                    // for requests that slipped past it — still route a
+                    // structured error and free the connection's in-flight
+                    // slot.
+                    shared.metrics.inc("requests_rejected", 1);
+                    let route = shared
+                        .routes
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .remove(&id);
+                    if let Some(r) = route {
+                        r.conn.send(&Event::Error {
+                            id: Some(r.client_id),
+                            code: ERR_BAD_REQUEST.into(),
+                            message: reason,
+                        });
+                        r.conn.inflight.fetch_sub(1, Ordering::SeqCst);
+                        r.conn.maybe_close();
+                    }
+                }
                 DecodeEvent::Done(c) => {
                     shared.metrics.inc("requests_completed", 1);
                     shared.metrics.inc("prefill_tokens", c.prompt_len as u64);
+                    shared.metrics.inc("cached_prompt_tokens",
+                                       c.cached_prompt_tokens as u64);
                     shared.metrics.record_ms("e2e_ms", c.latency_ms);
                     shared.metrics.record_ms("ttft_ms", c.ttft_ms);
                     shared.metrics.record_ms("queue_ms", c.queue_ms);
@@ -505,6 +530,7 @@ pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
                             ttft_ms: c.ttft_ms,
                             latency_ms: c.latency_ms,
                             truncated: c.truncated,
+                            cached_prompt_tokens: c.cached_prompt_tokens,
                         });
                         r.conn.inflight.fetch_sub(1, Ordering::SeqCst);
                         r.conn.maybe_close();

@@ -161,6 +161,10 @@ pub enum Event {
         /// generation stopped early because the KV arena filled (the
         /// requested budget was not reached)
         truncated: bool,
+        /// prompt tokens served from the server's prefix cache (prefill
+        /// skipped for them; 0 when caching is off, the prompt missed, or
+        /// the peer is an older server that does not emit the field)
+        cached_prompt_tokens: usize,
     },
     /// structured rejection or protocol error; `id` present when the error
     /// is attributable to one request
@@ -192,7 +196,8 @@ pub fn event_line(e: &Event) -> String {
         ])
         .to_string(),
         Event::Done { id, tokens, prompt_len, queue_ms, prefill_ms,
-                      decode_ms, ttft_ms, latency_ms, truncated } => {
+                      decode_ms, ttft_ms, latency_ms, truncated,
+                      cached_prompt_tokens } => {
             Json::obj(vec![
                 ("type", Json::str("done")),
                 ("id", Json::num(*id as f64)),
@@ -205,6 +210,8 @@ pub fn event_line(e: &Event) -> String {
                 ("ttft_ms", Json::num(*ttft_ms)),
                 ("latency_ms", Json::num(*latency_ms)),
                 ("truncated", Json::Bool(*truncated)),
+                ("cached_prompt_tokens",
+                 Json::num(*cached_prompt_tokens as f64)),
             ])
             .to_string()
         }
@@ -261,6 +268,8 @@ pub fn parse_event(line: &str) -> Result<Event, String> {
                 latency_ms: j.f64_or("latency_ms", 0.0),
                 // older peers never emit the field: absent means complete
                 truncated: j.bool_or("truncated", false),
+                // absent from older servers → 0 (no cached prefix)
+                cached_prompt_tokens: j.usize_or("cached_prompt_tokens", 0),
             })
         }
         Some("error") => Ok(Event::Error {
@@ -335,11 +344,15 @@ mod tests {
             Event::Done { id: 3, tokens: vec![4, 5, 6], prompt_len: 8,
                           queue_ms: 1.5, prefill_ms: 4.0, decode_ms: 25.0,
                           ttft_ms: 10.25, latency_ms: 30.5,
-                          truncated: false },
+                          truncated: false, cached_prompt_tokens: 0 },
             Event::Done { id: 4, tokens: vec![7], prompt_len: 2,
                           queue_ms: 0.0, prefill_ms: 0.5, decode_ms: 1.5,
                           ttft_ms: 1.0, latency_ms: 2.0,
-                          truncated: true },
+                          truncated: true, cached_prompt_tokens: 0 },
+            Event::Done { id: 5, tokens: vec![8, 9], prompt_len: 160,
+                          queue_ms: 0.0, prefill_ms: 0.25, decode_ms: 3.0,
+                          ttft_ms: 0.5, latency_ms: 3.5,
+                          truncated: false, cached_prompt_tokens: 128 },
             Event::Error { id: Some(9), code: ERR_OVERLOADED.into(),
                            message: "queue full".into() },
             Event::Error { id: None, code: ERR_BAD_REQUEST.into(),
@@ -356,15 +369,18 @@ mod tests {
     #[test]
     fn done_without_truncated_field_parses_as_complete() {
         // lines from an older server omit the newer fields entirely:
-        // `truncated` parses as false, the phase breakdown as 0.0
+        // `truncated` parses as false, the phase breakdown as 0.0, and
+        // `cached_prompt_tokens` as 0 (no cached prefix)
         let line = "{\"type\":\"done\",\"id\":1,\"tokens\":[2],\
                     \"prompt_len\":1,\"queue_ms\":0,\"ttft_ms\":0,\
                     \"latency_ms\":0}";
         match parse_event(line).unwrap() {
-            Event::Done { truncated, prefill_ms, decode_ms, .. } => {
+            Event::Done { truncated, prefill_ms, decode_ms,
+                          cached_prompt_tokens, .. } => {
                 assert!(!truncated);
                 assert_eq!(prefill_ms, 0.0);
                 assert_eq!(decode_ms, 0.0);
+                assert_eq!(cached_prompt_tokens, 0);
             }
             other => panic!("wrong variant: {other:?}"),
         }

@@ -137,7 +137,6 @@ fn chunked_prefill_bitmatches_token_at_a_time() {
     let params = init_params(&sess.cfg, &mut rng);
     let tag = "60";
     let factors = synthetic_factors(&sess, tag, &mut rng);
-    let d = sess.cfg.d_model;
 
     // prompt length indivisible by 3 so the last chunk is ragged
     let plen = 11usize;
@@ -209,19 +208,22 @@ fn chunked_prefill_bitmatches_token_at_a_time() {
                        ref_lr_logits.as_ref().unwrap().data,
                        "lowrank chunk {chunk} logits @ {threads} threads");
             // and every K/V row written along the way is identical too
+            // (read position-by-position through the paged block tables)
             for li in 0..sess.cfg.n_layers {
-                assert_eq!(&dense_cache.k[li].data[..plen * d],
-                           &ref_dense.k[li].data[..plen * d],
-                           "dense K layer {li} chunk {chunk}");
-                assert_eq!(&dense_cache.v[li].data[..plen * d],
-                           &ref_dense.v[li].data[..plen * d],
-                           "dense V layer {li} chunk {chunk}");
-                assert_eq!(&lr_cache.k[li].data[..plen * d],
-                           &ref_lr.k[li].data[..plen * d],
-                           "lowrank K layer {li} chunk {chunk}");
-                assert_eq!(&lr_cache.v[li].data[..plen * d],
-                           &ref_lr.v[li].data[..plen * d],
-                           "lowrank V layer {li} chunk {chunk}");
+                for pos in 0..plen {
+                    assert_eq!(dense_cache.k_row(li, pos),
+                               ref_dense.k_row(li, pos),
+                               "dense K layer {li} pos {pos} chunk {chunk}");
+                    assert_eq!(dense_cache.v_row(li, pos),
+                               ref_dense.v_row(li, pos),
+                               "dense V layer {li} pos {pos} chunk {chunk}");
+                    assert_eq!(lr_cache.k_row(li, pos),
+                               ref_lr.k_row(li, pos),
+                               "lowrank K layer {li} pos {pos} chunk {chunk}");
+                    assert_eq!(lr_cache.v_row(li, pos),
+                               ref_lr.v_row(li, pos),
+                               "lowrank V layer {li} pos {pos} chunk {chunk}");
+                }
             }
         }
     }
@@ -301,7 +303,7 @@ fn continuous_batching_serves_every_request_exactly_once() {
     // chunked-prefill path (5 + 5 + 2) under continuous batching
     let cfg = DecodeConfig { max_slots: 3, max_new_tokens: 4, temperature: 0.0,
                              seed: 5, arrival_steps: 0.0, prefill_chunk: 5,
-                             speculate_k: 0 };
+                             speculate_k: 0, ..DecodeConfig::default() };
     let reqs = synth_requests(&sess.cfg, 9, 12, 4, 0xFEED);
     let (stats, done) = run_decode(&sess, &params, &Engine::Dense, &reqs, &cfg)
         .unwrap();
@@ -335,7 +337,8 @@ fn generation_is_reproducible_and_slot_count_invariant() {
     let run = |slots: usize, temperature: f32, prefill_chunk: usize| {
         let cfg = DecodeConfig { max_slots: slots, max_new_tokens: 6,
                                  temperature, seed: 11, arrival_steps: 0.0,
-                                 prefill_chunk, speculate_k: 0 };
+                                 prefill_chunk, speculate_k: 0,
+                                 ..DecodeConfig::default() };
         let (_, done) = run_decode(&sess, &params, &Engine::Dense, &reqs, &cfg)
             .unwrap();
         done.into_iter().map(|c| c.tokens).collect::<Vec<_>>()
@@ -367,7 +370,8 @@ fn generation_respects_kv_capacity() {
     let reqs = vec![DecodeRequest::new(0, vec![1i32; seq - 2], 10)];
     let cfg = DecodeConfig { max_slots: 1, max_new_tokens: 10,
                              temperature: 0.0, seed: 1, arrival_steps: 0.0,
-                             prefill_chunk: 0, speculate_k: 0 };
+                             prefill_chunk: 0, speculate_k: 0,
+                             ..DecodeConfig::default() };
     let (stats, done) = run_decode(&sess, &params, &Engine::Dense, &reqs, &cfg)
         .unwrap();
     // prefill leaves 2 free positions; each decode step consumes one, and
@@ -513,6 +517,7 @@ fn speculative_decode_bitmatches_plain_greedy() {
     let cfg_for = |k: usize| DecodeConfig {
         max_slots: 3, max_new_tokens: 6, temperature: 0.0, seed: 11,
         arrival_steps: 0.0, prefill_chunk: 4, speculate_k: k,
+        ..DecodeConfig::default()
     };
 
     for threads in [1usize, 4] {
@@ -559,6 +564,7 @@ fn speculative_decode_respects_kv_capacity() {
     let cfg_for = |k: usize| DecodeConfig {
         max_slots: 1, max_new_tokens: 10, temperature: 0.0, seed: 1,
         arrival_steps: 0.0, prefill_chunk: 0, speculate_k: k,
+        ..DecodeConfig::default()
     };
 
     let near = vec![DecodeRequest::new(0, vec![1i32; seq - 2], 10)];

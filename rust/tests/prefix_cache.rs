@@ -1,0 +1,255 @@
+//! Bit-identity gate for the paged KV pool + prefix-sharing cache.
+//!
+//! Prefix caching is a pure serving optimization: a prompt that hits the
+//! prefix tree adopts shared read-only blocks and skips prefill for the
+//! matched tokens, but the attention kernels read the exact same f32
+//! values they would have recomputed — so generated tokens must be
+//! BIT-IDENTICAL with the cache on or off.  This binary proves that:
+//!
+//! * cold-vs-warm: the same shared-prefix workload served with
+//!   `prefix_cache_blocks` = 0 and > 0 generates identical tokens, swept
+//!   over threads {1, 4} × prefill chunks {1, 3, full} × speculative
+//!   K {0, 2} (the drafter's mirrored cache never shares blocks with the
+//!   tree, so speculation must survive a shortened target prefill);
+//! * warm requests report exactly the block-aligned shared prefix as
+//!   `cached_prompt_tokens`, the cold first request reports 0;
+//! * divergence inside a block (a shared prefix that is NOT block-aligned)
+//!   matches only up to the last full shared block and still bit-matches;
+//! * eviction-then-refill: a tree capped below the working set evicts
+//!   LRU-first, a re-sent evicted prompt misses cleanly and regenerates
+//!   identical tokens;
+//! * the admission-validation regression from the monolithic-arena days: a
+//!   malformed request reaching [`run_engine`] fails ALONE with a
+//!   `Rejected` emission instead of tearing down the engine loop (the
+//!   offline wrapper still hard-errors up front).
+//!
+//! `exec::set_threads` is process-global, so the thread sweep lives in one
+//! test function (same pattern as `trace_equiv.rs`).  ci.sh re-runs this
+//! gate under `PALLAS_NO_SIMD=1`, so bit-identity is proven on both the
+//! SIMD and the portable kernel backends.
+
+use std::collections::BTreeMap;
+
+use zs_svd::decode::{run_decode, run_decode_speculative, run_engine,
+                     synth_requests, synth_requests_shared_prefix,
+                     CompletedRequest, DecodeConfig, DecodeEvent,
+                     WorkloadSource};
+use zs_svd::exec;
+use zs_svd::model::init::init_params;
+use zs_svd::model::ParamStore;
+use zs_svd::runtime::session::Session;
+use zs_svd::runtime::Runtime;
+use zs_svd::serve::Engine;
+use zs_svd::tensor::Mat;
+use zs_svd::util::rng::Rng;
+
+/// Uniform-rank random factors matching the artifact ranks of `tag` — the
+/// same drafter-engine helper `decode_parity.rs` and `trace_equiv.rs` use.
+fn synthetic_factors(sess: &Session, tag: &str, rng: &mut Rng)
+                     -> BTreeMap<String, (Mat, Mat)> {
+    let lm = sess.cfg.lowrank.get(tag).expect("artifact tag");
+    sess.cfg
+        .targets
+        .iter()
+        .map(|t| {
+            let (m, n) = t.shape;
+            let k = lm.ranks[&t.name];
+            (t.name.clone(),
+             (Mat::randn(rng, m, k, 0.05), Mat::randn(rng, k, n, 0.05)))
+        })
+        .collect()
+}
+
+fn setup() -> (Session, ParamStore, Rng) {
+    let rt = Runtime::load_default().unwrap();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(0xB10C);
+    let params = init_params(&sess.cfg, &mut rng);
+    (sess, params, rng)
+}
+
+/// Greedy single-slot config: serial admission makes request 0 the cold
+/// fill and every later request a guaranteed warm lookup.
+fn cfg_for(chunk: usize, k: usize, blocks: usize) -> DecodeConfig {
+    DecodeConfig {
+        max_slots: 1,
+        max_new_tokens: 4,
+        temperature: 0.0,
+        seed: 9,
+        arrival_steps: 0.0,
+        prefill_chunk: chunk,
+        speculate_k: k,
+        kv_block: 4,
+        prefix_cache_blocks: blocks,
+    }
+}
+
+fn tokens_of(done: &[CompletedRequest]) -> Vec<Vec<i32>> {
+    done.iter().map(|c| c.tokens.clone()).collect()
+}
+
+#[test]
+fn prefix_hits_bit_match_misses_across_threads_chunks_and_speculation() {
+    let (sess, params, mut rng) = setup();
+    let drafter = Engine::Lowrank {
+        tag: "60".into(),
+        factors: synthetic_factors(&sess, "60", &mut rng),
+    };
+    // 5 prompts sharing a 12-token prefix (3 full blocks at kv_block = 4)
+    // with 5-token private suffixes: every warm lookup matches exactly the
+    // aligned shared prefix (the 4th full block holds suffix tokens and
+    // diverges per request)
+    let reqs = synth_requests_shared_prefix(&sess.cfg, 5, 12, 5, 4, 0x5EED);
+
+    for threads in [1usize, 4] {
+        exec::set_threads(threads);
+        for chunk in [1usize, 3, 0] {
+            for k in [0usize, 2] {
+                let run = |blocks: usize| {
+                    let cfg = cfg_for(chunk, k, blocks);
+                    let r = if k == 0 {
+                        run_decode(&sess, &params, &Engine::Dense, &reqs,
+                                   &cfg)
+                    } else {
+                        run_decode_speculative(&sess, &params,
+                                               &Engine::Dense, &drafter,
+                                               &reqs, &cfg)
+                    };
+                    r.expect("decode run").1
+                };
+                let off = run(0);
+                let on = run(64);
+                assert_eq!(
+                    tokens_of(&off), tokens_of(&on),
+                    "prefix cache changed tokens @ threads {threads} \
+                     chunk {chunk} K {k}");
+                assert!(off.iter().all(|c| c.cached_prompt_tokens == 0),
+                        "cache off must never report cached tokens");
+                // serial single-slot admission: request 0 fills the tree
+                // cold, every later request hits the full aligned prefix
+                assert_eq!(on[0].cached_prompt_tokens, 0,
+                           "first request cannot hit an empty tree");
+                for c in &on[1..] {
+                    assert_eq!(
+                        c.cached_prompt_tokens, 12,
+                        "warm request {} must hit the 12-token aligned \
+                         shared prefix @ threads {threads} chunk {chunk} \
+                         K {k}", c.id);
+                }
+            }
+        }
+    }
+    exec::set_threads(0);
+}
+
+#[test]
+fn divergence_inside_a_block_matches_only_full_shared_blocks() {
+    let (sess, params, _) = setup();
+    // 14 shared tokens at kv_block = 4: blocks 0..3 are fully shared,
+    // block 3 mixes shared positions 12..14 with private suffix tokens —
+    // the lookup must stop at the last FULL shared block (12 tokens) and
+    // the recomputed tail must keep tokens bit-identical
+    let reqs = synth_requests_shared_prefix(&sess.cfg, 4, 14, 5, 4, 0xD1);
+    let (_, off) = run_decode(&sess, &params, &Engine::Dense, &reqs,
+                              &cfg_for(0, 0, 0)).expect("cache off");
+    let (_, on) = run_decode(&sess, &params, &Engine::Dense, &reqs,
+                             &cfg_for(0, 0, 64)).expect("cache on");
+    assert_eq!(tokens_of(&off), tokens_of(&on),
+               "partial-block divergence changed tokens");
+    assert_eq!(on[0].cached_prompt_tokens, 0);
+    for c in &on[1..] {
+        assert_eq!(c.cached_prompt_tokens, 12,
+                   "request {}: a mid-block divergence must cap the match \
+                    at the last full shared block", c.id);
+    }
+}
+
+#[test]
+fn eviction_then_refill_misses_cleanly_and_stays_deterministic() {
+    let (sess, params, _) = setup();
+    // 4 fully distinct 17-token prompts, each needing 4 full blocks, into
+    // a tree capped at 4 blocks: every insert evicts the previous chain
+    let mut reqs = synth_requests(&sess.cfg, 4, 17, 4, 0xE1);
+    let mut refill = reqs[0].clone();
+    refill.id = 4; // same prompt as request 0, re-sent after its eviction
+    reqs.push(refill);
+
+    let cfg = cfg_for(0, 0, 4);
+    let mut done: Vec<CompletedRequest> = Vec::new();
+    let mut source = WorkloadSource::new(&reqs, 0.0);
+    let mut sink = |ev: DecodeEvent| {
+        if let DecodeEvent::Done(c) = ev {
+            done.push(c);
+        }
+    };
+    let counters = run_engine(&sess, &params, &Engine::Dense, None, &cfg,
+                              &mut source, &mut sink)
+        .expect("engine run");
+
+    assert_eq!(done.len(), 5);
+    assert!(counters.prefix_evictions >= 3,
+            "a 4-block cap under 4-block chains must evict per insert \
+             (got {})", counters.prefix_evictions);
+    // the refill's chain was evicted before it arrived: clean miss...
+    let first = done.iter().find(|c| c.id == 0).expect("request 0");
+    let again = done.iter().find(|c| c.id == 4).expect("refill request");
+    assert_eq!(again.cached_prompt_tokens, 0,
+               "an evicted prefix must miss, not resurrect stale blocks");
+    // ...and an identical regeneration (greedy, same prompt)
+    assert_eq!(first.tokens, again.tokens,
+               "eviction-then-refill changed generated tokens");
+    assert_eq!(counters.requests_rejected, 0);
+}
+
+#[test]
+fn malformed_request_fails_alone_without_tearing_down_the_engine() {
+    let (sess, params, _) = setup();
+    // regression: an oversized prompt reaching the engine loop used to
+    // abort the whole run via a hard error, killing every other in-flight
+    // generation.  Now each invalid request fails alone.
+    let mut reqs = synth_requests(&sess.cfg, 1, 8, 3, 0xBAD);
+    reqs[0].id = 3; // the only valid request
+    let mut empty = reqs[0].clone();
+    empty.id = 0;
+    empty.prompt = Vec::new();
+    let mut oversized = reqs[0].clone();
+    oversized.id = 1;
+    oversized.prompt = vec![1; sess.cfg.seq_len + 1];
+    let mut zero_budget = reqs[0].clone();
+    zero_budget.id = 2;
+    zero_budget.max_new_tokens = 0;
+    let workload =
+        vec![empty, oversized, zero_budget, reqs[0].clone()];
+
+    let cfg = cfg_for(0, 0, 0);
+    let mut rejected: Vec<(usize, String)> = Vec::new();
+    let mut done: Vec<CompletedRequest> = Vec::new();
+    let mut source = WorkloadSource::new(&workload, 0.0);
+    let mut sink = |ev: DecodeEvent| match ev {
+        DecodeEvent::Rejected { id, reason } => rejected.push((id, reason)),
+        DecodeEvent::Done(c) => done.push(c),
+        _ => {}
+    };
+    let counters = run_engine(&sess, &params, &Engine::Dense, None, &cfg,
+                              &mut source, &mut sink)
+        .expect("one bad request must not tear down the engine loop");
+
+    assert_eq!(counters.requests_rejected, 3);
+    assert_eq!(rejected.len(), 3);
+    let reason_of = |id: usize| -> String {
+        rejected.iter().find(|(i, _)| *i == id).expect("rejection").1.clone()
+    };
+    assert!(reason_of(0).contains("empty prompt"), "{}", reason_of(0));
+    assert!(reason_of(1).contains("exceeds seq_len"), "{}", reason_of(1));
+    assert!(reason_of(2).contains("max_new_tokens"), "{}", reason_of(2));
+    // the valid request behind the malformed ones still completed in full
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].id, 3);
+    assert_eq!(done[0].tokens.len(), 3);
+
+    // the offline wrapper's contract is unchanged: it validates the whole
+    // workload up front and hard-errors before any compute
+    let err = run_decode(&sess, &params, &Engine::Dense, &workload, &cfg)
+        .expect_err("offline wrapper must reject the workload up front");
+    assert!(format!("{err}").contains("empty prompt"), "{err}");
+}

@@ -86,7 +86,8 @@ fn serve_and_collect(sess: &Session, params: &ParamStore, engine: &Engine,
         queue_depth: 64,
         decode: DecodeConfig { max_slots: 3, max_new_tokens: MAX_NEW,
                                temperature: 0.0, seed: 9, arrival_steps: 0.0,
-                               prefill_chunk, speculate_k },
+                               prefill_chunk, speculate_k,
+                               ..DecodeConfig::default() },
     };
     let (tx, rx) = mpsc::channel::<SocketAddr>();
     let mut collected: Vec<(usize, Vec<i32>)> = Vec::new();
@@ -171,7 +172,8 @@ fn offline_reference(sess: &Session, params: &ParamStore, engine: &Engine)
     // must reproduce
     let dc = DecodeConfig { max_slots: 3, max_new_tokens: MAX_NEW,
                             temperature: 0.0, seed: 9, arrival_steps: 0.0,
-                            prefill_chunk: 0, speculate_k: 0 };
+                            prefill_chunk: 0, speculate_k: 0,
+                            ..DecodeConfig::default() };
     let (_, done) = run_decode(sess, params, engine, &reqs, &dc)
         .expect("offline decode");
     done.into_iter().map(|c| c.tokens).collect()
@@ -241,7 +243,8 @@ fn speculative_server_bitmatches_offline_and_reports_acceptance() {
         queue_depth: 8,
         decode: DecodeConfig { max_slots: 2, max_new_tokens: MAX_NEW,
                                temperature: 0.0, seed: 9, arrival_steps: 0.0,
-                               prefill_chunk: 0, speculate_k: 2 },
+                               prefill_chunk: 0, speculate_k: 2,
+                               ..DecodeConfig::default() },
     };
     let (tx, rx) = mpsc::channel::<SocketAddr>();
     std::thread::scope(|s| {
@@ -298,7 +301,8 @@ fn capacity_truncation_and_zero_budget_over_the_wire() {
         // a server deliberately configured with NO default budget
         decode: DecodeConfig { max_slots: 1, max_new_tokens: 0,
                                temperature: 0.0, seed: 3, arrival_steps: 0.0,
-                               prefill_chunk: 0, speculate_k: 0 },
+                               prefill_chunk: 0, speculate_k: 0,
+                               ..DecodeConfig::default() },
     };
     let (tx, rx) = mpsc::channel::<SocketAddr>();
     std::thread::scope(|s| {
@@ -366,7 +370,8 @@ fn queue_full_gets_overloaded_and_server_stays_live() {
         queue_depth: 1,
         decode: DecodeConfig { max_slots: 1, max_new_tokens: 24,
                                temperature: 0.0, seed: 3, arrival_steps: 0.0,
-                               prefill_chunk: 0, speculate_k: 0 },
+                               prefill_chunk: 0, speculate_k: 0,
+                               ..DecodeConfig::default() },
     };
     let (tx, rx) = mpsc::channel::<SocketAddr>();
 

@@ -142,6 +142,7 @@ fn tracing_is_observe_only_and_exports_are_wellformed() {
     let cfg_for = |k: usize| DecodeConfig {
         max_slots: 3, max_new_tokens: 5, temperature: 0.0, seed: 11,
         arrival_steps: 0.0, prefill_chunk: 4, speculate_k: k,
+        ..DecodeConfig::default()
     };
     let tokens_of = |done: &[zs_svd::decode::CompletedRequest]|
                      -> Vec<Vec<i32>> {
