@@ -169,4 +169,66 @@ REPORT_FILE="$(mktemp)"
 rm -f "$REPORT_FILE"
 echo "compress report smoke OK (report written + validated)"
 
+echo "== artifact smoke: pack → corrupt one chunk → install must fail =="
+# pack a ratio-0.6 plan into a fresh store, truncate one content-addressed
+# chunk by a single byte, and require `install` to reject it WITHOUT
+# committing a manifest at the destination; then heal the store (re-pack
+# overwrites the invalid chunk) and require the clean install to commit
+ART_SRC="$(mktemp -d)/store"
+ART_DST="$(mktemp -d)/store"
+./target/release/zs-svd pack --fast --ratio 0.6 --out "$ART_SRC"
+MANIFEST="$ART_SRC/tiny-zs60.zsar"
+[ -f "$MANIFEST" ] || { echo "FATAL: pack wrote no manifest"; exit 1; }
+CHUNK="$(ls -S "$ART_SRC/chunks" | head -n 1)"
+truncate -s -1 "$ART_SRC/chunks/$CHUNK"
+if ./target/release/zs-svd install --from "$MANIFEST" --to "$ART_DST"; then
+    echo "FATAL: install succeeded on a corrupted chunk"; exit 1
+fi
+[ ! -e "$ART_DST/tiny-zs60.zsar" ] \
+    || { echo "FATAL: failed install left a manifest visible"; exit 1; }
+./target/release/zs-svd pack --fast --ratio 0.6 --out "$ART_SRC"
+./target/release/zs-svd install --from "$MANIFEST" --to "$ART_DST"
+[ -f "$ART_DST/tiny-zs60.zsar" ] \
+    || { echo "FATAL: clean install wrote no manifest"; exit 1; }
+echo "artifact smoke OK (corruption rejected, clean install committed)"
+
+echo "== artifact reload smoke: serve --artifact + live client --reload =="
+# serve straight from the installed artifact, run one plain session, then a
+# second session that hot-swaps the SAME artifact before generating: the
+# wire metrics must report exactly one swap and the streamed token ids must
+# be bit-identical across the swap (same plan in → same tokens out)
+PORT_FILE="$(mktemp)"
+rm -f "$PORT_FILE"
+./target/release/zs-svd serve --listen 127.0.0.1:0 \
+    --port-file "$PORT_FILE" --max-new-tokens 4 --fast \
+    --artifact "$ART_DST/tiny-zs60.zsar" &
+SRV_PID=$!
+trap 'kill "$SRV_PID" 2>/dev/null || true' EXIT
+for _ in $(seq 1 600); do
+    [ -s "$PORT_FILE" ] && break
+    if ! kill -0 "$SRV_PID" 2>/dev/null; then
+        echo "FATAL: artifact server exited before binding"
+        exit 1
+    fi
+    sleep 0.5
+done
+[ -s "$PORT_FILE" ] || { echo "FATAL: server never wrote its port file"; exit 1; }
+OUT1="$(./target/release/zs-svd client --connect "$(cat "$PORT_FILE")" \
+    --requests 1 --prompt-len 8 --max-new-tokens 4)"
+OUT2="$(./target/release/zs-svd client --connect "$(cat "$PORT_FILE")" \
+    --requests 1 --prompt-len 8 --max-new-tokens 4 \
+    --reload "$ART_DST/tiny-zs60.zsar" --shutdown)"
+wait "$SRV_PID"
+trap - EXIT
+rm -f "$PORT_FILE"
+echo "$OUT2" | grep -Fq 'artifact swaps: 1' \
+    || { echo "FATAL: reload session reported no swap"; echo "$OUT2"; exit 1; }
+TOK1="$(echo "$OUT1" | grep -F 'tokens: [')"
+TOK2="$(echo "$OUT2" | grep -F 'tokens: [')"
+[ -n "$TOK1" ] && [ "$TOK1" = "$TOK2" ] \
+    || { echo "FATAL: hot swap changed streamed tokens";
+         echo "pre:  $TOK1"; echo "post: $TOK2"; exit 1; }
+rm -rf "$(dirname "$ART_SRC")" "$(dirname "$ART_DST")"
+echo "artifact reload smoke OK (swap counter + tokens bit-identical)"
+
 echo "CI OK"

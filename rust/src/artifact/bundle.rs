@@ -1,0 +1,462 @@
+//! Packing a complete serving state (weights + engine + optional drafter)
+//! into a chunked artifact, and loading one back with full verification.
+//!
+//! A bundle holds everything a server needs to come up **without any
+//! training or compression work**: the full applied [`ParamStore`], the
+//! [`Engine`] (dense, or low-rank factors), and optionally a speculative
+//! drafter's factors.  Tensors are stored as raw little-endian f32 chunks —
+//! an exact bit round-trip — so a process started on an installed artifact
+//! produces logits bit-identical to the process that packed it, which is
+//! what the hot-swap gate in `rust/tests/server_loopback.rs` relies on.
+//!
+//! Chunk labels are structured: `meta`, `param:<name>`, `u:<target>` /
+//! `v:<target>` for engine factors, and `du:<target>` / `dv:<target>` for
+//! drafter factors.  The labels are what corruption errors name.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use super::hash::ChunkId;
+use super::manifest::{ArtifactManifest, ChunkClass, ChunkRecord};
+use super::store::{read_manifest_file, ChunkStore};
+use crate::model::manifest::ConfigMeta;
+use crate::model::ParamStore;
+use crate::serve::Engine;
+use crate::tensor::{Mat, Tensor};
+use crate::util::json::{self, Json};
+
+/// Bundle meta format marker (the `format` field of the meta chunk).
+pub const META_FORMAT: &str = "zs-artifact";
+
+/// Bundle meta format version.
+pub const META_VERSION: usize = 1;
+
+/// Chunk label of a full parameter tensor.
+pub fn param_label(name: &str) -> String {
+    format!("param:{name}")
+}
+
+/// Chunk label of an engine U factor (`drafter = true` for the drafter's).
+pub fn u_label(target: &str, drafter: bool) -> String {
+    if drafter { format!("du:{target}") } else { format!("u:{target}") }
+}
+
+/// Chunk label of an engine V factor (`drafter = true` for the drafter's).
+pub fn v_label(target: &str, drafter: bool) -> String {
+    if drafter { format!("dv:{target}") } else { format!("v:{target}") }
+}
+
+fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(label: &str, bytes: &[u8], want: usize) -> Result<Vec<f32>> {
+    anyhow::ensure!(bytes.len() == want * 4,
+                    "chunk `{label}`: payload is {} bytes, meta shape needs \
+                     {} ({want} f32 values)", bytes.len(), want * 4);
+    Ok(bytes.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn factor_table(factors: &BTreeMap<String, (Mat, Mat)>) -> Json {
+    Json::arr(factors.iter().map(|(target, (u, v))| {
+        Json::obj(vec![
+            ("target", Json::str(target)),
+            ("rank", Json::num(u.cols as f64)),
+            ("m", Json::num(u.rows as f64)),
+            ("n", Json::num(v.cols as f64)),
+        ])
+    }))
+}
+
+fn engine_meta(engine: &Engine) -> Json {
+    match engine {
+        Engine::Dense => Json::obj(vec![("kind", Json::str("dense"))]),
+        Engine::Lowrank { tag, factors } => Json::obj(vec![
+            ("kind", Json::str("lowrank")),
+            ("tag", Json::str(tag)),
+            ("factors", factor_table(factors)),
+        ]),
+    }
+}
+
+fn put_factors(store: &ChunkStore, records: &mut Vec<ChunkRecord>,
+               factors: &BTreeMap<String, (Mat, Mat)>, drafter: bool)
+               -> Result<()> {
+    for (target, (u, v)) in factors {
+        for (mat, class, label) in [
+            (u, ChunkClass::FactorU, u_label(target, drafter)),
+            (v, ChunkClass::FactorV, v_label(target, drafter)),
+        ] {
+            let bytes = f32s_to_bytes(&mat.data);
+            let id = store.put(&bytes)?;
+            records.push(ChunkRecord { class, label, id,
+                                       len: bytes.len() as u64 });
+        }
+    }
+    Ok(())
+}
+
+/// Pack `params` + `engine` (+ optional `drafter`) for model `cfg` into the
+/// store rooted at `store_root`, committing the manifest as
+/// `<name>.zsar`.  Returns the manifest path.  Identical tensors — e.g.
+/// factors shared with an artifact packed earlier into the same store —
+/// deduplicate to a single chunk via content addressing.
+pub fn pack(cfg: &ConfigMeta, params: &ParamStore, engine: &Engine,
+            drafter: Option<&Engine>, store_root: &Path, name: &str)
+            -> Result<PathBuf> {
+    if let Some(d) = drafter {
+        anyhow::ensure!(matches!(d, Engine::Lowrank { .. }),
+                        "a speculative drafter must be a low-rank engine");
+    }
+    let store = ChunkStore::open(store_root)?;
+    let mut records = Vec::new();
+
+    let mut meta_pairs = vec![
+        ("format", Json::str(META_FORMAT)),
+        ("version", Json::num(META_VERSION as f64)),
+        ("model", Json::str(&cfg.name)),
+        ("arch", Json::str(&cfg.arch)),
+        ("vocab", Json::num(cfg.vocab as f64)),
+        ("seq_len", Json::num(cfg.seq_len as f64)),
+        ("d_model", Json::num(cfg.d_model as f64)),
+        ("n_layers", Json::num(cfg.n_layers as f64)),
+        ("engine", engine_meta(engine)),
+        ("params", Json::arr(params.names().iter().map(|n| {
+            let t = params.get(n);
+            Json::obj(vec![
+                ("name", Json::str(n)),
+                ("shape", Json::arr(t.shape.iter()
+                    .map(|&d| Json::num(d as f64)))),
+            ])
+        }))),
+    ];
+    if let Some(d) = drafter {
+        meta_pairs.push(("drafter", engine_meta(d)));
+    }
+    let meta_bytes = Json::obj(meta_pairs).to_string().into_bytes();
+    let meta_id = store.put(&meta_bytes)?;
+    records.push(ChunkRecord { class: ChunkClass::Meta, label: "meta".into(),
+                               id: meta_id, len: meta_bytes.len() as u64 });
+
+    for n in params.names() {
+        let bytes = f32s_to_bytes(&params.get(n).data);
+        let id = store.put(&bytes)?;
+        records.push(ChunkRecord { class: ChunkClass::Param,
+                                   label: param_label(n), id,
+                                   len: bytes.len() as u64 });
+    }
+    if let Engine::Lowrank { factors, .. } = engine {
+        put_factors(&store, &mut records, factors, false)?;
+    }
+    if let Some(Engine::Lowrank { factors, .. }) = drafter {
+        put_factors(&store, &mut records, factors, true)?;
+    }
+
+    store.write_manifest(name, &ArtifactManifest { records })
+}
+
+/// A fully verified, fully materialized artifact: everything the engine
+/// needs to serve, plus the model identity to validate against a session.
+pub struct LoadedBundle {
+    /// Model config name the artifact was packed for ("tiny", ...).
+    pub model: String,
+    /// Architecture family recorded at pack time.
+    pub arch: String,
+    /// Vocabulary size recorded at pack time.
+    pub vocab: usize,
+    /// Sequence length recorded at pack time.
+    pub seq_len: usize,
+    /// The complete parameter store.
+    pub params: ParamStore,
+    /// The serving engine (dense or low-rank factors).
+    pub engine: Engine,
+    /// Optional speculative drafter engine.
+    pub drafter: Option<Engine>,
+}
+
+fn chunk_of<'m>(m: &'m ArtifactManifest, label: &str, class: ChunkClass)
+                -> Result<&'m ChunkRecord> {
+    let rec = m.record(label).ok_or_else(|| anyhow::anyhow!(
+        "meta references chunk `{label}` but the manifest has no such \
+         record (dangling chunk label)"))?;
+    anyhow::ensure!(rec.class == class,
+                    "chunk `{label}` has class {:?}, meta expects {class:?}",
+                    rec.class);
+    Ok(rec)
+}
+
+fn load_engine(store: &ChunkStore, m: &ArtifactManifest, meta: &Json,
+               drafter: bool) -> Result<Engine> {
+    let kind = meta.str_or("kind", "");
+    match kind.as_str() {
+        "dense" => Ok(Engine::Dense),
+        "lowrank" => {
+            let tag = meta.get("tag").and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "lowrank engine meta missing `tag`"))?
+                .to_string();
+            let table = meta.get("factors").and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "lowrank engine meta missing `factors` table"))?;
+            let mut factors = BTreeMap::new();
+            for f in table {
+                let target = f.get("target").and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "factor entry missing `target`"))?
+                    .to_string();
+                let rank = f.usize_or("rank", 0);
+                let rows = f.usize_or("m", 0);
+                let cols = f.usize_or("n", 0);
+                anyhow::ensure!(rank > 0 && rows > 0 && cols > 0,
+                                "factor `{target}`: bad shape \
+                                 ({rows} x {rank} x {cols})");
+                let ul = u_label(&target, drafter);
+                let urec = chunk_of(m, &ul, ChunkClass::FactorU)?;
+                let u = Mat::from_vec(rows, rank, bytes_to_f32s(
+                    &ul, &store.get_verified(urec)?, rows * rank)?);
+                let vl = v_label(&target, drafter);
+                let vrec = chunk_of(m, &vl, ChunkClass::FactorV)?;
+                let v = Mat::from_vec(rank, cols, bytes_to_f32s(
+                    &vl, &store.get_verified(vrec)?, rank * cols)?);
+                factors.insert(target, (u, v));
+            }
+            Ok(Engine::Lowrank { tag, factors })
+        }
+        other => anyhow::bail!("unknown engine kind `{other}` in meta"),
+    }
+}
+
+/// Load and **fully verify** the artifact at `manifest_path`: the manifest
+/// structure and checksum, then every referenced chunk's length and content
+/// hash, then the tensor shapes against the meta tables.  Any corruption —
+/// a flipped bit, a truncated or missing chunk file, a dangling label —
+/// fails here with an error naming the chunk, before anything is served.
+pub fn load(manifest_path: &Path) -> Result<LoadedBundle> {
+    let m = read_manifest_file(manifest_path)?;
+    let root = manifest_path.parent().ok_or_else(|| anyhow::anyhow!(
+        "{} has no parent", manifest_path.display()))?;
+    let store = ChunkStore::open(root)?;
+
+    let meta_rec = m.meta().map_err(|e| anyhow::anyhow!(
+        "manifest {}: {e}", manifest_path.display()))?;
+    let meta_bytes = store.get_verified(meta_rec)?;
+    let meta_text = std::str::from_utf8(&meta_bytes)
+        .map_err(|e| anyhow::anyhow!("chunk `meta` is not UTF-8: {e}"))?;
+    let meta = json::parse(meta_text)
+        .map_err(|e| anyhow::anyhow!("chunk `meta` is not valid JSON: {e}"))?;
+    let format = meta.str_or("format", "");
+    anyhow::ensure!(format == META_FORMAT,
+                    "meta format `{format}` is not `{META_FORMAT}`");
+    let version = meta.usize_or("version", 0);
+    anyhow::ensure!(version == META_VERSION,
+                    "meta version {version} unsupported (want {META_VERSION})");
+
+    let param_table = meta.get("params").and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("meta missing `params` table"))?;
+    let mut names = Vec::with_capacity(param_table.len());
+    let mut tensors = Vec::with_capacity(param_table.len());
+    for p in param_table {
+        let name = p.get("name").and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("param entry missing `name`"))?
+            .to_string();
+        let shape = p.get("shape").and_then(Json::as_shape)
+            .ok_or_else(|| anyhow::anyhow!(
+                "param `{name}` missing `shape`"))?;
+        let count: usize = shape.iter().product();
+        let label = param_label(&name);
+        let rec = chunk_of(&m, &label, ChunkClass::Param)?;
+        let data = bytes_to_f32s(&label, &store.get_verified(rec)?, count)?;
+        tensors.push((name.clone(), Tensor::from_vec(&shape, data)));
+        names.push(name);
+    }
+    let mut params = ParamStore::new_empty(names);
+    for (name, t) in tensors {
+        params.set(&name, t);
+    }
+
+    let engine_doc = meta.get("engine")
+        .ok_or_else(|| anyhow::anyhow!("meta missing `engine`"))?;
+    let engine = load_engine(&store, &m, engine_doc, false)?;
+    let drafter = match meta.get("drafter") {
+        Some(d) => Some(load_engine(&store, &m, d, true)?),
+        None => None,
+    };
+
+    Ok(LoadedBundle {
+        model: meta.str_or("model", ""),
+        arch: meta.str_or("arch", ""),
+        vocab: meta.usize_or("vocab", 0),
+        seq_len: meta.usize_or("seq_len", 0),
+        params,
+        engine,
+        drafter,
+    })
+}
+
+fn check_lowrank(cfg: &ConfigMeta, engine: &Engine, what: &str)
+                 -> Result<()> {
+    let Engine::Lowrank { tag, factors } = engine else { return Ok(()) };
+    let lm = cfg.lowrank.get(tag).ok_or_else(|| anyhow::anyhow!(
+        "{what} tag `{tag}` has no low-rank graph in model `{}`", cfg.name))?;
+    for t in &cfg.targets {
+        let (m, n) = t.shape;
+        let k = lm.ranks[&t.name];
+        let (u, v) = factors.get(&t.name).ok_or_else(|| anyhow::anyhow!(
+            "{what}: artifact has no factors for target `{}`", t.name))?;
+        anyhow::ensure!(
+            (u.rows, u.cols, v.rows, v.cols) == (m, k, k, n),
+            "{what}: factor shapes for `{}` are ({} x {}, {} x {}), model \
+             graph `{tag}` needs ({m} x {k}, {k} x {n})",
+            t.name, u.rows, u.cols, v.rows, v.cols);
+    }
+    anyhow::ensure!(factors.len() == cfg.targets.len(),
+                    "{what}: artifact factors {} targets, model has {}",
+                    factors.len(), cfg.targets.len());
+    Ok(())
+}
+
+impl LoadedBundle {
+    /// Validate this bundle against a live session's model config: identity
+    /// (name / arch / vocab / seq_len), the full parameter spec, and — for
+    /// low-rank engines — that the tag's fixed-rank graph exists and every
+    /// factor matches its baked shape.  A bundle that passes can be swapped
+    /// in without any further shape risk.
+    pub fn validate_against(&self, cfg: &ConfigMeta) -> Result<()> {
+        anyhow::ensure!(self.model == cfg.name,
+                        "artifact is for model `{}`, server runs `{}`",
+                        self.model, cfg.name);
+        anyhow::ensure!(self.arch == cfg.arch,
+                        "artifact arch `{}` != model arch `{}`",
+                        self.arch, cfg.arch);
+        anyhow::ensure!(self.vocab == cfg.vocab,
+                        "artifact vocab {} != model vocab {}",
+                        self.vocab, cfg.vocab);
+        anyhow::ensure!(self.seq_len == cfg.seq_len,
+                        "artifact seq_len {} != model seq_len {}",
+                        self.seq_len, cfg.seq_len);
+        self.params.check_matches(cfg)?;
+        check_lowrank(cfg, &self.engine, "engine")?;
+        if let Some(d) = &self.drafter {
+            anyhow::ensure!(matches!(d, Engine::Lowrank { .. }),
+                            "drafter engine must be low-rank");
+            check_lowrank(cfg, d, "drafter")?;
+        }
+        Ok(())
+    }
+}
+
+/// Pretty one-line description for logs: engine label plus drafter tag.
+pub fn describe(b: &LoadedBundle) -> String {
+    match &b.drafter {
+        Some(d) => format!("{} (drafter {})", b.engine.label(), d.label()),
+        None => b.engine.label(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("zs_bundle_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn tiny_cfg() -> ConfigMeta {
+        crate::model::manifest::Manifest::builtin().config("tiny").clone()
+    }
+
+    fn synth_state(cfg: &ConfigMeta, tag: &str)
+                   -> (ParamStore, Engine, Engine) {
+        let mut rng = Rng::new(0xA2);
+        let params = crate::model::init::init_params(cfg, &mut rng);
+        let lm = &cfg.lowrank[tag];
+        let factors: BTreeMap<String, (Mat, Mat)> = cfg.targets.iter()
+            .map(|t| {
+                let (m, n) = t.shape;
+                let k = lm.ranks[&t.name];
+                (t.name.clone(),
+                 (Mat::randn(&mut rng, m, k, 0.05),
+                  Mat::randn(&mut rng, k, n, 0.05)))
+            })
+            .collect();
+        let engine = Engine::Lowrank { tag: tag.into(),
+                                       factors: factors.clone() };
+        let drafter = Engine::Lowrank { tag: tag.into(), factors };
+        (params, engine, drafter)
+    }
+
+    #[test]
+    fn pack_load_bitmatch_with_drafter() {
+        let cfg = tiny_cfg();
+        let tag = cfg.lowrank.keys().next().expect("a tag").clone();
+        let (params, engine, drafter) = synth_state(&cfg, &tag);
+        let root = tmp_root("roundtrip");
+        let path = pack(&cfg, &params, &engine, Some(&drafter), &root, "art")
+            .expect("pack");
+        let b = load(&path).expect("load");
+        b.validate_against(&cfg).expect("validate");
+        assert_eq!(b.model, cfg.name);
+        assert_eq!(b.params.names(), params.names());
+        for n in params.names() {
+            assert_eq!(b.params.get(n), params.get(n), "param {n}");
+        }
+        let (Engine::Lowrank { factors: fa, .. },
+             Engine::Lowrank { factors: fb, .. }) = (&engine, &b.engine)
+        else { panic!("lowrank engines") };
+        assert_eq!(fa, fb);
+        assert!(b.drafter.is_some());
+        assert!(describe(&b).contains("drafter"));
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn shared_factors_dedup_across_artifacts() {
+        let cfg = tiny_cfg();
+        let tag = cfg.lowrank.keys().next().expect("a tag").clone();
+        let (params, engine, _) = synth_state(&cfg, &tag);
+        let root = tmp_root("dedup");
+        pack(&cfg, &params, &engine, None, &root, "a").expect("pack a");
+        let chunks_after_a = std::fs::read_dir(root.join("chunks"))
+            .expect("dir").count();
+        // same tensors under a second name: zero new chunks
+        pack(&cfg, &params, &engine, None, &root, "b").expect("pack b");
+        let chunks_after_b = std::fs::read_dir(root.join("chunks"))
+            .expect("dir").count();
+        assert_eq!(chunks_after_a, chunks_after_b,
+                   "identical payloads must deduplicate");
+        let a = load(&root.join("a.zsar")).expect("load a");
+        let b = load(&root.join("b.zsar")).expect("load b");
+        assert_eq!(a.params.get("embed"), b.params.get("embed"));
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn wrong_model_rejected_by_validation() {
+        let cfg = tiny_cfg();
+        let (params, engine, _) = {
+            let tag = cfg.lowrank.keys().next().expect("a tag").clone();
+            synth_state(&cfg, &tag)
+        };
+        let root = tmp_root("wrongmodel");
+        let path = pack(&cfg, &params, &engine, None, &root, "art")
+            .expect("pack");
+        let b = load(&path).expect("load");
+        let mut other = cfg.clone();
+        other.name = "not-tiny".into();
+        let err = b.validate_against(&other).unwrap_err().to_string();
+        assert!(err.contains("not-tiny"), "{err}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -1,0 +1,145 @@
+//! 128-bit content hash for chunk addressing and integrity.
+//!
+//! Two independent FNV-1a-64 lanes (different offset bases) over the same
+//! bytes, each finished with a splitmix64-style avalanche and cross-mixed
+//! with the input length.  This is an *integrity and dedup* hash — fast,
+//! dependency-free, with a 128-bit space that makes accidental collisions
+//! between distinct tensors astronomically unlikely — **not** a
+//! cryptographic hash: it does not resist an adversary crafting collisions
+//! on purpose.  The artifact store uses it to detect corruption (bit flips,
+//! truncation, mixed-up files) and to deduplicate identical chunks, which
+//! is exactly what it is good for.
+
+use std::fmt;
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+const FNV_OFFSET_A: u64 = 0xcbf2_9ce4_8422_2325;
+// second lane: the standard offset xored with the splitmix64 increment so
+// the two lanes never start equal and diverge from the first byte on
+const FNV_OFFSET_B: u64 = FNV_OFFSET_A ^ 0x9e37_79b9_7f4a_7c15;
+
+/// splitmix64 finalizer: full-avalanche 64-bit mix.
+fn mix64(mut z: u64) -> u64 {
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Identity of one chunk: the 128-bit content hash of its payload bytes.
+/// Doubles as the chunk's file name (32 lowercase hex chars) in a
+/// [`ChunkStore`](super::store::ChunkStore).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ChunkId(pub [u8; 16]);
+
+impl ChunkId {
+    /// Hash a payload into its chunk identity.
+    pub fn of(bytes: &[u8]) -> ChunkId {
+        let mut a = FNV_OFFSET_A;
+        let mut b = FNV_OFFSET_B;
+        for &byte in bytes {
+            a = (a ^ u64::from(byte)).wrapping_mul(FNV_PRIME);
+            b = (b ^ u64::from(byte)).wrapping_mul(FNV_PRIME);
+        }
+        // cross-mix the lanes and fold in the length so a truncated payload
+        // whose running state happens to match still changes the id
+        let len = bytes.len() as u64;
+        let lo = mix64(a ^ b.rotate_left(32) ^ len);
+        let hi = mix64(b ^ a.rotate_left(17) ^ len.wrapping_mul(FNV_PRIME));
+        let mut out = [0u8; 16];
+        out[..8].copy_from_slice(&lo.to_le_bytes());
+        out[8..].copy_from_slice(&hi.to_le_bytes());
+        ChunkId(out)
+    }
+
+    /// 32-char lowercase hex rendering (the on-disk chunk file stem).
+    pub fn hex(&self) -> String {
+        let mut s = String::with_capacity(32);
+        for b in self.0 {
+            s.push_str(&format!("{b:02x}"));
+        }
+        s
+    }
+
+    /// Parse the [`hex`](ChunkId::hex) rendering back; `None` on anything
+    /// that is not exactly 32 hex chars.
+    pub fn from_hex(s: &str) -> Option<ChunkId> {
+        if s.len() != 32 || !s.is_ascii() {
+            return None;
+        }
+        let bytes = s.as_bytes();
+        let mut out = [0u8; 16];
+        for (i, slot) in out.iter_mut().enumerate() {
+            let pair = std::str::from_utf8(&bytes[2 * i..2 * i + 2]).ok()?;
+            *slot = u8::from_str_radix(pair, 16).ok()?;
+        }
+        Some(ChunkId(out))
+    }
+}
+
+impl fmt::Display for ChunkId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.hex())
+    }
+}
+
+impl fmt::Debug for ChunkId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ChunkId({})", self.hex())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_content_sensitive() {
+        let a = ChunkId::of(b"hello world");
+        assert_eq!(a, ChunkId::of(b"hello world"));
+        assert_ne!(a, ChunkId::of(b"hello worlc"));
+        assert_ne!(a, ChunkId::of(b"hello worl"));
+        assert_ne!(ChunkId::of(b""), ChunkId::of(b"\0"));
+    }
+
+    #[test]
+    fn single_bit_flips_change_the_id() {
+        let base: Vec<u8> = (0..257u32).map(|i| (i % 251) as u8).collect();
+        let id = ChunkId::of(&base);
+        for pos in [0usize, 1, 128, 255, 256] {
+            for bit in 0..8 {
+                let mut mutated = base.clone();
+                mutated[pos] ^= 1 << bit;
+                assert_ne!(id, ChunkId::of(&mutated),
+                           "flip at byte {pos} bit {bit} went undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let id = ChunkId::of(b"roundtrip me");
+        let h = id.hex();
+        assert_eq!(h.len(), 32);
+        assert!(h.chars().all(|c| c.is_ascii_hexdigit()));
+        assert_eq!(ChunkId::from_hex(&h), Some(id));
+        assert_eq!(ChunkId::from_hex("zz"), None);
+        assert_eq!(ChunkId::from_hex(&h[..30]), None);
+        let upper = h.to_uppercase();
+        // parser is case-tolerant (from_str_radix accepts both)
+        assert_eq!(ChunkId::from_hex(&upper), Some(id));
+    }
+
+    #[test]
+    fn length_extension_of_zeros_changes_the_id() {
+        // all-zero payloads of different lengths keep the FNV state moving
+        // only via the multiply; the length fold must still separate them
+        let mut prev = ChunkId::of(b"");
+        for n in 1..64usize {
+            let cur = ChunkId::of(&vec![0u8; n]);
+            assert_ne!(cur, prev, "zero-run length {n}");
+            prev = cur;
+        }
+    }
+}

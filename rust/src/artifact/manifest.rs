@@ -1,0 +1,351 @@
+//! The `ZSAR` artifact manifest: a small, length-prefixed, checksummed
+//! binary index of content-addressed chunks.
+//!
+//! ```text
+//! magic    "ZSAR"                          4 bytes
+//! version  u32 LE (currently 1)            4 bytes
+//! body_len u64 LE                          8 bytes
+//! body     n_records u32 LE
+//!          n_records × record:
+//!            class      u8   (0 meta / 1 param / 2 factor-U / 3 factor-V)
+//!            label_len  u16 LE
+//!            label      UTF-8 bytes ("param:embed", "u:layers.0.wq", ...)
+//!            id         16 bytes (ChunkId of the chunk payload)
+//!            len        u64 LE  (chunk payload length in bytes)
+//! hash     16 bytes: ChunkId::of(body)
+//! ```
+//!
+//! Every field that sizes an allocation is bounds-checked against the bytes
+//! actually present *before* allocating, so adversarial inputs (fuzzed in
+//! `rust/tests/proptests.rs`) can neither panic nor over-allocate — they
+//! return structured errors naming the offending record.  The trailing body
+//! hash covers every record byte, so any single-byte corruption anywhere in
+//! the file fails decoding.
+
+use std::collections::BTreeSet;
+
+use super::hash::ChunkId;
+
+/// Manifest file magic.
+pub const MAGIC: &[u8; 4] = b"ZSAR";
+
+/// Current manifest format version.
+pub const VERSION: u32 = 1;
+
+/// Hard cap on records per manifest — far above any real model (one record
+/// per tensor / factor half), purely an allocation bound for hostile input.
+pub const MAX_RECORDS: usize = 1 << 20;
+
+/// Hard cap on a record label's byte length.
+pub const MAX_LABEL_LEN: usize = 4096;
+
+/// What a chunk holds — determines how [`super::bundle`] interprets it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkClass {
+    /// JSON metadata: model identity, engine kind, tensor/factor tables.
+    Meta,
+    /// Raw little-endian f32 payload of one full parameter tensor.
+    Param,
+    /// Raw little-endian f32 payload of one low-rank U factor (m × k).
+    FactorU,
+    /// Raw little-endian f32 payload of one low-rank V factor (k × n).
+    FactorV,
+}
+
+impl ChunkClass {
+    fn code(self) -> u8 {
+        match self {
+            ChunkClass::Meta => 0,
+            ChunkClass::Param => 1,
+            ChunkClass::FactorU => 2,
+            ChunkClass::FactorV => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<ChunkClass> {
+        match c {
+            0 => Some(ChunkClass::Meta),
+            1 => Some(ChunkClass::Param),
+            2 => Some(ChunkClass::FactorU),
+            3 => Some(ChunkClass::FactorV),
+            _ => None,
+        }
+    }
+}
+
+/// One manifest entry: a labeled, typed pointer to a content-addressed
+/// chunk plus its expected byte length.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChunkRecord {
+    /// Payload interpretation.
+    pub class: ChunkClass,
+    /// Human-readable label ("param:embed", "u:layers.0.wq", "meta") —
+    /// what corruption errors name.
+    pub label: String,
+    /// Content hash of the chunk payload (also its store file name).
+    pub id: ChunkId,
+    /// Expected payload length in bytes.
+    pub len: u64,
+}
+
+/// A decoded artifact manifest: the ordered chunk records.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct ArtifactManifest {
+    /// Records in pack order (meta first by convention, then params, then
+    /// factor pairs).
+    pub records: Vec<ChunkRecord>,
+}
+
+impl ArtifactManifest {
+    /// Look up a record by label.
+    pub fn record(&self, label: &str) -> Option<&ChunkRecord> {
+        self.records.iter().find(|r| r.label == label)
+    }
+
+    /// The single metadata record; error if missing or duplicated.
+    pub fn meta(&self) -> Result<&ChunkRecord, String> {
+        let mut metas = self.records.iter()
+            .filter(|r| r.class == ChunkClass::Meta);
+        let first = metas.next()
+            .ok_or_else(|| "manifest has no meta chunk".to_string())?;
+        if metas.next().is_some() {
+            return Err("manifest has more than one meta chunk".into());
+        }
+        Ok(first)
+    }
+
+    /// Serialize to the `ZSAR` byte format described in the module docs.
+    ///
+    /// Panics if a label exceeds [`MAX_LABEL_LEN`] or the record count
+    /// exceeds [`MAX_RECORDS`] — both are builder bugs, not data errors.
+    pub fn encode(&self) -> Vec<u8> {
+        assert!(self.records.len() <= MAX_RECORDS, "too many records");
+        let mut body = Vec::new();
+        body.extend_from_slice(&(self.records.len() as u32).to_le_bytes());
+        for r in &self.records {
+            assert!(r.label.len() <= MAX_LABEL_LEN,
+                    "label `{}` too long", r.label);
+            body.push(r.class.code());
+            body.extend_from_slice(&(r.label.len() as u16).to_le_bytes());
+            body.extend_from_slice(r.label.as_bytes());
+            body.extend_from_slice(&r.id.0);
+            body.extend_from_slice(&r.len.to_le_bytes());
+        }
+        let digest = ChunkId::of(&body);
+        let mut out = Vec::with_capacity(16 + body.len() + 16);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&digest.0);
+        out
+    }
+
+    /// Decode and fully validate a `ZSAR` manifest.  Never panics and never
+    /// allocates more than the input could justify; every failure names
+    /// what was wrong and where.
+    pub fn decode(bytes: &[u8]) -> Result<ArtifactManifest, String> {
+        let mut cur = Cursor { bytes, pos: 0 };
+        let magic = cur.take(4, "magic")?;
+        if magic != MAGIC {
+            return Err(format!("bad manifest magic {magic:?} (want ZSAR)"));
+        }
+        let version = u32::from_le_bytes(
+            cur.take(4, "version")?.try_into().expect("4 bytes"));
+        if version != VERSION {
+            return Err(format!(
+                "unsupported manifest version {version} (want {VERSION})"));
+        }
+        let body_len = u64::from_le_bytes(
+            cur.take(8, "body length")?.try_into().expect("8 bytes"));
+        let remaining = (bytes.len() - cur.pos) as u64;
+        // the body plus its trailing 16-byte hash must fit exactly
+        if body_len.checked_add(16) != Some(remaining) {
+            return Err(format!(
+                "body length {body_len} inconsistent with file size \
+                 ({remaining} bytes after header)"));
+        }
+        let body = cur.take(body_len as usize, "body")?;
+        let stored = cur.take(16, "body hash")?;
+        let computed = ChunkId::of(body);
+        if stored != computed.0 {
+            return Err(format!(
+                "manifest body hash mismatch (stored {}, computed {computed})",
+                hex16(stored)));
+        }
+
+        let mut bc = Cursor { bytes: body, pos: 0 };
+        let n = u32::from_le_bytes(
+            bc.take(4, "record count")?.try_into().expect("4 bytes")) as usize;
+        if n > MAX_RECORDS {
+            return Err(format!("record count {n} exceeds cap {MAX_RECORDS}"));
+        }
+        // each record is at least 1 + 2 + 0 + 16 + 8 = 27 bytes: bound the
+        // allocation by what the body could actually hold
+        if n > (body.len().saturating_sub(4)) / 27 + 1 {
+            return Err(format!(
+                "record count {n} impossible for a {}-byte body", body.len()));
+        }
+        let mut records = Vec::with_capacity(n);
+        let mut labels: BTreeSet<String> = BTreeSet::new();
+        for i in 0..n {
+            let class_code = bc.take(1, "record class")?[0];
+            let class = ChunkClass::from_code(class_code).ok_or_else(|| {
+                format!("record {i}: unknown chunk class {class_code}")
+            })?;
+            let label_len = u16::from_le_bytes(
+                bc.take(2, "label length")?.try_into().expect("2 bytes"))
+                as usize;
+            if label_len > MAX_LABEL_LEN {
+                return Err(format!(
+                    "record {i}: label length {label_len} exceeds cap \
+                     {MAX_LABEL_LEN}"));
+            }
+            let label_bytes = bc.take(label_len, "label")?;
+            let label = std::str::from_utf8(label_bytes)
+                .map_err(|e| format!("record {i}: label not UTF-8: {e}"))?
+                .to_string();
+            let id_bytes: [u8; 16] = bc.take(16, "chunk id")?
+                .try_into().expect("16 bytes");
+            let len = u64::from_le_bytes(
+                bc.take(8, "chunk length")?.try_into().expect("8 bytes"));
+            if !labels.insert(label.clone()) {
+                return Err(format!(
+                    "record {i}: duplicate chunk label `{label}`"));
+            }
+            records.push(ChunkRecord { class, label, id: ChunkId(id_bytes),
+                                       len });
+        }
+        if bc.pos != body.len() {
+            return Err(format!(
+                "{} trailing bytes after record {n} in manifest body",
+                body.len() - bc.pos));
+        }
+        Ok(ArtifactManifest { records })
+    }
+}
+
+fn hex16(b: &[u8]) -> String {
+    b.iter().map(|x| format!("{x:02x}")).collect()
+}
+
+/// Checked byte cursor: every read is bounds-tested, so truncated or lying
+/// inputs produce errors instead of panics.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            format!("{what}: length overflow at byte {}", self.pos)
+        })?;
+        if end > self.bytes.len() {
+            return Err(format!(
+                "truncated manifest: {what} needs {n} bytes at offset {} \
+                 but only {} remain",
+                self.pos, self.bytes.len() - self.pos));
+        }
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ArtifactManifest {
+        ArtifactManifest {
+            records: vec![
+                ChunkRecord { class: ChunkClass::Meta, label: "meta".into(),
+                              id: ChunkId::of(b"{}"), len: 2 },
+                ChunkRecord { class: ChunkClass::Param,
+                              label: "param:embed".into(),
+                              id: ChunkId::of(b"embed-bytes"), len: 11 },
+                ChunkRecord { class: ChunkClass::FactorU,
+                              label: "u:layers.0.wq".into(),
+                              id: ChunkId::of(b"u-bytes"), len: 7 },
+                ChunkRecord { class: ChunkClass::FactorV,
+                              label: "v:layers.0.wq".into(),
+                              id: ChunkId::of(b"v-bytes"), len: 7 },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_byte_identical() {
+        let m = sample();
+        let enc = m.encode();
+        let dec = ArtifactManifest::decode(&enc).expect("decode");
+        assert_eq!(dec, m);
+        assert_eq!(dec.encode(), enc, "re-encode must be byte-identical");
+        assert_eq!(m.meta().expect("meta").label, "meta");
+        assert_eq!(m.record("u:layers.0.wq").expect("u").len, 7);
+        assert!(m.record("missing").is_none());
+    }
+
+    #[test]
+    fn empty_manifest_roundtrips() {
+        let m = ArtifactManifest::default();
+        let dec = ArtifactManifest::decode(&m.encode()).expect("decode");
+        assert_eq!(dec, m);
+        assert!(dec.meta().is_err());
+    }
+
+    #[test]
+    fn every_truncation_errors() {
+        let enc = sample().encode();
+        for cut in 0..enc.len() {
+            assert!(ArtifactManifest::decode(&enc[..cut]).is_err(),
+                    "truncation to {cut} bytes decoded");
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_errors() {
+        let enc = sample().encode();
+        for pos in 0..enc.len() {
+            let mut bad = enc.clone();
+            bad[pos] ^= 0x01;
+            assert!(ArtifactManifest::decode(&bad).is_err(),
+                    "flip at byte {pos} decoded");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_errors() {
+        let mut enc = sample().encode();
+        enc.push(0);
+        assert!(ArtifactManifest::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn duplicate_labels_rejected() {
+        let mut m = sample();
+        let dup = m.records[1].clone();
+        m.records.push(dup);
+        let err = ArtifactManifest::decode(&m.encode()).unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        assert!(err.contains("param:embed"), "{err}");
+    }
+
+    #[test]
+    fn hostile_record_count_is_bounded() {
+        // a tiny body claiming u32::MAX records must fail the plausibility
+        // check, not allocate
+        let mut body = Vec::new();
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        let digest = ChunkId::of(&body);
+        let mut enc = Vec::new();
+        enc.extend_from_slice(MAGIC);
+        enc.extend_from_slice(&VERSION.to_le_bytes());
+        enc.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        enc.extend_from_slice(&body);
+        enc.extend_from_slice(&digest.0);
+        let err = ArtifactManifest::decode(&enc).unwrap_err();
+        assert!(err.contains("impossible") || err.contains("cap"), "{err}");
+    }
+}

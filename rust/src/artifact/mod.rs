@@ -1,0 +1,47 @@
+//! Content-addressed binary artifact store for compressed serving plans.
+//!
+//! The production scenario ZS-SVD enables is *recompress and redeploy under
+//! traffic*: compression is cheap (global zero-sum selection over cached
+//! SVDs), so a fleet realistically holds several artifacts of one model at
+//! different ratios and swaps between them.  This module is the on-disk
+//! half of that story; `crate::decode`'s [`EngineSlot`](crate::decode::EngineSlot)
+//! / swap mailbox and the server's `reload` wire request are the live half.
+//!
+//! # Pieces
+//!
+//! * [`hash`] — the 128-bit content hash that names and verifies chunks.
+//! * [`manifest`] — the `ZSAR` binary manifest: a length-prefixed,
+//!   checksummed index of labeled chunk records.
+//! * [`store`] — the chunk directory: dedup by content address, atomic
+//!   writes, and a resumable [`install`](store::install) whose commit point
+//!   (the manifest rename) only happens after every chunk verifies.
+//! * [`bundle`] — packing a complete serving state (the full
+//!   [`ParamStore`](crate::model::ParamStore), engine factors, optional
+//!   drafter) into chunks and loading it back with full verification.
+//!
+//! # Integrity guarantees
+//!
+//! * Every chunk carries its byte length and 128-bit content hash in the
+//!   manifest; the manifest body itself is checksummed and length-prefixed.
+//! * Any single corrupted byte — in the manifest, a factor, a parameter, or
+//!   the metadata — is detected at install or load time with an error
+//!   naming the chunk label (`u:layers.0.wq`, `param:embed`, ...).
+//! * Nothing is ever partially visible: chunks and manifests are written
+//!   temp-file + atomic-rename, and the manifest (the only entry point) is
+//!   written last.  An interrupted install resumes by skipping chunks that
+//!   already verify at the destination and ends byte-identical to a clean
+//!   one.
+//! * Tensors round-trip bit-exactly (raw little-endian f32), so a server
+//!   that hot-swaps an artifact in produces logits bit-identical to a fresh
+//!   process started on that artifact — gated by
+//!   `rust/tests/server_loopback.rs` and `rust/tests/artifact_store.rs`.
+
+pub mod bundle;
+pub mod hash;
+pub mod manifest;
+pub mod store;
+
+pub use bundle::{load, pack, LoadedBundle};
+pub use hash::ChunkId;
+pub use manifest::{ArtifactManifest, ChunkClass, ChunkRecord};
+pub use store::{install, ChunkStore};

@@ -1,0 +1,306 @@
+//! On-disk chunk store + atomic, resumable artifact install.
+//!
+//! Layout under a store root:
+//!
+//! ```text
+//! <root>/<name>.zsar        manifest (the commit point — see below)
+//! <root>/chunks/<hex32>     chunk payloads, named by content hash
+//! ```
+//!
+//! Chunks are content-addressed, so identical payloads (e.g. a U factor
+//! shared by two compression ratios) are stored exactly once and several
+//! manifests in one root share them freely.  Every write is
+//! temp-file + atomic rename, and a manifest is only written after every
+//! chunk it references has been verified on disk — so a crash at any point
+//! leaves either the previous state or the complete new artifact, never a
+//! partially-visible one.  [`install`] re-verifies every chunk at the
+//! destination and skips chunks that already verify, which makes an
+//! interrupted install resumable: re-running it completes the copy and the
+//! result is byte-identical to a never-interrupted one.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+use super::hash::ChunkId;
+use super::manifest::{ArtifactManifest, ChunkRecord};
+
+/// Name of the chunk subdirectory inside a store root.
+pub const CHUNK_DIR: &str = "chunks";
+
+/// File extension of artifact manifests.
+pub const MANIFEST_EXT: &str = "zsar";
+
+/// A directory of content-addressed chunks plus the manifests that
+/// reference them.
+pub struct ChunkStore {
+    root: PathBuf,
+}
+
+/// Unique-enough temp-file suffix: pid + a process-wide counter, so
+/// concurrent writers in one process never collide and stale temp files
+/// from a crashed process are simply overwritten or ignored.
+fn tmp_name(stem: &str) -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    format!(".tmp-{stem}-{}-{}", std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed))
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same directory,
+/// then rename over the final name.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = path.parent()
+        .ok_or_else(|| anyhow::anyhow!("{} has no parent", path.display()))?;
+    let stem = path.file_name().and_then(|n| n.to_str()).unwrap_or("chunk");
+    let tmp = dir.join(tmp_name(stem));
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(),
+                                 path.display()))?;
+    Ok(())
+}
+
+impl ChunkStore {
+    /// Open (creating directories as needed) the store rooted at `root`.
+    pub fn open(root: &Path) -> Result<ChunkStore> {
+        std::fs::create_dir_all(root.join(CHUNK_DIR))
+            .with_context(|| format!("create store {}", root.display()))?;
+        Ok(ChunkStore { root: root.to_path_buf() })
+    }
+
+    /// The store's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// On-disk path of a chunk id.
+    pub fn chunk_path(&self, id: &ChunkId) -> PathBuf {
+        self.root.join(CHUNK_DIR).join(id.hex())
+    }
+
+    /// Path of the named manifest inside this store.
+    pub fn manifest_path(&self, name: &str) -> PathBuf {
+        self.root.join(format!("{name}.{MANIFEST_EXT}"))
+    }
+
+    /// Store a payload, returning its content id.  Deduplicating: if a
+    /// *valid* chunk with this content already exists it is left untouched;
+    /// an existing file that fails verification (e.g. torn by an earlier
+    /// crash mid-rename on a filesystem without atomic rename, or corrupted
+    /// at rest) is overwritten with the good bytes.
+    pub fn put(&self, bytes: &[u8]) -> Result<ChunkId> {
+        let id = ChunkId::of(bytes);
+        let path = self.chunk_path(&id);
+        if let Ok(existing) = std::fs::read(&path) {
+            if existing == bytes {
+                return Ok(id);
+            }
+        }
+        write_atomic(&path, bytes)?;
+        Ok(id)
+    }
+
+    /// Whether the chunk a record references exists here and verifies
+    /// (length and content hash both match).
+    pub fn has_valid(&self, rec: &ChunkRecord) -> bool {
+        match std::fs::read(self.chunk_path(&rec.id)) {
+            Ok(bytes) => bytes.len() as u64 == rec.len
+                && ChunkId::of(&bytes) == rec.id,
+            Err(_) => false,
+        }
+    }
+
+    /// Read and fully verify one chunk.  Every failure names the chunk's
+    /// manifest label so corruption reports point at the exact tensor.
+    pub fn get_verified(&self, rec: &ChunkRecord) -> Result<Vec<u8>> {
+        let path = self.chunk_path(&rec.id);
+        let bytes = std::fs::read(&path).with_context(|| {
+            format!("chunk `{}` ({}) unreadable at {}", rec.label, rec.id,
+                    path.display())
+        })?;
+        anyhow::ensure!(
+            bytes.len() as u64 == rec.len,
+            "chunk `{}` corrupt: length {} != manifest length {}",
+            rec.label, bytes.len(), rec.len);
+        let actual = ChunkId::of(&bytes);
+        anyhow::ensure!(
+            actual == rec.id,
+            "chunk `{}` corrupt: content hash {actual} != manifest id {}",
+            rec.label, rec.id);
+        Ok(bytes)
+    }
+
+    /// Write a manifest under `name` — the *commit point* of an artifact.
+    /// Call only after every referenced chunk is verified present.
+    pub fn write_manifest(&self, name: &str, m: &ArtifactManifest)
+                          -> Result<PathBuf> {
+        let path = self.manifest_path(name);
+        write_atomic(&path, &m.encode())?;
+        Ok(path)
+    }
+
+    /// Read and structurally validate the named manifest (format, record
+    /// table, body checksum — chunk payloads are verified separately).
+    pub fn read_manifest(&self, name: &str) -> Result<ArtifactManifest> {
+        read_manifest_file(&self.manifest_path(name))
+    }
+
+    /// Verify every chunk a manifest references.  Returns the labels of
+    /// chunks that failed, empty when the artifact is fully intact.
+    pub fn verify_all(&self, m: &ArtifactManifest) -> Vec<String> {
+        m.records.iter()
+            .filter(|r| !self.has_valid(r))
+            .map(|r| r.label.clone())
+            .collect()
+    }
+}
+
+/// Read and structurally validate a manifest file by path.
+pub fn read_manifest_file(path: &Path) -> Result<ArtifactManifest> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("read manifest {}", path.display()))?;
+    ArtifactManifest::decode(&bytes)
+        .map_err(|e| anyhow::anyhow!("manifest {}: {e}", path.display()))
+}
+
+/// Install the artifact described by `src_manifest` into the store rooted
+/// at `dst_root` under `name`.
+///
+/// Every chunk is read from the source store (the manifest's directory) and
+/// **verified against its manifest id and length before being committed**;
+/// a chunk already present and valid at the destination is skipped, which
+/// is both the dedup path (factors shared with an artifact installed
+/// earlier) and the resume path (a previous install that died partway).
+/// The destination manifest — the only thing that makes the artifact
+/// visible — is written last, atomically, and only after a final
+/// verification pass over every destination chunk.  On any error nothing
+/// becomes visible: at worst some verified chunks remain in `chunks/`,
+/// where a rerun will reuse them.
+pub fn install(src_manifest: &Path, dst_root: &Path, name: &str)
+               -> Result<PathBuf> {
+    let manifest = read_manifest_file(src_manifest)?;
+    let src_root = src_manifest.parent()
+        .ok_or_else(|| anyhow::anyhow!("{} has no parent",
+                                       src_manifest.display()))?;
+    let src = ChunkStore::open(src_root)?;
+    let dst = ChunkStore::open(dst_root)?;
+
+    for rec in &manifest.records {
+        if dst.has_valid(rec) {
+            continue; // resumed or deduplicated — already verified on disk
+        }
+        let bytes = src.get_verified(rec)?;
+        let written = dst.put(&bytes)?;
+        // put() hashes the bytes it wrote; a disagreement here would mean
+        // the source chunk verified under a different id than recorded
+        anyhow::ensure!(written == rec.id,
+                        "chunk `{}` changed identity during install",
+                        rec.label);
+    }
+
+    // final gate before the commit point: every chunk must verify at the
+    // destination (catches e.g. a chunk torn by a concurrent writer)
+    let bad = dst.verify_all(&manifest);
+    anyhow::ensure!(bad.is_empty(),
+                    "install verification failed for chunk(s): {}",
+                    bad.join(", "));
+    dst.write_manifest(name, &manifest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::manifest::ChunkClass;
+    use super::*;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("zs_artifact_store_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn rec(class: ChunkClass, label: &str, bytes: &[u8]) -> ChunkRecord {
+        ChunkRecord { class, label: label.into(), id: ChunkId::of(bytes),
+                      len: bytes.len() as u64 }
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_dedup() {
+        let root = tmp_root("putget");
+        let store = ChunkStore::open(&root).expect("open");
+        let payload = b"some chunk payload".to_vec();
+        let id = store.put(&payload).expect("put");
+        let id2 = store.put(&payload).expect("put again");
+        assert_eq!(id, id2);
+        let r = rec(ChunkClass::Param, "param:x", &payload);
+        assert!(store.has_valid(&r));
+        assert_eq!(store.get_verified(&r).expect("get"), payload);
+        // exactly one file in chunks/ — dedup stored it once
+        let n = std::fs::read_dir(root.join(CHUNK_DIR)).expect("dir")
+            .filter(|e| e.as_ref().map(|e| {
+                !e.file_name().to_string_lossy().starts_with('.')
+            }).unwrap_or(false))
+            .count();
+        assert_eq!(n, 1);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn corrupt_chunk_named_in_error() {
+        let root = tmp_root("corrupt");
+        let store = ChunkStore::open(&root).expect("open");
+        let payload = b"factor bytes".to_vec();
+        let id = store.put(&payload).expect("put");
+        let r = rec(ChunkClass::FactorU, "u:layers.0.wq", &payload);
+        let mut bad = payload.clone();
+        bad[3] ^= 0x40;
+        std::fs::write(store.chunk_path(&id), &bad).expect("corrupt");
+        assert!(!store.has_valid(&r));
+        let err = store.get_verified(&r).unwrap_err().to_string();
+        assert!(err.contains("u:layers.0.wq"), "{err}");
+        assert!(err.contains("hash"), "{err}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn install_commits_atomically_and_resumes() {
+        let src_root = tmp_root("inst_src");
+        let dst_root = tmp_root("inst_dst");
+        let src = ChunkStore::open(&src_root).expect("open src");
+        let a = b"chunk a".to_vec();
+        let b = vec![7u8; 1024];
+        src.put(&a).expect("put a");
+        src.put(&b).expect("put b");
+        let manifest = ArtifactManifest { records: vec![
+            rec(ChunkClass::Meta, "meta", &a),
+            rec(ChunkClass::Param, "param:w", &b),
+        ]};
+        let src_path = src.write_manifest("art", &manifest).expect("commit");
+
+        // pre-seed the destination with one valid chunk: the resume path
+        let dst = ChunkStore::open(&dst_root).expect("open dst");
+        dst.put(&a).expect("pre-seed");
+        let installed = install(&src_path, &dst_root, "art").expect("install");
+        assert_eq!(read_manifest_file(&installed).expect("reread"), manifest);
+        assert!(dst.verify_all(&manifest).is_empty());
+        // byte-identical manifests: resumed install == clean install
+        assert_eq!(std::fs::read(&installed).expect("dst bytes"),
+                   std::fs::read(&src_path).expect("src bytes"));
+
+        // a missing source chunk fails the install and the *new* manifest
+        // name never appears
+        std::fs::remove_file(src.chunk_path(&manifest.records[1].id))
+            .expect("delete");
+        std::fs::remove_file(dst.chunk_path(&manifest.records[1].id))
+            .expect("delete dst");
+        let err = install(&src_path, &dst_root, "art2").unwrap_err()
+            .to_string();
+        assert!(err.contains("param:w"), "{err}");
+        assert!(!dst.manifest_path("art2").exists(),
+                "failed install must not publish a manifest");
+        std::fs::remove_dir_all(&src_root).ok();
+        std::fs::remove_dir_all(&dst_root).ok();
+    }
+}

@@ -73,6 +73,13 @@ pub struct ExperimentConfig {
     /// (`rust/tests/trace_equiv.rs`), so this is a diagnostics knob, never
     /// a results knob.
     pub trace: bool,
+    /// packed artifact manifest to serve from (`serve --artifact`); empty
+    /// = build the engine in-process instead.  A server started on an
+    /// artifact supports live `reload` hot-swap (see `crate::artifact`)
+    pub artifact: String,
+    /// default chunk-store root for `pack` / `install` (`--out` / `--to`
+    /// override it per invocation)
+    pub artifact_store: String,
     /// where checkpoints live
     pub ckpt_dir: PathBuf,
     /// where result tables are appended
@@ -102,6 +109,9 @@ impl Default for ExperimentConfig {
             kv_block: 16,
             prefix_cache_blocks: 0,
             trace: false,
+            artifact: String::new(),
+            artifact_store: root.join("artifacts").join("store")
+                .to_string_lossy().into_owned(),
             ckpt_dir: root.join("artifacts").join("ckpts"),
             out_dir: root.join("results"),
         }
@@ -138,6 +148,8 @@ impl ExperimentConfig {
             prefix_cache_blocks: j.usize_or("prefix_cache_blocks",
                                             d.prefix_cache_blocks),
             trace: j.bool_or("trace", d.trace),
+            artifact: j.str_or("artifact", &d.artifact),
+            artifact_store: j.str_or("artifact_store", &d.artifact_store),
             ckpt_dir: j
                 .get("ckpt_dir")
                 .and_then(Json::as_str)
@@ -181,6 +193,8 @@ impl ExperimentConfig {
             ("prefix_cache_blocks",
              Json::num(self.prefix_cache_blocks as f64)),
             ("trace", Json::Bool(self.trace)),
+            ("artifact", Json::str(&self.artifact)),
+            ("artifact_store", Json::str(&self.artifact_store)),
             ("ckpt_dir", Json::str(self.ckpt_dir.to_str().unwrap_or("."))),
             ("out_dir", Json::str(self.out_dir.to_str().unwrap_or("."))),
         ])
@@ -219,18 +233,27 @@ mod tests {
         assert_eq!(back.prefix_cache_blocks, c.prefix_cache_blocks);
         assert_eq!(back.no_simd, c.no_simd);
         assert_eq!(back.trace, c.trace);
+        assert_eq!(back.artifact, c.artifact);
+        assert_eq!(back.artifact_store, c.artifact_store);
 
-        let forced = ExperimentConfig { no_simd: true, speculate_k: 3,
-                                        kv_block: 8,
-                                        prefix_cache_blocks: 256,
-                                        trace: true,
-                                        ..ExperimentConfig::default() };
+        let forced = ExperimentConfig {
+            no_simd: true,
+            speculate_k: 3,
+            kv_block: 8,
+            prefix_cache_blocks: 256,
+            trace: true,
+            artifact: "store/tiny-zs60.zsar".into(),
+            artifact_store: "/tmp/zs-store".into(),
+            ..ExperimentConfig::default()
+        };
         let back = ExperimentConfig::from_json(&forced.to_json());
         assert!(back.no_simd, "no_simd must survive the roundtrip");
         assert_eq!(back.speculate_k, 3);
         assert_eq!(back.kv_block, 8);
         assert_eq!(back.prefix_cache_blocks, 256);
         assert!(back.trace, "trace must survive the roundtrip");
+        assert_eq!(back.artifact, "store/tiny-zs60.zsar");
+        assert_eq!(back.artifact_store, "/tmp/zs-store");
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::eval::{self, EvalReport, EvalSpec};
 use crate::model::ParamStore;
 use crate::runtime::session::Session;
 use crate::runtime::Runtime;
+use crate::serve::Engine;
 use crate::trainer::{ensure_trained, TrainConfig};
 
 /// A compression method the coordinator can dispatch (paper nomenclature).
@@ -151,6 +152,52 @@ pub fn prepare<'rt>(rt: &'rt Runtime, cfg: &ExperimentConfig) -> Result<Prepared
     let calib = calibrate(&session, &params, &train_corpus, cfg.calib_batches,
                           cfg.seed ^ 0xCA11B)?;
     Ok(Prepared { session, params, world, train_corpus, eval_corpora, calib })
+}
+
+/// A complete serving state built from a prepared context: the weights the
+/// engine reads plus the target engine and optional drafter.  This is
+/// exactly what `server::run` / `artifact::pack` consume, so the CLI's
+/// `serve --listen` and `pack` subcommands build through one code path.
+pub struct ServingBuild {
+    /// weights the engine serves from (low-rank-applied when compressed)
+    pub params: ParamStore,
+    /// the serving (target) engine
+    pub engine: Engine,
+    /// optional speculative drafter engine
+    pub drafter: Option<Engine>,
+}
+
+/// Build a serving state from a prepared context: the dense engine
+/// (`lowrank_ratio` None) or the ZS-SVD low-rank engine at that ratio, and
+/// a high-compression ZS-SVD drafter at `draft_ratio` when given.  The
+/// drafter pairs with either target: the low-rank engines read only the
+/// embed/norm/untargeted weights out of `params`.
+pub fn build_serving(p: &Prepared, lowrank_ratio: Option<f64>,
+                     draft_ratio: Option<f64>) -> Result<ServingBuild> {
+    let (params, engine) = match lowrank_ratio {
+        Some(ratio) => {
+            let tag = format!("{}", (ratio * 100.0) as usize);
+            anyhow::ensure!(p.session.cfg.lowrank.contains_key(&tag),
+                            "no lowrank artifact `{tag}`");
+            let plan = run_method(p, &Method::zs(ratio), ratio)?;
+            let lm = p.session.cfg.lowrank.get(&tag).expect("checked above");
+            let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
+            (plan.apply(&p.params), engine)
+        }
+        None => (p.params.clone(), Engine::Dense),
+    };
+    let drafter = match draft_ratio {
+        Some(dratio) => {
+            let dtag = format!("{}", (dratio * 100.0) as usize);
+            anyhow::ensure!(p.session.cfg.lowrank.contains_key(&dtag),
+                            "no lowrank artifact `{dtag}` for the drafter");
+            let dplan = run_method(p, &Method::zs(dratio), dratio)?;
+            let dlm = p.session.cfg.lowrank.get(&dtag).expect("checked above");
+            Some(Engine::from_plan_capped(&dtag, &dplan, &dlm.ranks))
+        }
+        None => None,
+    };
+    Ok(ServingBuild { params, engine, drafter })
 }
 
 /// Run one method at one ratio; returns the compression plan.

@@ -41,6 +41,10 @@
 //!   [`run_decode_speculative`] the same wrapper with a drafter engine
 //!   proposing [`DecodeConfig::speculate_k`] tokens per slot per iteration
 //!   for the target to verify in one batched call.
+//!   [`run_engine_swappable`] is the live-reload variant: it serves from
+//!   an owned [`EngineSlot`] and A/B-swaps to a replacement posted to its
+//!   [`SwapMailbox`] once in-flight sequences drain (see `crate::artifact`
+//!   for the on-disk artifact format it pairs with).
 //!
 //! # Determinism
 //!
@@ -75,8 +79,8 @@ pub use kvpool::DEFAULT_KV_BLOCK;
 pub use prefix::PrefixTree;
 pub use sampler::{argmax, Sampler};
 pub use scheduler::{run_decode, run_decode_speculative, run_engine,
-                    sampler_seed, synth_requests,
+                    run_engine_swappable, sampler_seed, synth_requests,
                     synth_requests_shared_prefix, CompletedRequest,
                     DecodeConfig, DecodeEvent, DecodeRequest, DecodeStats,
-                    EngineCounters, RequestSource, SourcePoll,
-                    WorkloadSource};
+                    EngineCounters, EngineSlot, RequestSource, SourcePoll,
+                    SwapMailbox, WorkloadSource};

@@ -79,6 +79,18 @@
 //! is warm the moment decoding starts; the first generated token is still
 //! sampled from the TARGET's prompt logits.
 //!
+//! # Live plan hot-swap
+//!
+//! [`run_engine_swappable`] serves from an owned [`EngineSlot`] (params +
+//! target engine + optional drafter) and installs replacements posted to a
+//! [`SwapMailbox`] — the live half of the artifact story
+//! (`crate::artifact` is the on-disk half).  A pending swap pauses
+//! admissions while in-flight sequences drain on the old state; at the
+//! drain point the new slot takes over with cleared arena pools and a
+//! fresh prefix cache, so post-swap generations are bit-identical to a
+//! fresh process started on the swapped-in artifact.  The classic
+//! [`run_engine`] path borrows its engine and never swaps.
+//!
 //! # Determinism
 //!
 //! Generated tokens are bit-reproducible for any slot count / thread count
@@ -105,6 +117,7 @@
 //! [`EngineCounters::decode_tok_per_sec`]), so the serving benches report
 //! split prefill/decode token rates.
 
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -458,6 +471,9 @@ pub struct EngineCounters {
     pub prefix_miss_tokens: usize,
     /// prefix-tree blocks evicted under the capacity bound
     pub prefix_evictions: usize,
+    /// live plan swaps installed by [`run_engine_swappable`] (always 0 on
+    /// the borrowed [`run_engine`] path)
+    pub plan_swaps: usize,
     /// requests rejected at admission validation ([`DecodeEvent::Rejected`])
     pub requests_rejected: usize,
 }
@@ -646,6 +662,168 @@ fn step_engine_batch_modes(sess: &Session, params: &ParamStore,
     }
 }
 
+// ---------------------------------------------------------------------------
+// hot-swappable serving state
+// ---------------------------------------------------------------------------
+
+/// A complete, self-contained serving state: the trained parameters plus
+/// the target engine and an optional speculative drafter.
+///
+/// [`run_engine_swappable`] owns one of these and serves from it; a live
+/// replacement posted through its [`SwapMailbox`] is installed at the next
+/// drain point (no sequences in flight).  `crate::artifact` packs slots
+/// into content-addressed on-disk artifacts and loads them back with full
+/// verification, which is how a server hot-swaps to a new compression plan
+/// without restarting.
+pub struct EngineSlot {
+    /// the trained parameter store the engines read from
+    pub params: ParamStore,
+    /// the target engine (dense weights or low-rank factors)
+    pub engine: Engine,
+    /// optional low-rank drafter for speculative self-decode
+    pub drafter: Option<Engine>,
+}
+
+impl EngineSlot {
+    /// Human-readable label: the target engine's, plus the drafter's when
+    /// one is attached (`dense (drafter lowrank-r40)`).
+    pub fn label(&self) -> String {
+        match &self.drafter {
+            Some(d) => format!("{} (drafter {})", self.engine.label(),
+                               d.label()),
+            None => self.engine.label(),
+        }
+    }
+}
+
+/// Completion cell a swap requester blocks on: `Ok(new engine label)` once
+/// the engine installed the slot, `Err(reason)` if the engine exited first.
+type SwapCell = Arc<(Mutex<Option<Result<String, String>>>, Condvar)>;
+
+fn swap_signal(cell: &SwapCell, result: Result<String, String>) {
+    let (lock, cv) = &**cell;
+    *lock.lock().unwrap_or_else(|e| e.into_inner()) = Some(result);
+    cv.notify_all();
+}
+
+/// One posted swap: the replacement state plus its completion cell.
+struct PendingSwap {
+    slot: EngineSlot,
+    done: SwapCell,
+}
+
+/// Rendezvous between the engine thread and reload requesters.
+///
+/// A reload posts a fully-built (already loaded and verified)
+/// [`EngineSlot`] via [`request`](SwapMailbox::request) and blocks; the
+/// engine loop notices the pending swap, stops admitting new work so its
+/// in-flight sequences drain on the old state, installs the new slot at
+/// the drain point, and completes the request with the new engine's label.
+/// At most one swap can be pending at a time (a second concurrent request
+/// fails fast), and the engine fails a pending request when it exits, so a
+/// requester can never hang on a dead engine.
+pub struct SwapMailbox {
+    state: Mutex<MailboxState>,
+}
+
+#[derive(Default)]
+struct MailboxState {
+    pending: Option<PendingSwap>,
+    closed: bool,
+}
+
+impl SwapMailbox {
+    /// Empty mailbox: no swap pending, engine presumed live.
+    pub fn new() -> SwapMailbox {
+        SwapMailbox { state: Mutex::new(MailboxState::default()) }
+    }
+
+    /// Post `slot` and block until the engine installs it (returning the
+    /// new engine's label) or exits.  Fails immediately when another swap
+    /// is already in flight or the engine has already exited.
+    pub fn request(&self, slot: EngineSlot) -> Result<String> {
+        let done: SwapCell = Arc::new((Mutex::new(None), Condvar::new()));
+        {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            anyhow::ensure!(!st.closed,
+                            "engine is not running (server shutting down?)");
+            anyhow::ensure!(st.pending.is_none(),
+                            "another reload is already in flight");
+            st.pending = Some(PendingSwap { slot, done: Arc::clone(&done) });
+        }
+        let (lock, cv) = &*done;
+        let mut got = lock.lock().unwrap_or_else(|e| e.into_inner());
+        while got.is_none() {
+            got = cv.wait(got).unwrap_or_else(|e| e.into_inner());
+        }
+        match got.take().expect("loop exits only on Some") {
+            Ok(label) => Ok(label),
+            Err(msg) => Err(anyhow::anyhow!("{msg}")),
+        }
+    }
+
+    /// A swap is posted and waiting for the engine's next drain point.
+    pub fn pending(&self) -> bool {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+            .pending.is_some()
+    }
+
+    fn take(&self) -> Option<PendingSwap> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).pending.take()
+    }
+
+    /// Engine exit: fail any pending request and refuse future ones.
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.closed = true;
+        if let Some(p) = st.pending.take() {
+            swap_signal(&p.done,
+                        Err("engine exited before the swap was applied"
+                            .to_string()));
+        }
+    }
+}
+
+impl Default for SwapMailbox {
+    fn default() -> Self {
+        SwapMailbox::new()
+    }
+}
+
+/// What the engine loop serves from: the borrowed pieces of the classic
+/// [`run_engine`] signature, or an owned [`EngineSlot`] a swap can replace.
+enum Binding<'a> {
+    Borrowed {
+        params: &'a ParamStore,
+        engine: &'a Engine,
+        drafter: Option<&'a Engine>,
+    },
+    Owned(EngineSlot),
+}
+
+impl Binding<'_> {
+    fn params(&self) -> &ParamStore {
+        match self {
+            Binding::Borrowed { params, .. } => params,
+            Binding::Owned(s) => &s.params,
+        }
+    }
+
+    fn engine(&self) -> &Engine {
+        match self {
+            Binding::Borrowed { engine, .. } => engine,
+            Binding::Owned(s) => &s.engine,
+        }
+    }
+
+    fn drafter(&self) -> Option<&Engine> {
+        match self {
+            Binding::Borrowed { drafter, .. } => *drafter,
+            Binding::Owned(s) => s.drafter.as_ref(),
+        }
+    }
+}
+
 /// Run the long-lived continuous-batching scheduler until `source` drains:
 /// admit from `source` into free slots, advance occupied slots through the
 /// batched step/prefill kernels (one GEMM set across the batch per
@@ -671,9 +849,40 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                   source: &mut dyn RequestSource,
                   sink: &mut dyn FnMut(DecodeEvent))
                   -> Result<EngineCounters> {
+    run_engine_inner(sess, Binding::Borrowed { params, engine, drafter },
+                     cfg, source, sink, None)
+}
+
+/// [`run_engine`] over an owned, hot-swappable [`EngineSlot`].
+///
+/// While a swap posted to `mailbox` is pending, the loop stops admitting
+/// new requests (they stay queued at the source) and in-flight sequences
+/// finish on the old state.  Once every slot has drained, the new slot is
+/// installed, the pooled KV arenas are dropped (their rows were computed
+/// under the old weights) and the prefix cache is rebuilt empty — no state
+/// derived from the old plan survives into post-swap generations, which is
+/// what makes a swapped-in artifact produce output **bit-identical** to a
+/// fresh process started on it (`rust/tests/server_loopback.rs`).  The
+/// mailbox is closed on exit, failing any still-pending request instead of
+/// leaving its requester blocked.
+pub fn run_engine_swappable(sess: &Session, slot: EngineSlot,
+                            cfg: &DecodeConfig,
+                            source: &mut dyn RequestSource,
+                            sink: &mut dyn FnMut(DecodeEvent),
+                            mailbox: &SwapMailbox)
+                            -> Result<EngineCounters> {
+    let r = run_engine_inner(sess, Binding::Owned(slot), cfg, source, sink,
+                             Some(mailbox));
+    mailbox.close();
+    r
+}
+
+fn run_engine_inner(sess: &Session, mut binding: Binding<'_>,
+                    cfg: &DecodeConfig, source: &mut dyn RequestSource,
+                    sink: &mut dyn FnMut(DecodeEvent),
+                    mailbox: Option<&SwapMailbox>)
+                    -> Result<EngineCounters> {
     anyhow::ensure!(cfg.max_slots >= 1, "decode needs at least one slot");
-    // speculation needs both the knob and a drafter engine
-    let spec_k = if drafter.is_some() { cfg.speculate_k } else { 0 };
 
     let start = Instant::now();
     let mut slots: Vec<Option<Active>> = Vec::new();
@@ -687,20 +896,60 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
     // the prefix-sharing cache: prompts of completed prefills keyed by
     // block-sized token runs, holding shared refs into the paged pool.
     // Drops (and releases every held block) when the run returns.
-    let mut tree = (cfg.prefix_cache_blocks > 0).then(|| {
-        let block = if cfg.kv_block == 0 { kvpool::DEFAULT_KV_BLOCK }
-                    else { cfg.kv_block };
-        PrefixTree::new(block, cfg.prefix_cache_blocks)
-    });
+    let block = if cfg.kv_block == 0 { kvpool::DEFAULT_KV_BLOCK }
+                else { cfg.kv_block };
+    let mut tree = (cfg.prefix_cache_blocks > 0)
+        .then(|| PrefixTree::new(block, cfg.prefix_cache_blocks));
     let mut c = EngineCounters::default();
     let mut iter = 0usize;
     let mut drained = false;
 
     loop {
+        // a posted swap installs at the drain point: admissions pause (new
+        // requests stay queued at the source) while in-flight sequences
+        // finish on the old state, then the new slot takes over with fresh
+        // pools and an empty prefix cache
+        let mut swap_wait = false;
+        if let Some(m) = mailbox {
+            if m.pending() && !drained {
+                if slots.iter().any(Option::is_some) {
+                    swap_wait = true;
+                } else if let Some(PendingSwap { slot, done }) = m.take() {
+                    let t_swap = Instant::now();
+                    let label = slot.label();
+                    binding = Binding::Owned(slot);
+                    // nothing computed under the old weights may survive:
+                    // pooled arenas and the prefix tree hold old-plan KV
+                    // rows, so they are dropped, not recycled
+                    arena_pool.clear();
+                    draft_pool.clear();
+                    if tree.is_some() {
+                        tree = Some(PrefixTree::new(
+                            block, cfg.prefix_cache_blocks));
+                    }
+                    c.plan_swaps += 1;
+                    crate::obs::counter_add("artifact.swaps", 1);
+                    if crate::obs::enabled() {
+                        crate::obs::emit_span(
+                            "plan_swap", "sched", crate::obs::us_of(t_swap),
+                            t_swap.elapsed().as_micros() as u64,
+                            crate::obs::PID_ENGINE, crate::obs::tid(),
+                            vec![("engine", Json::str(&label))]);
+                    }
+                    swap_signal(&done, Ok(label));
+                }
+            }
+        }
+
+        // speculation needs both the knob and a drafter engine — re-derived
+        // every iteration because a swap can attach or detach the drafter
+        let spec_k = if binding.drafter().is_some() { cfg.speculate_k }
+                     else { 0 };
+
         source.tick(iter);
 
         // admit pending requests into free slots, in source order
-        if !drained {
+        if !drained && !swap_wait {
             'admit: for slot in slots.iter_mut() {
                 if slot.is_some() {
                     continue;
@@ -879,7 +1128,7 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                 let max_k = keff.iter().copied().max().unwrap_or(0);
                 let t_draft = Instant::now();
                 if max_k > 0 {
-                    let draft_engine = drafter.expect("spec_k > 0");
+                    let draft_engine = binding.drafter().expect("spec_k > 0");
                     // catch-up + first draft: one ragged batched call
                     // feeding each drafting slot whatever its drafter has
                     // not ingested yet (always at least the pending
@@ -922,8 +1171,9 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                             seqs.push((draft, &catchups[di][..]));
                         }
                         let modes = vec![LogitsMode::Last; seqs.len()];
-                        step_engine_batch_modes(sess, params, draft_engine,
-                                                &mut seqs, &modes)?
+                        step_engine_batch_modes(sess, binding.params(),
+                                                draft_engine, &mut seqs,
+                                                &modes)?
                     };
                     let mut w = 0usize;
                     for di in 0..act.len() {
@@ -962,7 +1212,7 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                                 f += 1;
                             }
                             let modes = vec![LogitsMode::Last; seqs.len()];
-                            step_engine_batch_modes(sess, params,
+                            step_engine_batch_modes(sess, binding.params(),
                                                     draft_engine, &mut seqs,
                                                     &modes)?
                         };
@@ -1007,7 +1257,8 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                         seqs.push((&mut a.cache, &runs[di][..]));
                     }
                     let modes = vec![LogitsMode::All; seqs.len()];
-                    step_engine_batch_modes(sess, params, engine, &mut seqs,
+                    step_engine_batch_modes(sess, binding.params(),
+                                            binding.engine(), &mut seqs,
                                             &modes)?
                 };
                 crate::obs::counter_add("phase.verify_ns",
@@ -1124,7 +1375,8 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                     // only a prompt-completing chunk feeds the sampler
                     want.push(take == rem);
                 }
-                (step_engine_batch(sess, params, engine, &mut seqs, &want)?,
+                (step_engine_batch(sess, binding.params(), binding.engine(),
+                                   &mut seqs, &want)?,
                  takes)
             };
             // mirror prompt chunks into the drafter caches of the
@@ -1137,7 +1389,7 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
             // finishes first is picked up by the decode-phase catch-up
             // run).  The FIRST generated token is still sampled from the
             // target's prompt logits below, preserving bit-identity.
-            if let Some(draft_engine) = drafter {
+            if let Some(draft_engine) = binding.drafter() {
                 let mut seqs: Vec<(&mut KvCache, &[i32])> = Vec::new();
                 for s in slots.iter_mut() {
                     let Some(a) = s else { continue };
@@ -1159,8 +1411,9 @@ pub fn run_engine(sess: &Session, params: &ParamStore, engine: &Engine,
                 }
                 if !seqs.is_empty() {
                     let modes = vec![LogitsMode::None; seqs.len()];
-                    step_engine_batch_modes(sess, params, draft_engine,
-                                            &mut seqs, &modes)?;
+                    step_engine_batch_modes(sess, binding.params(),
+                                            draft_engine, &mut seqs,
+                                            &modes)?;
                 }
             }
             let pre_el = t_pre.elapsed();
@@ -1471,6 +1724,59 @@ mod tests {
         src.tick(4);
         assert!(matches!(src.poll(4), SourcePoll::Ready(r, _) if r.id == 2));
         assert!(matches!(src.poll(4), SourcePoll::Drained));
+    }
+
+    fn dummy_slot() -> EngineSlot {
+        EngineSlot {
+            params: ParamStore::new_empty(Vec::new()),
+            engine: Engine::Dense,
+            drafter: None,
+        }
+    }
+
+    #[test]
+    fn engine_slot_labels() {
+        let mut s = dummy_slot();
+        assert_eq!(s.label(), "dense");
+        s.drafter = Some(Engine::Lowrank {
+            tag: "40".into(),
+            factors: std::collections::BTreeMap::new(),
+        });
+        assert_eq!(s.label(), "dense (drafter lowrank-r40)");
+    }
+
+    #[test]
+    fn swap_mailbox_rejects_double_post_and_post_after_close() {
+        let m = SwapMailbox::new();
+        assert!(!m.pending());
+        // requester blocks on the cell, so drive the post/complete halves
+        // from two threads: one posts, the "engine" takes + signals
+        std::thread::scope(|s| {
+            let h = s.spawn(|| m.request(dummy_slot()));
+            // wait for the post to land, then a second post must fail fast
+            while !m.pending() {
+                std::thread::yield_now();
+            }
+            let second = m.request(dummy_slot());
+            assert!(second.is_err(), "double post must fail");
+            assert!(second.unwrap_err().to_string().contains("in flight"));
+            let p = m.take().expect("posted swap");
+            swap_signal(&p.done, Ok(p.slot.label()));
+            let got = h.join().expect("requester thread");
+            assert_eq!(got.expect("swap completed"), "dense");
+        });
+        // engine exit: pending and future requests fail instead of hanging
+        std::thread::scope(|s| {
+            let h = s.spawn(|| m.request(dummy_slot()));
+            while !m.pending() {
+                std::thread::yield_now();
+            }
+            m.close();
+            let got = h.join().expect("requester thread");
+            assert!(got.is_err(), "pending swap must fail on engine exit");
+        });
+        assert!(m.request(dummy_slot()).is_err(),
+                "post after close must fail");
     }
 
     #[test]

@@ -24,6 +24,7 @@
 
 pub mod util;
 pub mod obs;
+pub mod artifact;
 pub mod exec;
 pub mod tensor;
 pub mod linalg;

@@ -27,10 +27,27 @@
 //!                            prefix-sharing KV cache (repeated prompts
 //!                            skip prefill for their cached block-aligned
 //!                            prefix, bit-identically) and `--kv-block N`
-//!                            sets the paged-block granularity
+//!                            sets the paged-block granularity;
+//!                            `--artifact PATH` serves straight from a
+//!                            packed artifact manifest (no training or
+//!                            compression at startup) — such a server
+//!                            accepts live `reload` hot-swaps
+//!   pack                     compress + pack a complete serving state
+//!                            (params, engine, optional drafter) into the
+//!                            content-addressed artifact store (`--out DIR`,
+//!                            `--name NAME`, `--dense` for the dense
+//!                            engine, `--ratio` for ZS-SVD, `--draft-ratio`
+//!                            to include a speculative drafter)
+//!   install                  copy + verify a packed artifact into another
+//!                            store (`--from MANIFEST`, `--to DIR`,
+//!                            `--name NAME`); resumable, atomic, and
+//!                            every chunk is checksum-verified before the
+//!                            manifest commits
 //!   client                   drive a running server over TCP
 //!                            (`--connect <addr>`, `--requests`,
 //!                            `--prompt-len`, `--max-new-tokens`,
+//!                            `--reload PATH` to hot-swap the server onto
+//!                            a packed artifact before generating,
 //!                            `--shutdown` to drain the server afterwards)
 //!   trace                    validate a trace/report file produced by
 //!                            `--trace-out` or `compress --report`
@@ -46,19 +63,23 @@
 //! ZS-SVD selection report (rank, predicted ΔL, zero-sum trajectory).
 //! Tracing is observe-only: outputs are bit-identical with it on or off.
 
+use std::path::{Path, PathBuf};
+
 use anyhow::Result;
 
+use zs_svd::artifact;
 use zs_svd::compress::baselines::PruneScore;
 use zs_svd::config::ExperimentConfig;
 use zs_svd::coordinator::{self, Method};
 use zs_svd::decode::{run_decode, run_decode_speculative, synth_requests,
-                     DecodeConfig};
+                     DecodeConfig, EngineSlot};
 use zs_svd::eval::EvalSpec;
 use zs_svd::report::{acc2, f2, latency_cells, mb, pct, Table,
                      LATENCY_HEADERS};
+use zs_svd::runtime::session::Session;
 use zs_svd::runtime::Runtime;
 use zs_svd::serve::{run_serving, Engine, ServeConfig};
-use zs_svd::server::{self, GenerateOutcome, GenerateReq};
+use zs_svd::server::{self, GenerateOutcome, GenerateReq, ReloadOutcome};
 use zs_svd::util::cli::Args;
 
 fn parse_method(name: &str, ratio: f64) -> Method {
@@ -129,44 +150,68 @@ fn eval_spec(args: &Args, cfg: &ExperimentConfig) -> EvalSpec {
     }
 }
 
-/// `serve --listen <addr>`: the network server (dense or `--plan` low-rank
-/// engine), blocking until a protocol `shutdown` drains it.
+/// `serve --listen <addr>`: the network server, blocking until a protocol
+/// `shutdown` drains it.  The serving state is either built in-process
+/// (dense, or `--plan` low-rank) or loaded from a packed artifact
+/// (`--artifact PATH` / `cfg.artifact`); either way the server owns it and
+/// accepts live `reload` hot-swaps.
 fn serve_listen(rt: &Runtime, args: &Args, cfg: &ExperimentConfig,
                 listen: &str) -> Result<()> {
-    let ratio = args.f64_or("ratio", 0.6);
-    let p = coordinator::prepare(rt, cfg)?;
-
-    let applied; // low-rank-applied weights must outlive the server run
-    let (params, engine) = if args.flag("plan") {
-        let tag = format!("{}", (ratio * 100.0) as usize);
-        anyhow::ensure!(p.session.cfg.lowrank.contains_key(&tag),
-                        "no lowrank artifact `{tag}`");
-        let plan = coordinator::run_method(&p, &Method::zs(ratio), ratio)?;
-        let lm = p.session.cfg.lowrank.get(&tag).expect("checked above");
-        let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
-        applied = plan.apply(&p.params);
-        (&applied, engine)
-    } else {
-        (&p.params, Engine::Dense)
-    };
-
     let spec_k = args.usize_or("speculate-k", cfg.speculate_k);
-    // the drafter is a high-compression ZS-SVD engine over the SAME param
-    // store the target serves from: the low-rank engine reads only the
-    // embed/norm/untargeted weights out of `params`, so the pairing is
-    // valid for both the dense and the `--plan` target
-    let drafter = if spec_k > 0 {
-        let dratio = args.f64_or("draft-ratio", 0.4);
-        let dtag = format!("{}", (dratio * 100.0) as usize);
-        anyhow::ensure!(p.session.cfg.lowrank.contains_key(&dtag),
-                        "no lowrank artifact `{dtag}` for the drafter");
-        let dplan = coordinator::run_method(&p, &Method::zs(dratio), dratio)?;
-        let dlm = p.session.cfg.lowrank.get(&dtag).expect("checked above");
-        Some(Engine::from_plan_capped(&dtag, &dplan, &dlm.ranks))
-    } else {
-        None
-    };
+    let artifact_path = args.get("artifact").map(str::to_string)
+        .or_else(|| (!cfg.artifact.is_empty()).then(|| cfg.artifact.clone()));
 
+    if let Some(art) = artifact_path {
+        // no training / compression at startup — but the execution knobs
+        // coordinator::prepare would normally apply still matter
+        if cfg.threads > 0 {
+            zs_svd::exec::set_threads(cfg.threads);
+        }
+        if cfg.no_simd {
+            zs_svd::linalg::kernels::force_backend(
+                Some(zs_svd::linalg::kernels::Backend::Portable));
+        }
+        if cfg.trace {
+            zs_svd::obs::set_enabled(true);
+        }
+        let bundle = artifact::load(Path::new(&art))?;
+        anyhow::ensure!(rt.manifest.configs.contains_key(&bundle.model),
+                        "artifact `{art}` is packed for unknown model \
+                         config `{}`", bundle.model);
+        let session = Session::new(rt, &bundle.model);
+        bundle.validate_against(&session.cfg)?;
+        println!("loaded artifact {art} (model {})", bundle.model);
+        let slot = EngineSlot { params: bundle.params, engine: bundle.engine,
+                               drafter: bundle.drafter };
+        serve_with_slot(&session, slot, args, cfg, listen, spec_k)
+    } else {
+        let p = coordinator::prepare(rt, cfg)?;
+        let lowrank = if args.flag("plan") {
+            Some(args.f64_or("ratio", 0.6))
+        } else {
+            None
+        };
+        // the drafter is a high-compression ZS-SVD engine over the SAME
+        // param store the target serves from: the low-rank engine reads
+        // only the embed/norm/untargeted weights out of `params`, so the
+        // pairing is valid for both the dense and the `--plan` target
+        let draft = if spec_k > 0 {
+            Some(args.f64_or("draft-ratio", 0.4))
+        } else {
+            None
+        };
+        let sb = coordinator::build_serving(&p, lowrank, draft)?;
+        let slot = EngineSlot { params: sb.params, engine: sb.engine,
+                               drafter: sb.drafter };
+        serve_with_slot(&p.session, slot, args, cfg, listen, spec_k)
+    }
+}
+
+/// The common tail of `serve --listen`: configure, run the hot-swappable
+/// server on an owned slot, and print the session table.
+fn serve_with_slot(session: &Session, slot: EngineSlot, args: &Args,
+                   cfg: &ExperimentConfig, listen: &str, spec_k: usize)
+                   -> Result<()> {
     let scfg = server::ServerConfig {
         addr: listen.to_string(),
         queue_depth: args.usize_or("queue-depth", cfg.queue_depth),
@@ -185,14 +230,13 @@ fn serve_listen(rt: &Runtime, args: &Args, cfg: &ExperimentConfig,
     };
     let port_file = args.get("port-file").map(|s| s.to_string());
     println!("serving {} engine on {listen} (slots {}, queue depth {}{})",
-             engine.label(), scfg.decode.max_slots, scfg.queue_depth,
-             match &drafter {
+             slot.engine.label(), scfg.decode.max_slots, scfg.queue_depth,
+             match &slot.drafter {
                  Some(d) => format!(", drafter {} k={spec_k}", d.label()),
                  None => String::new(),
              });
 
-    let stats = server::run(&p.session, params, &engine, drafter.as_ref(),
-                            &scfg, |addr| {
+    let stats = server::run_swappable(session, slot, &scfg, |addr| {
         println!("listening on {addr}");
         if let Some(pf) = &port_file {
             if let Err(e) = std::fs::write(pf, addr.to_string()) {
@@ -223,6 +267,10 @@ fn serve_listen(rt: &Runtime, args: &Args, cfg: &ExperimentConfig,
                    format!("{:.1}%",
                            stats.counters.draft_acceptance_rate() * 100.0)]);
     }
+    if stats.counters.plan_swaps > 0 {
+        t.row(vec!["plan swaps".into(),
+                   format!("{}", stats.counters.plan_swaps)]);
+    }
     for (h, v) in LATENCY_HEADERS.iter().zip(latency_cells(&stats.e2e)) {
         t.row(vec![format!("e2e {h}"), v]);
     }
@@ -251,6 +299,19 @@ fn client_session(args: &Args, rt: &Runtime) -> Result<()> {
         .unwrap_or(256)
         .max(2);
     let mut c = server::Client::connect(addr.as_str())?;
+    if let Some(art) = args.get("reload") {
+        // hot-swap the server BEFORE generating, so this session's token
+        // lines reflect the reloaded plan (ci.sh diffs them against a
+        // session on the un-swapped server to gate swap invariance)
+        match c.reload(art)? {
+            ReloadOutcome::Swapped { engine, .. } => {
+                println!("reloaded artifact: now serving {engine}");
+            }
+            ReloadOutcome::Rejected { code, message } => {
+                anyhow::bail!("reload rejected: {code} ({message})");
+            }
+        }
+    }
     for i in 0..n {
         let prompt = server::scripted_prompt(i, plen, vocab);
         let g = GenerateReq { id: i as u64, prompt, max_new_tokens: max_new,
@@ -290,6 +351,10 @@ fn client_session(args: &Args, rt: &Runtime) -> Result<()> {
              f2(snap.f64_or("uptime_tok_per_sec", 0.0)),
              snap.usize_or("queue_depth", 0),
              snap.f64_or("uptime_secs", 0.0));
+    let swaps = snap.get("counters")
+        .map(|c| c.usize_or("artifact.swaps", 0))
+        .unwrap_or(0);
+    println!("artifact swaps: {swaps}");
     if args.flag("shutdown") {
         c.shutdown_server()?;
         println!("server acknowledged shutdown");
@@ -550,6 +615,60 @@ fn main() -> Result<()> {
             }
         }
 
+        "pack" => {
+            let cfg = exp_config(&args);
+            let p = coordinator::prepare(&rt, &cfg)?;
+            let lowrank = if args.flag("dense") {
+                None
+            } else {
+                Some(args.f64_or("ratio", 0.6))
+            };
+            // include a speculative drafter when asked for explicitly or
+            // when the config's serving default speculates
+            let draft = if args.get("draft-ratio").is_some()
+                || args.usize_or("speculate-k", cfg.speculate_k) > 0
+            {
+                Some(args.f64_or("draft-ratio", 0.4))
+            } else {
+                None
+            };
+            let sb = coordinator::build_serving(&p, lowrank, draft)?;
+            let store_root =
+                PathBuf::from(args.str_or("out", &cfg.artifact_store));
+            let name = args.get("name").map(str::to_string)
+                .unwrap_or_else(|| match lowrank {
+                    Some(r) => format!("{}-zs{}", cfg.model,
+                                       (r * 100.0) as usize),
+                    None => format!("{}-dense", cfg.model),
+                });
+            let path = artifact::pack(&p.session.cfg, &sb.params, &sb.engine,
+                                      sb.drafter.as_ref(), &store_root,
+                                      &name)?;
+            println!("packed {} engine{} into {}",
+                     sb.engine.label(),
+                     match &sb.drafter {
+                         Some(d) => format!(" (drafter {})", d.label()),
+                         None => String::new(),
+                     },
+                     path.display());
+        }
+
+        "install" => {
+            let cfg = exp_config(&args);
+            let from = args.get("from").ok_or_else(|| anyhow::anyhow!(
+                "usage: zs-svd install --from <manifest.zsar> [--to DIR] \
+                 [--name NAME]"))?;
+            let from = Path::new(from);
+            let to = PathBuf::from(args.str_or("to", &cfg.artifact_store));
+            let name = args.get("name").map(str::to_string)
+                .unwrap_or_else(|| from.file_stem()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or("artifact")
+                    .to_string());
+            let path = artifact::install(from, &to, &name)?;
+            println!("installed artifact {}", path.display());
+        }
+
         "client" => {
             return client_session(&args, &rt);
         }
@@ -620,8 +739,8 @@ fn main() -> Result<()> {
 
         other => {
             anyhow::bail!("unknown subcommand `{other}` \
-                           (info|train|eval|compress|sweep|serve|client|\
-                            trace)");
+                           (info|train|eval|compress|sweep|serve|pack|\
+                            install|client|trace)");
         }
     }
     write_trace_out(&args)?;

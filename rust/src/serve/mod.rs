@@ -31,7 +31,10 @@ use crate::tensor::{IntTensor, Mat};
 use crate::util::rng::Rng;
 use crate::util::stats::LatencySummary;
 
-/// Which executable serves the requests.
+/// Which executable serves the requests.  `Clone` is deliberate: the
+/// hot-swap path (`crate::decode::EngineSlot`, `crate::artifact`) packs and
+/// installs owned engines while a borrowed original keeps serving.
+#[derive(Clone)]
 pub enum Engine {
     /// the uncompressed weights through the dense graphs
     Dense,

@@ -37,6 +37,27 @@ pub enum GenerateOutcome {
     },
 }
 
+/// Outcome of one blocking `reload` round-trip.
+#[derive(Clone, Debug)]
+pub enum ReloadOutcome {
+    /// the artifact verified and the server swapped to it
+    Swapped {
+        /// manifest path the server loaded (echoed)
+        artifact: String,
+        /// label of the engine now serving (e.g. `lowrank-r60`)
+        engine: String,
+    },
+    /// structured rejection (`reload_failed`); the previous plan keeps
+    /// serving
+    Rejected {
+        /// structured error code
+        code: String,
+        /// human-readable detail (names the corrupt chunk when integrity
+        /// verification failed)
+        message: String,
+    },
+}
+
 /// One completed generation as the client observed it.
 #[derive(Clone, Debug)]
 pub struct GenerationResult {
@@ -165,6 +186,9 @@ impl Client {
                 Event::Trace(_) => {
                     return Err(bad_data("unexpected trace event".into()));
                 }
+                Event::Reloaded { .. } => {
+                    return Err(bad_data("unexpected reloaded event".into()));
+                }
                 Event::ShuttingDown => {
                     return Ok(GenerateOutcome::Rejected {
                         code: protocol::ERR_SHUTTING_DOWN.into(),
@@ -206,6 +230,30 @@ impl Client {
                         "unexpected event awaiting trace: {other:?}")));
                 }
                 None => return Err(bad_data("eof awaiting trace".into())),
+            }
+        }
+    }
+
+    /// Ask the server to hot-swap to the artifact at `artifact` (a path on
+    /// the *server* host) and block until the swap is installed or
+    /// rejected.  Blocks through the drain of in-flight sequences — only
+    /// this connection waits; token streams on other connections continue.
+    /// Only safe with no generation in flight on this connection.
+    pub fn reload(&mut self, artifact: &str) -> io::Result<ReloadOutcome> {
+        self.send(&Request::Reload { artifact: artifact.to_string() })?;
+        loop {
+            match self.next_event()? {
+                Some(Event::Reloaded { artifact, engine }) => {
+                    return Ok(ReloadOutcome::Swapped { artifact, engine });
+                }
+                Some(Event::Error { id: None, code, message }) => {
+                    return Ok(ReloadOutcome::Rejected { code, message });
+                }
+                Some(other) => {
+                    return Err(bad_data(format!(
+                        "unexpected event awaiting reload: {other:?}")));
+                }
+                None => return Err(bad_data("eof awaiting reload".into())),
             }
         }
     }

@@ -22,22 +22,36 @@
 //! sockets down, which unblocks the readers, and the scope joins.  Clients
 //! with in-flight work see it complete; new work is rejected with
 //! `shutting_down`.
+//!
+//! # Live reload
+//!
+//! A server started through [`run_swappable`] owns its engine state (an
+//! [`EngineSlot`]) and accepts `reload` requests: the reader thread loads
+//! and fully verifies the named artifact *off* the engine thread, then
+//! posts the new slot to the engine's [`SwapMailbox`] and blocks until the
+//! scheduler has drained in-flight sequences and installed it (see
+//! `decode::run_engine_swappable`).  Verification failures never touch the
+//! engine — the old plan keeps serving and the client gets a structured
+//! `reload_failed` error.  Only the reload's own connection blocks while
+//! the swap drains; token fan-out rides the writer threads.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::admission::{BoundedQueue, PopState, PushError};
 use super::metrics::Metrics;
 use super::protocol::{self, Event, Request, ERR_BAD_REQUEST, ERR_OVERLOADED,
-                      ERR_SHUTTING_DOWN};
+                      ERR_RELOAD_FAILED, ERR_SHUTTING_DOWN};
 use crate::decode::{self, DecodeConfig, DecodeEvent, DecodeRequest,
-                    EngineCounters, RequestSource, SourcePoll};
+                    EngineCounters, EngineSlot, RequestSource, SourcePoll,
+                    SwapMailbox};
 use crate::model::ParamStore;
 use crate::runtime::session::Session;
 use crate::serve::Engine;
@@ -283,8 +297,10 @@ fn writer_loop(conn: &ConnState, mut stream: TcpStream) {
 
 #[allow(clippy::too_many_arguments)]
 fn reader_loop(shared: &Shared, conn: &Arc<ConnState>, stream: TcpStream,
-               next_id: &AtomicUsize, scfg: &ServerConfig, seq_len: usize,
-               vocab: usize, local: SocketAddr) {
+               next_id: &AtomicUsize, scfg: &ServerConfig, sess: &Session,
+               mailbox: Option<&SwapMailbox>, local: SocketAddr) {
+    let seq_len = sess.cfg.seq_len;
+    let vocab = sess.cfg.vocab;
     let mut reader = BufReader::new(stream);
     let mut buf = String::new();
     loop {
@@ -312,6 +328,29 @@ fn reader_loop(shared: &Shared, conn: &Arc<ConnState>, stream: TcpStream,
                 // events, which is more than a wire reply should carry
                 conn.send(&Event::Trace(crate::obs::snapshot_json(2048)));
             }
+            Ok(Request::Reload { artifact }) => match mailbox {
+                None => conn.send(&Event::Error {
+                    id: None,
+                    code: ERR_RELOAD_FAILED.into(),
+                    message: "this server was started without hot-swap \
+                              support (run_swappable)"
+                        .into(),
+                }),
+                Some(mb) => match apply_reload(sess, mb, &artifact) {
+                    Ok(engine) => {
+                        shared.metrics.inc("artifact.swaps", 1);
+                        conn.send(&Event::Reloaded { artifact, engine });
+                    }
+                    Err(e) => {
+                        shared.metrics.inc("artifact.reload_failures", 1);
+                        conn.send(&Event::Error {
+                            id: None,
+                            code: ERR_RELOAD_FAILED.into(),
+                            message: format!("{e}"),
+                        });
+                    }
+                },
+            },
             Ok(Request::Shutdown) => {
                 conn.send(&Event::ShuttingDown);
                 initiate_shutdown(shared, local);
@@ -391,6 +430,23 @@ fn reader_loop(shared: &Shared, conn: &Arc<ConnState>, stream: TcpStream,
     conn.maybe_close();
 }
 
+/// Load + verify an artifact and post it to the engine's swap mailbox.
+/// Runs on the reader thread; returns the new engine label once the
+/// scheduler has installed the slot.  Every failure mode (missing file,
+/// corrupt chunk, model mismatch, concurrent reload) surfaces here before
+/// the engine is touched.
+fn apply_reload(sess: &Session, mailbox: &SwapMailbox, artifact: &str)
+                -> Result<String> {
+    let bundle = crate::artifact::load(Path::new(artifact))
+        .with_context(|| format!("loading artifact `{artifact}`"))?;
+    bundle.validate_against(&sess.cfg)?;
+    mailbox.request(EngineSlot {
+        params: bundle.params,
+        engine: bundle.engine,
+        drafter: bundle.drafter,
+    })
+}
+
 fn validate_prompt(prompt: &[i32], seq_len: usize, vocab: usize)
                    -> Result<(), String> {
     if prompt.is_empty() {
@@ -412,6 +468,17 @@ fn validate_prompt(prompt: &[i32], seq_len: usize, vocab: usize)
 // server entry point
 // ---------------------------------------------------------------------------
 
+/// How the engine thread holds its weights: borrowed (the classic fixed
+/// server) or owned (the hot-swappable server, which can replace them).
+enum EngineBinding<'a> {
+    Fixed {
+        params: &'a ParamStore,
+        engine: &'a Engine,
+        drafter: Option<&'a Engine>,
+    },
+    Swappable(EngineSlot),
+}
+
 /// Bind `cfg.addr`, report the bound address through `ready`, and serve
 /// until a `shutdown` request drains the engine.  Blocking: returns only
 /// after every connection and the engine have unwound, with the session's
@@ -422,10 +489,38 @@ fn validate_prompt(prompt: &[i32], seq_len: usize, vocab: usize)
 /// `speculate_k` tokens per greedy slot per iteration and `engine` (the
 /// target) verifies them in one batched call.  Streamed tokens are
 /// bit-identical to the non-speculative path.
+///
+/// This server has no hot-swap support: `reload` requests are answered
+/// with a structured `reload_failed` error.  Use [`run_swappable`] for a
+/// server that can replace its plan under traffic.
 pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
            drafter: Option<&Engine>, cfg: &ServerConfig,
            ready: impl FnOnce(SocketAddr))
            -> Result<ServerStats> {
+    run_inner(sess, EngineBinding::Fixed { params, engine, drafter }, cfg,
+              ready)
+}
+
+/// [`run`] with an *owned* engine state and live A/B hot-swap: a `reload`
+/// wire request loads + verifies a packed artifact (`crate::artifact`) off
+/// the engine thread and swaps it in once in-flight sequences drain.
+/// Post-swap generations are bit-identical to a fresh server started on
+/// the swapped-in artifact; a failed verification leaves the current plan
+/// serving untouched.
+///
+/// `ServerStats::engine` reports the *initial* slot's label even after
+/// swaps — the live engine label travels on each `reloaded` event, and
+/// `counters.plan_swaps` / the `artifact.swaps` wire counter say how many
+/// swaps were installed.
+pub fn run_swappable(sess: &Session, slot: EngineSlot, cfg: &ServerConfig,
+                     ready: impl FnOnce(SocketAddr))
+                     -> Result<ServerStats> {
+    run_inner(sess, EngineBinding::Swappable(slot), cfg, ready)
+}
+
+fn run_inner(sess: &Session, binding: EngineBinding<'_>, cfg: &ServerConfig,
+             ready: impl FnOnce(SocketAddr))
+             -> Result<ServerStats> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let local = listener.local_addr()?;
     let shared = Shared {
@@ -436,8 +531,22 @@ pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
     };
     let next_id = AtomicUsize::new(0);
     let conns: Mutex<Vec<Arc<ConnState>>> = Mutex::new(Vec::new());
-    let seq_len = sess.cfg.seq_len;
-    let vocab = sess.cfg.vocab;
+    // stats label + drafter presence, captured before the binding moves
+    // into the engine thread
+    let (engine_label, has_drafter) = match &binding {
+        EngineBinding::Fixed { engine, drafter, .. } => {
+            (engine.label(), drafter.is_some())
+        }
+        EngineBinding::Swappable(slot) => {
+            (slot.engine.label(), slot.drafter.is_some())
+        }
+    };
+    // one mailbox per server run; readers see it only on the swappable path
+    let mailbox = SwapMailbox::new();
+    let mailbox_ref: Option<&SwapMailbox> = match &binding {
+        EngineBinding::Fixed { .. } => None,
+        EngineBinding::Swappable(_) => Some(&mailbox),
+    };
 
     ready(local);
 
@@ -445,6 +554,7 @@ pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
         let shared = &shared;
         let next_id = &next_id;
         let conns = &conns;
+        let mailbox = &mailbox;
 
         let engine_h = s.spawn(move || {
             // the server cannot serve without its engine: whatever way this
@@ -537,8 +647,17 @@ pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
                     }
                 }
             };
-            decode::run_engine(sess, params, engine, drafter, &cfg.decode,
-                               &mut source, &mut sink)
+            match binding {
+                EngineBinding::Fixed { params, engine, drafter } => {
+                    decode::run_engine(sess, params, engine, drafter,
+                                       &cfg.decode, &mut source, &mut sink)
+                }
+                EngineBinding::Swappable(slot) => {
+                    decode::run_engine_swappable(sess, slot, &cfg.decode,
+                                                 &mut source, &mut sink,
+                                                 mailbox)
+                }
+            }
         });
 
         // accept loop on the calling thread.  Non-blocking + bounded nap:
@@ -585,7 +704,7 @@ pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
                 let conn = Arc::clone(&conn);
                 s.spawn(move || {
                     reader_loop(shared, &conn, read_stream, next_id, cfg,
-                                seq_len, vocab, local);
+                                sess, mailbox_ref, local);
                 });
             }
             s.spawn(move || writer_loop(&conn, write_stream));
@@ -606,10 +725,10 @@ pub fn run(sess: &Session, params: &ParamStore, engine: &Engine,
 
     let counters = counters?;
     let m = &shared.metrics;
-    let label = if drafter.is_some() && cfg.decode.speculate_k > 0 {
-        format!("{}+spec-k{}", engine.label(), cfg.decode.speculate_k)
+    let label = if has_drafter && cfg.decode.speculate_k > 0 {
+        format!("{engine_label}+spec-k{}", cfg.decode.speculate_k)
     } else {
-        engine.label()
+        engine_label
     };
     Ok(ServerStats {
         engine: label,

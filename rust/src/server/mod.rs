@@ -34,6 +34,7 @@
 //! | `generate` | `id` (echoed on every reply), `prompt` (token array), optional `max_new_tokens` (0/absent = server default), `temperature`, `seed` |
 //! | `metrics`  | — (replies with one `metrics` snapshot)                             |
 //! | `trace`    | — (replies with one `trace` observability snapshot)                 |
+//! | `reload`   | `artifact` (server-host path to a packed `.zsar` manifest; see `crate::artifact`).  The server loads + verifies it off the engine thread and hot-swaps once in-flight work drains.  Replies `reloaded` on success, `error`/`reload_failed` otherwise (including on servers started without [`run_swappable`]) |
 //! | `shutdown` | — (ack `shutting_down`, then drain + close)                         |
 //!
 //! Server messages:
@@ -42,9 +43,10 @@
 //! |-----------------|----------------------------------------------------------------|
 //! | `token`         | `id`, `index` (0-based, strictly sequential), `token` — one per sampled token, streamed as produced |
 //! | `done`          | `id`, `tokens` (the full generation), `prompt_len`, latency breakdown `queue_ms` / `prefill_ms` / `decode_ms` / `ttft_ms` / `latency_ms`, `truncated` (true when generation stopped early at the KV-capacity wall).  `truncated`, `prefill_ms` and `decode_ms` are absent from older peers; clients parse them leniently (false / 0.0) |
-//! | `error`         | `code` (`overloaded` \| `bad_request` \| `shutting_down`), `message`, `id` when attributable to one request |
+//! | `error`         | `code` (`overloaded` \| `bad_request` \| `shutting_down` \| `reload_failed`), `message`, `id` when attributable to one request |
 //! | `metrics`       | `uptime_secs`, `queue_depth`, `uptime_tok_per_sec` (whole-uptime average), `draft_acceptance_rate` (accepted/proposed drafter tokens; 0 without speculation), `gauges{..}` (scheduler occupancy: active slots, KV tokens/capacity, arena/draft pool sizes, queue depth), `counters{..}`, `latency_ms{series → {n,mean,p50,p95,p99,max}}` |
 //! | `trace`         | observability snapshot from `crate::obs`: `enabled`, `events` (recent trace-event ring, capped), `events_total` / `events_dropped`, `counters{..}`, `histograms{..}`, `kernels{..}`, `gauges{..}`.  Always answered; with tracing off the ring is empty |
+//! | `reloaded`      | `artifact` (echoed path), `engine` (label now serving).  Sent once per successful `reload`; the wire `metrics` counter `artifact.swaps` counts installed swaps |
 //! | `shutting_down` | — (the connection closes after in-flight work completes)        |
 //!
 //! Requests from one connection may interleave; every reply carries the
@@ -88,6 +90,12 @@
 //! serving engine verifies them in one batched call — streamed tokens are
 //! bit-identical to the non-speculative server, only latency and the
 //! `draft_*` metrics change.
+//!
+//! A server started on a packed artifact (`zs-svd serve --artifact
+//! store/tiny-zs60.zsar`) supports live reload: `zs-svd client --connect
+//! <addr> --reload <path>` swaps the serving plan under traffic, and
+//! post-swap generations bit-match a fresh server started on that artifact
+//! (gated in `rust/tests/server_loopback.rs`).
 
 pub mod admission;
 pub mod client;
@@ -95,7 +103,8 @@ pub mod conn;
 pub mod metrics;
 pub mod protocol;
 
-pub use client::{scripted_prompt, Client, GenerateOutcome, GenerationResult};
-pub use conn::{run, ServerConfig, ServerStats};
+pub use client::{scripted_prompt, Client, GenerateOutcome, GenerationResult,
+                 ReloadOutcome};
+pub use conn::{run, run_swappable, ServerConfig, ServerStats};
 pub use metrics::Metrics;
 pub use protocol::{Event, GenerateReq, Request};

@@ -19,6 +19,10 @@ pub const ERR_OVERLOADED: &str = "overloaded";
 pub const ERR_BAD_REQUEST: &str = "bad_request";
 /// Structured error code: server is draining and admits no new work.
 pub const ERR_SHUTTING_DOWN: &str = "shutting_down";
+/// Structured error code: a [`Request::Reload`] could not be applied (bad
+/// artifact path, verification failure, model mismatch, or the server was
+/// started without hot-swap support).  The previous plan keeps serving.
+pub const ERR_RELOAD_FAILED: &str = "reload_failed";
 
 /// One generation request.  `id` is client-chosen and echoed verbatim on
 /// every event for this request (scope: one connection).
@@ -69,6 +73,13 @@ pub enum Request {
     /// answered; with tracing disabled the event ring is simply empty
     /// (`enabled: false` in the reply says why)
     Trace,
+    /// load + verify the artifact at `artifact` and hot-swap the serving
+    /// plan once in-flight requests drain ([`Event::Reloaded`] on success,
+    /// [`Event::Error`] with [`ERR_RELOAD_FAILED`] otherwise)
+    Reload {
+        /// path to the artifact manifest (`.zsar`) on the server host
+        artifact: String,
+    },
     /// stop accepting work, drain in-flight requests, exit
     Shutdown,
 }
@@ -81,6 +92,11 @@ pub fn request_line(r: &Request) -> String {
             .to_string(),
         Request::Trace => Json::obj(vec![("type", Json::str("trace"))])
             .to_string(),
+        Request::Reload { artifact } => Json::obj(vec![
+            ("type", Json::str("reload")),
+            ("artifact", Json::str(artifact)),
+        ])
+        .to_string(),
         Request::Shutdown => Json::obj(vec![("type", Json::str("shutdown"))])
             .to_string(),
     }
@@ -121,6 +137,12 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         }
         Some("metrics") => Ok(Request::Metrics),
         Some("trace") => Ok(Request::Trace),
+        Some("reload") => match j.get("artifact").and_then(Json::as_str) {
+            Some(a) if !a.is_empty() => {
+                Ok(Request::Reload { artifact: a.to_string() })
+            }
+            _ => Err("reload: missing `artifact` path".to_string()),
+        },
         Some("shutdown") => Ok(Request::Shutdown),
         Some(other) => Err(format!("unknown request type `{other}`")),
         None => Err("missing `type`".to_string()),
@@ -181,6 +203,14 @@ pub enum Event {
     /// observability snapshot: the recent trace-event ring + counters /
     /// histograms / kernel stats, shaped by `crate::obs::snapshot_json`
     Trace(Json),
+    /// a [`Request::Reload`] was verified and installed: new generations on
+    /// every connection now run on the swapped-in plan
+    Reloaded {
+        /// manifest path the server loaded (echoed from the request)
+        artifact: String,
+        /// label of the engine now serving (e.g. `lowrank-r60`)
+        engine: String,
+    },
     /// the server acknowledged shutdown / is closing this connection
     ShuttingDown,
 }
@@ -228,6 +258,12 @@ pub fn event_line(e: &Event) -> String {
         }
         Event::Metrics(snapshot) => snapshot.to_string(),
         Event::Trace(snapshot) => snapshot.to_string(),
+        Event::Reloaded { artifact, engine } => Json::obj(vec![
+            ("type", Json::str("reloaded")),
+            ("artifact", Json::str(artifact)),
+            ("engine", Json::str(engine)),
+        ])
+        .to_string(),
         Event::ShuttingDown => Json::obj(vec![
             ("type", Json::str("shutting_down")),
         ])
@@ -279,6 +315,10 @@ pub fn parse_event(line: &str) -> Result<Event, String> {
         }),
         Some("metrics") => Ok(Event::Metrics(j)),
         Some("trace") => Ok(Event::Trace(j)),
+        Some("reloaded") => Ok(Event::Reloaded {
+            artifact: j.str_or("artifact", ""),
+            engine: j.str_or("engine", ""),
+        }),
         Some("shutting_down") => Ok(Event::ShuttingDown),
         Some(other) => Err(format!("unknown event type `{other}`")),
         None => Err("missing `type`".to_string()),
@@ -331,10 +371,20 @@ mod tests {
 
     #[test]
     fn control_requests_roundtrip() {
-        for r in [Request::Metrics, Request::Trace, Request::Shutdown] {
+        for r in [Request::Metrics, Request::Trace, Request::Shutdown,
+                  Request::Reload { artifact: "store/m.zsar".into() }] {
             let line = request_line(&r);
             assert_eq!(parse_request(&line).unwrap(), r);
         }
+    }
+
+    #[test]
+    fn reload_requires_artifact_path() {
+        assert!(parse_request("{\"type\":\"reload\"}").is_err());
+        assert!(parse_request("{\"type\":\"reload\",\"artifact\":\"\"}")
+                    .is_err());
+        assert!(parse_request("{\"type\":\"reload\",\"artifact\":7}")
+                    .is_err());
     }
 
     #[test]
@@ -357,6 +407,10 @@ mod tests {
                            message: "queue full".into() },
             Event::Error { id: None, code: ERR_BAD_REQUEST.into(),
                            message: "bad json".into() },
+            Event::Error { id: None, code: ERR_RELOAD_FAILED.into(),
+                           message: "chunk `u:layers.0.wq` corrupt".into() },
+            Event::Reloaded { artifact: "store/m.zsar".into(),
+                              engine: "lowrank-r60".into() },
             Event::ShuttingDown,
         ];
         for e in events {

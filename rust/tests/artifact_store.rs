@@ -1,0 +1,228 @@
+//! Fault-injection gate for the content-addressed artifact store
+//! (`zs_svd::artifact`).
+//!
+//! Every integrity claim the module documents is exercised from the
+//! outside, byte-level, against real files:
+//!
+//! * a single flipped byte in ANY chunk class — meta, a parameter, a U
+//!   factor, a V factor, a drafter factor — is detected at load, with a
+//!   structured error naming the corrupted chunk's label;
+//! * a flipped byte in the manifest itself is detected by its checksum;
+//! * a truncated or deleted chunk file is detected, and a failed `install`
+//!   leaves **nothing** visible at the destination (no manifest);
+//! * an interrupted install resumes — chunks already present and valid are
+//!   skipped — and the resumed store ends byte-identical to a clean one.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use zs_svd::artifact::store::read_manifest_file;
+use zs_svd::artifact::{install, load, pack, ChunkClass, ChunkStore};
+use zs_svd::model::init::init_params;
+use zs_svd::model::{ConfigMeta, Manifest, ParamStore};
+use zs_svd::serve::Engine;
+use zs_svd::tensor::Mat;
+use zs_svd::util::rng::Rng;
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("zs_artifact_gate_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn tiny_cfg() -> ConfigMeta {
+    Manifest::builtin().config("tiny").clone()
+}
+
+/// Synthetic but shape-exact serving state for the tiny model: full params
+/// plus low-rank target + drafter factors at the tag's baked ranks.
+fn synth_state(cfg: &ConfigMeta) -> (ParamStore, Engine, Engine) {
+    let tag = cfg.lowrank.keys().next().expect("a lowrank tag").clone();
+    let mut rng = Rng::new(0xFA17);
+    let params = init_params(cfg, &mut rng);
+    let lm = &cfg.lowrank[&tag];
+    let factors: BTreeMap<String, (Mat, Mat)> = cfg.targets.iter()
+        .map(|t| {
+            let (m, n) = t.shape;
+            let k = lm.ranks[&t.name];
+            (t.name.clone(),
+             (Mat::randn(&mut rng, m, k, 0.05),
+              Mat::randn(&mut rng, k, n, 0.05)))
+        })
+        .collect();
+    let engine = Engine::Lowrank { tag: tag.clone(),
+                                   factors: factors.clone() };
+    let drafter = Engine::Lowrank { tag, factors };
+    (params, engine, drafter)
+}
+
+/// Pack a complete artifact (params + engine + drafter) into a fresh store.
+fn packed(tag: &str) -> (PathBuf, PathBuf) {
+    let cfg = tiny_cfg();
+    let (params, engine, drafter) = synth_state(&cfg);
+    let root = tmp_root(tag);
+    let manifest = pack(&cfg, &params, &engine, Some(&drafter), &root, "art")
+        .expect("pack");
+    (root, manifest)
+}
+
+/// Path of the chunk file backing the first record of `class` whose label
+/// passes `pick`, plus that record's label.
+fn chunk_file(root: &Path, manifest: &Path, class: ChunkClass,
+              pick: impl Fn(&str) -> bool) -> (PathBuf, String) {
+    let m = read_manifest_file(manifest).expect("manifest reads");
+    let store = ChunkStore::open(root).expect("store opens");
+    let rec = m.records.iter()
+        .find(|r| r.class == class && pick(&r.label))
+        .unwrap_or_else(|| panic!("no {class:?} record"));
+    (store.chunk_path(&rec.id), rec.label.clone())
+}
+
+fn flip_byte(path: &Path, at: usize) {
+    let mut bytes = std::fs::read(path).expect("read for corruption");
+    let i = at.min(bytes.len().saturating_sub(1));
+    bytes[i] ^= 0x01;
+    std::fs::write(path, bytes).expect("write corrupted");
+}
+
+#[test]
+fn bit_flip_in_every_chunk_class_is_detected_and_named() {
+    let (root, manifest) = packed("bitflip");
+    // one representative per chunk class, drafter factors included: the
+    // label in the error must point at exactly the corrupted tensor
+    let victims = [
+        (ChunkClass::Meta, "meta".to_string()),
+        (ChunkClass::Param, String::new()),   // first param chunk
+        (ChunkClass::FactorU, "u:".to_string()),
+        (ChunkClass::FactorV, "v:".to_string()),
+        (ChunkClass::FactorU, "du:".to_string()),
+        (ChunkClass::FactorV, "dv:".to_string()),
+    ];
+    for (class, prefix) in victims {
+        let (path, label) = chunk_file(&root, &manifest, class,
+                                       |l| l.starts_with(&prefix));
+        let clean = std::fs::read(&path).expect("clean chunk");
+        // flip a byte mid-payload: content hash must catch it
+        flip_byte(&path, clean.len() / 2);
+        let err = load(&manifest).expect_err("corrupt chunk must not load");
+        let msg = format!("{err}");
+        assert!(msg.contains(&label),
+                "error must name chunk `{label}`: {msg}");
+        // restore so the next victim starts from an intact artifact
+        std::fs::write(&path, clean).expect("restore");
+    }
+    // fully restored: the artifact loads again
+    load(&manifest).expect("restored artifact loads");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn bit_flip_in_the_manifest_is_detected() {
+    let (root, manifest) = packed("manifestflip");
+    let clean = std::fs::read(&manifest).expect("clean manifest");
+    // past the magic so the failure is the checksum, not the format marker
+    flip_byte(&manifest, clean.len() - 3);
+    let err = load(&manifest).expect_err("corrupt manifest must not load");
+    let msg = format!("{err}");
+    assert!(msg.contains("manifest"), "error must blame the manifest: {msg}");
+    std::fs::write(&manifest, clean).expect("restore");
+    load(&manifest).expect("restored artifact loads");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn truncated_chunk_is_detected_at_load_and_install() {
+    let (root, manifest) = packed("truncate");
+    let (path, label) = chunk_file(&root, &manifest, ChunkClass::FactorU,
+                                   |l| l.starts_with("u:"));
+    let clean = std::fs::read(&path).expect("clean chunk");
+    std::fs::write(&path, &clean[..clean.len() - 1]).expect("truncate");
+
+    let msg = format!("{}", load(&manifest).expect_err("load must fail"));
+    assert!(msg.contains(&label) && msg.contains("length"),
+            "error must name `{label}` and the length mismatch: {msg}");
+
+    // install from the truncated store: fails, and the destination stays
+    // empty — no manifest means nothing is visible
+    let dst = tmp_root("truncate_dst");
+    let msg = format!("{}", install(&manifest, &dst, "art")
+        .expect_err("install must fail"));
+    assert!(msg.contains(&label), "install error must name `{label}`: {msg}");
+    assert!(!dst.join("art.zsar").exists(),
+            "a failed install must not commit a manifest");
+
+    std::fs::write(&path, clean).expect("restore");
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn deleted_chunk_fails_install_with_nothing_partially_visible() {
+    let (root, manifest) = packed("delete");
+    let (path, label) = chunk_file(&root, &manifest, ChunkClass::Param,
+                                   |_| true);
+    std::fs::remove_file(&path).expect("delete chunk");
+
+    let dst = tmp_root("delete_dst");
+    let msg = format!("{}", install(&manifest, &dst, "art")
+        .expect_err("install must fail on a missing chunk"));
+    assert!(msg.contains(&label), "install error must name `{label}`: {msg}");
+    assert!(!dst.join("art.zsar").exists(),
+            "a failed install must not commit a manifest");
+    // load through the same manifest also refuses
+    let msg = format!("{}", load(&manifest).expect_err("load must fail"));
+    assert!(msg.contains(&label), "load error must name `{label}`: {msg}");
+
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn resumed_install_bit_matches_a_clean_one() {
+    let (root, manifest) = packed("resume");
+    let m = read_manifest_file(&manifest).expect("manifest");
+    let src = ChunkStore::open(&root).expect("src");
+
+    // clean reference install
+    let clean_dst = tmp_root("resume_clean");
+    let clean_manifest = install(&manifest, &clean_dst, "art")
+        .expect("clean install");
+
+    // simulate an install that died partway: copy roughly half the chunks
+    // (verified bytes) into the destination, then run the real install
+    let resumed_dst = tmp_root("resume_partial");
+    let partial = ChunkStore::open(&resumed_dst).expect("partial dst");
+    for rec in m.records.iter().step_by(2) {
+        let bytes = src.get_verified(rec).expect("src chunk");
+        partial.put(&bytes).expect("pre-copy");
+    }
+    assert!(!resumed_dst.join("art.zsar").exists(),
+            "the interrupted install must not have committed");
+    let resumed_manifest = install(&manifest, &resumed_dst, "art")
+        .expect("resumed install");
+
+    // byte-identical outcome: same manifest bytes, same chunk set
+    assert_eq!(std::fs::read(&clean_manifest).expect("clean manifest bytes"),
+               std::fs::read(&resumed_manifest).expect("resumed bytes"),
+               "resumed install must commit the identical manifest");
+    for rec in &m.records {
+        let clean_store = ChunkStore::open(&clean_dst).expect("clean store");
+        let a = std::fs::read(clean_store.chunk_path(&rec.id))
+            .expect("clean chunk");
+        let b = std::fs::read(partial.chunk_path(&rec.id))
+            .expect("resumed chunk");
+        assert_eq!(a, b, "chunk `{}` differs after resume", rec.label);
+    }
+    // and the installed artifact loads + bit-matches the source
+    let src_bundle = load(&manifest).expect("source loads");
+    let dst_bundle = load(&resumed_manifest).expect("resumed loads");
+    for n in src_bundle.params.names() {
+        assert_eq!(src_bundle.params.get(n), dst_bundle.params.get(n),
+                   "param {n}");
+    }
+
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::remove_dir_all(&clean_dst).ok();
+    std::fs::remove_dir_all(&resumed_dst).ok();
+}

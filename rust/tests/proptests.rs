@@ -1,7 +1,11 @@
-//! Property-based tests over the linalg substrate and the coordinator
+//! Property-based tests over the linalg substrate, the coordinator
 //! invariants (zero-sum selection, budget accounting, plans, quantization,
-//! JSON/checkpoint round-trips) using the in-repo `prop::forall` driver.
+//! JSON/checkpoint round-trips), and the `ZSAR` artifact manifest / chunk
+//! store parsers, using the in-repo `prop::forall` driver.
 
+use zs_svd::artifact::manifest::{MAGIC, VERSION};
+use zs_svd::artifact::{ArtifactManifest, ChunkClass, ChunkId, ChunkRecord,
+                       ChunkStore};
 use zs_svd::compress::selection::{k_threshold, select, Costing, Strategy};
 use zs_svd::compress::whiten::{decompose_target, factorize, recompose};
 use zs_svd::linalg::{cholesky, cholesky_ridge, effective_rank, gram, matmul,
@@ -391,6 +395,156 @@ fn zero_sum_removal_monotone_in_budget() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// artifact manifest / chunk store
+// ---------------------------------------------------------------------------
+
+fn random_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
+    (0..rng.below(max_len)).map(|_| rng.below(256) as u8).collect()
+}
+
+fn random_manifest(rng: &mut Rng) -> ArtifactManifest {
+    let classes = [ChunkClass::Meta, ChunkClass::Param, ChunkClass::FactorU,
+                   ChunkClass::FactorV];
+    let n = rng.below(6);
+    let records = (0..n)
+        .map(|i| {
+            let payload = random_bytes(rng, 48);
+            // the index prefix keeps labels unique; the tail exercises
+            // variable label lengths including empty tails
+            let label = format!("c{i}:{}", "x".repeat(rng.below(12)));
+            ChunkRecord { class: classes[rng.below(classes.len())], label,
+                          id: ChunkId::of(&payload),
+                          len: payload.len() as u64 }
+        })
+        .collect();
+    ArtifactManifest { records }
+}
+
+#[test]
+fn artifact_manifest_roundtrip_byte_identical() {
+    forall("zsar-roundtrip", 48, random_manifest, |m| {
+        let enc = m.encode();
+        let dec = ArtifactManifest::decode(&enc)?;
+        if &dec != m {
+            return Err("decoded manifest differs from the original".into());
+        }
+        if dec.encode() != enc {
+            return Err("re-encode is not byte-identical".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn artifact_manifest_corruption_always_detected() {
+    // any single flipped bit and any truncation must fail decoding — the
+    // trailing body hash plus the checked header make both unconcealable
+    forall("zsar-corrupt", 32, |rng| {
+        let enc = random_manifest(rng).encode();
+        let pos = rng.below(enc.len());
+        let bit = 1u8 << rng.below(8);
+        let cut = rng.below(enc.len());
+        (enc, pos, bit, cut)
+    }, |(enc, pos, bit, cut)| {
+        let mut flipped = enc.clone();
+        flipped[*pos] ^= *bit;
+        if ArtifactManifest::decode(&flipped).is_ok() {
+            return Err(format!("bit flip at byte {pos} still decoded"));
+        }
+        if ArtifactManifest::decode(&enc[..*cut]).is_ok() {
+            return Err(format!("truncation to {cut} bytes still decoded"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn artifact_manifest_hostile_inputs_never_panic() {
+    // adversarial inputs: raw garbage, and garbage wearing a plausible
+    // header that claims absurd body lengths / record counts.  Decoding
+    // must return structured errors — never panic, never allocate on the
+    // attacker's say-so.  Anything it does accept must be canonical.
+    forall("zsar-hostile", 64, |rng| {
+        let mut bytes = random_bytes(rng, 200);
+        if rng.below(2) == 1 && bytes.len() >= 16 {
+            bytes[..4].copy_from_slice(MAGIC);
+            bytes[4..8].copy_from_slice(&VERSION.to_le_bytes());
+            if rng.below(2) == 1 {
+                // lie enormously about the body size
+                let lie = u64::MAX - rng.below(1024) as u64;
+                bytes[8..16].copy_from_slice(&lie.to_le_bytes());
+            }
+        }
+        bytes
+    }, |bytes| {
+        if let Ok(m) = ArtifactManifest::decode(bytes) {
+            if m.records.len() > bytes.len() {
+                return Err("accepted more records than input bytes".into());
+            }
+            if m.encode() != *bytes {
+                return Err("accepted a non-canonical encoding".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chunk_store_roundtrip_and_corruption_detection() {
+    let root = std::env::temp_dir()
+        .join(format!("zs_prop_chunks_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    let store = ChunkStore::open(&root).expect("store opens");
+    forall("chunk-store", 24, |rng| random_bytes(rng, 200), |payload| {
+        let rec = ChunkRecord { class: ChunkClass::Param,
+                                label: "param:prop".into(),
+                                id: ChunkId::of(payload),
+                                len: payload.len() as u64 };
+        let id = store.put(payload).map_err(|e| format!("put: {e}"))?;
+        if id != rec.id {
+            return Err("put returned a different content id".into());
+        }
+        if !store.has_valid(&rec) {
+            return Err("freshly stored chunk does not verify".into());
+        }
+        let back = store.get_verified(&rec)
+            .map_err(|e| format!("get_verified: {e}"))?;
+        if &back != payload {
+            return Err("chunk roundtrip differs".into());
+        }
+        // corrupt the file on disk: verification must fail and the error
+        // must name the chunk's label
+        let path = store.chunk_path(&rec.id);
+        let mut bytes = std::fs::read(&path).map_err(|e| format!("{e}"))?;
+        if bytes.is_empty() {
+            bytes.push(0);
+        } else {
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0x40;
+        }
+        std::fs::write(&path, &bytes).map_err(|e| format!("{e}"))?;
+        if store.has_valid(&rec) {
+            return Err("corrupted chunk still reports valid".into());
+        }
+        let err = match store.get_verified(&rec) {
+            Ok(_) => return Err("corrupted chunk still verified".into()),
+            Err(e) => format!("{e}"),
+        };
+        if !err.contains("param:prop") {
+            return Err(format!("error must name the chunk label: {err}"));
+        }
+        // putting the good bytes back heals the store in place
+        store.put(payload).map_err(|e| format!("re-put: {e}"))?;
+        if !store.has_valid(&rec) {
+            return Err("re-put did not restore the chunk".into());
+        }
+        std::fs::remove_file(&path).ok();
+        Ok(())
+    });
+    std::fs::remove_dir_all(&root).ok();
 }
 
 #[test]

@@ -16,21 +16,33 @@
 //!    further requests get a structured `overloaded` reply (never a silent
 //!    drop), every admitted request completes exactly once, and the server
 //!    keeps serving afterwards.
+//! 3. **Hot-swap bit-identity** — a server started on a packed artifact A
+//!    accepts a `reload` to artifact B while a generation is in flight:
+//!    the in-flight request completes entirely on A (bit-matching A's
+//!    offline reference), every post-swap request bit-matches B's offline
+//!    reference, a corrupted artifact is rejected with a structured
+//!    `reload_failed` error naming the bad chunk while A keeps serving,
+//!    and the `artifact.swaps` counter crosses the wire — swept over
+//!    thread counts {1, 4} × speculation depths {0, 2}.
 
 use std::collections::BTreeMap;
 use std::net::SocketAddr;
+use std::path::Path;
 use std::sync::mpsc;
 
-use zs_svd::decode::{run_decode, DecodeConfig, DecodeRequest};
+use zs_svd::artifact::store::read_manifest_file;
+use zs_svd::artifact::{self, ChunkClass, ChunkStore};
+use zs_svd::decode::{run_decode, DecodeConfig, DecodeRequest, EngineSlot};
 use zs_svd::exec;
 use zs_svd::model::init::init_params;
 use zs_svd::model::ParamStore;
 use zs_svd::runtime::session::Session;
 use zs_svd::runtime::Runtime;
 use zs_svd::serve::Engine;
-use zs_svd::server::protocol::{Event, ERR_BAD_REQUEST, ERR_OVERLOADED};
-use zs_svd::server::{self, Client, GenerateOutcome, GenerateReq, Request,
-                     ServerConfig};
+use zs_svd::server::protocol::{Event, ERR_BAD_REQUEST, ERR_OVERLOADED,
+                               ERR_RELOAD_FAILED};
+use zs_svd::server::{self, Client, GenerateOutcome, GenerateReq, ReloadOutcome,
+                     Request, ServerConfig};
 use zs_svd::tensor::Mat;
 use zs_svd::util::rng::Rng;
 
@@ -455,4 +467,228 @@ fn queue_full_gets_overloaded_and_server_stays_live() {
         assert_eq!(stats.requests_rejected as usize, rejected);
         assert_eq!(stats.counters.requests_completed, done + 1);
     });
+}
+
+// ---------------------------------------------------------------------------
+// hot-swap bit-identity
+// ---------------------------------------------------------------------------
+
+const PRE_ID: u64 = 100;
+const PRE_NEW: usize = 12;
+const POST_IDS: [usize; 5] = [0, 1, 2, 3, 50];
+
+/// Offline reference tokens for the given `(request id, budget)` pairs,
+/// keyed by id.  Prompts/sampling follow `prompt_for` / `sampling_for`, so
+/// wire requests built the same way must bit-match.
+fn offline_batch(sess: &Session, params: &ParamStore, engine: &Engine,
+                 reqs: &[(usize, usize)]) -> BTreeMap<usize, Vec<i32>> {
+    let decode_reqs: Vec<DecodeRequest> = reqs.iter()
+        .map(|&(k, budget)| {
+            let (temperature, seed) = sampling_for(k);
+            DecodeRequest { id: k, prompt: prompt_for(k, sess.cfg.vocab),
+                            max_new_tokens: budget, temperature, seed }
+        })
+        .collect();
+    let dc = DecodeConfig { max_slots: 3, max_new_tokens: MAX_NEW,
+                            temperature: 0.0, seed: 9, arrival_steps: 0.0,
+                            prefill_chunk: 0, speculate_k: 0,
+                            ..DecodeConfig::default() };
+    let (_, done) = run_decode(sess, params, engine, &decode_reqs, &dc)
+        .expect("offline decode");
+    // completions come back in request order (the assumption the loopback
+    // gates above already rely on)
+    reqs.iter().map(|&(k, _)| k)
+        .zip(done.into_iter().map(|c| c.tokens))
+        .collect()
+}
+
+/// One hot-swap server lifecycle: start on artifact A, pin a long request
+/// to plan A, reload to B mid-stream, check both sides bit-match their
+/// offline references, reject a corrupted artifact, and read the counters.
+#[allow(clippy::too_many_arguments)]
+fn swap_round(sess: &Session, a_manifest: &Path, b_manifest: &Path,
+              corrupt_manifest: &Path, corrupt_label: &str,
+              speculate_k: usize, offline_pre: &[i32],
+              offline_post: &BTreeMap<usize, Vec<i32>>) {
+    let vocab = sess.cfg.vocab;
+    let bundle = artifact::load(a_manifest).expect("artifact A loads");
+    let slot = EngineSlot { params: bundle.params, engine: bundle.engine,
+                            drafter: bundle.drafter };
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        queue_depth: 16,
+        decode: DecodeConfig { max_slots: 3, max_new_tokens: MAX_NEW,
+                               temperature: 0.0, seed: 9, arrival_steps: 0.0,
+                               prefill_chunk: 0, speculate_k,
+                               ..DecodeConfig::default() },
+    };
+    let (tx, rx) = mpsc::channel::<SocketAddr>();
+    std::thread::scope(|s| {
+        let cfg = &cfg;
+        let srv = s.spawn(move || {
+            server::run_swappable(sess, slot, cfg, move |a| {
+                tx.send(a).expect("report addr");
+            })
+        });
+        let addr = rx.recv().expect("server bound");
+        let mut c1 = Client::connect(addr).expect("connect c1");
+
+        // long-budget request pinned to plan A; reading its first token
+        // proves it is admitted and decoding before the reload is posted
+        c1.send(&Request::Generate(GenerateReq {
+            id: PRE_ID, prompt: prompt_for(PRE_ID as usize, vocab),
+            max_new_tokens: PRE_NEW, temperature: Some(0.0), seed: None,
+        })).expect("send pre-swap request");
+        let mut pre_tokens = Vec::new();
+        match c1.next_event().expect("event").expect("stream open") {
+            Event::Token { id, index, token } => {
+                assert_eq!((id, index), (PRE_ID, 0));
+                pre_tokens.push(token);
+            }
+            other => panic!("expected the first pre-swap token: {other:?}"),
+        }
+
+        // reload on a second connection: its reader blocks through the
+        // drain, so a successful return means the swap really happened
+        let mut c2 = Client::connect(addr).expect("connect c2");
+        match c2.reload(b_manifest.to_str().expect("utf8 path"))
+            .expect("reload io") {
+            ReloadOutcome::Swapped { engine, .. } => {
+                assert!(engine.contains("lowrank"),
+                        "plan B is low-rank, got `{engine}`");
+            }
+            ReloadOutcome::Rejected { code, message } => {
+                panic!("reload rejected: {code} ({message})");
+            }
+        }
+
+        // the in-flight request completed entirely on plan A, bit-exactly
+        loop {
+            match c1.next_event().expect("event").expect("stream open") {
+                Event::Token { id, index, token } => {
+                    assert_eq!(id, PRE_ID);
+                    assert_eq!(index, pre_tokens.len());
+                    pre_tokens.push(token);
+                }
+                Event::Done { id, tokens, .. } => {
+                    assert_eq!(id, PRE_ID);
+                    assert_eq!(tokens, pre_tokens);
+                    break;
+                }
+                other => panic!("unexpected pre-swap event: {other:?}"),
+            }
+        }
+        assert_eq!(pre_tokens, offline_pre,
+                   "in-flight request must finish on plan A (spec_k \
+                    {speculate_k})");
+
+        // every post-swap generation bit-matches plan B's offline reference
+        for &k in &POST_IDS {
+            let (temperature, seed) = sampling_for(k);
+            let g = GenerateReq { id: k as u64, prompt: prompt_for(k, vocab),
+                                  max_new_tokens: MAX_NEW, temperature, seed };
+            match c1.run_generate(&g).expect("post-swap generate") {
+                GenerateOutcome::Done(r) => {
+                    assert_eq!(&r.tokens, &offline_post[&k],
+                               "request {k} after swap must bit-match a \
+                                fresh server on plan B");
+                }
+                GenerateOutcome::Rejected { code, message } => {
+                    panic!("request {k} rejected: {code} ({message})");
+                }
+            }
+            if k == POST_IDS[2] {
+                // mid-sequence: a corrupted artifact is rejected with a
+                // structured error naming the chunk, and B keeps serving
+                match c2.reload(corrupt_manifest.to_str().expect("utf8"))
+                    .expect("reload io") {
+                    ReloadOutcome::Rejected { code, message } => {
+                        assert_eq!(code, ERR_RELOAD_FAILED);
+                        assert!(message.contains(corrupt_label),
+                                "error must name the bad chunk \
+                                 `{corrupt_label}`: {message}");
+                    }
+                    ReloadOutcome::Swapped { .. } => {
+                        panic!("corrupted artifact must not swap in");
+                    }
+                }
+            }
+        }
+
+        // the swap (and the rejected one) are visible in the wire counters
+        let snap = c2.metrics().expect("metrics");
+        let counters = snap.get("counters").expect("counters object");
+        assert_eq!(counters.usize_or("artifact.swaps", 0), 1);
+        assert_eq!(counters.usize_or("artifact.reload_failures", 0), 1);
+
+        c1.shutdown_server().expect("shutdown");
+        let stats = srv.join().expect("server thread").expect("server run");
+        assert_eq!(stats.counters.plan_swaps, 1);
+        assert!(stats.engine.starts_with("dense"),
+                "ServerStats reports the initial slot, got {}", stats.engine);
+    });
+}
+
+#[test]
+fn artifact_hot_swap_bitmatches_fresh_plans() {
+    let rt = Runtime::load_default().unwrap();
+    let sess = Session::new(&rt, "tiny");
+    let mut rng = Rng::new(0x5A4B);
+    let params = init_params(&sess.cfg, &mut rng);
+    let drafter = Engine::Lowrank {
+        tag: "60".into(),
+        factors: synthetic_factors(&sess, "60", &mut rng),
+    };
+    let engine_b = Engine::Lowrank {
+        tag: "60".into(),
+        factors: synthetic_factors(&sess, "60", &mut rng),
+    };
+
+    // plans A (dense) and B (low-rank) share one content-addressed store
+    let root = std::env::temp_dir()
+        .join(format!("zs_swap_store_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    let a_manifest = artifact::pack(&sess.cfg, &params, &Engine::Dense,
+                                    Some(&drafter), &root, "plan-a")
+        .expect("pack A");
+    let b_manifest = artifact::pack(&sess.cfg, &params, &engine_b,
+                                    Some(&drafter), &root, "plan-b")
+        .expect("pack B");
+
+    // the corrupt artifact lives in its OWN store: flipping one of its
+    // chunks must not damage A's or B's (content-shared) chunks
+    let root_c = std::env::temp_dir()
+        .join(format!("zs_swap_corrupt_{}", std::process::id()));
+    std::fs::remove_dir_all(&root_c).ok();
+    let c_manifest = artifact::pack(&sess.cfg, &params, &engine_b,
+                                    Some(&drafter), &root_c, "plan-c")
+        .expect("pack C");
+    let m = read_manifest_file(&c_manifest).expect("manifest C");
+    let store_c = ChunkStore::open(&root_c).expect("store C");
+    let victim = m.records.iter()
+        .find(|r| r.class == ChunkClass::Param)
+        .expect("a param record");
+    let path = store_c.chunk_path(&victim.id);
+    let mut bytes = std::fs::read(&path).expect("chunk bytes");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&path, bytes).expect("corrupt chunk");
+
+    for threads in [1usize, 4] {
+        exec::set_threads(threads);
+        let offline_pre = offline_batch(&sess, &params, &Engine::Dense,
+                                        &[(PRE_ID as usize, PRE_NEW)])
+            .remove(&(PRE_ID as usize))
+            .expect("pre reference");
+        let offline_post = offline_batch(&sess, &params, &engine_b,
+                                         &POST_IDS.map(|k| (k, MAX_NEW)));
+        for speculate_k in [0usize, 2] {
+            swap_round(&sess, &a_manifest, &b_manifest, &c_manifest,
+                       &victim.label, speculate_k, &offline_pre,
+                       &offline_post);
+        }
+    }
+    exec::set_threads(0);
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::remove_dir_all(&root_c).ok();
 }
