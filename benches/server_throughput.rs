@@ -26,15 +26,29 @@
 //! that), so the sweep isolates the serving effect — client-observed TTFT
 //! and prefill tok/s — and records it machine-readably in `BENCH_8.json`
 //! at the repo root.
+//!
+//! The third section shards the SAME packed artifact behind the supervised
+//! fleet router (`zs_svd::fleet`) at worker counts {1, 2, 4}: real worker
+//! processes spawned from this build's own binary, the closed-loop client
+//! fleet driven through one routed address, wall-clock throughput measured
+//! client-side after all workers report healthy (so process boot is not
+//! charged to the serving tier).  Streamed tokens are bit-identical at
+//! every worker count (`rust/tests/fleet.rs` gates that), so the sweep
+//! isolates the availability/throughput effect of sharding.  Results land
+//! in `BENCH_10.json` at the repo root.
 
 mod common;
 
 use std::net::SocketAddr;
+use std::path::PathBuf;
 use std::sync::mpsc;
+use std::time::Instant;
 
+use zs_svd::artifact::pack;
 use zs_svd::coordinator::{self, Method, Prepared};
 use zs_svd::decode::{synth_requests_shared_prefix, DecodeConfig,
                      DEFAULT_KV_BLOCK};
+use zs_svd::fleet::{run_fleet, FleetStats, RouterConfig};
 use zs_svd::report::{f2, latency_cells, Table, LATENCY_HEADERS};
 use zs_svd::serve::Engine;
 use zs_svd::server::{self, Client, GenerateOutcome, GenerateReq,
@@ -88,7 +102,8 @@ fn drive(p: &Prepared, params: &zs_svd::model::ParamStore, engine: &Engine,
                             GenerateOutcome::Done(r) => {
                                 assert_eq!(r.tokens.len(), load.max_new);
                             }
-                            GenerateOutcome::Rejected { code, message } => {
+                            GenerateOutcome::Rejected { code, message, .. }
+                            => {
                                 panic!("request {k} rejected: {code} \
                                         ({message})");
                             }
@@ -128,7 +143,7 @@ fn run_prefix_request(cl: &mut Client, prompts: &[Vec<i32>], k: usize,
             assert_eq!(r.tokens.len(), max_new);
             (r.ttft_ms, r.cached_prompt_tokens)
         }
-        GenerateOutcome::Rejected { code, message } => {
+        GenerateOutcome::Rejected { code, message, .. } => {
             panic!("prefix request {k} rejected: {code} ({message})");
         }
     }
@@ -203,6 +218,74 @@ fn drive_prefix(p: &Prepared, params: &zs_svd::model::ParamStore,
         let stats = srv.join().expect("server thread").expect("server run");
         (stats, ttfts, cached)
     })
+}
+
+/// Drive the closed-loop client fleet through a supervised router in front
+/// of `workers` worker processes serving `manifest`.  Returns the timed
+/// window's wall-clock ms (first request sent → last stream read, after
+/// every worker reported healthy) and the fleet's lifetime stats.
+fn drive_fleet(manifest: &std::path::Path, workers: usize, load: &Load,
+               vocab: usize) -> (f64, FleetStats) {
+    let mut cfg = RouterConfig::new(
+        "127.0.0.1:0", workers,
+        vec![manifest.to_str().expect("utf8 manifest path").to_string()]);
+    cfg.program = PathBuf::from(env!("CARGO_BIN_EXE_zs-svd"));
+    cfg.worker_args = vec!["--threads".into(), "1".into()];
+    let (tx, rx) = mpsc::channel::<SocketAddr>();
+    let router = std::thread::spawn(move || {
+        run_fleet(cfg, move |a| { tx.send(a).expect("report addr"); })
+    });
+    let addr = rx.recv().expect("fleet bound");
+
+    // wait out worker boot so the timed window measures serving, not
+    // process spawn + artifact load
+    let mut ctrl = Client::connect(addr).expect("connect control");
+    loop {
+        let snap = ctrl.metrics().expect("metrics");
+        let ws = snap.get("workers").and_then(|w| w.as_arr())
+            .expect("fleet snapshot");
+        if ws.iter().all(|w| w.bool_or("healthy", false)) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..load.clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut cl = Client::connect(addr).expect("connect");
+                    for i in 0..load.per_client {
+                        let k = c * load.per_client + i;
+                        let prompt =
+                            server::scripted_prompt(k, load.prompt_len, vocab);
+                        let g = GenerateReq { id: k as u64, prompt,
+                                              max_new_tokens: load.max_new,
+                                              temperature: None, seed: None };
+                        match cl.run_generate(&g).expect("generate") {
+                            GenerateOutcome::Done(r) => {
+                                assert_eq!(r.tokens.len(), load.max_new);
+                            }
+                            GenerateOutcome::Rejected { code, message, .. }
+                            => {
+                                panic!("fleet request {k} rejected: {code} \
+                                        ({message})");
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("fleet client thread");
+        }
+    });
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    ctrl.shutdown_server().expect("shutdown");
+    let stats = router.join().expect("router thread").expect("fleet run");
+    (wall_ms, stats)
 }
 
 /// Human label for a `prefill_chunk` setting (0 = whole prompt per
@@ -379,4 +462,72 @@ fn main() {
     std::fs::write(&bench8_path, bench8.to_string_pretty() + "\n")
         .expect("write BENCH_8.json");
     println!("[saved {}]", bench8_path.display());
+
+    // ---------------------------------------------------------------
+    // fleet sweep (BENCH_10): one packed ZS-SVD artifact behind the
+    // supervised router at 1/2/4 worker processes.  Tokens are identical
+    // at every worker count (rust/tests/fleet.rs gates that bit-exactly),
+    // so the columns isolate what sharding buys: wall-clock throughput of
+    // the same closed-loop fleet, plus the router's own routed/restart
+    // counters (restarts must be 0 — no faults are injected here).
+    // ---------------------------------------------------------------
+    let plan = coordinator::run_method(&p, &Method::zs(0.6), 0.6)
+        .expect("compress for fleet sweep");
+    let tag = "60".to_string();
+    let lm = p.session.cfg.lowrank.get(&tag).expect("artifact tag");
+    let engine = Engine::from_plan_capped(&tag, &plan, &lm.ranks);
+    let params = plan.apply(&p.params);
+    let store = std::env::temp_dir()
+        .join(format!("zs_bench_fleet_{}", std::process::id()));
+    std::fs::remove_dir_all(&store).ok();
+    let manifest = pack(&p.session.cfg, &params, &engine, None, &store,
+                        "fleet-bench").expect("pack fleet artifact");
+
+    let vocab = p.session.cfg.vocab;
+    let total_tokens = (load.clients * load.per_client * load.max_new) as f64;
+    let mut ft = Table::new(
+        "fleet serving (supervised router, real worker processes)",
+        &["workers", "wall ms", "tok/s", "routed", "restarts"]);
+    let mut bench10_rows: Vec<Json> = Vec::new();
+    for &workers in &[1usize, 2, 4] {
+        let (wall_ms, stats) = drive_fleet(&manifest, workers, &load, vocab);
+        let tps = total_tokens / (wall_ms / 1e3);
+        assert_eq!(stats.worker_restarts, 0, "no faults injected");
+        eprintln!("  fleet x{workers}: {tps:.0} tok/s end-to-end \
+                   ({wall_ms:.0} ms wall)");
+        ft.row(vec![format!("{workers}"), f2(wall_ms), f2(tps),
+                    format!("{}", stats.requests_routed),
+                    format!("{}", stats.worker_restarts)]);
+        bench10_rows.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("clients", Json::num(load.clients as f64)),
+            ("requests", Json::num((load.clients * load.per_client) as f64)),
+            ("max_new_tokens", Json::num(load.max_new as f64)),
+            ("wall_ms", Json::num(wall_ms)),
+            ("tok_per_sec", Json::num(tps)),
+            ("requests_routed", Json::num(stats.requests_routed as f64)),
+            ("worker_restarts", Json::num(stats.worker_restarts as f64)),
+        ]));
+    }
+    common::emit("server_fleet", &ft);
+    std::fs::remove_dir_all(&store).ok();
+
+    let bench10 = Json::obj(vec![
+        ("bench", Json::str("server_throughput/fleet")),
+        ("generated_by",
+         Json::str("cargo bench --bench server_throughput (also run by \
+                    ci.sh)")),
+        ("fast_mode", Json::Bool(fast_mode())),
+        ("units", Json::str("end-to-end tok/s of the whole closed-loop \
+                             client fleet through the routed address, \
+                             timed after every worker process reported \
+                             healthy; streamed tokens bit-identical at \
+                             every worker count")),
+        ("results", Json::Arr(bench10_rows)),
+    ]);
+    let bench10_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("BENCH_10.json");
+    std::fs::write(&bench10_path, bench10.to_string_pretty() + "\n")
+        .expect("write BENCH_10.json");
+    println!("[saved {}]", bench10_path.display());
 }

@@ -231,4 +231,110 @@ TOK2="$(echo "$OUT2" | grep -F 'tokens: [')"
 rm -rf "$(dirname "$ART_SRC")" "$(dirname "$ART_DST")"
 echo "artifact reload smoke OK (swap counter + tokens bit-identical)"
 
+echo "== fleet smoke: router + 2 workers, kill -9 one, auto-restart =="
+# one packed artifact behind a supervised 2-worker fleet: run a scripted
+# session through the routed address, kill -9 one worker, and require the
+# router to (a) keep serving, (b) report exactly one restart through the
+# fleet metrics the client prints, (c) stream bit-identical tokens for the
+# re-issued request after the restart
+FLEET_STORE="$(mktemp -d)/store"
+./target/release/zs-svd pack --fast --ratio 0.6 --out "$FLEET_STORE"
+FLEET_A="$FLEET_STORE/tiny-zs60.zsar"
+[ -f "$FLEET_A" ] || { echo "FATAL: pack wrote no fleet manifest"; exit 1; }
+PORT_FILE="$(mktemp)"
+rm -f "$PORT_FILE"
+./target/release/zs-svd router --workers 2 --listen 127.0.0.1:0 \
+    --port-file "$PORT_FILE" --artifact "$FLEET_A" --max-new-tokens 4 &
+RTR_PID=$!
+trap 'kill "$RTR_PID" 2>/dev/null || true' EXIT
+for _ in $(seq 1 600); do
+    [ -s "$PORT_FILE" ] && break
+    if ! kill -0 "$RTR_PID" 2>/dev/null; then
+        echo "FATAL: router exited before binding"
+        exit 1
+    fi
+    sleep 0.5
+done
+[ -s "$PORT_FILE" ] || { echo "FATAL: router never wrote its port file"; exit 1; }
+FLEET_ADDR="$(cat "$PORT_FILE")"
+# first session: requests queue until the workers pass their handshake,
+# so this also proves boot; then wait until BOTH workers report healthy
+OUT1="$(./target/release/zs-svd client --connect "$FLEET_ADDR" \
+    --requests 2 --prompt-len 8 --max-new-tokens 4 --retries 3)"
+echo "$OUT1" | grep -Fq 'fleet worker restarts: 0' \
+    || { echo "FATAL: fresh fleet already reported restarts"; echo "$OUT1"; exit 1; }
+W0_PID=""
+for _ in $(seq 1 240); do
+    POLL="$(./target/release/zs-svd client --connect "$FLEET_ADDR" \
+        --requests 1 --prompt-len 8 --max-new-tokens 4 --retries 3 || true)"
+    if echo "$POLL" | grep -Eq '^fleet worker 0: pid [1-9][0-9]* healthy true' \
+        && echo "$POLL" | grep -Eq '^fleet worker 1: pid [1-9][0-9]* healthy true'; then
+        W0_PID="$(echo "$POLL" | grep -E '^fleet worker 0:' | awk '{print $5}')"
+        break
+    fi
+    sleep 0.5
+done
+[ -n "$W0_PID" ] || { echo "FATAL: fleet never reached 2 healthy workers"; exit 1; }
+kill -9 "$W0_PID"
+# the supervisor must notice, restart worker 0 from the same artifact, and
+# keep the routed address serving throughout (--retries rides out any
+# request caught on the dying worker)
+RESTARTED=""
+for _ in $(seq 1 240); do
+    OUT2="$(./target/release/zs-svd client --connect "$FLEET_ADDR" \
+        --requests 1 --prompt-len 8 --max-new-tokens 4 --retries 5 || true)"
+    if echo "$OUT2" | grep -Fq 'fleet worker restarts: 1' \
+        && echo "$OUT2" | grep -Eq '^fleet worker 0: pid [1-9][0-9]* healthy true'; then
+        RESTARTED=1
+        break
+    fi
+    sleep 0.5
+done
+[ -n "$RESTARTED" ] \
+    || { echo "FATAL: killed worker never restarted"; echo "$OUT2"; exit 1; }
+# the post-restart session re-issued request 0 (same scripted prompt):
+# tokens must be bit-identical to the pre-kill session's request 0
+TOK1="$(echo "$OUT1" | grep -F 'request 0 tokens: [')"
+TOK2="$(echo "$OUT2" | grep -F 'request 0 tokens: [')"
+[ -n "$TOK1" ] && [ "$TOK1" = "$TOK2" ] \
+    || { echo "FATAL: restart changed streamed tokens";
+         echo "pre-kill:     $TOK1"; echo "post-restart: $TOK2"; exit 1; }
+echo "fleet kill smoke OK (restart observed, post-restart tokens bit-identical)"
+
+echo "== fleet reload smoke: fleet-wide reload with one corrupted store =="
+# pack a second plan and install a copy whose store is then corrupted:
+# a per-worker reload fan-out (good path for worker 0, corrupt for worker
+# 1) must swap ONLY worker 0, name both outcomes in the structured error,
+# and leave the fleet serving; a follow-up valid fleet-wide reload must
+# converge it and drain cleanly
+./target/release/zs-svd pack --fast --ratio 0.4 --out "$FLEET_STORE"
+FLEET_B="$FLEET_STORE/tiny-zs40.zsar"
+[ -f "$FLEET_B" ] || { echo "FATAL: pack wrote no plan-B manifest"; exit 1; }
+FLEET_BAD="$(mktemp -d)/store"
+./target/release/zs-svd install --from "$FLEET_B" --to "$FLEET_BAD"
+BAD_CHUNK="$(ls -S "$FLEET_BAD/chunks" | head -n 1)"
+truncate -s -1 "$FLEET_BAD/chunks/$BAD_CHUNK"
+RELOAD_OUT="$(./target/release/zs-svd client --connect "$FLEET_ADDR" \
+    --reload "$FLEET_B,$FLEET_BAD/tiny-zs40.zsar" \
+    --requests 1 --prompt-len 8 --max-new-tokens 4 2>&1 || true)"
+echo "$RELOAD_OUT" | grep -Fq 'reload_failed' \
+    || { echo "FATAL: partial reload did not fail structurally";
+         echo "$RELOAD_OUT"; exit 1; }
+echo "$RELOAD_OUT" | grep -Fq 'swapped [worker 0]' \
+    || { echo "FATAL: partial reload did not name the swapped worker";
+         echo "$RELOAD_OUT"; exit 1; }
+# the split fleet must still serve plain sessions...
+./target/release/zs-svd client --connect "$FLEET_ADDR" \
+    --requests 1 --prompt-len 8 --max-new-tokens 4 --retries 3 >/dev/null
+# ...and a valid fleet-wide path converges it; drain the fleet via the
+# protocol shutdown and require a clean router exit
+./target/release/zs-svd client --connect "$FLEET_ADDR" \
+    --reload "$FLEET_B" --requests 1 --prompt-len 8 --max-new-tokens 4 \
+    --shutdown
+wait "$RTR_PID"
+trap - EXIT
+rm -f "$PORT_FILE"
+rm -rf "$(dirname "$FLEET_STORE")" "$(dirname "$FLEET_BAD")"
+echo "fleet reload smoke OK (partial failure reported, converged, clean drain)"
+
 echo "CI OK"

@@ -1,0 +1,240 @@
+//! Per-connection streaming flow control: a bounded outbox that *paces*
+//! producers against the consumer instead of buffering without bound, and
+//! sheds the connection with a structured `slow_reader` error when pacing
+//! runs out of patience.
+//!
+//! The server's plain outbox (PR 3) silently drops a connection at its
+//! line cap.  The router version here is gentler and louder: a push into a
+//! full outbox first *waits* up to the pace window for the writer to drain
+//! a slot (back-pressure propagates to the producing worker stream), and
+//! only then declares the client dead — dropping the backlog, queueing one
+//! structured [`ERR_SLOW_READER`] error line, and closing.  Memory stays
+//! bounded by `cap + 1` lines per connection in every outcome.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::server::protocol::{event_line, Event, ERR_SLOW_READER};
+
+/// What happened to a pushed line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// queued for the writer
+    Queued,
+    /// outbox already closed (client gone or previously shed) — dropped
+    Dropped,
+    /// this push hit the cap, waited out the pace window, and shed the
+    /// connection: backlog dropped, `slow_reader` error queued, closed
+    Shed,
+}
+
+struct Inner {
+    lines: VecDeque<String>,
+    closed: bool,
+    shed: bool,
+}
+
+/// Bounded paced outbox: the fleet router's per-connection line queue.
+///
+/// Producers (worker demux threads, the connection's own reader) push wire
+/// lines; the connection's writer thread pops them.  `cap` bounds queued
+/// lines; `pace` bounds how long a producer will wait for the writer to
+/// free a slot before the connection is declared a slow reader and shed.
+pub struct ConnOutbox {
+    cap: usize,
+    pace: Duration,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl ConnOutbox {
+    /// Outbox holding at most `cap` lines (≥ 1); a push into a full outbox
+    /// waits up to `pace` for drain before shedding.
+    pub fn new(cap: usize, pace: Duration) -> ConnOutbox {
+        ConnOutbox {
+            cap: cap.max(1),
+            pace,
+            inner: Mutex::new(Inner { lines: VecDeque::new(), closed: false,
+                                      shed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Push one wire line, pacing against the writer when full.  At the
+    /// cap the caller blocks up to the pace window for a free slot; if the
+    /// writer still hasn't drained one, the connection is shed: the
+    /// backlog is dropped, one structured `slow_reader` error is queued
+    /// for a best-effort goodbye, and the outbox closes.  Pushes after
+    /// close return [`PushOutcome::Dropped`] immediately, so a dead
+    /// connection costs each producer at most one pace window ever.
+    pub fn push(&self, line: String) -> PushOutcome {
+        let mut g = self.lock();
+        if g.closed {
+            return PushOutcome::Dropped;
+        }
+        if g.lines.len() >= self.cap {
+            // pace: wait for the writer to free a slot, bounded
+            let deadline = Instant::now() + self.pace;
+            loop {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = self
+                    .cv
+                    .wait_timeout(g, deadline - now)
+                    .unwrap_or_else(|e| e.into_inner());
+                g = guard;
+                if g.closed {
+                    return PushOutcome::Dropped;
+                }
+                if g.lines.len() < self.cap {
+                    g.lines.push_back(line);
+                    self.cv.notify_all();
+                    return PushOutcome::Queued;
+                }
+            }
+            // the client has not read for a full pace window at cap:
+            // declare it dead LOUDLY — drop the backlog (bounded memory),
+            // leave one structured goodbye, and close
+            g.lines.clear();
+            g.lines.push_back(event_line(&Event::error(
+                None, ERR_SLOW_READER,
+                format!("connection shed: outbox held {} unread lines for \
+                         {:?}", self.cap, self.pace))));
+            g.shed = true;
+            g.closed = true;
+            self.cv.notify_all();
+            return PushOutcome::Shed;
+        }
+        g.lines.push_back(line);
+        self.cv.notify_all();
+        PushOutcome::Queued
+    }
+
+    /// Blocking pop for the writer thread; `None` once closed and drained.
+    pub fn pop(&self) -> Option<String> {
+        let mut g = self.lock();
+        loop {
+            if let Some(l) = g.lines.pop_front() {
+                self.cv.notify_all(); // a slot freed: wake paced producers
+                return Some(l);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Close for new lines; queued lines still drain through [`pop`].
+    ///
+    /// [`pop`]: ConnOutbox::pop
+    pub fn close(&self) {
+        let mut g = self.lock();
+        g.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// True once closed (shed, client EOF, or shutdown).
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    /// True iff this connection was shed as a slow reader.
+    pub fn was_shed(&self) -> bool {
+        self.lock().shed
+    }
+
+    /// Lines currently queued (test/diagnostic view).
+    pub fn len(&self) -> usize {
+        self.lock().lines.len()
+    }
+
+    /// True when nothing is queued right now.
+    pub fn is_empty(&self) -> bool {
+        self.lock().lines.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::protocol::parse_event;
+
+    fn line(i: usize) -> String {
+        event_line(&Event::Token { id: 1, index: i, token: 7 })
+    }
+
+    #[test]
+    fn shed_at_cap_bounds_memory_and_says_goodbye() {
+        // no consumer at all and zero patience: the cap-breaching push
+        // sheds immediately
+        let o = ConnOutbox::new(4, Duration::from_millis(0));
+        for i in 0..4 {
+            assert_eq!(o.push(line(i)), PushOutcome::Queued);
+        }
+        assert_eq!(o.len(), 4);
+        assert_eq!(o.push(line(4)), PushOutcome::Shed);
+        assert!(o.was_shed());
+        assert!(o.is_closed());
+        // memory bound: backlog dropped, exactly the goodbye remains
+        assert_eq!(o.len(), 1);
+        // and that goodbye is the structured slow_reader error
+        let goodbye = o.pop().expect("goodbye line");
+        match parse_event(&goodbye).unwrap() {
+            Event::Error { code, id, .. } => {
+                assert_eq!(code, ERR_SLOW_READER);
+                assert_eq!(id, None);
+            }
+            other => panic!("expected slow_reader error, got {other:?}"),
+        }
+        assert_eq!(o.pop(), None);
+        // the shed connection is free for producers: drop, don't wait
+        assert_eq!(o.push(line(9)), PushOutcome::Dropped);
+    }
+
+    #[test]
+    fn pacing_waits_for_the_writer_instead_of_shedding() {
+        use std::sync::Arc;
+        let o = Arc::new(ConnOutbox::new(2, Duration::from_secs(10)));
+        let consumer = {
+            let o = Arc::clone(&o);
+            std::thread::spawn(move || {
+                let mut got = 0;
+                while o.pop().is_some() {
+                    got += 1;
+                    // a deliberately slow reader that IS reading
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                got
+            })
+        };
+        // 10 lines through a depth-2 outbox: pushes past the cap must pace
+        // (block briefly) rather than shed
+        for i in 0..10 {
+            assert_eq!(o.push(line(i)), PushOutcome::Queued, "line {i}");
+        }
+        o.close();
+        assert_eq!(consumer.join().unwrap(), 10, "nothing lost");
+        assert!(!o.was_shed());
+    }
+
+    #[test]
+    fn close_drains_then_reports_none() {
+        let o = ConnOutbox::new(8, Duration::from_millis(0));
+        o.push("a".into());
+        o.push("b".into());
+        o.close();
+        assert_eq!(o.pop().as_deref(), Some("a"));
+        assert_eq!(o.pop().as_deref(), Some("b"));
+        assert_eq!(o.pop(), None);
+        assert_eq!(o.push("c".into()), PushOutcome::Dropped);
+        assert!(!o.was_shed(), "a plain close is not a shed");
+    }
+}

@@ -1,0 +1,99 @@
+//! Worker health policy: restart back-off and heartbeat staleness.
+//!
+//! Pure arithmetic, no clocks of its own — the router's supervisor loop
+//! feeds it observations (consecutive boot failures, milliseconds since
+//! the last byte from a worker) and acts on the answers.  Keeping the
+//! policy separate from the supervision machinery makes it unit-testable
+//! without processes.
+
+/// Bounded exponential restart back-off.
+///
+/// A worker that keeps dying on boot must not be respawned in a hot loop:
+/// the `n`-th consecutive failure waits `min(base · 2^(n−1), max)` before
+/// the next attempt.  A worker that stays healthy for the router's
+/// stability window resets the counter, so a one-off crash restarts fast.
+#[derive(Clone, Copy, Debug)]
+pub struct BackoffPolicy {
+    /// delay after the first consecutive failure, in milliseconds
+    pub base_ms: u64,
+    /// ceiling for the delay, in milliseconds
+    pub max_ms: u64,
+}
+
+impl BackoffPolicy {
+    /// Delay before the next restart attempt, given how many restarts in a
+    /// row have failed (or died before stabilising).  Zero failures — the
+    /// first boot, or a restart after a long-healthy worker finally died —
+    /// waits nothing.
+    pub fn delay_ms(&self, consecutive_failures: u32) -> u64 {
+        if consecutive_failures == 0 {
+            return 0;
+        }
+        let ceiling = self.max_ms.max(1);
+        let floor = self.base_ms.max(1).min(ceiling);
+        let shift = (consecutive_failures - 1).min(32);
+        self.base_ms
+            .max(1)
+            .saturating_mul(1u64 << shift)
+            .clamp(floor, ceiling)
+    }
+}
+
+impl Default for BackoffPolicy {
+    fn default() -> BackoffPolicy {
+        BackoffPolicy { base_ms: 200, max_ms: 5_000 }
+    }
+}
+
+/// Heartbeat verdict: is a worker that last spoke `since_last_recv_ms`
+/// milliseconds ago — with `pings_outstanding` unanswered pings — stale?
+///
+/// A worker is only declared stale when it has been silent past the
+/// timeout *and* at least one ping went unanswered; silence alone is
+/// normal for an idle worker between heartbeat ticks.
+pub fn is_stale(since_last_recv_ms: u64, pings_outstanding: u64,
+                health_timeout_ms: u64) -> bool {
+    pings_outstanding > 0 && since_last_recv_ms >= health_timeout_ms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_then_clamps() {
+        let p = BackoffPolicy { base_ms: 200, max_ms: 5_000 };
+        assert_eq!(p.delay_ms(0), 0, "first boot waits nothing");
+        assert_eq!(p.delay_ms(1), 200);
+        assert_eq!(p.delay_ms(2), 400);
+        assert_eq!(p.delay_ms(3), 800);
+        assert_eq!(p.delay_ms(5), 3_200);
+        assert_eq!(p.delay_ms(6), 5_000, "clamped at max");
+        assert_eq!(p.delay_ms(60), 5_000, "huge counts do not overflow");
+        assert_eq!(p.delay_ms(u32::MAX), 5_000);
+    }
+
+    #[test]
+    fn backoff_tolerates_degenerate_configs() {
+        // base above max: every failure waits exactly max
+        let p = BackoffPolicy { base_ms: 9_000, max_ms: 1_000 };
+        assert_eq!(p.delay_ms(1), 1_000);
+        assert_eq!(p.delay_ms(7), 1_000);
+        // zeros never panic and never divide-by-zero the clamp
+        let p = BackoffPolicy { base_ms: 0, max_ms: 0 };
+        assert_eq!(p.delay_ms(0), 0);
+        assert_eq!(p.delay_ms(1), 1);
+        assert_eq!(p.delay_ms(40), 1);
+    }
+
+    #[test]
+    fn staleness_needs_both_silence_and_an_unanswered_ping() {
+        // silent but never pinged (or every ping answered): idle, not stale
+        assert!(!is_stale(10_000, 0, 3_000));
+        // pinged and silent past the timeout: stale
+        assert!(is_stale(3_000, 1, 3_000));
+        assert!(is_stale(60_000, 4, 3_000));
+        // pinged but recently heard from: healthy
+        assert!(!is_stale(100, 1, 3_000));
+    }
+}

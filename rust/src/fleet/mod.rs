@@ -1,0 +1,73 @@
+//! Sharded multi-worker fleet: a supervising router in front of N worker
+//! processes, each running today's full serving engine booted from a
+//! packed artifact (`crate::artifact`).
+//!
+//! One listening address speaks the exact single-server wire protocol
+//! (`crate::server::protocol`); behind it the router spawns, health-checks,
+//! restarts, and load-balances worker processes.  Because generations
+//! depend only on (weights, prompt, temperature, seed), a fleet response
+//! **bit-matches** a single-process run of the same request — sharding is
+//! a pure availability/throughput move, never a correctness one
+//! (`rust/tests/fleet.rs` gates this over workers × threads ×
+//! speculation, including across a worker kill).
+//!
+//! # Fault model
+//!
+//! What the router defends against, and how:
+//!
+//! * **Worker crash** (process exits, e.g. OOM-kill or `kill -9`): the
+//!   supervisor notices via `try_wait`, every in-flight request routed to
+//!   that worker receives a structured `worker_failed` error immediately —
+//!   never a silent hang — and the worker respawns from the *same verified
+//!   artifact*.  Traffic keeps flowing on the surviving workers
+//!   (graceful degradation N−1, …, 1).
+//! * **Worker hang** (process alive, engine wedged): heartbeat `ping`s go
+//!   out on the routed connection every `heartbeat_ms`; silence past
+//!   `health_timeout_ms` with an unanswered ping declares the worker hung,
+//!   and it is killed and restarted like a crash.
+//! * **Crash loop** (bad node, corrupt store): respawns back off
+//!   exponentially (`restart.base_ms · 2ⁿ⁻¹`, capped at `restart.max_ms`);
+//!   a worker that stays up `stable_ms` resets the counter.
+//! * **Overload**: two-level admission.  The router FIFO
+//!   (`router_depth`) rejects with a structured `overloaded` error
+//!   carrying `queue_depth` + `retry_after_ms` hints; per-worker depth
+//!   (`worker_depth`) bounds what any one worker holds, so one slow
+//!   worker cannot absorb the whole queue.
+//! * **Slow readers**: each connection's outbox is capped
+//!   (`outbox_lines`); a full outbox *paces* producers (bounded wait for
+//!   the client to read) and, after `write_stall_ms` without progress,
+//!   sheds the connection with a structured `slow_reader` error close —
+//!   one stalled client can neither block other streams nor grow router
+//!   memory without bound.
+//! * **Version skew**: the router handshakes `hello {proto}` with every
+//!   booting worker and refuses mismatches, so a stale binary fails
+//!   loudly at boot, not with garbled frames mid-stream.
+//! * **Partial reload**: a fleet-wide `reload` fans out sequentially; a
+//!   worker that fails artifact verification keeps serving its current
+//!   plan, and the reply names exactly which workers swapped.
+//!
+//! Out of scope: the router itself is a single process (its failure takes
+//! the listening address down — run it under an init/systemd-style
+//! restarter), and workers are trusted local processes (no wire auth).
+//!
+//! # Quick start
+//!
+//! ```text
+//! zs-svd pack --out store --name tiny --ratio 0.6        # once
+//! zs-svd router --workers 4 --artifact store/tiny.zsar --listen 127.0.0.1:7000
+//! zs-svd client --connect 127.0.0.1:7000 --requests 32 --retries 3
+//! ```
+//!
+//! From Rust, [`run_fleet`] with a [`RouterConfig`] does the same; it
+//! returns [`FleetStats`] after a client-initiated `shutdown` drains the
+//! fleet.
+
+pub mod flow;
+pub mod health;
+pub mod router;
+pub mod worker;
+
+pub use flow::{ConnOutbox, PushOutcome};
+pub use health::BackoffPolicy;
+pub use router::{run_fleet, FleetStats, RouterConfig};
+pub use worker::{WorkerShared, WorkerSpec};

@@ -1,0 +1,1028 @@
+//! The fleet router: a supervised multi-process front-end that speaks the
+//! exact single-server wire protocol on one listening address and fans
+//! requests out across N worker processes.
+//!
+//! Thread anatomy (all plain `std::thread`, joined before [`run_fleet`]
+//! returns):
+//!
+//! * **supervisor** ×N — boots its worker (spawn → port-file discovery →
+//!   version handshake), then watches it: child exit, demux-reported
+//!   stream trouble, and heartbeat staleness all tear the incarnation
+//!   down, fail its in-flight requests with structured `worker_failed`
+//!   errors, and respawn from the *same verified artifact* under bounded
+//!   exponential back-off.
+//! * **demux** ×N (one per live worker incarnation) — reads the worker's
+//!   event stream, stamps heartbeat freshness, translates fleet-assigned
+//!   request ids back to client ids, and pushes lines into the owning
+//!   connection's paced outbox.
+//! * **dispatcher** ×1 — pops the router-level FIFO and places each
+//!   request on a healthy worker with spare depth (session affinity
+//!   first, then least-loaded), inserting the route *before* the bytes go
+//!   out so no reply can beat its bookkeeping.
+//! * **per-connection reader/writer** — the reader parses requests and
+//!   answers control traffic inline; the writer drains the paced outbox.
+//!
+//! Request ids are rewritten: the router assigns every admitted generate a
+//! fleet-unique id on the worker wire and restores the client's id on the
+//! way back, so concurrent connections can reuse ids freely (exactly like
+//! the single server, where ids only need to be unique per connection).
+
+use std::collections::HashMap;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::server::admission::{self, BoundedQueue, PopState, PushError};
+use crate::server::metrics::Metrics;
+use crate::server::protocol::{self, event_line, Event, GenerateReq, Request,
+                              ERR_BAD_REQUEST, ERR_OVERLOADED,
+                              ERR_RELOAD_FAILED, ERR_SHUTTING_DOWN,
+                              ERR_WORKER_FAILED, PROTO_VERSION};
+use crate::util::json::Json;
+
+use super::flow::{ConnOutbox, PushOutcome};
+use super::health::{self, BackoffPolicy};
+use super::worker::{handshake, spawn_worker, WorkerShared, WorkerSpec};
+
+/// Everything the router needs to run a fleet.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// listen address (e.g. `127.0.0.1:0`)
+    pub addr: String,
+    /// worker binary; empty = this process's own executable
+    pub program: PathBuf,
+    /// number of worker processes to supervise (≥ 1)
+    pub workers: usize,
+    /// artifact manifest per worker: one entry shared by all workers, or
+    /// exactly `workers` entries for per-worker stores
+    pub artifacts: Vec<String>,
+    /// extra `serve` flags passed to every worker verbatim
+    pub worker_args: Vec<String>,
+    /// router-level admission FIFO depth (level 1 of two-level admission)
+    pub router_depth: usize,
+    /// per-worker in-flight cap (level 2); keep at or below each worker's
+    /// own `--queue-depth` so workers never reject routed traffic
+    pub worker_depth: usize,
+    /// per-connection outbox cap, in wire lines
+    pub outbox_lines: usize,
+    /// how long a full outbox paces a producer before the connection is
+    /// shed as a slow reader, ms
+    pub write_stall_ms: u64,
+    /// heartbeat ping interval per worker, ms
+    pub heartbeat_ms: u64,
+    /// silence + an unanswered ping for this long ⇒ the worker is hung, ms
+    pub health_timeout_ms: u64,
+    /// how long a booting worker may take to publish its port, ms
+    pub boot_timeout_ms: u64,
+    /// restart back-off for crash-looping workers
+    pub restart: BackoffPolicy,
+    /// a worker healthy this long resets its back-off counter, ms
+    pub stable_ms: u64,
+}
+
+impl RouterConfig {
+    /// Config with production defaults for `workers` workers booting
+    /// `artifacts` (one shared path or one per worker) behind `addr`.
+    pub fn new(addr: &str, workers: usize, artifacts: Vec<String>)
+               -> RouterConfig {
+        RouterConfig {
+            addr: addr.to_string(),
+            program: PathBuf::new(),
+            workers,
+            artifacts,
+            worker_args: Vec::new(),
+            router_depth: 128,
+            worker_depth: 32,
+            outbox_lines: 16_384,
+            write_stall_ms: 30_000,
+            heartbeat_ms: 250,
+            health_timeout_ms: 3_000,
+            boot_timeout_ms: 60_000,
+            restart: BackoffPolicy::default(),
+            stable_ms: 10_000,
+        }
+    }
+}
+
+/// What the fleet did over its lifetime; returned by [`run_fleet`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetStats {
+    /// client connections accepted
+    pub connections: u64,
+    /// generate requests successfully placed on a worker
+    pub requests_routed: u64,
+    /// worker respawns after the initial boot
+    pub worker_restarts: u64,
+    /// worker failures detected (crash, hang, boot trouble)
+    pub worker_failures: u64,
+    /// connections shed for not reading their token stream
+    pub slow_reader_closes: u64,
+}
+
+/// One admitted generate waiting for (or holding) a worker.
+struct Job {
+    fleet_id: u64,
+    client_id: u64,
+    conn: Arc<RouterConn>,
+    req: GenerateReq,
+}
+
+/// An in-flight request: fleet id → where its replies go.
+struct Route {
+    conn: Arc<RouterConn>,
+    client_id: u64,
+    worker: usize,
+    started: Instant,
+}
+
+/// Router-side connection state.
+struct RouterConn {
+    outbox: ConnOutbox,
+    inflight: AtomicUsize,
+    /// 1 + index of the last worker this connection's requests landed on
+    /// (0 = none yet) — session affinity keeps a connection's prompts on
+    /// one worker so its prefix cache stays warm
+    affinity: AtomicUsize,
+}
+
+/// Edge wakeup channel for the dispatcher (and anything else napping on
+/// fleet state): `notify` after any event that could unblock a dispatch —
+/// capacity freed, worker healthy, work queued.
+struct Notify {
+    seq: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Notify {
+    fn new() -> Notify {
+        Notify { seq: Mutex::new(0), cv: Condvar::new() }
+    }
+    fn notify(&self) {
+        let mut g = self.seq.lock().unwrap_or_else(|e| e.into_inner());
+        *g = g.wrapping_add(1);
+        self.cv.notify_all();
+    }
+    fn wait_timeout(&self, d: Duration) {
+        let g = self.seq.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = self.cv.wait_timeout(g, d);
+    }
+}
+
+struct FleetShared {
+    cfg: RouterConfig,
+    fifo: BoundedQueue<Job>,
+    workers: Vec<Arc<WorkerShared>>,
+    routes: Mutex<HashMap<u64, Route>>,
+    conns: Mutex<HashMap<u64, Arc<RouterConn>>>,
+    next_fleet_id: AtomicU64,
+    next_conn_id: AtomicU64,
+    heartbeat_nonce: AtomicU64,
+    shutdown: AtomicBool,
+    workers_stop: AtomicBool,
+    epoch: Instant,
+    metrics: Metrics,
+    wake: Notify,
+}
+
+fn now_ms(epoch: Instant) -> u64 {
+    epoch.elapsed().as_millis() as u64
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn push_to_conn(sh: &FleetShared, conn: &RouterConn, line: String) {
+    if conn.outbox.push(line) == PushOutcome::Shed {
+        sh.metrics.inc("fleet.slow_reader_closes", 1);
+    }
+}
+
+/// Run a supervised fleet: boot `cfg.workers` workers, serve the wire
+/// protocol on `cfg.addr`, and keep serving through worker crashes until a
+/// client sends `shutdown`.  `on_ready` fires once with the bound address
+/// (port-file writing, test rendezvous).
+///
+/// Returns lifetime totals once the fleet has drained and every worker
+/// process has been stopped.
+pub fn run_fleet(cfg: RouterConfig, on_ready: impl FnOnce(SocketAddr))
+                 -> io::Result<FleetStats> {
+    if cfg.workers == 0 {
+        return Err(io::Error::new(io::ErrorKind::InvalidInput,
+                                  "fleet needs at least one worker"));
+    }
+    if cfg.artifacts.len() != 1 && cfg.artifacts.len() != cfg.workers {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("need 1 artifact or one per worker ({} workers, {} \
+                     artifacts)", cfg.workers, cfg.artifacts.len())));
+    }
+    let program = if cfg.program.as_os_str().is_empty() {
+        std::env::current_exe()?
+    } else {
+        cfg.program.clone()
+    };
+
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+
+    let workers: Vec<Arc<WorkerShared>> = (0..cfg.workers)
+        .map(|i| {
+            let art = if cfg.artifacts.len() == 1 { &cfg.artifacts[0] }
+                      else { &cfg.artifacts[i] };
+            Arc::new(WorkerShared::new(i, art.clone()))
+        })
+        .collect();
+    let router_depth = cfg.router_depth.max(1);
+    let boot_timeout = Duration::from_millis(cfg.boot_timeout_ms.max(1));
+    let worker_args = cfg.worker_args.clone();
+    let sh = Arc::new(FleetShared {
+        cfg,
+        fifo: BoundedQueue::new(router_depth),
+        workers,
+        routes: Mutex::new(HashMap::new()),
+        conns: Mutex::new(HashMap::new()),
+        next_fleet_id: AtomicU64::new(1),
+        next_conn_id: AtomicU64::new(1),
+        heartbeat_nonce: AtomicU64::new(1),
+        shutdown: AtomicBool::new(false),
+        workers_stop: AtomicBool::new(false),
+        epoch: Instant::now(),
+        metrics: Metrics::new(),
+        wake: Notify::new(),
+    });
+
+    let mut sup_handles = Vec::new();
+    for w in &sh.workers {
+        let spec = WorkerSpec {
+            program: program.clone(),
+            artifact: w.artifact.clone(),
+            extra_args: worker_args.clone(),
+            boot_timeout,
+        };
+        let (sh, w) = (Arc::clone(&sh), Arc::clone(w));
+        sup_handles.push(thread::spawn(move || supervisor(sh, w, spec)));
+    }
+    let dispatcher_handle = {
+        let sh = Arc::clone(&sh);
+        thread::spawn(move || dispatcher(&sh))
+    };
+
+    on_ready(addr);
+
+    let mut conn_handles = Vec::new();
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) if !sh.shutdown.load(Ordering::SeqCst) => {
+                stream.set_nodelay(true).ok();
+                let sh = Arc::clone(&sh);
+                conn_handles.push(thread::spawn(move || {
+                    handle_conn(&sh, stream);
+                }));
+            }
+            Ok(_) => {} // shutting down: refuse by dropping the socket
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(25)),
+        }
+        if sh.shutdown.load(Ordering::SeqCst) {
+            let deadline = *drain_deadline.get_or_insert_with(|| {
+                Instant::now() + Duration::from_secs(60)
+            });
+            let drained = sh.fifo.is_empty() && lock(&sh.routes).is_empty();
+            if drained || Instant::now() > deadline {
+                break;
+            }
+        }
+    }
+
+    // drained (or drain deadline): stop the workers, then the plumbing
+    sh.workers_stop.store(true, Ordering::SeqCst);
+    sh.wake.notify();
+    for h in sup_handles {
+        let _ = h.join();
+    }
+    let _ = dispatcher_handle.join();
+    for c in lock(&sh.conns).values() {
+        c.outbox.close();
+    }
+    for h in conn_handles {
+        let _ = h.join();
+    }
+
+    Ok(FleetStats {
+        connections: sh.metrics.counter("connections"),
+        requests_routed: sh.metrics.counter("fleet.requests_routed"),
+        worker_restarts: sh.metrics.counter("fleet.worker_restarts"),
+        worker_failures: sh.metrics.counter("fleet.worker_failures"),
+        slow_reader_closes: sh.metrics.counter("fleet.slow_reader_closes"),
+    })
+}
+
+// ---------------------------------------------------------------- workers
+
+/// Boot → watch → tear down → back off → respawn, forever, for one worker
+/// slot.  Runs on its own thread until the fleet stops.
+fn supervisor(sh: Arc<FleetShared>, w: Arc<WorkerShared>, spec: WorkerSpec) {
+    let mut incarnation: u64 = 0;
+    let mut consecutive_failures: u32 = 0;
+    loop {
+        if sh.workers_stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // bounded exponential back-off before a re-attempt, napped in
+        // small slices so shutdown stays responsive
+        let mut delay = sh.cfg.restart.delay_ms(consecutive_failures);
+        while delay > 0 {
+            if sh.workers_stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let slice = delay.min(50);
+            thread::sleep(Duration::from_millis(slice));
+            delay -= slice;
+        }
+
+        // boot: spawn, discover the port, handshake versions
+        let boot = spawn_worker(&spec, w.index, incarnation)
+            .and_then(|(mut child, addr)| {
+                match handshake(addr, spec.boot_timeout) {
+                    Ok((stream, engine)) => Ok((child, addr, stream, engine)),
+                    Err(e) => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        Err(e)
+                    }
+                }
+            });
+        let (mut child, addr, stream, engine) = match boot {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!("router: worker {} boot attempt failed: {e}",
+                          w.index);
+                w.failures.fetch_add(1, Ordering::SeqCst);
+                sh.metrics.inc("fleet.worker_failures", 1);
+                consecutive_failures = consecutive_failures.saturating_add(1);
+                incarnation += 1;
+                continue;
+            }
+        };
+        let read_half = match stream.try_clone() {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("router: worker {}: socket clone failed: {e}",
+                          w.index);
+                let _ = child.kill();
+                let _ = child.wait();
+                w.failures.fetch_add(1, Ordering::SeqCst);
+                sh.metrics.inc("fleet.worker_failures", 1);
+                consecutive_failures = consecutive_failures.saturating_add(1);
+                incarnation += 1;
+                continue;
+            }
+        };
+
+        // install the incarnation and open it for traffic
+        *lock(&w.addr) = Some(addr);
+        *lock(&w.engine) = engine;
+        *lock(&w.writer) = Some(stream);
+        w.pid.store(child.id() as u64, Ordering::SeqCst);
+        w.last_recv_ms.store(now_ms(sh.epoch), Ordering::SeqCst);
+        w.pings_outstanding.store(0, Ordering::SeqCst);
+        w.suspect.store(false, Ordering::SeqCst);
+        w.healthy.store(true, Ordering::SeqCst);
+        if incarnation > 0 {
+            w.restarts.fetch_add(1, Ordering::SeqCst);
+            sh.metrics.inc("fleet.worker_restarts", 1);
+        }
+        sh.wake.notify();
+        eprintln!("router: worker {} up (pid {}, {addr}, incarnation {})",
+                  w.index, child.id(), incarnation);
+
+        let demux_handle = {
+            let (sh, w) = (Arc::clone(&sh), Arc::clone(&w));
+            thread::spawn(move || demux(&sh, &w, read_half))
+        };
+
+        // watch the incarnation until it dies or the fleet stops
+        let healthy_since = Instant::now();
+        let mut last_ping = Instant::now();
+        let mut graceful = false;
+        loop {
+            if sh.workers_stop.load(Ordering::SeqCst) {
+                graceful = true;
+                break;
+            }
+            match child.try_wait() {
+                Ok(Some(status)) => {
+                    eprintln!("router: worker {} (pid {}) exited: {status}",
+                              w.index, w.pid.load(Ordering::SeqCst));
+                    break;
+                }
+                Ok(None) => {}
+                Err(_) => break,
+            }
+            if w.suspect.load(Ordering::SeqCst) {
+                eprintln!("router: worker {} stream trouble — recycling",
+                          w.index);
+                break;
+            }
+            let since = now_ms(sh.epoch)
+                .saturating_sub(w.last_recv_ms.load(Ordering::SeqCst));
+            if health::is_stale(since,
+                                w.pings_outstanding.load(Ordering::SeqCst),
+                                sh.cfg.health_timeout_ms) {
+                eprintln!("router: worker {} unresponsive for {since}ms — \
+                           declaring it hung", w.index);
+                break;
+            }
+            if last_ping.elapsed()
+                >= Duration::from_millis(sh.cfg.heartbeat_ms.max(1))
+            {
+                let nonce =
+                    sh.heartbeat_nonce.fetch_add(1, Ordering::SeqCst);
+                w.pings_outstanding.fetch_add(1, Ordering::SeqCst);
+                if w.send(&Request::Ping { nonce }).is_err() {
+                    break;
+                }
+                last_ping = Instant::now();
+            }
+            thread::sleep(Duration::from_millis(
+                sh.cfg.heartbeat_ms.clamp(5, 100)));
+        }
+
+        // tear the incarnation down
+        w.healthy.store(false, Ordering::SeqCst);
+        if graceful {
+            // fleet shutdown: ask nicely, then insist
+            let _ = w.send(&Request::Shutdown);
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                if matches!(child.try_wait(), Ok(Some(_))) {
+                    break;
+                }
+                if Instant::now() > deadline {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    break;
+                }
+                thread::sleep(Duration::from_millis(20));
+            }
+        } else {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        w.close_writer();
+        let _ = demux_handle.join();
+        w.pid.store(0, Ordering::SeqCst);
+        *lock(&w.addr) = None;
+        if graceful {
+            return;
+        }
+
+        // crash path: requests routed there get structured errors NOW,
+        // not a silent hang; the slot respawns from the same artifact
+        w.failures.fetch_add(1, Ordering::SeqCst);
+        sh.metrics.inc("fleet.worker_failures", 1);
+        fail_inflight(&sh, &w);
+        consecutive_failures = if healthy_since.elapsed()
+            >= Duration::from_millis(sh.cfg.stable_ms)
+        {
+            0 // it ran fine for a while: restart immediately
+        } else {
+            consecutive_failures.saturating_add(1)
+        };
+        incarnation += 1;
+    }
+}
+
+/// Every in-flight request routed to `w` gets a structured `worker_failed`
+/// error on its owning connection; routes and in-flight counts are
+/// released so the dispatcher can use the freed capacity elsewhere.
+fn fail_inflight(sh: &FleetShared, w: &WorkerShared) {
+    let dead: Vec<Route> = {
+        let mut routes = lock(&sh.routes);
+        let ids: Vec<u64> = routes
+            .iter()
+            .filter(|(_, r)| r.worker == w.index)
+            .map(|(id, _)| *id)
+            .collect();
+        ids.iter().filter_map(|id| routes.remove(id)).collect()
+    };
+    for r in &dead {
+        push_to_conn(sh, &r.conn, event_line(&Event::error(
+            Some(r.client_id), ERR_WORKER_FAILED,
+            format!("worker {} died mid-request; the request was not \
+                     completed — safe to retry", w.index))));
+        w.inflight.fetch_sub(1, Ordering::SeqCst);
+        r.conn.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+    if !dead.is_empty() {
+        eprintln!("router: failed {} in-flight request(s) from worker {}",
+                  dead.len(), w.index);
+    }
+    sh.wake.notify();
+}
+
+/// Read one worker incarnation's event stream: stamp heartbeat freshness,
+/// translate fleet ids back to client ids, and fan lines into connection
+/// outboxes.  Exits on EOF/garble, flagging the worker suspect.
+fn demux(sh: &FleetShared, w: &WorkerShared, stream: TcpStream) {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        w.last_recv_ms.store(now_ms(sh.epoch), Ordering::SeqCst);
+        w.pings_outstanding.store(0, Ordering::SeqCst);
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let ev = match protocol::parse_event(trimmed) {
+            Ok(ev) => ev,
+            Err(e) => {
+                // a garbled stream means framing is lost: recycle the worker
+                eprintln!("router: worker {} sent garbage ({e}) — recycling",
+                          w.index);
+                break;
+            }
+        };
+        match ev {
+            Event::Pong { .. } => {} // freshness already stamped
+            Event::Token { id, index, token } => {
+                let target = lock(&sh.routes)
+                    .get(&id)
+                    .map(|r| (Arc::clone(&r.conn), r.client_id));
+                if let Some((conn, client_id)) = target {
+                    push_to_conn(sh, &conn, event_line(&Event::Token {
+                        id: client_id, index, token }));
+                }
+            }
+            Event::Done { id, tokens, prompt_len, queue_ms, prefill_ms,
+                          decode_ms, ttft_ms, latency_ms, truncated,
+                          cached_prompt_tokens } => {
+                if let Some(r) = lock(&sh.routes).remove(&id) {
+                    sh.metrics.record_ms(
+                        "fleet.e2e_ms",
+                        r.started.elapsed().as_secs_f64() * 1e3);
+                    push_to_conn(sh, &r.conn, event_line(&Event::Done {
+                        id: r.client_id, tokens, prompt_len, queue_ms,
+                        prefill_ms, decode_ms, ttft_ms, latency_ms,
+                        truncated, cached_prompt_tokens }));
+                    w.inflight.fetch_sub(1, Ordering::SeqCst);
+                    r.conn.inflight.fetch_sub(1, Ordering::SeqCst);
+                    sh.wake.notify();
+                }
+            }
+            Event::Error { id: Some(id), code, message, queue_depth,
+                           retry_after_ms } => {
+                if let Some(r) = lock(&sh.routes).remove(&id) {
+                    push_to_conn(sh, &r.conn, event_line(&Event::Error {
+                        id: Some(r.client_id), code, message, queue_depth,
+                        retry_after_ms }));
+                    w.inflight.fetch_sub(1, Ordering::SeqCst);
+                    r.conn.inflight.fetch_sub(1, Ordering::SeqCst);
+                    sh.wake.notify();
+                }
+            }
+            // request-anonymous worker messages (shutdown acks, global
+            // errors) have no route to follow; the supervisor's health
+            // machinery owns worker-level trouble
+            _ => {}
+        }
+    }
+    w.suspect.store(true, Ordering::SeqCst);
+    sh.wake.notify();
+}
+
+// ------------------------------------------------------------- dispatcher
+
+/// Pop the router FIFO and place each request on a worker.  Exits when the
+/// FIFO is closed and fully drained.
+fn dispatcher(sh: &FleetShared) {
+    loop {
+        match sh.fifo.pop_or_state() {
+            PopState::Drained => return,
+            PopState::Empty => {
+                sh.fifo.wait_nonempty(Duration::from_millis(50));
+            }
+            PopState::Item(job) => dispatch_one(sh, job),
+        }
+    }
+}
+
+/// Choose a worker for `conn`: its affinity worker when healthy and under
+/// the per-worker depth, otherwise the least-loaded healthy worker.
+fn pick_worker(sh: &FleetShared, conn: &RouterConn) -> Option<usize> {
+    let depth = sh.cfg.worker_depth.max(1);
+    let usable = |w: &WorkerShared| {
+        w.healthy.load(Ordering::SeqCst)
+            && !w.suspect.load(Ordering::SeqCst)
+            && w.inflight.load(Ordering::SeqCst) < depth
+    };
+    let aff = conn.affinity.load(Ordering::SeqCst);
+    if aff > 0 && usable(&sh.workers[aff - 1]) {
+        return Some(aff - 1);
+    }
+    sh.workers
+        .iter()
+        .filter(|w| usable(w))
+        .min_by_key(|w| (w.inflight.load(Ordering::SeqCst),
+                         w.routed_total.load(Ordering::SeqCst),
+                         w.index))
+        .map(|w| w.index)
+}
+
+fn dispatch_one(sh: &FleetShared, job: Job) {
+    loop {
+        if job.conn.outbox.is_closed() {
+            // client already gone (EOF or shed): don't spend a worker on it
+            job.conn.inflight.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
+        let Some(widx) = pick_worker(sh, &job.conn) else {
+            let any_healthy = sh.workers.iter()
+                .any(|w| w.healthy.load(Ordering::SeqCst));
+            if !any_healthy
+                && (sh.shutdown.load(Ordering::SeqCst)
+                    || sh.workers_stop.load(Ordering::SeqCst))
+            {
+                // nothing will ever serve this request
+                push_to_conn(sh, &job.conn, event_line(&Event::error(
+                    Some(job.client_id), ERR_SHUTTING_DOWN,
+                    "fleet is shutting down".into())));
+                job.conn.inflight.fetch_sub(1, Ordering::SeqCst);
+                return;
+            }
+            // all workers busy or restarting: requests stay queued (that
+            // is what graceful degradation to N−1 … 1 workers looks like)
+            sh.wake.wait_timeout(Duration::from_millis(50));
+            continue;
+        };
+        let w = &sh.workers[widx];
+
+        // route first, then write: the reply cannot beat the bookkeeping
+        lock(&sh.routes).insert(job.fleet_id, Route {
+            conn: Arc::clone(&job.conn),
+            client_id: job.client_id,
+            worker: widx,
+            started: Instant::now(),
+        });
+        w.inflight.fetch_add(1, Ordering::SeqCst);
+        let wire = Request::Generate(GenerateReq {
+            id: job.fleet_id,
+            prompt: job.req.prompt.clone(),
+            max_new_tokens: job.req.max_new_tokens,
+            temperature: job.req.temperature,
+            seed: job.req.seed,
+        });
+        match w.send(&wire) {
+            Ok(()) => {
+                w.routed_total.fetch_add(1, Ordering::SeqCst);
+                sh.metrics.inc("fleet.requests_routed", 1);
+                job.conn.affinity.store(widx + 1, Ordering::SeqCst);
+                return;
+            }
+            Err(_) => {
+                // the worker link died under us: undo, flag the worker
+                // for the supervisor, and re-pick
+                lock(&sh.routes).remove(&job.fleet_id);
+                w.inflight.fetch_sub(1, Ordering::SeqCst);
+                w.suspect.store(true, Ordering::SeqCst);
+                w.healthy.store(false, Ordering::SeqCst);
+                sh.wake.notify();
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ connections
+
+/// Serve one client connection: reader on this thread, writer draining the
+/// paced outbox on a helper thread.
+fn handle_conn(sh: &Arc<FleetShared>, stream: TcpStream) {
+    sh.metrics.inc("connections", 1);
+    let conn_id = sh.next_conn_id.fetch_add(1, Ordering::SeqCst);
+    let conn = Arc::new(RouterConn {
+        outbox: ConnOutbox::new(
+            sh.cfg.outbox_lines,
+            Duration::from_millis(sh.cfg.write_stall_ms)),
+        inflight: AtomicUsize::new(0),
+        affinity: AtomicUsize::new(0),
+    });
+    lock(&sh.conns).insert(conn_id, Arc::clone(&conn));
+
+    let writer_handle = match stream.try_clone() {
+        Ok(out) => {
+            let conn = Arc::clone(&conn);
+            Some(thread::spawn(move || {
+                let mut out = out;
+                while let Some(mut l) = conn.outbox.pop() {
+                    l.push('\n');
+                    if out.write_all(l.as_bytes()).is_err() {
+                        conn.outbox.close();
+                        break;
+                    }
+                }
+                // unblock the reader so the connection fully closes
+                let _ = out.shutdown(std::net::Shutdown::Both);
+            }))
+        }
+        Err(_) => None,
+    };
+
+    if writer_handle.is_some() {
+        reader_loop(sh, &conn, &stream);
+    }
+    conn.outbox.close();
+    if let Some(h) = writer_handle {
+        let _ = h.join();
+    }
+    lock(&sh.conns).remove(&conn_id);
+}
+
+fn reader_loop(sh: &Arc<FleetShared>, conn: &Arc<RouterConn>,
+               stream: &TcpStream) {
+    let mut reader = match stream.try_clone() {
+        Ok(r) => BufReader::new(r),
+        Err(_) => return,
+    };
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match protocol::parse_request(trimmed) {
+            Err(e) => push_to_conn(sh, conn, event_line(&Event::error(
+                None, ERR_BAD_REQUEST, e))),
+            Ok(req) => handle_request(sh, conn, req),
+        }
+        if conn.outbox.is_closed() {
+            return; // shed while we were handling — stop reading
+        }
+    }
+}
+
+fn handle_request(sh: &Arc<FleetShared>, conn: &Arc<RouterConn>,
+                  req: Request) {
+    match req {
+        Request::Hello { proto } => {
+            if proto == PROTO_VERSION {
+                push_to_conn(sh, conn, event_line(&Event::Hello {
+                    proto: PROTO_VERSION,
+                    version: env!("CARGO_PKG_VERSION").into(),
+                    engine: fleet_engine_label(sh),
+                }));
+            } else {
+                push_to_conn(sh, conn, event_line(&Event::error(
+                    None, ERR_BAD_REQUEST,
+                    format!("unsupported proto {proto} (this router speaks \
+                             {PROTO_VERSION})"))));
+            }
+        }
+        Request::Ping { nonce } => {
+            push_to_conn(sh, conn, event_line(&Event::Pong { nonce }));
+        }
+        Request::Metrics => {
+            let snap = fleet_snapshot(sh);
+            push_to_conn(sh, conn, event_line(&Event::Metrics(snap)));
+        }
+        Request::Trace => {
+            push_to_conn(sh, conn, event_line(&Event::Trace(
+                crate::obs::snapshot_json(256))));
+        }
+        Request::Reload { artifact } => handle_reload(sh, conn, &artifact),
+        Request::Generate(g) => handle_generate(sh, conn, g),
+        Request::Shutdown => {
+            push_to_conn(sh, conn, event_line(&Event::ShuttingDown));
+            sh.shutdown.store(true, Ordering::SeqCst);
+            sh.fifo.close();
+            sh.wake.notify();
+        }
+    }
+}
+
+fn handle_generate(sh: &Arc<FleetShared>, conn: &Arc<RouterConn>,
+                   g: GenerateReq) {
+    if g.prompt.is_empty() {
+        push_to_conn(sh, conn, event_line(&Event::error(
+            Some(g.id), ERR_BAD_REQUEST, "empty prompt".into())));
+        return;
+    }
+    if sh.shutdown.load(Ordering::SeqCst) {
+        push_to_conn(sh, conn, event_line(&Event::error(
+            Some(g.id), ERR_SHUTTING_DOWN,
+            "fleet is shutting down".into())));
+        return;
+    }
+    let fleet_id = sh.next_fleet_id.fetch_add(1, Ordering::SeqCst);
+    conn.inflight.fetch_add(1, Ordering::SeqCst);
+    let job = Job { fleet_id, client_id: g.id, conn: Arc::clone(conn),
+                    req: g };
+    match sh.fifo.try_push(job) {
+        Ok(()) => sh.wake.notify(),
+        Err(PushError::Full(job)) => {
+            conn.inflight.fetch_sub(1, Ordering::SeqCst);
+            let queued = sh.fifo.len();
+            push_to_conn(sh, conn, event_line(&Event::Error {
+                id: Some(job.client_id),
+                code: ERR_OVERLOADED.into(),
+                message: format!("router queue full ({queued} queued)"),
+                queue_depth: Some(queued),
+                retry_after_ms: Some(admission::retry_after_hint_ms(
+                    queued, sh.fifo.depth())),
+            }));
+        }
+        Err(PushError::Closed(job)) => {
+            conn.inflight.fetch_sub(1, Ordering::SeqCst);
+            push_to_conn(sh, conn, event_line(&Event::error(
+                Some(job.client_id), ERR_SHUTTING_DOWN,
+                "fleet is shutting down".into())));
+        }
+    }
+}
+
+// ------------------------------------------------------- control plane
+
+/// Joined engine label across workers, e.g. `fleet[2 x lowrank-r60]`, or
+/// `fleet[dense|lowrank-r60]` while mixed mid-reload.
+fn fleet_engine_label(sh: &FleetShared) -> String {
+    let mut labels: Vec<String> = Vec::new();
+    for w in &sh.workers {
+        let l = lock(&w.engine).clone();
+        if !l.is_empty() && !labels.contains(&l) {
+            labels.push(l);
+        }
+    }
+    match labels.len() {
+        0 => "fleet[booting]".to_string(),
+        1 => format!("fleet[{} x {}]", sh.workers.len(), labels[0]),
+        _ => format!("fleet[{}]", labels.join("|")),
+    }
+}
+
+/// One short-lived request/reply exchange with a worker on a *fresh*
+/// connection (control traffic never rides the routed stream, so a slow
+/// snapshot cannot stall token demux).
+fn worker_call(addr: SocketAddr, req: &Request, timeout: Duration)
+               -> io::Result<Event> {
+    let stream = TcpStream::connect_timeout(&addr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let mut line = protocol::request_line(req);
+    line.push('\n');
+    (&stream).write_all(line.as_bytes())?;
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    if reader.read_line(&mut reply)? == 0 {
+        return Err(io::Error::new(io::ErrorKind::UnexpectedEof,
+                                  "worker closed during control call"));
+    }
+    protocol::parse_event(reply.trim_end())
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+}
+
+/// Fleet-wide reload fan-out.  `spec` is either one manifest path (all
+/// workers) or exactly N comma-separated paths (per-worker stores).
+/// Workers reload sequentially; a worker that fails verification keeps
+/// serving its current plan, and the reply names exactly which workers
+/// swapped and which did not.
+fn handle_reload(sh: &Arc<FleetShared>, conn: &Arc<RouterConn>,
+                 spec: &str) {
+    let parts: Vec<&str> = spec.split(',').map(str::trim).collect();
+    if parts.len() != 1 && parts.len() != sh.workers.len() {
+        push_to_conn(sh, conn, event_line(&Event::error(
+            None, ERR_BAD_REQUEST,
+            format!("reload wants 1 path or one per worker ({} workers, \
+                     {} paths)", sh.workers.len(), parts.len()))));
+        return;
+    }
+    let mut swapped: Vec<String> = Vec::new();
+    let mut failed: Vec<String> = Vec::new();
+    for (i, w) in sh.workers.iter().enumerate() {
+        let path = if parts.len() == 1 { parts[0] } else { parts[i] };
+        let addr = match *lock(&w.addr) {
+            Some(a) if w.healthy.load(Ordering::SeqCst) => a,
+            _ => {
+                failed.push(format!("worker {i}: down"));
+                continue;
+            }
+        };
+        match worker_call(addr,
+                          &Request::Reload { artifact: path.to_string() },
+                          Duration::from_secs(60)) {
+            Ok(Event::Reloaded { engine, .. }) => {
+                *lock(&w.engine) = engine;
+                swapped.push(format!("worker {i}"));
+            }
+            Ok(Event::Error { code, message, .. }) => {
+                failed.push(format!("worker {i}: {code}: {message}"));
+            }
+            Ok(other) => {
+                failed.push(format!("worker {i}: unexpected reply \
+                                     {other:?}"));
+            }
+            Err(e) => failed.push(format!("worker {i}: {e}")),
+        }
+    }
+    if failed.is_empty() {
+        sh.metrics.inc("fleet.reloads", 1);
+        push_to_conn(sh, conn, event_line(&Event::Reloaded {
+            artifact: spec.to_string(),
+            engine: fleet_engine_label(sh),
+        }));
+    } else {
+        // partial swap: precise blast-radius report, nothing hidden
+        push_to_conn(sh, conn, event_line(&Event::error(
+            None, ERR_RELOAD_FAILED,
+            format!("swapped [{}]; failed [{}] — unswapped workers keep \
+                     serving their current plan",
+                    swapped.join(", "), failed.join("; ")))));
+    }
+}
+
+/// The fleet metrics snapshot: the router's own registry (connections,
+/// routing counters, e2e latency) plus a `workers` array of per-worker
+/// health/state and `worker_counters` summing each live worker's own
+/// counters, fetched over fresh control connections.
+fn fleet_snapshot(sh: &Arc<FleetShared>) -> Json {
+    use std::collections::BTreeMap;
+    for w in &sh.workers {
+        crate::obs::gauge_set(
+            &format!("fleet.worker{}.healthy", w.index),
+            if w.healthy.load(Ordering::SeqCst) { 1.0 } else { 0.0 });
+        crate::obs::gauge_set(
+            &format!("fleet.worker{}.inflight", w.index),
+            w.inflight.load(Ordering::SeqCst) as f64);
+    }
+    let mut entries: Vec<Json> = Vec::new();
+    let mut summed: BTreeMap<String, f64> = BTreeMap::new();
+    for w in &sh.workers {
+        let addr = *lock(&w.addr);
+        let healthy = w.healthy.load(Ordering::SeqCst);
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("index", Json::num(w.index as f64)),
+            ("healthy", Json::Bool(healthy)),
+            ("pid", Json::num(w.pid.load(Ordering::SeqCst) as f64)),
+            ("addr", Json::str(&addr.map(|a| a.to_string())
+                                    .unwrap_or_default())),
+            ("artifact", Json::str(&w.artifact)),
+            ("engine", Json::str(&lock(&w.engine))),
+            ("inflight",
+             Json::num(w.inflight.load(Ordering::SeqCst) as f64)),
+            ("routed_total",
+             Json::num(w.routed_total.load(Ordering::SeqCst) as f64)),
+            ("restarts",
+             Json::num(w.restarts.load(Ordering::SeqCst) as f64)),
+            ("failures",
+             Json::num(w.failures.load(Ordering::SeqCst) as f64)),
+        ];
+        if let (true, Some(a)) = (healthy, addr) {
+            if let Ok(Event::Metrics(m)) =
+                worker_call(a, &Request::Metrics, Duration::from_secs(2))
+            {
+                if let Some(counters) =
+                    m.get("counters").and_then(Json::as_obj)
+                {
+                    for (k, v) in counters {
+                        if let Some(n) = v.as_f64() {
+                            *summed.entry(k.clone()).or_insert(0.0) += n;
+                        }
+                    }
+                }
+                if let Some(tps) = m.get("uptime_tok_per_sec")
+                    .and_then(Json::as_f64)
+                {
+                    fields.push(("uptime_tok_per_sec", Json::num(tps)));
+                }
+            }
+        }
+        entries.push(Json::obj(fields));
+    }
+    let mut snap = sh.metrics.snapshot(sh.fifo.len());
+    if let Json::Obj(m) = &mut snap {
+        m.insert("fleet".into(), Json::Bool(true));
+        m.insert("workers".into(), Json::Arr(entries));
+        m.insert("worker_counters".into(),
+                 Json::Obj(summed.into_iter()
+                           .map(|(k, v)| (k, Json::num(v)))
+                           .collect()));
+    }
+    snap
+}

@@ -1,0 +1,272 @@
+//! Worker lifecycle: spawning a serving subprocess, discovering its bound
+//! address through a port file, and handshaking versions before any
+//! traffic is routed to it.
+//!
+//! A *worker* is today's full single-process engine (`zs-svd serve`)
+//! booted from a packed artifact; the router owns N of them.  Everything
+//! mutable that the router's threads need to observe about a worker lives
+//! in [`WorkerShared`] as lock-free atomics (plus two rarely-touched
+//! mutexes), so the supervisor, dispatcher, and demux threads never
+//! contend on a worker-wide lock in the streaming hot path.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::server::protocol::{self, Event, Request, PROTO_VERSION};
+
+/// How to boot one worker process.
+#[derive(Clone, Debug)]
+pub struct WorkerSpec {
+    /// binary to exec (the router's own executable in production; the
+    /// `CARGO_BIN_EXE_zs-svd` path under test)
+    pub program: PathBuf,
+    /// packed artifact manifest this worker serves (`--artifact`)
+    pub artifact: String,
+    /// extra `serve` flags passed through verbatim (`--threads`,
+    /// `--speculate-k`, `--queue-depth`, ...)
+    pub extra_args: Vec<String>,
+    /// how long a booting worker may take to write its port file
+    pub boot_timeout: Duration,
+}
+
+/// Router-side view of one worker slot, shared across supervisor,
+/// dispatcher, and demux threads.
+///
+/// The slot persists across restarts — a new incarnation of the process
+/// updates `pid`/`addr`/`engine` in place, so routing state (counters,
+/// health) has one home per *slot*, not per process.
+pub struct WorkerShared {
+    /// stable worker index (0-based) — names the slot in metrics and logs
+    pub index: usize,
+    /// artifact manifest this slot (re)boots from
+    pub artifact: String,
+    /// true while the incarnation is handshaken and believed live; the
+    /// dispatcher only routes to healthy workers
+    pub healthy: AtomicBool,
+    /// set by the demux thread on stream EOF / garble so the supervisor
+    /// tears the incarnation down even if the process still technically runs
+    pub suspect: AtomicBool,
+    /// requests currently routed to this worker and not yet completed
+    pub inflight: AtomicUsize,
+    /// requests ever routed to this slot (all incarnations)
+    pub routed_total: AtomicU64,
+    /// times the supervisor respawned this slot after the initial boot
+    pub restarts: AtomicU64,
+    /// detected failures (crash, hang, handshake refusal) for this slot
+    pub failures: AtomicU64,
+    /// OS pid of the live incarnation (0 when down)
+    pub pid: AtomicU64,
+    /// milliseconds (vs the router epoch) when the demux thread last read
+    /// any byte from this worker — heartbeat freshness
+    pub last_recv_ms: AtomicU64,
+    /// pings sent since the last byte was received (reset on receive);
+    /// staleness requires silence *and* an unanswered ping
+    pub pings_outstanding: AtomicU64,
+    /// bound address of the live incarnation
+    pub addr: Mutex<Option<SocketAddr>>,
+    /// engine label reported by the incarnation's hello handshake
+    pub engine: Mutex<String>,
+    /// routing-side write half of the worker connection; demux owns the
+    /// read half.  `None` while the worker is down
+    pub writer: Mutex<Option<TcpStream>>,
+}
+
+impl WorkerShared {
+    /// Fresh slot state for worker `index` serving `artifact`.
+    pub fn new(index: usize, artifact: String) -> WorkerShared {
+        WorkerShared {
+            index,
+            artifact,
+            healthy: AtomicBool::new(false),
+            suspect: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            routed_total: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            pid: AtomicU64::new(0),
+            last_recv_ms: AtomicU64::new(0),
+            pings_outstanding: AtomicU64::new(0),
+            addr: Mutex::new(None),
+            engine: Mutex::new(String::new()),
+            writer: Mutex::new(None),
+        }
+    }
+
+    /// Send one request line on this worker's connection.  An `Err` means
+    /// the connection is gone — the caller marks the worker suspect.
+    pub fn send(&self, r: &Request) -> io::Result<()> {
+        let mut g = self.writer.lock().unwrap_or_else(|e| e.into_inner());
+        match g.as_mut() {
+            Some(s) => {
+                let mut line = protocol::request_line(r);
+                line.push('\n');
+                s.write_all(line.as_bytes())
+            }
+            None => Err(io::Error::new(io::ErrorKind::NotConnected,
+                                       "worker connection down")),
+        }
+    }
+
+    /// Drop the write half (the demux read half sees EOF soon after).
+    pub fn close_writer(&self) {
+        let mut g = self.writer.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(s) = g.take() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+/// Spawn one worker process and wait for it to publish its bound address.
+///
+/// The worker listens on an ephemeral port (`--listen 127.0.0.1:0`) and
+/// writes the real address to a unique temp port file; we poll that file
+/// against three outcomes: address published (success), child exited
+/// (boot crash), boot timeout (hang — the child is killed).  stdout is
+/// discarded (the worker's own banner would interleave with the router's);
+/// stderr is inherited so worker panics stay visible.
+pub fn spawn_worker(spec: &WorkerSpec, index: usize, incarnation: u64)
+                    -> io::Result<(Child, SocketAddr)> {
+    let port_file = std::env::temp_dir().join(format!(
+        "zs-svd-fleet-{}-w{index}-i{incarnation}.port",
+        std::process::id()));
+    let _ = std::fs::remove_file(&port_file);
+
+    let mut cmd = Command::new(&spec.program);
+    cmd.arg("serve")
+        .arg("--listen").arg("127.0.0.1:0")
+        .arg("--artifact").arg(&spec.artifact)
+        .arg("--port-file").arg(&port_file)
+        .args(&spec.extra_args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit());
+    let mut child = cmd.spawn()?;
+
+    let started = Instant::now();
+    loop {
+        if let Ok(s) = std::fs::read_to_string(&port_file) {
+            if let Ok(addr) = s.trim().parse::<SocketAddr>() {
+                let _ = std::fs::remove_file(&port_file);
+                return Ok((child, addr));
+            }
+        }
+        if let Some(status) = child.try_wait()? {
+            let _ = std::fs::remove_file(&port_file);
+            return Err(io::Error::new(
+                io::ErrorKind::Other,
+                format!("worker {index} exited during boot ({status})")));
+        }
+        if started.elapsed() > spec.boot_timeout {
+            let _ = child.kill();
+            let _ = child.wait();
+            let _ = std::fs::remove_file(&port_file);
+            return Err(io::Error::new(
+                io::ErrorKind::TimedOut,
+                format!("worker {index} did not publish a port within {:?}",
+                        spec.boot_timeout)));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Connect to a freshly booted worker and handshake versions.
+///
+/// Returns the connected stream (read timeout cleared, ready for the
+/// demux thread) and the worker's engine label.  A proto mismatch or a
+/// non-hello reply is an error — the supervisor treats it as a boot
+/// failure, so version skew between router and worker binaries fails
+/// loudly before any request is routed.
+pub fn handshake(addr: SocketAddr, timeout: Duration)
+                 -> io::Result<(TcpStream, String)> {
+    let stream = TcpStream::connect_timeout(&addr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_nodelay(true).ok();
+
+    let mut line = protocol::request_line(
+        &Request::Hello { proto: PROTO_VERSION });
+    line.push('\n');
+    (&stream).write_all(line.as_bytes())?;
+
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut reply = String::new();
+    if reader.read_line(&mut reply)? == 0 {
+        return Err(io::Error::new(io::ErrorKind::UnexpectedEof,
+                                  "worker closed during handshake"));
+    }
+    let bad = |m: String| io::Error::new(io::ErrorKind::InvalidData, m);
+    match protocol::parse_event(reply.trim_end()) {
+        Ok(Event::Hello { proto, engine, .. }) if proto == PROTO_VERSION => {
+            stream.set_read_timeout(None)?;
+            Ok((stream, engine))
+        }
+        Ok(Event::Hello { proto, .. }) => Err(bad(format!(
+            "worker speaks proto {proto}, router speaks {PROTO_VERSION}"))),
+        Ok(Event::Error { code, message, .. }) => Err(bad(format!(
+            "worker refused handshake: {code}: {message}"))),
+        Ok(other) => Err(bad(format!(
+            "unexpected handshake reply: {other:?}"))),
+        Err(e) => Err(bad(format!("garbled handshake reply: {e}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_reports_a_boot_crash_not_a_timeout() {
+        // `false` exits immediately without writing a port file: the spawn
+        // must report the exit, well before the (long) boot timeout
+        let spec = WorkerSpec {
+            program: PathBuf::from("/bin/false"),
+            artifact: "unused.zsar".into(),
+            extra_args: vec![],
+            boot_timeout: Duration::from_secs(30),
+        };
+        let started = Instant::now();
+        let err = spawn_worker(&spec, 0, 0).expect_err("must fail");
+        assert!(started.elapsed() < Duration::from_secs(10));
+        assert!(err.to_string().contains("exited during boot"),
+                "got: {err}");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn spawn_times_out_on_a_silent_worker() {
+        use std::os::unix::fs::PermissionsExt;
+        // a "worker" that accepts any args, never writes a port file, and
+        // never exits: the spawn must give up at the boot timeout and kill it
+        let script = std::env::temp_dir().join(format!(
+            "zs-svd-test-silent-{}.sh", std::process::id()));
+        std::fs::write(&script, "#!/bin/sh\nexec sleep 60\n").unwrap();
+        let mut perm = std::fs::metadata(&script).unwrap().permissions();
+        perm.set_mode(0o755);
+        std::fs::set_permissions(&script, perm).unwrap();
+
+        let spec = WorkerSpec {
+            program: script.clone(),
+            artifact: "unused.zsar".into(),
+            extra_args: vec![],
+            boot_timeout: Duration::from_millis(300),
+        };
+        let started = Instant::now();
+        let err = spawn_worker(&spec, 1, 0).expect_err("silent worker");
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut, "got: {err}");
+        assert!(started.elapsed() >= Duration::from_millis(300));
+        let _ = std::fs::remove_file(&script);
+    }
+
+    #[test]
+    fn worker_shared_send_without_connection_is_not_connected() {
+        let w = WorkerShared::new(3, "a.zsar".into());
+        let err = w.send(&Request::Ping { nonce: 1 }).expect_err("down");
+        assert_eq!(err.kind(), io::ErrorKind::NotConnected);
+        // closing an absent writer is a no-op
+        w.close_writer();
+    }
+}

@@ -37,6 +37,7 @@ pub mod decode;
 pub mod eval;
 pub mod serve;
 pub mod server;
+pub mod fleet;
 pub mod coordinator;
 pub mod config;
 pub mod report;

@@ -43,9 +43,26 @@
 //!                            `--name NAME`); resumable, atomic, and
 //!                            every chunk is checksum-verified before the
 //!                            manifest commits
+//!   router                   supervised multi-worker fleet: spawn
+//!                            `--workers N` worker processes (each a full
+//!                            `serve --artifact` engine), health-check and
+//!                            restart them, and serve the single-server
+//!                            wire protocol on `--listen <addr>`
+//!                            (`--artifact M` or `M1,M2,..` per-worker
+//!                            stores, `--router-depth` / `--worker-depth`
+//!                            two-level admission, `--port-file`; worker
+//!                            flags `--threads` / `--slots` /
+//!                            `--max-new-tokens` / `--temperature` /
+//!                            `--prefill-chunk` / `--speculate-k` /
+//!                            `--draft-ratio` / `--kv-block` /
+//!                            `--prefix-cache` / `--queue-depth` /
+//!                            `--model` / `--no-simd` pass through)
 //!   client                   drive a running server over TCP
 //!                            (`--connect <addr>`, `--requests`,
 //!                            `--prompt-len`, `--max-new-tokens`,
+//!                            `--retries K` to retry `overloaded` /
+//!                            transient-transport rejections with jittered
+//!                            exponential back-off,
 //!                            `--reload PATH` to hot-swap the server onto
 //!                            a packed artifact before generating,
 //!                            `--shutdown` to drain the server afterwards)
@@ -79,7 +96,9 @@ use zs_svd::report::{acc2, f2, latency_cells, mb, pct, Table,
 use zs_svd::runtime::session::Session;
 use zs_svd::runtime::Runtime;
 use zs_svd::serve::{run_serving, Engine, ServeConfig};
-use zs_svd::server::{self, GenerateOutcome, GenerateReq, ReloadOutcome};
+use zs_svd::fleet;
+use zs_svd::server::{self, GenerateOutcome, GenerateReq, ReloadOutcome,
+                     RetryPolicy};
 use zs_svd::util::cli::Args;
 
 fn parse_method(name: &str, ratio: f64) -> Method {
@@ -312,11 +331,21 @@ fn client_session(args: &Args, rt: &Runtime) -> Result<()> {
             }
         }
     }
+    let retries = args.usize_or("retries", 0) as u32;
+    let policy = RetryPolicy { retries, ..RetryPolicy::default() };
     for i in 0..n {
         let prompt = server::scripted_prompt(i, plen, vocab);
         let g = GenerateReq { id: i as u64, prompt, max_new_tokens: max_new,
                               temperature: None, seed: None };
-        match c.run_generate(&g)? {
+        // with `--retries K`, each request rides its own connection so a
+        // retryable rejection (overloaded, worker_failed, transport drop)
+        // can reconnect and back off; without it, reuse the session conn
+        let outcome = if retries > 0 {
+            server::generate_with_retries(addr.as_str(), &g, &policy)?
+        } else {
+            c.run_generate(&g)?
+        };
+        match outcome {
             GenerateOutcome::Done(r) => {
                 println!(
                     "request {i}: {} tokens streamed, queue {:.1} ms, \
@@ -336,8 +365,14 @@ fn client_session(args: &Args, rt: &Runtime) -> Result<()> {
                 // can diff two runs for bit-identity from the outside
                 println!("request {i} tokens: {:?}", r.tokens);
             }
-            GenerateOutcome::Rejected { code, message } => {
-                anyhow::bail!("request {i} rejected: {code} ({message})");
+            GenerateOutcome::Rejected { code, message, retry_after_ms } => {
+                anyhow::bail!(
+                    "request {i} rejected: {code} ({message}){}",
+                    match retry_after_ms {
+                        Some(ms) => format!(" [server hinted retry in \
+                                             {ms} ms]"),
+                        None => String::new(),
+                    });
             }
         }
     }
@@ -355,6 +390,23 @@ fn client_session(args: &Args, rt: &Runtime) -> Result<()> {
         .map(|c| c.usize_or("artifact.swaps", 0))
         .unwrap_or(0);
     println!("artifact swaps: {swaps}");
+    // a fleet router's snapshot carries a `workers` array; print it so
+    // scripts (ci.sh) can grep worker pids, health, and restart counts
+    if let Some(workers) = snap.get("workers").and_then(|w| w.as_arr()) {
+        for w in workers {
+            println!(
+                "fleet worker {}: pid {} healthy {} restarts {} \
+                 inflight {} routed {} engine {}",
+                w.usize_or("index", 0), w.usize_or("pid", 0),
+                w.bool_or("healthy", false), w.usize_or("restarts", 0),
+                w.usize_or("inflight", 0), w.usize_or("routed_total", 0),
+                w.str_or("engine", "?"));
+        }
+        let restarts = snap.get("counters")
+            .map(|c| c.usize_or("fleet.worker_restarts", 0))
+            .unwrap_or(0);
+        println!("fleet worker restarts: {restarts}");
+    }
     if args.flag("shutdown") {
         c.shutdown_server()?;
         println!("server acknowledged shutdown");
@@ -669,6 +721,68 @@ fn main() -> Result<()> {
             println!("installed artifact {}", path.display());
         }
 
+        "router" => {
+            let listen = args.str_or("listen", "127.0.0.1:0");
+            let workers = args.usize_or("workers", 2);
+            let artifact = args.get("artifact").ok_or_else(|| {
+                anyhow::anyhow!(
+                    "usage: zs-svd router --workers N --artifact \
+                     M[,M2,..] [--listen ADDR] [--port-file FILE]")
+            })?;
+            let artifacts: Vec<String> = artifact
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .collect();
+            let mut rcfg = fleet::RouterConfig::new(&listen, workers,
+                                                    artifacts);
+            rcfg.router_depth = args.usize_or("router-depth",
+                                              rcfg.router_depth);
+            rcfg.worker_depth = args.usize_or("worker-depth",
+                                              rcfg.worker_depth);
+            rcfg.heartbeat_ms = args.u64_or("heartbeat-ms",
+                                            rcfg.heartbeat_ms);
+            rcfg.health_timeout_ms = args.u64_or("health-timeout-ms",
+                                                 rcfg.health_timeout_ms);
+            // pass-through serving knobs: every worker gets them verbatim
+            let mut wargs: Vec<String> = Vec::new();
+            for flag in ["threads", "slots", "max-new-tokens", "temperature",
+                         "prefill-chunk", "speculate-k", "draft-ratio",
+                         "kv-block", "prefix-cache", "queue-depth", "model"] {
+                if let Some(v) = args.get(flag) {
+                    wargs.push(format!("--{flag}"));
+                    wargs.push(v.to_string());
+                }
+            }
+            if args.flag("no-simd") {
+                wargs.push("--no-simd".into());
+            }
+            rcfg.worker_args = wargs;
+            let port_file = args.get("port-file").map(str::to_string);
+            println!("router: supervising {workers} worker(s) from \
+                      {artifact} behind {listen}");
+            let stats = fleet::run_fleet(rcfg, |addr| {
+                println!("listening on {addr}");
+                if let Some(pf) = &port_file {
+                    if let Err(e) = std::fs::write(pf, addr.to_string()) {
+                        eprintln!("warn: could not write port file \
+                                   {pf}: {e}");
+                    }
+                }
+            })?;
+            let mut t = Table::new("fleet session", &["metric", "value"]);
+            t.row(vec!["connections".into(),
+                       format!("{}", stats.connections)]);
+            t.row(vec!["requests routed".into(),
+                       format!("{}", stats.requests_routed)]);
+            t.row(vec!["worker restarts".into(),
+                       format!("{}", stats.worker_restarts)]);
+            t.row(vec!["worker failures".into(),
+                       format!("{}", stats.worker_failures)]);
+            t.row(vec!["slow readers shed".into(),
+                       format!("{}", stats.slow_reader_closes)]);
+            print!("{}", t.to_ascii());
+        }
+
         "client" => {
             return client_session(&args, &rt);
         }
@@ -739,8 +853,8 @@ fn main() -> Result<()> {
 
         other => {
             anyhow::bail!("unknown subcommand `{other}` \
-                           (info|train|eval|compress|sweep|serve|pack|\
-                            install|client|trace)");
+                           (info|train|eval|compress|sweep|serve|router|\
+                            pack|install|client|trace)");
         }
     }
     write_trace_out(&args)?;

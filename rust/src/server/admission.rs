@@ -13,6 +13,28 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+/// Back-off hint attached to `overloaded` rejections: a suggested client
+/// wait before retrying, scaled by how many requests were queued ahead
+/// (~[`HINT_MS_PER_QUEUED`] ms each) and clamped to a sane window.  Purely
+/// advisory — the server promises nothing about capacity after the wait —
+/// but it lets fleet clients back off proportionally to the actual backlog
+/// instead of guessing.
+pub fn retry_after_hint_ms(queued: usize, depth: usize) -> u64 {
+    // a deeper configured queue implies a slower-draining server, so the
+    // hint never suggests less than one "slot drain" even when the sampled
+    // backlog raced down to zero
+    let backlog = queued.max(1).min(depth.max(1)) as u64;
+    HINT_MS_PER_QUEUED
+        .saturating_mul(backlog)
+        .clamp(HINT_MS_PER_QUEUED, HINT_MS_MAX)
+}
+
+/// Per-queued-request drain estimate behind [`retry_after_hint_ms`].
+pub const HINT_MS_PER_QUEUED: u64 = 25;
+/// Upper clamp for [`retry_after_hint_ms`] — a hint longer than this stops
+/// being a back-off and starts being an outage report.
+pub const HINT_MS_MAX: u64 = 2_000;
+
 /// Rejection reasons; the rejected item rides back to the caller.
 #[derive(Debug)]
 pub enum PushError<T> {
@@ -134,6 +156,24 @@ impl<T> BoundedQueue<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn retry_hint_is_monotone_and_clamped() {
+        // empty backlog still hints one drain interval
+        assert_eq!(retry_after_hint_ms(0, 64), HINT_MS_PER_QUEUED);
+        // proportional to the sampled backlog...
+        assert_eq!(retry_after_hint_ms(4, 64), 4 * HINT_MS_PER_QUEUED);
+        let mut prev = 0;
+        for q in 0..80 {
+            let h = retry_after_hint_ms(q, 64);
+            assert!(h >= prev, "hint not monotone at queued={q}");
+            prev = h;
+        }
+        // ...capped by the configured depth and the absolute clamp
+        assert_eq!(retry_after_hint_ms(1000, 64),
+                   retry_after_hint_ms(64, 64));
+        assert!(retry_after_hint_ms(usize::MAX, usize::MAX) <= HINT_MS_MAX);
+    }
 
     #[test]
     fn fifo_and_bounds() {

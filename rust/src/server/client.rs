@@ -5,8 +5,11 @@
 
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
-use super::protocol::{self, Event, GenerateReq, Request};
+use super::protocol::{self, Event, GenerateReq, Request, ERR_OVERLOADED,
+                      ERR_WORKER_FAILED, PROTO_VERSION};
+use crate::util::rng::Rng;
 
 /// Deterministic vocab-safe prompt for scripted clients — the CLI `client`
 /// subcommand and `benches/server_throughput.rs` share this, so the two
@@ -28,12 +31,16 @@ pub struct Client {
 pub enum GenerateOutcome {
     /// the request completed; summary + streamed tokens
     Done(GenerationResult),
-    /// structured rejection (`overloaded`, `bad_request`, `shutting_down`)
+    /// structured rejection (`overloaded`, `bad_request`, `shutting_down`,
+    /// `worker_failed`)
     Rejected {
         /// structured error code
         code: String,
         /// human-readable detail
         message: String,
+        /// server-suggested back-off before retrying, ms (rides on
+        /// `overloaded` from newer servers; `None` from older peers)
+        retry_after_ms: Option<u64>,
     },
 }
 
@@ -173,9 +180,11 @@ impl Client {
                         cached_prompt_tokens,
                     }));
                 }
-                Event::Error { id, code, message } => {
+                Event::Error { id, code, message, retry_after_ms, .. } => {
                     if id.is_none() || id == Some(g.id) {
-                        return Ok(GenerateOutcome::Rejected { code, message });
+                        return Ok(GenerateOutcome::Rejected {
+                            code, message, retry_after_ms,
+                        });
                     }
                     return Err(bad_data(format!(
                         "error for unexpected id {id:?}: {code}")));
@@ -193,7 +202,12 @@ impl Client {
                     return Ok(GenerateOutcome::Rejected {
                         code: protocol::ERR_SHUTTING_DOWN.into(),
                         message: "server shutting down".into(),
+                        retry_after_ms: None,
                     });
+                }
+                Event::Hello { .. } | Event::Pong { .. } => {
+                    return Err(bad_data(
+                        "unexpected handshake event mid-generation".into()));
                 }
             }
         }
@@ -246,7 +260,7 @@ impl Client {
                 Some(Event::Reloaded { artifact, engine }) => {
                     return Ok(ReloadOutcome::Swapped { artifact, engine });
                 }
-                Some(Event::Error { id: None, code, message }) => {
+                Some(Event::Error { id: None, code, message, .. }) => {
                     return Ok(ReloadOutcome::Rejected { code, message });
                 }
                 Some(other) => {
@@ -254,6 +268,51 @@ impl Client {
                         "unexpected event awaiting reload: {other:?}")));
                 }
                 None => return Err(bad_data("eof awaiting reload".into())),
+            }
+        }
+    }
+
+    /// Version handshake: announce [`PROTO_VERSION`] and block for the
+    /// server's `hello` reply — `(proto, version, engine label)`.  A
+    /// structured rejection (version skew) comes back as an error, so a
+    /// mismatched peer fails at connect time instead of mid-stream.  Only
+    /// safe with no generation in flight on this connection.
+    pub fn hello(&mut self) -> io::Result<(u64, String, String)> {
+        self.send(&Request::Hello { proto: PROTO_VERSION })?;
+        loop {
+            match self.next_event()? {
+                Some(Event::Hello { proto, version, engine }) => {
+                    return Ok((proto, version, engine));
+                }
+                Some(Event::Error { code, message, .. }) => {
+                    return Err(bad_data(format!(
+                        "handshake rejected: {code} ({message})")));
+                }
+                Some(other) => {
+                    return Err(bad_data(format!(
+                        "unexpected event awaiting hello: {other:?}")));
+                }
+                None => return Err(bad_data("eof awaiting hello".into())),
+            }
+        }
+    }
+
+    /// Liveness probe: send `ping` and block for the matching `pong`.
+    /// Only safe with no generation in flight on this connection.
+    pub fn ping(&mut self, nonce: u64) -> io::Result<()> {
+        self.send(&Request::Ping { nonce })?;
+        loop {
+            match self.next_event()? {
+                Some(Event::Pong { nonce: n }) if n == nonce => return Ok(()),
+                Some(Event::Pong { nonce: n }) => {
+                    return Err(bad_data(format!(
+                        "pong nonce {n} does not match ping {nonce}")));
+                }
+                Some(other) => {
+                    return Err(bad_data(format!(
+                        "unexpected event awaiting pong: {other:?}")));
+                }
+                None => return Err(bad_data("eof awaiting pong".into())),
             }
         }
     }
@@ -267,6 +326,103 @@ impl Client {
                 Some(_other) => continue, // stragglers from earlier requests
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// retry with jittered exponential back-off
+// ---------------------------------------------------------------------------
+
+/// Client-side retry policy: jittered exponential back-off on transient
+/// failures (`overloaded`, `worker_failed`, connect refusals, mid-stream
+/// EOF).  `retries = 0` (the default) preserves the classic fail-fast
+/// behavior exactly.
+///
+/// The jitter is *deterministic* — attempt `k` draws from
+/// `util::rng::Rng::new(seed ^ hash(k))` into `[base·2^(k-1)/2,
+/// base·2^(k-1)]` (clamped to `max_ms`) — so a scripted client replays the
+/// same schedule run-to-run while concurrent clients with distinct seeds
+/// still de-synchronize their retry storms.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// attempts after the first (0 = fail fast, today's behavior)
+    pub retries: u32,
+    /// first back-off window, ms (doubles per attempt)
+    pub base_ms: u64,
+    /// upper clamp on any single back-off, ms
+    pub max_ms: u64,
+    /// jitter seed; distinct per client so retry storms de-synchronize
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { retries: 0, base_ms: 100, max_ms: 5_000, seed: 0x5EED }
+    }
+}
+
+impl RetryPolicy {
+    /// Back-off before retry attempt `attempt` (1-based), ms: a
+    /// deterministic jittered draw from `[cap/2, cap]` where
+    /// `cap = min(base_ms · 2^(attempt-1), max_ms)`.
+    pub fn backoff_ms(&self, attempt: u32) -> u64 {
+        let shift = (attempt.max(1) - 1).min(32);
+        // floor ≤ ceiling even for a misconfigured base_ms > max_ms
+        let ceiling = self.max_ms.max(1);
+        let floor = self.base_ms.max(1).min(ceiling);
+        let cap = self.base_ms
+            .saturating_mul(1u64 << shift)
+            .clamp(floor, ceiling);
+        // full-jitter lower half: [cap/2, cap]
+        let lo = cap / 2;
+        let mut rng = Rng::new(
+            self.seed ^ (attempt as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        lo + rng.below((cap - lo + 1) as usize) as u64
+    }
+
+    /// The whole back-off schedule (one entry per retry attempt), ms.
+    pub fn schedule(&self) -> Vec<u64> {
+        (1..=self.retries).map(|a| self.backoff_ms(a)).collect()
+    }
+}
+
+/// Is this outcome worth retrying?  `overloaded` (the server told us to
+/// back off) and `worker_failed` (the fleet restarts the worker from its
+/// verified artifact; a re-issued request bit-matches) are transient;
+/// `bad_request` / `shutting_down` / `reload_failed` are permanent.
+fn retryable_rejection(code: &str) -> bool {
+    code == ERR_OVERLOADED || code == ERR_WORKER_FAILED
+}
+
+/// One generation with retries: connect, run `g` closed-loop, and on a
+/// transient failure (retryable rejection, connect refusal, or mid-stream
+/// EOF) back off per `policy` and try again on a **fresh connection**.  The
+/// wait honors the server's `retry_after_ms` hint when it exceeds the
+/// policy's own jittered back-off.  After `policy.retries` retries the last
+/// outcome (or transport error) is returned as-is — the give-up path looks
+/// exactly like a fail-fast client.
+pub fn generate_with_retries<A: ToSocketAddrs + Copy>(
+    addr: A, g: &GenerateReq, policy: &RetryPolicy)
+    -> io::Result<GenerateOutcome> {
+    let mut attempt = 0u32;
+    loop {
+        attempt += 1;
+        let res = Client::connect(addr).and_then(|mut c| c.run_generate(g));
+        // decide transience + extract the server's hint without consuming
+        // the result we may be about to return
+        let hint_ms = match &res {
+            Ok(GenerateOutcome::Done(_)) => return res,
+            Ok(GenerateOutcome::Rejected { code, retry_after_ms, .. })
+                if retryable_rejection(code) => retry_after_ms.unwrap_or(0),
+            Ok(GenerateOutcome::Rejected { .. }) => return res, // permanent
+            // transport-level: connect refused, reset, EOF mid-generation
+            Err(_) => 0,
+        };
+        if attempt > policy.retries {
+            return res; // give up: surface the last outcome verbatim
+        }
+        let wait = policy.backoff_ms(attempt).max(hint_ms);
+        std::thread::sleep(Duration::from_millis(wait));
     }
 }
 
@@ -285,5 +441,151 @@ mod tests {
             }
         }
         assert_eq!(scripted_prompt(3, 8, 256), scripted_prompt(3, 8, 256));
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_jittered_and_clamped() {
+        let p = RetryPolicy { retries: 8, base_ms: 1024, max_ms: 1 << 16,
+                              seed: 42 };
+        let s1 = p.schedule();
+        assert_eq!(s1, p.schedule(), "same policy → same schedule");
+        assert_eq!(s1.len(), 8);
+        for (i, &w) in s1.iter().enumerate() {
+            // attempt i+1 draws from [cap/2, cap], cap doubling then clamped
+            let cap = (1024u64 << i).min(1 << 16);
+            assert!(w >= cap / 2 && w <= cap,
+                    "attempt {}: {w} outside [{}, {cap}]", i + 1, cap / 2);
+        }
+        // a different seed de-synchronizes the schedule
+        let q = RetryPolicy { seed: 43, ..p.clone() };
+        assert_ne!(s1, q.schedule());
+        // the default policy is fail-fast: no retries, empty schedule
+        assert!(RetryPolicy::default().schedule().is_empty());
+        // extreme attempts / windows must not overflow
+        let h = RetryPolicy { retries: 0, base_ms: u64::MAX / 2,
+                              max_ms: u64::MAX, seed: 1 };
+        let w = h.backoff_ms(64);
+        assert!(w >= u64::MAX / 2 - 1);
+        // misconfigured base > max: clamp, don't panic
+        let m = RetryPolicy { retries: 0, base_ms: 500, max_ms: 10, seed: 1 };
+        assert!(m.backoff_ms(1) <= 10);
+    }
+
+    #[test]
+    fn retry_classification() {
+        assert!(retryable_rejection(ERR_OVERLOADED));
+        assert!(retryable_rejection(ERR_WORKER_FAILED));
+        assert!(!retryable_rejection(protocol::ERR_BAD_REQUEST));
+        assert!(!retryable_rejection(protocol::ERR_SHUTTING_DOWN));
+        assert!(!retryable_rejection(protocol::ERR_RELOAD_FAILED));
+    }
+
+    #[test]
+    fn retry_recovers_after_transient_rejection() {
+        use std::io::{BufRead, BufReader, Write};
+        use std::net::TcpListener;
+        let lst = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = lst.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            // connection 1: structured overload (with a tiny hint);
+            // connection 2: a clean one-token generation
+            for round in 0..2 {
+                let (s, _) = lst.accept().unwrap();
+                let mut r = BufReader::new(s.try_clone().unwrap());
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+                let mut w = s;
+                let replies: Vec<String> = if round == 0 {
+                    vec![protocol::event_line(&Event::Error {
+                        id: Some(1), code: ERR_OVERLOADED.into(),
+                        message: "queue full".into(), queue_depth: Some(2),
+                        retry_after_ms: Some(1),
+                    })]
+                } else {
+                    vec![
+                        protocol::event_line(&Event::Token {
+                            id: 1, index: 0, token: 5 }),
+                        protocol::event_line(&Event::Done {
+                            id: 1, tokens: vec![5], prompt_len: 1,
+                            queue_ms: 0.0, prefill_ms: 0.0, decode_ms: 0.0,
+                            ttft_ms: 0.0, latency_ms: 0.0, truncated: false,
+                            cached_prompt_tokens: 0 }),
+                    ]
+                };
+                for mut l in replies {
+                    l.push('\n');
+                    w.write_all(l.as_bytes()).unwrap();
+                }
+            }
+        });
+        let g = GenerateReq { id: 1, prompt: vec![1], max_new_tokens: 1,
+                              temperature: None, seed: None };
+        let policy = RetryPolicy { retries: 3, base_ms: 1, max_ms: 4,
+                                   seed: 7 };
+        match generate_with_retries(addr, &g, &policy).unwrap() {
+            GenerateOutcome::Done(r) => assert_eq!(r.tokens, vec![5]),
+            other => panic!("expected Done after one retry: {other:?}"),
+        }
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn retry_gives_up_after_budget() {
+        use std::net::TcpListener;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let lst = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = lst.local_addr().unwrap();
+        let accepts = Arc::new(AtomicUsize::new(0));
+        let counter = Arc::clone(&accepts);
+        let server = std::thread::spawn(move || {
+            // 1 initial attempt + 2 retries = exactly 3 connections, each
+            // dropped immediately (EOF mid-generation = transient)
+            for _ in 0..3 {
+                let (s, _) = lst.accept().unwrap();
+                counter.fetch_add(1, Ordering::SeqCst);
+                drop(s);
+            }
+        });
+        let g = GenerateReq { id: 1, prompt: vec![1], max_new_tokens: 1,
+                              temperature: None, seed: None };
+        let policy = RetryPolicy { retries: 2, base_ms: 1, max_ms: 2,
+                                   seed: 9 };
+        let res = generate_with_retries(addr, &g, &policy);
+        assert!(res.is_err(), "give-up must surface the transport error");
+        server.join().unwrap();
+        assert_eq!(accepts.load(Ordering::SeqCst), 3,
+                   "1 attempt + 2 retries, then stop");
+    }
+
+    #[test]
+    fn permanent_rejection_fails_fast() {
+        use std::io::{BufRead, BufReader, Write};
+        use std::net::TcpListener;
+        let lst = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = lst.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            // exactly ONE connection: a bad_request must not be retried
+            let (s, _) = lst.accept().unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let mut l = protocol::event_line(&Event::error(
+                Some(1), protocol::ERR_BAD_REQUEST, "nope".into()));
+            l.push('\n');
+            let mut w = s;
+            w.write_all(l.as_bytes()).unwrap();
+        });
+        let g = GenerateReq { id: 1, prompt: vec![1], max_new_tokens: 1,
+                              temperature: None, seed: None };
+        let policy = RetryPolicy { retries: 5, base_ms: 1, max_ms: 2,
+                                   seed: 3 };
+        match generate_with_retries(addr, &g, &policy).unwrap() {
+            GenerateOutcome::Rejected { code, .. } => {
+                assert_eq!(code, protocol::ERR_BAD_REQUEST);
+            }
+            other => panic!("expected fail-fast rejection: {other:?}"),
+        }
+        server.join().unwrap();
     }
 }

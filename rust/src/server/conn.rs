@@ -45,10 +45,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::admission::{BoundedQueue, PopState, PushError};
+use super::admission::{self, BoundedQueue, PopState, PushError};
 use super::metrics::Metrics;
 use super::protocol::{self, Event, Request, ERR_BAD_REQUEST, ERR_OVERLOADED,
-                      ERR_RELOAD_FAILED, ERR_SHUTTING_DOWN};
+                      ERR_RELOAD_FAILED, ERR_SHUTTING_DOWN, PROTO_VERSION};
 use crate::decode::{self, DecodeConfig, DecodeEvent, DecodeRequest,
                     EngineCounters, EngineSlot, RequestSource, SourcePoll,
                     SwapMailbox};
@@ -235,6 +235,9 @@ struct Shared {
     routes: Mutex<BTreeMap<usize, Route>>,
     metrics: Metrics,
     shutdown: AtomicBool,
+    /// label of the engine this server booted with, echoed on `hello`
+    /// replies (the live label after hot-swaps travels on `reloaded`)
+    engine: String,
 }
 
 /// Start the graceful drain exactly once: close admissions and wake the
@@ -314,11 +317,25 @@ fn reader_loop(shared: &Shared, conn: &Arc<ConnState>, stream: TcpStream,
             continue;
         }
         match protocol::parse_request(line) {
-            Err(e) => conn.send(&Event::Error {
-                id: None,
-                code: ERR_BAD_REQUEST.into(),
-                message: e,
-            }),
+            Err(e) => conn.send(&Event::error(None, ERR_BAD_REQUEST, e)),
+            Ok(Request::Hello { proto }) => {
+                if proto == PROTO_VERSION {
+                    conn.send(&Event::Hello {
+                        proto: PROTO_VERSION,
+                        version: env!("CARGO_PKG_VERSION").into(),
+                        engine: shared.engine.clone(),
+                    });
+                } else {
+                    // version skew fails loudly at handshake time, not
+                    // with a parse error mid-stream
+                    conn.send(&Event::error(None, ERR_BAD_REQUEST, format!(
+                        "unsupported proto {proto} (this server speaks \
+                         {PROTO_VERSION})")));
+                }
+            }
+            Ok(Request::Ping { nonce }) => {
+                conn.send(&Event::Pong { nonce });
+            }
             Ok(Request::Metrics) => {
                 conn.send(&Event::Metrics(
                     shared.metrics.snapshot(shared.queue.len())));
@@ -329,13 +346,10 @@ fn reader_loop(shared: &Shared, conn: &Arc<ConnState>, stream: TcpStream,
                 conn.send(&Event::Trace(crate::obs::snapshot_json(2048)));
             }
             Ok(Request::Reload { artifact }) => match mailbox {
-                None => conn.send(&Event::Error {
-                    id: None,
-                    code: ERR_RELOAD_FAILED.into(),
-                    message: "this server was started without hot-swap \
-                              support (run_swappable)"
-                        .into(),
-                }),
+                None => conn.send(&Event::error(
+                    None, ERR_RELOAD_FAILED,
+                    "this server was started without hot-swap support \
+                     (run_swappable)".into())),
                 Some(mb) => match apply_reload(sess, mb, &artifact) {
                     Ok(engine) => {
                         shared.metrics.inc("artifact.swaps", 1);
@@ -343,11 +357,8 @@ fn reader_loop(shared: &Shared, conn: &Arc<ConnState>, stream: TcpStream,
                     }
                     Err(e) => {
                         shared.metrics.inc("artifact.reload_failures", 1);
-                        conn.send(&Event::Error {
-                            id: None,
-                            code: ERR_RELOAD_FAILED.into(),
-                            message: format!("{e}"),
-                        });
+                        conn.send(&Event::error(None, ERR_RELOAD_FAILED,
+                                                format!("{e}")));
                     }
                 },
             },
@@ -357,11 +368,8 @@ fn reader_loop(shared: &Shared, conn: &Arc<ConnState>, stream: TcpStream,
             }
             Ok(Request::Generate(g)) => {
                 if let Err(msg) = validate_prompt(&g.prompt, seq_len, vocab) {
-                    conn.send(&Event::Error {
-                        id: Some(g.id),
-                        code: ERR_BAD_REQUEST.into(),
-                        message: msg,
-                    });
+                    conn.send(&Event::error(Some(g.id), ERR_BAD_REQUEST,
+                                            msg));
                     continue;
                 }
                 // clamp the budget to the KV capacity: generation stops at a
@@ -377,13 +385,10 @@ fn reader_loop(shared: &Shared, conn: &Arc<ConnState>, stream: TcpStream,
                 }
                 .min(seq_len);
                 if budget == 0 {
-                    conn.send(&Event::Error {
-                        id: Some(g.id),
-                        code: ERR_BAD_REQUEST.into(),
-                        message: "resolved max_new_tokens is 0 (no \
-                                  client budget and no server default)"
-                            .into(),
-                    });
+                    conn.send(&Event::error(
+                        Some(g.id), ERR_BAD_REQUEST,
+                        "resolved max_new_tokens is 0 (no client budget \
+                         and no server default)".into()));
                     continue;
                 }
                 let gid = next_id.fetch_add(1, Ordering::SeqCst);
@@ -406,21 +411,26 @@ fn reader_loop(shared: &Shared, conn: &Arc<ConnState>, stream: TcpStream,
                     Err(PushError::Full(_)) => {
                         conn.inflight.fetch_sub(1, Ordering::SeqCst);
                         shared.metrics.inc("requests_rejected", 1);
+                        // sample the backlog once: the depth + hint on the
+                        // reply must describe the same instant
+                        let queued = shared.queue.len();
                         conn.send(&Event::Error {
                             id: Some(g.id),
                             code: ERR_OVERLOADED.into(),
                             message: format!(
                                 "admission queue full (depth {})",
                                 shared.queue.depth()),
+                            queue_depth: Some(queued),
+                            retry_after_ms: Some(
+                                admission::retry_after_hint_ms(
+                                    queued, shared.queue.depth())),
                         });
                     }
                     Err(PushError::Closed(_)) => {
                         conn.inflight.fetch_sub(1, Ordering::SeqCst);
-                        conn.send(&Event::Error {
-                            id: Some(g.id),
-                            code: ERR_SHUTTING_DOWN.into(),
-                            message: "server is draining".into(),
-                        });
+                        conn.send(&Event::error(Some(g.id),
+                                                ERR_SHUTTING_DOWN,
+                                                "server is draining".into()));
                     }
                 }
             }
@@ -523,14 +533,6 @@ fn run_inner(sess: &Session, binding: EngineBinding<'_>, cfg: &ServerConfig,
              -> Result<ServerStats> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let local = listener.local_addr()?;
-    let shared = Shared {
-        queue: BoundedQueue::new(cfg.queue_depth.max(1)),
-        routes: Mutex::new(BTreeMap::new()),
-        metrics: Metrics::new(),
-        shutdown: AtomicBool::new(false),
-    };
-    let next_id = AtomicUsize::new(0);
-    let conns: Mutex<Vec<Arc<ConnState>>> = Mutex::new(Vec::new());
     // stats label + drafter presence, captured before the binding moves
     // into the engine thread
     let (engine_label, has_drafter) = match &binding {
@@ -541,6 +543,15 @@ fn run_inner(sess: &Session, binding: EngineBinding<'_>, cfg: &ServerConfig,
             (slot.engine.label(), slot.drafter.is_some())
         }
     };
+    let shared = Shared {
+        queue: BoundedQueue::new(cfg.queue_depth.max(1)),
+        routes: Mutex::new(BTreeMap::new()),
+        metrics: Metrics::new(),
+        shutdown: AtomicBool::new(false),
+        engine: engine_label.clone(),
+    };
+    let next_id = AtomicUsize::new(0);
+    let conns: Mutex<Vec<Arc<ConnState>>> = Mutex::new(Vec::new());
     // one mailbox per server run; readers see it only on the swappable path
     let mailbox = SwapMailbox::new();
     let mailbox_ref: Option<&SwapMailbox> = match &binding {
@@ -605,11 +616,8 @@ fn run_inner(sess: &Session, binding: EngineBinding<'_>, cfg: &ServerConfig,
                         .unwrap_or_else(|e| e.into_inner())
                         .remove(&id);
                     if let Some(r) = route {
-                        r.conn.send(&Event::Error {
-                            id: Some(r.client_id),
-                            code: ERR_BAD_REQUEST.into(),
-                            message: reason,
-                        });
+                        r.conn.send(&Event::error(Some(r.client_id),
+                                                  ERR_BAD_REQUEST, reason));
                         r.conn.inflight.fetch_sub(1, Ordering::SeqCst);
                         r.conn.maybe_close();
                     }

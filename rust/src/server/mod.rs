@@ -34,7 +34,9 @@
 //! | `generate` | `id` (echoed on every reply), `prompt` (token array), optional `max_new_tokens` (0/absent = server default), `temperature`, `seed` |
 //! | `metrics`  | — (replies with one `metrics` snapshot)                             |
 //! | `trace`    | — (replies with one `trace` observability snapshot)                 |
-//! | `reload`   | `artifact` (server-host path to a packed `.zsar` manifest; see `crate::artifact`).  The server loads + verifies it off the engine thread and hot-swaps once in-flight work drains.  Replies `reloaded` on success, `error`/`reload_failed` otherwise (including on servers started without [`run_swappable`]) |
+//! | `reload`   | `artifact` (server-host path to a packed `.zsar` manifest; see `crate::artifact`).  The server loads + verifies it off the engine thread and hot-swaps once in-flight work drains.  Replies `reloaded` on success, `error`/`reload_failed` otherwise (including on servers started without [`run_swappable`]).  Against a fleet router the path fans out to every worker (comma-separate N paths for per-worker stores) |
+//! | `hello`    | optional version handshake: `proto` (the revision the client speaks, absent = 1).  A matching server replies `hello`; a mismatch is a structured `bad_request`, so version skew fails loudly at connect time |
+//! | `ping`     | `nonce` (echoed in the `pong` reply) — liveness probe; the fleet router heartbeats workers with it |
 //! | `shutdown` | — (ack `shutting_down`, then drain + close)                         |
 //!
 //! Server messages:
@@ -43,10 +45,12 @@
 //! |-----------------|----------------------------------------------------------------|
 //! | `token`         | `id`, `index` (0-based, strictly sequential), `token` — one per sampled token, streamed as produced |
 //! | `done`          | `id`, `tokens` (the full generation), `prompt_len`, latency breakdown `queue_ms` / `prefill_ms` / `decode_ms` / `ttft_ms` / `latency_ms`, `truncated` (true when generation stopped early at the KV-capacity wall).  `truncated`, `prefill_ms` and `decode_ms` are absent from older peers; clients parse them leniently (false / 0.0) |
-//! | `error`         | `code` (`overloaded` \| `bad_request` \| `shutting_down` \| `reload_failed`), `message`, `id` when attributable to one request |
+//! | `error`         | `code` (`overloaded` \| `bad_request` \| `shutting_down` \| `reload_failed` \| `worker_failed` \| `slow_reader`), `message`, `id` when attributable to one request.  `overloaded` additionally carries `queue_depth` (requests queued ahead) and `retry_after_ms` (suggested back-off) — both absent from older peers and parsed leniently |
 //! | `metrics`       | `uptime_secs`, `queue_depth`, `uptime_tok_per_sec` (whole-uptime average), `draft_acceptance_rate` (accepted/proposed drafter tokens; 0 without speculation), `gauges{..}` (scheduler occupancy: active slots, KV tokens/capacity, arena/draft pool sizes, queue depth), `counters{..}`, `latency_ms{series → {n,mean,p50,p95,p99,max}}` |
 //! | `trace`         | observability snapshot from `crate::obs`: `enabled`, `events` (recent trace-event ring, capped), `events_total` / `events_dropped`, `counters{..}`, `histograms{..}`, `kernels{..}`, `gauges{..}`.  Always answered; with tracing off the ring is empty |
 //! | `reloaded`      | `artifact` (echoed path), `engine` (label now serving).  Sent once per successful `reload`; the wire `metrics` counter `artifact.swaps` counts installed swaps |
+//! | `hello`         | `proto` (revision the server speaks), `version` (crate version), `engine` (label now serving) — reply to a `hello` request |
+//! | `pong`          | `nonce` (echoed) — reply to `ping`                             |
 //! | `shutting_down` | — (the connection closes after in-flight work completes)        |
 //!
 //! Requests from one connection may interleave; every reply carries the
@@ -103,8 +107,9 @@ pub mod conn;
 pub mod metrics;
 pub mod protocol;
 
-pub use client::{scripted_prompt, Client, GenerateOutcome, GenerationResult,
-                 ReloadOutcome};
+pub use client::{generate_with_retries, scripted_prompt, Client,
+                 GenerateOutcome, GenerationResult, ReloadOutcome,
+                 RetryPolicy};
 pub use conn::{run, run_swappable, ServerConfig, ServerStats};
 pub use metrics::Metrics;
 pub use protocol::{Event, GenerateReq, Request};

@@ -13,6 +13,12 @@
 
 use crate::util::json::{self, Json};
 
+/// Protocol revision spoken by this build.  A [`Request::Hello`] carrying a
+/// different `proto` is answered with a structured `bad_request` instead of
+/// failing with a parse error mid-stream, so router↔worker and
+/// client↔router version skew surfaces loudly at connect time.
+pub const PROTO_VERSION: u64 = 1;
+
 /// Structured error code carried by [`Event::Error`]: admission queue full.
 pub const ERR_OVERLOADED: &str = "overloaded";
 /// Structured error code: malformed or invalid request.
@@ -23,6 +29,15 @@ pub const ERR_SHUTTING_DOWN: &str = "shutting_down";
 /// artifact path, verification failure, model mismatch, or the server was
 /// started without hot-swap support).  The previous plan keeps serving.
 pub const ERR_RELOAD_FAILED: &str = "reload_failed";
+/// Structured error code: the fleet worker holding this in-flight request
+/// died (crash or heartbeat timeout).  The request was NOT completed; the
+/// worker is restarted from its verified artifact and a re-issued identical
+/// request bit-matches the original reference.
+pub const ERR_WORKER_FAILED: &str = "worker_failed";
+/// Structured error code: this connection stopped reading its token stream
+/// and its outbox hit the flow-control cap; the router dropped the backlog
+/// and closed the connection rather than buffer without bound.
+pub const ERR_SLOW_READER: &str = "slow_reader";
 
 /// One generation request.  `id` is client-chosen and echoed verbatim on
 /// every event for this request (scope: one connection).
@@ -80,6 +95,22 @@ pub enum Request {
         /// path to the artifact manifest (`.zsar`) on the server host
         artifact: String,
     },
+    /// optional version handshake: announce the protocol revision the
+    /// client speaks.  A matching server answers [`Event::Hello`] with its
+    /// proto/version and engine label; a mismatch is a structured
+    /// `bad_request` — version skew fails loudly at connect time instead of
+    /// with a parse error mid-stream
+    Hello {
+        /// protocol revision the sender speaks ([`PROTO_VERSION`]; absent
+        /// on the wire means 1)
+        proto: u64,
+    },
+    /// liveness probe ([`Event::Pong`] reply echoing the nonce); the fleet
+    /// router heartbeats its workers with this
+    Ping {
+        /// opaque value echoed in the reply
+        nonce: u64,
+    },
     /// stop accepting work, drain in-flight requests, exit
     Shutdown,
 }
@@ -95,6 +126,16 @@ pub fn request_line(r: &Request) -> String {
         Request::Reload { artifact } => Json::obj(vec![
             ("type", Json::str("reload")),
             ("artifact", Json::str(artifact)),
+        ])
+        .to_string(),
+        Request::Hello { proto } => Json::obj(vec![
+            ("type", Json::str("hello")),
+            ("proto", Json::num(*proto as f64)),
+        ])
+        .to_string(),
+        Request::Ping { nonce } => Json::obj(vec![
+            ("type", Json::str("ping")),
+            ("nonce", Json::num(*nonce as f64)),
         ])
         .to_string(),
         Request::Shutdown => Json::obj(vec![("type", Json::str("shutdown"))])
@@ -143,6 +184,14 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             }
             _ => Err("reload: missing `artifact` path".to_string()),
         },
+        // `proto` absent on the wire = revision 1 (the handshake itself is
+        // optional, so an early peer that sends a bare hello still works)
+        Some("hello") => Ok(Request::Hello {
+            proto: j.f64_or("proto", 1.0) as u64,
+        }),
+        Some("ping") => Ok(Request::Ping {
+            nonce: j.f64_or("nonce", 0.0) as u64,
+        }),
         Some("shutdown") => Ok(Request::Shutdown),
         Some(other) => Err(format!("unknown request type `{other}`")),
         None => Err("missing `type`".to_string()),
@@ -193,10 +242,17 @@ pub enum Event {
     Error {
         /// client-chosen request id, when attributable
         id: Option<u64>,
-        /// structured code (`overloaded`, `bad_request`, `shutting_down`)
+        /// structured code (`overloaded`, `bad_request`, `shutting_down`,
+        /// `reload_failed`, `worker_failed`, `slow_reader`)
         code: String,
         /// human-readable detail
         message: String,
+        /// on `overloaded`: how many requests were queued ahead when this
+        /// one was turned away (absent from older peers — lenient parse)
+        queue_depth: Option<usize>,
+        /// on `overloaded`: suggested client back-off before retrying, ms
+        /// (absent from older peers — lenient parse)
+        retry_after_ms: Option<u64>,
     },
     /// metrics snapshot (the whole registry object)
     Metrics(Json),
@@ -211,8 +267,33 @@ pub enum Event {
         /// label of the engine now serving (e.g. `lowrank-r60`)
         engine: String,
     },
+    /// reply to [`Request::Hello`]: the server's protocol revision, build
+    /// version, and the label of the engine currently serving
+    Hello {
+        /// protocol revision the server speaks ([`PROTO_VERSION`])
+        proto: u64,
+        /// crate version of the serving build (e.g. `0.1.0`)
+        version: String,
+        /// engine label now serving (e.g. `dense`, `lowrank-r60`, or a
+        /// fleet label like `fleet[2 x dense]` from the router)
+        engine: String,
+    },
+    /// reply to [`Request::Ping`], echoing its nonce
+    Pong {
+        /// the nonce from the `ping`
+        nonce: u64,
+    },
     /// the server acknowledged shutdown / is closing this connection
     ShuttingDown,
+}
+
+impl Event {
+    /// An [`Event::Error`] with no back-pressure hints (the common case —
+    /// only `overloaded` rejections carry `queue_depth`/`retry_after_ms`).
+    pub fn error(id: Option<u64>, code: &str, message: String) -> Event {
+        Event::Error { id, code: code.into(), message,
+                       queue_depth: None, retry_after_ms: None }
+    }
 }
 
 /// One wire line (no trailing newline) for an event.
@@ -245,7 +326,7 @@ pub fn event_line(e: &Event) -> String {
             ])
             .to_string()
         }
-        Event::Error { id, code, message } => {
+        Event::Error { id, code, message, queue_depth, retry_after_ms } => {
             let mut pairs = vec![
                 ("type", Json::str("error")),
                 ("code", Json::str(code)),
@@ -253,6 +334,14 @@ pub fn event_line(e: &Event) -> String {
             ];
             if let Some(id) = id {
                 pairs.push(("id", Json::num(*id as f64)));
+            }
+            // back-pressure hints ride only when present, so older peers
+            // (which parse leniently anyway) see the exact old shape
+            if let Some(qd) = queue_depth {
+                pairs.push(("queue_depth", Json::num(*qd as f64)));
+            }
+            if let Some(ra) = retry_after_ms {
+                pairs.push(("retry_after_ms", Json::num(*ra as f64)));
             }
             Json::obj(pairs).to_string()
         }
@@ -262,6 +351,18 @@ pub fn event_line(e: &Event) -> String {
             ("type", Json::str("reloaded")),
             ("artifact", Json::str(artifact)),
             ("engine", Json::str(engine)),
+        ])
+        .to_string(),
+        Event::Hello { proto, version, engine } => Json::obj(vec![
+            ("type", Json::str("hello")),
+            ("proto", Json::num(*proto as f64)),
+            ("version", Json::str(version)),
+            ("engine", Json::str(engine)),
+        ])
+        .to_string(),
+        Event::Pong { nonce } => Json::obj(vec![
+            ("type", Json::str("pong")),
+            ("nonce", Json::num(*nonce as f64)),
         ])
         .to_string(),
         Event::ShuttingDown => Json::obj(vec![
@@ -312,12 +413,26 @@ pub fn parse_event(line: &str) -> Result<Event, String> {
             id: j.get("id").and_then(Json::as_f64).map(|v| v as u64),
             code: j.str_or("code", "unknown"),
             message: j.str_or("message", ""),
+            // hints are newer than the error shape: absent from older
+            // peers, parsed leniently as "no hint"
+            queue_depth: j.get("queue_depth").and_then(Json::as_f64)
+                .map(|v| v as usize),
+            retry_after_ms: j.get("retry_after_ms").and_then(Json::as_f64)
+                .map(|v| v as u64),
         }),
         Some("metrics") => Ok(Event::Metrics(j)),
         Some("trace") => Ok(Event::Trace(j)),
         Some("reloaded") => Ok(Event::Reloaded {
             artifact: j.str_or("artifact", ""),
             engine: j.str_or("engine", ""),
+        }),
+        Some("hello") => Ok(Event::Hello {
+            proto: j.f64_or("proto", 1.0) as u64,
+            version: j.str_or("version", ""),
+            engine: j.str_or("engine", ""),
+        }),
+        Some("pong") => Ok(Event::Pong {
+            nonce: j.f64_or("nonce", 0.0) as u64,
         }),
         Some("shutting_down") => Ok(Event::ShuttingDown),
         Some(other) => Err(format!("unknown event type `{other}`")),
@@ -372,9 +487,22 @@ mod tests {
     #[test]
     fn control_requests_roundtrip() {
         for r in [Request::Metrics, Request::Trace, Request::Shutdown,
-                  Request::Reload { artifact: "store/m.zsar".into() }] {
+                  Request::Reload { artifact: "store/m.zsar".into() },
+                  Request::Hello { proto: PROTO_VERSION },
+                  Request::Hello { proto: 99 },
+                  Request::Ping { nonce: 0xDEAD }] {
             let line = request_line(&r);
             assert_eq!(parse_request(&line).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn bare_hello_defaults_to_proto_1() {
+        // the handshake is optional AND its field is optional: an early
+        // peer sending `{"type":"hello"}` means revision 1
+        match parse_request("{\"type\":\"hello\"}").unwrap() {
+            Request::Hello { proto } => assert_eq!(proto, 1),
+            other => panic!("wrong variant: {other:?}"),
         }
     }
 
@@ -404,13 +532,21 @@ mod tests {
                           ttft_ms: 0.5, latency_ms: 3.5,
                           truncated: false, cached_prompt_tokens: 128 },
             Event::Error { id: Some(9), code: ERR_OVERLOADED.into(),
-                           message: "queue full".into() },
-            Event::Error { id: None, code: ERR_BAD_REQUEST.into(),
-                           message: "bad json".into() },
-            Event::Error { id: None, code: ERR_RELOAD_FAILED.into(),
-                           message: "chunk `u:layers.0.wq` corrupt".into() },
+                           message: "queue full".into(),
+                           queue_depth: Some(16),
+                           retry_after_ms: Some(400) },
+            Event::error(None, ERR_BAD_REQUEST, "bad json".into()),
+            Event::error(None, ERR_RELOAD_FAILED,
+                         "chunk `u:layers.0.wq` corrupt".into()),
+            Event::error(Some(4), ERR_WORKER_FAILED,
+                         "worker 1 died mid-request".into()),
+            Event::error(None, ERR_SLOW_READER,
+                         "outbox cap reached".into()),
             Event::Reloaded { artifact: "store/m.zsar".into(),
                               engine: "lowrank-r60".into() },
+            Event::Hello { proto: PROTO_VERSION, version: "0.1.0".into(),
+                           engine: "dense".into() },
+            Event::Pong { nonce: 7 },
             Event::ShuttingDown,
         ];
         for e in events {
@@ -418,6 +554,26 @@ mod tests {
             assert!(!line.contains('\n'));
             assert_eq!(parse_event(&line).unwrap(), e, "line: {line}");
         }
+    }
+
+    #[test]
+    fn error_without_hints_parses_leniently() {
+        // old-peer error lines carry no queue_depth / retry_after_ms — the
+        // parse must produce "no hint", and serializing a hint-free error
+        // must not emit the keys at all
+        let line = "{\"type\":\"error\",\"code\":\"overloaded\",\
+                    \"message\":\"queue full\",\"id\":3}";
+        match parse_event(line).unwrap() {
+            Event::Error { queue_depth, retry_after_ms, .. } => {
+                assert_eq!(queue_depth, None);
+                assert_eq!(retry_after_ms, None);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        let out = event_line(&Event::error(Some(3), ERR_OVERLOADED,
+                                           "queue full".into()));
+        assert!(!out.contains("queue_depth"));
+        assert!(!out.contains("retry_after_ms"));
     }
 
     #[test]

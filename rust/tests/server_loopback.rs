@@ -137,7 +137,7 @@ fn serve_and_collect(sess: &Session, params: &ParamStore, engine: &Engine,
                                 assert!(r.latency_ms >= r.ttft_ms);
                                 out.push((k, r.tokens));
                             }
-                            GenerateOutcome::Rejected { code, message } => {
+                            GenerateOutcome::Rejected { code, message, .. } => {
                                 panic!("request {k} rejected: {code} \
                                         ({message})");
                             }
@@ -278,7 +278,7 @@ fn speculative_server_bitmatches_offline_and_reports_acceptance() {
                 assert_eq!(r.tokens, offline[0]);
                 assert!(!r.truncated, "nothing was cut short");
             }
-            GenerateOutcome::Rejected { code, message } => {
+            GenerateOutcome::Rejected { code, message, .. } => {
                 panic!("rejected: {code} ({message})");
             }
         }
@@ -340,7 +340,7 @@ fn capacity_truncation_and_zero_budget_over_the_wire() {
                             prompt-logits token");
                 assert!(r.truncated, "the capacity cut must cross the wire");
             }
-            GenerateOutcome::Rejected { code, message } => {
+            GenerateOutcome::Rejected { code, message, .. } => {
                 panic!("rejected: {code} ({message})");
             }
         }
@@ -431,10 +431,20 @@ fn queue_full_gets_overloaded_and_server_stays_live() {
                     let prev = outcomes.insert(id, "done");
                     assert!(prev.is_none(), "request {id} completed twice");
                 }
-                Event::Error { id, code, .. } => {
+                Event::Error { id, code, queue_depth, retry_after_ms, .. } => {
                     let id = id.expect("rejections carry the request id");
                     assert_eq!(code, ERR_OVERLOADED,
                                "only overload rejections expected");
+                    // overload rejections carry actionable back-off hints
+                    let qd = queue_depth.expect("overloaded carries \
+                                                 queue_depth");
+                    assert!(qd <= cfg.queue_depth,
+                            "queued-ahead {qd} cannot exceed the configured \
+                             depth {}", cfg.queue_depth);
+                    let hint = retry_after_ms.expect("overloaded carries \
+                                                      retry_after_ms");
+                    assert!(hint >= 1, "a zero hint would tell clients to \
+                                        hammer the server");
                     let prev = outcomes.insert(id, "overloaded");
                     assert!(prev.is_none(), "request {id} rejected twice");
                 }
@@ -457,7 +467,7 @@ fn queue_full_gets_overloaded_and_server_stays_live() {
                               seed: None };
         match cl.run_generate(&g).expect("post-overload generate") {
             GenerateOutcome::Done(r) => assert_eq!(r.tokens.len(), 4),
-            GenerateOutcome::Rejected { code, message } => {
+            GenerateOutcome::Rejected { code, message, .. } => {
                 panic!("server dead after overload: {code} ({message})");
             }
         }
@@ -593,7 +603,7 @@ fn swap_round(sess: &Session, a_manifest: &Path, b_manifest: &Path,
                                "request {k} after swap must bit-match a \
                                 fresh server on plan B");
                 }
-                GenerateOutcome::Rejected { code, message } => {
+                GenerateOutcome::Rejected { code, message, .. } => {
                     panic!("request {k} rejected: {code} ({message})");
                 }
             }
